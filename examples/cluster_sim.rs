@@ -1,0 +1,69 @@
+//! Cluster-scale simulation walkthrough: the virtual-time substrate
+//! that powers the figure benches, at paper scale (16-128 GPUs),
+//! runnable in seconds on one CPU.
+//!
+//!     cargo run --release --example cluster_sim
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
+use roll_flash::theory::Prop2;
+use roll_flash::workload::LengthProfile;
+
+fn main() {
+    println!("== ROLL Flash virtual cluster: 40 GPUs, Qwen3-8B-Think profile ==\n");
+    let mut table = Table::new(&["architecture", "step time (s)", "samples/h", "gen util", "max gap"]);
+
+    // Sync-Naive: batch rollout, candidates pinned per worker
+    let mut naive = RlvrSimConfig::paper_default(20, 20);
+    naive.scheduling = Scheduling::BatchRollout;
+    naive.replicate = false;
+    naive.steps = 3;
+    let r_naive = run(&naive);
+
+    // Sync-ROLL: queue scheduling + prompt replication
+    let mut roll = naive.clone();
+    roll.scheduling = Scheduling::QueueSched;
+    roll.replicate = true;
+    let r_roll = run(&roll);
+
+    // Async: rollout-train decoupling, alpha = 2, 24 infer / 16 train
+    let mut asy = roll.clone();
+    asy.infer_gpus = 24;
+    asy.train_gpus = 16;
+    asy.async_ratio = 2.0;
+    let r_async = run(&asy);
+
+    for (name, r) in [("Sync-Naive", &r_naive), ("Sync-ROLL", &r_roll), ("Async (a=2)", &r_async)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", r.mean_step_time()),
+            format!("{:.0}", r.samples_per_hour()),
+            format!("{:.2}", r.gen_utilization),
+            format!("{}", r.max_version_gap),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "speedup: Sync-ROLL {:.2}x, Async {:.2}x over Sync-Naive\n",
+        r_naive.mean_step_time() / r_roll.mean_step_time(),
+        r_naive.mean_step_time() / r_async.mean_step_time()
+    );
+
+    // theory overlay (Prop 2)
+    let lengths = LengthProfile::qwen3_think();
+    let mu_gen = lengths.mean_target * naive.decode.token_time / naive.knee as f64;
+    let p2 = Prop2 {
+        k_workers: 40,
+        n_samples: naive.sequences_per_step(),
+        mu_gen,
+        l_gen: lengths.cap as f64 * naive.decode.token_time,
+        mu_train: naive.train.per_sample / 1.0,
+        epochs: 1.0,
+    };
+    println!(
+        "Prop 2: beta* = {:.2} (=> {:.0} train GPUs of 40); max async speedup (alpha->inf): {:.2}x",
+        p2.beta_star(2.0),
+        p2.beta_star(2.0) * 40.0,
+        p2.max_speedup()
+    );
+}

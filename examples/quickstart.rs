@@ -1,0 +1,71 @@
+//! Quickstart: synchronous GRPO post-training on the arithmetic RLVR
+//! task, through the full three-layer stack — Rust coordinator ->
+//! AOT-compiled JAX/Pallas artifacts -> PJRT CPU.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! What happens: an LLMProxy thread decodes with continuous batching,
+//! 16 EnvManager threads roll the MathEnv, the SampleBuffer assembles
+//! GRPO groups, and the AsyncController (in synchronous mode here)
+//! consumes batches, runs PPO train_steps, and broadcasts weights.
+
+use std::path::PathBuf;
+
+use roll_flash::config::PgVariant;
+use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::env::math::MathEnv;
+use roll_flash::runtime::ModelRuntime;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    let rt = ModelRuntime::load(&dir)?;
+    let weights = rt.load_init_params()?;
+    let mut st = rt.train_state(&weights)?;
+    println!(
+        "model {} ({} params), decode_batch {}, train_batch {}",
+        rt.manifest.model, rt.manifest.n_params, rt.manifest.decode_batch, rt.manifest.train_batch
+    );
+
+    // groups x size must equal a multiple of train_batch
+    let group_size = 4;
+    let n_groups = rt.manifest.train_batch / group_size;
+    let fleet = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: n_groups,
+        env_group_size: group_size,
+        consume_groups: n_groups,
+        consume_group_size: group_size,
+        alpha: 0.0, // synchronous
+        seed: 42,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
+
+    let ctl = ControllerCfg {
+        variant: PgVariant::Ppo,
+        steps: 10,
+        lr: 2e-3,
+        n_groups,
+        group_size,
+        sync_mode: true,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
+    for l in &logs {
+        println!("{}", format_log(l));
+    }
+
+    let report = system.shutdown()?;
+    println!(
+        "\nfleet: {} episodes, proxy {} decode steps / {} tokens, occupancy {:.2}, max gap {}",
+        report.episodes,
+        report.proxy.decode_steps,
+        report.proxy.tokens_generated,
+        report.proxy.mean_occupancy(rt.manifest.decode_batch),
+        report.buffer.max_version_gap,
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! End-to-end RLVR driver (the EXPERIMENTS.md headline run): train a
+//! real transformer with asynchronous GRPO-style post-training on the
+//! arithmetic verifier task, and log the reward/loss curve.
+//!
+//!     make artifacts
+//!     cargo run --release --example rlvr_async -- \
+//!         [model=small] [steps=150] [alpha=2] [variant=tis] [lr=0.002]
+//!
+//! All three layers execute for real: the Pallas flash-attention kernel
+//! inside the AOT decode path, the fused Pallas grpo_loss kernel inside
+//! train_step, and the Rust coordinator running rollout and training
+//! concurrently (rollout-train decoupling, Section 4). A CSV curve is
+//! written to `rlvr_async_curve.csv`.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use roll_flash::config::PgVariant;
+use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::env::math::MathEnv;
+use roll_flash::runtime::ModelRuntime;
+
+fn arg(name: &str, default: &str) -> String {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}=")).map(str::to_string))
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = arg("model", "small");
+    let steps: usize = arg("steps", "150").parse()?;
+    let alpha: f64 = arg("alpha", "2").parse()?;
+    let variant = PgVariant::parse(&arg("variant", "tis"))?;
+    let lr: f32 = arg("lr", "0.002").parse()?;
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+
+    let rt = ModelRuntime::load(&dir)?;
+    let weights = rt.load_init_params()?;
+    let mut st = rt.train_state(&weights)?;
+    let group_size = 4;
+    let n_groups = rt.manifest.train_batch / group_size;
+    println!(
+        "rlvr_async: model={} ({} params) steps={} alpha={} variant={} lr={} batch={}x{}",
+        model, rt.manifest.n_params, steps, alpha, variant.as_str(), lr, n_groups, group_size
+    );
+
+    let fleet = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: n_groups,
+        env_group_size: group_size,
+        consume_groups: n_groups,
+        consume_group_size: group_size,
+        alpha,
+        seed: 42,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let sync_mode = alpha == 0.0;
+    let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
+    let ctl = ControllerCfg { variant, steps, lr, n_groups, group_size, sync_mode };
+
+    let t0 = std::time::Instant::now();
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut csv = std::fs::File::create("rlvr_async_curve.csv")?;
+    writeln!(csv, "step,loss,reward_mean,pass_rate,entropy,mean_ratio,clip_frac,version_gap,wall_s")?;
+    for l in &logs {
+        if l.step % 10 == 0 || l.step + 1 == logs.len() {
+            println!("{}", format_log(l));
+        }
+        writeln!(
+            csv,
+            "{},{},{},{},{},{},{},{},{}",
+            l.step, l.loss, l.reward_mean, l.pass_rate, l.entropy, l.mean_ratio, l.clip_frac,
+            l.mean_version_gap, l.wall_secs
+        )?;
+    }
+
+    let report = system.shutdown()?;
+    let first = &logs[..logs.len().min(10)];
+    let last = &logs[logs.len().saturating_sub(10)..];
+    let mean = |xs: &[roll_flash::coordinator::StepLog], f: fn(&roll_flash::coordinator::StepLog) -> f32| {
+        xs.iter().map(|l| f(l) as f64).sum::<f64>() / xs.len().max(1) as f64
+    };
+    println!("\n=== summary ===");
+    println!("wall time           {wall:.1}s ({:.2} steps/s)", steps as f64 / wall);
+    println!("reward  first10 -> last10   {:.3} -> {:.3}", mean(first, |l| l.reward_mean), mean(last, |l| l.reward_mean));
+    println!("pass@1  first10 -> last10   {:.3} -> {:.3}", mean(first, |l| l.pass_rate), mean(last, |l| l.pass_rate));
+    println!("entropy first10 -> last10   {:.3} -> {:.3}", mean(first, |l| l.entropy), mean(last, |l| l.entropy));
+    println!(
+        "staleness: max gap {} (alpha {}), mean gap {:.2}, reclaimed {}",
+        report.buffer.max_version_gap, alpha, report.buffer.mean_version_gap(), report.buffer.stale_evicted
+    );
+    println!(
+        "proxy: {} decode steps, {} tokens, occupancy {:.2}",
+        report.proxy.decode_steps,
+        report.proxy.tokens_generated,
+        report.proxy.mean_occupancy(rt.manifest.decode_batch)
+    );
+    println!("curve written to rlvr_async_curve.csv");
+    Ok(())
+}

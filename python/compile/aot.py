@@ -1,0 +1,99 @@
+"""AOT lowering: JAX entry points -> HLO text + manifest + init params.
+
+Run once at build time (`make artifacts`); Python never executes on the
+request path. The interchange format is HLO **text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifact layout, per model size:
+
+  artifacts/<model>/manifest.json         shapes/dtypes of every entry
+  artifacts/<model>/<entry>.hlo.txt       HLO text per entry point
+  artifacts/<model>/init_params.bin       flat f32 LE initial parameters
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def build(model_name: str, out_root: pathlib.Path, seed: int = 0) -> dict:
+    cfg = M.CONFIGS[model_name]
+    out = out_root / model_name
+    out.mkdir(parents=True, exist_ok=True)
+
+    n_params, _ = M.flatten_spec(cfg)
+    entries = {}
+    for name, (fn, args) in M.entry_points(cfg).items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        (out / f"{name}.hlo.txt").write_text(text)
+        outs = jax.eval_shape(fn, *args)
+        entries[name] = {
+            "hlo": f"{name}.hlo.txt",
+            "inputs": [_spec_json(a) for a in args],
+            "outputs": [_spec_json(o) for o in jax.tree.leaves(outs)],
+        }
+        print(f"  {model_name}/{name}: {len(text)} chars")
+
+    # Initial parameters (and implicitly zeroed Adam state, rust-side).
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    from jax.flatten_util import ravel_pytree
+    flat, _ = ravel_pytree(params)
+    np.asarray(flat, dtype="<f4").tofile(out / "init_params.bin")
+
+    manifest = {
+        "model": model_name,
+        "n_params": n_params,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "prompt_len": cfg.prompt_len,
+        "decode_batch": cfg.decode_batch,
+        "train_batch": cfg.train_batch,
+        "pg_variants": list(M._ref.VARIANTS),
+        "entries": entries,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="tiny", choices=sorted(M.CONFIGS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    m = build(args.model, pathlib.Path(args.out), seed=args.seed)
+    print(f"wrote {args.model}: {m['n_params']} params, "
+          f"{len(m['entries'])} entry points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Blocked causal flash attention as a Pallas kernel (Layer 1).
+
+The rollout stage dominates RL post-training time (>70% per the paper),
+and its hot-spot is attention over long sequences. The paper's serving
+backends (vLLM/SGLang) implement this with CUDA threadblock tiling into
+SRAM; the TPU-style adaptation here tiles Q into VMEM-resident blocks
+via BlockSpec and streams K/V tiles through an online-softmax loop
+(DESIGN.md §Hardware-Adaptation).
+
+`interpret=True` is mandatory on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the kernel lowers to plain HLO and runs
+(and is numerically validated) on the CPU client. Block shapes are still
+chosen for the 128-lane VPU / 128x128 MXU; real-TPU estimates live in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q: int, blk_k: int, scale: float):
+    """One (batch*head, q-block) grid cell.
+
+    q_ref: [blk_q, D] VMEM tile; k_ref/v_ref: [S, D] (whole-sequence for
+    our S <= 512 this fits VMEM; the kv loop below is the HBM->VMEM
+    streaming schedule on real hardware); o_ref: [blk_q, D].
+    """
+    qi = pl.program_id(1)
+    seq_len = k_ref.shape[0]
+    head_dim = q_ref.shape[1]
+
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+
+    # Online softmax state: running max, running sum, weighted accumulator.
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc0 = jnp.zeros((blk_q, head_dim), jnp.float32)
+
+    # Causality: only kv blocks that intersect the lower triangle matter.
+    n_kv = (qi * blk_q + blk_q + blk_k - 1) // blk_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(kb * blk_k, blk_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(kb * blk_k, blk_k), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [blk_q, blk_k] — MXU-shaped matmul on real hardware
+        k_pos = kb * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    del m, seq_len
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q", "blk_k"))
+def flash_attention(q, k, v, *, blk_q: int = 32, blk_k: int = 32):
+    """Causal flash attention. q,k,v: [B, H, S, D] -> [B, H, S, D].
+
+    Requires S % blk_q == 0 and S % blk_k == 0 (the model pads its
+    sequence buffer to a block multiple; see model.py).
+    """
+    b, h, s, d = q.shape
+    assert s % blk_q == 0 and s % blk_k == 0, (s, blk_q, blk_k)
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, blk_q=blk_q, blk_k=blk_k, scale=scale),
+        grid=(b * h, s // blk_q),
+        in_specs=[
+            pl.BlockSpec((None, blk_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, blk_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes(blk_q: int, blk_k: int, seq: int, head_dim: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid cell (perf pass input)."""
+    q = blk_q * head_dim * dtype_bytes
+    kv = 2 * seq * head_dim * dtype_bytes  # whole-sequence K/V residency
+    state = blk_q * (2 + head_dim) * 4  # m, l, acc in f32
+    tile = blk_q * blk_k * 4  # score tile
+    return q + kv + state + tile

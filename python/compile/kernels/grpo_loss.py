@@ -1,0 +1,139 @@
+"""Fused off-policy policy-gradient loss as a Pallas kernel (Layer 1).
+
+One VMEM-resident pass computes, per token tile:
+  * the importance-sampling ratio pi_theta/pi_old,
+  * the variant-specific surrogate objective (PPO clip, Decoupled PPO,
+    Truncated IS, CISPO, TOPR, Weighted TOPR, plain REINFORCE/GRPO),
+  * the analytic d(loss)/d(logp_new) used by the custom VJP.
+
+GPU stacks spread these across several elementwise CUDA kernels with
+HBM round-trips between ratio/clip/weight stages; the TPU-style design
+fuses them into a single (blk_b x blk_s) tile program (DESIGN.md
+§Hardware-Adaptation). The stop-gradient semantics of the weighted
+variants (TIS/CISPO/TOPR) are realized exactly by the custom VJP: the
+backward pass multiplies the cotangent by the saved `grad_tok`, in
+which the IS weight is a constant.
+
+Validated against kernels/ref.py by pytest + hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+VARIANTS = _ref.VARIANTS
+
+
+def _pg_kernel(variant, lpn_ref, lpo_ref, lpp_ref, adv_ref, mask_ref, sgn_ref,
+               loss_ref, grad_ref, ratio_ref):
+    """Single tile: all inputs [blk_b, blk_s] except sgn_ref [blk_b, 1]."""
+    lpn = lpn_ref[...]
+    lpo = lpo_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+    sgn = sgn_ref[...]  # [blk_b, 1], broadcasts over the seq axis
+
+    ratio = jnp.exp(lpn - lpo)
+    eps, cap = _ref.CLIP_EPS, _ref.IS_CAP
+
+    if variant == "ppo":
+        un = ratio * adv
+        cl = jnp.clip(ratio, 1.0 - eps, 1.0 + eps) * adv
+        obj = jnp.minimum(un, cl)
+        inside = (ratio > 1.0 - eps) & (ratio < 1.0 + eps)
+        grad_obj = jnp.where(un <= cl, ratio * adv, jnp.where(inside, ratio * adv, 0.0))
+    elif variant == "decoupled_ppo":
+        lpp = lpp_ref[...]
+        r_prox = jnp.exp(lpn - lpp)
+        base = jnp.exp(lpp - lpo)
+        un = ratio * adv
+        cl = base * jnp.clip(r_prox, 1.0 - eps, 1.0 + eps) * adv
+        obj = jnp.minimum(un, cl)
+        inside = (r_prox > 1.0 - eps) & (r_prox < 1.0 + eps)
+        grad_obj = jnp.where(un <= cl, ratio * adv,
+                             jnp.where(inside, base * r_prox * adv, 0.0))
+    elif variant == "tis":
+        w = jnp.clip(ratio, 0.0, cap)
+        obj = w * adv * lpn
+        grad_obj = w * adv
+    elif variant == "cispo":
+        w = jnp.clip(ratio, 1.0 - _ref.CISPO_LOW, 1.0 + _ref.CISPO_HIGH)
+        obj = w * adv * lpn
+        grad_obj = w * adv
+    elif variant == "topr":
+        w = jnp.where(sgn > 0.0, 1.0, jnp.clip(ratio, 0.0, cap))
+        obj = w * adv * lpn
+        grad_obj = w * adv
+    elif variant == "topr_weighted":
+        w = jnp.where(sgn > 0.0, _ref.TOPR_W_POS,
+                      _ref.TOPR_W_NEG * jnp.clip(ratio, 0.0, cap))
+        obj = w * adv * lpn
+        grad_obj = w * adv
+    elif variant == "reinforce":
+        obj = adv * lpn
+        grad_obj = adv
+    else:  # pragma: no cover — guarded by pg_loss()
+        raise ValueError(variant)
+
+    loss_ref[...] = -obj * mask
+    grad_ref[...] = -grad_obj * mask
+    ratio_ref[...] = ratio
+
+
+def _pg_pallas(variant, lpn, lpo, lpp, adv, mask, sign, *, blk_b, blk_s):
+    b, s = lpn.shape
+    assert b % blk_b == 0 and s % blk_s == 0, (lpn.shape, blk_b, blk_s)
+    sgn2 = sign.reshape(b, 1)
+    tile = pl.BlockSpec((blk_b, blk_s), lambda i, j: (i, j))
+    col = pl.BlockSpec((blk_b, 1), lambda i, j: (i, 0))
+    out = jax.ShapeDtypeStruct((b, s), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_pg_kernel, variant),
+        grid=(b // blk_b, s // blk_s),
+        in_specs=[tile, tile, tile, tile, tile, col],
+        out_specs=[tile, tile, tile],
+        out_shape=[out, out, out],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lpn, lpo, lpp, adv, mask, sgn2)
+
+
+def pg_loss(variant: str, *, blk_b: int = 8, blk_s: int = 128):
+    """Returns a differentiable fn(logp_new, logp_old, logp_prox, adv,
+    mask, sign) -> (loss_tok [B,S], ratio [B,S]).
+
+    Only `logp_new` carries gradient; every other input is a behavioral
+    constant (matching the sg(...) in the paper's objectives).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown pg variant {variant!r}; expected one of {VARIANTS}")
+
+    @jax.custom_vjp
+    def fn(lpn, lpo, lpp, adv, mask, sign):
+        loss, _, ratio = _pg_pallas(variant, lpn, lpo, lpp, adv, mask, sign,
+                                    blk_b=blk_b, blk_s=blk_s)
+        return loss, ratio
+
+    def fwd(lpn, lpo, lpp, adv, mask, sign):
+        loss, grad, ratio = _pg_pallas(variant, lpn, lpo, lpp, adv, mask, sign,
+                                       blk_b=blk_b, blk_s=blk_s)
+        return (loss, ratio), grad
+
+    def bwd(grad_tok, cotangents):
+        g_loss, _g_ratio = cotangents  # ratio is diagnostic-only: no gradient
+        d_lpn = g_loss * grad_tok
+        zeros = jnp.zeros_like(grad_tok)
+        return d_lpn, zeros, zeros, zeros, zeros, jnp.zeros(grad_tok.shape[:1])
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def vmem_bytes(blk_b: int, blk_s: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint per grid cell: 6 input + 3 output tiles."""
+    return (6 + 3) * blk_b * blk_s * dtype_bytes + blk_b * dtype_bytes

@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: `python/tests/` asserts the
+Pallas kernels (interpret=True) match these within tight tolerances
+across shape/dtype sweeps (hypothesis), and `model.py`'s training path
+is validated against them as well.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Plain softmax attention. q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+# ---------------------------------------------------------------------------
+# Off-policy policy-gradient loss (token level)
+# ---------------------------------------------------------------------------
+
+VARIANTS = (
+    "ppo",
+    "decoupled_ppo",
+    "tis",
+    "cispo",
+    "topr",
+    "topr_weighted",
+    "reinforce",
+)
+
+# Default hyper-parameters, matching the paper's formulations (Section 2.2).
+CLIP_EPS = 0.2          # PPO / Decoupled PPO epsilon
+IS_CAP = 5.0            # truncation threshold c for TIS / TOPR (paper Eq. 12 uses C=5)
+CISPO_LOW = 0.2         # epsilon_low^IS
+CISPO_HIGH = 0.2        # epsilon_high^IS
+TOPR_W_POS = 1.0        # Weighted TOPR positive-set weight
+TOPR_W_NEG = 0.5        # Weighted TOPR negative-set weight
+
+
+def pg_loss_ref(variant, logp_new, logp_old, logp_prox, adv, mask, sign):
+    """Reference per-token surrogate loss and d(loss)/d(logp_new).
+
+    All inputs are [B, S] float32 except `sign`, which is [B] (+1 for
+    trajectories in T^+, -1 for T^-; used by TOPR variants only).
+
+    Returns (loss_tok, grad_tok, ratio) with loss_tok already
+    mask-multiplied. Loss convention: minimize `loss`; the paper's
+    objectives are maximized, so loss = -J.
+    """
+    ratio = jnp.exp(logp_new - logp_old)
+    sgn = jnp.broadcast_to(sign[:, None], logp_new.shape)
+
+    if variant == "ppo":
+        un = ratio * adv
+        cl = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv
+        obj = jnp.minimum(un, cl)
+        # d(obj)/d(logp_new): if the unclipped branch is selected, r*A;
+        # if the clipped branch is selected, gradient flows only while
+        # the ratio is strictly inside the clip interval (where cl==un).
+        grad_obj = jnp.where(un <= cl, ratio * adv,
+                             jnp.where((ratio > 1.0 - CLIP_EPS) & (ratio < 1.0 + CLIP_EPS),
+                                       ratio * adv, 0.0))
+    elif variant == "decoupled_ppo":
+        r_prox = jnp.exp(logp_new - logp_prox)
+        base = jnp.exp(logp_prox - logp_old)
+        un = ratio * adv
+        cl = base * jnp.clip(r_prox, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS) * adv
+        obj = jnp.minimum(un, cl)
+        grad_obj = jnp.where(un <= cl, ratio * adv,
+                             jnp.where((r_prox > 1.0 - CLIP_EPS) & (r_prox < 1.0 + CLIP_EPS),
+                                       base * r_prox * adv, 0.0))
+    elif variant == "tis":
+        w = jnp.clip(ratio, 0.0, IS_CAP)  # stop-gradient weight
+        obj = w * adv * logp_new
+        grad_obj = w * adv
+    elif variant == "cispo":
+        w = jnp.clip(ratio, 1.0 - CISPO_LOW, 1.0 + CISPO_HIGH)
+        obj = w * adv * logp_new
+        grad_obj = w * adv
+    elif variant == "topr":
+        w = jnp.where(sgn > 0.0, 1.0, jnp.clip(ratio, 0.0, IS_CAP))
+        obj = w * adv * logp_new
+        grad_obj = w * adv
+    elif variant == "topr_weighted":
+        w = jnp.where(sgn > 0.0, TOPR_W_POS, TOPR_W_NEG * jnp.clip(ratio, 0.0, IS_CAP))
+        obj = w * adv * logp_new
+        grad_obj = w * adv
+    elif variant == "reinforce":
+        obj = adv * logp_new
+        grad_obj = adv
+    else:  # pragma: no cover
+        raise ValueError(f"unknown pg variant {variant!r}")
+
+    loss_tok = -obj * mask
+    grad_tok = -grad_obj * mask
+    return loss_tok, grad_tok, ratio

@@ -1,0 +1,290 @@
+"""Layer 2: the policy model (decoder-only transformer) in JAX.
+
+Architecture mirrors the Qwen3 family the paper trains (RMSNorm + RoPE +
+SwiGLU, causal decoder), scaled down to sizes that run on the CPU PJRT
+client (DESIGN.md §7 substitutions). Three entry points are AOT-lowered
+to HLO text by aot.py and executed from the Rust coordinator:
+
+  * decode_step     — next-token logits at a given position (rollout
+    path; uses the Pallas flash-attention kernel),
+  * seq_logprobs    — per-token behavior/proximal logprobs for IS,
+  * train_step_<v>  — one Adam + off-policy policy-gradient update
+    (uses the fused Pallas grpo_loss kernel via its custom VJP).
+
+Parameters and Adam state cross the FFI as flat f32 vectors; the
+unravel closure is baked into the jitted graphs so the Rust side never
+needs to know the pytree structure (manifest.json carries only sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import grpo_loss as _pg
+from .kernels import ref as _ref
+from .kernels.flash_attn import flash_attention
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int          # fixed sequence buffer length (block-aligned)
+    prompt_len: int       # fixed prompt region (generation starts here)
+    decode_batch: int     # batch of the decode_step entry point
+    train_batch: int      # batch of train_step / seq_logprobs entry points
+    attn_blk_q: int = 32
+    attn_blk_k: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    # ~0.15M params — unit/integration tests, CI-speed.
+    "tiny": ModelConfig("tiny", vocab=64, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=128, max_seq=64, prompt_len=8,
+                        decode_batch=8, train_batch=16),
+    # ~3.2M params — the end-to-end RLVR examples.
+    "small": ModelConfig("small", vocab=64, d_model=256, n_layers=4, n_heads=4,
+                         d_ff=512, max_seq=64, prompt_len=8,
+                         decode_batch=16, train_batch=32),
+    # ~124M params — the "100M-class" configuration (built on demand:
+    # `python -m compile.aot --model base100m`).
+    "base100m": ModelConfig("base100m", vocab=512, d_model=768, n_layers=12,
+                            n_heads=12, d_ff=3072, max_seq=256, prompt_len=16,
+                            decode_batch=4, train_batch=8),
+}
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+GRAD_CLIP = 1.0
+# entropy bonus keeps exploration alive on sparse verifier rewards
+# (prevents the zero-intra-group-variance collapse; cf. Section 5.1.1)
+ENT_COEF = 0.01
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the parameter pytree (1/sqrt(fan_in) scaling)."""
+    d, v, f = cfg.d_model, cfg.vocab, cfg.d_ff
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(jnp.float32(fan_in))
+
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 7)
+        layers.append({
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(lk[0], d, (d, d)),
+            "wk": dense(lk[1], d, (d, d)),
+            "wv": dense(lk[2], d, (d, d)),
+            "wo": dense(lk[3], d, (d, d)),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(lk[4], d, (d, f)),
+            "w_up": dense(lk[5], d, (d, f)),
+            "w_down": dense(lk[6], f, (f, d)),
+        })
+    return {
+        "embed": dense(keys[0], d, (v, d)),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "head": dense(keys[1], d, (d, v)),
+    }
+
+
+def flatten_spec(cfg: ModelConfig):
+    """(n_params, unravel_fn) for the flat-f32 FFI representation."""
+    tree = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    flat, unravel = ravel_pytree(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree))
+    return int(flat.shape[0]), unravel
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _rope(x, pos):
+    """Rotary embeddings. x: [B, H, S, Dh]; pos: [S] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, use_flash: bool):
+    """tokens [B, S] int32 -> logits [B, S, V] float32.
+
+    `use_flash=True` routes attention through the Pallas kernel
+    (inference entry points); the training path uses the reference
+    attention so jax.grad differentiates it directly.
+    """
+    b, s = tokens.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # [B, S, D]
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    for layer in params["layers"]:
+        y = _rmsnorm(x, layer["ln1"])
+        q = (y @ layer["wq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = (y @ layer["wk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = (y @ layer["wv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        q, k = _rope(q, pos), _rope(k, pos)
+        if use_flash:
+            att = flash_attention(q, k, v, blk_q=cfg.attn_blk_q, blk_k=cfg.attn_blk_k)
+        else:
+            att = _ref.attention_ref(q, k, v, causal=True)
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + att @ layer["wo"]
+
+        y = _rmsnorm(x, layer["ln2"])
+        x = x + (jax.nn.silu(y @ layer["w_gate"]) * (y @ layer["w_up"])) @ layer["w_down"]
+
+    return _rmsnorm(x, params["ln_f"]) @ params["head"]
+
+
+def _token_logprobs(cfg, params, tokens, *, use_flash):
+    """logp[b, t] = log pi(tokens[b, t+1] | tokens[b, :t+1]); last col 0."""
+    logits = forward(cfg, params, tokens, use_flash=use_flash)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nxt = tokens[:, 1:]  # targets
+    got = jnp.take_along_axis(logp[:, :-1, :], nxt[..., None], axis=-1)[..., 0]
+    return jnp.pad(got, ((0, 0), (0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Entry points (flat-parameter signatures, AOT targets)
+# ---------------------------------------------------------------------------
+
+
+def make_decode_step(cfg: ModelConfig):
+    _, unravel = flatten_spec(cfg)
+
+    def decode_step(flat_params, tokens, pos):
+        """flat_params [P] f32, tokens [B, S] i32, pos [B] i32 ->
+        (logits [B, V] f32,) — per-row logits predicting the token at
+        position pos[b] given tokens[b, :pos[b]]. Rows advance
+        independently (continuous batching in the LLMProxy slots)."""
+        params = unravel(flat_params)
+        logits = forward(cfg, params, tokens, use_flash=True)
+        idx = jnp.clip(pos - 1, 0, cfg.max_seq - 1)[:, None, None]
+        row = jnp.take_along_axis(logits, idx, axis=1)[:, 0, :]
+        return (row.astype(jnp.float32),)
+
+    return decode_step
+
+
+def make_seq_logprobs(cfg: ModelConfig):
+    _, unravel = flatten_spec(cfg)
+
+    def seq_logprobs(flat_params, tokens):
+        """flat_params [P], tokens [B, S] -> (logp [B, S] f32,)."""
+        params = unravel(flat_params)
+        return (_token_logprobs(cfg, params, tokens, use_flash=True),)
+
+    return seq_logprobs
+
+
+def make_train_step(cfg: ModelConfig, variant: str):
+    """One fused rollout-consumption step: loss -> grads -> Adam.
+
+    Signature (all f32 unless noted):
+      flat_params [P], m [P], v [P], step [] f32, lr [] f32,
+      tokens [B, S] i32, mask [B, S], adv [B, S],
+      logp_old [B, S], logp_prox [B, S], sign [B]
+    Returns:
+      (params' [P], m' [P], v' [P], loss [], grad_norm [],
+       mean_ratio [], max_ratio [], clip_frac [], entropy [])
+    """
+    _, unravel = flatten_spec(cfg)
+    pg = _pg.pg_loss(variant, blk_b=min(8, cfg.train_batch), blk_s=min(128, cfg.max_seq))
+
+    def loss_fn(flat_params, tokens, mask, adv, lpo, lpp, sign):
+        params = unravel(flat_params)
+        logits = forward(cfg, params, tokens, use_flash=False)
+        logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nxt = tokens[:, 1:]
+        lpn = jnp.take_along_axis(logp_all[:, :-1, :], nxt[..., None], axis=-1)[..., 0]
+        lpn = jnp.pad(lpn, ((0, 0), (0, 1)))
+        loss_tok, ratio = pg(lpn, lpo, lpp, adv, mask, sign)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        # masked policy entropy: diagnostic + exploration bonus
+        p = jnp.exp(logp_all)
+        ent_tok = -jnp.sum(p * logp_all, axis=-1)  # [B, S]
+        ent = jnp.sum(ent_tok * mask) / denom
+        loss = jnp.sum(loss_tok) / denom - ENT_COEF * ent
+        mean_ratio = jnp.sum(ratio * mask) / denom
+        max_ratio = jnp.max(jnp.where(mask > 0, ratio, 0.0))
+        clipped = (jnp.abs(ratio - 1.0) > _ref.CLIP_EPS).astype(jnp.float32)
+        clip_frac = jnp.sum(clipped * mask) / denom
+        return loss, (mean_ratio, max_ratio, clip_frac, ent)
+
+    def train_step(flat_params, m, v, step, lr, tokens, mask, adv, lpo, lpp, sign):
+        (loss, (mean_ratio, max_ratio, clip_frac, ent)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(flat_params, tokens, mask, adv, lpo, lpp, sign)
+        gnorm = jnp.sqrt(jnp.sum(grads * grads))
+        grads = grads * jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+        t = step + 1.0
+        mhat = m2 / (1.0 - ADAM_B1 ** t)
+        vhat = v2 / (1.0 - ADAM_B2 ** t)
+        new = flat_params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return (new, m2, v2, loss, gnorm, mean_ratio, max_ratio, clip_frac, ent)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Entry-point registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+
+def entry_points(cfg: ModelConfig):
+    """name -> (fn, example_args) for every AOT entry point."""
+    n_params, _ = flatten_spec(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    P = jax.ShapeDtypeStruct((n_params,), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    tok_d = jax.ShapeDtypeStruct((cfg.decode_batch, cfg.max_seq), i32)
+    tok_t = jax.ShapeDtypeStruct((cfg.train_batch, cfg.max_seq), i32)
+    bs = jax.ShapeDtypeStruct((cfg.train_batch, cfg.max_seq), f32)
+    sgn = jax.ShapeDtypeStruct((cfg.train_batch,), f32)
+    pos = jax.ShapeDtypeStruct((cfg.decode_batch,), i32)
+
+    eps = {
+        "decode_step": (make_decode_step(cfg), (P, tok_d, pos)),
+        "seq_logprobs": (make_seq_logprobs(cfg), (P, tok_t)),
+    }
+    for variant in _ref.VARIANTS:
+        eps[f"train_step_{variant}"] = (
+            make_train_step(cfg, variant),
+            (P, P, P, scal, scal, tok_t, bs, bs, bs, bs, sgn),
+        )
+    return eps

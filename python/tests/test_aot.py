@@ -1,0 +1,63 @@
+"""AOT artifact integrity: manifest vs HLO text vs init params."""
+
+import json
+import pathlib
+import struct
+
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "tiny" / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "tiny" / "manifest.json").read_text())
+
+
+def test_manifest_entry_points(manifest):
+    names = set(manifest["entries"])
+    assert {"decode_step", "seq_logprobs"} <= names
+    for v in manifest["pg_variants"]:
+        assert f"train_step_{v}" in names
+
+
+def test_hlo_files_exist_and_are_text(manifest):
+    for name, e in manifest["entries"].items():
+        p = ART / "tiny" / e["hlo"]
+        text = p.read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_init_params_size(manifest):
+    raw = (ART / "tiny" / "init_params.bin").read_bytes()
+    assert len(raw) == 4 * manifest["n_params"]
+    # finite floats
+    vals = struct.unpack(f"<{min(1024, manifest['n_params'])}f", raw[:4096])
+    assert all(v == v and abs(v) < 1e3 for v in vals)
+
+
+def test_manifest_shapes_consistent(manifest):
+    p, b, s = manifest["n_params"], manifest["train_batch"], manifest["max_seq"]
+    ts = manifest["entries"]["train_step_ppo"]
+    assert ts["inputs"][0]["shape"] == [p]
+    assert ts["inputs"][5]["shape"] == [b, s]
+    assert ts["outputs"][0]["shape"] == [p]
+    # 9 outputs: params, m, v + 6 scalars
+    assert len(ts["outputs"]) == 9
+    dec = manifest["entries"]["decode_step"]
+    assert dec["outputs"][0]["shape"] == [manifest["decode_batch"], manifest["vocab"]]
+
+
+def test_train_variants_share_signature(manifest):
+    sigs = {
+        name: (json.dumps(e["inputs"]), json.dumps(e["outputs"]))
+        for name, e in manifest["entries"].items()
+        if name.startswith("train_step_")
+    }
+    assert len(set(sigs.values())) == 1, "variants must be interchangeable"

@@ -1,0 +1,179 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+This is the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attn, grpo_loss, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(b, h, s, d, blk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = (_rand(kk, (b, h, s, d)) for kk in ks)
+    got = flash_attn.flash_attention(q, k, v, blk_q=blk, blk_k=blk)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (_rand(kk, (2, 2, 64, 32), jnp.bfloat16) for kk in ks)
+    got = flash_attn.flash_attention(q, k, v).astype(jnp.float32)
+    want = ref.attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_causality():
+    """Perturbing future tokens must not change earlier outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (_rand(kk, (1, 2, 64, 32)) for kk in ks)
+    base = flash_attn.flash_attention(q, k, v)
+    k2 = k.at[:, :, 48:, :].add(100.0)
+    v2 = v.at[:, :, 48:, :].add(-50.0)
+    pert = flash_attn.flash_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :48], pert[:, :, :48], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[:, :, 48:], pert[:, :, 48:])
+
+
+def test_flash_attention_rejects_unaligned():
+    q = jnp.zeros((1, 1, 48, 16))
+    with pytest.raises(AssertionError):
+        flash_attn.flash_attention(q, q, q, blk_q=32, blk_k=32)
+
+
+def test_flash_attention_vmem_budget():
+    """Perf guard: chosen tile shapes stay within a 16 MiB VMEM budget."""
+    for s in (64, 128, 256, 512):
+        assert flash_attn.vmem_bytes(32, 32, s, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# fused pg loss
+# ---------------------------------------------------------------------------
+
+def _pg_inputs(seed, b, s):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    lpn = -jnp.abs(_rand(ks[0], (b, s), scale=1.5))
+    lpo = -jnp.abs(_rand(ks[1], (b, s), scale=1.5))
+    lpp = -jnp.abs(_rand(ks[2], (b, s), scale=1.5))
+    adv = _rand(ks[3], (b, s))
+    mask = (jax.random.uniform(ks[4], (b, s)) > 0.3).astype(jnp.float32)
+    sign = jnp.where(jax.random.uniform(ks[5], (b,)) > 0.5, 1.0, -1.0)
+    return lpn, lpo, lpp, adv, mask, sign
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    variant=st.sampled_from(ref.VARIANTS),
+    b=st.sampled_from([8, 16, 32]),
+    s=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pg_loss_matches_ref(variant, b, s, seed):
+    args = _pg_inputs(seed, b, s)
+    fn = grpo_loss.pg_loss(variant, blk_b=8, blk_s=min(128, s))
+    loss, ratio = fn(*args)
+    want_loss, _, want_ratio = ref.pg_loss_ref(variant, *args)
+    np.testing.assert_allclose(loss, want_loss, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(ratio, want_ratio, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=14, deadline=None)
+@given(
+    variant=st.sampled_from(ref.VARIANTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pg_loss_grad_matches_ref(variant, seed):
+    args = _pg_inputs(seed, 8, 128)
+    fn = grpo_loss.pg_loss(variant)
+    grad = jax.grad(lambda lpn: jnp.sum(fn(lpn, *args[1:])[0]))(args[0])
+    _, want_grad, _ = ref.pg_loss_ref(variant, *args)
+    np.testing.assert_allclose(grad, want_grad, rtol=1e-5, atol=1e-5)
+
+
+def test_pg_loss_stop_gradient_weights():
+    """For weighted variants the IS weight must NOT carry gradient:
+    grad == -w * adv exactly (no d(w)/d(lpn) term)."""
+    args = _pg_inputs(11, 8, 128)
+    lpn, lpo, lpp, adv, mask, sign = args
+    for variant in ("tis", "cispo", "topr", "topr_weighted"):
+        fn = grpo_loss.pg_loss(variant)
+        grad = jax.grad(lambda x: jnp.sum(fn(x, lpo, lpp, adv, mask, sign)[0]))(lpn)
+        _, want, _ = ref.pg_loss_ref(variant, *args)
+        np.testing.assert_allclose(grad, want, rtol=1e-6, atol=1e-6)
+
+
+def test_pg_loss_masked_tokens_are_zero():
+    args = _pg_inputs(5, 8, 128)
+    lpn, lpo, lpp, adv, mask, sign = args
+    for variant in ref.VARIANTS:
+        loss, _ = grpo_loss.pg_loss(variant)(lpn, lpo, lpp, adv, mask, sign)
+        assert float(jnp.max(jnp.abs(jnp.where(mask == 0, loss, 0.0)))) == 0.0
+
+
+def test_ppo_equals_dppo_when_prox_is_old():
+    """Decoupled PPO with pi_prox == pi_old degenerates to PPO."""
+    lpn, lpo, _, adv, mask, sign = _pg_inputs(9, 8, 128)
+    l1, _ = grpo_loss.pg_loss("ppo")(lpn, lpo, lpo, adv, mask, sign)
+    l2, _ = grpo_loss.pg_loss("decoupled_ppo")(lpn, lpo, lpo, adv, mask, sign)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)
+
+
+def test_tis_ratio_capped():
+    """TIS objective weight is capped at IS_CAP even for huge ratios."""
+    b, s = 8, 128
+    lpn = jnp.zeros((b, s))
+    lpo = jnp.full((b, s), -10.0)  # ratio = e^10 >> cap
+    adv = jnp.ones((b, s))
+    mask = jnp.ones((b, s))
+    sign = jnp.ones((b,))
+    grad = jax.grad(lambda x: jnp.sum(
+        grpo_loss.pg_loss("tis")(x, lpo, lpo, adv, mask, sign)[0]))(lpn)
+    np.testing.assert_allclose(grad, -ref.IS_CAP * jnp.ones_like(grad), rtol=1e-6)
+
+
+def test_on_policy_identity():
+    """On-policy (new == old == prox): ppo/tis/cispo/reinforce gradients
+    coincide at -adv (ratio == 1 everywhere)."""
+    lpn, _, _, adv, mask, sign = _pg_inputs(13, 8, 128)
+    grads = {}
+    for variant in ("ppo", "tis", "cispo", "reinforce", "topr_weighted"):
+        fn = grpo_loss.pg_loss(variant)
+        grads[variant] = jax.grad(
+            lambda x: jnp.sum(fn(x, lpn, lpn, adv, mask, sign)[0]))(lpn)
+    want = -adv * mask
+    for v in ("ppo", "tis", "cispo", "reinforce"):
+        np.testing.assert_allclose(grads[v], want, rtol=1e-5, atol=1e-6)
+    # weighted topr halves negative-set trajectories
+    sgn2 = jnp.broadcast_to(sign[:, None], lpn.shape)
+    want_w = jnp.where(sgn2 > 0, ref.TOPR_W_POS, ref.TOPR_W_NEG) * want
+    np.testing.assert_allclose(grads["topr_weighted"], want_w, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_budget_pg():
+    assert grpo_loss.vmem_bytes(8, 128) < 16 * 2**20

@@ -1,0 +1,145 @@
+"""L2 correctness: model shapes, invariants, and training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def flat(params):
+    from jax.flatten_util import ravel_pytree
+    f, _ = ravel_pytree(params)
+    return f
+
+
+def test_param_count_matches_spec(flat):
+    n, _ = M.flatten_spec(CFG)
+    assert flat.shape == (n,)
+
+
+def test_forward_shapes(params):
+    toks = jnp.zeros((3, CFG.max_seq), jnp.int32)
+    logits = M.forward(CFG, params, toks, use_flash=False)
+    assert logits.shape == (3, CFG.max_seq, CFG.vocab)
+
+
+def test_flash_and_ref_forward_agree(params):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, CFG.max_seq), 0, CFG.vocab)
+    a = M.forward(CFG, params, toks, use_flash=True)
+    b = M.forward(CFG, params, toks, use_flash=False)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_forward_causality(params):
+    """Changing token t must not change logits at positions < t."""
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, CFG.max_seq), 1, CFG.vocab)
+    base = M.forward(CFG, params, toks, use_flash=False)
+    toks2 = toks.at[0, 40].set((toks[0, 40] + 1) % CFG.vocab)
+    pert = M.forward(CFG, params, toks2, use_flash=False)
+    np.testing.assert_allclose(base[:, :40], pert[:, :40], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, 40:], pert[:, 40:])
+
+
+def test_decode_step_matches_forward(flat):
+    """Per-row positions: each slot reads logits at its own pos-1."""
+    fn = M.make_decode_step(CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (CFG.decode_batch, CFG.max_seq),
+                              0, CFG.vocab)
+    pos = jnp.arange(8, 8 + CFG.decode_batch, dtype=jnp.int32)
+    (row,) = fn(flat, toks, pos)
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    full = M.forward(CFG, params, toks, use_flash=False)
+    for b in range(CFG.decode_batch):
+        np.testing.assert_allclose(row[b], full[b, 7 + b, :], rtol=2e-4, atol=2e-4)
+
+
+def test_seq_logprobs_are_valid(flat):
+    fn = M.make_seq_logprobs(CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (CFG.train_batch, CFG.max_seq),
+                              0, CFG.vocab)
+    (lp,) = fn(flat, toks)
+    assert lp.shape == (CFG.train_batch, CFG.max_seq)
+    assert float(jnp.max(lp[:, :-1])) <= 1e-6  # logprobs <= 0
+    assert float(jnp.max(jnp.abs(lp[:, -1]))) == 0.0  # last column padded
+
+
+def _mk_batch(seed, flat):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, s = CFG.train_batch, CFG.max_seq
+    toks = jax.random.randint(ks[0], (b, s), 0, CFG.vocab)
+    mask = jnp.zeros((b, s)).at[:, CFG.prompt_len:s - 8].set(1.0)
+    adv = jnp.broadcast_to(jax.random.normal(ks[1], (b, 1)), (b, s))
+    (lp,) = M.make_seq_logprobs(CFG)(flat, toks)
+    sign = jnp.where(jax.random.uniform(ks[2], (b,)) > 0.5, 1.0, -1.0)
+    return toks, mask, adv, lp, lp, sign
+
+
+@pytest.mark.parametrize("variant", ref.VARIANTS)
+def test_train_step_runs_and_updates(variant, flat):
+    fn = M.make_train_step(CFG, variant)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    batch = _mk_batch(5, flat)
+    out = fn(flat, m, v, jnp.float32(0), jnp.float32(1e-3), *batch)
+    new, m2, v2, loss, gnorm, mean_r, max_r, clip_f, ent = out
+    assert new.shape == flat.shape
+    assert float(gnorm) > 0.0
+    assert not np.allclose(new, flat)
+    assert np.isfinite(float(loss))
+    # on-policy batch: ratio must be exactly 1 on masked tokens
+    np.testing.assert_allclose(float(mean_r), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(float(max_r), 1.0, rtol=1e-4)
+    assert float(clip_f) == 0.0
+    assert float(ent) > 0.0
+
+
+def test_train_step_reduces_surrogate_loss(flat):
+    """A few REINFORCE steps on a fixed batch with positive advantage on
+    a fixed target token must raise that token's likelihood."""
+    fn = M.make_train_step(CFG, "reinforce")
+    b, s = CFG.train_batch, CFG.max_seq
+    toks = jnp.full((b, s), 7, jnp.int32)
+    mask = jnp.zeros((b, s)).at[:, CFG.prompt_len:20].set(1.0)
+    adv = jnp.ones((b, s))
+    sign = jnp.ones((b,))
+    lp_fn = M.make_seq_logprobs(CFG)
+    (lp0,) = lp_fn(flat, toks)
+    cur, m, v = flat, jnp.zeros_like(flat), jnp.zeros_like(flat)
+    for i in range(5):
+        (lp,) = lp_fn(cur, toks)
+        out = fn(cur, m, v, jnp.float32(i), jnp.float32(3e-3),
+                 toks, mask, adv, lp, lp, sign)
+        cur, m, v = out[0], out[1], out[2]
+    (lp1,) = lp_fn(cur, toks)
+    before = float(jnp.sum(lp0 * mask))
+    after = float(jnp.sum(lp1 * mask))
+    assert after > before, (before, after)
+
+
+def test_grad_clip_bounds_update():
+    """Update norm is bounded by lr * O(1) after Adam normalization."""
+    flat = jnp.zeros((M.flatten_spec(CFG)[0],)) + 0.01
+    # handled implicitly: Adam normalizes; just assert finite update
+    fn = M.make_train_step(CFG, "ppo")
+    b, s = CFG.train_batch, CFG.max_seq
+    toks = jnp.zeros((b, s), jnp.int32)
+    mask = jnp.ones((b, s))
+    adv = jnp.full((b, s), 100.0)  # extreme advantage
+    lp = jnp.full((b, s), -1.0)
+    sign = jnp.ones((b,))
+    out = fn(flat, jnp.zeros_like(flat), jnp.zeros_like(flat),
+             jnp.float32(0), jnp.float32(1e-3), toks, mask, adv, lp, lp, sign)
+    assert bool(jnp.all(jnp.isfinite(out[0])))

@@ -1,0 +1,66 @@
+//! Fig 1b: throughput scaling with GPU count, Async vs Sync-ROLL vs
+//! Sync-Naive, on the Qwen3-8B Base and Think length profiles.
+//!
+//! Paper shape to reproduce: Async scales near-linearly (7.6x at 8x
+//! GPUs on Think, 2.13x over Sync-Naive at 128); on Base all methods
+//! scale poorly but Async stays 1.53-2.24x above Sync-Naive.
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
+use roll_flash::workload::{LengthProfile, TrainCost};
+
+fn cfg(total: usize, profile: LengthProfile, mean: f64) -> RlvrSimConfig {
+    let mut c = RlvrSimConfig::paper_default(total / 2, total / 2);
+    c.lengths = profile;
+    c.train = TrainCost::for_mean_len(mean);
+    c.steps = 3;
+    c
+}
+
+fn main() {
+    for (name, profile, mean, paper128) in [
+        ("Qwen3-8B-Think (avg 11k)", LengthProfile::qwen3_think(), 11000.0, 2.13),
+        ("Qwen3-8B-Base (avg 2k)", LengthProfile::qwen3_base(), 2000.0, 2.24),
+    ] {
+        println!("== Fig 1b: {name} ==\n");
+        let mut table = Table::new(&[
+            "GPUs", "Sync-Naive s/step", "Sync-ROLL s/step", "Async s/step",
+            "ROLL/Naive", "Async/Naive", "Async self-scaling",
+        ]);
+        let mut async16 = 0.0f64;
+        let mut last_speedup = 0.0f64;
+        for total in [16usize, 32, 64, 128] {
+            let mut naive = cfg(total, profile, mean);
+            naive.scheduling = Scheduling::BatchRollout;
+            naive.replicate = false;
+            let r_naive = run(&naive);
+
+            let mut roll = cfg(total, profile, mean);
+            roll.scheduling = Scheduling::QueueSched;
+            roll.replicate = true;
+            let r_roll = run(&roll);
+
+            let mut asy = roll.clone();
+            asy.async_ratio = 2.0; // paper default Async Ratio 2, 1:1 split
+            let r_async = run(&asy);
+
+            let (tn, tr, ta) =
+                (r_naive.mean_step_time(), r_roll.mean_step_time(), r_async.mean_step_time());
+            if total == 16 {
+                async16 = ta;
+            }
+            last_speedup = tn / ta;
+            table.row(&[
+                total.to_string(),
+                format!("{tn:.0}"),
+                format!("{tr:.0}"),
+                format!("{ta:.0}"),
+                format!("{:.2}x", tn / tr),
+                format!("{:.2}x", tn / ta),
+                format!("{:.2}x", async16 / ta),
+            ]);
+        }
+        println!("{}", table.to_markdown());
+        println!("paper @128 GPUs: Async/Sync-Naive = {paper128:.2}x; measured: {last_speedup:.2}x\n");
+    }
+}

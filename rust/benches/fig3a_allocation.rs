@@ -1,0 +1,74 @@
+//! Fig 3a: per-step time across train:infer resource allocations on a
+//! fixed 40-GPU budget (Think profile). Paper shape: a tuned split
+//! (16 train / 24 infer) achieves ~2x over the sync baseline; giving
+//! everything to inference (32Infer) underutilizes; theory beta*
+//! (Prop 2) should land near the empirical optimum.
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
+use roll_flash::theory::Prop2;
+use roll_flash::workload::LengthProfile;
+
+fn main() {
+    let total = 40usize;
+    println!("== Fig 3a: train/infer allocation on {total} GPUs (Think) ==\n");
+
+    // sync baseline: all 40 GPUs both stages (64 prompts x 16 = 1024
+    // sequences: the tail-bound regime of the paper's 40-GPU testbed)
+    let mut sync = RlvrSimConfig::paper_default(total / 2, total / 2);
+    sync.n_prompts = 64;
+    sync.steps = 3;
+    let r_sync = run(&sync);
+    let t_sync = r_sync.mean_step_time();
+
+    let mut table = Table::new(&["allocation", "s/step", "speedup vs sync", "trainer idle s", "gen util"]);
+    table.row(&[
+        "Sync (40 shared)".into(),
+        format!("{t_sync:.0}"),
+        "1.00x".into(),
+        "-".into(),
+        format!("{:.2}", r_sync.gen_utilization),
+    ]);
+    let mut best = (String::new(), f64::INFINITY);
+    for infer in [8usize, 16, 20, 24, 28, 32] {
+        let mut c = RlvrSimConfig::paper_default(infer, total - infer);
+        c.n_prompts = 64;
+        c.async_ratio = 2.0;
+        c.steps = 3;
+        let r = run(&c);
+        let t = r.mean_step_time();
+        let name = format!("{}Train{}Infer", total - infer, infer);
+        if t < best.1 {
+            best = (name.clone(), t);
+        }
+        table.row(&[
+            name,
+            format!("{t:.0}"),
+            format!("{:.2}x", t_sync / t),
+            format!("{:.0}", r.trainer_idle / c.steps as f64),
+            format!("{:.2}", r.gen_utilization),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    let lengths = LengthProfile::qwen3_think();
+    let p2 = Prop2 {
+        k_workers: total,
+        n_samples: sync.sequences_per_step(),
+        mu_gen: sync.decode.effective_tokens(lengths.mean_target as usize) * sync.decode.token_time
+            / sync.knee as f64,
+        l_gen: sync.decode.gen_time(lengths.cap),
+        mu_train: sync.train.per_sample,
+        epochs: sync.train.epochs,
+    };
+    let beta = p2.beta_star(2.0);
+    println!(
+        "empirical best: {} ({:.0}s); Prop 2 beta* = {:.2} => {:.0}Train{:.0}Infer",
+        best.0,
+        best.1,
+        beta,
+        (beta * total as f64).round(),
+        ((1.0 - beta) * total as f64).round()
+    );
+    println!("paper: best 16Train24Infer, ~2x over baseline");
+}

@@ -1,0 +1,42 @@
+//! Fig 3b: per-step time vs rollout batch size, Async vs Sync-ROLL.
+//! Paper shape: approximately linear scaling with sample count plus a
+//! fixed overhead; Async below Sync at every size.
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig};
+
+fn main() {
+    println!("== Fig 3b: step time vs rollout batch size (Think, 40 GPUs) ==\n");
+    let mut table = Table::new(&["rollout size (seqs)", "Sync-ROLL s/step", "Async s/step", "speedup"]);
+    let mut prev: Option<(f64, f64)> = None;
+    for rollout in [32usize, 64, 128, 256, 512] {
+        let n_prompts = rollout / 16;
+        let mut sync = RlvrSimConfig::paper_default(20, 20);
+        sync.n_prompts = n_prompts;
+        sync.steps = 3;
+        let r_sync = run(&sync);
+
+        let mut asy = RlvrSimConfig::paper_default(24, 16);
+        asy.n_prompts = n_prompts;
+        asy.async_ratio = 2.0;
+        asy.steps = 3;
+        let r_async = run(&asy);
+
+        let (ts, ta) = (r_sync.mean_step_time(), r_async.mean_step_time());
+        table.row(&[
+            rollout.to_string(),
+            format!("{ts:.0}"),
+            format!("{ta:.0}"),
+            format!("{:.2}x", ts / ta),
+        ]);
+        if let Some((ps, pa)) = prev {
+            // near-linear: doubling samples should not much more than
+            // double the step time (fixed overheads shrink the ratio)
+            assert!(ts / ps < 2.6, "sync not ~linear: {ps} -> {ts}");
+            assert!(ta / pa < 2.6, "async not ~linear: {pa} -> {ta}");
+        }
+        prev = Some((ts, ta));
+    }
+    println!("{}", table.to_markdown());
+    println!("paper: both curves ~linear in rollout size; Async advantage in almost all cases");
+}

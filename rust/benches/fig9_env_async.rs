@@ -1,0 +1,61 @@
+//! Fig 9: environment-level asynchronous rollout under Gaussian env
+//! latency. Left: speedup grows with latency std at fixed mean 10s.
+//! Right: speedup shrinks as the mean grows at fixed std 5s.
+//! Paper anchors: (10,1)->1.16x @512; (10,10)->2.46x; (10,7)->2.12x;
+//! (50,5)->1.20x.
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::agentic::{run_rollout, AgenticSimConfig};
+use roll_flash::workload::{EnvLatency, FailureModel};
+
+fn cfg(batch: usize, lat: EnvLatency, env_async: bool) -> AgenticSimConfig {
+    let mut c = AgenticSimConfig::alfworld(8);
+    c.num_env_groups = batch / 8;
+    c.group_size = 8;
+    c.quota_groups = batch / 8;
+    c.quota_group_size = 8;
+    c.turns = 10;
+    c.env_latency = lat;
+    c.failures = FailureModel::none();
+    c.env_async = env_async;
+    c
+}
+
+fn speedup(batch: usize, lat: EnvLatency) -> (f64, f64, f64) {
+    let a = run_rollout(&cfg(batch, lat, true));
+    let b = run_rollout(&cfg(batch, lat, false));
+    (b.rollout_time, a.rollout_time, b.rollout_time / a.rollout_time)
+}
+
+fn main() {
+    println!("== Fig 9 (left): speedup vs latency std (mean 10s) ==\n");
+    let mut table = Table::new(&["(mu, sigma)", "batch", "lockstep s", "env-async s", "speedup"]);
+    for std in [1.0, 3.0, 5.0, 7.0, 10.0] {
+        for batch in [128usize, 512] {
+            let (tb, ta, s) = speedup(batch, EnvLatency::gaussian(10.0, std));
+            table.row(&[
+                format!("(10, {std})"),
+                batch.to_string(),
+                format!("{tb:.0}"),
+                format!("{ta:.0}"),
+                format!("{s:.2}x"),
+            ]);
+        }
+    }
+    println!("{}", table.to_markdown());
+    println!("paper @512: (10,1) 1.16x; (10,7) 2.12x; (10,10) 2.46x\n");
+
+    println!("== Fig 9 (right): speedup vs latency mean (std 5s) ==\n");
+    let mut table = Table::new(&["(mu, sigma)", "lockstep s", "env-async s", "speedup"]);
+    for mean in [10.0, 20.0, 30.0, 50.0] {
+        let (tb, ta, s) = speedup(512, EnvLatency::gaussian(mean, 5.0));
+        table.row(&[
+            format!("({mean}, 5)"),
+            format!("{tb:.0}"),
+            format!("{ta:.0}"),
+            format!("{s:.2}x"),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("paper: speedup decreases with mean; (50,5) -> 1.20x");
+}

@@ -1,0 +1,133 @@
+//! Hot-path performance harness (criterion is unavailable offline):
+//! warmup + trimmed-mean timing of the L3 hot loops and the real
+//! engine's decode/train steps. Feeds EXPERIMENTS.md §Perf.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use roll_flash::coordinator::SampleBuffer;
+use roll_flash::rl::Trajectory;
+use roll_flash::sim::queue::GpuPool;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig};
+use roll_flash::runtime::{ModelRuntime, TrainBatch};
+use roll_flash::util::rng::Rng;
+
+/// Trimmed-mean seconds per iteration over `n` runs (drop top/bottom 10%).
+fn bench<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..n.div_ceil(5) {
+        f();
+    }
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cut = n / 10;
+    let kept = &times[cut..n - cut.max(1) + 1];
+    kept.iter().sum::<f64>() / kept.len() as f64
+}
+
+fn main() {
+    println!("== perf_hotpath: L3 hot loops ==\n");
+
+    // 1. GpuPool event throughput (the simulator's inner loop)
+    let events = 200_000usize;
+    let t = bench(3, || {
+        let mut pool = GpuPool::new(64, 0.01, 16, 64);
+        let mut rng = Rng::new(1);
+        let mut next = 0u64;
+        let mut done = 0usize;
+        while done < events {
+            while pool.has_capacity() && next < (events + 4096) as u64 {
+                pool.submit(next, rng.range_f64(10.0, 3000.0), 0.0);
+                next += 1;
+            }
+            let tc = pool.peek_completion().unwrap();
+            pool.pop_completion(tc);
+            done += 1;
+        }
+    });
+    println!("GpuPool: {:.2}M completions/s", events as f64 / t / 1e6);
+
+    // 2. end-to-end sim step rate (one Fig1b cell)
+    let t = bench(5, || {
+        let mut c = RlvrSimConfig::paper_default(32, 32);
+        c.steps = 2;
+        let _ = run(&c);
+    });
+    println!("RLVR sim (8192 samples, 64 GPUs): {t:.3}s per config cell");
+
+    // 3. SampleBuffer producer/consumer throughput
+    let n_samples = 96 * 1024usize; // exact multiple of the batch
+    let t = bench(3, || {
+        let buf = std::sync::Arc::new(SampleBuffer::new(1024, 8, 2.0));
+        let p = buf.clone();
+        let total = n_samples;
+        let producer = std::thread::spawn(move || {
+            for i in 0..total as u64 {
+                // tag with the admission-ticket version — hardcoding a
+                // stale version would get every sample reclaimed
+                let iv = p.begin_sample().unwrap();
+                p.push(Trajectory::single_turn(
+                    vec![1; 8],
+                    vec![2; 8],
+                    vec![-0.1; 8],
+                    1.0,
+                    i / 8,
+                    iv,
+                ));
+            }
+        });
+        for _ in 0..n_samples / 1024 {
+            buf.get_batch(128).unwrap();
+            buf.bump_version();
+        }
+        producer.join().unwrap();
+    });
+    println!("SampleBuffer: {:.2}M samples/s through begin/push/get/bump", n_samples as f64 / t / 1e6);
+
+    // 4. real engine: decode + train step latency (tiny artifacts)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        let rt = ModelRuntime::load(&dir).unwrap();
+        rt.compile_all().unwrap();
+        let weights = rt.load_init_params().unwrap();
+        let params = rt.params_literal(&weights).unwrap();
+        let (b, s) = (rt.manifest.decode_batch, rt.manifest.max_seq);
+        let tokens = vec![3i32; b * s];
+        let pos = vec![8i32; b];
+        let t = bench(30, || {
+            let _ = rt.decode_step(&params, &tokens, &pos).unwrap();
+        });
+        println!(
+            "PJRT decode_step (tiny, B={b}): {:.2}ms ({:.0} tok/s batch throughput)",
+            t * 1e3,
+            b as f64 / t
+        );
+
+        let (tb, ts2) = (rt.manifest.train_batch, rt.manifest.max_seq);
+        let mut st = rt.train_state(&weights).unwrap();
+        let batch = TrainBatch {
+            tokens: vec![3; tb * ts2],
+            mask: vec![1.0; tb * ts2],
+            adv: vec![0.5; tb * ts2],
+            logp_old: vec![-1.0; tb * ts2],
+            logp_prox: vec![-1.0; tb * ts2],
+            sign: vec![1.0; tb],
+        };
+        let t = bench(10, || {
+            let _ = rt.train_step("ppo", &mut st, 1e-4, &batch).unwrap();
+        });
+        println!(
+            "PJRT train_step (tiny, B={tb}): {:.1}ms ({:.0} tokens/s)",
+            t * 1e3,
+            (tb * ts2) as f64 / t
+        );
+    } else {
+        println!("(skipping PJRT timings: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,104 @@
+//! Propositions 1 & 2: measured completion times vs the closed-form
+//! bounds of Section 3.1. The bounds must hold (measured <= bound) and
+//! be reasonably tight; beta* from Eq. 10 must minimize the measured
+//! async step time.
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::queue::GpuPool;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig};
+use roll_flash::theory::{Prop1, Prop2};
+use roll_flash::util::rng::Rng;
+
+/// Raw Prop-1 experiment: Q samples with iid gen times on K
+/// single-slot queue-scheduled workers.
+fn measured_completion(k: usize, q: usize, seed: u64) -> (f64, f64, f64) {
+    let mut rng = Rng::new(seed);
+    // gen times in [0, L], mean mu (uniform draw)
+    let l_gen = 300.0;
+    let times: Vec<f64> = (0..q).map(|_| rng.range_f64(0.0, l_gen)).collect();
+    let mu: f64 = times.iter().sum::<f64>() / q as f64;
+    let mut pool = GpuPool::new(k, 1.0, 1, 1); // 1 token/s, 1 slot each
+    let mut pending: std::collections::VecDeque<(u64, f64)> =
+        times.iter().enumerate().map(|(i, &t)| (i as u64, t)).collect();
+    let mut now = 0.0;
+    while let Some(&(id, t)) = pending.front() {
+        if pool.submit(id, t, now) {
+            pending.pop_front();
+        } else {
+            now = pool.peek_completion().unwrap();
+            pool.pop_completion(now);
+        }
+    }
+    while let Some(t) = pool.peek_completion() {
+        pool.pop_completion(t);
+        now = t;
+    }
+    (now, mu, l_gen)
+}
+
+fn main() {
+    println!("== Proposition 1: queue-scheduling completion bound ==\n");
+    let mut table = Table::new(&["K", "Q", "measured T", "bound (Q/K)mu + L", "tight?"]);
+    for (k, q) in [(16usize, 256usize), (32, 256), (64, 1024), (128, 512)] {
+        let (t, mu, l) = measured_completion(k, q, 42 + k as u64);
+        let p1 = Prop1 { k_workers: k, mu_gen: mu, l_gen: l };
+        let bound = p1.completion_bound(q);
+        assert!(t <= bound + 1e-6, "bound violated: {t} > {bound}");
+        table.row(&[
+            k.to_string(),
+            q.to_string(),
+            format!("{t:.0}"),
+            format!("{bound:.0}"),
+            format!("{:.0}%", t / bound * 100.0),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    println!("\n== Proposition 1: sync vs async per-sample bounds ==\n");
+    let p1 = Prop1 { k_workers: 64, mu_gen: 150.0, l_gen: 300.0 };
+    let mut table = Table::new(&["alpha", "per-sample bound (s)"]);
+    table.row(&["sync (Q=N)".into(), format!("{:.3}", p1.sync_bound(256))]);
+    for alpha in [1.0, 2.0, 4.0, 8.0] {
+        table.row(&[format!("async a={alpha}"), format!("{:.3}", p1.async_bound(256, alpha))]);
+    }
+    table.row(&["limit mu/K".into(), format!("{:.3}", p1.mu_gen / 64.0)]);
+    println!("{}", table.to_markdown());
+    println!("max speedup (K=N): {:.2}x\n", p1.max_speedup());
+
+    println!("== Proposition 2: beta* predicts the empirical optimum ==\n");
+    // measured: sweep beta on 40 GPUs and compare with Eq. 10
+    let total = 40usize;
+    let probe = RlvrSimConfig::paper_default(20, 20);
+    let mut best = (0.0f64, f64::INFINITY);
+    let mut table = Table::new(&["beta (train frac)", "measured s/step", "Eq.9 bound"]);
+    let p2 = Prop2 {
+        k_workers: total,
+        n_samples: probe.sequences_per_step(),
+        mu_gen: probe.decode.effective_tokens(11000) * probe.decode.token_time / probe.knee as f64,
+        l_gen: probe.decode.gen_time(30720),
+        mu_train: probe.train.per_sample,
+        epochs: 1.0,
+    };
+    for train_gpus in [8usize, 12, 16, 20, 24] {
+        let beta = train_gpus as f64 / total as f64;
+        let mut c = RlvrSimConfig::paper_default(total - train_gpus, train_gpus);
+        c.async_ratio = 2.0;
+        c.steps = 3;
+        let t = run(&c).mean_step_time();
+        if t < best.1 {
+            best = (beta, t);
+        }
+        table.row(&[
+            format!("{beta:.2}"),
+            format!("{t:.0}"),
+            format!("{:.0}", p2.async_bound(beta, 2.0)),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "empirical beta* = {:.2}; Eq. 10 beta* = {:.2}; async max speedup (alpha->inf) = {:.2}x",
+        best.0,
+        p2.beta_star(2.0),
+        p2.max_speedup()
+    );
+}

@@ -1,0 +1,84 @@
+//! Table 1: the smallest async ratio that reaches ~98% of the maximal
+//! throughput, swept over model size, sequence length, and rollout
+//! batch size. Paper shape: optimal alpha ~= 2 across model sizes,
+//! increases with sequence length (1,1,1 -> 2), decreases with rollout
+//! size (4,2,2,2).
+
+use roll_flash::metrics::Table;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig};
+use roll_flash::workload::{LengthProfile, TrainCost};
+
+/// Smallest alpha in {0.5, 1, 2, 4, 8} whose throughput is within 2%
+/// of the best over the sweep.
+fn optimal_alpha(make: impl Fn(f64) -> RlvrSimConfig) -> f64 {
+    let alphas = [0.5, 1.0, 2.0, 4.0, 8.0];
+    let times: Vec<f64> = alphas.iter().map(|&a| run(&make(a)).mean_step_time()).collect();
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    for (&a, &t) in alphas.iter().zip(&times) {
+        if t <= best * 1.02 {
+            return a;
+        }
+    }
+    *alphas.last().unwrap()
+}
+
+fn base_cfg() -> RlvrSimConfig {
+    // paper: 24Train16Infer highest-throughput configuration,
+    // rollout batch 256 sequences (16 prompts x 16)
+    let mut c = RlvrSimConfig::paper_default(16, 24);
+    c.n_prompts = 16;
+    c.steps = 6;
+    c
+}
+
+fn main() {
+    println!("== Table 1: optimal Async Ratio across configurations ==\n");
+
+    let mut t = Table::new(&["Model size", "0.6B", "1.7B", "4B", "8B"]);
+    let mut row = vec!["alpha*".to_string()];
+    for scale in [0.6f64 / 8.0, 1.7 / 8.0, 4.0 / 8.0, 1.0] {
+        let a = optimal_alpha(|alpha| {
+            let mut c = base_cfg();
+            c.decode = c.decode.scaled(scale.max(0.15));
+            c.train.per_sample *= scale.max(0.15);
+            c.async_ratio = alpha;
+            c
+        });
+        row.push(format!("{a}"));
+    }
+    t.row(&row);
+    println!("{}", t.to_markdown());
+    println!("paper: 2, 2, 2, 2\n");
+
+    let mut t = Table::new(&["Seq length", "4K", "8K", "16K", "32K"]);
+    let mut row = vec!["alpha*".to_string()];
+    for (mean, cap) in [(1400.0, 4096), (2750.0, 8192), (5500.0, 16384), (11000.0, 32768)] {
+        let a = optimal_alpha(|alpha| {
+            let mut c = base_cfg();
+            c.lengths = LengthProfile::new(mean, 0.75, cap);
+            c.train = TrainCost::for_mean_len(mean);
+            c.async_ratio = alpha;
+            c
+        });
+        row.push(format!("{a}"));
+    }
+    t.row(&row);
+    println!("{}", t.to_markdown());
+    println!("paper: 1, 1, 1, 2 (monotone non-decreasing in length)\n");
+
+    let mut t = Table::new(&["Rollout size", "32", "64", "128", "256"]);
+    let mut row = vec!["alpha*".to_string()];
+    for n_prompts in [2usize, 4, 8, 16] {
+        // rollout batch in sequences: prompts x 16 = 32..256
+        let a = optimal_alpha(|alpha| {
+            let mut c = base_cfg();
+            c.n_prompts = n_prompts;
+            c.async_ratio = alpha;
+            c
+        });
+        row.push(format!("{a}"));
+    }
+    t.row(&row);
+    println!("{}", t.to_markdown());
+    println!("paper: 4, 2, 2, 2 (monotone non-increasing in rollout size)");
+}

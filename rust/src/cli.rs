@@ -1,0 +1,58 @@
+//! Minimal argument parser substrate (clap is unavailable offline):
+//! `name=value` pairs plus positional subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + key=value options.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: impl Iterator<Item = String>) -> Cli {
+        let mut cli = Cli::default();
+        for a in args {
+            if let Some((k, v)) = a.split_once('=') {
+                cli.opts.insert(k.trim_start_matches('-').to_string(), v.to_string());
+            } else if cli.command.is_empty() {
+                cli.command = a;
+            }
+        }
+        cli
+    }
+
+    pub fn from_env() -> Cli {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let cli = Cli::parse(
+            ["train", "steps=40", "--alpha=2.5", "model=small"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(cli.command, "train");
+        assert_eq!(cli.parse_or("steps", 0usize), 40);
+        assert_eq!(cli.parse_or("alpha", 0.0f64), 2.5);
+        assert_eq!(cli.str_or("model", "tiny"), "small");
+        assert_eq!(cli.parse_or("missing", 7u32), 7);
+    }
+}

@@ -1,0 +1,322 @@
+//! Typed configuration, mirroring the paper's appendix config schema
+//! (RLVR pipeline, agentic pipeline, redundant-env mode).
+
+pub mod yaml;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Off-policy objective selector (`pg_variant` in the paper config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PgVariant {
+    Ppo,
+    DecoupledPpo,
+    Tis,
+    Cispo,
+    Topr,
+    ToprWeighted,
+    Reinforce,
+}
+
+impl PgVariant {
+    pub const ALL: [PgVariant; 7] = [
+        PgVariant::Ppo,
+        PgVariant::DecoupledPpo,
+        PgVariant::Tis,
+        PgVariant::Cispo,
+        PgVariant::Topr,
+        PgVariant::ToprWeighted,
+        PgVariant::Reinforce,
+    ];
+
+    /// Artifact entry-point suffix (matches kernels/ref.py VARIANTS).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PgVariant::Ppo => "ppo",
+            PgVariant::DecoupledPpo => "decoupled_ppo",
+            PgVariant::Tis => "tis",
+            PgVariant::Cispo => "cispo",
+            PgVariant::Topr => "topr",
+            PgVariant::ToprWeighted => "topr_weighted",
+            PgVariant::Reinforce => "reinforce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Self::ALL
+            .into_iter()
+            .find(|v| v.as_str() == s)
+            .with_context(|| format!("unknown pg_variant {s:?}"))
+    }
+
+    /// Variants that use a proximal policy forward pass.
+    pub fn needs_prox(self) -> bool {
+        matches!(self, PgVariant::DecoupledPpo)
+    }
+}
+
+/// Per-actor resource + hyperparameter block.
+#[derive(Clone, Debug)]
+pub struct ActorConfig {
+    pub device_mapping: Vec<usize>,
+    pub learning_rate: f64,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+}
+
+impl Default for ActorConfig {
+    fn default() -> Self {
+        ActorConfig { device_mapping: (0..1).collect(), learning_rate: 1e-3, max_new_tokens: 32, temperature: 1.0 }
+    }
+}
+
+/// Env-manager block (`train_env_manager` / `val_env_manager`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnvManagerConfig {
+    pub num_env_groups: usize,
+    pub group_size: usize,
+}
+
+impl EnvManagerConfig {
+    pub fn capacity(&self) -> usize {
+        self.num_env_groups * self.group_size
+    }
+}
+
+/// Top-level run configuration (paper Appendix A schema).
+#[derive(Clone, Debug)]
+pub struct RollConfig {
+    pub seed: u64,
+    pub pg_variant: PgVariant,
+    pub pretrain: String, // artifacts/<model> directory name
+    pub rollout_batch_size: usize,
+    pub num_return_sequences_in_group: usize,
+    pub ppo_epochs: usize,
+    pub prompt_length: usize,
+    pub response_length: usize,
+    /// false => batch rollout; true => queue scheduling (Section 5.1.1)
+    pub use_queue_scheduling: bool,
+    pub max_additional_running_prompts: usize,
+    /// Section 5.1.2 prompt replication
+    pub is_num_return_sequences_expand: bool,
+    /// asynchronous ratio alpha; 0 => synchronous (Section 4.3)
+    pub async_generation_ratio: f64,
+    pub adv_estimator: String,
+    pub reward_norm: String,
+    pub actor_train: ActorConfig,
+    pub actor_infer: ActorConfig,
+    pub train_env_manager: EnvManagerConfig,
+    pub val_env_manager: EnvManagerConfig,
+    pub max_env_steps: usize,
+}
+
+impl Default for RollConfig {
+    fn default() -> Self {
+        RollConfig {
+            seed: 42,
+            pg_variant: PgVariant::Ppo,
+            pretrain: "tiny".into(),
+            rollout_batch_size: 8,
+            num_return_sequences_in_group: 4,
+            ppo_epochs: 1,
+            prompt_length: 8,
+            response_length: 16,
+            use_queue_scheduling: true,
+            max_additional_running_prompts: 16,
+            is_num_return_sequences_expand: true,
+            async_generation_ratio: 0.0,
+            adv_estimator: "reinforce".into(),
+            reward_norm: "group".into(),
+            actor_train: ActorConfig::default(),
+            actor_infer: ActorConfig::default(),
+            train_env_manager: EnvManagerConfig { num_env_groups: 8, group_size: 16 },
+            val_env_manager: EnvManagerConfig { num_env_groups: 128, group_size: 1 },
+            max_env_steps: 30,
+        }
+    }
+}
+
+impl RollConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_yaml(&text)
+    }
+
+    pub fn from_yaml(text: &str) -> Result<Self> {
+        let j = yaml::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut cfg = RollConfig::default();
+
+        let num = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64);
+        if let Some(v) = num(&j, "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = j.get("pg_variant").and_then(Json::as_str) {
+            cfg.pg_variant = PgVariant::parse(v)?;
+        }
+        if let Some(v) = j.get("pretrain").and_then(Json::as_str) {
+            // accept both HF-style ("Qwen/Qwen3-8B-Base") and local names
+            cfg.pretrain = v.rsplit('/').next().unwrap_or(v).to_string();
+        }
+        if let Some(v) = num(&j, "rollout_batch_size") {
+            cfg.rollout_batch_size = v as usize;
+        }
+        if let Some(v) = num(&j, "num_return_sequences_in_group") {
+            cfg.num_return_sequences_in_group = v as usize;
+        }
+        if let Some(v) = num(&j, "ppo_epochs") {
+            cfg.ppo_epochs = v as usize;
+        }
+        if let Some(v) = num(&j, "prompt_length") {
+            cfg.prompt_length = v as usize;
+        }
+        if let Some(v) = num(&j, "response_length") {
+            cfg.response_length = v as usize;
+        }
+        if let Some(v) = num(&j, "generate_opt_level") {
+            cfg.use_queue_scheduling = v as usize > 0;
+        }
+        if let Some(v) = num(&j, "max_additional_running_prompts") {
+            cfg.max_additional_running_prompts = v as usize;
+        }
+        if let Some(Json::Bool(b)) = j.get("is_num_return_sequences_expand") {
+            cfg.is_num_return_sequences_expand = *b;
+        }
+        if let Some(v) = num(&j, "async_generation_ratio") {
+            cfg.async_generation_ratio = v;
+        }
+        if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
+            cfg.adv_estimator = v.to_string();
+        }
+        if let Some(v) = j.get("reward_norm").and_then(Json::as_str) {
+            cfg.reward_norm = v.to_string();
+        }
+        for (key, actor) in [("actor_train", &mut cfg.actor_train), ("actor_infer", &mut cfg.actor_infer)] {
+            if let Some(a) = j.get(key) {
+                if let Some(dm) = a.get("device_mapping").and_then(Json::as_arr) {
+                    actor.device_mapping = dm.iter().filter_map(Json::as_usize).collect();
+                }
+                if let Some(lr) = a
+                    .get("training_args")
+                    .and_then(|t| t.get("learning_rate"))
+                    .and_then(Json::as_f64)
+                {
+                    actor.learning_rate = lr;
+                }
+                if let Some(g) = a.get("generating_args") {
+                    if let Some(v) = g.get("max_new_tokens").and_then(Json::as_f64) {
+                        actor.max_new_tokens = v as usize;
+                    }
+                    if let Some(v) = g.get("temperature").and_then(Json::as_f64) {
+                        actor.temperature = v;
+                    }
+                }
+            }
+        }
+        for (key, em) in [
+            ("train_env_manager", &mut cfg.train_env_manager),
+            ("val_env_manager", &mut cfg.val_env_manager),
+        ] {
+            if let Some(e) = j.get(key) {
+                if let Some(v) = e.get("num_env_groups").and_then(Json::as_usize) {
+                    em.num_env_groups = v;
+                }
+                if let Some(v) = e.get("group_size").and_then(Json::as_usize) {
+                    em.group_size = v;
+                }
+            }
+        }
+        if let Some(envs) = j.get("custom_envs").and_then(Json::as_obj) {
+            if let Some((_, e)) = envs.iter().next() {
+                if let Some(v) = e.get("max_steps").and_then(Json::as_usize) {
+                    cfg.max_env_steps = v;
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.rollout_batch_size > 0, "rollout_batch_size must be positive");
+        anyhow::ensure!(self.num_return_sequences_in_group > 0, "group size must be positive");
+        anyhow::ensure!(self.async_generation_ratio >= 0.0, "async ratio must be >= 0");
+        anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
+        Ok(())
+    }
+
+    /// Synchronous mode? (paper: async_generation_ratio == 0)
+    pub fn is_sync(&self) -> bool {
+        self.async_generation_ratio == 0.0
+    }
+
+    /// Total sequences consumed per training step.
+    pub fn sequences_per_step(&self) -> usize {
+        self.rollout_batch_size * self.num_return_sequences_in_group
+    }
+
+    /// SampleBuffer capacity bound: (1 + alpha) * batch (Section 4.3).
+    pub fn buffer_capacity(&self) -> usize {
+        ((1.0 + self.async_generation_ratio) * self.sequences_per_step() as f64).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RollConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_paper_appendix_schema() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+seed: 7
+pg_variant: tis
+pretrain: Qwen/Qwen3-8B-Base
+rollout_batch_size: 256
+num_return_sequences_in_group: 16
+prompt_length: 2048
+response_length: 30720
+is_num_return_sequences_expand: true
+async_generation_ratio: 2
+actor_train:
+  training_args:
+    learning_rate: 1.0e-6
+  device_mapping: list(range(0,16))
+actor_infer:
+  generating_args:
+    max_new_tokens: ${response_length}
+    temperature: 1
+  device_mapping: list(range(16,40))
+train_env_manager:
+  num_env_groups: 8
+  group_size: 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.pg_variant, PgVariant::Tis);
+        assert_eq!(cfg.pretrain, "Qwen3-8B-Base");
+        assert_eq!(cfg.sequences_per_step(), 4096);
+        assert_eq!(cfg.buffer_capacity(), 3 * 4096);
+        assert!(!cfg.is_sync());
+        assert_eq!(cfg.actor_infer.device_mapping.len(), 24);
+        assert_eq!(cfg.actor_infer.max_new_tokens, 30720);
+        assert!((cfg.actor_train.learning_rate - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        for v in PgVariant::ALL {
+            assert_eq!(PgVariant::parse(v.as_str()).unwrap(), v);
+        }
+        assert!(PgVariant::parse("bogus").is_err());
+    }
+}

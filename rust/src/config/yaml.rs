@@ -1,0 +1,268 @@
+//! YAML-subset parser (std-only substrate). Covers the paper's appendix
+//! config schema: nested maps by indentation, `- ` list items, scalars
+//! (string/number/bool/null), inline `#` comments, quoted strings,
+//! `${var}` references to top-level keys, and the paper's
+//! `list(range(a,b))` device-mapping syntax.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Parse a YAML-subset document into the in-tree JSON value model.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let lines = preprocess(text);
+    let (v, consumed) = parse_block(&lines, 0, indent_of(&lines, 0))?;
+    if consumed < lines.len() {
+        return Err(format!("unparsed content at line {}", lines[consumed].1 + 1));
+    }
+    let v = resolve_refs(&v)?;
+    Ok(v)
+}
+
+/// (indent, original line number, content) for non-empty lines.
+fn preprocess(text: &str) -> Vec<(usize, usize, String)> {
+    let mut out = Vec::new();
+    for (num, raw) in text.lines().enumerate() {
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push((indent, num, trimmed.trim_start().to_string()));
+    }
+    out
+}
+
+fn strip_comment(line: &str) -> String {
+    let mut out = String::new();
+    let mut in_str: Option<char> = None;
+    for c in line.chars() {
+        match (c, in_str) {
+            ('#', None) => break,
+            ('"', None) | ('\'', None) => in_str = Some(c),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_str = None,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn indent_of(lines: &[(usize, usize, String)], i: usize) -> usize {
+    lines.get(i).map(|l| l.0).unwrap_or(0)
+}
+
+/// Parse a block starting at `start` whose items sit at `indent`.
+fn parse_block(
+    lines: &[(usize, usize, String)],
+    start: usize,
+    indent: usize,
+) -> Result<(Json, usize), String> {
+    if start >= lines.len() {
+        return Ok((Json::Null, start));
+    }
+    if lines[start].2.starts_with("- ") || lines[start].2 == "-" {
+        parse_list(lines, start, indent)
+    } else {
+        parse_map(lines, start, indent)
+    }
+}
+
+fn parse_list(
+    lines: &[(usize, usize, String)],
+    start: usize,
+    indent: usize,
+) -> Result<(Json, usize), String> {
+    let mut items = Vec::new();
+    let mut i = start;
+    while i < lines.len() && lines[i].0 == indent && (lines[i].2.starts_with("- ") || lines[i].2 == "-") {
+        let inline = lines[i].2[1..].trim();
+        if inline.is_empty() {
+            let (v, next) = parse_block(lines, i + 1, indent_of(lines, i + 1))?;
+            items.push(v);
+            i = next;
+        } else {
+            items.push(scalar(inline)?);
+            i += 1;
+        }
+    }
+    Ok((Json::Arr(items), i))
+}
+
+fn parse_map(
+    lines: &[(usize, usize, String)],
+    start: usize,
+    indent: usize,
+) -> Result<(Json, usize), String> {
+    let mut map = BTreeMap::new();
+    let mut i = start;
+    while i < lines.len() && lines[i].0 == indent {
+        let line = &lines[i].2;
+        if line.starts_with("- ") {
+            break;
+        }
+        let colon = find_key_colon(line)
+            .ok_or_else(|| format!("expected `key:` at line {}", lines[i].1 + 1))?;
+        let key = unquote(line[..colon].trim());
+        let rest = line[colon + 1..].trim();
+        if rest.is_empty() {
+            // nested block (or empty value if next line is not deeper)
+            if i + 1 < lines.len() && lines[i + 1].0 > indent {
+                let (v, next) = parse_block(lines, i + 1, lines[i + 1].0)?;
+                map.insert(key, v);
+                i = next;
+            } else {
+                map.insert(key, Json::Null);
+                i += 1;
+            }
+        } else {
+            map.insert(key, scalar(rest)?);
+            i += 1;
+        }
+    }
+    Ok((Json::Obj(map), i))
+}
+
+fn find_key_colon(line: &str) -> Option<usize> {
+    let mut in_str: Option<char> = None;
+    for (idx, c) in line.char_indices() {
+        match (c, in_str) {
+            ('"', None) | ('\'', None) => in_str = Some(c),
+            ('"', Some('"')) | ('\'', Some('\'')) => in_str = None,
+            (':', None) => return Some(idx),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let b = s.as_bytes();
+    if b.len() >= 2 && ((b[0] == b'"' && b[b.len() - 1] == b'"') || (b[0] == b'\'' && b[b.len() - 1] == b'\'')) {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Scalar values, including flow lists `[a, b]` and `list(range(a,b))`.
+fn scalar(s: &str) -> Result<Json, String> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix("list(range(").and_then(|t| t.strip_suffix("))")) {
+        let parts: Vec<&str> = inner.split(',').map(str::trim).collect();
+        if parts.len() != 2 {
+            return Err(format!("bad range: {s}"));
+        }
+        let a: i64 = parts[0].parse().map_err(|_| format!("bad range: {s}"))?;
+        let b: i64 = parts[1].parse().map_err(|_| format!("bad range: {s}"))?;
+        return Ok(Json::Arr((a..b).map(|x| Json::Num(x as f64)).collect()));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        return Ok(Json::Arr(
+            inner.split(',').map(|p| scalar(p.trim())).collect::<Result<_, _>>()?,
+        ));
+    }
+    Ok(match s {
+        "true" | "True" => Json::Bool(true),
+        "false" | "False" => Json::Bool(false),
+        "null" | "~" | "None" => Json::Null,
+        _ => {
+            if let Ok(n) = s.parse::<f64>() {
+                Json::Num(n)
+            } else {
+                Json::Str(unquote(s))
+            }
+        }
+    })
+}
+
+/// Resolve `${key}` string references against top-level keys
+/// (the appendix config uses e.g. `${response_length}`).
+fn resolve_refs(root: &Json) -> Result<Json, String> {
+    fn walk(v: &Json, root: &Json) -> Result<Json, String> {
+        match v {
+            Json::Str(s) if s.starts_with("${") && s.ends_with('}') => {
+                let key = &s[2..s.len() - 1];
+                root.get(key)
+                    .cloned()
+                    .ok_or_else(|| format!("unresolved reference {s}"))
+            }
+            Json::Arr(a) => Ok(Json::Arr(a.iter().map(|x| walk(x, root)).collect::<Result<_, _>>()?)),
+            Json::Obj(m) => {
+                let mut out = BTreeMap::new();
+                for (k, x) in m {
+                    out.insert(k.clone(), walk(x, root)?);
+                }
+                Ok(Json::Obj(out))
+            }
+            other => Ok(other.clone()),
+        }
+    }
+    walk(root, root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paper_style_config() {
+        let src = r#"
+seed: 42
+pg_variant: ppo # can be decoupled_ppo, topr, tis, cispo
+rollout_batch_size: 256
+is_num_return_sequences_expand: false
+async_generation_ratio: 0
+response_length: 30720
+actor_train:
+  training_args:
+    learning_rate: 1.0e-6
+    per_device_train_batch_size: 1
+  device_mapping: list(range(0,16))
+actor_infer:
+  generating_args:
+    max_new_tokens: ${response_length}
+    temperature: 1
+  device_mapping: list(range(0,16))
+custom_envs:
+  AlfworldEnv:
+    max_steps: 30
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("seed").unwrap().as_usize(), Some(42));
+        assert_eq!(v.get("pg_variant").unwrap().as_str(), Some("ppo"));
+        let dm = v.get("actor_train").unwrap().get("device_mapping").unwrap();
+        assert_eq!(dm.as_arr().unwrap().len(), 16);
+        let mnt = v.get("actor_infer").unwrap().get("generating_args").unwrap().get("max_new_tokens");
+        assert_eq!(mnt.unwrap().as_usize(), Some(30720));
+        let lr = v.get("actor_train").unwrap().get("training_args").unwrap().get("learning_rate");
+        assert!((lr.unwrap().as_f64().unwrap() - 1e-6).abs() < 1e-18);
+        assert_eq!(
+            v.get("custom_envs").unwrap().get("AlfworldEnv").unwrap().get("max_steps").unwrap().as_usize(),
+            Some(30)
+        );
+    }
+
+    #[test]
+    fn lists_parse() {
+        let v = parse("xs:\n  - 1\n  - 2\nflow: [3, 4]\n").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("flow").unwrap().idx(1).unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn bad_reference_errors() {
+        assert!(parse("a: ${nope}\n").is_err());
+    }
+
+    #[test]
+    fn comments_in_strings_survive() {
+        let v = parse("a: \"x # y\"\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x # y"));
+    }
+}

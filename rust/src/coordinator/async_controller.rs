@@ -1,0 +1,143 @@
+//! AsyncController (paper Section 4.2): the training-side orchestrator.
+//!
+//! Each iteration issues a blocking `get_batch` to the SampleBuffer,
+//! runs `train_step` minibatches on the retrieved data, then performs
+//! the three-phase weight synchronization: suspend -> model_update
+//! (fetch + broadcast latest weights to the LLMProxy) -> resume. In
+//! asynchronous mode the rollout stage keeps collecting in parallel;
+//! switching to synchronous mode is exactly the paper's recipe —
+//! "invoking suspend immediately after get_batch".
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::PgVariant;
+use crate::coordinator::llm_proxy::LlmProxy;
+use crate::coordinator::sample_buffer::SampleBuffer;
+use crate::rl;
+use crate::runtime::{ModelRuntime, TrainState};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerCfg {
+    pub variant: PgVariant,
+    pub steps: usize,
+    pub lr: f32,
+    /// prompts consumed per training step (rollout_batch_size)
+    pub n_groups: usize,
+    pub group_size: usize,
+    /// synchronous mode: suspend rollout during training
+    pub sync_mode: bool,
+}
+
+/// Per-step training log (the Fig 4-style curve data).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub mean_ratio: f32,
+    pub max_ratio: f32,
+    pub clip_frac: f32,
+    pub entropy: f32,
+    pub reward_mean: f32,
+    pub pass_rate: f32,
+    pub mean_version_gap: f64,
+    pub wall_secs: f64,
+}
+
+/// Run the training loop. `rt`/`st` belong to the calling thread (the
+/// trainer owns its own PJRT runtime — weights cross threads only as
+/// flat vectors, the paper's model_update broadcast).
+pub fn run_training(
+    rt: &ModelRuntime,
+    st: &mut TrainState,
+    proxy: &Arc<LlmProxy>,
+    buffer: &Arc<SampleBuffer>,
+    cfg: &ControllerCfg,
+) -> Result<Vec<StepLog>> {
+    let b = rt.manifest.train_batch;
+    let s = rt.manifest.max_seq;
+    let per_step = cfg.n_groups * cfg.group_size;
+    anyhow::ensure!(
+        per_step % b == 0,
+        "sequences per step ({per_step}) must be a multiple of train_batch ({b})"
+    );
+    let mut logs = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let t0 = Instant::now();
+        let Some(samples) = buffer.get_batch(cfg.n_groups) else {
+            anyhow::bail!("sample buffer shut down mid-training");
+        };
+        if cfg.sync_mode {
+            proxy.suspend();
+        }
+
+        let advantages = rl::grpo_advantages(&samples);
+        let signs = rl::topr_signs(&samples, &advantages);
+        let gap_before = buffer.stats();
+
+        // minibatch sweep (gradient_accumulation analogue: sequential
+        // Adam updates over chunks, as ppo_epochs=1 single pass)
+        let mut agg = crate::runtime::TrainStats::default();
+        let chunks = per_step / b;
+        for c in 0..chunks {
+            let lo = c * b;
+            let rows = &samples[lo..lo + b];
+            let adv = &advantages[lo..lo + b];
+            let sgn = &signs[lo..lo + b];
+            let mut batch = rl::assemble_batch(rows, adv, sgn, b, s);
+            if cfg.variant.needs_prox() {
+                // proximal policy = current weights before this update
+                let prox = rt.seq_logprobs(&st.params, &batch.tokens)?;
+                rl::fill_prox(&mut batch, &prox);
+            }
+            let stats = rt.train_step(cfg.variant.as_str(), st, cfg.lr, &batch)?;
+            agg.loss += stats.loss / chunks as f32;
+            agg.grad_norm += stats.grad_norm / chunks as f32;
+            agg.mean_ratio += stats.mean_ratio / chunks as f32;
+            agg.max_ratio = agg.max_ratio.max(stats.max_ratio);
+            agg.clip_frac += stats.clip_frac / chunks as f32;
+            agg.entropy += stats.entropy / chunks as f32;
+        }
+
+        // three-phase weight sync: suspend -> model_update -> resume.
+        // (UpdateWeights is atomic w.r.t. decode steps in the proxy
+        // loop, realizing suspend+broadcast+resume in one command.)
+        let version = buffer.bump_version();
+        proxy.update_weights(rt.snapshot(st)?, version);
+        if cfg.sync_mode {
+            proxy.resume();
+        }
+
+        let gap_after = buffer.stats();
+        logs.push(StepLog {
+            step,
+            loss: agg.loss,
+            grad_norm: agg.grad_norm,
+            mean_ratio: agg.mean_ratio,
+            max_ratio: agg.max_ratio,
+            clip_frac: agg.clip_frac,
+            entropy: agg.entropy,
+            reward_mean: samples.iter().map(|t| t.reward).sum::<f32>() / samples.len() as f32,
+            pass_rate: rl::pass_rate(&samples) as f32,
+            mean_version_gap: {
+                let d = (gap_after.consumed - gap_before.consumed).max(1);
+                (gap_after.sum_version_gap - gap_before.sum_version_gap) as f64 / d as f64
+            },
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(logs)
+}
+
+/// Format a step log line (shared by examples and benches).
+pub fn format_log(l: &StepLog) -> String {
+    format!(
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}  {:.2}s",
+        l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
+        l.entropy, l.mean_version_gap, l.wall_secs
+    )
+}

@@ -1,0 +1,179 @@
+//! EnvManager (paper Section 4.2): the basic execution worker. Each
+//! manager owns one BaseEnv, acquires an admission ticket from the
+//! SampleBuffer (the per-sample freshness bound), then runs the
+//! reset/step loop against the shared LLMProxy: receive an action,
+//! apply it via `step`, repeat until termination, trigger reward, and
+//! enqueue the trajectory.
+//!
+//! Environment-level asynchronous rollout (Section 5.2.1) falls out of
+//! the architecture: while one manager waits on its environment, the
+//! proxy's decode slots serve other managers' requests.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::llm_proxy::LlmProxy;
+use crate::coordinator::sample_buffer::SampleBuffer;
+use crate::env::BaseEnv;
+use crate::rl::Trajectory;
+
+/// Shared episode numbering: members of a group must roll the same
+/// task (GRPO needs multiple candidates per prompt), so the task seed
+/// is derived from (group, episode-index-within-group).
+pub struct GroupTasks {
+    base_seed: u64,
+    group_size: usize,
+    counters: Vec<AtomicU64>,
+}
+
+impl GroupTasks {
+    pub fn new(num_groups: usize, group_size: usize, base_seed: u64) -> Self {
+        GroupTasks {
+            base_seed,
+            group_size,
+            counters: (0..num_groups * group_size).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Next (group_key, task_seed) for manager `slot` in group `grp`.
+    /// The member's local episode counter picks the episode; all
+    /// members at episode e of group g share a task seed.
+    pub fn next(&self, grp: usize, member: usize) -> (u64, u64) {
+        let idx = grp * self.group_size + member;
+        let episode = self.counters[idx].fetch_add(1, Ordering::Relaxed);
+        let key = (grp as u64) << 32 | episode;
+        let seed = self
+            .base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(key.wrapping_mul(0xd1342543de82ef95));
+        (key, seed)
+    }
+}
+
+/// EnvManager runtime options.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvManagerCfg {
+    pub group: usize,
+    pub member: usize,
+    /// scale simulated env latency into real sleeps (0.0 = don't sleep)
+    pub latency_scale: f64,
+    /// give up on an episode whose env hangs longer than this
+    pub hang_timeout: f64,
+}
+
+/// Spawn one EnvManager thread.
+pub fn spawn_env_manager<E: BaseEnv + 'static>(
+    mut env: E,
+    cfg: EnvManagerCfg,
+    tasks: Arc<GroupTasks>,
+    proxy: Arc<LlmProxy>,
+    buffer: Arc<SampleBuffer>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<usize> {
+    std::thread::Builder::new()
+        .name(format!("env-{}-{}", cfg.group, cfg.member))
+        .spawn(move || {
+            let mut episodes = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                // admission ticket = freshness bound (Section 4.3)
+                let Some(init_version) = buffer.begin_sample() else { break };
+                if stop.load(Ordering::Relaxed) {
+                    buffer.cancel();
+                    break;
+                }
+                match run_episode(&mut env, &cfg, &tasks, &proxy, init_version) {
+                    Some(traj) => {
+                        buffer.push(traj);
+                        episodes += 1;
+                    }
+                    None => buffer.cancel(),
+                }
+            }
+            episodes
+        })
+        .expect("spawn env manager")
+}
+
+/// One reset/step loop. Returns None if the episode must be abandoned
+/// (proxy gone, env hang, context overflow) — the ticket is cancelled.
+fn run_episode<E: BaseEnv>(
+    env: &mut E,
+    cfg: &EnvManagerCfg,
+    tasks: &GroupTasks,
+    proxy: &LlmProxy,
+    init_version: u64,
+) -> Option<Trajectory> {
+    let (group_key, task_seed) = tasks.next(cfg.group, cfg.member);
+    let prompt = env.reset(task_seed);
+    let mut context = prompt.clone();
+    let mut response: Vec<i32> = Vec::new();
+    let mut response_mask: Vec<f32> = Vec::new();
+    let mut logps: Vec<f32> = Vec::new();
+    let mut reward = 0.0f32;
+
+    for _turn in 0..env.max_steps() {
+        let (_id, rx) = proxy.generate(context.clone(), env.max_new_tokens());
+        let result = rx.recv().ok()?; // proxy shut down => abandon
+        // action tokens are trainable
+        for (t, lp) in result.tokens.iter().zip(&result.logps) {
+            response.push(*t);
+            response_mask.push(1.0);
+            logps.push(*lp);
+        }
+        let step = env.step(&result.tokens);
+        if step.latency > cfg.hang_timeout {
+            return None; // fail-stop: timeout, reclaim the ticket
+        }
+        if cfg.latency_scale > 0.0 && step.latency > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                step.latency * cfg.latency_scale,
+            ));
+        }
+        if step.done {
+            reward = step.reward.unwrap_or(0.0);
+            break;
+        }
+        // observation tokens join the context, untrained
+        for &t in &step.obs {
+            response.push(t);
+            response_mask.push(0.0);
+            logps.push(0.0);
+        }
+        context.extend(&result.tokens);
+        context.extend(&step.obs);
+    }
+
+    Some(Trajectory {
+        prompt,
+        response,
+        response_mask,
+        behavior_logps: logps,
+        reward,
+        group: group_key,
+        init_version,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_tasks_share_seeds_within_group_episode() {
+        let t = GroupTasks::new(2, 4, 42);
+        let (k0, s0) = t.next(0, 0);
+        let (k1, s1) = t.next(0, 1);
+        // same group, same episode index => same key and seed
+        assert_eq!(k0, k1);
+        assert_eq!(s0, s1);
+        // next episode for member 0 differs
+        let (k2, s2) = t.next(0, 0);
+        assert_ne!(k0, k2);
+        assert_ne!(s0, s2);
+        // other group differs
+        let (k3, s3) = t.next(1, 0);
+        assert_ne!(k0, k3);
+        assert_ne!(s0, s3);
+    }
+}

@@ -1,0 +1,308 @@
+//! LLMProxy (paper Section 4.2): the command-driven event loop that
+//! orchestrates inference workers.
+//!
+//! A dedicated thread owns the PJRT decode executable (wrapper types
+//! are not Send) and runs a continuous, non-blocking loop with the
+//! paper's three services:
+//!   1. *Step-wise inference* — each iteration advances every active
+//!      slot by one decoding step (continuous batching),
+//!   2. *Post-processing* — finished requests are immediately returned
+//!      to the originating client over its reply channel,
+//!   3. *Process commands* — ADD enqueues requests, ABORT interrupts
+//!      and reclaims them, UPDATE_WEIGHTS swaps the policy (the
+//!      AsyncController's suspend -> model_update -> resume),
+//!      SUSPEND/RESUME gate the loop for synchronous mode.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// A generation request (one sequence; prompt replication happens at
+/// the caller by submitting n independent requests — Section 5.1.2).
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub reply: Sender<GenResult>,
+}
+
+/// A finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    /// generated tokens (including the terminating EOS if emitted)
+    pub tokens: Vec<i32>,
+    /// behavior-policy logprob per generated token (pi_old for IS)
+    pub logps: Vec<f32>,
+    /// policy version that produced (finished) this sample
+    pub version: u64,
+}
+
+enum Cmd {
+    Add(GenRequest),
+    Abort(u64),
+    UpdateWeights { weights: Vec<f32>, version: u64 },
+    Suspend,
+    Resume,
+    Shutdown,
+}
+
+/// Client handle to the proxy thread.
+pub struct LlmProxy {
+    tx: Sender<Cmd>,
+    next_id: AtomicU64,
+    join: Option<JoinHandle<Result<ProxyReport>>>,
+}
+
+/// Loop statistics returned at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProxyReport {
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    pub completed: u64,
+    pub aborted: u64,
+    /// decode-batch occupancy summed over steps (utilization proxy)
+    pub occupancy_sum: u64,
+}
+
+impl ProxyReport {
+    /// Mean fraction of decode slots busy per step.
+    pub fn mean_occupancy(&self, batch: usize) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.occupancy_sum as f64 / (self.decode_steps as f64 * batch as f64)
+    }
+}
+
+impl LlmProxy {
+    /// Spawn the proxy event loop. The thread constructs its own
+    /// ModelRuntime from `artifacts_dir`; `init_weights` is the flat
+    /// parameter snapshot; `eos` terminates generation.
+    pub fn spawn(
+        artifacts_dir: std::path::PathBuf,
+        init_weights: Vec<f32>,
+        eos: i32,
+        seed: u64,
+    ) -> Self {
+        let (tx, rx) = channel();
+        let join = std::thread::Builder::new()
+            .name("llm-proxy".into())
+            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx))
+            .expect("spawn llm-proxy");
+        LlmProxy { tx, next_id: AtomicU64::new(1), join: Some(join) }
+    }
+
+    /// ADD: enqueue a generation request; returns (id, reply receiver).
+    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Cmd::Add(GenRequest { id, prompt, max_new_tokens, reply }));
+        (id, rx)
+    }
+
+    /// ABORT: interrupt a running/queued request (its reply channel
+    /// simply never fires; the work is reclaimed).
+    pub fn abort(&self, id: u64) {
+        let _ = self.tx.send(Cmd::Abort(id));
+    }
+
+    /// model_update broadcast: swap weights and advance the version.
+    pub fn update_weights(&self, weights: Vec<f32>, version: u64) {
+        let _ = self.tx.send(Cmd::UpdateWeights { weights, version });
+    }
+
+    pub fn suspend(&self) {
+        let _ = self.tx.send(Cmd::Suspend);
+    }
+
+    pub fn resume(&self) {
+        let _ = self.tx.send(Cmd::Resume);
+    }
+
+    /// Stop the loop and collect its report.
+    pub fn shutdown(mut self) -> Result<ProxyReport> {
+        let _ = self.tx.send(Cmd::Shutdown);
+        match self.join.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("proxy thread panicked"))?,
+            None => anyhow::bail!("already shut down"),
+        }
+    }
+}
+
+impl Drop for LlmProxy {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(h) = self.join.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Slot {
+    req: GenRequest,
+    /// absolute write position in the row buffer
+    pos: usize,
+    prompt_len: usize,
+    tokens: Vec<i32>,
+    logps: Vec<f32>,
+}
+
+fn proxy_loop(
+    dir: std::path::PathBuf,
+    init_weights: Vec<f32>,
+    eos: i32,
+    seed: u64,
+    rx: Receiver<Cmd>,
+) -> Result<ProxyReport> {
+    let rt = ModelRuntime::load(&dir)?;
+    let (b, s, v) = (rt.manifest.decode_batch, rt.manifest.max_seq, rt.manifest.vocab);
+    let mut params = rt.params_literal(&init_weights)?;
+    let mut version = 0u64;
+    let mut rng = Rng::new(seed ^ 0x11f);
+
+    let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+    let mut tokens_buf = vec![0i32; b * s];
+    let mut queue: VecDeque<GenRequest> = VecDeque::new();
+    let mut suspended = false;
+    let mut report = ProxyReport::default();
+
+    'outer: loop {
+        // --- service 3: process commands (non-blocking drain) ---
+        loop {
+            match rx.try_recv() {
+                Ok(Cmd::Add(req)) => queue.push_back(req),
+                Ok(Cmd::Abort(id)) => {
+                    queue.retain(|r| r.id != id);
+                    for (si, slot) in slots.iter_mut().enumerate() {
+                        if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
+                            *slot = None;
+                            report.aborted += 1;
+                            tokens_buf[si * s..(si + 1) * s].fill(0);
+                        }
+                    }
+                }
+                Ok(Cmd::UpdateWeights { weights, version: ver }) => {
+                    // suspend -> broadcast -> resume, atomically w.r.t.
+                    // decode steps (we are between steps here)
+                    params = rt.params_literal(&weights)?;
+                    version = ver;
+                }
+                Ok(Cmd::Suspend) => suspended = true,
+                Ok(Cmd::Resume) => suspended = false,
+                Ok(Cmd::Shutdown) => break 'outer,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'outer,
+            }
+        }
+
+        // admit queued requests into free slots (continuous batching)
+        if !suspended {
+            for si in 0..b {
+                if slots[si].is_none() {
+                    if let Some(req) = queue.pop_front() {
+                        let pl = req.prompt.len().min(s - 1);
+                        let row = &mut tokens_buf[si * s..(si + 1) * s];
+                        row.fill(0);
+                        row[..pl].copy_from_slice(&req.prompt[..pl]);
+                        slots[si] = Some(Slot {
+                            pos: pl,
+                            prompt_len: pl,
+                            tokens: Vec::new(),
+                            logps: Vec::new(),
+                            req,
+                        });
+                    }
+                }
+            }
+        }
+
+        let active = slots.iter().filter(|x| x.is_some()).count();
+        if suspended || active == 0 {
+            // idle: block briefly for the next command
+            match rx.recv_timeout(std::time::Duration::from_millis(2)) {
+                Ok(cmd) => {
+                    // re-inject into the drain above on the next pass
+                    match cmd {
+                        Cmd::Add(req) => queue.push_back(req),
+                        Cmd::Abort(id) => queue.retain(|r| r.id != id),
+                        Cmd::UpdateWeights { weights, version: ver } => {
+                            params = rt.params_literal(&weights)?;
+                            version = ver;
+                        }
+                        Cmd::Suspend => suspended = true,
+                        Cmd::Resume => suspended = false,
+                        Cmd::Shutdown => break 'outer,
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+            }
+            continue;
+        }
+
+        // --- service 1: one decode step over the whole batch ---
+        let pos_vec: Vec<i32> = slots
+            .iter()
+            .map(|sl| sl.as_ref().map(|x| x.pos as i32).unwrap_or(1))
+            .collect();
+        let logits = rt.decode_step(&params, &tokens_buf, &pos_vec)?;
+        report.decode_steps += 1;
+        report.occupancy_sum += active as u64;
+
+        // --- sample + service 2: post-process completions ---
+        for si in 0..b {
+            let Some(slot) = slots[si].as_mut() else { continue };
+            let row_logits = &logits[si * v..(si + 1) * v];
+            // temperature-1, top-p-1 raw sampling (paper Appendix A)
+            let tok = rng.sample_logits(row_logits) as i32;
+            // exact behavior logprob from the same logits
+            let max = row_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse: f32 =
+                max + row_logits.iter().map(|&l| (l - max).exp()).sum::<f32>().ln();
+            slot.logps.push(row_logits[tok as usize] - lse);
+            slot.tokens.push(tok);
+            tokens_buf[si * s + slot.pos] = tok;
+            slot.pos += 1;
+            report.tokens_generated += 1;
+
+            let done = tok == eos
+                || slot.tokens.len() >= slot.req.max_new_tokens
+                || slot.pos >= s;
+            if done {
+                let slot = slots[si].take().unwrap();
+                report.completed += 1;
+                let _ = slot.req.reply.send(GenResult {
+                    id: slot.req.id,
+                    tokens: slot.tokens,
+                    logps: slot.logps,
+                    version,
+                });
+                tokens_buf[si * s..(si + 1) * s].fill(0);
+                let _ = slot.prompt_len;
+            }
+        }
+    }
+
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/integration.rs (requires
+    // artifacts); unit logic (occupancy math) tested here.
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let r = ProxyReport { decode_steps: 10, occupancy_sum: 40, ..Default::default() };
+        assert!((r.mean_occupancy(8) - 0.5).abs() < 1e-12);
+        assert_eq!(ProxyReport::default().mean_occupancy(8), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! The ROLL Flash coordinator (Layer 3) — the paper's system
+//! contribution, running the *real* PJRT engine: LLMProxy (step-wise
+//! inference event loop), EnvManager workers, the freshness-bounded
+//! SampleBuffer, and the AsyncController training loop (Figure 5).
+//!
+//! The same policies (queue scheduling, prompt replication via
+//! independent per-sequence requests, redundant env rollout, async
+//! ratio) are mirrored in `sim/` for the virtual-time scale benches;
+//! here they execute against real decode/train steps.
+
+pub mod async_controller;
+pub mod env_manager;
+pub mod llm_proxy;
+pub mod sample_buffer;
+
+pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
+pub use env_manager::{spawn_env_manager, EnvManagerCfg, GroupTasks};
+pub use llm_proxy::{GenResult, LlmProxy, ProxyReport};
+pub use sample_buffer::{BufferStats, SampleBuffer};
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::env::BaseEnv;
+
+/// Rollout-fleet configuration (paper Appendix A schema): the env
+/// fleet may exceed the consumption quota (redundant env rollout).
+#[derive(Clone, Debug)]
+pub struct RolloutSystemCfg {
+    pub artifacts_dir: PathBuf,
+    /// env fleet: groups x members
+    pub num_env_groups: usize,
+    pub env_group_size: usize,
+    /// consumption quota per training step: groups x group size
+    pub consume_groups: usize,
+    pub consume_group_size: usize,
+    /// asynchronous ratio alpha (0 => sync admission)
+    pub alpha: f64,
+    pub seed: u64,
+    /// scale env latency into real sleeps (0 = logical time only)
+    pub latency_scale: f64,
+    pub hang_timeout: f64,
+}
+
+impl RolloutSystemCfg {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_env_groups >= self.consume_groups, "fleet < quota groups");
+        anyhow::ensure!(self.env_group_size >= self.consume_group_size, "group < quota size");
+        anyhow::ensure!(self.alpha >= 0.0, "alpha must be >= 0");
+        Ok(())
+    }
+}
+
+/// A running rollout fleet: proxy + env managers + buffer.
+pub struct RolloutSystem {
+    pub proxy: Arc<LlmProxy>,
+    pub buffer: Arc<SampleBuffer>,
+    stop: Arc<AtomicBool>,
+    managers: Vec<JoinHandle<usize>>,
+}
+
+/// Final fleet statistics after shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetReport {
+    pub proxy: ProxyReport,
+    pub buffer: BufferStats,
+    pub episodes: usize,
+}
+
+impl RolloutSystem {
+    /// Start the fleet. `env_factory(group, member)` builds each
+    /// manager's environment (enabling per-group heterogeneity).
+    pub fn start<E, F>(cfg: &RolloutSystemCfg, init_weights: Vec<f32>, env_factory: F) -> Result<Self>
+    where
+        E: BaseEnv + 'static,
+        F: Fn(usize, usize) -> E,
+    {
+        cfg.validate()?;
+        let batch = cfg.consume_groups * cfg.consume_group_size;
+        let buffer = Arc::new(SampleBuffer::new(batch, cfg.consume_group_size, cfg.alpha));
+        let proxy = Arc::new(LlmProxy::spawn(
+            cfg.artifacts_dir.clone(),
+            init_weights,
+            crate::env::vocab::EOS,
+            cfg.seed,
+        ));
+        let tasks = Arc::new(GroupTasks::new(cfg.num_env_groups, cfg.env_group_size, cfg.seed));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut managers = Vec::new();
+        for grp in 0..cfg.num_env_groups {
+            for member in 0..cfg.env_group_size {
+                let mcfg = EnvManagerCfg {
+                    group: grp,
+                    member,
+                    latency_scale: cfg.latency_scale,
+                    hang_timeout: cfg.hang_timeout,
+                };
+                managers.push(spawn_env_manager(
+                    env_factory(grp, member),
+                    mcfg,
+                    tasks.clone(),
+                    proxy.clone(),
+                    buffer.clone(),
+                    stop.clone(),
+                ));
+            }
+        }
+        Ok(RolloutSystem { proxy, buffer, stop, managers })
+    }
+
+    /// Stop producers, drain threads, and collect reports.
+    pub fn shutdown(self) -> Result<FleetReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.buffer.shutdown();
+        let mut episodes = 0usize;
+        for h in self.managers {
+            episodes += h.join().map_err(|_| anyhow::anyhow!("env manager panicked"))?;
+        }
+        let buffer = self.buffer.stats();
+        let proxy = match Arc::try_unwrap(self.proxy) {
+            Ok(p) => p.shutdown()?,
+            Err(_) => anyhow::bail!("proxy handle still shared at shutdown"),
+        };
+        Ok(FleetReport { proxy, buffer, episodes })
+    }
+}

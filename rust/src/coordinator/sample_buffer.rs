@@ -1,0 +1,394 @@
+//! SampleBuffer (paper Section 4.2/4.3): the shared trajectory store
+//! between EnvManager producers and the AsyncController consumer.
+//!
+//! Enforces the *per-sample* asynchronous ratio alpha: a producer must
+//! acquire a ticket (`begin_sample`) before starting generation; tickets
+//! are only granted while `outstanding < (1 + alpha) * batch`, so any
+//! sample in the buffer was initiated by a policy version no older than
+//! (n - alpha) when consumed at version n, and no admitted sample is
+//! wasted. GRPO group completeness is tracked here too: `get_batch`
+//! returns whole groups.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use crate::rl::Trajectory;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BufferStats {
+    pub produced: usize,
+    pub consumed: usize,
+    pub cancelled: usize,
+    pub stale_evicted: usize,
+    /// samples arriving for an already-complete group (redundant
+    /// environment rollout surplus, Section 5.2.2)
+    pub surplus: usize,
+    pub max_version_gap: u64,
+    pub sum_version_gap: u64,
+}
+
+impl BufferStats {
+    pub fn mean_version_gap(&self) -> f64 {
+        if self.consumed == 0 {
+            0.0
+        } else {
+            self.sum_version_gap as f64 / self.consumed as f64
+        }
+    }
+}
+
+struct Inner {
+    version: u64,
+    /// tickets issued and not yet retired. Retirement happens at
+    /// `bump_version`, not `get_batch`: the batch being trained still
+    /// occupies freshness budget, which is what makes the admission
+    /// bound exact (a sample admitted at position p is consumed after
+    /// floor(p / batch) further updates, so p < (1+alpha)*batch implies
+    /// gap <= alpha).
+    outstanding: usize,
+    /// samples consumed by get_batch but not yet retired by bump
+    pending_retire: usize,
+    /// complete groups ready for consumption, FIFO
+    ready: VecDeque<Vec<Trajectory>>,
+    /// group key -> partial group
+    partial: BTreeMap<u64, Vec<Trajectory>>,
+    /// groups already completed (surplus detection for redundant envs)
+    completed_keys: std::collections::BTreeSet<u64>,
+    shutdown: bool,
+    stats: BufferStats,
+}
+
+impl Inner {
+    /// Oldest admissible init version at the current policy version.
+    fn freshness_floor(&self, alpha: f64) -> u64 {
+        (self.version as f64 - alpha).max(0.0).ceil() as u64
+    }
+}
+
+/// Thread-safe, version-aware sample store.
+pub struct SampleBuffer {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    /// sequences admissible at once: ceil((1 + alpha) * batch)
+    capacity: usize,
+    group_size: usize,
+    alpha: f64,
+}
+
+impl SampleBuffer {
+    /// `batch` = sequences consumed per training step
+    /// (rollout_batch_size x group size); `alpha` = async ratio.
+    pub fn new(batch: usize, group_size: usize, alpha: f64) -> Self {
+        assert!(batch > 0 && group_size > 0 && batch % group_size == 0);
+        let capacity = ((1.0 + alpha) * batch as f64).ceil() as usize;
+        SampleBuffer {
+            inner: Mutex::new(Inner {
+                version: 0,
+                outstanding: 0,
+                pending_retire: 0,
+                ready: VecDeque::new(),
+                partial: BTreeMap::new(),
+                completed_keys: std::collections::BTreeSet::new(),
+                shutdown: false,
+                stats: BufferStats::default(),
+            }),
+            cv: Condvar::new(),
+            capacity,
+            group_size,
+            alpha,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Producer admission: blocks until a generation slot is available
+    /// under the freshness bound. Returns the initiating policy version
+    /// (the sample's tag), or None on shutdown.
+    pub fn begin_sample(&self) -> Option<u64> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.shutdown {
+                return None;
+            }
+            if g.outstanding < self.capacity {
+                g.outstanding += 1;
+                return Some(g.version);
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Producer gave up on a ticket (aborted / failed env).
+    pub fn cancel(&self) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.outstanding > 0);
+        g.outstanding = g.outstanding.saturating_sub(1);
+        g.stats.cancelled += 1;
+        self.cv.notify_all();
+    }
+
+    /// Producer completion: file the trajectory under its group; a
+    /// complete group becomes consumable. Two reclamation paths mirror
+    /// the paper's ABORT semantics (work is re-initiated, not wasted):
+    /// samples arriving for an already-complete group (redundant env
+    /// rollout surplus, Section 5.2.2) and samples whose generation
+    /// straddled too many updates (init_version below the freshness
+    /// floor) are dropped and their tickets reclaimed — the producer
+    /// immediately regenerates under the current policy.
+    pub fn push(&self, traj: Trajectory) {
+        let mut g = self.inner.lock().unwrap();
+        let key = traj.group;
+        if g.completed_keys.contains(&key) {
+            g.stats.surplus += 1;
+            g.outstanding = g.outstanding.saturating_sub(1);
+            self.cv.notify_all();
+            return;
+        }
+        if traj.init_version < g.freshness_floor(self.alpha) {
+            g.stats.stale_evicted += 1;
+            g.outstanding = g.outstanding.saturating_sub(1);
+            self.cv.notify_all();
+            return;
+        }
+        g.stats.produced += 1;
+        let entry = g.partial.entry(key).or_default();
+        entry.push(traj);
+        if entry.len() == self.group_size {
+            let grp = g.partial.remove(&key).unwrap();
+            g.ready.push_back(grp);
+            g.completed_keys.insert(key);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Blocking get_batch (paper Section 4.2): returns `n_groups`
+    /// complete groups (flattened), FIFO. None on shutdown. Tickets of
+    /// consumed samples stay outstanding until the matching
+    /// `bump_version` — the in-training batch still counts against the
+    /// freshness budget.
+    pub fn get_batch(&self, n_groups: usize) -> Option<Vec<Trajectory>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.ready.len() >= n_groups {
+                let mut out = Vec::with_capacity(n_groups * self.group_size);
+                for _ in 0..n_groups {
+                    out.extend(g.ready.pop_front().unwrap());
+                }
+                g.pending_retire += out.len();
+                let v = g.version;
+                for t in &out {
+                    let gap = v.saturating_sub(t.init_version);
+                    g.stats.max_version_gap = g.stats.max_version_gap.max(gap);
+                    g.stats.sum_version_gap += gap;
+                }
+                g.stats.consumed += out.len();
+                self.cv.notify_all();
+                return Some(out);
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking variant (tests / polling loops).
+    pub fn try_get_batch(&self, n_groups: usize) -> Option<Vec<Trajectory>> {
+        let g = self.inner.lock().unwrap();
+        if g.ready.len() >= n_groups {
+            drop(g);
+            self.get_batch(n_groups)
+        } else {
+            None
+        }
+    }
+
+    /// Consumer: policy advanced one version (after model_update).
+    /// Retires the just-trained batch's tickets, then evicts whole
+    /// groups containing samples below the new freshness floor —
+    /// eviction is group-granular because a group missing a member can
+    /// never complete (GRPO needs full groups); producers regenerate
+    /// under the new policy, so no quota is lost.
+    pub fn bump_version(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.version += 1;
+        g.outstanding = g.outstanding.saturating_sub(g.pending_retire);
+        g.pending_retire = 0;
+        let v = g.version;
+        let floor = g.freshness_floor(self.alpha);
+        let mut evicted = 0usize;
+        g.ready.retain(|grp| {
+            if grp.iter().all(|t| t.init_version >= floor) {
+                true
+            } else {
+                evicted += grp.len();
+                false
+            }
+        });
+        let stale_keys: Vec<u64> = g
+            .partial
+            .iter()
+            .filter(|(_, grp)| grp.iter().any(|t| t.init_version < floor))
+            .map(|(k, _)| *k)
+            .collect();
+        for k in stale_keys {
+            let grp = g.partial.remove(&k).unwrap();
+            evicted += grp.len();
+            // the key is burned; surviving members' future pushes for it
+            // must be reclaimed as surplus rather than dangle
+            g.completed_keys.insert(k);
+        }
+        g.stats.stale_evicted += evicted;
+        g.outstanding = g.outstanding.saturating_sub(evicted);
+        self.cv.notify_all();
+        v
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().unwrap().outstanding
+    }
+
+    pub fn ready_groups(&self) -> usize {
+        self.inner.lock().unwrap().ready.len()
+    }
+
+    pub fn stats(&self) -> BufferStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Wake all waiters with a shutdown signal.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn traj(group: u64, iv: u64) -> Trajectory {
+        Trajectory::single_turn(vec![1], vec![2, 2], vec![-0.1, -0.1], 1.0, group, iv)
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let b = SampleBuffer::new(4, 2, 0.0); // capacity 4
+        for _ in 0..4 {
+            assert!(b.begin_sample().is_some());
+        }
+        assert_eq!(b.outstanding(), 4);
+        // 5th would block: use a thread + shutdown to verify blocking
+        let b = Arc::new(b);
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.begin_sample());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(!h.is_finished(), "5th ticket must block at capacity");
+        b.shutdown();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn capacity_scales_with_alpha() {
+        assert_eq!(SampleBuffer::new(8, 2, 0.0).capacity(), 8);
+        assert_eq!(SampleBuffer::new(8, 2, 2.0).capacity(), 24);
+        assert_eq!(SampleBuffer::new(8, 2, 0.5).capacity(), 12);
+    }
+
+    #[test]
+    fn groups_complete_then_consume() {
+        let b = SampleBuffer::new(4, 2, 1.0);
+        for _ in 0..4 {
+            b.begin_sample();
+        }
+        b.push(traj(0, 0));
+        assert_eq!(b.ready_groups(), 0); // partial
+        b.push(traj(0, 0));
+        assert_eq!(b.ready_groups(), 1);
+        b.push(traj(1, 0));
+        b.push(traj(1, 0));
+        let batch = b.get_batch(2).unwrap();
+        assert_eq!(batch.len(), 4);
+        // tickets stay outstanding until the trained batch retires
+        assert_eq!(b.outstanding(), 4);
+        b.bump_version();
+        assert_eq!(b.outstanding(), 0);
+        assert_eq!(b.stats().consumed, 4);
+    }
+
+    #[test]
+    fn version_gap_tracked() {
+        let b = SampleBuffer::new(2, 2, 2.0);
+        b.begin_sample();
+        b.begin_sample();
+        b.push(traj(0, 0));
+        b.push(traj(0, 0));
+        b.bump_version();
+        b.bump_version(); // version 2, samples from version 0 => gap 2
+        let _ = b.get_batch(1).unwrap();
+        let s = b.stats();
+        assert_eq!(s.max_version_gap, 2);
+        assert!((s.mean_version_gap() - 2.0).abs() < 1e-9);
+        assert_eq!(s.stale_evicted, 0); // gap == alpha: admissible
+    }
+
+    #[test]
+    fn stale_eviction_beyond_alpha() {
+        let b = SampleBuffer::new(2, 2, 1.0);
+        b.begin_sample();
+        b.begin_sample();
+        b.push(traj(0, 0));
+        b.push(traj(0, 0));
+        b.bump_version();
+        b.bump_version(); // floor = 2 - 1 = 1 > init 0 => evict
+        assert_eq!(b.stats().stale_evicted, 2);
+        assert_eq!(b.ready_groups(), 0);
+        assert_eq!(b.outstanding(), 0);
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let b = Arc::new(SampleBuffer::new(8, 4, 1.0));
+        let p = b.clone();
+        // continuous producer (env managers regenerate forever)
+        let producer = std::thread::spawn(move || {
+            let mut n = 0u64;
+            while let Some(iv) = p.begin_sample() {
+                p.push(traj(n / 4, iv));
+                n += 1;
+            }
+        });
+        let mut got = 0;
+        for _ in 0..4 {
+            let batch = b.get_batch(2).unwrap();
+            got += batch.len();
+            b.bump_version();
+        }
+        b.shutdown();
+        producer.join().unwrap();
+        assert_eq!(got, 32);
+        // per-sample freshness: consumed gap bounded by alpha exactly
+        assert!(b.stats().max_version_gap <= 1, "gap {}", b.stats().max_version_gap);
+    }
+
+    #[test]
+    fn get_batch_unblocks_on_shutdown() {
+        let b = Arc::new(SampleBuffer::new(4, 2, 0.0));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.get_batch(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.shutdown();
+        assert_eq!(h.join().unwrap().map(|v| v.len()), None);
+    }
+}

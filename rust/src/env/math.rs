@@ -1,0 +1,152 @@
+//! Single-turn RLVR environment with an exact verifier: single-digit
+//! addition. Substitutes DAPO-Math-18K (DESIGN.md §7): same reward
+//! structure — binary verifiable reward, group sampling per prompt,
+//! degenerate (zero-variance) groups possible — at a difficulty a
+//! tiny/small policy can actually learn within a few hundred steps.
+
+use super::{vocab, BaseEnv, StepResult};
+use crate::util::rng::Rng;
+
+/// Prompt layout (8 tokens, fixed): BOS a + b = PAD PAD PAD
+pub const PROMPT_LEN: usize = 8;
+
+pub struct MathEnv {
+    a: u32,
+    b: u32,
+    max_new_tokens: usize,
+}
+
+impl MathEnv {
+    pub fn new() -> Self {
+        MathEnv { a: 0, b: 0, max_new_tokens: 4 }
+    }
+
+    /// The ground-truth answer for the current episode.
+    pub fn answer(&self) -> u64 {
+        (self.a + self.b) as u64
+    }
+
+    /// Build the prompt for operands (a, b) — exposed for tests.
+    pub fn prompt_for(a: u32, b: u32) -> Vec<i32> {
+        let mut p = vec![vocab::BOS, vocab::digit(a), vocab::PLUS, vocab::digit(b), vocab::EQ];
+        p.resize(PROMPT_LEN, vocab::PAD);
+        p
+    }
+
+    /// Graded verifier. Exact answers score 1.0; partial credit for
+    /// well-formed output gives GRPO a learnable gradient from a cold
+    /// start (a group of all-garbage responses has zero intra-group
+    /// variance and therefore zero advantage — the same degenerate-
+    /// group phenomenon DAPO filters, Section 5.1.1).
+    pub fn verify(&self, action: &[i32]) -> f32 {
+        match vocab::decode_number(action) {
+            Some(n) if n == self.answer() => 1.0,
+            Some(n) => {
+                let want = vocab::encode_number(self.answer());
+                let got = vocab::encode_number(n);
+                if want[0] == got[0] {
+                    0.4 // correct leading digit
+                } else {
+                    0.15 // well-formed number, wrong value
+                }
+            }
+            None => 0.0,
+        }
+    }
+}
+
+impl Default for MathEnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BaseEnv for MathEnv {
+    fn reset(&mut self, task_seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(task_seed);
+        self.a = rng.below(10) as u32;
+        self.b = rng.below(10) as u32;
+        Self::prompt_for(self.a, self.b)
+    }
+
+    fn step(&mut self, action: &[i32]) -> StepResult {
+        StepResult { obs: vec![], done: true, reward: Some(self.verify(action)), latency: 0.0 }
+    }
+
+    fn max_steps(&self) -> usize {
+        1
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        self.max_new_tokens
+    }
+
+    fn prompt_len(&self) -> usize {
+        PROMPT_LEN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifier_accepts_correct_answer() {
+        let mut env = MathEnv::new();
+        env.reset(3);
+        let answer = env.answer();
+        let mut action = vocab::encode_number(answer);
+        action.push(vocab::EOS);
+        let r = env.step(&action);
+        assert!(r.done);
+        assert_eq!(r.reward, Some(1.0));
+    }
+
+    #[test]
+    fn verifier_grades_wrong_answers_below_pass() {
+        let mut env = MathEnv::new();
+        env.reset(3);
+        let wrong = env.answer() + 100; // wrong leading digit for sure
+        let action = vocab::encode_number(wrong);
+        let r = env.step(&action).reward.unwrap();
+        assert!(r < 0.5, "wrong answer must not pass: {r}");
+        assert!(r > 0.0, "well-formed number earns partial credit");
+    }
+
+    #[test]
+    fn prompts_are_fixed_length_and_deterministic() {
+        let mut env = MathEnv::new();
+        let p1 = env.reset(7);
+        let p2 = env.reset(7);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), PROMPT_LEN);
+        assert_eq!(p1[0], vocab::BOS);
+    }
+
+    #[test]
+    fn garbage_actions_score_zero() {
+        let mut env = MathEnv::new();
+        env.reset(1);
+        assert_eq!(env.step(&[vocab::EOS]).reward, Some(0.0));
+        assert_eq!(env.step(&[]).reward, Some(0.0));
+        assert_eq!(env.step(&[vocab::PLUS, vocab::EQ]).reward, Some(0.0));
+    }
+
+    #[test]
+    fn reward_ordering_exact_gt_partial_gt_garbage() {
+        // pick a seed with a two-digit answer so leading digit matters
+        let mut env = MathEnv::new();
+        for seed in 0..64 {
+            env.reset(seed);
+            if env.answer() >= 10 {
+                let exact = env.verify(&vocab::encode_number(env.answer()));
+                let lead = env.verify(&vocab::encode_number(env.answer() + 1).as_slice());
+                let garbage = env.verify(&[vocab::EOS]);
+                assert_eq!(exact, 1.0);
+                assert!(lead < exact && lead > garbage);
+                return;
+            }
+        }
+        panic!("no two-digit answer found");
+    }
+}

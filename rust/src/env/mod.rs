@@ -1,0 +1,107 @@
+//! Environment substrates. The paper trains against DAPO-Math (RLVR
+//! verifier rewards) and three agentic suites (SWE, ALFWorld,
+//! ShopSimulator); none are available offline, so each is replaced by
+//! a simulator that preserves the properties the experiments depend on
+//! (verifiable rewards, multi-turn interaction, latency long tails,
+//! fail-slow/fail-stop) — DESIGN.md §7.
+
+pub mod alfworld;
+pub mod math;
+pub mod shop;
+pub mod swe;
+
+/// Shared token vocabulary for all environments (fits every model
+/// config's vocab = 64).
+pub mod vocab {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const EOS: i32 = 2;
+    pub const PLUS: i32 = 3;
+    pub const EQ: i32 = 4;
+    /// digits 0..=9 map to 5..=14
+    pub const DIGIT0: i32 = 5;
+
+    pub fn digit(d: u32) -> i32 {
+        DIGIT0 + d as i32
+    }
+
+    pub fn as_digit(tok: i32) -> Option<u32> {
+        if (DIGIT0..DIGIT0 + 10).contains(&tok) {
+            Some((tok - DIGIT0) as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Encode a non-negative integer as digit tokens.
+    pub fn encode_number(n: u64) -> Vec<i32> {
+        n.to_string().chars().map(|c| digit(c.to_digit(10).unwrap())).collect()
+    }
+
+    /// Decode a digit-token prefix (stops at the first non-digit).
+    pub fn decode_number(toks: &[i32]) -> Option<u64> {
+        let digits: Vec<u32> = toks.iter().map_while(|&t| as_digit(t)).collect();
+        if digits.is_empty() {
+            return None;
+        }
+        let mut n = 0u64;
+        for d in digits {
+            n = n.checked_mul(10)?.checked_add(d as u64)?;
+        }
+        Some(n)
+    }
+}
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// observation tokens appended to the context (empty on terminal)
+    pub obs: Vec<i32>,
+    pub done: bool,
+    /// verifier reward, present when done
+    pub reward: Option<f32>,
+    /// simulated wall latency of this env step (seconds) — consumed by
+    /// the EnvManager for latency accounting / optional real sleeps
+    pub latency: f64,
+}
+
+/// The environment interface the EnvManager drives (paper Section 4.2:
+/// `reset` then a step loop against the shared LLMProxy).
+pub trait BaseEnv: Send {
+    /// Start an episode; returns the fixed-length prompt tokens.
+    fn reset(&mut self, task_seed: u64) -> Vec<i32>;
+
+    /// Apply an action (generated tokens) and observe.
+    fn step(&mut self, action: &[i32]) -> StepResult;
+
+    /// Maximum interaction turns per trajectory.
+    fn max_steps(&self) -> usize;
+
+    /// Tokens the policy may generate per turn.
+    fn max_new_tokens(&self) -> usize;
+
+    /// Fixed prompt length this env emits (model prompt region).
+    fn prompt_len(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vocab;
+
+    #[test]
+    fn number_roundtrip() {
+        for n in [0u64, 7, 10, 42, 199] {
+            let toks = vocab::encode_number(n);
+            assert_eq!(vocab::decode_number(&toks), Some(n));
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_non_digit() {
+        let mut toks = vocab::encode_number(12);
+        toks.push(vocab::EOS);
+        toks.extend(vocab::encode_number(9));
+        assert_eq!(vocab::decode_number(&toks), Some(12));
+        assert_eq!(vocab::decode_number(&[vocab::EOS]), None);
+    }
+}

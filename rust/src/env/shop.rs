@@ -1,0 +1,90 @@
+//! ShopSimulator-like single-turn environment: echo the requested
+//! "product id" (paper Appendix A uses ShopSimulator-SingleTurn). A
+//! single-turn task with a longer target than MathEnv, exercising the
+//! same pipeline with a different reward profile.
+
+use super::{vocab, BaseEnv, StepResult};
+use crate::util::rng::Rng;
+use crate::workload::EnvLatency;
+
+pub const PROMPT_LEN: usize = 8;
+
+pub struct ShopEnv {
+    target: u64,
+    latency: EnvLatency,
+    rng: Rng,
+}
+
+impl ShopEnv {
+    pub fn new(latency: EnvLatency) -> Self {
+        ShopEnv { target: 0, latency, rng: Rng::new(0) }
+    }
+
+    pub fn target(&self) -> u64 {
+        self.target
+    }
+}
+
+impl BaseEnv for ShopEnv {
+    fn reset(&mut self, task_seed: u64) -> Vec<i32> {
+        self.rng = Rng::new(task_seed ^ 0x5409);
+        self.target = self.rng.below(100) as u64;
+        let mut p = vec![vocab::BOS];
+        let digits = vocab::encode_number(self.target);
+        p.extend(&digits);
+        p.push(vocab::EQ);
+        p.resize(PROMPT_LEN, vocab::PAD);
+        p
+    }
+
+    fn step(&mut self, action: &[i32]) -> StepResult {
+        let reward = match vocab::decode_number(action) {
+            Some(n) if n == self.target => 1.0,
+            _ => 0.0,
+        };
+        StepResult {
+            obs: vec![],
+            done: true,
+            reward: Some(reward),
+            latency: self.latency.sample(&mut self.rng),
+        }
+    }
+
+    fn max_steps(&self) -> usize {
+        1
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        4
+    }
+
+    fn prompt_len(&self) -> usize {
+        PROMPT_LEN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_task_verifies() {
+        let mut e = ShopEnv::new(EnvLatency::gaussian(0.0, 0.0));
+        e.reset(3);
+        let mut ok = vocab::encode_number(e.target());
+        ok.push(vocab::EOS);
+        assert_eq!(e.step(&ok).reward, Some(1.0));
+        e.reset(3);
+        assert_eq!(e.step(&[vocab::EOS]).reward, Some(0.0));
+    }
+
+    #[test]
+    fn prompt_contains_target() {
+        let mut e = ShopEnv::new(EnvLatency::gaussian(0.0, 0.0));
+        let p = e.reset(11);
+        assert_eq!(p.len(), PROMPT_LEN);
+        // target digits appear right after BOS
+        let shown = vocab::decode_number(&p[1..]).unwrap();
+        assert_eq!(shown, e.target());
+    }
+}

@@ -1,0 +1,186 @@
+//! SWE-like environment: long multi-turn episodes with heavy-tailed
+//! step latency and fail-slow / fail-stop injection (Section 5.2.2's
+//! motivation: "execution latency varies widely and failures are
+//! common"). Task: a multi-digit "bug id" must be reproduced digit by
+//! digit (a stand-in for applying a patch step by step).
+
+use super::{vocab, BaseEnv, StepResult};
+use crate::util::rng::Rng;
+use crate::workload::{EnvLatency, FailureModel};
+
+pub const PROMPT_LEN: usize = 8;
+
+pub struct SweEnv {
+    target: Vec<u32>,
+    progress: usize,
+    turn: usize,
+    max_steps: usize,
+    latency: EnvLatency,
+    failures: FailureModel,
+    /// turn at which this episode fail-stops (usize::MAX = healthy)
+    dead_at: usize,
+    rng: Rng,
+}
+
+impl SweEnv {
+    pub fn new(max_steps: usize, latency: EnvLatency, failures: FailureModel) -> Self {
+        SweEnv {
+            target: vec![],
+            progress: 0,
+            turn: 0,
+            max_steps,
+            latency,
+            failures,
+            dead_at: usize::MAX,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// Episode died (fail-stop): the EnvManager's timeout/redundancy
+    /// machinery must recover — mirrors a crashed SWE container.
+    pub fn is_dead(&self) -> bool {
+        self.turn >= self.dead_at
+    }
+
+    fn obs_tokens(&self) -> Vec<i32> {
+        // show the next digit to reproduce (teacher forcing makes the
+        // task learnable; reward still requires the full sequence)
+        let next = self.target.get(self.progress).copied().unwrap_or(0);
+        let mut p = vec![vocab::BOS, vocab::digit(next), vocab::EQ];
+        p.resize(PROMPT_LEN, vocab::PAD);
+        p
+    }
+}
+
+impl BaseEnv for SweEnv {
+    fn reset(&mut self, task_seed: u64) -> Vec<i32> {
+        self.rng = Rng::new(task_seed ^ 0x5E);
+        let len = 3 + self.rng.below(3);
+        self.target = (0..len).map(|_| self.rng.below(10) as u32).collect();
+        self.progress = 0;
+        self.turn = 0;
+        self.dead_at = if self.rng.chance(self.failures.fail_stop_prob) {
+            self.rng.below(self.max_steps.max(1))
+        } else {
+            usize::MAX
+        };
+        self.obs_tokens()
+    }
+
+    fn step(&mut self, action: &[i32]) -> StepResult {
+        self.turn += 1;
+        let mut lat = self.latency.sample(&mut self.rng);
+        if self.rng.chance(self.failures.fail_slow_prob) {
+            lat *= self.failures.fail_slow_factor;
+        }
+        if self.is_dead() {
+            // env hangs: report the hang latency; the manager times out
+            return StepResult { obs: vec![], done: false, reward: None, latency: f64::INFINITY }
+                .with_latency(lat);
+        }
+        let want = self.target.get(self.progress).copied();
+        let got = action.iter().find_map(|&t| vocab::as_digit(t));
+        if want.is_some() && got == want {
+            self.progress += 1;
+        }
+        if self.progress == self.target.len() {
+            return StepResult { obs: vec![], done: true, reward: Some(1.0), latency: lat };
+        }
+        if self.turn >= self.max_steps {
+            let partial = self.progress as f32 / self.target.len() as f32;
+            // binary verifier with partial credit threshold (R2E-style)
+            let reward = if partial >= 1.0 { 1.0 } else { 0.0 };
+            return StepResult { obs: vec![], done: true, reward: Some(reward), latency: lat };
+        }
+        StepResult { obs: self.obs_tokens(), done: false, reward: None, latency: lat }
+    }
+
+    fn max_steps(&self) -> usize {
+        self.max_steps
+    }
+
+    fn max_new_tokens(&self) -> usize {
+        2
+    }
+
+    fn prompt_len(&self) -> usize {
+        PROMPT_LEN
+    }
+}
+
+impl StepResult {
+    fn with_latency(mut self, lat: f64) -> Self {
+        if self.latency.is_infinite() {
+            self.latency = lat.max(1e9); // effectively hung
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> SweEnv {
+        SweEnv::new(50, EnvLatency::gaussian(0.0, 0.0), FailureModel::none())
+    }
+
+    #[test]
+    fn oracle_solves() {
+        let mut e = env();
+        let obs = e.reset(2);
+        let mut next = vocab::as_digit(obs[1]).unwrap();
+        for _ in 0..50 {
+            let r = e.step(&[vocab::digit(next), vocab::EOS]);
+            if r.done {
+                assert_eq!(r.reward, Some(1.0));
+                return;
+            }
+            next = vocab::as_digit(r.obs[1]).unwrap();
+        }
+        panic!("oracle failed");
+    }
+
+    #[test]
+    fn wrong_digits_fail() {
+        let mut e = SweEnv::new(4, EnvLatency::gaussian(0.0, 0.0), FailureModel::none());
+        e.reset(2);
+        let mut last_reward = None;
+        for _ in 0..4 {
+            let r = e.step(&[vocab::EOS]); // never answers
+            if r.done {
+                last_reward = r.reward;
+                break;
+            }
+        }
+        assert_eq!(last_reward, Some(0.0));
+    }
+
+    #[test]
+    fn fail_stop_hangs() {
+        let failures = FailureModel { fail_slow_prob: 0.0, fail_slow_factor: 1.0, fail_stop_prob: 1.0 };
+        let mut e = SweEnv::new(50, EnvLatency::gaussian(0.1, 0.0), failures);
+        e.reset(4);
+        let mut hung = false;
+        for _ in 0..50 {
+            let r = e.step(&[vocab::digit(0)]);
+            if r.latency >= 1e9 {
+                hung = true;
+                break;
+            }
+            if r.done {
+                break;
+            }
+        }
+        assert!(hung, "fail_stop_prob=1 must hang the episode");
+    }
+
+    #[test]
+    fn fail_slow_inflates_latency() {
+        let failures = FailureModel { fail_slow_prob: 1.0, fail_slow_factor: 10.0, fail_stop_prob: 0.0 };
+        let mut e = SweEnv::new(50, EnvLatency::gaussian(1.0, 0.0), failures);
+        e.reset(5);
+        let r = e.step(&[vocab::digit(0)]);
+        assert!(r.latency > 5.0, "{}", r.latency);
+    }
+}

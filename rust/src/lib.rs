@@ -1,0 +1,18 @@
+//! roll-flash: reproduction of "ROLL Flash — Accelerating RLVR and
+//! Agentic Training with Asynchrony" (see DESIGN.md).
+//!
+//! Three-layer architecture: this Rust crate is Layer 3 (coordinator +
+//! runtime + simulator); `python/compile/` holds Layer 2 (JAX model)
+//! and Layer 1 (Pallas kernels), AOT-lowered to `artifacts/` which the
+//! runtime executes via PJRT. Python never runs on the request path.
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod metrics;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;
+pub mod workload;

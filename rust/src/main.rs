@@ -1,0 +1,131 @@
+//! roll-flash launcher: train on the real engine, or run the virtual
+//! cluster simulator, from a paper-style YAML config or CLI options.
+//!
+//!   roll-flash train  config=examples/rlvr.yaml steps=40
+//!   roll-flash train  model=tiny alpha=2 variant=tis steps=20
+//!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
+//!   roll-flash inspect artifacts=artifacts/tiny
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use roll_flash::cli::Cli;
+use roll_flash::config::{PgVariant, RollConfig};
+use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::env::math::MathEnv;
+use roll_flash::runtime::ModelRuntime;
+use roll_flash::sim::rlvr::{run as run_sim, RlvrSimConfig, Scheduling};
+use roll_flash::workload::{LengthProfile, TrainCost};
+
+fn main() -> Result<()> {
+    let cli = Cli::from_env();
+    match cli.command.as_str() {
+        "train" => train(&cli),
+        "simulate" => simulate(&cli),
+        "inspect" => inspect(&cli),
+        _ => {
+            eprintln!(
+                "usage: roll-flash <train|simulate|inspect> [key=value ...]\n\
+                 train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
+                 simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
+                 inspect:  artifacts=<dir>"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn train(cli: &Cli) -> Result<()> {
+    let cfg = match cli.get("config") {
+        Some(path) => RollConfig::from_file(path)?,
+        None => RollConfig::default(),
+    };
+    let model = cli.str_or("model", &cfg.pretrain);
+    let alpha: f64 = cli.parse_or("alpha", cfg.async_generation_ratio);
+    let variant = match cli.get("variant") {
+        Some(v) => PgVariant::parse(v)?,
+        None => cfg.pg_variant,
+    };
+    let steps: usize = cli.parse_or("steps", 20);
+    let lr: f32 = cli.parse_or("lr", cfg.actor_train.learning_rate as f32);
+
+    let dir = PathBuf::from("artifacts").join(&model);
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` (missing {model})");
+    let rt = ModelRuntime::load(&dir)?;
+    let weights = rt.load_init_params()?;
+    let mut st = rt.train_state(&weights)?;
+    let group_size = 4;
+    let n_groups = rt.manifest.train_batch / group_size;
+
+    let fleet = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: n_groups,
+        env_group_size: group_size,
+        consume_groups: n_groups,
+        consume_group_size: group_size,
+        alpha,
+        seed: cfg.seed,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    println!("train: model={model} alpha={alpha} variant={} steps={steps}", variant.as_str());
+    let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
+    let ctl = ControllerCfg { variant, steps, lr, n_groups, group_size, sync_mode: alpha == 0.0 };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
+    for l in &logs {
+        println!("{}", format_log(l));
+    }
+    let report = system.shutdown()?;
+    println!("max version gap {} (alpha {alpha})", report.buffer.max_version_gap);
+    Ok(())
+}
+
+fn simulate(cli: &Cli) -> Result<()> {
+    let gpus: usize = cli.parse_or("gpus", 64);
+    let alpha: f64 = cli.parse_or("alpha", 2.0);
+    let steps: usize = cli.parse_or("steps", 3);
+    let profile = cli.str_or("profile", "think");
+    let (lengths, mean) = match profile.as_str() {
+        "base" => (LengthProfile::qwen3_base(), 2000.0),
+        _ => (LengthProfile::qwen3_think(), 11000.0),
+    };
+    let mut c = RlvrSimConfig::paper_default(gpus / 2, gpus - gpus / 2);
+    c.lengths = lengths;
+    c.train = TrainCost::for_mean_len(mean);
+    c.async_ratio = alpha;
+    c.steps = steps;
+    if cli.parse_or("naive", 0) == 1 {
+        c.scheduling = Scheduling::BatchRollout;
+        c.replicate = false;
+        c.async_ratio = 0.0;
+    }
+    let r = run_sim(&c);
+    println!(
+        "profile={profile} gpus={gpus} alpha={} -> {:.0}s/step, {:.0} samples/h, util {:.2}, max gap {}",
+        c.async_ratio,
+        r.mean_step_time(),
+        r.samples_per_hour(),
+        r.gen_utilization,
+        r.max_version_gap
+    );
+    Ok(())
+}
+
+fn inspect(cli: &Cli) -> Result<()> {
+    let dir = PathBuf::from(cli.str_or("artifacts", "artifacts/tiny"));
+    let rt = ModelRuntime::load(&dir)?;
+    let m = &rt.manifest;
+    println!(
+        "model {} | {} params | vocab {} | d_model {} | layers {} | heads {} | seq {}",
+        m.model, m.n_params, m.vocab, m.d_model, m.n_layers, m.n_heads, m.max_seq
+    );
+    for (name, e) in &m.entries {
+        println!(
+            "  {name}: {} inputs -> {} outputs ({})",
+            e.inputs.len(),
+            e.outputs.len(),
+            e.hlo
+        );
+    }
+    Ok(())
+}

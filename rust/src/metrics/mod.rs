@@ -1,0 +1,230 @@
+//! Metrics substrate: log-bucketed histograms, utilization ledgers,
+//! and table/CSV emitters used by the bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Log-bucketed latency/size histogram (HDR-lite, std-only).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i covers [min * growth^i, min * growth^(i+1))
+    min: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new(1e-6, 1.07)
+    }
+}
+
+impl Histogram {
+    pub fn new(min: f64, growth: f64) -> Self {
+        assert!(min > 0.0 && growth > 1.0);
+        Histogram { min, growth, counts: vec![0; 512], total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    fn bucket(&self, v: f64) -> usize {
+        if v <= self.min {
+            return 0;
+        }
+        let i = ((v / self.min).ln() / self.growth.ln()).floor() as usize;
+        i.min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate percentile (bucet upper edge).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.min * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+}
+
+/// Busy/total accounting per worker pool — the resource-utilization and
+/// bubble metrics the paper reports.
+#[derive(Clone, Debug, Default)]
+pub struct UtilizationLedger {
+    pub busy: f64,
+    pub span: f64,
+    pub workers: usize,
+}
+
+impl UtilizationLedger {
+    pub fn new(workers: usize) -> Self {
+        UtilizationLedger { busy: 0.0, span: 0.0, workers }
+    }
+
+    pub fn add_busy(&mut self, dt: f64) {
+        self.busy += dt;
+    }
+
+    pub fn close(&mut self, makespan: f64) {
+        self.span = makespan;
+    }
+
+    /// Fraction of worker-time spent busy.
+    pub fn utilization(&self) -> f64 {
+        let cap = self.span * self.workers as f64;
+        if cap <= 0.0 { 0.0 } else { (self.busy / cap).min(1.0) }
+    }
+
+    /// Idle worker-seconds (the paper's "resource bubbles").
+    pub fn bubble_time(&self) -> f64 {
+        (self.span * self.workers as f64 - self.busy).max(0.0)
+    }
+}
+
+/// Named scalar metrics with insertion-ordered emit.
+#[derive(Clone, Debug, Default)]
+pub struct Scalars {
+    vals: BTreeMap<String, f64>,
+}
+
+impl Scalars {
+    pub fn set(&mut self, k: &str, v: f64) {
+        self.vals.insert(k.to_string(), v);
+    }
+
+    pub fn add(&mut self, k: &str, v: f64) {
+        *self.vals.entry(k.to_string()).or_insert(0.0) += v;
+    }
+
+    pub fn get(&self, k: &str) -> Option<f64> {
+        self.vals.get(k).copied()
+    }
+
+    pub fn to_csv_row(&self) -> (String, String) {
+        let header = self.vals.keys().cloned().collect::<Vec<_>>().join(",");
+        let row = self.vals.values().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(",");
+        (header, row)
+    }
+}
+
+/// Markdown table emitter for bench reports (mirrors paper tables).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(line, " {c:w$} |");
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<1$}|", "", w + 2);
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds as the paper's "X.XXh" convention.
+pub fn hours(secs: f64) -> String {
+    format!("{:.2}h", secs / 3600.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new(0.001, 1.05);
+        for i in 1..=1000 {
+            h.record(i as f64 / 100.0); // 0.01 .. 10.0
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 5.005).abs() < 0.01);
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 4.0 && p50 < 6.0, "{p50}");
+        let p99 = h.percentile(99.0);
+        assert!(p99 > 9.0 && p99 < 11.0, "{p99}");
+    }
+
+    #[test]
+    fn utilization_ledger() {
+        let mut u = UtilizationLedger::new(4);
+        u.add_busy(10.0);
+        u.close(5.0); // 4 workers x 5s = 20 worker-seconds
+        assert!((u.utilization() - 0.5).abs() < 1e-12);
+        assert!((u.bubble_time() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row(&["a".into(), "1".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | 1 |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    fn hours_format() {
+        assert_eq!(hours(36792.0), "10.22h");
+    }
+}

@@ -1,0 +1,232 @@
+//! RL algorithm utilities on the coordinator side: GRPO group-
+//! normalized advantages (paper Eq. 2), reward normalization, TOPR
+//! trajectory partitioning, and minibatch assembly into the AOT
+//! `train_step` layout.
+
+use crate::runtime::TrainBatch;
+
+/// A completed, scored rollout sample (the SampleBuffer element).
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// fixed-length prompt tokens (the first observation)
+    pub prompt: Vec<i32>,
+    /// everything after the prompt: generated action tokens, and (for
+    /// multi-turn envs) interleaved observation tokens
+    pub response: Vec<i32>,
+    /// 1.0 for trainable (policy-generated) response tokens, 0.0 for
+    /// environment-observation tokens
+    pub response_mask: Vec<f32>,
+    /// behavior-policy logprob of each response token, recorded at
+    /// decode time (pi_old for importance sampling); 0.0 at obs tokens
+    pub behavior_logps: Vec<f32>,
+    pub reward: f32,
+    /// prompt/group id (GRPO normalizes within a group)
+    pub group: u64,
+    /// policy version that initiated generation (Section 4.3)
+    pub init_version: u64,
+}
+
+impl Trajectory {
+    /// Single-turn helper: every response token is trainable.
+    pub fn single_turn(
+        prompt: Vec<i32>,
+        response: Vec<i32>,
+        behavior_logps: Vec<f32>,
+        reward: f32,
+        group: u64,
+        init_version: u64,
+    ) -> Self {
+        let response_mask = vec![1.0; response.len()];
+        Trajectory { prompt, response, response_mask, behavior_logps, reward, group, init_version }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.prompt.len() + self.response.len()
+    }
+}
+
+/// GRPO advantage (Eq. 2): standardize rewards within each group.
+/// `samples` must contain complete groups. Returns one advantage per
+/// sample, broadcast over its response tokens at batch assembly.
+pub fn grpo_advantages(samples: &[Trajectory]) -> Vec<f32> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, s) in samples.iter().enumerate() {
+        groups.entry(s.group).or_default().push(i);
+    }
+    let mut adv = vec![0f32; samples.len()];
+    for idx in groups.values() {
+        let rewards: Vec<f64> = idx.iter().map(|&i| samples[i].reward as f64).collect();
+        let mean = crate::util::mean(&rewards);
+        let std = crate::util::std_dev(&rewards);
+        for &i in idx {
+            adv[i] = if std > 1e-8 {
+                ((samples[i].reward as f64 - mean) / std) as f32
+            } else {
+                0.0 // zero intra-group variance: no learning signal
+            };
+        }
+    }
+    adv
+}
+
+/// A group is degenerate (filterable) when all rewards coincide — the
+/// dynamic-filtering criterion of Section 5.1.1.
+pub fn group_has_zero_variance(rewards: &[f32]) -> bool {
+    rewards.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-8)
+}
+
+/// TOPR trajectory sign: T^+ (>= group mean) vs T^- (below).
+pub fn topr_signs(samples: &[Trajectory], advantages: &[f32]) -> Vec<f32> {
+    samples
+        .iter()
+        .zip(advantages)
+        .map(|(_, &a)| if a >= 0.0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// Assemble `rows` trajectories into the fixed [B, S] train_step layout.
+///
+/// Token position p is predicted at slot p-1, so a response spanning
+/// positions [P, P+L) sets mask slots [P-1, P+L-1) and places the k-th
+/// behavior logprob at slot P+k-1.
+pub fn assemble_batch(
+    rows: &[Trajectory],
+    advantages: &[f32],
+    signs: &[f32],
+    batch: usize,
+    max_seq: usize,
+) -> TrainBatch {
+    assert_eq!(rows.len(), batch, "must pass exactly train_batch rows");
+    let mut out = TrainBatch {
+        tokens: vec![0; batch * max_seq],
+        mask: vec![0.0; batch * max_seq],
+        adv: vec![0.0; batch * max_seq],
+        logp_old: vec![0.0; batch * max_seq],
+        logp_prox: vec![0.0; batch * max_seq],
+        sign: signs.to_vec(),
+    };
+    for (r, traj) in rows.iter().enumerate() {
+        let p = traj.prompt.len();
+        let base = r * max_seq;
+        for (i, &t) in traj.prompt.iter().enumerate() {
+            out.tokens[base + i] = t;
+        }
+        let resp_len = traj.response.len().min(max_seq - p);
+        for k in 0..resp_len {
+            out.tokens[base + p + k] = traj.response[k];
+            if traj.response_mask[k] > 0.0 {
+                let slot = base + p + k - 1;
+                out.mask[slot] = 1.0;
+                out.adv[slot] = advantages[r];
+                out.logp_old[slot] = traj.behavior_logps[k];
+                out.logp_prox[slot] = traj.behavior_logps[k]; // overwritten when needed
+            }
+        }
+    }
+    out
+}
+
+/// Fill `logp_prox` from a proximal-policy forward pass laid out
+/// [B, S] (Decoupled PPO; Section 2.2).
+pub fn fill_prox(batch: &mut TrainBatch, prox: &[f32]) {
+    assert_eq!(batch.logp_prox.len(), prox.len());
+    for (dst, (&src, &m)) in batch.logp_prox.iter_mut().zip(prox.iter().zip(&batch.mask)) {
+        if m > 0.0 {
+            *dst = src;
+        }
+    }
+}
+
+/// Mean reward / pass-rate metrics for logging.
+pub fn pass_rate(samples: &[Trajectory]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().filter(|s| s.reward > 0.5).count() as f64 / samples.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traj(group: u64, reward: f32) -> Trajectory {
+        Trajectory::single_turn(vec![1, 2, 3], vec![4, 5, 2], vec![-0.5, -0.7, -0.1], reward, group, 0)
+    }
+
+    #[test]
+    fn grpo_normalizes_within_group() {
+        let samples = vec![traj(0, 1.0), traj(0, 0.0), traj(1, 1.0), traj(1, 1.0)];
+        let adv = grpo_advantages(&samples);
+        // group 0: mean 0.5 std 0.5 -> +-1
+        assert!((adv[0] - 1.0).abs() < 1e-6);
+        assert!((adv[1] + 1.0).abs() < 1e-6);
+        // group 1: zero variance -> 0
+        assert_eq!(adv[2], 0.0);
+        assert_eq!(adv[3], 0.0);
+    }
+
+    #[test]
+    fn zero_variance_detection() {
+        assert!(group_has_zero_variance(&[1.0, 1.0, 1.0]));
+        assert!(!group_has_zero_variance(&[1.0, 0.0]));
+        assert!(group_has_zero_variance(&[]));
+    }
+
+    #[test]
+    fn topr_signs_follow_advantage() {
+        let samples = vec![traj(0, 1.0), traj(0, 0.0)];
+        let adv = grpo_advantages(&samples);
+        let signs = topr_signs(&samples, &adv);
+        assert_eq!(signs, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn assemble_layout() {
+        let t = traj(0, 1.0);
+        let b = assemble_batch(&[t.clone()], &[2.0], &[1.0], 1, 16);
+        // prompt 3 tokens at 0..3, response at 3..6
+        assert_eq!(&b.tokens[0..6], &[1, 2, 3, 4, 5, 2]);
+        // mask slots 2..5 (predicting positions 3..6)
+        assert_eq!(&b.mask[0..6], &[0.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(b.adv[2], 2.0);
+        assert_eq!(b.logp_old[2], -0.5);
+        assert_eq!(b.logp_old[4], -0.1);
+        assert_eq!(b.sign, vec![1.0]);
+        // masked token count equals response length
+        let masked: f32 = b.mask.iter().sum();
+        assert_eq!(masked, 3.0);
+    }
+
+    #[test]
+    fn assemble_truncates_overlong_response() {
+        let mut t = traj(0, 1.0);
+        t.response = (0..40).map(|i| (i % 10) as i32).collect();
+        t.response_mask = vec![1.0; 40];
+        t.behavior_logps = vec![-0.1; 40];
+        let b = assemble_batch(&[t], &[1.0], &[1.0], 1, 16);
+        let masked: f32 = b.mask.iter().sum();
+        assert_eq!(masked, 13.0); // 16 - 3 prompt slots
+    }
+
+    #[test]
+    fn assemble_skips_observation_tokens() {
+        let mut t = traj(0, 1.0);
+        // response: act obs obs act — only act tokens trainable
+        t.response = vec![5, 6, 7, 8];
+        t.response_mask = vec![1.0, 0.0, 0.0, 1.0];
+        t.behavior_logps = vec![-0.3, 0.0, 0.0, -0.4];
+        let b = assemble_batch(&[t], &[1.0], &[1.0], 1, 16);
+        let masked: f32 = b.mask.iter().sum();
+        assert_eq!(masked, 2.0);
+        assert_eq!(b.logp_old[2], -0.3); // slot for position 3
+        assert_eq!(b.logp_old[5], -0.4); // slot for position 6
+        assert_eq!(b.mask[3], 0.0);
+    }
+
+    #[test]
+    fn pass_rate_counts() {
+        let samples = vec![traj(0, 1.0), traj(0, 0.0), traj(1, 1.0)];
+        assert!((pass_rate(&samples) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

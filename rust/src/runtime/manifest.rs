@@ -1,0 +1,143 @@
+//! Artifact manifest (shapes/dtypes of AOT entry points), parsed with
+//! the in-tree JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("spec.shape")?
+            .iter()
+            .map(|v| v.as_usize().context("dim"))
+            .collect::<Result<_>>()?;
+        let dtype = j.get("dtype").and_then(Json::as_str).context("spec.dtype")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prompt_len: usize,
+    pub decode_batch: usize,
+    pub train_batch: usize,
+    pub pg_variants: Vec<String>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let field = |k: &str| j.get(k).and_then(Json::as_usize).context(k.to_string());
+        let mut entries = BTreeMap::new();
+        for (name, e) in j.get("entries").and_then(Json::as_obj).context("entries")? {
+            let parse_specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                e.get(k)
+                    .and_then(Json::as_arr)
+                    .with_context(|| format!("{name}.{k}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    hlo: e.get("hlo").and_then(Json::as_str).context("hlo")?.to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            model: j.get("model").and_then(Json::as_str).context("model")?.to_string(),
+            n_params: field("n_params")?,
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            d_ff: field("d_ff")?,
+            max_seq: field("max_seq")?,
+            prompt_len: field("prompt_len")?,
+            decode_batch: field("decode_batch")?,
+            train_batch: field("train_batch")?,
+            pg_variants: j
+                .get("pg_variants")
+                .and_then(Json::as_arr)
+                .context("pg_variants")?
+                .iter()
+                .map(|v| v.as_str().map(str::to_string).context("variant"))
+                .collect::<Result<_>>()?,
+            entries,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "tiny", "n_params": 10, "vocab": 64, "d_model": 8,
+      "n_layers": 1, "n_heads": 2, "d_ff": 16, "max_seq": 32,
+      "prompt_len": 8, "decode_batch": 4, "train_batch": 8,
+      "pg_variants": ["ppo"],
+      "entries": {
+        "decode_step": {
+          "hlo": "decode_step.hlo.txt",
+          "inputs": [{"shape": [10], "dtype": "float32"}],
+          "outputs": [{"shape": [4, 64], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_params, 10);
+        assert_eq!(m.entries["decode_step"].outputs[0].shape, vec![4, 64]);
+        assert_eq!(m.entries["decode_step"].outputs[0].elements(), 256);
+        assert_eq!(m.pg_variants, vec!["ppo"]);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse(r#"{"model": "x"}"#).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest + params) and
+//! execute them on the CPU client.
+//!
+//! This is the only place the `xla` crate is touched. Python runs once
+//! at build time (`make artifacts`); everything here is pure Rust on
+//! the request path. Pattern follows /opt/xla-example/load_hlo:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`.
+//!
+//! Threading note: PJRT wrapper types are not `Send`; each coordinator
+//! thread that needs compute constructs its own [`ModelRuntime`] and
+//! weights travel between threads as `Vec<f32>` — which is exactly the
+//! paper's `model_update` broadcast (Section 4.2).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use manifest::{EntrySpec, Manifest, TensorSpec};
+
+/// A loaded model: manifest + lazily compiled entry-point executables.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+}
+
+/// Mutable training state held between `train_step` calls.
+pub struct TrainState {
+    pub params: Literal,
+    pub m: Literal,
+    pub v: Literal,
+    pub step: f32,
+}
+
+/// One rollout-consumption minibatch, row-major [B, S] flattened.
+#[derive(Clone, Debug, Default)]
+pub struct TrainBatch {
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub logp_old: Vec<f32>,
+    pub logp_prox: Vec<f32>,
+    pub sign: Vec<f32>,
+}
+
+/// Diagnostics returned by one training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub mean_ratio: f32,
+    pub max_ratio: f32,
+    pub clip_frac: f32,
+    pub entropy: f32,
+}
+
+impl ModelRuntime {
+    /// Load `artifacts/<model>` (manifest + HLO text files).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ModelRuntime { client, dir, manifest, executables: RefCell::new(HashMap::new()) })
+    }
+
+    /// Initial parameters produced by aot.py (flat f32 LE).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let raw = std::fs::read(self.dir.join("init_params.bin"))?;
+        if raw.len() != 4 * self.manifest.n_params {
+            bail!("init_params.bin: got {} bytes, want {}", raw.len(), 4 * self.manifest.n_params);
+        }
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// Fresh training state from flat parameters (Adam moments zeroed).
+    pub fn train_state(&self, flat: &[f32]) -> Result<TrainState> {
+        anyhow::ensure!(flat.len() == self.manifest.n_params, "param size mismatch");
+        let zeros = vec![0f32; flat.len()];
+        Ok(TrainState {
+            params: Literal::vec1(flat),
+            m: Literal::vec1(&zeros),
+            v: Literal::vec1(&zeros),
+            step: 0.0,
+        })
+    }
+
+    fn executable(&self, entry: &str) -> Result<()> {
+        if self.executables.borrow().contains_key(entry) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .entries
+            .get(entry)
+            .with_context(|| format!("unknown entry point {entry:?}"))?;
+        let path = self.dir.join(&spec.hlo);
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {entry}"))?;
+        self.executables.borrow_mut().insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Force-compile every entry point (used by warmup / perf runs).
+    pub fn compile_all(&self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, entry: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.executable(entry)?;
+        let map = self.executables.borrow();
+        let exe = map.get(entry).unwrap();
+        let result = exe.execute::<Literal>(args).with_context(|| format!("executing {entry}"))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Next-token logits for a [decode_batch, max_seq] buffer at
+    /// per-row positions `pos` (continuous batching: rows advance
+    /// independently). Returns [decode_batch * vocab] row-major logits.
+    pub fn decode_step(&self, params: &Literal, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let (b, s) = (self.manifest.decode_batch, self.manifest.max_seq);
+        anyhow::ensure!(tokens.len() == b * s, "decode tokens: {} != {}", tokens.len(), b * s);
+        anyhow::ensure!(pos.len() == b, "decode pos: {} != {}", pos.len(), b);
+        let toks = Literal::vec1(tokens).reshape(&[b as i64, s as i64])?;
+        let out = self.run("decode_step", &[params.clone(), toks, Literal::vec1(pos)])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Per-token logprobs for a [train_batch, max_seq] buffer.
+    pub fn seq_logprobs(&self, params: &Literal, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (b, s) = (self.manifest.train_batch, self.manifest.max_seq);
+        anyhow::ensure!(tokens.len() == b * s, "logprob tokens: {} != {}", tokens.len(), b * s);
+        let toks = Literal::vec1(tokens).reshape(&[b as i64, s as i64])?;
+        let out = self.run("seq_logprobs", &[params.clone(), toks])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// One off-policy policy-gradient + Adam update, in place on `st`.
+    pub fn train_step(
+        &self,
+        variant: &str,
+        st: &mut TrainState,
+        lr: f32,
+        batch: &TrainBatch,
+    ) -> Result<TrainStats> {
+        let entry = format!("train_step_{variant}");
+        let (b, s) = (self.manifest.train_batch, self.manifest.max_seq);
+        anyhow::ensure!(batch.tokens.len() == b * s, "train batch shape");
+        anyhow::ensure!(batch.sign.len() == b, "sign shape");
+        let dims = [b as i64, s as i64];
+        let args = [
+            st.params.clone(),
+            st.m.clone(),
+            st.v.clone(),
+            Literal::scalar(st.step),
+            Literal::scalar(lr),
+            Literal::vec1(&batch.tokens).reshape(&dims)?,
+            Literal::vec1(&batch.mask).reshape(&dims)?,
+            Literal::vec1(&batch.adv).reshape(&dims)?,
+            Literal::vec1(&batch.logp_old).reshape(&dims)?,
+            Literal::vec1(&batch.logp_prox).reshape(&dims)?,
+            Literal::vec1(&batch.sign),
+        ];
+        let mut out = self.run(&entry, &args)?;
+        anyhow::ensure!(out.len() == 9, "train_step outputs: {}", out.len());
+        let scalar = |l: &Literal| -> Result<f32> { Ok(l.get_first_element::<f32>()?) };
+        let stats = TrainStats {
+            loss: scalar(&out[3])?,
+            grad_norm: scalar(&out[4])?,
+            mean_ratio: scalar(&out[5])?,
+            max_ratio: scalar(&out[6])?,
+            clip_frac: scalar(&out[7])?,
+            entropy: scalar(&out[8])?,
+        };
+        st.v = out.remove(2);
+        st.m = out.remove(1);
+        st.params = out.remove(0);
+        st.step += 1.0;
+        Ok(stats)
+    }
+
+    /// Snapshot current weights as a flat vector (the `model_update`
+    /// broadcast payload).
+    pub fn snapshot(&self, st: &TrainState) -> Result<Vec<f32>> {
+        Ok(st.params.to_vec::<f32>()?)
+    }
+
+    /// Build a params literal from a broadcast snapshot.
+    pub fn params_literal(&self, flat: &[f32]) -> Result<Literal> {
+        anyhow::ensure!(flat.len() == self.manifest.n_params, "param size mismatch");
+        Ok(Literal::vec1(flat))
+    }
+}

@@ -1,0 +1,440 @@
+//! Virtual-time simulator of the agentic RL pipeline (Section 5.2):
+//! multi-turn trajectories against latency-heavy, failure-prone
+//! environments; environment-level asynchronous rollout (5.2.1) and
+//! redundant environment rollout (5.2.2). Drives Figs 9, 10, 11.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::queue::{GpuPool, T};
+use crate::util::rng::Rng;
+use crate::workload::{DecodeCost, EnvLatency, FailureModel, TrainCost};
+
+#[derive(Clone, Debug)]
+pub struct AgenticSimConfig {
+    pub gen_gpus: usize,
+    pub knee: usize,
+    pub max_active: usize,
+    /// env fleet: may exceed the quota (redundant rollout)
+    pub num_env_groups: usize,
+    pub group_size: usize,
+    /// base quota: first `quota_groups` groups each reaching
+    /// `quota_group_size` finished trajectories complete the rollout
+    pub quota_groups: usize,
+    pub quota_group_size: usize,
+    pub turns: usize,
+    pub tokens_per_action: usize,
+    pub decode: DecodeCost,
+    pub env_latency: EnvLatency,
+    pub failures: FailureModel,
+    /// environment-level asynchronous rollout vs lockstep barriers
+    pub env_async: bool,
+    /// fail-stop detection + restart delay
+    pub retry_timeout: f64,
+    /// probability an entire env group's backend dies mid-rollout
+    /// (groups share a container/service; spare *groups* cover this,
+    /// spare members do not — Section 5.2.2)
+    pub group_fail_stop_prob: f64,
+    pub seed: u64,
+}
+
+impl AgenticSimConfig {
+    /// ALFWorld-like defaults (paper Appendix A: 30 steps).
+    pub fn alfworld(gen_gpus: usize) -> Self {
+        AgenticSimConfig {
+            gen_gpus,
+            knee: 16,
+            max_active: 64,
+            num_env_groups: 8,
+            group_size: 16,
+            quota_groups: 8,
+            quota_group_size: 16,
+            turns: 30,
+            tokens_per_action: 150,
+            decode: DecodeCost::qwen3_8b(),
+            env_latency: EnvLatency::gaussian(3.0, 2.0),
+            failures: FailureModel::alfworld_like(),
+            env_async: true,
+            retry_timeout: 60.0,
+            group_fail_stop_prob: 0.0,
+            seed: 11,
+        }
+    }
+
+    /// SWE-like defaults (50 steps, long env latencies, frequent fails).
+    pub fn swe(gen_gpus: usize) -> Self {
+        AgenticSimConfig {
+            gen_gpus,
+            knee: 16,
+            max_active: 64,
+            num_env_groups: 8,
+            group_size: 16,
+            quota_groups: 8,
+            quota_group_size: 16,
+            turns: 50,
+            tokens_per_action: 700,
+            decode: DecodeCost::qwen3_8b(),
+            env_latency: EnvLatency::gaussian(12.0, 8.0),
+            failures: FailureModel::swe_like(),
+            env_async: true,
+            retry_timeout: 120.0,
+            group_fail_stop_prob: 0.02,
+            seed: 13,
+        }
+    }
+
+    pub fn total_envs(&self) -> usize {
+        self.num_env_groups * self.group_size
+    }
+
+    pub fn quota(&self) -> usize {
+        self.quota_groups * self.quota_group_size
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct AgenticReport {
+    /// rollout makespan for one collection step
+    pub rollout_time: f64,
+    pub trajectories_done: usize,
+    pub restarts: usize,
+    pub gen_utilization: f64,
+    pub tokens_generated: f64,
+}
+
+/// One rollout-collection step.
+pub fn run_rollout(cfg: &AgenticSimConfig) -> AgenticReport {
+    assert!(cfg.num_env_groups >= cfg.quota_groups, "fleet smaller than quota");
+    assert!(cfg.group_size >= cfg.quota_group_size, "groups smaller than quota");
+    if cfg.env_async {
+        run_env_async(cfg)
+    } else {
+        run_lockstep(cfg)
+    }
+}
+
+struct Traj {
+    group: usize,
+    turn: usize,
+    /// turn at which this trajectory fail-stops (usize::MAX = healthy)
+    dead_at: usize,
+    done: bool,
+}
+
+fn draw_dead_at(cfg: &AgenticSimConfig, rng: &mut Rng) -> usize {
+    if rng.chance(cfg.failures.fail_stop_prob) {
+        rng.below(cfg.turns.max(1))
+    } else {
+        usize::MAX
+    }
+}
+
+/// Per-group backend death turns (usize::MAX = healthy group).
+fn draw_group_dead(cfg: &AgenticSimConfig, rng: &mut Rng) -> Vec<usize> {
+    (0..cfg.num_env_groups)
+        .map(|_| {
+            if rng.chance(cfg.group_fail_stop_prob) {
+                rng.below(cfg.turns.max(1))
+            } else {
+                usize::MAX
+            }
+        })
+        .collect()
+}
+
+fn env_step_latency(cfg: &AgenticSimConfig, rng: &mut Rng) -> f64 {
+    let mut lat = cfg.env_latency.sample(rng);
+    if rng.chance(cfg.failures.fail_slow_prob) {
+        lat *= cfg.failures.fail_slow_factor;
+    }
+    lat
+}
+
+fn quota_met(group_done: &[usize], cfg: &AgenticSimConfig) -> bool {
+    group_done.iter().filter(|&&d| d >= cfg.quota_group_size).count() >= cfg.quota_groups
+}
+
+// ---------------------------------------------------------------------------
+// Lockstep baseline: per-turn barriers across the whole fleet.
+// ---------------------------------------------------------------------------
+
+fn run_lockstep(cfg: &AgenticSimConfig) -> AgenticReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = AgenticReport::default();
+    let group_dead = draw_group_dead(cfg, &mut rng);
+    let mut trajs: Vec<Traj> = (0..cfg.total_envs())
+        .map(|i| Traj {
+            group: i / cfg.group_size,
+            turn: 0,
+            dead_at: draw_dead_at(cfg, &mut rng).min(group_dead[i / cfg.group_size]),
+            done: false,
+        })
+        .collect();
+    let mut group_done = vec![0usize; cfg.num_env_groups];
+    let mut now = 0.0f64;
+    let cap_rate = cfg.gen_gpus as f64 * cfg.knee as f64 / cfg.decode.token_time;
+
+    while !quota_met(&group_done, cfg) {
+        // gen barrier: all unfinished trajectories decode one action as
+        // one batch over the pool; barrier time = last completion.
+        let alive: Vec<usize> = trajs.iter().enumerate().filter(|(_, t)| !t.done).map(|(i, _)| i).collect();
+        if alive.is_empty() {
+            break;
+        }
+        let mut pool = GpuPool::new(cfg.gen_gpus, cfg.decode.token_time, cfg.knee, cfg.max_active);
+        let tokens = cfg.tokens_per_action as f64 + cfg.decode.prefill_time / cfg.decode.token_time;
+        let mut queue: Vec<u64> = Vec::new();
+        for (j, &ti) in alive.iter().enumerate() {
+            let _ = ti;
+            if !pool.submit(j as u64, tokens, 0.0) {
+                queue.push(j as u64);
+            }
+        }
+        let mut gen_end = 0.0f64;
+        while let Some(t) = pool.peek_completion() {
+            pool.pop_completion(t);
+            gen_end = t;
+            if let Some(id) = queue.pop() {
+                pool.submit(id, tokens, t);
+            }
+        }
+        now += gen_end;
+        report.tokens_generated += alive.len() as f64 * tokens;
+
+        // env barrier: wait for the slowest env step; fail-stopped
+        // trajectories hold the barrier for retry_timeout, then restart.
+        let mut barrier = 0.0f64;
+        for &ti in &alive {
+            let t = &mut trajs[ti];
+            if t.turn >= t.dead_at {
+                barrier = barrier.max(cfg.retry_timeout);
+                t.turn = 0;
+                t.dead_at = draw_dead_at(cfg, &mut rng);
+                report.restarts += 1;
+                continue;
+            }
+            barrier = barrier.max(env_step_latency(cfg, &mut rng));
+            t.turn += 1;
+            if t.turn >= cfg.turns {
+                t.done = true;
+                group_done[t.group] += 1;
+                report.trajectories_done += 1;
+            }
+        }
+        now += barrier;
+    }
+    report.rollout_time = now;
+    report.gen_utilization = report.tokens_generated / (cap_rate * now.max(1e-9));
+    report
+}
+
+// ---------------------------------------------------------------------------
+// Environment-level asynchronous rollout: per-trajectory progression.
+// ---------------------------------------------------------------------------
+
+fn run_env_async(cfg: &AgenticSimConfig) -> AgenticReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = AgenticReport::default();
+    let mut pool = GpuPool::new(cfg.gen_gpus, cfg.decode.token_time, cfg.knee, cfg.max_active);
+    let tokens = cfg.tokens_per_action as f64 + cfg.decode.prefill_time / cfg.decode.token_time;
+
+    let group_dead = draw_group_dead(cfg, &mut rng);
+    let mut trajs: Vec<Traj> = (0..cfg.total_envs())
+        .map(|i| Traj {
+            group: i / cfg.group_size,
+            turn: 0,
+            dead_at: draw_dead_at(cfg, &mut rng).min(group_dead[i / cfg.group_size]),
+            done: false,
+        })
+        .collect();
+    let mut group_done = vec![0usize; cfg.num_env_groups];
+    // events: (time, traj, kind) kind 0 = env step done / restart ready
+    let mut env_events: BinaryHeap<Reverse<(T, usize)>> = BinaryHeap::new();
+    let mut gen_queue: std::collections::VecDeque<usize> = (0..trajs.len()).collect();
+    let mut now = 0.0f64;
+
+    loop {
+        // dispatch pending generation requests (queue scheduling)
+        while let Some(&ti) = gen_queue.front() {
+            if !pool.submit(ti as u64, tokens, now) {
+                break;
+            }
+            gen_queue.pop_front();
+        }
+        if quota_met(&group_done, cfg) {
+            break;
+        }
+        let tg = pool.peek_completion();
+        let te = env_events.peek().map(|Reverse((t, _))| t.0);
+        let (t, is_gen) = match (tg, te) {
+            (Some(a), Some(b)) if a <= b => (a, true),
+            (Some(a), None) => (a, true),
+            (None, Some(b)) | (Some(_), Some(b)) => (b, false),
+            (None, None) => break,
+        };
+        now = t;
+        if is_gen {
+            let ti = pool.pop_completion(t) as usize;
+            report.tokens_generated += tokens;
+            let tr = &mut trajs[ti];
+            if tr.turn >= tr.dead_at {
+                // env is dead: action times out, restart after detection
+                env_events.push(Reverse((T(now + cfg.retry_timeout), ti)));
+                tr.turn = usize::MAX - 1; // marker: restarting
+                report.restarts += 1;
+            } else {
+                env_events.push(Reverse((T(now + env_step_latency(cfg, &mut rng)), ti)));
+            }
+        } else {
+            let Reverse((_, ti)) = env_events.pop().unwrap();
+            let tr = &mut trajs[ti];
+            if tr.turn == usize::MAX - 1 {
+                // restart fresh trajectory in the same env slot
+                tr.turn = 0;
+                tr.dead_at = draw_dead_at(cfg, &mut rng);
+                gen_queue.push_back(ti);
+                continue;
+            }
+            tr.turn += 1;
+            if tr.turn >= cfg.turns {
+                tr.done = true;
+                if group_done[tr.group] < cfg.group_size {
+                    group_done[tr.group] += 1;
+                }
+                report.trajectories_done += 1;
+            } else {
+                gen_queue.push_back(ti);
+            }
+        }
+    }
+    report.rollout_time = now;
+    report.gen_utilization =
+        report.tokens_generated / (pool.capacity_rate() * now.max(1e-9));
+    report
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end training-time model (Fig 11): rollout + train per step,
+// overlapped under the async architecture.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct EndToEnd {
+    pub steps: usize,
+    pub train: TrainCost,
+    pub train_gpus: usize,
+    pub weight_sync_time: f64,
+    /// rollout-train decoupling on? (async_generation_ratio > 0)
+    pub decoupled: bool,
+}
+
+impl EndToEnd {
+    /// Total training hours for `steps` iterations given a per-step
+    /// rollout makespan distribution (re-sampled per step via seeds).
+    pub fn total_time(&self, cfg: &AgenticSimConfig) -> f64 {
+        let quota = cfg.quota();
+        let t_train = self.train.step_time(quota, self.train_gpus) + self.weight_sync_time;
+        let mut total = 0.0f64;
+        let mut first_rollout = 0.0f64;
+        for s in 0..self.steps {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed.wrapping_add(s as u64 * 7919);
+            let r = run_rollout(&c);
+            if s == 0 {
+                first_rollout = r.rollout_time;
+            }
+            if self.decoupled {
+                // producer-consumer overlap: step is gated by the slower
+                // of continuous collection and training (Prop 2)
+                total += r.rollout_time.max(t_train);
+            } else {
+                total += r.rollout_time + t_train;
+            }
+        }
+        if self.decoupled {
+            total += first_rollout.min(t_train); // pipeline fill
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(env_async: bool) -> AgenticSimConfig {
+        let mut c = AgenticSimConfig::alfworld(4);
+        c.num_env_groups = 4;
+        c.group_size = 8;
+        c.quota_groups = 4;
+        c.quota_group_size = 8;
+        c.turns = 6;
+        c.env_async = env_async;
+        c.failures = FailureModel::none();
+        c
+    }
+
+    #[test]
+    fn env_async_beats_lockstep() {
+        let a = run_rollout(&small(true));
+        let b = run_rollout(&small(false));
+        assert!(a.rollout_time < b.rollout_time, "async {} lockstep {}", a.rollout_time, b.rollout_time);
+        assert_eq!(a.trajectories_done, 32);
+    }
+
+    #[test]
+    fn speedup_grows_with_latency_variance() {
+        let speedup = |std: f64| {
+            let mut c = small(true);
+            c.env_latency = EnvLatency::gaussian(10.0, std);
+            let a = run_rollout(&c);
+            c.env_async = false;
+            let b = run_rollout(&c);
+            b.rollout_time / a.rollout_time
+        };
+        let lo = speedup(1.0);
+        let hi = speedup(8.0);
+        assert!(hi > lo, "variance should amplify async benefit: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn redundancy_mitigates_failstop() {
+        let mut base = small(true);
+        base.failures = FailureModel { fail_slow_prob: 0.1, fail_slow_factor: 6.0, fail_stop_prob: 0.08 };
+        base.retry_timeout = 120.0;
+        let exact = run_rollout(&base);
+        let mut red = base.clone();
+        red.num_env_groups = 6; // fleet > quota
+        red.group_size = 10;
+        let r = run_rollout(&red);
+        assert!(
+            r.rollout_time < exact.rollout_time,
+            "redundant {} vs exact {}",
+            r.rollout_time,
+            exact.rollout_time
+        );
+    }
+
+    #[test]
+    fn decoupling_shortens_end_to_end() {
+        let cfg = small(true);
+        let e2e_sync = EndToEnd {
+            steps: 3,
+            train: TrainCost::qwen3_8b(),
+            train_gpus: 4,
+            weight_sync_time: 2.0,
+            decoupled: false,
+        };
+        let mut e2e_async = e2e_sync;
+        e2e_async.decoupled = true;
+        let ts = e2e_sync.total_time(&cfg);
+        let ta = e2e_async.total_time(&cfg);
+        assert!(ta < ts, "async {ta} sync {ts}");
+    }
+
+    #[test]
+    fn determinism() {
+        let cfg = small(true);
+        assert_eq!(run_rollout(&cfg).rollout_time, run_rollout(&cfg).rollout_time);
+    }
+}

@@ -1,0 +1,11 @@
+//! Virtual-time discrete-event cluster simulator (DESIGN.md §3).
+//!
+//! The paper's scale experiments ran on 16-128 GPUs; this substrate
+//! reproduces the *timing* phenomena (long-tail stragglers, bandwidth-
+//! bound decode, rollout/train overlap, queueing) deterministically on
+//! one CPU. The coordination policies are shared with `coordinator/`,
+//! which drives the real PJRT engine.
+
+pub mod agentic;
+pub mod queue;
+pub mod rlvr;

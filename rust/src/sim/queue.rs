@@ -1,0 +1,365 @@
+//! Discrete-event primitives for the virtual-time cluster simulator:
+//! a processor-sharing GPU pool (memory-bandwidth-bound decode model)
+//! and a FIFO service pool (reward workers, env threads).
+//!
+//! Decode model: a GPU decodes up to `knee` co-resident sequences at
+//! full speed (`1/token_time` tokens/s each); beyond the knee the
+//! bandwidth is shared and per-sequence rate degrades as `knee/n`.
+//! This reproduces the two phenomena the paper builds on: (1) adding
+//! GPUs cannot shorten one long rollout, and (2) concentrating a
+//! prompt's n candidates on one worker amplifies stragglers
+//! (Section 5.1.2).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Totally ordered f64 for the event heap (no NaNs in the sim).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct T(pub f64);
+
+impl Eq for T {}
+
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN time in simulator")
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Active {
+    id: u64,
+    /// tokens still to decode
+    remaining: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Gpu {
+    active: Vec<Active>,
+    /// virtual time of last progress update
+    last: f64,
+    /// invalidates cached completion events in the heap
+    epoch: u64,
+    /// cumulative decoded tokens (utilization accounting)
+    work_done: f64,
+}
+
+impl Gpu {
+    /// Per-sequence decode rate in tokens/sec.
+    fn rate(&self, token_time: f64, knee: usize, paused: bool) -> f64 {
+        if paused || self.active.is_empty() {
+            return 0.0;
+        }
+        let n = self.active.len() as f64;
+        let share = (knee as f64 / n).min(1.0);
+        share / token_time
+    }
+
+    fn update_to(&mut self, t: f64, token_time: f64, knee: usize, paused: bool) {
+        let rate = self.rate(token_time, knee, paused);
+        let dt = t - self.last;
+        if dt > 0.0 && rate > 0.0 {
+            for a in &mut self.active {
+                a.remaining -= dt * rate;
+            }
+            self.work_done += dt * rate * self.active.len() as f64;
+        }
+        self.last = t;
+    }
+
+    fn next_finish(&self, token_time: f64, knee: usize, paused: bool) -> Option<f64> {
+        let rate = self.rate(token_time, knee, paused);
+        if rate <= 0.0 {
+            return None;
+        }
+        self.active
+            .iter()
+            .map(|a| self.last + a.remaining.max(0.0) / rate)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+/// Processor-sharing GPU pool with lazy completion-event invalidation.
+pub struct GpuPool {
+    gpus: Vec<Gpu>,
+    pub token_time: f64,
+    pub knee: usize,
+    pub max_active: usize,
+    paused: bool,
+    /// (finish_time, gpu, epoch) — stale entries skipped on pop
+    heap: BinaryHeap<Reverse<(T, usize, u64)>>,
+    /// seq id -> gpu index
+    placement: HashMap<u64, usize>,
+}
+
+impl GpuPool {
+    pub fn new(n_gpus: usize, token_time: f64, knee: usize, max_active: usize) -> Self {
+        assert!(n_gpus > 0 && knee > 0 && max_active >= knee);
+        GpuPool {
+            gpus: vec![Gpu::default(); n_gpus],
+            token_time,
+            knee,
+            max_active,
+            paused: false,
+            heap: BinaryHeap::new(),
+            placement: HashMap::new(),
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.placement.len()
+    }
+
+    /// Aggregate decode capacity in tokens/sec.
+    pub fn capacity_rate(&self) -> f64 {
+        self.gpus.len() as f64 * self.knee as f64 / self.token_time
+    }
+
+    pub fn total_work_done(&self, now: f64) -> f64 {
+        // include progress up to `now` without mutating
+        self.gpus
+            .iter()
+            .map(|g| {
+                let rate = g.rate(self.token_time, self.knee, self.paused);
+                g.work_done + rate * (now - g.last).max(0.0) * g.active.len() as f64
+            })
+            .sum()
+    }
+
+    fn reschedule(&mut self, gi: usize) {
+        self.gpus[gi].epoch += 1;
+        if let Some(t) = self.gpus[gi].next_finish(self.token_time, self.knee, self.paused) {
+            self.heap.push(Reverse((T(t), gi, self.gpus[gi].epoch)));
+        }
+    }
+
+    /// Least-loaded GPU with a free slot.
+    pub fn pick_gpu(&self) -> Option<usize> {
+        self.gpus
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.active.len() < self.max_active)
+            .min_by_key(|(_, g)| g.active.len())
+            .map(|(i, _)| i)
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.pick_gpu().is_some()
+    }
+
+    /// Place a sequence on a specific GPU (prompt-group co-residency).
+    pub fn submit_to(&mut self, gi: usize, id: u64, tokens: f64, now: f64) {
+        assert!(!self.placement.contains_key(&id), "duplicate submit {id}");
+        self.gpus[gi].update_to(now, self.token_time, self.knee, self.paused);
+        self.gpus[gi].active.push(Active { id, remaining: tokens.max(1e-9) });
+        self.placement.insert(id, gi);
+        self.reschedule(gi);
+    }
+
+    /// Queue-scheduling placement: least-loaded GPU. Returns false if
+    /// the whole pool is at max_active.
+    pub fn submit(&mut self, id: u64, tokens: f64, now: f64) -> bool {
+        match self.pick_gpu() {
+            Some(gi) => {
+                self.submit_to(gi, id, tokens, now);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// ABORT command: reclaim a running sequence (LLMProxy semantics).
+    /// Returns remaining tokens if it was in flight.
+    pub fn abort(&mut self, id: u64, now: f64) -> Option<f64> {
+        let gi = self.placement.remove(&id)?;
+        self.gpus[gi].update_to(now, self.token_time, self.knee, self.paused);
+        let idx = self.gpus[gi].active.iter().position(|a| a.id == id)?;
+        let a = self.gpus[gi].active.swap_remove(idx);
+        self.reschedule(gi);
+        Some(a.remaining.max(0.0))
+    }
+
+    /// Earliest completion event across the pool, if any.
+    pub fn peek_completion(&mut self) -> Option<f64> {
+        while let Some(Reverse((t, gi, epoch))) = self.heap.peek().copied() {
+            if self.gpus[gi].epoch == epoch {
+                return Some(t.0);
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    /// Pop the completion at time `t` (must equal peek_completion()).
+    /// Returns the finished sequence id.
+    pub fn pop_completion(&mut self, t: f64) -> u64 {
+        let Reverse((tt, gi, epoch)) = self.heap.pop().expect("no completion");
+        debug_assert_eq!(self.gpus[gi].epoch, epoch);
+        debug_assert!((tt.0 - t).abs() < 1e-9);
+        self.gpus[gi].update_to(t, self.token_time, self.knee, self.paused);
+        // finished = smallest remaining (numerically ~0)
+        let idx = self.gpus[gi]
+            .active
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.remaining.partial_cmp(&b.1.remaining).unwrap())
+            .map(|(i, _)| i)
+            .expect("completion on empty gpu");
+        let a = self.gpus[gi].active.swap_remove(idx);
+        self.placement.remove(&a.id);
+        self.reschedule(gi);
+        a.id
+    }
+
+    /// Suspend / resume the whole pool (weight-sync barrier).
+    pub fn set_paused(&mut self, paused: bool, now: f64) {
+        if self.paused == paused {
+            return;
+        }
+        for gi in 0..self.gpus.len() {
+            self.gpus[gi].update_to(now, self.token_time, self.knee, self.paused);
+        }
+        self.paused = paused;
+        for gi in 0..self.gpus.len() {
+            self.reschedule(gi);
+        }
+    }
+
+    /// Number of active sequences on each GPU (diagnostics/tests).
+    pub fn loads(&self) -> Vec<usize> {
+        self.gpus.iter().map(|g| g.active.len()).collect()
+    }
+}
+
+/// M parallel single-slot FIFO servers (reward workers, CPU pools).
+#[derive(Clone, Debug)]
+pub struct ServicePool {
+    free_at: Vec<f64>,
+}
+
+impl ServicePool {
+    pub fn new(workers: usize) -> Self {
+        ServicePool { free_at: vec![0.0; workers.max(1)] }
+    }
+
+    /// Enqueue a job of `dur` seconds at `now`; returns completion time.
+    pub fn submit(&mut self, now: f64, dur: f64) -> f64 {
+        let (i, start) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (i, f.max(now)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        self.free_at[i] = start + dur;
+        self.free_at[i]
+    }
+
+    pub fn idle_from(&self) -> f64 {
+        self.free_at.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_seq_full_speed() {
+        let mut pool = GpuPool::new(1, 0.01, 4, 8);
+        pool.submit(1, 100.0, 0.0);
+        let t = pool.peek_completion().unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "{t}"); // 100 tokens * 0.01
+        assert_eq!(pool.pop_completion(t), 1);
+        assert_eq!(pool.in_flight(), 0);
+    }
+
+    #[test]
+    fn knee_sharing_slows_decode() {
+        // 8 seqs on a knee-4 gpu: each runs at half speed.
+        let mut pool = GpuPool::new(1, 0.01, 4, 16);
+        for id in 0..8 {
+            pool.submit(id, 100.0, 0.0);
+        }
+        let t = pool.peek_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn below_knee_no_interference() {
+        let mut pool = GpuPool::new(1, 0.01, 4, 16);
+        pool.submit(1, 100.0, 0.0);
+        pool.submit(2, 200.0, 0.0);
+        let t1 = pool.peek_completion().unwrap();
+        assert!((t1 - 1.0).abs() < 1e-9);
+        pool.pop_completion(t1);
+        let t2 = pool.peek_completion().unwrap();
+        assert!((t2 - 2.0).abs() < 1e-9, "{t2}");
+    }
+
+    #[test]
+    fn least_loaded_placement() {
+        let mut pool = GpuPool::new(2, 0.01, 2, 4);
+        pool.submit(1, 100.0, 0.0);
+        pool.submit(2, 100.0, 0.0);
+        assert_eq!(pool.loads(), vec![1, 1]);
+    }
+
+    #[test]
+    fn abort_reclaims_and_speeds_up_rest() {
+        let mut pool = GpuPool::new(1, 0.01, 1, 4);
+        pool.submit(1, 100.0, 0.0);
+        pool.submit(2, 100.0, 0.0); // sharing: both at half speed
+        let rem = pool.abort(2, 0.5).unwrap();
+        assert!((rem - 75.0).abs() < 1e-6, "{rem}"); // 0.5s at 50 tok/s
+        let t = pool.peek_completion().unwrap();
+        // seq 1 has 75 tokens left at full speed from t=0.5
+        assert!((t - 1.25).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn pause_freezes_progress() {
+        let mut pool = GpuPool::new(1, 0.01, 4, 8);
+        pool.submit(1, 100.0, 0.0);
+        pool.set_paused(true, 0.5);
+        assert!(pool.peek_completion().is_none());
+        pool.set_paused(false, 1.5); // 1s pause
+        let t = pool.peek_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn service_pool_fifo() {
+        let mut p = ServicePool::new(2);
+        assert!((p.submit(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((p.submit(0.0, 1.0) - 1.0).abs() < 1e-12);
+        assert!((p.submit(0.0, 1.0) - 2.0).abs() < 1e-12); // queues
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let mut pool = GpuPool::new(1, 0.01, 1, 2);
+        assert!(pool.submit(1, 10.0, 0.0));
+        assert!(pool.submit(2, 10.0, 0.0));
+        assert!(!pool.submit(3, 10.0, 0.0));
+        assert!(!pool.has_capacity());
+    }
+
+    #[test]
+    fn work_accounting() {
+        let mut pool = GpuPool::new(1, 0.01, 4, 8);
+        pool.submit(1, 100.0, 0.0);
+        let t = pool.peek_completion().unwrap();
+        pool.pop_completion(t);
+        assert!((pool.total_work_done(t) - 100.0).abs() < 1e-6);
+    }
+}

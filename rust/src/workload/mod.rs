@@ -1,0 +1,243 @@
+//! Workload models calibrated to the paper's measurements:
+//! response-length distributions (long-tail, Fig 1), environment
+//! latency distributions (Gaussian, Fig 9), GPU decode/training cost
+//! models, and failure injection (Section 5.2.2).
+
+use crate::util::rng::{lognormal_params, Rng};
+
+/// Response-length distribution for one model family.
+///
+/// The paper reports DAPO-Math rollouts with mean ~2k tokens for
+/// Qwen3-8B-Base and ~11k for the Think model, max 30720, with the
+/// longest responses exceeding the median by >20x (long tail).
+#[derive(Clone, Copy, Debug)]
+pub struct LengthProfile {
+    /// underlying lognormal parameters
+    mu: f64,
+    sigma: f64,
+    pub cap: usize,
+    pub mean_target: f64,
+}
+
+impl LengthProfile {
+    pub fn new(mean_tokens: f64, sigma: f64, cap: usize) -> Self {
+        let (mu, sigma) = lognormal_params(mean_tokens, sigma);
+        LengthProfile { mu, sigma, cap, mean_target: mean_tokens }
+    }
+
+    /// Qwen3-8B-Base profile: short mean, very heavy tail
+    /// (empirically the Base model rarely saturates the 30720 cap).
+    pub fn qwen3_base() -> Self {
+        Self::new(2000.0, 1.1, 16384)
+    }
+
+    /// Qwen3-8B-Think profile: long mean, moderate tail.
+    pub fn qwen3_think() -> Self {
+        Self::new(11000.0, 0.75, 30720)
+    }
+
+    /// Fixed-length profile (for controlled tests).
+    pub fn constant(len: usize) -> Self {
+        LengthProfile { mu: (len as f64).ln(), sigma: 0.0, cap: len.max(1), mean_target: len as f64 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let l = rng.lognormal(self.mu, self.sigma);
+        (l.round() as usize).clamp(1, self.cap)
+    }
+
+    /// Scale the mean (e.g. Table 1's 4K/8K/16K/32K sweep).
+    pub fn with_mean(&self, mean_tokens: f64) -> Self {
+        Self::new(mean_tokens, self.sigma, self.cap)
+    }
+}
+
+/// Gaussian environment step latency, truncated below (Fig 9).
+#[derive(Clone, Copy, Debug)]
+pub struct EnvLatency {
+    pub mean: f64,
+    pub std: f64,
+    pub floor: f64,
+}
+
+impl EnvLatency {
+    pub fn gaussian(mean: f64, std: f64) -> Self {
+        EnvLatency { mean, std, floor: 0.05 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.normal_trunc(self.mean, self.std, self.floor)
+    }
+}
+
+/// Failure injection for agentic environments (Section 5.2.2):
+/// fail-slow multiplies latency; fail-stop kills the trajectory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FailureModel {
+    pub fail_slow_prob: f64,
+    pub fail_slow_factor: f64,
+    pub fail_stop_prob: f64,
+}
+
+impl FailureModel {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Calibrated to "failures are common" in SWE-like envs.
+    pub fn swe_like() -> Self {
+        FailureModel { fail_slow_prob: 0.08, fail_slow_factor: 6.0, fail_stop_prob: 0.03 }
+    }
+
+    pub fn alfworld_like() -> Self {
+        FailureModel { fail_slow_prob: 0.05, fail_slow_factor: 4.0, fail_stop_prob: 0.01 }
+    }
+}
+
+/// GPU decode cost model. Decoding is memory-bandwidth bound: the
+/// per-token step time is independent of how many GPUs serve the fleet,
+/// which is exactly why scale-out does not shorten a single long rollout
+/// (paper Section 1).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeCost {
+    /// seconds per generated token per sequence (short-context)
+    pub token_time: f64,
+    /// fixed prefill + scheduling overhead per sequence
+    pub prefill_time: f64,
+    /// attention KV-read growth: decoding token t costs
+    /// token_time * (1 + t / ctx_scale), so a length-L response costs
+    /// ~ token_time * L * (1 + L / (2 ctx_scale)). This superlinear
+    /// term is what makes 30k-token stragglers so much worse than
+    /// their length alone suggests (the paper's long-tail rollouts).
+    pub ctx_scale: f64,
+}
+
+impl DecodeCost {
+    /// ~125 tok/s/sequence short-context decode (SGLang/vLLM-class
+    /// serving of an 8B model), halving by ~32k context.
+    pub fn qwen3_8b() -> Self {
+        DecodeCost { token_time: 0.008, prefill_time: 0.3, ctx_scale: 16384.0 }
+    }
+
+    /// Effective decode work in short-context token units.
+    pub fn effective_tokens(&self, tokens: usize) -> f64 {
+        let l = tokens as f64;
+        l * (1.0 + l / (2.0 * self.ctx_scale))
+    }
+
+    pub fn gen_time(&self, tokens: usize) -> f64 {
+        self.prefill_time + self.token_time * self.effective_tokens(tokens)
+    }
+
+    /// Scale decode cost with model size (Table 1 model-size sweep).
+    pub fn scaled(&self, factor: f64) -> Self {
+        DecodeCost { token_time: self.token_time * factor, ..*self }
+    }
+}
+
+/// Training-stage cost model: fixed overhead (load/offload, weight
+/// sync) plus per-sample compute that parallelizes over the train pool.
+/// Fig 3b: "training time scales approximately linearly with sample
+/// count, with fixed constant overheads".
+#[derive(Clone, Copy, Debug)]
+pub struct TrainCost {
+    pub fixed: f64,
+    /// GPU-seconds per sample per epoch (divided by pool size)
+    pub per_sample: f64,
+    /// reuse count E (ppo_epochs)
+    pub epochs: f64,
+}
+
+impl TrainCost {
+    /// Calibrated so the rollout stage accounts for ~70% of a sync step
+    /// at 1:1 pools (paper Section 1): one fwd+bwd plus the reference
+    /// and proximal inference passes (paper footnote 1) over ~11k
+    /// tokens costs ~4.4 GPU-seconds per sample.
+    pub fn qwen3_8b() -> Self {
+        Self::for_mean_len(11000.0)
+    }
+
+    /// Scale the per-sample cost with mean sequence length
+    /// (~0.4 GPU-seconds per 1k consumed tokens for the 8B profile).
+    pub fn for_mean_len(mean_tokens: f64) -> Self {
+        TrainCost { fixed: 25.0, per_sample: 0.4 * mean_tokens / 1000.0, epochs: 1.0 }
+    }
+
+    pub fn step_time(&self, n_samples: usize, pool: usize) -> f64 {
+        self.fixed + self.epochs * self.per_sample * n_samples as f64 / pool.max(1) as f64
+    }
+}
+
+/// Reward/verifier cost (runs on CPU workers, overlaps generation when
+/// queue scheduling is on).
+#[derive(Clone, Copy, Debug)]
+pub struct RewardCost {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl RewardCost {
+    pub fn verifier() -> Self {
+        RewardCost { mean: 0.4, std: 0.2 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.normal_trunc(self.mean, self.std, 0.01)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_profiles_hit_target_means() {
+        let mut rng = Rng::new(1);
+        for profile in [LengthProfile::qwen3_base(), LengthProfile::qwen3_think()] {
+            let xs: Vec<f64> = (0..30_000).map(|_| profile.sample(&mut rng) as f64).collect();
+            let mean = crate::util::mean(&xs);
+            // cap truncation pulls the mean slightly below target
+            assert!(
+                (mean - profile.mean_target).abs() / profile.mean_target < 0.15,
+                "mean {mean} vs target {}",
+                profile.mean_target
+            );
+        }
+    }
+
+    #[test]
+    fn base_profile_is_long_tailed() {
+        let mut rng = Rng::new(2);
+        let p = LengthProfile::qwen3_base();
+        let xs: Vec<f64> = (0..30_000).map(|_| p.sample(&mut rng) as f64).collect();
+        let med = crate::util::percentile(&xs, 50.0);
+        let max = xs.iter().cloned().fold(0.0, f64::max);
+        // heavy tail: longest exceeds the median many times over
+        assert!(max / med > 8.0, "tail factor {}", max / med);
+    }
+
+    #[test]
+    fn constant_profile() {
+        let mut rng = Rng::new(3);
+        let p = LengthProfile::constant(100);
+        for _ in 0..10 {
+            assert_eq!(p.sample(&mut rng), 100);
+        }
+    }
+
+    #[test]
+    fn env_latency_respects_floor() {
+        let mut rng = Rng::new(4);
+        let lat = EnvLatency::gaussian(1.0, 5.0);
+        for _ in 0..1000 {
+            assert!(lat.sample(&mut rng) >= lat.floor);
+        }
+    }
+
+    #[test]
+    fn train_cost_parallelizes() {
+        let c = TrainCost::qwen3_8b();
+        assert!(c.step_time(256, 32) < c.step_time(256, 16));
+        assert!(c.step_time(256, 16) > c.fixed);
+    }
+}

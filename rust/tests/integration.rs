@@ -1,0 +1,244 @@
+//! Full-stack integration: LLMProxy + EnvManagers + SampleBuffer +
+//! AsyncController against the real PJRT engine (tiny artifacts).
+//! Skipped when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use roll_flash::config::PgVariant;
+use roll_flash::coordinator::{
+    run_training, ControllerCfg, LlmProxy, RolloutSystem, RolloutSystemCfg,
+};
+use roll_flash::env::alfworld::AlfworldEnv;
+use roll_flash::env::math::MathEnv;
+use roll_flash::env::vocab;
+use roll_flash::runtime::ModelRuntime;
+use roll_flash::workload::EnvLatency;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn proxy_generates_and_respects_commands() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let proxy = LlmProxy::spawn(dir, weights.clone(), vocab::EOS, 7);
+
+    // several concurrent requests (continuous batching)
+    let mut rxs = Vec::new();
+    for i in 0..10 {
+        let prompt = MathEnv::prompt_for(i % 10, (i + 3) % 10);
+        rxs.push(proxy.generate(prompt, 4).1);
+    }
+    for rx in rxs {
+        let res = rx.recv().expect("generation completes");
+        assert!(!res.tokens.is_empty() && res.tokens.len() <= 4);
+        assert_eq!(res.tokens.len(), res.logps.len());
+        assert!(res.logps.iter().all(|&l| l <= 0.0 && l.is_finite()));
+        assert_eq!(res.version, 0);
+    }
+
+    // weight update bumps the reported version
+    proxy.update_weights(weights, 3);
+    let (_, rx) = proxy.generate(MathEnv::prompt_for(1, 2), 4);
+    assert_eq!(rx.recv().unwrap().version, 3);
+
+    // abort: the reply channel never fires
+    proxy.suspend(); // hold decoding so the abort lands first
+    let (id, rx) = proxy.generate(MathEnv::prompt_for(2, 2), 4);
+    proxy.abort(id);
+    proxy.resume();
+    assert!(rx.recv_timeout(std::time::Duration::from_millis(400)).is_err());
+
+    let report = proxy.shutdown().unwrap();
+    assert!(report.completed >= 11);
+    assert!(report.tokens_generated > 0);
+}
+
+#[test]
+fn fleet_collects_complete_groups() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha: 1.0,
+        seed: 3,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let samples = system.buffer.get_batch(4).expect("batch");
+    assert_eq!(samples.len(), 16);
+    // group completeness: every group key appears exactly group_size times
+    let mut counts = std::collections::BTreeMap::new();
+    for s in &samples {
+        *counts.entry(s.group).or_insert(0usize) += 1;
+        assert_eq!(s.prompt.len(), 8);
+        assert!(!s.response.is_empty());
+        assert_eq!(s.response.len(), s.behavior_logps.len());
+        assert_eq!(s.init_version, 0);
+    }
+    assert!(counts.values().all(|&c| c == 4), "{counts:?}");
+    let report = system.shutdown().unwrap();
+    assert!(report.buffer.produced >= 16);
+    assert!(report.proxy.completed as usize >= 16);
+}
+
+#[test]
+fn sync_training_loop_runs_on_math_env() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let mut st = rt.train_state(&weights).unwrap();
+    // tiny: train_batch = 16 => 4 groups x 4 = 16 sequences per step
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha: 0.0,
+        seed: 5,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let ctl = ControllerCfg {
+        variant: PgVariant::Ppo,
+        steps: 3,
+        lr: 1e-3,
+        n_groups: 4,
+        group_size: 4,
+        sync_mode: true,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
+    assert_eq!(logs.len(), 3);
+    for l in &logs {
+        assert!(l.loss.is_finite());
+        assert!(l.entropy > 0.0);
+        assert!(l.reward_mean >= 0.0 && l.reward_mean <= 1.0);
+        // on-policy-ish: ratios near 1 (same policy generated the data)
+        assert!(l.mean_ratio > 0.8 && l.mean_ratio < 1.2, "ratio {}", l.mean_ratio);
+    }
+    let report = system.shutdown().unwrap();
+    // sync mode (alpha = 0): strictly on-policy consumption — any
+    // sample straddling an update is reclaimed, never trained on
+    assert_eq!(report.buffer.max_version_gap, 0, "sync must be on-policy");
+}
+
+#[test]
+fn async_training_overlaps_and_bounds_staleness() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let mut st = rt.train_state(&weights).unwrap();
+    let alpha = 2.0;
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha,
+        seed: 11,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let ctl = ControllerCfg {
+        variant: PgVariant::Tis,
+        steps: 5,
+        lr: 1e-3,
+        n_groups: 4,
+        group_size: 4,
+        sync_mode: false,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
+    assert_eq!(logs.len(), 5);
+    let report = system.shutdown().unwrap();
+    // per-sample freshness (Section 4.3): consumed gap <= alpha, exactly
+    assert!(
+        (report.buffer.max_version_gap as f64) <= alpha,
+        "gap {} exceeds alpha {}",
+        report.buffer.max_version_gap,
+        alpha
+    );
+    assert!(report.buffer.consumed >= 5 * 16);
+}
+
+#[test]
+fn multiturn_env_manager_interleaves_obs_and_actions() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 2,
+        env_group_size: 2,
+        consume_groups: 2,
+        consume_group_size: 2,
+        alpha: 0.0,
+        seed: 9,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| {
+        AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
+    })
+    .unwrap();
+    let samples = system.buffer.get_batch(2).expect("batch");
+    assert_eq!(samples.len(), 4);
+    for s in &samples {
+        assert_eq!(s.response.len(), s.response_mask.len());
+        assert_eq!(s.response.len(), s.behavior_logps.len());
+        // at least one trainable action token
+        assert!(s.response_mask.iter().any(|&m| m > 0.0));
+        // obs tokens (mask 0) have no behavior logp
+        for (m, lp) in s.response_mask.iter().zip(&s.behavior_logps) {
+            if *m == 0.0 {
+                assert_eq!(*lp, 0.0);
+            } else {
+                assert!(*lp <= 0.0);
+            }
+        }
+        assert!(s.total_len() <= rt.manifest.max_seq);
+    }
+    system.shutdown().unwrap();
+}
+
+#[test]
+fn redundant_groups_produce_surplus_without_blocking() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    // fleet 3 groups x 5 members; quota 2 groups x 4
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 3,
+        env_group_size: 5,
+        consume_groups: 2,
+        consume_group_size: 4,
+        alpha: 1.0,
+        seed: 13,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let samples = system.buffer.get_batch(2).expect("batch");
+    assert_eq!(samples.len(), 8);
+    let report = system.shutdown().unwrap();
+    // the 5th member of each completed group is surplus
+    assert!(report.buffer.surplus > 0 || report.buffer.produced >= 8);
+}

@@ -1,0 +1,322 @@
+//! Property-based tests over coordinator/simulator invariants.
+//!
+//! proptest is not resolvable offline (DESIGN.md §7), so this uses an
+//! in-tree harness: seeded random case generation + first-failing-seed
+//! reporting. Each property runs across many generated configurations.
+
+use roll_flash::coordinator::SampleBuffer;
+use roll_flash::rl::{self, Trajectory};
+use roll_flash::sim::queue::GpuPool;
+use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
+use roll_flash::theory::{Prop1, Prop2};
+use roll_flash::util::rng::Rng;
+use roll_flash::workload::LengthProfile;
+
+/// Mini property harness: run `f` on `n` seeded cases; panic with the
+/// failing seed for reproduction.
+fn for_all_seeds(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xBEEF ^ seed.wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GpuPool invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gpu_pool_conserves_work() {
+    // Total decoded work at drain == total submitted work, regardless
+    // of arrival pattern, knee, or abort-free scheduling order.
+    for_all_seeds(40, |rng| {
+        let gpus = 1 + rng.below(8);
+        let knee = 1 + rng.below(8);
+        let max_active = knee + rng.below(16);
+        let mut pool = GpuPool::new(gpus, 0.01, knee, max_active);
+        let n = 1 + rng.below(60);
+        let mut submitted = 0.0;
+        let mut pending: Vec<(u64, f64)> =
+            (0..n).map(|i| (i as u64, rng.range_f64(1.0, 500.0))).collect();
+        let mut now = 0.0;
+        while !pending.is_empty() || pool.in_flight() > 0 {
+            if let Some(&(id, w)) = pending.last() {
+                if pool.submit(id, w, now) {
+                    submitted += w;
+                    pending.pop();
+                    continue;
+                }
+            }
+            let t = pool.peek_completion().expect("no deadlock");
+            pool.pop_completion(t);
+            now = t;
+        }
+        let done = pool.total_work_done(now);
+        assert!(
+            (done - submitted).abs() < 1e-6 * submitted.max(1.0),
+            "work leak: {done} vs {submitted}"
+        );
+    });
+}
+
+#[test]
+fn prop_gpu_pool_completions_monotone() {
+    // Completion events come out in non-decreasing virtual time.
+    for_all_seeds(30, |rng| {
+        let mut pool = GpuPool::new(1 + rng.below(4), 0.01, 1 + rng.below(4), 32);
+        for i in 0..40u64 {
+            pool.submit(i, rng.range_f64(1.0, 300.0), 0.0);
+        }
+        let mut last = 0.0;
+        while let Some(t) = pool.peek_completion() {
+            assert!(t >= last - 1e-9, "time went backwards: {t} < {last}");
+            pool.pop_completion(t);
+            last = t;
+        }
+        assert_eq!(pool.in_flight(), 0);
+    });
+}
+
+#[test]
+fn prop_queue_sched_meets_prop1_bound() {
+    // Measured queue-scheduling completion never exceeds Eq. 4.
+    for_all_seeds(25, |rng| {
+        let k = 1 + rng.below(32);
+        let q = k + rng.below(256);
+        let l_gen = rng.range_f64(50.0, 400.0);
+        let times: Vec<f64> = (0..q).map(|_| rng.range_f64(0.0, l_gen).max(1e-3)).collect();
+        let mu = times.iter().sum::<f64>() / q as f64;
+        let mut pool = GpuPool::new(k, 1.0, 1, 1);
+        let mut pending: std::collections::VecDeque<(u64, f64)> =
+            times.iter().enumerate().map(|(i, &t)| (i as u64, t)).collect();
+        let mut now = 0.0;
+        while let Some(&(id, t)) = pending.front() {
+            if pool.submit(id, t, now) {
+                pending.pop_front();
+            } else {
+                now = pool.peek_completion().unwrap();
+                pool.pop_completion(now);
+            }
+        }
+        while let Some(t) = pool.peek_completion() {
+            pool.pop_completion(t);
+            now = t;
+        }
+        let bound = Prop1 { k_workers: k, mu_gen: mu, l_gen }.completion_bound(q);
+        assert!(now <= bound + 1e-6, "Prop 1 violated: {now} > {bound} (K={k}, Q={q})");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SampleBuffer invariants
+// ---------------------------------------------------------------------------
+
+fn traj(group: u64, iv: u64) -> Trajectory {
+    Trajectory::single_turn(vec![1], vec![2], vec![-0.1], 1.0, group, iv)
+}
+
+#[test]
+fn prop_buffer_freshness_bound_holds() {
+    // Under any interleaving of produce/consume, every consumed sample
+    // satisfies version - init_version <= alpha.
+    for_all_seeds(40, |rng| {
+        let group_size = 1 + rng.below(4);
+        let groups_per_batch = 1 + rng.below(4);
+        let batch = group_size * groups_per_batch;
+        let alpha = rng.below(4) as f64;
+        let buf = SampleBuffer::new(batch, group_size, alpha);
+        let mut next_group = 0u64;
+        let mut consumed = 0usize;
+        let mut in_flight: Vec<u64> = Vec::new(); // tickets (init versions)
+        while consumed < batch * 6 {
+            // randomly produce or consume
+            if rng.chance(0.7) || buf.ready_groups() < groups_per_batch {
+                if buf.outstanding() < buf.capacity() {
+                    let iv = buf.begin_sample().unwrap();
+                    in_flight.push(iv);
+                    // complete a whole group at once sometimes, else drip
+                    for _ in 0..group_size.min(in_flight.len()) {
+                        let iv = in_flight.pop().unwrap();
+                        buf.push(traj(next_group, iv));
+                    }
+                    next_group += 1;
+                } else if buf.ready_groups() < groups_per_batch {
+                    break; // avoid deadlock in degenerate configs
+                }
+            } else {
+                let got = buf.try_get_batch(groups_per_batch);
+                if let Some(batch_rows) = got {
+                    consumed += batch_rows.len();
+                    buf.bump_version();
+                }
+            }
+        }
+        let stats = buf.stats();
+        assert!(
+            stats.max_version_gap as f64 <= alpha.max(0.0) + 1e-9,
+            "freshness violated: gap {} alpha {alpha}",
+            stats.max_version_gap
+        );
+    });
+}
+
+#[test]
+fn prop_buffer_conservation() {
+    // produced == consumed + buffered + evicted + surplus (no sample
+    // lost or double-counted) for random workloads.
+    for_all_seeds(30, |rng| {
+        let group_size = 1 + rng.below(3);
+        let batch = group_size * (1 + rng.below(3));
+        let alpha = 1.0 + rng.below(3) as f64;
+        let buf = SampleBuffer::new(batch, group_size, alpha);
+        let mut produced = 0usize;
+        let mut consumed = 0usize;
+        for round in 0..20u64 {
+            for g in 0..batch as u64 / group_size as u64 {
+                for _ in 0..group_size {
+                    if buf.outstanding() < buf.capacity() {
+                        let iv = buf.begin_sample().unwrap();
+                        buf.push(traj(round * 1000 + g, iv));
+                        produced += 1;
+                    }
+                }
+            }
+            if let Some(rows) = buf.try_get_batch(batch / group_size) {
+                consumed += rows.len();
+                buf.bump_version();
+            }
+        }
+        let stats = buf.stats();
+        assert_eq!(stats.produced, produced);
+        assert_eq!(stats.consumed, consumed);
+        let buffered = stats.produced - stats.consumed - stats.stale_evicted;
+        assert!(buffered <= buf.capacity(), "buffer overflow: {buffered}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RL math invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grpo_advantages_are_group_standardized() {
+    for_all_seeds(50, |rng| {
+        let n_groups = 1 + rng.below(6);
+        let group_size = 2 + rng.below(6);
+        let mut samples = Vec::new();
+        for g in 0..n_groups as u64 {
+            for _ in 0..group_size {
+                let mut t = traj(g, 0);
+                t.reward = rng.range_f64(0.0, 1.0) as f32;
+                samples.push(t);
+            }
+        }
+        let adv = rl::grpo_advantages(&samples);
+        for g in 0..n_groups as u64 {
+            let idx: Vec<usize> =
+                (0..samples.len()).filter(|&i| samples[i].group == g).collect();
+            let mean: f64 = idx.iter().map(|&i| adv[i] as f64).sum::<f64>() / idx.len() as f64;
+            let var: f64 = idx.iter().map(|&i| (adv[i] as f64 - mean).powi(2)).sum::<f64>()
+                / idx.len() as f64;
+            assert!(mean.abs() < 1e-4, "group {g} mean {mean}");
+            // unit variance, unless the group was (near-)degenerate
+            assert!(var < 1.5 + 1e-6, "group {g} var {var}");
+        }
+    });
+}
+
+#[test]
+fn prop_assemble_batch_roundtrip() {
+    // Every trainable token's (token, logp, adv) lands at the right
+    // slot; masked-token count equals trainable response length.
+    for_all_seeds(50, |rng| {
+        let max_seq = 32;
+        let p_len = 2 + rng.below(6);
+        let r_len = 1 + rng.below(max_seq - p_len - 1);
+        let prompt: Vec<i32> = (0..p_len).map(|_| rng.below(60) as i32 + 1).collect();
+        let response: Vec<i32> = (0..r_len).map(|_| rng.below(60) as i32 + 1).collect();
+        let mask: Vec<f32> = (0..r_len).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+        let logps: Vec<f32> =
+            mask.iter().map(|&m| if m > 0.0 { -(rng.f64() as f32) } else { 0.0 }).collect();
+        let t = Trajectory {
+            prompt: prompt.clone(),
+            response: response.clone(),
+            response_mask: mask.clone(),
+            behavior_logps: logps.clone(),
+            reward: 1.0,
+            group: 0,
+            init_version: 0,
+        };
+        let adv = rng.normal() as f32;
+        let b = rl::assemble_batch(&[t], &[adv], &[1.0], 1, max_seq);
+        let total_mask: f32 = b.mask.iter().sum();
+        let expect: f32 = mask.iter().sum();
+        assert_eq!(total_mask, expect);
+        for (k, &tok) in response.iter().enumerate() {
+            assert_eq!(b.tokens[p_len + k], tok);
+            if mask[k] > 0.0 {
+                let slot = p_len + k - 1;
+                assert_eq!(b.mask[slot], 1.0);
+                assert_eq!(b.logp_old[slot], logps[k]);
+                assert_eq!(b.adv[slot], adv);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Simulator-level invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_quota_exact_and_deterministic() {
+    for_all_seeds(12, |rng| {
+        let mut c = RlvrSimConfig::paper_default(2 + rng.below(6), 2 + rng.below(6));
+        c.n_prompts = 4 + rng.below(12);
+        c.group_size = 1 + rng.below(8);
+        c.steps = 1 + rng.below(3);
+        c.lengths = LengthProfile::new(rng.range_f64(200.0, 2000.0), 1.0, 8192);
+        c.scheduling =
+            if rng.chance(0.5) { Scheduling::QueueSched } else { Scheduling::BatchRollout };
+        c.replicate = rng.chance(0.5);
+        c.async_ratio = if rng.chance(0.5) { 0.0 } else { 1.0 + rng.below(3) as f64 };
+        c.seed = rng.next_u64();
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.samples_consumed, c.sequences_per_step() * c.steps);
+        assert_eq!(a.total_time, b.total_time, "non-deterministic sim");
+        assert!(a.gen_utilization > 0.0 && a.gen_utilization <= 1.0 + 1e-9);
+        assert!(a.step_times.iter().all(|&t| t > 0.0));
+    });
+}
+
+#[test]
+fn prop_prop2_beta_star_is_argmin() {
+    for_all_seeds(40, |rng| {
+        let p = Prop2 {
+            k_workers: 8 + rng.below(120),
+            n_samples: 64 + rng.below(4096),
+            mu_gen: rng.range_f64(1.0, 60.0),
+            l_gen: rng.range_f64(10.0, 600.0),
+            mu_train: rng.range_f64(0.5, 20.0),
+            epochs: 1.0 + rng.below(3) as f64,
+        };
+        let alpha = rng.range_f64(0.0, 8.0);
+        let b = p.beta_star(alpha);
+        assert!(b > 0.0 && b < 1.0);
+        let best = p.async_bound(b, alpha);
+        for i in 1..40 {
+            let beta = i as f64 / 40.0;
+            assert!(
+                p.async_bound(beta, alpha) >= best - 1e-9,
+                "beta* not optimal: f({beta}) < f({b})"
+            );
+        }
+        // async bound at beta* never exceeds the sync bound
+        assert!(p.async_bound_at_beta_star(alpha) <= p.sync_bound() + 1e-9);
+    });
+}
