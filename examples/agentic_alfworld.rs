@@ -48,6 +48,9 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         latency_scale: 0.002, // 1s simulated -> 2ms real sleep
         hang_timeout: 1e6,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     println!(
         "agentic_alfworld: fleet {}x{} -> quota {}x{}, alpha 1, env-level async rollout",

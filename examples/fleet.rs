@@ -1,0 +1,187 @@
+//! Inference-fleet demo: a >= 3-replica `LlmProxyPool` end-to-end on
+//! the real PJRT engine —
+//!
+//!   1. routing race: the same skewed request batch through
+//!      round-robin vs least-outstanding placement (least-outstanding
+//!      should finish first: no shorts parked behind stragglers),
+//!   2. asynchronous training with *rolling* weight sync (at most one
+//!      replica paused per update; the pool's sync waves are counted),
+//!      confirming the SampleBuffer freshness bound
+//!      `max_version_gap <= ceil(alpha)` end-to-end,
+//!   3. the per-replica utilization / queue-depth fleet report.
+//!
+//!     make artifacts
+//!     cargo run --release --example fleet -- \
+//!         [model=tiny] [replicas=3] [alpha=1] [steps=6] [route=queue]
+//!
+//! Without artifacts the demo falls back to the virtual-time fleet
+//! mirror (`sim::fleet`), which exercises the same `Router`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use roll_flash::config::PgVariant;
+use roll_flash::coordinator::{
+    format_log, run_training, ControllerCfg, LlmProxyPool, PoolCfg, RolloutSystem,
+    RolloutSystemCfg, RoutePolicy,
+};
+use roll_flash::env::math::MathEnv;
+use roll_flash::env::vocab;
+use roll_flash::metrics::Table;
+use roll_flash::runtime::ModelRuntime;
+use roll_flash::sim::fleet::{run as run_sim, FleetSimConfig};
+use roll_flash::util::rng::Rng;
+use roll_flash::workload::LengthProfile;
+
+fn arg(name: &str, default: &str) -> String {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}=")).map(str::to_string))
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = arg("model", "tiny");
+    let replicas: usize = arg("replicas", "3").parse()?;
+    let alpha: f64 = arg("alpha", "1").parse()?;
+    let steps: usize = arg("steps", "6").parse()?;
+    let route = RoutePolicy::parse(&arg("route", "queue"))?;
+    anyhow::ensure!(replicas >= 3, "fleet demo wants >= 3 replicas (got {replicas})");
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing (run `make artifacts`): falling back to the sim mirror\n");
+        return sim_fallback(replicas);
+    }
+
+    let rt = ModelRuntime::load(&dir)?;
+    let weights = rt.load_init_params()?;
+
+    // --- 1. routing race on a skewed request batch ------------------
+    println!("== routing race: {replicas} replicas, skewed request lengths ==\n");
+    let long_cap = (rt.manifest.max_seq - rt.manifest.prompt_len).saturating_sub(1).min(24).max(2);
+    let mut table = Table::new(&["policy", "requests", "wall ms"]);
+    let mut walls = Vec::new();
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding] {
+        let cfg = PoolCfg {
+            num_replicas: replicas,
+            route_policy: policy,
+            rolling_update: true,
+            replica_slots: rt.manifest.decode_batch,
+        };
+        let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
+        // identical skewed workload for both policies: mostly short
+        // requests, a long straggler every 8th
+        let mut rng = Rng::new(5);
+        let t0 = Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..(replicas * 16) as u64 {
+            let mnt = if i % 8 == 0 { long_cap } else { 2 };
+            let prompt = MathEnv::prompt_for(rng.below(10) as u32, rng.below(10) as u32);
+            rxs.push(pool.generate(prompt, mnt).1);
+        }
+        for rx in rxs {
+            rx.recv().expect("fleet serves the request");
+        }
+        let wall = t0.elapsed().as_secs_f64() * 1e3;
+        walls.push(wall);
+        pool.shutdown()?;
+        table.row(&[policy.as_str().to_string(), (replicas * 16).to_string(), format!("{wall:.0}")]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "least-outstanding / round-robin completion time: {:.2}x\n",
+        walls[1] / walls[0].max(1e-9)
+    );
+
+    // --- 2. async training with rolling weight sync -----------------
+    println!("== async training: alpha={alpha}, route={}, rolling sync ==\n", route.as_str());
+    let mut st = rt.train_state(&weights)?;
+    let group_size = 4;
+    let n_groups = rt.manifest.train_batch / group_size;
+    let fleet = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: n_groups,
+        env_group_size: group_size,
+        consume_groups: n_groups,
+        consume_group_size: group_size,
+        alpha,
+        seed: 42,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+        num_replicas: replicas,
+        route_policy: route,
+        rolling_update: true,
+    };
+    let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
+    let ctl = ControllerCfg {
+        variant: PgVariant::Tis,
+        steps,
+        lr: 1e-3,
+        n_groups,
+        group_size,
+        sync_mode: alpha == 0.0,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
+    for l in &logs {
+        println!("{}", format_log(l));
+    }
+    let report = system.shutdown()?;
+
+    // --- 3. fleet report + freshness bound --------------------------
+    println!("\n== fleet report ==\n");
+    print!("{}", report.pool.format_table());
+    println!(
+        "\nrolling sync waves {} (one replica paused at a time; {} kept decoding)",
+        report.pool.sync_waves,
+        replicas - 1
+    );
+    println!("migrations {}  pool-queue depth mean {:.1} max {:.0}",
+        report.pool.migrated,
+        report.pool.pool_queue_depth.mean(),
+        report.pool.pool_queue_depth.max()
+    );
+    let bound = alpha.ceil();
+    println!(
+        "freshness: max_version_gap {} <= ceil(alpha) {} (mean gap {:.2})",
+        report.buffer.max_version_gap,
+        bound,
+        report.buffer.mean_version_gap()
+    );
+    anyhow::ensure!(
+        report.buffer.max_version_gap as f64 <= bound,
+        "freshness bound violated: gap {} > ceil(alpha) {}",
+        report.buffer.max_version_gap,
+        bound
+    );
+    println!("OK: fleet served {} episodes across {replicas} replicas", report.episodes);
+    Ok(())
+}
+
+/// Virtual-time stand-in when artifacts are absent: same Router, same
+/// policies, scaled-up load.
+fn sim_fallback(replicas: usize) -> anyhow::Result<()> {
+    let mut base = FleetSimConfig::default_fleet(replicas);
+    base.lengths = LengthProfile::new(2000.0, 1.2, 30720);
+    base.sync_interval = 0.0;
+    let mut table = Table::new(&["policy", "makespan s", "p99 lat s", "tok/s"]);
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
+        let mut cfg = base.clone();
+        cfg.route_policy = policy;
+        let r = run_sim(&cfg);
+        table.row(&[
+            policy.as_str().to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.p99_latency),
+            format!("{:.0}", r.throughput),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    let mut rolling = FleetSimConfig::default_fleet(replicas);
+    rolling.sync_interval = 60.0;
+    let r = run_sim(&rolling);
+    println!(
+        "rolling sync: {} waves, min decoding replicas {} (of {replicas})",
+        r.sync_waves, r.min_decoding_during_sync
+    );
+    Ok(())
+}

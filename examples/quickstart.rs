@@ -42,6 +42,9 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 

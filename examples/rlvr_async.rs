@@ -4,7 +4,8 @@
 //!
 //!     make artifacts
 //!     cargo run --release --example rlvr_async -- \
-//!         [model=small] [steps=150] [alpha=2] [variant=tis] [lr=0.002]
+//!         [model=small] [steps=150] [alpha=2] [variant=tis] [lr=0.002] \
+//!         [replicas=1] [route=least_outstanding]
 //!
 //! All three layers execute for real: the Pallas flash-attention kernel
 //! inside the AOT decode path, the fused Pallas grpo_loss kernel inside
@@ -16,7 +17,9 @@ use std::io::Write;
 use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
-use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::coordinator::{
+    format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
+};
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
 
@@ -32,6 +35,8 @@ fn main() -> anyhow::Result<()> {
     let alpha: f64 = arg("alpha", "2").parse()?;
     let variant = PgVariant::parse(&arg("variant", "tis"))?;
     let lr: f32 = arg("lr", "0.002").parse()?;
+    let num_replicas: usize = arg("replicas", "1").parse()?;
+    let route_policy = RoutePolicy::parse(&arg("route", "least_outstanding"))?;
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
     anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
@@ -56,6 +61,9 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas,
+        route_policy,
+        rolling_update: true,
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;

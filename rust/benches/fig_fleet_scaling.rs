@@ -1,0 +1,98 @@
+//! Fleet scaling: replica-count sweep of the inference pool under each
+//! routing policy, plus rolling-vs-broadcast weight sync — the
+//! fleet-layer companion to Fig 1b, on the virtual-time mirror of
+//! `coordinator/fleet.rs` (same `Router`, same policies).
+//!
+//! Shapes to reproduce:
+//!   * throughput scales near-linearly with replicas when routing is
+//!     load-aware; round-robin leaves it on the table under the
+//!     long-tail length profile (shorts stuck behind stragglers);
+//!   * queue scheduling bounds per-replica co-residency at the decode
+//!     window, trading pool-side queueing for knee-sharing slowdown;
+//!   * rolling weight sync keeps N-1 replicas decoding through a
+//!     model update; broadcast parks the whole fleet.
+
+use roll_flash::coordinator::RoutePolicy;
+use roll_flash::metrics::Table;
+use roll_flash::sim::fleet::{run, sweep_replicas, FleetSimConfig};
+use roll_flash::workload::LengthProfile;
+
+fn main() {
+    let mut base = FleetSimConfig::default_fleet(1);
+    // heavy tail (longest >> median): the regime where routing matters
+    base.lengths = LengthProfile::new(2000.0, 1.2, 30720);
+
+    println!("== Fleet scaling: replica sweep x route policy ==\n");
+    let mut table = Table::new(&[
+        "replicas", "rr tok/s", "lo tok/s", "queue tok/s", "lo/rr", "lo self-scaling",
+    ]);
+    let mut lo1 = 0.0f64;
+    for &n in &[1usize, 2, 4, 8] {
+        let mut per_policy = Vec::new();
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
+            let mut cfg = base.clone();
+            cfg.route_policy = policy;
+            let rows = sweep_replicas(&cfg, &[n]);
+            per_policy.push(rows[0].1.clone());
+        }
+        let (rr, lo, qs) = (&per_policy[0], &per_policy[1], &per_policy[2]);
+        if n == 1 {
+            lo1 = lo.throughput;
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:.0}", rr.throughput),
+            format!("{:.0}", lo.throughput),
+            format!("{:.0}", qs.throughput),
+            format!("{:.2}x", lo.throughput / rr.throughput.max(1e-9)),
+            format!("{:.2}x", lo.throughput / lo1.max(1e-9)),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    println!("== Routing under skew (4 replicas, fixed work budget) ==\n");
+    let mut table = Table::new(&["policy", "makespan s", "mean lat s", "p99 lat s", "max co-res", "pool q max"]);
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.route_policy = policy;
+        cfg.sync_interval = 0.0;
+        let r = run(&cfg);
+        table.row(&[
+            policy.as_str().to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.mean_latency),
+            format!("{:.1}", r.p99_latency),
+            r.max_inflight.to_string(),
+            r.pool_queue_max.to_string(),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+
+    println!("== Weight sync: rolling vs broadcast (4 replicas) ==\n");
+    let mut table = Table::new(&[
+        "sync", "waves", "min decoding replicas", "makespan s", "tok/s",
+    ]);
+    for rolling in [true, false] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.rolling_update = rolling;
+        cfg.sync_interval = 60.0;
+        cfg.sync_time = 10.0;
+        let r = run(&cfg);
+        table.row(&[
+            if rolling { "rolling".into() } else { "broadcast".to_string() },
+            r.sync_waves.to_string(),
+            r.min_decoding_during_sync.to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.0}", r.throughput),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("rolling keeps >= N-1 replicas decoding during every model update;");
+    println!("broadcast parks the fleet for the whole sync window.");
+}

@@ -38,6 +38,14 @@ impl Cli {
     pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Boolean option: `key=1|true|yes|on` (anything else is false).
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(v) => matches!(v, "1" | "true" | "yes" | "on"),
+            None => default,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -54,5 +62,17 @@ mod tests {
         assert_eq!(cli.parse_or("alpha", 0.0f64), 2.5);
         assert_eq!(cli.str_or("model", "tiny"), "small");
         assert_eq!(cli.parse_or("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn parses_bools() {
+        let cli = Cli::parse(
+            ["run", "rolling=true", "sync=0", "weird=maybe"].iter().map(|s| s.to_string()),
+        );
+        assert!(cli.bool_or("rolling", false));
+        assert!(!cli.bool_or("sync", true));
+        assert!(!cli.bool_or("weird", true));
+        assert!(cli.bool_or("missing", true));
+        assert!(!cli.bool_or("missing", false));
     }
 }

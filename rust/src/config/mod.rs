@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::routing::RoutePolicy;
 use crate::util::json::Json;
 
 /// Off-policy objective selector (`pg_variant` in the paper config).
@@ -104,6 +105,12 @@ pub struct RollConfig {
     pub is_num_return_sequences_expand: bool,
     /// asynchronous ratio alpha; 0 => synchronous (Section 4.3)
     pub async_generation_ratio: f64,
+    /// inference fleet: LlmProxy replicas behind the routing layer
+    pub num_replicas: usize,
+    /// request placement across replicas
+    pub route_policy: RoutePolicy,
+    /// staggered weight sync (at most one replica paused at a time)
+    pub rolling_update: bool,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -128,6 +135,9 @@ impl Default for RollConfig {
             max_additional_running_prompts: 16,
             is_num_return_sequences_expand: true,
             async_generation_ratio: 0.0,
+            num_replicas: 1,
+            route_policy: RoutePolicy::LeastOutstanding,
+            rolling_update: true,
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -188,6 +198,15 @@ impl RollConfig {
         if let Some(v) = num(&j, "async_generation_ratio") {
             cfg.async_generation_ratio = v;
         }
+        if let Some(v) = num(&j, "num_replicas") {
+            cfg.num_replicas = v as usize;
+        }
+        if let Some(v) = j.get("route_policy").and_then(Json::as_str) {
+            cfg.route_policy = RoutePolicy::parse(v)?;
+        }
+        if let Some(Json::Bool(b)) = j.get("rolling_update") {
+            cfg.rolling_update = *b;
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -244,6 +263,7 @@ impl RollConfig {
         anyhow::ensure!(self.rollout_batch_size > 0, "rollout_batch_size must be positive");
         anyhow::ensure!(self.num_return_sequences_in_group > 0, "group size must be positive");
         anyhow::ensure!(self.async_generation_ratio >= 0.0, "async ratio must be >= 0");
+        anyhow::ensure!(self.num_replicas > 0, "num_replicas must be positive");
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
         Ok(())
     }
@@ -310,6 +330,28 @@ train_env_manager:
         assert_eq!(cfg.actor_infer.device_mapping.len(), 24);
         assert_eq!(cfg.actor_infer.max_new_tokens, 30720);
         assert!((cfg.actor_train.learning_rate - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn parses_fleet_keys() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+num_replicas: 4
+route_policy: queue
+rolling_update: false
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.num_replicas, 4);
+        assert_eq!(cfg.route_policy, RoutePolicy::QueueSched);
+        assert!(!cfg.rolling_update);
+        // defaults: single replica, least-outstanding, rolling sync
+        let d = RollConfig::default();
+        assert_eq!(d.num_replicas, 1);
+        assert_eq!(d.route_policy, RoutePolicy::LeastOutstanding);
+        assert!(d.rolling_update);
+        assert!(RollConfig::from_yaml("num_replicas: 0").is_err());
+        assert!(RollConfig::from_yaml("route_policy: bogus").is_err());
     }
 
     #[test]

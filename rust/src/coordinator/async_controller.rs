@@ -3,10 +3,13 @@
 //! Each iteration issues a blocking `get_batch` to the SampleBuffer,
 //! runs `train_step` minibatches on the retrieved data, then performs
 //! the three-phase weight synchronization: suspend -> model_update
-//! (fetch + broadcast latest weights to the LLMProxy) -> resume. In
-//! asynchronous mode the rollout stage keeps collecting in parallel;
-//! switching to synchronous mode is exactly the paper's recipe —
-//! "invoking suspend immediately after get_batch".
+//! (fetch + broadcast latest weights to the inference fleet) -> resume.
+//! With `rolling_update` the broadcast staggers across replicas (the
+//! pool's sync agent pauses at most one at a time, so the rollout
+//! stage never fully stalls). In asynchronous mode the rollout stage
+//! keeps collecting in parallel; switching to synchronous mode is
+//! exactly the paper's recipe — "invoking suspend immediately after
+//! get_batch".
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,7 +17,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::PgVariant;
-use crate::coordinator::llm_proxy::LlmProxy;
+use crate::coordinator::fleet::LlmProxyPool;
 use crate::coordinator::sample_buffer::SampleBuffer;
 use crate::rl;
 use crate::runtime::{ModelRuntime, TrainState};
@@ -53,7 +56,7 @@ pub struct StepLog {
 pub fn run_training(
     rt: &ModelRuntime,
     st: &mut TrainState,
-    proxy: &Arc<LlmProxy>,
+    proxy: &Arc<LlmProxyPool>,
     buffer: &Arc<SampleBuffer>,
     cfg: &ControllerCfg,
 ) -> Result<Vec<StepLog>> {
@@ -104,8 +107,9 @@ pub fn run_training(
         }
 
         // three-phase weight sync: suspend -> model_update -> resume.
-        // (UpdateWeights is atomic w.r.t. decode steps in the proxy
-        // loop, realizing suspend+broadcast+resume in one command.)
+        // (UpdateWeights is atomic w.r.t. decode steps in each replica
+        // loop; with rolling_update the pool staggers the broadcast so
+        // at most one replica pauses at a time.)
         let version = buffer.bump_version();
         proxy.update_weights(rt.snapshot(st)?, version);
         if cfg.sync_mode {

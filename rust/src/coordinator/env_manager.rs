@@ -1,22 +1,34 @@
 //! EnvManager (paper Section 4.2): the basic execution worker. Each
 //! manager owns one BaseEnv, acquires an admission ticket from the
 //! SampleBuffer (the per-sample freshness bound), then runs the
-//! reset/step loop against the shared LLMProxy: receive an action,
-//! apply it via `step`, repeat until termination, trigger reward, and
-//! enqueue the trajectory.
+//! reset/step loop against the shared inference fleet: receive an
+//! action, apply it via `step`, repeat until termination, trigger
+//! reward, and enqueue the trajectory.
 //!
 //! Environment-level asynchronous rollout (Section 5.2.1) falls out of
 //! the architecture: while one manager waits on its environment, the
-//! proxy's decode slots serve other managers' requests.
+//! fleet's decode slots serve other managers' requests.
+//!
+//! Fail-slow inference replicas are handled here too: a generation
+//! that exceeds `hang_timeout` wall seconds is abort-and-resubmit
+//! migrated to another replica (the reply channel is preserved, so the
+//! manager just keeps waiting); after `MAX_GEN_MIGRATIONS` strikes the
+//! episode is abandoned and its admission ticket reclaimed.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use crate::coordinator::llm_proxy::LlmProxy;
+use crate::coordinator::fleet::LlmProxyPool;
+use crate::coordinator::llm_proxy::GenResult;
 use crate::coordinator::sample_buffer::SampleBuffer;
 use crate::env::BaseEnv;
 use crate::rl::Trajectory;
+
+/// Give up on an episode after this many generation-hang migrations.
+const MAX_GEN_MIGRATIONS: u32 = 3;
 
 /// Shared episode numbering: members of a group must roll the same
 /// task (GRPO needs multiple candidates per prompt), so the task seed
@@ -67,7 +79,7 @@ pub fn spawn_env_manager<E: BaseEnv + 'static>(
     mut env: E,
     cfg: EnvManagerCfg,
     tasks: Arc<GroupTasks>,
-    proxy: Arc<LlmProxy>,
+    proxy: Arc<LlmProxyPool>,
     buffer: Arc<SampleBuffer>,
     stop: Arc<AtomicBool>,
 ) -> JoinHandle<usize> {
@@ -101,7 +113,7 @@ fn run_episode<E: BaseEnv>(
     env: &mut E,
     cfg: &EnvManagerCfg,
     tasks: &GroupTasks,
-    proxy: &LlmProxy,
+    proxy: &LlmProxyPool,
     init_version: u64,
 ) -> Option<Trajectory> {
     let (group_key, task_seed) = tasks.next(cfg.group, cfg.member);
@@ -113,8 +125,8 @@ fn run_episode<E: BaseEnv>(
     let mut reward = 0.0f32;
 
     for _turn in 0..env.max_steps() {
-        let (_id, rx) = proxy.generate(context.clone(), env.max_new_tokens());
-        let result = rx.recv().ok()?; // proxy shut down => abandon
+        let (id, rx) = proxy.generate(context.clone(), env.max_new_tokens());
+        let result = recv_with_migration(proxy, id, &rx, cfg.hang_timeout)?;
         // action tokens are trainable
         for (t, lp) in result.tokens.iter().zip(&result.logps) {
             response.push(*t);
@@ -153,6 +165,50 @@ fn run_episode<E: BaseEnv>(
         group: group_key,
         init_version,
     })
+}
+
+/// Wait for a generation, migrating it off its replica each time
+/// `hang_timeout` wall seconds elapse without a result. Returns None
+/// when the fleet shut down or the request kept hanging after
+/// `MAX_GEN_MIGRATIONS` strikes (the episode is abandoned; the caller
+/// reclaims the admission ticket).
+fn recv_with_migration(
+    proxy: &LlmProxyPool,
+    id: u64,
+    rx: &std::sync::mpsc::Receiver<GenResult>,
+    hang_timeout: f64,
+) -> Option<GenResult> {
+    if !(hang_timeout.is_finite() && hang_timeout > 0.0) {
+        return rx.recv().ok(); // fleet shut down => abandon
+    }
+    let timeout = Duration::from_secs_f64(hang_timeout);
+    let mut strikes = 0u32;
+    loop {
+        match rx.recv_timeout(timeout) {
+            Ok(r) => return Some(r),
+            Err(RecvTimeoutError::Disconnected) => return None,
+            Err(RecvTimeoutError::Timeout) => {
+                strikes += 1;
+                if strikes > MAX_GEN_MIGRATIONS {
+                    proxy.abort(id);
+                    return None;
+                }
+                // migrate() is false when there is nowhere to move the
+                // request (single replica, all peers suspended) or it
+                // raced a completion: grant one grace window for the
+                // racing result, then abandon.
+                if !proxy.migrate(id) {
+                    match rx.recv_timeout(timeout) {
+                        Ok(r) => return Some(r),
+                        Err(_) => {
+                            proxy.abort(id);
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,738 @@
+//! Inference fleet (the paper's LLMProxy generalized to a *pool* of
+//! replicas): N `LlmProxy` engines behind one `generate` interface.
+//!
+//! The single-proxy coordinator cannot reproduce the Figure 1b scaling
+//! story — rollout throughput is capped by one decode loop. The pool
+//! adds the two load-bearing mechanisms of replica-level serving:
+//!
+//!   1. *Load-balanced placement*: each request is routed by a
+//!      pluggable [`RoutePolicy`] (round-robin, least-outstanding, or
+//!      queue scheduling with pool-side backpressure — see
+//!      `routing.rs`). A per-replica completion collector feeds
+//!      finished generations back to the caller and re-dispatches
+//!      pool-queued work as decode slots free up.
+//!   2. *Staggered (rolling) weight sync*: `update_weights` walks the
+//!      replicas one at a time, waiting for each to acknowledge the
+//!      swap before moving on, so at most one replica is paused while
+//!      the other N-1 keep decoding. Per-replica policy versions flow
+//!      into `GenResult::version`; the SampleBuffer's admission-ticket
+//!      freshness bound (gap <= alpha) is unaffected because tickets
+//!      are issued against the buffer's version, not a replica's.
+//!      While the pool is suspended (synchronous mode) the swap is
+//!      instead broadcast inline so it stays ordered before the
+//!      controller's `resume` on every replica's command channel —
+//!      sync mode remains strictly on-policy.
+//!
+//! Fail-slow replicas are handled by abort-and-resubmit *migration*:
+//! when a caller times out waiting on a generation (`hang_timeout`),
+//! [`LlmProxyPool::migrate`] aborts the request on its current replica
+//! and resubmits the same prompt elsewhere, keeping the original reply
+//! channel so the caller just keeps waiting. Fail-*stop* replicas
+//! (event loop gone) are detected at submit time: the request fails
+//! over to a surviving replica, and when none survive it is dropped so
+//! the caller observes disconnection instead of hanging forever.
+//!
+//! Per-replica queue-depth and utilization are recorded into
+//! [`metrics::Histogram`]s and returned in the [`PoolReport`].
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::llm_proxy::{GenResult, LlmProxy, ProxyClient, ProxyReport};
+use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
+use crate::metrics::{Histogram, Table};
+
+/// Fleet shape and behavior knobs (`num_replicas`, `route_policy`,
+/// `rolling_update` in YAML / CLI).
+#[derive(Clone, Debug)]
+pub struct PoolCfg {
+    pub num_replicas: usize,
+    pub route_policy: RoutePolicy,
+    /// staggered weight sync: replicas swap one at a time (>= N-1 keep
+    /// decoding); false = broadcast to all replicas at once
+    pub rolling_update: bool,
+    /// decode slots per replica (the manifest's `decode_batch`) —
+    /// the admission cap the queue-scheduling policy routes against
+    pub replica_slots: usize,
+}
+
+impl PoolCfg {
+    pub fn single(replica_slots: usize) -> Self {
+        PoolCfg {
+            num_replicas: 1,
+            route_policy: RoutePolicy::default(),
+            rolling_update: true,
+            replica_slots,
+        }
+    }
+}
+
+/// A request held pool-side (queue scheduling backpressure, or every
+/// replica suspended).
+struct Pending {
+    pool_id: u64,
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    reply: Sender<GenResult>,
+}
+
+/// A request dispatched to a replica. Prompt is retained so migration
+/// can resubmit it elsewhere with the same reply channel.
+struct InFlight {
+    replica: usize,
+    inner_id: u64,
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    reply: Sender<GenResult>,
+    migrations: u32,
+}
+
+struct PoolState {
+    router: Router,
+    /// pool-side FIFO of requests awaiting a routable replica
+    queue: VecDeque<Pending>,
+    /// pool request id -> live request
+    inflight: HashMap<u64, InFlight>,
+    /// per replica: inner (proxy) id -> pool id. A completion whose
+    /// inner id is absent here was migrated or aborted — dropped.
+    by_inner: Vec<HashMap<u64, u64>>,
+    outstanding: Vec<usize>,
+    /// pool-wide suspend (sync mode): requests pool-queue until resume
+    pool_suspended: bool,
+    /// replica currently applying a rolling weight swap, if any
+    syncing: Option<usize>,
+    /// replicas whose event loop exited (submit failed); never routed
+    /// to again
+    dead: Vec<bool>,
+    routed: Vec<u64>,
+    migrated: u64,
+    /// rolling-broadcast waves completed by the sync agent
+    sync_waves: u64,
+    /// decode slots per replica (routing admission cap)
+    slots: usize,
+    /// per-replica outstanding at dispatch time
+    depth: Vec<Histogram>,
+    /// per-replica occupancy fraction (outstanding/slots) at dispatch
+    util: Vec<Histogram>,
+    /// pool-queue length at submit (queue-scheduling backpressure)
+    queue_depth: Histogram,
+    /// master clones of the per-replica collector channels; taken at
+    /// shutdown so the collectors can observe disconnection
+    completion_tx: Vec<Option<Sender<GenResult>>>,
+}
+
+impl PoolState {
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        (0..self.outstanding.len())
+            .map(|r| ReplicaLoad {
+                outstanding: self.outstanding[r],
+                slots: self.slots,
+                suspended: self.pool_suspended || self.dead[r] || self.syncing == Some(r),
+            })
+            .collect()
+    }
+
+    fn all_dead(&self) -> bool {
+        self.dead.iter().all(|&d| d)
+    }
+}
+
+/// State shared between callers, collectors, and the sync agent.
+struct Shared {
+    clients: Vec<ProxyClient>,
+    state: Mutex<PoolState>,
+}
+
+impl Shared {
+    /// Dispatch a request to replica `r`; caller holds the state lock.
+    /// A submit failure means the replica's event loop is gone — the
+    /// replica is marked dead and the request fails over: re-routed if
+    /// a replica is available now, re-queued while any survive, and
+    /// dropped (disconnecting the caller's reply channel) once the
+    /// whole fleet is dead.
+    fn dispatch(&self, st: &mut PoolState, r: usize, req: Pending, migrations: u32) {
+        let mut r = r;
+        loop {
+            let tx = st.completion_tx[r].as_ref().expect("collector channel live").clone();
+            match self.clients[r].try_submit(req.prompt.clone(), req.max_new_tokens, tx) {
+                Some(inner_id) => {
+                    st.depth[r].record(st.outstanding[r] as f64);
+                    st.by_inner[r].insert(inner_id, req.pool_id);
+                    st.outstanding[r] += 1;
+                    st.routed[r] += 1;
+                    st.util[r].record(st.outstanding[r].min(st.slots) as f64 / st.slots as f64);
+                    st.inflight.insert(
+                        req.pool_id,
+                        InFlight {
+                            replica: r,
+                            inner_id,
+                            prompt: req.prompt,
+                            max_new_tokens: req.max_new_tokens,
+                            reply: req.reply,
+                            migrations,
+                        },
+                    );
+                    return;
+                }
+                None => {
+                    st.dead[r] = true;
+                    let loads = st.loads();
+                    match st.router.route_excluding(&loads, Some(r)) {
+                        Some(next) => r = next,
+                        None if st.all_dead() => return, // drop: caller disconnects
+                        None => {
+                            st.queue.push_back(req);
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Move pool-queued requests onto replicas while the router allows.
+    fn drain(&self, st: &mut PoolState) {
+        if st.all_dead() {
+            st.queue.clear(); // drop: callers observe disconnection
+            return;
+        }
+        while !st.queue.is_empty() {
+            let loads = st.loads();
+            let Some(r) = st.router.route(&loads) else { break };
+            let p = st.queue.pop_front().unwrap();
+            self.dispatch(st, r, p, 0);
+        }
+    }
+}
+
+/// Per-replica completion collector: decrements load accounting,
+/// forwards the result to the original caller (rewriting the id to the
+/// pool id), and re-dispatches pool-queued work into the freed slot.
+fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
+    while let Ok(res) = rx.recv() {
+        let entry = {
+            let mut st = shared.state.lock().unwrap();
+            let Some(pool_id) = st.by_inner[r].remove(&res.id) else {
+                continue; // migrated or aborted after finishing: stale
+            };
+            st.outstanding[r] = st.outstanding[r].saturating_sub(1);
+            let entry = st.inflight.remove(&pool_id);
+            shared.drain(&mut st);
+            entry.map(|e| (pool_id, e.reply))
+        };
+        if let Some((pool_id, reply)) = entry {
+            let _ = reply.send(GenResult {
+                id: pool_id,
+                tokens: res.tokens,
+                logps: res.logps,
+                version: res.version,
+            });
+        }
+    }
+}
+
+/// Rolling weight-sync agent: serializes broadcast waves so that even
+/// with back-to-back training steps at most one replica is suspended at
+/// any moment. Each replica swap is acknowledged before the next
+/// begins; a dead replica's ack channel disconnects, which counts as
+/// done (fail-stop replicas must not wedge training).
+fn sync_agent(shared: Arc<Shared>, rx: Receiver<(Vec<f32>, u64)>) {
+    while let Ok((weights, version)) = rx.recv() {
+        for r in 0..shared.clients.len() {
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.syncing = Some(r);
+            }
+            let ack = shared.clients[r].update_weights_synced(weights.clone(), version);
+            let _ = ack.recv();
+            let mut st = shared.state.lock().unwrap();
+            st.syncing = None;
+            shared.drain(&mut st);
+        }
+        shared.state.lock().unwrap().sync_waves += 1;
+    }
+}
+
+/// Final statistics for one replica.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaReport {
+    pub proxy: ProxyReport,
+    /// requests routed here (including migrations in)
+    pub routed: u64,
+    /// mean decode-slot occupancy over the replica's lifetime
+    pub utilization: f64,
+    /// outstanding-at-dispatch histogram
+    pub queue_depth: Histogram,
+    /// occupancy-fraction-at-dispatch histogram
+    pub util_hist: Histogram,
+}
+
+/// Final fleet statistics (per replica + pool-level).
+#[derive(Clone, Debug, Default)]
+pub struct PoolReport {
+    pub replicas: Vec<ReplicaReport>,
+    pub migrated: u64,
+    pub sync_waves: u64,
+    /// pool-queue depth at submit time
+    pub pool_queue_depth: Histogram,
+}
+
+impl PoolReport {
+    /// Sum of the per-replica loop reports (single-proxy-compatible
+    /// aggregate view).
+    pub fn aggregate(&self) -> ProxyReport {
+        let mut agg = ProxyReport::default();
+        for r in &self.replicas {
+            agg.decode_steps += r.proxy.decode_steps;
+            agg.tokens_generated += r.proxy.tokens_generated;
+            agg.completed += r.proxy.completed;
+            agg.aborted += r.proxy.aborted;
+            agg.occupancy_sum += r.proxy.occupancy_sum;
+        }
+        agg
+    }
+
+    /// Markdown table of per-replica utilization and queue depth — the
+    /// fleet section of bench/example reports.
+    pub fn format_table(&self) -> String {
+        let mut t = Table::new(&[
+            "replica", "routed", "completed", "aborted", "tokens", "util", "depth mean", "depth p99",
+        ]);
+        for (i, r) in self.replicas.iter().enumerate() {
+            t.row(&[
+                i.to_string(),
+                r.routed.to_string(),
+                r.proxy.completed.to_string(),
+                r.proxy.aborted.to_string(),
+                r.proxy.tokens_generated.to_string(),
+                format!("{:.2}", r.utilization),
+                format!("{:.1}", r.queue_depth.mean()),
+                format!("{:.1}", r.queue_depth.percentile(99.0)),
+            ]);
+        }
+        t.to_markdown()
+    }
+}
+
+/// Client handle to a fleet of `LlmProxy` replicas. Mirrors the
+/// single-proxy surface (`generate`/`abort`/`update_weights`/
+/// `suspend`/`resume`/`shutdown`) so the EnvManager and the
+/// AsyncController are replica-count-agnostic.
+pub struct LlmProxyPool {
+    shared: Arc<Shared>,
+    replicas: Vec<LlmProxy>,
+    collectors: Vec<JoinHandle<()>>,
+    sync_tx: Option<Sender<(Vec<f32>, u64)>>,
+    sync_join: Option<JoinHandle<()>>,
+    next_pool_id: AtomicU64,
+    slots: usize,
+}
+
+impl LlmProxyPool {
+    /// Spawn `num_replicas` proxy event loops plus one completion
+    /// collector per replica (and, when rolling updates are on, the
+    /// weight-sync agent). Each replica gets a decorrelated sampling
+    /// seed; replica 0 matches the single-proxy stream exactly.
+    pub fn spawn(
+        cfg: &PoolCfg,
+        artifacts_dir: PathBuf,
+        init_weights: Vec<f32>,
+        eos: i32,
+        seed: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(cfg.num_replicas > 0, "num_replicas must be > 0");
+        anyhow::ensure!(cfg.replica_slots > 0, "replica_slots must be > 0");
+        let replicas = (0..cfg.num_replicas)
+            .map(|r| {
+                let rseed = seed ^ (r as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                LlmProxy::spawn(artifacts_dir.clone(), init_weights.clone(), eos, rseed)
+            })
+            .collect();
+        Ok(Self::assemble(cfg, replicas))
+    }
+
+    /// Wire collectors, shared state, and the sync agent around an
+    /// already-spawned replica set.
+    fn assemble(cfg: &PoolCfg, replicas: Vec<LlmProxy>) -> Self {
+        let n = replicas.len();
+        let clients: Vec<ProxyClient> = replicas.iter().map(|p| p.client()).collect();
+        let mut completion_tx = Vec::with_capacity(n);
+        let mut completion_rx = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            completion_tx.push(Some(tx));
+            completion_rx.push(rx);
+        }
+        let state = PoolState {
+            router: Router::new(cfg.route_policy),
+            queue: VecDeque::new(),
+            inflight: HashMap::new(),
+            by_inner: vec![HashMap::new(); n],
+            outstanding: vec![0; n],
+            pool_suspended: false,
+            syncing: None,
+            dead: vec![false; n],
+            routed: vec![0; n],
+            migrated: 0,
+            sync_waves: 0,
+            slots: cfg.replica_slots,
+            depth: vec![Histogram::new(1.0, 1.25); n],
+            util: vec![Histogram::new(0.01, 1.25); n],
+            queue_depth: Histogram::new(1.0, 1.25),
+            completion_tx,
+        };
+        let shared = Arc::new(Shared { clients, state: Mutex::new(state) });
+        let mut collectors = Vec::with_capacity(n);
+        for (r, rx) in completion_rx.into_iter().enumerate() {
+            let sh = shared.clone();
+            collectors.push(
+                std::thread::Builder::new()
+                    .name(format!("fleet-collect-{r}"))
+                    .spawn(move || collector_loop(sh, r, rx))
+                    .expect("spawn fleet collector"),
+            );
+        }
+        let (sync_tx, sync_join) = if cfg.rolling_update && n > 1 {
+            let (tx, rx) = channel();
+            let sh = shared.clone();
+            let h = std::thread::Builder::new()
+                .name("fleet-sync".into())
+                .spawn(move || sync_agent(sh, rx))
+                .expect("spawn fleet sync agent");
+            (Some(tx), Some(h))
+        } else {
+            (None, None)
+        };
+        LlmProxyPool {
+            shared,
+            replicas,
+            collectors,
+            sync_tx,
+            sync_join,
+            next_pool_id: AtomicU64::new(1),
+            slots: cfg.replica_slots,
+        }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.shared.clients.len()
+    }
+
+    /// ADD: route (or pool-queue) a generation request; returns
+    /// (pool id, reply receiver) — same shape as `LlmProxy::generate`.
+    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
+        let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        let req = Pending { pool_id, prompt, max_new_tokens, reply };
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue_depth.record(st.queue.len() as f64);
+        let loads = st.loads();
+        match st.router.route(&loads) {
+            Some(r) => self.shared.dispatch(&mut st, r, req, 0),
+            // drop when the whole fleet is dead (caller disconnects)
+            None if st.all_dead() => {}
+            None => st.queue.push_back(req),
+        }
+        (pool_id, rx)
+    }
+
+    /// ABORT by pool id: reclaims the request whether it is pool-queued
+    /// or on a replica. No-op for finished/unknown ids.
+    pub fn abort(&self, pool_id: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.retain(|p| p.pool_id != pool_id);
+        if let Some(e) = st.inflight.remove(&pool_id) {
+            st.by_inner[e.replica].remove(&e.inner_id);
+            st.outstanding[e.replica] = st.outstanding[e.replica].saturating_sub(1);
+            self.shared.clients[e.replica].abort(e.inner_id);
+            self.shared.drain(&mut st);
+        }
+    }
+
+    /// Abort-and-resubmit migration: move a (presumed hung) request off
+    /// its current replica onto another one, keeping the original reply
+    /// channel. Returns false when there is nowhere to move it (single
+    /// replica, all others suspended) or the request already finished —
+    /// callers should then keep waiting or give the episode up.
+    pub fn migrate(&self, pool_id: u64) -> bool {
+        let mut st = self.shared.state.lock().unwrap();
+        let n = self.shared.clients.len();
+        if n < 2 {
+            return false;
+        }
+        let (old, inner_old) = match st.inflight.get(&pool_id) {
+            Some(e) => (e.replica, e.inner_id),
+            None => return false,
+        };
+        let loads = st.loads();
+        // the policy's pick first; a saturated fleet still migrates to
+        // the least-outstanding survivor (being stuck behind a hung
+        // replica is strictly worse than a deep healthy queue)
+        let target = st.router.route_excluding(&loads, Some(old)).or_else(|| {
+            (0..n)
+                .filter(|&i| i != old && !loads[i].suspended)
+                .min_by_key(|&i| loads[i].outstanding)
+        });
+        let Some(new_r) = target else { return false };
+        // reclaim on the old replica (no-op there if already finished;
+        // a racing completion is dropped by the collector because the
+        // inner id is unregistered here)
+        st.by_inner[old].remove(&inner_old);
+        st.outstanding[old] = st.outstanding[old].saturating_sub(1);
+        self.shared.clients[old].abort(inner_old);
+        let e = st.inflight.remove(&pool_id).unwrap();
+        let migrations = e.migrations + 1;
+        let req = Pending {
+            pool_id,
+            prompt: e.prompt,
+            max_new_tokens: e.max_new_tokens,
+            reply: e.reply,
+        };
+        self.shared.dispatch(&mut st, new_r, req, migrations);
+        st.migrated += 1;
+        true
+    }
+
+    /// Suspend every replica (synchronous mode: rollout pauses during
+    /// training). New requests pool-queue until `resume`.
+    pub fn suspend(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.pool_suspended = true;
+        for c in &self.shared.clients {
+            c.suspend();
+        }
+    }
+
+    pub fn resume(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.pool_suspended = false;
+        for c in &self.shared.clients {
+            c.resume();
+        }
+        self.shared.drain(&mut st);
+    }
+
+    /// model_update across the fleet. Rolling mode hands the payload to
+    /// the sync agent (staggered, >= N-1 replicas keep decoding, waves
+    /// from consecutive training steps serialize). While the pool is
+    /// suspended (sync mode) — or when rolling is off — broadcast
+    /// inline instead: on each replica's command channel the swap then
+    /// precedes the controller's Resume, which is exactly the
+    /// single-proxy on-policy ordering.
+    pub fn update_weights(&self, weights: Vec<f32>, version: u64) {
+        let suspended = self.shared.state.lock().unwrap().pool_suspended;
+        if !suspended {
+            if let Some(tx) = &self.sync_tx {
+                let _ = tx.send((weights, version));
+                return;
+            }
+        }
+        for c in &self.shared.clients {
+            c.update_weights(weights.clone(), version);
+        }
+    }
+
+    /// Diagnostics: in-flight requests per replica.
+    pub fn outstanding_per_replica(&self) -> Vec<usize> {
+        self.shared.state.lock().unwrap().outstanding.clone()
+    }
+
+    /// Diagnostics: requests currently held pool-side.
+    pub fn pool_queue_len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Stop every replica and collector; gather the fleet report.
+    pub fn shutdown(mut self) -> Result<PoolReport> {
+        // 1. finish any queued rolling-sync waves
+        self.sync_tx.take();
+        if let Some(h) = self.sync_join.take() {
+            let _ = h.join();
+        }
+        // 2. drop master collector senders and abandon queued requests
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for tx in st.completion_tx.iter_mut() {
+                tx.take();
+            }
+            st.queue.clear();
+        }
+        // 3. join replica loops (drops their in-flight reply clones,
+        //    letting the collectors observe disconnection)
+        let mut proxy_reports = Vec::new();
+        for p in self.replicas.drain(..) {
+            proxy_reports.push(p.shutdown()?);
+        }
+        for h in self.collectors.drain(..) {
+            let _ = h.join();
+        }
+        let st = self.shared.state.lock().unwrap();
+        let replicas = proxy_reports
+            .into_iter()
+            .enumerate()
+            .map(|(r, proxy)| ReplicaReport {
+                utilization: proxy.mean_occupancy(self.slots),
+                proxy,
+                routed: st.routed[r],
+                queue_depth: st.depth[r].clone(),
+                util_hist: st.util[r].clone(),
+            })
+            .collect();
+        Ok(PoolReport {
+            replicas,
+            migrated: st.migrated,
+            sync_waves: st.sync_waves,
+            pool_queue_depth: st.queue_depth.clone(),
+        })
+    }
+}
+
+impl Drop for LlmProxyPool {
+    fn drop(&mut self) {
+        // best-effort teardown for error paths: release the collector
+        // channels so their threads exit; LlmProxy's own Drop joins the
+        // proxy loops. After a clean shutdown() everything is empty.
+        self.sync_tx.take();
+        if let Some(h) = self.sync_join.take() {
+            let _ = h.join();
+        }
+        if let Ok(mut st) = self.shared.state.lock() {
+            for tx in st.completion_tx.iter_mut() {
+                tx.take();
+            }
+            st.queue.clear();
+        }
+        self.replicas.clear();
+        for h in self.collectors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The pool's routing/bookkeeping is exercised WITHOUT artifacts
+    // against stub replicas (live event loops that accept commands but
+    // never decode — `LlmProxy::spawn_stub`). End-to-end generation
+    // runs live in rust/tests/integration.rs.
+    use super::*;
+
+    fn pool(n: usize, policy: RoutePolicy, slots: usize) -> LlmProxyPool {
+        let cfg = PoolCfg {
+            num_replicas: n,
+            route_policy: policy,
+            rolling_update: false,
+            replica_slots: slots,
+        };
+        LlmProxyPool::assemble(&cfg, (0..n).map(|_| LlmProxy::spawn_stub()).collect())
+    }
+
+    #[test]
+    fn rejects_zero_replicas() {
+        let cfg = PoolCfg { num_replicas: 0, ..PoolCfg::single(4) };
+        assert!(LlmProxyPool::spawn(&cfg, PathBuf::from("/x"), vec![], 2, 0).is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_requests() {
+        let p = pool(3, RoutePolicy::RoundRobin, 8);
+        for _ in 0..6 {
+            let _ = p.generate(vec![1, 2], 4);
+        }
+        assert_eq!(p.outstanding_per_replica(), vec![2, 2, 2]);
+        assert_eq!(p.pool_queue_len(), 0);
+    }
+
+    #[test]
+    fn least_outstanding_balances_after_abort() {
+        let p = pool(2, RoutePolicy::LeastOutstanding, 8);
+        let (id0, _rx0) = p.generate(vec![1], 4);
+        let (_id1, _rx1) = p.generate(vec![1], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        p.abort(id0);
+        assert_eq!(p.outstanding_per_replica(), vec![0, 1]);
+        // next request fills the freed replica
+        let (_id2, _rx2) = p.generate(vec![1], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        // aborting a finished/unknown id is a no-op
+        p.abort(9999);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+    }
+
+    #[test]
+    fn queue_sched_backpressures_pool_side() {
+        let p = pool(2, RoutePolicy::QueueSched, 1);
+        let (a_id, _rx_a) = p.generate(vec![1], 4);
+        let (_b_id, _rx_b) = p.generate(vec![1], 4);
+        let (_c_id, _rx_c) = p.generate(vec![1], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        assert_eq!(p.pool_queue_len(), 1);
+        // freeing a slot dispatches the queued request
+        p.abort(a_id);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        assert_eq!(p.pool_queue_len(), 0);
+    }
+
+    #[test]
+    fn migrate_moves_request_between_replicas() {
+        let p = pool(2, RoutePolicy::LeastOutstanding, 8);
+        let (id, _rx) = p.generate(vec![1, 2, 3], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
+        assert!(p.migrate(id));
+        assert_eq!(p.outstanding_per_replica(), vec![0, 1]);
+        // unknown request: nothing to migrate
+        assert!(!p.migrate(12345));
+    }
+
+    #[test]
+    fn single_replica_cannot_migrate() {
+        let p = pool(1, RoutePolicy::LeastOutstanding, 8);
+        let (id, _rx) = p.generate(vec![1], 4);
+        assert!(!p.migrate(id));
+        assert_eq!(p.outstanding_per_replica(), vec![1]);
+    }
+
+    #[test]
+    fn suspend_queues_resume_flushes() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        p.suspend();
+        let _g = p.generate(vec![1], 4);
+        assert_eq!(p.pool_queue_len(), 1);
+        assert_eq!(p.outstanding_per_replica(), vec![0, 0]);
+        p.resume();
+        assert_eq!(p.pool_queue_len(), 0);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
+    }
+
+    #[test]
+    fn dead_replica_fails_over() {
+        // replica 0 dies immediately (bogus artifacts); replica 1 is a
+        // live stub. Requests routed at the corpse must fail over.
+        let cfg = PoolCfg {
+            num_replicas: 2,
+            route_policy: RoutePolicy::RoundRobin,
+            rolling_update: false,
+            replica_slots: 8,
+        };
+        let dead = LlmProxy::spawn(PathBuf::from("/nonexistent-artifacts"), vec![], 2, 1);
+        let p = LlmProxyPool::assemble(&cfg, vec![dead, LlmProxy::spawn_stub()]);
+        // let the artifact-less replica's event loop exit
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (_a, rx_a) = p.generate(vec![1], 4); // RR -> replica 0 -> failover
+        let (_b, _rx_b) = p.generate(vec![1], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
+        assert!(
+            matches!(
+                rx_a.recv_timeout(std::time::Duration::from_millis(50)),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout)
+            ),
+            "failed-over request must stay pending on the live replica"
+        );
+    }
+}

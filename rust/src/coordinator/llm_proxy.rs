@@ -16,6 +16,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
@@ -47,16 +48,79 @@ pub struct GenResult {
 enum Cmd {
     Add(GenRequest),
     Abort(u64),
-    UpdateWeights { weights: Vec<f32>, version: u64 },
+    UpdateWeights { weights: Vec<f32>, version: u64, ack: Option<Sender<()>> },
     Suspend,
     Resume,
     Shutdown,
 }
 
+/// Cloneable command handle to a proxy thread. The fleet layer hands
+/// these to its per-replica completion collectors so they can dispatch
+/// pool-queued requests without owning the replica itself; `LlmProxy`
+/// (which additionally owns the join handle) delegates here.
+#[derive(Clone)]
+pub struct ProxyClient {
+    tx: Sender<Cmd>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ProxyClient {
+    /// ADD with a caller-supplied reply channel; returns the request id.
+    /// The pool points every request at its per-replica collector.
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize, reply: Sender<GenResult>) -> u64 {
+        self.try_submit(prompt, max_new_tokens, reply).unwrap_or(0)
+    }
+
+    /// ADD that reports delivery: `None` means the proxy thread is gone
+    /// (its event loop exited), so the request — and its reply sender —
+    /// were dropped. The fleet uses this to detect dead replicas and
+    /// fail requests over instead of stranding callers.
+    pub fn try_submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        reply: Sender<GenResult>,
+    ) -> Option<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Cmd::Add(GenRequest { id, prompt, max_new_tokens, reply })).ok().map(|_| id)
+    }
+
+    /// ABORT: interrupt a running/queued request (its reply channel
+    /// simply never fires; the work is reclaimed). Aborting an id that
+    /// already finished (or never existed) is a no-op.
+    pub fn abort(&self, id: u64) {
+        let _ = self.tx.send(Cmd::Abort(id));
+    }
+
+    /// model_update broadcast: swap weights and advance the version.
+    pub fn update_weights(&self, weights: Vec<f32>, version: u64) {
+        let _ = self.tx.send(Cmd::UpdateWeights { weights, version, ack: None });
+    }
+
+    /// model_update with completion acknowledgement: the returned
+    /// channel fires once the swap has been applied (between decode
+    /// steps). The staggered fleet broadcast waits on this before
+    /// moving to the next replica, so at most one replica is ever
+    /// paused at a time. If the proxy thread is gone the channel
+    /// disconnects instead — callers should treat both as "done".
+    pub fn update_weights_synced(&self, weights: Vec<f32>, version: u64) -> Receiver<()> {
+        let (ack, rx) = channel();
+        let _ = self.tx.send(Cmd::UpdateWeights { weights, version, ack: Some(ack) });
+        rx
+    }
+
+    pub fn suspend(&self) {
+        let _ = self.tx.send(Cmd::Suspend);
+    }
+
+    pub fn resume(&self) {
+        let _ = self.tx.send(Cmd::Resume);
+    }
+}
+
 /// Client handle to the proxy thread.
 pub struct LlmProxy {
-    tx: Sender<Cmd>,
-    next_id: AtomicU64,
+    client: ProxyClient,
     join: Option<JoinHandle<Result<ProxyReport>>>,
 }
 
@@ -96,39 +160,77 @@ impl LlmProxy {
             .name("llm-proxy".into())
             .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx))
             .expect("spawn llm-proxy");
-        LlmProxy { tx, next_id: AtomicU64::new(1), join: Some(join) }
+        LlmProxy { client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) }, join: Some(join) }
+    }
+
+    /// A cloneable command handle (no join handle; cannot shut down).
+    pub fn client(&self) -> ProxyClient {
+        self.client.clone()
+    }
+
+    /// Test-only replica with no engine: accepts commands, holds ADDed
+    /// requests without ever decoding them, acks weight swaps. Lets the
+    /// fleet's routing/bookkeeping be exercised without artifacts.
+    #[cfg(test)]
+    pub(crate) fn spawn_stub() -> Self {
+        let (tx, rx) = channel::<Cmd>();
+        let join = std::thread::Builder::new()
+            .name("llm-proxy-stub".into())
+            .spawn(move || {
+                let mut held: Vec<GenRequest> = Vec::new();
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Add(req) => held.push(req),
+                        Cmd::Abort(id) => held.retain(|r| r.id != id),
+                        Cmd::UpdateWeights { ack, .. } => {
+                            if let Some(ack) = ack {
+                                let _ = ack.send(());
+                            }
+                        }
+                        Cmd::Suspend | Cmd::Resume => {}
+                        Cmd::Shutdown => break,
+                    }
+                }
+                Ok(ProxyReport::default())
+            })
+            .expect("spawn llm-proxy stub");
+        LlmProxy { client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) }, join: Some(join) }
     }
 
     /// ADD: enqueue a generation request; returns (id, reply receiver).
     pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
-        let _ = self.tx.send(Cmd::Add(GenRequest { id, prompt, max_new_tokens, reply }));
+        let id = self.client.submit(prompt, max_new_tokens, reply);
         (id, rx)
     }
 
     /// ABORT: interrupt a running/queued request (its reply channel
     /// simply never fires; the work is reclaimed).
     pub fn abort(&self, id: u64) {
-        let _ = self.tx.send(Cmd::Abort(id));
+        self.client.abort(id);
     }
 
     /// model_update broadcast: swap weights and advance the version.
     pub fn update_weights(&self, weights: Vec<f32>, version: u64) {
-        let _ = self.tx.send(Cmd::UpdateWeights { weights, version });
+        self.client.update_weights(weights, version);
+    }
+
+    /// model_update with applied-acknowledgement (see [`ProxyClient`]).
+    pub fn update_weights_synced(&self, weights: Vec<f32>, version: u64) -> Receiver<()> {
+        self.client.update_weights_synced(weights, version)
     }
 
     pub fn suspend(&self) {
-        let _ = self.tx.send(Cmd::Suspend);
+        self.client.suspend();
     }
 
     pub fn resume(&self) {
-        let _ = self.tx.send(Cmd::Resume);
+        self.client.resume();
     }
 
     /// Stop the loop and collect its report.
     pub fn shutdown(mut self) -> Result<ProxyReport> {
-        let _ = self.tx.send(Cmd::Shutdown);
+        let _ = self.client.tx.send(Cmd::Shutdown);
         match self.join.take() {
             Some(h) => h.join().map_err(|_| anyhow::anyhow!("proxy thread panicked"))?,
             None => anyhow::bail!("already shut down"),
@@ -138,7 +240,7 @@ impl LlmProxy {
 
 impl Drop for LlmProxy {
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
+        let _ = self.client.tx.send(Cmd::Shutdown);
         if let Some(h) = self.join.take() {
             let _ = h.join();
         }
@@ -152,6 +254,27 @@ struct Slot {
     prompt_len: usize,
     tokens: Vec<i32>,
     logps: Vec<f32>,
+}
+
+/// ABORT shared by both command-handling sites: purge the queue AND
+/// any occupied decode slot (an abort landing while suspended must not
+/// leave the slot to decode on after resume).
+fn do_abort(
+    id: u64,
+    queue: &mut VecDeque<GenRequest>,
+    slots: &mut [Option<Slot>],
+    tokens_buf: &mut [i32],
+    s: usize,
+    report: &mut ProxyReport,
+) {
+    queue.retain(|r| r.id != id);
+    for (si, slot) in slots.iter_mut().enumerate() {
+        if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
+            *slot = None;
+            report.aborted += 1;
+            tokens_buf[si * s..(si + 1) * s].fill(0);
+        }
+    }
 }
 
 fn proxy_loop(
@@ -179,20 +302,16 @@ fn proxy_loop(
             match rx.try_recv() {
                 Ok(Cmd::Add(req)) => queue.push_back(req),
                 Ok(Cmd::Abort(id)) => {
-                    queue.retain(|r| r.id != id);
-                    for (si, slot) in slots.iter_mut().enumerate() {
-                        if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
-                            *slot = None;
-                            report.aborted += 1;
-                            tokens_buf[si * s..(si + 1) * s].fill(0);
-                        }
-                    }
+                    do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report)
                 }
-                Ok(Cmd::UpdateWeights { weights, version: ver }) => {
+                Ok(Cmd::UpdateWeights { weights, version: ver, ack }) => {
                     // suspend -> broadcast -> resume, atomically w.r.t.
                     // decode steps (we are between steps here)
                     params = rt.params_literal(&weights)?;
                     version = ver;
+                    if let Some(ack) = ack {
+                        let _ = ack.send(());
+                    }
                 }
                 Ok(Cmd::Suspend) => suspended = true,
                 Ok(Cmd::Resume) => suspended = false,
@@ -231,10 +350,15 @@ fn proxy_loop(
                     // re-inject into the drain above on the next pass
                     match cmd {
                         Cmd::Add(req) => queue.push_back(req),
-                        Cmd::Abort(id) => queue.retain(|r| r.id != id),
-                        Cmd::UpdateWeights { weights, version: ver } => {
+                        Cmd::Abort(id) => {
+                            do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report)
+                        }
+                        Cmd::UpdateWeights { weights, version: ver, ack } => {
                             params = rt.params_literal(&weights)?;
                             version = ver;
+                            if let Some(ack) = ack {
+                                let _ = ack.send(());
+                            }
                         }
                         Cmd::Suspend => suspended = true,
                         Cmd::Resume => suspended = false,

@@ -1,21 +1,36 @@
 //! The ROLL Flash coordinator (Layer 3) — the paper's system
-//! contribution, running the *real* PJRT engine: LLMProxy (step-wise
-//! inference event loop), EnvManager workers, the freshness-bounded
-//! SampleBuffer, and the AsyncController training loop (Figure 5).
+//! contribution, running the *real* PJRT engine: the inference fleet
+//! (an `LlmProxyPool` of step-wise-inference `LlmProxy` replicas behind
+//! load-balanced routing and staggered weight sync), EnvManager
+//! workers, the freshness-bounded SampleBuffer, and the
+//! AsyncController training loop (Figure 5).
+//!
+//! Fleet layer (`fleet.rs` + `routing.rs`): the paper's LLMProxy
+//! abstracts a *pool* of inference workers. `RolloutSystem` spawns
+//! `num_replicas` proxy event loops; every `GenRequest` is placed by a
+//! pluggable `RoutePolicy` (round-robin, least-outstanding, or queue
+//! scheduling with pool-side backpressure), `update_weights` rolls
+//! across replicas one at a time so at least N-1 keep decoding during
+//! a model update, and requests hung on a fail-slow replica are
+//! abort-and-resubmit migrated elsewhere (`hang_timeout`).
 //!
 //! The same policies (queue scheduling, prompt replication via
 //! independent per-sequence requests, redundant env rollout, async
-//! ratio) are mirrored in `sim/` for the virtual-time scale benches;
-//! here they execute against real decode/train steps.
+//! ratio, replica routing) are mirrored in `sim/` for the virtual-time
+//! scale benches; here they execute against real decode/train steps.
 
 pub mod async_controller;
 pub mod env_manager;
+pub mod fleet;
 pub mod llm_proxy;
+pub mod routing;
 pub mod sample_buffer;
 
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
 pub use env_manager::{spawn_env_manager, EnvManagerCfg, GroupTasks};
-pub use llm_proxy::{GenResult, LlmProxy, ProxyReport};
+pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
+pub use llm_proxy::{GenResult, LlmProxy, ProxyClient, ProxyReport};
+pub use routing::{ReplicaLoad, RoutePolicy, Router};
 pub use sample_buffer::{BufferStats, SampleBuffer};
 
 use std::path::PathBuf;
@@ -28,7 +43,8 @@ use anyhow::Result;
 use crate::env::BaseEnv;
 
 /// Rollout-fleet configuration (paper Appendix A schema): the env
-/// fleet may exceed the consumption quota (redundant env rollout).
+/// fleet may exceed the consumption quota (redundant env rollout), and
+/// the inference side is a pool of `num_replicas` proxy engines.
 #[derive(Clone, Debug)]
 pub struct RolloutSystemCfg {
     pub artifacts_dir: PathBuf,
@@ -44,29 +60,47 @@ pub struct RolloutSystemCfg {
     /// scale env latency into real sleeps (0 = logical time only)
     pub latency_scale: f64,
     pub hang_timeout: f64,
+    /// inference fleet: LlmProxy replicas behind the routing layer
+    pub num_replicas: usize,
+    pub route_policy: RoutePolicy,
+    /// staggered weight sync (>= N-1 replicas keep decoding); false =
+    /// broadcast to every replica at once
+    pub rolling_update: bool,
 }
 
 impl RolloutSystemCfg {
     pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_env_groups > 0, "num_env_groups must be > 0 (empty env fleet)");
+        anyhow::ensure!(self.env_group_size > 0, "env_group_size must be > 0 (empty env groups)");
+        anyhow::ensure!(self.consume_groups > 0, "consume_groups must be > 0 (empty quota)");
+        anyhow::ensure!(
+            self.consume_group_size > 0,
+            "consume_group_size must be > 0 (empty quota groups)"
+        );
         anyhow::ensure!(self.num_env_groups >= self.consume_groups, "fleet < quota groups");
         anyhow::ensure!(self.env_group_size >= self.consume_group_size, "group < quota size");
         anyhow::ensure!(self.alpha >= 0.0, "alpha must be >= 0");
+        anyhow::ensure!(self.num_replicas > 0, "num_replicas must be > 0 (empty inference fleet)");
         Ok(())
     }
 }
 
-/// A running rollout fleet: proxy + env managers + buffer.
+/// A running rollout fleet: inference pool + env managers + buffer.
 pub struct RolloutSystem {
-    pub proxy: Arc<LlmProxy>,
+    pub proxy: Arc<LlmProxyPool>,
     pub buffer: Arc<SampleBuffer>,
     stop: Arc<AtomicBool>,
     managers: Vec<JoinHandle<usize>>,
 }
 
-/// Final fleet statistics after shutdown.
-#[derive(Clone, Copy, Debug, Default)]
+/// Final fleet statistics after shutdown. `proxy` is the aggregate of
+/// the per-replica loop reports; `pool` carries the per-replica
+/// breakdown (routing counts, utilization/queue-depth histograms,
+/// migrations, rolling-sync waves).
+#[derive(Clone, Debug, Default)]
 pub struct FleetReport {
     pub proxy: ProxyReport,
+    pub pool: PoolReport,
     pub buffer: BufferStats,
     pub episodes: usize,
 }
@@ -82,12 +116,22 @@ impl RolloutSystem {
         cfg.validate()?;
         let batch = cfg.consume_groups * cfg.consume_group_size;
         let buffer = Arc::new(SampleBuffer::new(batch, cfg.consume_group_size, cfg.alpha));
-        let proxy = Arc::new(LlmProxy::spawn(
+        // the routing layer's admission cap is the engine's decode batch
+        let manifest =
+            crate::runtime::Manifest::load(&cfg.artifacts_dir.join("manifest.json"))?;
+        let pool_cfg = PoolCfg {
+            num_replicas: cfg.num_replicas,
+            route_policy: cfg.route_policy,
+            rolling_update: cfg.rolling_update,
+            replica_slots: manifest.decode_batch,
+        };
+        let proxy = Arc::new(LlmProxyPool::spawn(
+            &pool_cfg,
             cfg.artifacts_dir.clone(),
             init_weights,
             crate::env::vocab::EOS,
             cfg.seed,
-        ));
+        )?);
         let tasks = Arc::new(GroupTasks::new(cfg.num_env_groups, cfg.env_group_size, cfg.seed));
         let stop = Arc::new(AtomicBool::new(false));
         let mut managers = Vec::new();
@@ -121,10 +165,63 @@ impl RolloutSystem {
             episodes += h.join().map_err(|_| anyhow::anyhow!("env manager panicked"))?;
         }
         let buffer = self.buffer.stats();
-        let proxy = match Arc::try_unwrap(self.proxy) {
+        let pool = match Arc::try_unwrap(self.proxy) {
             Ok(p) => p.shutdown()?,
-            Err(_) => anyhow::bail!("proxy handle still shared at shutdown"),
+            Err(_) => anyhow::bail!("proxy pool handle still shared at shutdown"),
         };
-        Ok(FleetReport { proxy, buffer, episodes })
+        Ok(FleetReport { proxy: pool.aggregate(), pool, buffer, episodes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RolloutSystemCfg {
+        RolloutSystemCfg {
+            artifacts_dir: PathBuf::from("artifacts/tiny"),
+            num_env_groups: 4,
+            env_group_size: 4,
+            consume_groups: 2,
+            consume_group_size: 4,
+            alpha: 1.0,
+            seed: 1,
+            latency_scale: 0.0,
+            hang_timeout: f64::INFINITY,
+            num_replicas: 2,
+            route_policy: RoutePolicy::LeastOutstanding,
+            rolling_update: true,
+        }
+    }
+
+    #[test]
+    fn valid_cfg_passes() {
+        cfg().validate().unwrap();
+    }
+
+    #[test]
+    fn zero_sized_fleets_and_quotas_rejected() {
+        for mutate in [
+            (|c: &mut RolloutSystemCfg| c.num_env_groups = 0) as fn(&mut RolloutSystemCfg),
+            |c| c.env_group_size = 0,
+            |c| c.consume_groups = 0,
+            |c| c.consume_group_size = 0,
+            |c| c.num_replicas = 0,
+            |c| c.alpha = -1.0,
+        ] {
+            let mut c = cfg();
+            mutate(&mut c);
+            assert!(c.validate().is_err(), "{c:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fleet_smaller_than_quota_rejected() {
+        let mut c = cfg();
+        c.consume_groups = c.num_env_groups + 1;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.consume_group_size = c.env_group_size + 1;
+        assert!(c.validate().is_err());
     }
 }

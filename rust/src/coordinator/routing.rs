@@ -1,0 +1,206 @@
+//! Replica routing for the inference fleet (paper Section 4.2 at
+//! scale): where does the next `GenRequest` go?
+//!
+//! The pool fronts N `LlmProxy` replicas; a `Router` picks the target
+//! replica for each request from a load snapshot. Three policies:
+//!
+//!   * `RoundRobin` — cycle over replicas regardless of load (the
+//!     baseline most serving fabrics start from). Under the paper's
+//!     long-tail response lengths this stacks short requests behind
+//!     30k-token stragglers.
+//!   * `LeastOutstanding` — route to the replica with the fewest
+//!     in-flight requests. Outstanding count is a cheap proxy for
+//!     remaining work that adapts to stragglers over time.
+//!   * `QueueSched` — the queue-scheduling placement of Section 5.1.1,
+//!     reusing the least-loaded heuristic of `sim/queue.rs::pick_gpu`:
+//!     only replicas with a free decode slot are eligible; when every
+//!     replica is saturated the request is held in the *pool* queue and
+//!     dispatched on the next completion, instead of over-committing a
+//!     replica's continuous-batching window.
+//!
+//! Replicas that are suspended (mid weight-sync during a rolling
+//! update) are skipped by every policy, which is what lets the
+//! staggered broadcast keep N-1 replicas serving.
+
+use anyhow::{Context, Result};
+
+/// One replica's load, as seen by the router.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaLoad {
+    /// requests routed to the replica and not yet finished
+    /// (decoding + replica-side queue)
+    pub outstanding: usize,
+    /// decode slots (continuous-batching admission cap)
+    pub slots: usize,
+    /// replica is mid weight-sync (rolling update) — do not route here
+    pub suspended: bool,
+}
+
+/// Request-placement policy (`route_policy` in YAML / CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastOutstanding,
+    QueueSched,
+}
+
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastOutstanding => "least_outstanding",
+            RoutePolicy::QueueSched => "queue",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Self::ALL
+            .into_iter()
+            .find(|p| p.as_str() == s)
+            .with_context(|| format!("unknown route_policy {s:?} (round_robin|least_outstanding|queue)"))
+    }
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy::LeastOutstanding
+    }
+}
+
+/// Stateful router (the round-robin cursor is the only state). Shared
+/// by the real `LlmProxyPool` and the virtual-time `sim::fleet` mirror
+/// so both exercise identical placement decisions.
+#[derive(Clone, Debug)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Self {
+        Router { policy, rr_next: 0 }
+    }
+
+    /// Pick a replica for the next request. `None` means "hold the
+    /// request in the pool queue": every replica is suspended, or (for
+    /// `QueueSched`) every replica's decode window is full.
+    pub fn route(&mut self, loads: &[ReplicaLoad]) -> Option<usize> {
+        self.route_excluding(loads, None)
+    }
+
+    /// Like [`route`](Self::route) but never returns `exclude` — used
+    /// by abort-and-resubmit migration away from a hung replica.
+    pub fn route_excluding(&mut self, loads: &[ReplicaLoad], exclude: Option<usize>) -> Option<usize> {
+        let n = loads.len();
+        if n == 0 {
+            return None;
+        }
+        let eligible = |i: usize| !loads[i].suspended && Some(i) != exclude;
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                for k in 0..n {
+                    let i = (self.rr_next + k) % n;
+                    if eligible(i) {
+                        self.rr_next = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            RoutePolicy::LeastOutstanding => (0..n)
+                .filter(|&i| eligible(i))
+                .min_by_key(|&i| loads[i].outstanding),
+            RoutePolicy::QueueSched => (0..n)
+                .filter(|&i| eligible(i) && loads[i].outstanding < loads[i].slots)
+                .min_by_key(|&i| loads[i].outstanding),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(outstanding: &[usize], slots: usize) -> Vec<ReplicaLoad> {
+        outstanding
+            .iter()
+            .map(|&o| ReplicaLoad { outstanding: o, slots, suspended: false })
+            .collect()
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(RoutePolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_ignoring_load() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let l = loads(&[9, 0, 0], 4);
+        assert_eq!(r.route(&l), Some(0)); // load-blind
+        assert_eq!(r.route(&l), Some(1));
+        assert_eq!(r.route(&l), Some(2));
+        assert_eq!(r.route(&l), Some(0));
+    }
+
+    #[test]
+    fn round_robin_skips_suspended() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let mut l = loads(&[0, 0, 0], 4);
+        l[0].suspended = true;
+        assert_eq!(r.route(&l), Some(1));
+        assert_eq!(r.route(&l), Some(2));
+        assert_eq!(r.route(&l), Some(1));
+    }
+
+    #[test]
+    fn least_outstanding_picks_min_with_stable_ties() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        assert_eq!(r.route(&loads(&[3, 1, 2], 4)), Some(1));
+        // tie: lowest index wins (deterministic)
+        assert_eq!(r.route(&loads(&[2, 1, 1], 4)), Some(1));
+        // over-committed replicas are still eligible (replica queues)
+        assert_eq!(r.route(&loads(&[9, 8, 10], 4)), Some(1));
+    }
+
+    #[test]
+    fn queue_sched_requires_free_slot() {
+        let mut r = Router::new(RoutePolicy::QueueSched);
+        // replica 1 has the only free slot
+        assert_eq!(r.route(&loads(&[4, 3, 4], 4)), Some(1));
+        // pool saturated: hold in the pool queue
+        assert_eq!(r.route(&loads(&[4, 4, 4], 4)), None);
+    }
+
+    #[test]
+    fn all_suspended_holds_request() {
+        for p in RoutePolicy::ALL {
+            let mut r = Router::new(p);
+            let mut l = loads(&[0, 0], 4);
+            l[0].suspended = true;
+            l[1].suspended = true;
+            assert_eq!(r.route(&l), None, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn exclusion_for_migration() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        // replica 0 is least loaded but hung: exclusion forces 1
+        assert_eq!(r.route_excluding(&loads(&[0, 5, 7], 4), Some(0)), Some(1));
+        // single replica: nowhere to migrate
+        assert_eq!(r.route_excluding(&loads(&[0], 4), Some(0)), None);
+    }
+
+    #[test]
+    fn empty_fleet_routes_nowhere() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        assert_eq!(r.route(&[]), None);
+    }
+}

@@ -2,7 +2,8 @@
 //! cluster simulator, from a paper-style YAML config or CLI options.
 //!
 //!   roll-flash train  config=examples/rlvr.yaml steps=40
-//!   roll-flash train  model=tiny alpha=2 variant=tis steps=20
+//!   roll-flash train  model=tiny alpha=2 variant=tis steps=20 \
+//!                     num_replicas=3 route_policy=queue rolling_update=true
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -11,7 +12,9 @@ use std::path::PathBuf;
 use anyhow::Result;
 use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
-use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::coordinator::{
+    format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
+};
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
 use roll_flash::sim::rlvr::{run as run_sim, RlvrSimConfig, Scheduling};
@@ -27,6 +30,7 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: roll-flash <train|simulate|inspect> [key=value ...]\n\
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
+                 \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue> rolling_update=<bool>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -48,6 +52,12 @@ fn train(cli: &Cli) -> Result<()> {
     };
     let steps: usize = cli.parse_or("steps", 20);
     let lr: f32 = cli.parse_or("lr", cfg.actor_train.learning_rate as f32);
+    let num_replicas: usize = cli.parse_or("num_replicas", cfg.num_replicas);
+    let route_policy = match cli.get("route_policy") {
+        Some(s) => RoutePolicy::parse(s)?,
+        None => cfg.route_policy,
+    };
+    let rolling_update = cli.bool_or("rolling_update", cfg.rolling_update);
 
     let dir = PathBuf::from("artifacts").join(&model);
     anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` (missing {model})");
@@ -67,8 +77,15 @@ fn train(cli: &Cli) -> Result<()> {
         seed: cfg.seed,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas,
+        route_policy,
+        rolling_update,
     };
-    println!("train: model={model} alpha={alpha} variant={} steps={steps}", variant.as_str());
+    println!(
+        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update}",
+        variant.as_str(),
+        route_policy.as_str()
+    );
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg { variant, steps, lr, n_groups, group_size, sync_mode: alpha == 0.0 };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
@@ -77,6 +94,10 @@ fn train(cli: &Cli) -> Result<()> {
     }
     let report = system.shutdown()?;
     println!("max version gap {} (alpha {alpha})", report.buffer.max_version_gap);
+    if num_replicas > 1 {
+        println!("fleet: {} migrations, {} rolling waves", report.pool.migrated, report.pool.sync_waves);
+        print!("{}", report.pool.format_table());
+    }
     Ok(())
 }
 

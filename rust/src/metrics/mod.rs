@@ -58,7 +58,7 @@ impl Histogram {
         self.max
     }
 
-    /// Approximate percentile (bucet upper edge).
+    /// Approximate percentile (bucket upper edge).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.total == 0 {
             return 0.0;

@@ -7,5 +7,6 @@
 //! which drives the real PJRT engine.
 
 pub mod agentic;
+pub mod fleet;
 pub mod queue;
 pub mod rlvr;

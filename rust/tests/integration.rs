@@ -6,7 +6,8 @@ use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    run_training, ControllerCfg, LlmProxy, RolloutSystem, RolloutSystemCfg,
+    run_training, ControllerCfg, LlmProxy, LlmProxyPool, PoolCfg, RolloutSystem,
+    RolloutSystemCfg, RoutePolicy,
 };
 use roll_flash::env::alfworld::AlfworldEnv;
 use roll_flash::env::math::MathEnv;
@@ -77,6 +78,9 @@ fn fleet_collects_complete_groups() {
         seed: 3,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -113,6 +117,9 @@ fn sync_training_loop_runs_on_math_env() {
         seed: 5,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -155,6 +162,9 @@ fn async_training_overlaps_and_bounds_staleness() {
         seed: 11,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -193,6 +203,9 @@ fn multiturn_env_manager_interleaves_obs_and_actions() {
         seed: 9,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -234,6 +247,9 @@ fn redundant_groups_produce_surplus_without_blocking() {
         seed: 13,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -241,4 +257,174 @@ fn redundant_groups_produce_surplus_without_blocking() {
     let report = system.shutdown().unwrap();
     // the 5th member of each completed group is surplus
     assert!(report.buffer.surplus > 0 || report.buffer.produced >= 8);
+}
+
+// ---------------------------------------------------------------------------
+// LLMProxy command races (abort-after-finish, update-while-suspended,
+// version monotonicity) and the inference fleet layer.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn proxy_abort_of_finished_request_is_noop() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let proxy = LlmProxy::spawn(dir, weights, vocab::EOS, 21);
+
+    let (id, rx) = proxy.generate(MathEnv::prompt_for(3, 4), 4);
+    let res = rx.recv().expect("generation completes");
+    assert_eq!(res.id, id);
+    // the id is already retired: ABORT must neither panic nor count
+    proxy.abort(id);
+    // the loop is still healthy afterwards
+    let (_, rx2) = proxy.generate(MathEnv::prompt_for(5, 1), 4);
+    assert!(rx2.recv().is_ok());
+    let report = proxy.shutdown().unwrap();
+    assert_eq!(report.aborted, 0, "abort of a finished id must not be counted");
+    assert_eq!(report.completed, 2);
+}
+
+#[test]
+fn proxy_update_weights_while_suspended_applies() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let proxy = LlmProxy::spawn(dir, weights.clone(), vocab::EOS, 22);
+
+    proxy.suspend();
+    // the suspended loop must still process the swap (and ack it)
+    let ack = proxy.update_weights_synced(weights, 7);
+    assert!(
+        ack.recv_timeout(std::time::Duration::from_secs(10)).is_ok(),
+        "UpdateWeights must be applied while suspended"
+    );
+    let (_, rx) = proxy.generate(MathEnv::prompt_for(2, 3), 4);
+    // no decode while suspended
+    assert!(rx.recv_timeout(std::time::Duration::from_millis(200)).is_err());
+    proxy.resume();
+    let res = rx.recv().expect("resumes after suspend");
+    assert_eq!(res.version, 7, "post-resume samples carry the suspended-applied version");
+    proxy.shutdown().unwrap();
+}
+
+#[test]
+fn proxy_versions_monotonic_across_suspend_resume() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let proxy = LlmProxy::spawn(dir, weights.clone(), vocab::EOS, 23);
+
+    let mut versions = Vec::new();
+    let mut recv_version = |rx: std::sync::mpsc::Receiver<roll_flash::coordinator::GenResult>| {
+        versions.push(rx.recv().expect("generation completes").version);
+    };
+    recv_version(proxy.generate(MathEnv::prompt_for(1, 1), 4).1);
+    proxy.update_weights(weights.clone(), 1);
+    recv_version(proxy.generate(MathEnv::prompt_for(2, 2), 4).1);
+    proxy.suspend();
+    proxy.update_weights(weights.clone(), 2);
+    proxy.resume();
+    recv_version(proxy.generate(MathEnv::prompt_for(3, 3), 4).1);
+    proxy.suspend();
+    proxy.resume();
+    recv_version(proxy.generate(MathEnv::prompt_for(4, 4), 4).1);
+    proxy.update_weights(weights, 3);
+    recv_version(proxy.generate(MathEnv::prompt_for(5, 5), 4).1);
+    proxy.shutdown().unwrap();
+
+    assert_eq!(versions.len(), 5);
+    assert!(
+        versions.windows(2).all(|w| w[0] <= w[1]),
+        "versions must never regress: {versions:?}"
+    );
+    assert_eq!(*versions.last().unwrap(), 3);
+}
+
+#[test]
+fn pool_generates_across_replicas() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let cfg = PoolCfg {
+        num_replicas: 3,
+        route_policy: RoutePolicy::LeastOutstanding,
+        rolling_update: true,
+        replica_slots: rt.manifest.decode_batch,
+    };
+    let pool = LlmProxyPool::spawn(&cfg, dir, weights.clone(), vocab::EOS, 31).unwrap();
+
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        let (id, rx) = pool.generate(MathEnv::prompt_for((i % 9) as u32, 2), 4);
+        rxs.push((id, rx));
+    }
+    for (id, rx) in rxs {
+        let res = rx.recv().expect("fleet serves the request");
+        assert_eq!(res.id, id, "results carry the pool id");
+        assert!(!res.tokens.is_empty() && res.tokens.len() <= 4);
+        assert_eq!(res.tokens.len(), res.logps.len());
+    }
+    assert_eq!(pool.outstanding_per_replica(), vec![0, 0, 0]);
+
+    // one staggered weight wave, then serve again at the new version
+    pool.update_weights(weights, 9);
+    let (_, rx) = pool.generate(MathEnv::prompt_for(1, 2), 4);
+    let _ = rx.recv().expect("serves during/after rolling sync");
+    let report = pool.shutdown().unwrap();
+    assert_eq!(report.replicas.len(), 3);
+    assert_eq!(report.sync_waves, 1);
+    let agg = report.aggregate();
+    assert_eq!(agg.completed, 13);
+    let routed: u64 = report.replicas.iter().map(|r| r.routed).sum();
+    assert_eq!(routed, 13 + report.migrated);
+    // least-outstanding over 12 concurrent requests touches >1 replica
+    assert!(
+        report.replicas.iter().filter(|r| r.routed > 0).count() >= 2,
+        "load balancing should spread requests"
+    );
+}
+
+#[test]
+fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let mut st = rt.train_state(&weights).unwrap();
+    let alpha = 1.0;
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha,
+        seed: 33,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+        num_replicas: 3,
+        route_policy: RoutePolicy::QueueSched,
+        rolling_update: true,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let ctl = ControllerCfg {
+        variant: PgVariant::Tis,
+        steps: 4,
+        lr: 1e-3,
+        n_groups: 4,
+        group_size: 4,
+        sync_mode: false,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
+    assert_eq!(logs.len(), 4);
+    let report = system.shutdown().unwrap();
+    // the freshness bound survives replica-level routing + rolling sync
+    assert!(
+        (report.buffer.max_version_gap as f64) <= alpha,
+        "gap {} exceeds alpha {}",
+        report.buffer.max_version_gap,
+        alpha
+    );
+    assert_eq!(report.pool.replicas.len(), 3);
+    assert!(report.buffer.consumed >= 4 * 16);
+    assert!(report.proxy.completed as usize >= report.buffer.consumed);
 }
