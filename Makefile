@@ -1,0 +1,39 @@
+# ROLL Flash reproduction build entry points.
+#
+#   make artifacts   AOT-lower the JAX/Pallas model to HLO text +
+#                    manifest + init params under rust/artifacts/
+#                    (runs Python ONCE, at build time; the Rust
+#                    coordinator only ever executes the artifacts)
+#   make build       cargo build --release
+#   make test        tier-1 verify (build + tests; engine-backed tests
+#                    auto-skip until `make artifacts` has run)
+#   make bench       regenerate every figure/table report
+
+PYTHON ?= python3
+MODELS ?= tiny small
+ARTIFACTS_DIR := rust/artifacts
+
+.PHONY: artifacts build test bench clean
+
+artifacts:
+	@for m in $(MODELS); do \
+		echo "== lowering $$m =="; \
+		(cd python && $(PYTHON) -m compile.aot --model $$m --out ../$(ARTIFACTS_DIR)); \
+	done
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	@for b in fig1b_scaling fig3a_allocation fig3b_rollout_size fig4_offpolicy \
+	         fig7_queue_sched fig8_prompt_repl fig9_env_async fig10_redundant \
+	         fig11_real_env fig_fleet_scaling table1_async_ratio prop_bounds; do \
+		cargo bench --bench $$b; \
+	done
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS_DIR)

@@ -4,9 +4,13 @@
 //!
 //!     cargo run --release --example agentic_alfworld -- [steps=20] [redundant=1]
 //!
-//! Env latency is simulated (scaled into short real sleeps) so the
-//! env-level async overlap is genuinely exercised: while one
-//! EnvManager sleeps in `step`, the proxy's decode slots serve others.
+//! Env latency is simulated and scheduled on the RolloutEngine's timer
+//! wheel (no thread sleeps), so the env-level async overlap is
+//! genuinely exercised: while one episode waits out its latency
+//! deadline, the proxy's decode slots serve others. Redundant mode
+//! over-provisions both spare groups AND spare members per group
+//! (`redundancy_factor`, paper Appendix A: group_size 17 x 9 groups vs
+//! 16 x 8); the engine aborts the losers once each group completes.
 
 use std::path::PathBuf;
 
@@ -32,29 +36,31 @@ fn main() -> anyhow::Result<()> {
     let weights = rt.load_init_params()?;
     let mut st = rt.train_state(&weights)?;
 
-    // quota: 4 groups x 4; redundant mode over-provisions the fleet
-    // (paper Appendix A: group_size 17 x 9 groups vs 16 x 8)
+    // quota: 4 groups x 4; redundant mode over-provisions spare groups
+    // (group-level) and spare members per group (redundancy_factor)
     let (consume_groups, consume_group_size) = (4, 4);
-    let (fleet_groups, fleet_group_size) =
-        if redundant { (5, 5) } else { (consume_groups, consume_group_size) };
+    let fleet_groups = if redundant { 5 } else { consume_groups };
+    let redundancy_factor = if redundant { 1.25 } else { 1.0 };
 
     let fleet = RolloutSystemCfg {
         artifacts_dir: dir,
         num_env_groups: fleet_groups,
-        env_group_size: fleet_group_size,
+        env_group_size: consume_group_size,
         consume_groups,
         consume_group_size,
         alpha: 1.0,
         seed: 7,
-        latency_scale: 0.002, // 1s simulated -> 2ms real sleep
+        latency_scale: 0.002, // 1s simulated -> 2ms timer deadline
         hang_timeout: 1e6,
+        num_workers: 4,
+        redundancy_factor,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
     };
     println!(
-        "agentic_alfworld: fleet {}x{} -> quota {}x{}, alpha 1, env-level async rollout",
-        fleet_groups, fleet_group_size, consume_groups, consume_group_size
+        "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",
+        fleet_groups, consume_group_size, redundancy_factor, consume_groups, consume_group_size
     );
     let system = RolloutSystem::start(&fleet, weights, |_, _| {
         AlfworldEnv::new(4, EnvLatency::gaussian(2.0, 1.5))
@@ -75,8 +81,16 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let report = system.shutdown()?;
-    println!("\n{} steps in {:.1}s; surplus {} (redundant rollout), reclaimed {}, max gap {}",
-        steps, wall, report.buffer.surplus, report.buffer.stale_evicted, report.buffer.max_version_gap);
+    println!(
+        "\n{} steps in {:.1}s; redundant aborts {} + cancels {} (surplus left: {}), reclaimed {}, max gap {}",
+        steps,
+        wall,
+        report.engine.redundant_aborts,
+        report.engine.redundant_cancels,
+        report.buffer.surplus,
+        report.buffer.stale_evicted,
+        report.buffer.max_version_gap
+    );
     println!(
         "success rate: first {:.2} -> last {:.2}",
         logs.first().map(|l| l.reward_mean).unwrap_or(0.0),

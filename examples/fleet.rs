@@ -108,6 +108,8 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: replicas,
         route_policy: route,
         rolling_update: true,

@@ -5,9 +5,13 @@
 //!     make artifacts && cargo run --release --example quickstart
 //!
 //! What happens: an LLMProxy thread decodes with continuous batching,
-//! 16 EnvManager threads roll the MathEnv, the SampleBuffer assembles
-//! GRPO groups, and the AsyncController (in synchronous mode here)
-//! consumes batches, runs PPO train_steps, and broadcasts weights.
+//! the event-driven RolloutEngine multiplexes the MathEnv episodes over
+//! a small worker pool, the SampleBuffer assembles GRPO groups, and the
+//! AsyncController (in synchronous mode here) consumes batches, runs
+//! PPO train_steps, and broadcasts weights.
+//!
+//! Without artifacts (e.g. the CI smoke run) it falls back to the
+//! virtual-time RLVR simulator so the example always exercises code.
 
 use std::path::PathBuf;
 
@@ -15,11 +19,16 @@ use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
+use roll_flash::sim::rlvr::{run as run_sim, RlvrSimConfig};
+use roll_flash::workload::{LengthProfile, TrainCost};
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "tiny".to_string());
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing (run `make artifacts`): falling back to the sim quickstart\n");
+        return sim_fallback();
+    }
 
     let rt = ModelRuntime::load(&dir)?;
     let weights = rt.load_init_params()?;
@@ -42,6 +51,8 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -63,12 +74,35 @@ fn main() -> anyhow::Result<()> {
 
     let report = system.shutdown()?;
     println!(
-        "\nfleet: {} episodes, proxy {} decode steps / {} tokens, occupancy {:.2}, max gap {}",
+        "\nfleet: {} episodes (peak {} in flight), proxy {} decode steps / {} tokens, occupancy {:.2}, max gap {}",
         report.episodes,
+        report.engine.peak_inflight,
         report.proxy.decode_steps,
         report.proxy.tokens_generated,
         report.proxy.mean_occupancy(rt.manifest.decode_batch),
         report.buffer.max_version_gap,
     );
+    Ok(())
+}
+
+/// Artifacts-free stand-in: the virtual-time RLVR pipeline with the
+/// paper-default cluster split, so CI can smoke-run the example.
+fn sim_fallback() -> anyhow::Result<()> {
+    let gpus = 16;
+    let mut c = RlvrSimConfig::paper_default(gpus / 2, gpus - gpus / 2);
+    c.lengths = LengthProfile::qwen3_base();
+    c.train = TrainCost::for_mean_len(2000.0);
+    c.async_ratio = 1.0;
+    c.steps = 3;
+    let r = run_sim(&c);
+    println!(
+        "sim quickstart: gpus={gpus} alpha={} -> {:.0}s/step, {:.0} samples/h, util {:.2}, max gap {}",
+        c.async_ratio,
+        r.mean_step_time(),
+        r.samples_per_hour(),
+        r.gen_utilization,
+        r.max_version_gap
+    );
+    anyhow::ensure!(r.mean_step_time() > 0.0, "sim produced a degenerate step time");
     Ok(())
 }

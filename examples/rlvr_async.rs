@@ -61,6 +61,8 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas,
         route_policy,
         rolling_update: true,

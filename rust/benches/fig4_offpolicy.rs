@@ -30,6 +30,8 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         seed: 42,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,

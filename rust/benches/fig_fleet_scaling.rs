@@ -9,6 +9,9 @@
 //!     long-tail length profile (shorts stuck behind stragglers);
 //!   * queue scheduling bounds per-replica co-residency at the decode
 //!     window, trading pool-side queueing for knee-sharing slowdown;
+//!   * EWMA latency-aware routing tracks delivered token rates and
+//!     starves a fail-slow replica that least-outstanding keeps
+//!     feeding (the heterogeneous-fleet regime);
 //!   * rolling weight sync keeps N-1 replicas decoding through a
 //!     model update; broadcast parks the whole fleet.
 
@@ -24,18 +27,23 @@ fn main() {
 
     println!("== Fleet scaling: replica sweep x route policy ==\n");
     let mut table = Table::new(&[
-        "replicas", "rr tok/s", "lo tok/s", "queue tok/s", "lo/rr", "lo self-scaling",
+        "replicas", "rr tok/s", "lo tok/s", "queue tok/s", "ewma tok/s", "lo/rr", "lo self-scaling",
     ]);
     let mut lo1 = 0.0f64;
     for &n in &[1usize, 2, 4, 8] {
         let mut per_policy = Vec::new();
-        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstanding,
+            RoutePolicy::QueueSched,
+            RoutePolicy::Ewma,
+        ] {
             let mut cfg = base.clone();
             cfg.route_policy = policy;
             let rows = sweep_replicas(&cfg, &[n]);
             per_policy.push(rows[0].1.clone());
         }
-        let (rr, lo, qs) = (&per_policy[0], &per_policy[1], &per_policy[2]);
+        let (rr, lo, qs, ew) = (&per_policy[0], &per_policy[1], &per_policy[2], &per_policy[3]);
         if n == 1 {
             lo1 = lo.throughput;
         }
@@ -44,11 +52,38 @@ fn main() {
             format!("{:.0}", rr.throughput),
             format!("{:.0}", lo.throughput),
             format!("{:.0}", qs.throughput),
+            format!("{:.0}", ew.throughput),
             format!("{:.2}x", lo.throughput / rr.throughput.max(1e-9)),
             format!("{:.2}x", lo.throughput / lo1.max(1e-9)),
         ]);
     }
     println!("{}", table.to_markdown());
+
+    println!("== EWMA vs least-outstanding: one 5x fail-slow replica (4 replicas) ==\n");
+    let mut table = Table::new(&[
+        "policy", "makespan s", "p99 lat s", "slow-replica share", "routed per replica",
+    ]);
+    for policy in [RoutePolicy::LeastOutstanding, RoutePolicy::Ewma] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.route_policy = policy;
+        cfg.sync_interval = 0.0;
+        cfg.slow_replica = Some((3, 5.0));
+        let r = run(&cfg);
+        let total: usize = r.routed.iter().sum();
+        table.row(&[
+            policy.as_str().to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.p99_latency),
+            format!("{:.1}%", 100.0 * r.routed[3] as f64 / total.max(1) as f64),
+            format!("{:?}", r.routed),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("least-outstanding keeps refilling the cripple's short queue; the EWMA");
+    println!("token-rate estimate prices the slow replica out of placement.\n");
 
     println!("== Routing under skew (4 replicas, fixed work budget) ==\n");
     let mut table = Table::new(&["policy", "makespan s", "mean lat s", "p99 lat s", "max co-res", "pool q max"]);

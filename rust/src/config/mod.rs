@@ -105,6 +105,12 @@ pub struct RollConfig {
     pub is_num_return_sequences_expand: bool,
     /// asynchronous ratio alpha; 0 => synchronous (Section 4.3)
     pub async_generation_ratio: f64,
+    /// rollout engine: env worker pool size (episode state machines
+    /// multiplex over these; concurrency is NOT bounded by it)
+    pub num_workers: usize,
+    /// episodes provisioned per group as a multiple of group size;
+    /// > 1 enables redundant env rollout (Section 5.2.2)
+    pub redundancy_factor: f64,
     /// inference fleet: LlmProxy replicas behind the routing layer
     pub num_replicas: usize,
     /// request placement across replicas
@@ -135,6 +141,8 @@ impl Default for RollConfig {
             max_additional_running_prompts: 16,
             is_num_return_sequences_expand: true,
             async_generation_ratio: 0.0,
+            num_workers: 4,
+            redundancy_factor: 1.0,
             num_replicas: 1,
             route_policy: RoutePolicy::LeastOutstanding,
             rolling_update: true,
@@ -197,6 +205,12 @@ impl RollConfig {
         }
         if let Some(v) = num(&j, "async_generation_ratio") {
             cfg.async_generation_ratio = v;
+        }
+        if let Some(v) = num(&j, "num_workers") {
+            cfg.num_workers = v as usize;
+        }
+        if let Some(v) = num(&j, "redundancy_factor") {
+            cfg.redundancy_factor = v;
         }
         if let Some(v) = num(&j, "num_replicas") {
             cfg.num_replicas = v as usize;
@@ -263,6 +277,11 @@ impl RollConfig {
         anyhow::ensure!(self.rollout_batch_size > 0, "rollout_batch_size must be positive");
         anyhow::ensure!(self.num_return_sequences_in_group > 0, "group size must be positive");
         anyhow::ensure!(self.async_generation_ratio >= 0.0, "async ratio must be >= 0");
+        anyhow::ensure!(self.num_workers > 0, "num_workers must be positive");
+        anyhow::ensure!(
+            self.redundancy_factor.is_finite() && self.redundancy_factor >= 1.0,
+            "redundancy_factor must be >= 1.0"
+        );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be positive");
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
         Ok(())
@@ -352,6 +371,28 @@ rolling_update: false
         assert!(d.rolling_update);
         assert!(RollConfig::from_yaml("num_replicas: 0").is_err());
         assert!(RollConfig::from_yaml("route_policy: bogus").is_err());
+    }
+
+    #[test]
+    fn parses_rollout_engine_keys() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+num_workers: 8
+redundancy_factor: 1.5
+route_policy: ewma
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.num_workers, 8);
+        assert!((cfg.redundancy_factor - 1.5).abs() < 1e-12);
+        assert_eq!(cfg.route_policy, RoutePolicy::Ewma);
+        // defaults: 4 workers, exact provisioning
+        let d = RollConfig::default();
+        assert_eq!(d.num_workers, 4);
+        assert!((d.redundancy_factor - 1.0).abs() < 1e-12);
+        // rejects degenerate values
+        assert!(RollConfig::from_yaml("num_workers: 0").is_err());
+        assert!(RollConfig::from_yaml("redundancy_factor: 0.5").is_err());
     }
 
     #[test]

@@ -47,6 +47,12 @@ pub struct StepLog {
     pub reward_mean: f32,
     pub pass_rate: f32,
     pub mean_version_gap: f64,
+    /// largest consumed-sample version gap observed so far (cumulative
+    /// BufferStats::max_version_gap at the end of this step)
+    pub max_version_gap: u64,
+    /// rolling-sync lag across inference replicas right after this
+    /// step's model_update (max - min acknowledged weight version)
+    pub replica_version_skew: u64,
     pub wall_secs: f64,
 }
 
@@ -131,17 +137,21 @@ pub fn run_training(
                 let d = (gap_after.consumed - gap_before.consumed).max(1);
                 (gap_after.sum_version_gap - gap_before.sum_version_gap) as f64 / d as f64
             },
+            max_version_gap: gap_after.max_version_gap,
+            replica_version_skew: proxy.version_skew(),
             wall_secs: t0.elapsed().as_secs_f64(),
         });
     }
     Ok(logs)
 }
 
-/// Format a step log line (shared by examples and benches).
+/// Format a step log line (shared by examples and benches). `gap` is
+/// mean/max consumed staleness; `skew` is the rolling-sync replica
+/// weight-version spread at the end of the step.
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
-        l.entropy, l.mean_version_gap, l.wall_secs
+        l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew, l.wall_secs
     )
 }

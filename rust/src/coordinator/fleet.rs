@@ -41,6 +41,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -91,6 +92,8 @@ struct InFlight {
     max_new_tokens: usize,
     reply: Sender<GenResult>,
     migrations: u32,
+    /// dispatch wall time — feeds the router's EWMA token-rate estimate
+    dispatched: Instant,
 }
 
 struct PoolState {
@@ -110,6 +113,9 @@ struct PoolState {
     /// replicas whose event loop exited (submit failed); never routed
     /// to again
     dead: Vec<bool>,
+    /// last weight version each replica acknowledged — rolling-sync
+    /// skew is max - min of this vector
+    replica_version: Vec<u64>,
     routed: Vec<u64>,
     migrated: u64,
     /// rolling-broadcast waves completed by the sync agent
@@ -176,6 +182,7 @@ impl Shared {
                             max_new_tokens: req.max_new_tokens,
                             reply: req.reply,
                             migrations,
+                            dispatched: Instant::now(),
                         },
                     );
                     return;
@@ -211,9 +218,10 @@ impl Shared {
     }
 }
 
-/// Per-replica completion collector: decrements load accounting,
-/// forwards the result to the original caller (rewriting the id to the
-/// pool id), and re-dispatches pool-queued work into the freed slot.
+/// Per-replica completion collector: decrements load accounting, feeds
+/// the router's EWMA token-rate estimate, forwards the result to the
+/// original caller (rewriting the id to the pool id), and re-dispatches
+/// pool-queued work into the freed slot.
 fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
     while let Ok(res) = rx.recv() {
         let entry = {
@@ -223,6 +231,13 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
             };
             st.outstanding[r] = st.outstanding[r].saturating_sub(1);
             let entry = st.inflight.remove(&pool_id);
+            if let Some(e) = &entry {
+                st.router.on_completion(
+                    r,
+                    res.tokens.len() as f64,
+                    e.dispatched.elapsed().as_secs_f64(),
+                );
+            }
             shared.drain(&mut st);
             entry.map(|e| (pool_id, e.reply))
         };
@@ -250,9 +265,15 @@ fn sync_agent(shared: Arc<Shared>, rx: Receiver<(Vec<f32>, u64)>) {
                 st.syncing = Some(r);
             }
             let ack = shared.clients[r].update_weights_synced(weights.clone(), version);
-            let _ = ack.recv();
+            // a dead replica's ack channel disconnects: the wave moves
+            // on, but the replica is NOT stamped — version_skew keeps
+            // reporting how far behind it really is
+            let applied = ack.recv().is_ok();
             let mut st = shared.state.lock().unwrap();
             st.syncing = None;
+            if applied {
+                st.replica_version[r] = version;
+            }
             shared.drain(&mut st);
         }
         shared.state.lock().unwrap().sync_waves += 1;
@@ -378,6 +399,7 @@ impl LlmProxyPool {
             pool_suspended: false,
             syncing: None,
             dead: vec![false; n],
+            replica_version: vec![0; n],
             routed: vec![0; n],
             migrated: 0,
             sync_waves: 0,
@@ -426,20 +448,39 @@ impl LlmProxyPool {
 
     /// ADD: route (or pool-queue) a generation request; returns
     /// (pool id, reply receiver) — same shape as `LlmProxy::generate`.
+    /// When the whole fleet is dead the reply sender is dropped, so the
+    /// receiver observes disconnection instead of hanging.
     pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
-        let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = channel();
+        (self.try_submit(prompt, max_new_tokens, reply).unwrap_or(0), rx)
+    }
+
+    /// ADD with a caller-supplied reply sender: the event-driven
+    /// RolloutEngine points every request at one shared completion
+    /// channel (results are demultiplexed by the returned pool id)
+    /// instead of blocking a thread per receiver. Returns `None` when
+    /// the whole fleet is dead — the request (and its reply sender) was
+    /// dropped, and on a *shared* reply channel that produces no
+    /// disconnect signal, so callers must not wait for a result.
+    pub fn try_submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        reply: Sender<GenResult>,
+    ) -> Option<u64> {
+        let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
         let req = Pending { pool_id, prompt, max_new_tokens, reply };
         let mut st = self.shared.state.lock().unwrap();
+        if st.all_dead() {
+            return None; // drop: nothing can ever serve this
+        }
         st.queue_depth.record(st.queue.len() as f64);
         let loads = st.loads();
         match st.router.route(&loads) {
             Some(r) => self.shared.dispatch(&mut st, r, req, 0),
-            // drop when the whole fleet is dead (caller disconnects)
-            None if st.all_dead() => {}
             None => st.queue.push_back(req),
         }
-        (pool_id, rx)
+        Some(pool_id)
     }
 
     /// ABORT by pool id: reclaims the request whether it is pool-queued
@@ -536,6 +577,37 @@ impl LlmProxyPool {
         for c in &self.shared.clients {
             c.update_weights(weights.clone(), version);
         }
+        // broadcast is ordered ahead of any later command on every live
+        // channel, so live replicas are at `version` for new work; dead
+        // replicas stay behind and keep showing up in version_skew
+        let mut st = self.shared.state.lock().unwrap();
+        for r in 0..st.replica_version.len() {
+            if !st.dead[r] {
+                st.replica_version[r] = version;
+            }
+        }
+    }
+
+    /// Fault injection (tests, chaos drills): hard-stop replica `r`'s
+    /// event loop as if the process died. Its in-flight generations
+    /// never complete — callers recover via hang-timeout migration —
+    /// and the replica is marked dead so no new work routes there.
+    pub fn kill_replica(&self, r: usize) {
+        let mut st = self.shared.state.lock().unwrap();
+        if r < st.dead.len() {
+            st.dead[r] = true;
+            self.shared.clients[r].kill();
+        }
+    }
+
+    /// Rolling-sync weight-version skew across the fleet: max - min of
+    /// the last version each replica acknowledged. 0 when every replica
+    /// runs the same weights (always, outside a sync wave).
+    pub fn version_skew(&self) -> u64 {
+        let st = self.shared.state.lock().unwrap();
+        let max = st.replica_version.iter().copied().max().unwrap_or(0);
+        let min = st.replica_version.iter().copied().min().unwrap_or(0);
+        max - min
     }
 
     /// Diagnostics: in-flight requests per replica.
@@ -708,6 +780,57 @@ mod tests {
         p.resume();
         assert_eq!(p.pool_queue_len(), 0);
         assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
+    }
+
+    #[test]
+    fn submit_shares_one_reply_channel_with_unique_ids() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        let (tx, _rx) = channel();
+        let a = p.try_submit(vec![1], 4, tx.clone()).unwrap();
+        let b = p.try_submit(vec![2], 4, tx.clone()).unwrap();
+        let c = p.try_submit(vec![3], 4, tx).unwrap();
+        assert!(a != b && b != c && a != c, "pool ids must demultiplex");
+        assert_eq!(p.outstanding_per_replica(), vec![2, 1]);
+    }
+
+    #[test]
+    fn kill_replica_marks_dead_and_stops_routing() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        p.kill_replica(0);
+        let _a = p.generate(vec![1], 4);
+        let _b = p.generate(vec![1], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
+        // out-of-range kill is a no-op
+        p.kill_replica(99);
+    }
+
+    #[test]
+    fn version_skew_starts_and_broadcasts_to_zero() {
+        let p = pool(3, RoutePolicy::LeastOutstanding, 8);
+        assert_eq!(p.version_skew(), 0);
+        p.update_weights(vec![], 5); // rolling off in this helper: broadcast
+        assert_eq!(p.version_skew(), 0);
+    }
+
+    #[test]
+    fn dead_replica_keeps_version_skew_visible() {
+        let p = pool(2, RoutePolicy::LeastOutstanding, 8);
+        p.kill_replica(1);
+        p.update_weights(vec![], 3);
+        // the corpse never applied version 3: the lag must show
+        assert_eq!(p.version_skew(), 3);
+    }
+
+    #[test]
+    fn try_submit_reports_whole_fleet_dead() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        p.kill_replica(0);
+        p.kill_replica(1);
+        let (tx, _rx) = channel();
+        assert!(p.try_submit(vec![1], 4, tx).is_none());
+        // generate() still returns a disconnected receiver
+        let (_, rx) = p.generate(vec![1], 4);
+        assert!(rx.recv().is_err(), "reply channel must disconnect");
     }
 
     #[test]

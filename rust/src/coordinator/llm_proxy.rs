@@ -116,6 +116,14 @@ impl ProxyClient {
     pub fn resume(&self) {
         let _ = self.tx.send(Cmd::Resume);
     }
+
+    /// Fault injection: stop the event loop as if the replica process
+    /// died. In-flight requests are dropped without replies (callers
+    /// recover via hang-timeout migration); subsequent submissions fail
+    /// and the fleet marks the replica dead.
+    pub(crate) fn kill(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
 }
 
 /// Client handle to the proxy thread.

@@ -1,18 +1,27 @@
 //! The ROLL Flash coordinator (Layer 3) — the paper's system
 //! contribution, running the *real* PJRT engine: the inference fleet
 //! (an `LlmProxyPool` of step-wise-inference `LlmProxy` replicas behind
-//! load-balanced routing and staggered weight sync), EnvManager
-//! workers, the freshness-bounded SampleBuffer, and the
+//! load-balanced routing and staggered weight sync), the event-driven
+//! rollout layer, the freshness-bounded SampleBuffer, and the
 //! AsyncController training loop (Figure 5).
 //!
 //! Fleet layer (`fleet.rs` + `routing.rs`): the paper's LLMProxy
 //! abstracts a *pool* of inference workers. `RolloutSystem` spawns
 //! `num_replicas` proxy event loops; every `GenRequest` is placed by a
-//! pluggable `RoutePolicy` (round-robin, least-outstanding, or queue
-//! scheduling with pool-side backpressure), `update_weights` rolls
-//! across replicas one at a time so at least N-1 keep decoding during
-//! a model update, and requests hung on a fail-slow replica are
-//! abort-and-resubmit migrated elsewhere (`hang_timeout`).
+//! pluggable `RoutePolicy` (round-robin, least-outstanding, queue
+//! scheduling with pool-side backpressure, or EWMA latency-aware),
+//! `update_weights` rolls across replicas one at a time so at least
+//! N-1 keep decoding during a model update, and requests hung on a
+//! fail-slow replica are abort-and-resubmit migrated elsewhere
+//! (`hang_timeout`).
+//!
+//! Rollout layer (`rollout/`): a single `RolloutEngine` thread
+//! multiplexes every episode as a state machine over a fixed pool of
+//! `num_workers` env threads — completion events from the fleet arrive
+//! on one shared reply channel, env latency runs on a timer wheel
+//! instead of real sleeps, and SampleBuffer hooks drive admission and
+//! redundant-rollout cancellation (`redundancy_factor`). Concurrency
+//! scales with episode count, not OS threads.
 //!
 //! The same policies (queue scheduling, prompt replication via
 //! independent per-sequence requests, redundant env rollout, async
@@ -20,23 +29,22 @@
 //! scale benches; here they execute against real decode/train steps.
 
 pub mod async_controller;
-pub mod env_manager;
 pub mod fleet;
 pub mod llm_proxy;
+pub mod rollout;
 pub mod routing;
 pub mod sample_buffer;
 
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
-pub use env_manager::{spawn_env_manager, EnvManagerCfg, GroupTasks};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
 pub use llm_proxy::{GenResult, LlmProxy, ProxyClient, ProxyReport};
+pub use rollout::{EngineCfg, EngineReport, GenBackend, GroupTasks, RolloutEngine};
 pub use routing::{ReplicaLoad, RoutePolicy, Router};
-pub use sample_buffer::{BufferStats, SampleBuffer};
+pub use sample_buffer::{Admission, BufferStats, SampleBuffer};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use anyhow::Result;
 
@@ -57,9 +65,14 @@ pub struct RolloutSystemCfg {
     /// asynchronous ratio alpha (0 => sync admission)
     pub alpha: f64,
     pub seed: u64,
-    /// scale env latency into real sleeps (0 = logical time only)
+    /// scale env latency into real timer deadlines (0 = ready now)
     pub latency_scale: f64,
     pub hang_timeout: f64,
+    /// env worker pool size (the engine's only env-executing threads)
+    pub num_workers: usize,
+    /// episodes provisioned per group as a multiple of group size;
+    /// > 1.0 enables redundant env rollout with surplus abortion
+    pub redundancy_factor: f64,
     /// inference fleet: LlmProxy replicas behind the routing layer
     pub num_replicas: usize,
     pub route_policy: RoutePolicy,
@@ -80,34 +93,55 @@ impl RolloutSystemCfg {
         anyhow::ensure!(self.num_env_groups >= self.consume_groups, "fleet < quota groups");
         anyhow::ensure!(self.env_group_size >= self.consume_group_size, "group < quota size");
         anyhow::ensure!(self.alpha >= 0.0, "alpha must be >= 0");
+        anyhow::ensure!(self.num_workers > 0, "num_workers must be > 0 (empty worker pool)");
+        anyhow::ensure!(
+            self.redundancy_factor.is_finite() && self.redundancy_factor >= 1.0,
+            "redundancy_factor must be >= 1.0"
+        );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be > 0 (empty inference fleet)");
         Ok(())
     }
+
+    fn engine_cfg(&self) -> EngineCfg {
+        EngineCfg {
+            num_env_groups: self.num_env_groups,
+            env_group_size: self.env_group_size,
+            num_workers: self.num_workers,
+            redundancy_factor: self.redundancy_factor,
+            latency_scale: self.latency_scale,
+            hang_timeout: self.hang_timeout,
+            seed: self.seed,
+        }
+    }
 }
 
-/// A running rollout fleet: inference pool + env managers + buffer.
+/// A running rollout fleet: inference pool + rollout engine + buffer.
 pub struct RolloutSystem {
     pub proxy: Arc<LlmProxyPool>,
     pub buffer: Arc<SampleBuffer>,
     stop: Arc<AtomicBool>,
-    managers: Vec<JoinHandle<usize>>,
+    engine: RolloutEngine,
 }
 
 /// Final fleet statistics after shutdown. `proxy` is the aggregate of
 /// the per-replica loop reports; `pool` carries the per-replica
 /// breakdown (routing counts, utilization/queue-depth histograms,
-/// migrations, rolling-sync waves).
+/// migrations, rolling-sync waves); `engine` is the rollout engine's
+/// episode/abort accounting.
 #[derive(Clone, Debug, Default)]
 pub struct FleetReport {
     pub proxy: ProxyReport,
     pub pool: PoolReport,
     pub buffer: BufferStats,
+    pub engine: EngineReport,
     pub episodes: usize,
 }
 
 impl RolloutSystem {
-    /// Start the fleet. `env_factory(group, member)` builds each
-    /// manager's environment (enabling per-group heterogeneity).
+    /// Start the fleet. `env_factory(group, member)` builds each lane's
+    /// environment (enabling per-group heterogeneity); with
+    /// `redundancy_factor > 1` it is also called for the spare members
+    /// (`member >= env_group_size`).
     pub fn start<E, F>(cfg: &RolloutSystemCfg, init_weights: Vec<f32>, env_factory: F) -> Result<Self>
     where
         E: BaseEnv + 'static,
@@ -132,44 +166,38 @@ impl RolloutSystem {
             crate::env::vocab::EOS,
             cfg.seed,
         )?);
-        let tasks = Arc::new(GroupTasks::new(cfg.num_env_groups, cfg.env_group_size, cfg.seed));
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut managers = Vec::new();
+        let engine_cfg = cfg.engine_cfg();
+        let lanes_per_group = engine_cfg.lanes_per_group();
+        let mut envs: Vec<Box<dyn BaseEnv>> = Vec::with_capacity(engine_cfg.total_lanes());
         for grp in 0..cfg.num_env_groups {
-            for member in 0..cfg.env_group_size {
-                let mcfg = EnvManagerCfg {
-                    group: grp,
-                    member,
-                    latency_scale: cfg.latency_scale,
-                    hang_timeout: cfg.hang_timeout,
-                };
-                managers.push(spawn_env_manager(
-                    env_factory(grp, member),
-                    mcfg,
-                    tasks.clone(),
-                    proxy.clone(),
-                    buffer.clone(),
-                    stop.clone(),
-                ));
+            for member in 0..lanes_per_group {
+                envs.push(Box::new(env_factory(grp, member)));
             }
         }
-        Ok(RolloutSystem { proxy, buffer, stop, managers })
+        let stop = Arc::new(AtomicBool::new(false));
+        let backend: Arc<dyn GenBackend> = proxy.clone();
+        let engine =
+            RolloutEngine::start(engine_cfg, backend, buffer.clone(), stop.clone(), envs)?;
+        Ok(RolloutSystem { proxy, buffer, stop, engine })
     }
 
-    /// Stop producers, drain threads, and collect reports.
+    /// Stop producers, drain the engine, and collect reports.
     pub fn shutdown(self) -> Result<FleetReport> {
         self.stop.store(true, Ordering::Relaxed);
         self.buffer.shutdown();
-        let mut episodes = 0usize;
-        for h in self.managers {
-            episodes += h.join().map_err(|_| anyhow::anyhow!("env manager panicked"))?;
-        }
+        let engine = self.engine.shutdown()?;
         let buffer = self.buffer.stats();
         let pool = match Arc::try_unwrap(self.proxy) {
             Ok(p) => p.shutdown()?,
             Err(_) => anyhow::bail!("proxy pool handle still shared at shutdown"),
         };
-        Ok(FleetReport { proxy: pool.aggregate(), pool, buffer, episodes })
+        Ok(FleetReport {
+            proxy: pool.aggregate(),
+            pool,
+            buffer,
+            engine,
+            episodes: engine.episodes,
+        })
     }
 }
 
@@ -188,6 +216,8 @@ mod tests {
             seed: 1,
             latency_scale: 0.0,
             hang_timeout: f64::INFINITY,
+            num_workers: 4,
+            redundancy_factor: 1.0,
             num_replicas: 2,
             route_policy: RoutePolicy::LeastOutstanding,
             rolling_update: true,
@@ -207,6 +237,9 @@ mod tests {
             |c| c.consume_groups = 0,
             |c| c.consume_group_size = 0,
             |c| c.num_replicas = 0,
+            |c| c.num_workers = 0,
+            |c| c.redundancy_factor = 0.5,
+            |c| c.redundancy_factor = f64::NAN,
             |c| c.alpha = -1.0,
         ] {
             let mut c = cfg();
@@ -223,5 +256,14 @@ mod tests {
         let mut c = cfg();
         c.consume_group_size = c.env_group_size + 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn engine_cfg_inherits_redundancy_shape() {
+        let mut c = cfg();
+        c.redundancy_factor = 1.5;
+        let e = c.engine_cfg();
+        assert_eq!(e.lanes_per_group(), 6);
+        assert_eq!(e.total_lanes(), 24);
     }
 }

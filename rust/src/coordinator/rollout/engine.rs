@@ -1,0 +1,1181 @@
+//! The event-driven RolloutEngine: hundreds of episode state machines
+//! multiplexed over a small fixed worker pool.
+//!
+//! The thread-per-episode EnvManager capped concurrency at the OS
+//! thread count and burned it on blocking `recv`s and real `sleep`s.
+//! The engine inverts the control flow (the Laminar/AsyncFlow
+//! trajectory-level execution model): one coordinator thread reacts to
+//! completion events —
+//!
+//!   * generation results from the inference fleet, delivered on ONE
+//!     shared reply channel and demultiplexed by pool id,
+//!   * env `reset`/`poll_step` outcomes computed by `num_workers`
+//!     pool threads (the only place environment code runs),
+//!   * a hashed timer wheel for simulated env latency and generation
+//!     hang watchdogs (no thread ever sleeps on behalf of an episode),
+//!   * SampleBuffer hooks: capacity (admission tickets freed) and
+//!     group completion.
+//!
+//! Redundant environment rollout (Section 5.2.2) is native here: with
+//! `redundancy_factor > 1` each group gets spare lanes racing the same
+//! (group, episode) task; the first `group_size` completions win and
+//! the group-completion hook aborts the losers' in-flight generations
+//! via the backend (`proxy.abort`), reclaiming their tickets — surplus
+//! work is cancelled, not completed.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::fleet::LlmProxyPool;
+use crate::coordinator::llm_proxy::GenResult;
+use crate::coordinator::rollout::episode::{Episode, EpisodeState, GroupTasks};
+use crate::coordinator::sample_buffer::{Admission, SampleBuffer};
+use crate::env::{BaseEnv, PendingStep, StepResult};
+
+/// Give up on an episode after this many generation-hang strikes.
+const MAX_GEN_MIGRATIONS: u32 = 3;
+
+/// Timer wheel resolution; also the engine's idle heartbeat.
+const WHEEL_GRANULARITY: Duration = Duration::from_millis(1);
+const WHEEL_SLOTS: usize = 256;
+
+/// Longest the engine blocks for events before re-checking stop.
+const HEARTBEAT: Duration = Duration::from_millis(50);
+
+/// The slice of the inference fleet the engine needs. `LlmProxyPool`
+/// is the production backend; tests substitute deterministic mocks.
+pub trait GenBackend: Send + Sync {
+    /// Route a generation; the result arrives on `reply` carrying the
+    /// returned id. `None` means the request cannot be accepted at all
+    /// (the whole fleet is dead) and was dropped — callers must not
+    /// wait for a reply.
+    fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize, reply: Sender<GenResult>)
+        -> Option<u64>;
+    /// Interrupt and reclaim a request (no-op for finished ids).
+    fn abort(&self, id: u64);
+    /// Move a presumed-hung request to another replica, keeping its
+    /// reply channel. `false` = nowhere to move it.
+    fn migrate(&self, id: u64) -> bool {
+        let _ = id;
+        false
+    }
+}
+
+impl GenBackend for LlmProxyPool {
+    fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        reply: Sender<GenResult>,
+    ) -> Option<u64> {
+        LlmProxyPool::try_submit(self, prompt, max_new_tokens, reply)
+    }
+
+    fn abort(&self, id: u64) {
+        LlmProxyPool::abort(self, id)
+    }
+
+    fn migrate(&self, id: u64) -> bool {
+        LlmProxyPool::migrate(self, id)
+    }
+}
+
+/// Engine shape and behavior knobs (`num_workers`, `redundancy_factor`
+/// in YAML / CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCfg {
+    /// env fleet: groups x members (the consumption-facing shape)
+    pub num_env_groups: usize,
+    pub env_group_size: usize,
+    /// env worker pool size — the ONLY threads that run env code
+    pub num_workers: usize,
+    /// episodes provisioned per group, as a multiple of group size:
+    /// lanes_per_group = ceil(env_group_size * redundancy_factor).
+    /// 1.0 = exact provisioning; > 1.0 enables redundant rollout
+    pub redundancy_factor: f64,
+    /// scale simulated env latency into real timer deadlines
+    /// (0.0 = observations are ready immediately)
+    pub latency_scale: f64,
+    /// generation hang watchdog: migrate after this many wall seconds,
+    /// abandon after MAX_GEN_MIGRATIONS strikes
+    pub hang_timeout: f64,
+    pub seed: u64,
+}
+
+impl EngineCfg {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.num_env_groups > 0, "num_env_groups must be > 0");
+        anyhow::ensure!(self.env_group_size > 0, "env_group_size must be > 0");
+        anyhow::ensure!(self.num_workers > 0, "num_workers must be > 0 (empty worker pool)");
+        anyhow::ensure!(
+            self.redundancy_factor.is_finite() && self.redundancy_factor >= 1.0,
+            "redundancy_factor must be >= 1.0 (got {})",
+            self.redundancy_factor
+        );
+        anyhow::ensure!(self.latency_scale >= 0.0, "latency_scale must be >= 0");
+        Ok(())
+    }
+
+    /// Lanes per group including redundant spares. The epsilon keeps
+    /// f64 round-up noise (e.g. 10 * 1.1 = 11.000000000000002) from
+    /// silently over-provisioning an extra lane.
+    pub fn lanes_per_group(&self) -> usize {
+        (self.env_group_size as f64 * self.redundancy_factor - 1e-9).ceil() as usize
+    }
+
+    /// Total episode lanes the engine multiplexes.
+    pub fn total_lanes(&self) -> usize {
+        self.num_env_groups * self.lanes_per_group()
+    }
+}
+
+/// Engine statistics, folded into the FleetReport at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineReport {
+    /// trajectories pushed into the SampleBuffer
+    pub episodes: usize,
+    /// in-flight generations aborted because their group completed
+    /// first (redundant rollout losers)
+    pub redundant_aborts: u64,
+    /// episodes cancelled in env/timer states for the same reason
+    pub redundant_cancels: u64,
+    /// hung generations migrated to another replica
+    pub gen_migrations: u64,
+    /// episodes abandoned (hung past all strikes, env fail-stop, or
+    /// the whole inference fleet gone)
+    pub abandoned: u64,
+    /// lanes permanently lost to a panicking environment
+    pub lane_failures: u64,
+    /// completed episodes won by a redundant spare lane — how often
+    /// over-provisioning actually rescued a group
+    pub spare_wins: u64,
+    /// timer-wheel deadlines that fired (obs latency + hang watchdog)
+    pub timers_fired: u64,
+    /// peak concurrently admitted episodes (tickets held at once)
+    pub peak_inflight: usize,
+}
+
+/// Everything that wakes the engine.
+enum Event {
+    /// a generation finished (forwarded from the shared reply channel)
+    Gen(GenResult),
+    /// a worker finished `reset`
+    ResetDone { lane: usize, env: Box<dyn BaseEnv>, prompt: Vec<i32> },
+    /// a worker finished `poll_step`
+    Stepped { lane: usize, env: Box<dyn BaseEnv>, step: PendingStep },
+    /// admission capacity may be available (or the buffer shut down)
+    Tickets,
+    /// group `key` completed (or was burned) — cancel surplus members
+    GroupDone(u64),
+    /// the lane's environment panicked on a worker; its env is lost and
+    /// the lane can never run again
+    LaneFailed { lane: usize },
+}
+
+/// Work shipped to the env worker pool. The env travels with the item
+/// and comes home inside the completion event.
+enum Work {
+    Reset { lane: usize, env: Box<dyn BaseEnv>, seed: u64 },
+    Step { lane: usize, env: Box<dyn BaseEnv>, action: Vec<i32> },
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Work>>>, tx: Sender<Event>) {
+    loop {
+        let work = { rx.lock().unwrap().recv() };
+        let Ok(work) = work else { return };
+        // a panicking env must not wedge the engine: catch it, drop the
+        // (possibly corrupt) env, and report the lane as failed so its
+        // ticket is reclaimed and shutdown still converges
+        let event = match work {
+            Work::Reset { lane, mut env, seed } => {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| env.reset(seed))) {
+                    Ok(prompt) => Event::ResetDone { lane, env, prompt },
+                    Err(_) => Event::LaneFailed { lane },
+                }
+            }
+            Work::Step { lane, mut env, action } => {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    env.poll_step(&action)
+                })) {
+                    Ok(step) => Event::Stepped { lane, env, step },
+                    Err(_) => Event::LaneFailed { lane },
+                }
+            }
+        };
+        if tx.send(event).is_err() {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timer wheel
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TimerKind {
+    /// a parked env observation becomes visible
+    ObsReady,
+    /// generation hang watchdog
+    GenHang,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Timer {
+    due_tick: u64,
+    lane: usize,
+    kind: TimerKind,
+    /// must match the lane's `timer_epoch` to fire
+    epoch: u64,
+}
+
+/// Hashed timer wheel: WHEEL_SLOTS buckets of WHEEL_GRANULARITY each;
+/// entries farther out than one revolution stay bucketed by
+/// `due_tick % slots` and are skipped until their round arrives.
+struct TimerWheel {
+    slots: Vec<Vec<Timer>>,
+    origin: Instant,
+    /// next tick index to collect (all earlier ticks have fired)
+    cursor: u64,
+    len: usize,
+}
+
+impl TimerWheel {
+    fn new() -> Self {
+        TimerWheel {
+            slots: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            origin: Instant::now(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    fn tick_of(&self, t: Instant) -> u64 {
+        (t.saturating_duration_since(self.origin).as_nanos() / WHEEL_GRANULARITY.as_nanos()) as u64
+    }
+
+    fn schedule(&mut self, delay: Duration, lane: usize, kind: TimerKind, epoch: u64) {
+        let due_tick = self.tick_of(Instant::now() + delay).max(self.cursor);
+        let slot = (due_tick % WHEEL_SLOTS as u64) as usize;
+        self.slots[slot].push(Timer { due_tick, lane, kind, epoch });
+        self.len += 1;
+    }
+
+    /// Collect every timer due at or before `now` into `out`. Entries
+    /// rejected by `keep` (stale epochs: the awaited thing already
+    /// happened) are pruned as their slot is revisited — each slot
+    /// comes around once per wheel revolution, so a long-dated watchdog
+    /// whose generation already finished does not linger for its full
+    /// nominal delay.
+    fn expire(&mut self, now: Instant, keep: impl Fn(&Timer) -> bool, out: &mut Vec<Timer>) {
+        if self.len == 0 {
+            self.cursor = self.tick_of(now) + 1;
+            return;
+        }
+        let target = self.tick_of(now);
+        if target < self.cursor {
+            return;
+        }
+        // cap the walk at one revolution: a longer sleep visits every
+        // slot exactly once either way
+        let steps = (target - self.cursor + 1).min(WHEEL_SLOTS as u64);
+        let walk_all = steps == WHEEL_SLOTS as u64;
+        for k in 0..steps {
+            let slot = if walk_all { k } else { (self.cursor + k) % WHEEL_SLOTS as u64 } as usize;
+            let bucket = &mut self.slots[slot];
+            let mut i = 0;
+            while i < bucket.len() {
+                if !keep(&bucket[i]) {
+                    bucket.swap_remove(i);
+                    self.len -= 1;
+                } else if bucket[i].due_tick <= target {
+                    out.push(bucket.swap_remove(i));
+                    self.len -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.cursor = target + 1;
+        out.sort_by_key(|t| t.due_tick);
+    }
+
+    /// Earliest pending deadline (end of its tick), if any.
+    fn next_deadline(&self) -> Option<Instant> {
+        if self.len == 0 {
+            return None;
+        }
+        self.slots.iter().flatten().map(|t| t.due_tick).min().map(|tick| {
+            self.origin + Duration::from_nanos((WHEEL_GRANULARITY.as_nanos() as u64) * (tick + 1))
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// Handle to the running engine thread.
+pub struct RolloutEngine {
+    join: Option<JoinHandle<EngineReport>>,
+    event_tx: Sender<Event>,
+}
+
+impl RolloutEngine {
+    /// Spawn the engine: one coordinator thread, `num_workers` env
+    /// workers, and a completion forwarder. `envs` supplies one
+    /// environment per lane, in (group-major, member-minor) order with
+    /// `cfg.lanes_per_group()` members per group.
+    pub fn start(
+        cfg: EngineCfg,
+        backend: Arc<dyn GenBackend>,
+        buffer: Arc<SampleBuffer>,
+        stop: Arc<AtomicBool>,
+        envs: Vec<Box<dyn BaseEnv>>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            envs.len() == cfg.total_lanes(),
+            "expected {} envs ({} groups x {} lanes), got {}",
+            cfg.total_lanes(),
+            cfg.num_env_groups,
+            cfg.lanes_per_group(),
+            envs.len()
+        );
+        let (event_tx, event_rx) = channel::<Event>();
+        let (gen_tx, gen_rx) = channel::<GenResult>();
+        let (work_tx, work_rx) = channel::<Work>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        // buffer hooks wake the engine instead of blocking producers
+        let tx = event_tx.clone();
+        buffer.set_capacity_hook(Box::new(move || {
+            let _ = tx.send(Event::Tickets);
+        }));
+        let tx = event_tx.clone();
+        buffer.set_group_hook(Box::new(move |key| {
+            let _ = tx.send(Event::GroupDone(key));
+        }));
+
+        // completion forwarder: shared reply channel -> event stream
+        let tx = event_tx.clone();
+        std::thread::Builder::new()
+            .name("rollout-gen-fwd".into())
+            .spawn(move || {
+                while let Ok(res) = gen_rx.recv() {
+                    if tx.send(Event::Gen(res)).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn rollout gen forwarder");
+
+        // the fixed env worker pool
+        for w in 0..cfg.num_workers {
+            let rx = work_rx.clone();
+            let tx = event_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("rollout-worker-{w}"))
+                .spawn(move || worker_loop(rx, tx))
+                .expect("spawn rollout worker");
+        }
+
+        let lanes_per_group = cfg.lanes_per_group();
+        let episodes: Vec<Episode> = envs
+            .into_iter()
+            .enumerate()
+            .map(|(lane, env)| {
+                let (group, member) = (lane / lanes_per_group, lane % lanes_per_group);
+                Episode::new(group, member, member >= cfg.env_group_size, env)
+            })
+            .collect();
+        let tasks = GroupTasks::new(cfg.num_env_groups, lanes_per_group, cfg.seed);
+
+        let mut inner = EngineLoop {
+            cfg,
+            backend,
+            buffer,
+            tasks,
+            stop,
+            episodes,
+            retired: vec![false; cfg.total_lanes()],
+            idle: 0,
+            gen_map: HashMap::new(),
+            by_key: HashMap::new(),
+            waiting: VecDeque::new(),
+            tickets_held: 0,
+            work_tx,
+            gen_tx,
+            wheel: TimerWheel::new(),
+            report: EngineReport::default(),
+        };
+        let join = std::thread::Builder::new()
+            .name("rollout-engine".into())
+            .spawn(move || inner.run(event_rx))
+            .expect("spawn rollout engine");
+        Ok(RolloutEngine { join: Some(join), event_tx })
+    }
+
+    /// Join the engine (the caller must have set the stop flag and shut
+    /// the buffer down first; this just wakes and waits).
+    pub fn shutdown(mut self) -> Result<EngineReport> {
+        let _ = self.event_tx.send(Event::Tickets); // wake to observe stop
+        match self.join.take() {
+            Some(h) => h.join().map_err(|_| anyhow::anyhow!("rollout engine panicked")),
+            None => anyhow::bail!("engine already shut down"),
+        }
+    }
+}
+
+struct EngineLoop {
+    cfg: EngineCfg,
+    backend: Arc<dyn GenBackend>,
+    buffer: Arc<SampleBuffer>,
+    tasks: GroupTasks,
+    stop: Arc<AtomicBool>,
+    episodes: Vec<Episode>,
+    /// lanes permanently idled (shutdown); engine exits when all are
+    retired: Vec<bool>,
+    idle: usize,
+    /// generation pool id -> lane
+    gen_map: HashMap<u64, usize>,
+    /// group key -> lanes currently rolling it (redundancy bookkeeping)
+    by_key: HashMap<u64, Vec<usize>>,
+    /// lanes waiting for an admission ticket, FIFO
+    waiting: VecDeque<usize>,
+    tickets_held: usize,
+    work_tx: Sender<Work>,
+    gen_tx: Sender<GenResult>,
+    wheel: TimerWheel,
+    report: EngineReport,
+}
+
+impl EngineLoop {
+    fn run(&mut self, event_rx: Receiver<Event>) -> EngineReport {
+        for lane in 0..self.episodes.len() {
+            self.start_next(lane);
+        }
+        let mut due: Vec<Timer> = Vec::new();
+        while self.idle < self.episodes.len() {
+            due.clear();
+            {
+                let (episodes, retired) = (&self.episodes, &self.retired);
+                self.wheel.expire(
+                    Instant::now(),
+                    |t| !retired[t.lane] && episodes[t.lane].timer_epoch == t.epoch,
+                    &mut due,
+                );
+            }
+            for t in due.drain(..) {
+                self.handle_timer(t);
+            }
+            let timeout = self
+                .wheel
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(HEARTBEAT)
+                .min(HEARTBEAT);
+            match event_rx.recv_timeout(timeout) {
+                Ok(ev) => {
+                    self.handle(ev);
+                    while let Ok(ev) = event_rx.try_recv() {
+                        self.handle(ev);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                self.drain_on_stop();
+            }
+        }
+        // If the engine wound down on its own (fleet dead, every lane
+        // failed), unblock the consumer: get_batch must error out, not
+        // wait forever for producers that no longer exist. Idempotent
+        // on the normal stop path (the caller already shut it down).
+        self.buffer.shutdown();
+        self.report
+    }
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::Gen(res) => self.on_generation(res),
+            Event::ResetDone { lane, env, prompt } => self.on_reset_done(lane, env, prompt),
+            Event::Stepped { lane, env, step } => self.on_stepped(lane, env, step),
+            Event::Tickets => self.on_tickets(),
+            Event::GroupDone(key) => self.on_group_done(key),
+            Event::LaneFailed { lane } => self.on_lane_failed(lane),
+        }
+    }
+
+    // --- state machine transitions -------------------------------------
+
+    fn on_generation(&mut self, res: GenResult) {
+        let Some(lane) = self.gen_map.remove(&res.id) else {
+            return; // aborted/abandoned: stale completion
+        };
+        let ep = &mut self.episodes[lane];
+        ep.timer_epoch += 1; // disarm the hang watchdog
+        if ep.cancelled {
+            self.cancel_episode(lane);
+            return;
+        }
+        ep.absorb_action(&res);
+        ep.state = EpisodeState::SteppingEnv;
+        let env = ep.env.take().expect("env home while generating");
+        let _ = self.work_tx.send(Work::Step { lane, env, action: res.tokens });
+    }
+
+    fn on_reset_done(&mut self, lane: usize, env: Box<dyn BaseEnv>, prompt: Vec<i32>) {
+        let ep = &mut self.episodes[lane];
+        ep.env = Some(env);
+        if ep.cancelled || self.stop.load(Ordering::Relaxed) {
+            self.cancel_episode(lane);
+            return;
+        }
+        ep.absorb_prompt(prompt);
+        self.submit_generation(lane);
+    }
+
+    fn on_stepped(&mut self, lane: usize, env: Box<dyn BaseEnv>, step: PendingStep) {
+        let ep = &mut self.episodes[lane];
+        ep.env = Some(env);
+        if ep.cancelled || self.stop.load(Ordering::Relaxed) {
+            self.cancel_episode(lane);
+            return;
+        }
+        if step.result.latency > self.cfg.hang_timeout {
+            // fail-stop env: the step took longer than we tolerate
+            self.report.abandoned += 1;
+            self.cancel_episode(lane);
+            return;
+        }
+        if self.cfg.latency_scale > 0.0 && step.ready_in > 0.0 {
+            // park the observation behind its latency deadline
+            ep.pending = Some(step.result);
+            ep.timer_epoch += 1;
+            let delay = Duration::from_secs_f64(step.ready_in * self.cfg.latency_scale);
+            let epoch = ep.timer_epoch;
+            self.wheel.schedule(delay, lane, TimerKind::ObsReady, epoch);
+            return;
+        }
+        self.finish_step(lane, step.result);
+    }
+
+    fn finish_step(&mut self, lane: usize, result: StepResult) {
+        let ep = &mut self.episodes[lane];
+        ep.turn += 1;
+        if result.done {
+            self.complete_episode(lane, result.reward.unwrap_or(0.0));
+        } else if ep.turn >= ep.max_steps {
+            // turn budget exhausted without a terminal signal
+            self.complete_episode(lane, 0.0);
+        } else {
+            ep.absorb_obs(&result.obs);
+            self.submit_generation(lane);
+        }
+    }
+
+    fn submit_generation(&mut self, lane: usize) {
+        let ep = &mut self.episodes[lane];
+        let submitted =
+            self.backend.submit(ep.context.clone(), ep.max_new_tokens, self.gen_tx.clone());
+        let Some(gen_id) = submitted else {
+            // the whole inference fleet is dead: this lane can never
+            // make progress — reclaim the ticket and retire it so the
+            // engine winds down instead of waiting on a reply that was
+            // dropped without a disconnect signal
+            self.report.abandoned += 1;
+            self.fail_lane(lane);
+            return;
+        };
+        let ep = &mut self.episodes[lane];
+        ep.state = EpisodeState::Generating { gen_id, strikes: 0 };
+        ep.timer_epoch += 1;
+        self.gen_map.insert(gen_id, lane);
+        if self.cfg.hang_timeout.is_finite() && self.cfg.hang_timeout > 0.0 {
+            let epoch = self.episodes[lane].timer_epoch;
+            self.wheel.schedule(
+                Duration::from_secs_f64(self.cfg.hang_timeout),
+                lane,
+                TimerKind::GenHang,
+                epoch,
+            );
+        }
+    }
+
+    fn handle_timer(&mut self, t: Timer) {
+        let ep = &mut self.episodes[t.lane];
+        if self.retired[t.lane] || ep.timer_epoch != t.epoch {
+            return; // stale: the awaited thing already happened
+        }
+        self.report.timers_fired += 1;
+        match t.kind {
+            TimerKind::ObsReady => {
+                if ep.cancelled {
+                    self.cancel_episode(t.lane);
+                    return;
+                }
+                let Some(result) = ep.pending.take() else { return };
+                self.finish_step(t.lane, result);
+            }
+            TimerKind::GenHang => {
+                let EpisodeState::Generating { gen_id, strikes } = ep.state else { return };
+                let strikes = strikes + 1;
+                if strikes > MAX_GEN_MIGRATIONS {
+                    self.backend.abort(gen_id);
+                    self.gen_map.remove(&gen_id);
+                    self.report.abandoned += 1;
+                    self.cancel_episode(t.lane);
+                    return;
+                }
+                // migrate() is false when there is nowhere to move the
+                // request (single replica, peers suspended) or it raced
+                // a completion; either way keep watching
+                if self.backend.migrate(gen_id) {
+                    self.report.gen_migrations += 1;
+                }
+                self.episodes[t.lane].state = EpisodeState::Generating { gen_id, strikes };
+                self.wheel.schedule(
+                    Duration::from_secs_f64(self.cfg.hang_timeout),
+                    t.lane,
+                    TimerKind::GenHang,
+                    t.epoch,
+                );
+            }
+        }
+    }
+
+    // --- admission and redundancy --------------------------------------
+
+    fn on_tickets(&mut self) {
+        while let Some(&lane) = self.waiting.front() {
+            if self.retired[lane] {
+                self.waiting.pop_front();
+                continue;
+            }
+            match self.buffer.try_begin_sample() {
+                Admission::Granted(version) => {
+                    self.waiting.pop_front();
+                    self.begin_episode(lane, version);
+                }
+                Admission::Full => break,
+                Admission::Shutdown => {
+                    while let Some(lane) = self.waiting.pop_front() {
+                        if !self.retired[lane] {
+                            self.retire(lane);
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    fn begin_episode(&mut self, lane: usize, init_version: u64) {
+        let (group, member) = (self.episodes[lane].group, self.episodes[lane].member);
+        // skip keys whose group already completed/burned (a lagging
+        // spare lane would only ever produce surplus there)
+        let (key, seed) = loop {
+            let (key, seed) = self.tasks.next(group, member);
+            if !self.buffer.group_completed(key) {
+                break (key, seed);
+            }
+        };
+        self.episodes[lane].begin(key, init_version);
+        self.by_key.entry(key).or_default().push(lane);
+        self.tickets_held += 1;
+        self.report.peak_inflight = self.report.peak_inflight.max(self.tickets_held);
+        let env = self.episodes[lane].env.take().expect("env home between episodes");
+        let _ = self.work_tx.send(Work::Reset { lane, env, seed });
+    }
+
+    fn on_group_done(&mut self, key: u64) {
+        let Some(lanes) = self.by_key.remove(&key) else { return };
+        for lane in lanes {
+            if self.retired[lane] || self.episodes[lane].group_key != key {
+                continue;
+            }
+            match self.episodes[lane].state {
+                EpisodeState::Generating { gen_id, .. } => {
+                    // the headline redundancy mechanism: losers' decode
+                    // work is reclaimed the moment the group completes
+                    self.backend.abort(gen_id);
+                    self.gen_map.remove(&gen_id);
+                    self.report.redundant_aborts += 1;
+                    self.cancel_episode(lane);
+                }
+                EpisodeState::SteppingEnv => {
+                    self.report.redundant_cancels += 1;
+                    if self.episodes[lane].env.is_some() {
+                        self.cancel_episode(lane); // parked on a timer
+                    } else {
+                        self.episodes[lane].cancelled = true; // worker busy
+                    }
+                }
+                EpisodeState::WaitingTicket | EpisodeState::Scoring => {}
+            }
+        }
+    }
+
+    // --- lane lifecycle -------------------------------------------------
+
+    /// Finished episode: push the trajectory and roll the lane over.
+    fn complete_episode(&mut self, lane: usize, reward: f32) {
+        let key = self.episodes[lane].group_key;
+        self.remove_from_key(lane, key);
+        let traj = self.episodes[lane].finish(reward);
+        self.tickets_held -= 1;
+        self.report.episodes += 1;
+        if self.episodes[lane].redundant {
+            self.report.spare_wins += 1;
+        }
+        self.buffer.push(traj); // may fire capacity/group hooks
+        self.start_next(lane);
+    }
+
+    /// The lane is permanently unusable (env panicked, or the fleet is
+    /// gone): reclaim its ticket (if held) and retire it for good.
+    fn fail_lane(&mut self, lane: usize) {
+        let key = self.episodes[lane].group_key;
+        self.remove_from_key(lane, key);
+        self.tickets_held -= 1;
+        self.buffer.cancel();
+        if !self.retired[lane] {
+            self.retire(lane);
+        }
+    }
+
+    fn on_lane_failed(&mut self, lane: usize) {
+        self.report.lane_failures += 1;
+        self.fail_lane(lane);
+    }
+
+    /// Abandoned/aborted episode: reclaim the ticket and roll over.
+    fn cancel_episode(&mut self, lane: usize) {
+        let key = self.episodes[lane].group_key;
+        self.remove_from_key(lane, key);
+        self.episodes[lane].cancelled = false;
+        self.episodes[lane].pending = None;
+        self.episodes[lane].timer_epoch += 1;
+        self.tickets_held -= 1;
+        self.buffer.cancel();
+        self.start_next(lane);
+    }
+
+    /// Begin the lane's next episode (or park/retire it).
+    fn start_next(&mut self, lane: usize) {
+        if self.stop.load(Ordering::Relaxed) {
+            self.retire(lane);
+            return;
+        }
+        match self.buffer.try_begin_sample() {
+            Admission::Granted(version) => self.begin_episode(lane, version),
+            Admission::Full => {
+                self.episodes[lane].state = EpisodeState::WaitingTicket;
+                self.waiting.push_back(lane);
+            }
+            Admission::Shutdown => self.retire(lane),
+        }
+    }
+
+    fn retire(&mut self, lane: usize) {
+        debug_assert!(!self.retired[lane]);
+        self.retired[lane] = true;
+        self.idle += 1;
+        let ep = &mut self.episodes[lane];
+        ep.state = EpisodeState::WaitingTicket;
+        ep.timer_epoch += 1;
+    }
+
+    fn remove_from_key(&mut self, lane: usize, key: u64) {
+        if let Some(v) = self.by_key.get_mut(&key) {
+            v.retain(|&l| l != lane);
+            if v.is_empty() {
+                self.by_key.remove(&key);
+            }
+        }
+    }
+
+    /// Stop requested: unwind every lane that is not mid-worker. Lanes
+    /// whose env is on a worker finish via their completion event.
+    fn drain_on_stop(&mut self) {
+        for lane in 0..self.episodes.len() {
+            if self.retired[lane] {
+                continue;
+            }
+            match self.episodes[lane].state {
+                EpisodeState::WaitingTicket => self.retire(lane),
+                EpisodeState::Generating { gen_id, .. } => {
+                    self.backend.abort(gen_id);
+                    self.gen_map.remove(&gen_id);
+                    self.tickets_held -= 1;
+                    self.buffer.cancel();
+                    self.retire(lane);
+                }
+                EpisodeState::SteppingEnv => {
+                    if self.episodes[lane].env.is_some() {
+                        self.episodes[lane].pending = None;
+                        self.tickets_held -= 1;
+                        self.buffer.cancel();
+                        self.retire(lane);
+                    } else {
+                        self.episodes[lane].cancelled = true;
+                    }
+                }
+                EpisodeState::Scoring => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::math::MathEnv;
+    use crate::env::vocab;
+    use std::sync::atomic::AtomicU64;
+
+    /// Replies to every submission immediately with a fixed completion.
+    struct InstantBackend {
+        next: AtomicU64,
+        aborted: AtomicU64,
+    }
+
+    impl InstantBackend {
+        fn new() -> Self {
+            InstantBackend { next: AtomicU64::new(1), aborted: AtomicU64::new(0) }
+        }
+    }
+
+    impl GenBackend for InstantBackend {
+        fn submit(&self, _p: Vec<i32>, _m: usize, reply: Sender<GenResult>) -> Option<u64> {
+            let id = self.next.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(GenResult {
+                id,
+                tokens: vec![vocab::digit(3), vocab::EOS],
+                logps: vec![-0.1, -0.1],
+                version: 0,
+            });
+            Some(id)
+        }
+
+        fn abort(&self, _id: u64) {
+            self.aborted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Completes requests one at a time on a pacing thread, so a group
+    /// race has deterministic winners and in-flight losers.
+    struct PacedBackend {
+        held: Mutex<VecDeque<(u64, Sender<GenResult>)>>,
+        next: AtomicU64,
+        aborted: AtomicU64,
+    }
+
+    impl PacedBackend {
+        fn new() -> Arc<Self> {
+            Arc::new(PacedBackend {
+                held: Mutex::new(VecDeque::new()),
+                next: AtomicU64::new(1),
+                aborted: AtomicU64::new(0),
+            })
+        }
+
+        /// Release one held request (FIFO); true if one was released.
+        fn release_one(&self) -> bool {
+            let Some((id, reply)) = self.held.lock().unwrap().pop_front() else {
+                return false;
+            };
+            let _ = reply.send(GenResult {
+                id,
+                tokens: vec![vocab::digit(7), vocab::EOS],
+                logps: vec![-0.2, -0.2],
+                version: 0,
+            });
+            true
+        }
+    }
+
+    impl GenBackend for PacedBackend {
+        fn submit(&self, _p: Vec<i32>, _m: usize, reply: Sender<GenResult>) -> Option<u64> {
+            let id = self.next.fetch_add(1, Ordering::Relaxed);
+            self.held.lock().unwrap().push_back((id, reply));
+            Some(id)
+        }
+
+        fn abort(&self, id: u64) {
+            self.held.lock().unwrap().retain(|(h, _)| *h != id);
+            self.aborted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Never replies; migrate always fails.
+    struct BlackholeBackend {
+        next: AtomicU64,
+        aborted: AtomicU64,
+    }
+
+    impl GenBackend for BlackholeBackend {
+        fn submit(&self, _p: Vec<i32>, _m: usize, _reply: Sender<GenResult>) -> Option<u64> {
+            Some(self.next.fetch_add(1, Ordering::Relaxed))
+        }
+
+        fn abort(&self, _id: u64) {
+            self.aborted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn cfg(groups: usize, group_size: usize, workers: usize, rf: f64) -> EngineCfg {
+        EngineCfg {
+            num_env_groups: groups,
+            env_group_size: group_size,
+            num_workers: workers,
+            redundancy_factor: rf,
+            latency_scale: 0.0,
+            hang_timeout: f64::INFINITY,
+            seed: 11,
+        }
+    }
+
+    fn math_envs(n: usize) -> Vec<Box<dyn BaseEnv>> {
+        (0..n).map(|_| Box::new(MathEnv::new()) as Box<dyn BaseEnv>).collect()
+    }
+
+    #[test]
+    fn cfg_validation_and_lane_math() {
+        assert!(cfg(4, 4, 8, 1.0).validate().is_ok());
+        assert!(cfg(0, 4, 8, 1.0).validate().is_err());
+        assert!(cfg(4, 4, 0, 1.0).validate().is_err());
+        assert!(cfg(4, 4, 8, 0.5).validate().is_err());
+        assert!(cfg(4, 4, 8, f64::NAN).validate().is_err());
+        assert_eq!(cfg(4, 4, 8, 1.0).lanes_per_group(), 4);
+        assert_eq!(cfg(4, 4, 8, 1.25).lanes_per_group(), 5);
+        assert_eq!(cfg(4, 4, 8, 2.0).total_lanes(), 32);
+        // f64 round-up noise must not over-provision: 10 * 1.1 is
+        // 11.000000000000002 in binary floating point
+        assert_eq!(cfg(1, 10, 8, 1.1).lanes_per_group(), 11);
+        assert_eq!(cfg(1, 20, 8, 1.05).lanes_per_group(), 21);
+    }
+
+    #[test]
+    fn wheel_orders_and_invalidates_by_round() {
+        let mut w = TimerWheel::new();
+        w.schedule(Duration::from_millis(2), 1, TimerKind::ObsReady, 0);
+        w.schedule(Duration::from_millis(600), 2, TimerKind::ObsReady, 0); // > 1 revolution
+        w.schedule(Duration::from_millis(5), 3, TimerKind::GenHang, 0);
+        assert!(w.next_deadline().is_some());
+        let mut out = Vec::new();
+        w.expire(Instant::now() + Duration::from_millis(20), |_| true, &mut out);
+        let lanes: Vec<usize> = out.iter().map(|t| t.lane).collect();
+        assert_eq!(lanes, vec![1, 3], "future rounds must not fire early");
+        out.clear();
+        w.expire(Instant::now() + Duration::from_millis(700), |_| true, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].lane, 2);
+        assert!(w.next_deadline().is_none());
+    }
+
+    #[test]
+    fn wheel_prunes_stale_entries_without_firing_them() {
+        let mut w = TimerWheel::new();
+        // a long-dated watchdog whose generation already finished must
+        // not survive for its nominal delay
+        w.schedule(Duration::from_secs(3600), 1, TimerKind::GenHang, 0);
+        w.schedule(Duration::from_millis(2), 2, TimerKind::ObsReady, 0);
+        let mut out = Vec::new();
+        // lane 1's epoch moved on: prune it while walking the slots
+        w.expire(Instant::now() + Duration::from_millis(300), |t| t.lane != 1, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].lane, 2);
+        assert!(w.next_deadline().is_none(), "stale watchdog must be gone");
+    }
+
+    /// The headline concurrency claim: 256 concurrent episodes on a
+    /// worker pool of 8 threads, no artifacts needed.
+    #[test]
+    fn multiplexes_256_episodes_on_8_workers() {
+        let groups = 64;
+        let group_size = 4;
+        let backend = Arc::new(InstantBackend::new());
+        let buffer = Arc::new(SampleBuffer::new(groups * group_size, group_size, 0.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = RolloutEngine::start(
+            cfg(groups, group_size, 8, 1.0),
+            backend.clone(),
+            buffer.clone(),
+            stop.clone(),
+            math_envs(groups * group_size),
+        )
+        .unwrap();
+
+        let samples = buffer.get_batch(groups).expect("full batch");
+        assert_eq!(samples.len(), 256);
+        let mut counts = std::collections::BTreeMap::new();
+        for s in &samples {
+            *counts.entry(s.group).or_insert(0usize) += 1;
+            assert_eq!(s.response_mask.len(), s.response.len());
+        }
+        assert!(counts.values().all(|&c| c == group_size), "complete groups only");
+
+        stop.store(true, Ordering::Relaxed);
+        buffer.shutdown();
+        let report = engine.shutdown().unwrap();
+        assert!(report.episodes >= 256, "{report:?}");
+        assert_eq!(
+            report.peak_inflight, 256,
+            "all 256 episodes must be admitted concurrently"
+        );
+    }
+
+    /// Redundant rollout: spares race, winners fill the group, and the
+    /// engine ABORTS the losers' in-flight generations — the buffer
+    /// sees (almost) no surplus because losers never complete.
+    #[test]
+    fn redundancy_aborts_surplus_generations() {
+        let groups = 2;
+        let group_size = 4;
+        let backend = PacedBackend::new();
+        // alpha 3 => capacity 32 admits every lane (2 groups x 8 lanes)
+        let buffer = Arc::new(SampleBuffer::new(groups * group_size, group_size, 3.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = RolloutEngine::start(
+            cfg(groups, group_size, 4, 2.0),
+            backend.clone(),
+            buffer.clone(),
+            stop.clone(),
+            math_envs(groups * group_size * 2),
+        )
+        .unwrap();
+
+        // release generations one at a time until both groups complete
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while buffer.ready_groups() < groups {
+            assert!(Instant::now() < deadline, "groups never completed");
+            backend.release_one();
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        let samples = buffer.get_batch(groups).expect("batch");
+        assert_eq!(samples.len(), 8);
+
+        stop.store(true, Ordering::Relaxed);
+        buffer.shutdown();
+        let report = engine.shutdown().unwrap();
+        let stats = buffer.stats();
+        assert!(
+            report.redundant_aborts + report.redundant_cancels >= 1,
+            "losers must be reclaimed: {report:?}"
+        );
+        assert!(backend.aborted.load(Ordering::Relaxed) >= 1, "proxy.abort must fire");
+        assert!(
+            stats.surplus <= 2,
+            "losers are cancelled, not completed: surplus {} ({stats:?})",
+            stats.surplus
+        );
+    }
+
+    /// A fleet with zero live replicas must wind the engine down and
+    /// unblock the consumer, not leave lanes waiting on replies that
+    /// were silently dropped.
+    #[test]
+    fn dead_fleet_winds_down_instead_of_deadlocking() {
+        struct DeadBackend;
+        impl GenBackend for DeadBackend {
+            fn submit(&self, _p: Vec<i32>, _m: usize, _r: Sender<GenResult>) -> Option<u64> {
+                None
+            }
+            fn abort(&self, _id: u64) {}
+        }
+        let buffer = Arc::new(SampleBuffer::new(4, 4, 0.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = RolloutEngine::start(
+            cfg(1, 4, 2, 1.0),
+            Arc::new(DeadBackend),
+            buffer.clone(),
+            stop,
+            math_envs(4),
+        )
+        .unwrap();
+        // the engine retires every lane and shuts the buffer down, so
+        // the consumer errors out instead of waiting forever
+        assert!(buffer.get_batch(1).is_none(), "get_batch must unblock, not hang");
+        let report = engine.shutdown().unwrap();
+        assert!(report.abandoned >= 4, "{report:?}");
+        assert_eq!(report.episodes, 0);
+    }
+
+    /// An env that panics on a worker loses its lane but must not wedge
+    /// the engine (the old thread-per-episode design surfaced this as a
+    /// join error; the engine reports it and keeps going).
+    #[test]
+    fn panicking_env_fails_lane_without_wedging_shutdown() {
+        struct PanicEnv;
+        impl BaseEnv for PanicEnv {
+            fn reset(&mut self, _s: u64) -> Vec<i32> {
+                vec![vocab::BOS]
+            }
+            fn step(&mut self, _a: &[i32]) -> StepResult {
+                panic!("env exploded")
+            }
+            fn max_steps(&self) -> usize {
+                2
+            }
+            fn max_new_tokens(&self) -> usize {
+                2
+            }
+            fn prompt_len(&self) -> usize {
+                1
+            }
+        }
+        let backend = Arc::new(InstantBackend::new());
+        let buffer = Arc::new(SampleBuffer::new(1, 1, 0.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let engine = RolloutEngine::start(
+            cfg(1, 1, 1, 1.0),
+            backend,
+            buffer.clone(),
+            stop,
+            vec![Box::new(PanicEnv)],
+        )
+        .unwrap();
+        // reset succeeds, the instant generation lands, step panics:
+        // the lane is failed, its ticket reclaimed, the engine exits
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.lane_failures, 1, "{report:?}");
+        assert!(buffer.get_batch(1).is_none(), "no producers left: consumer unblocks");
+        assert!(buffer.stats().cancelled >= 1, "the failed lane's ticket is reclaimed");
+    }
+
+    /// The hang watchdog abandons a generation after its strikes and
+    /// reclaims the admission ticket.
+    #[test]
+    fn hang_watchdog_abandons_blackholed_generation() {
+        let backend =
+            Arc::new(BlackholeBackend { next: AtomicU64::new(1), aborted: AtomicU64::new(0) });
+        let buffer = Arc::new(SampleBuffer::new(1, 1, 0.0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut c = cfg(1, 1, 1, 1.0);
+        c.hang_timeout = 0.01; // 4 strikes x 10ms
+        let engine =
+            RolloutEngine::start(c, backend.clone(), buffer.clone(), stop.clone(), math_envs(1))
+                .unwrap();
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while backend.aborted.load(Ordering::Relaxed) == 0 {
+            assert!(Instant::now() < deadline, "watchdog never fired");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+        buffer.shutdown();
+        let report = engine.shutdown().unwrap();
+        assert!(report.abandoned >= 1, "{report:?}");
+        assert!(report.timers_fired >= MAX_GEN_MIGRATIONS as u64 + 1);
+        assert!(buffer.stats().cancelled >= 1, "ticket must be reclaimed");
+    }
+}

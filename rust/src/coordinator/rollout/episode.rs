@@ -1,0 +1,280 @@
+//! Episode state machines (paper Section 4.2 restructured for
+//! event-driven execution): one [`Episode`] per rollout *lane*, owning
+//! its environment and the partially assembled trajectory. The
+//! [`RolloutEngine`](super::engine::RolloutEngine) multiplexes hundreds
+//! of these over a fixed worker pool; every transition is driven by a
+//! completion event (generation finished, env stepped, timer fired,
+//! ticket freed), never by a blocking wait.
+//!
+//! Also home to [`GroupTasks`], the shared episode numbering that keeps
+//! GRPO groups rolling the same task: members (and redundant spares) of
+//! group g at episode e all derive the same `(group_key, task_seed)`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::llm_proxy::GenResult;
+use crate::env::{BaseEnv, StepResult};
+use crate::rl::Trajectory;
+
+/// Bits of the packed group key reserved for the episode counter.
+const EPISODE_BITS: u32 = 32;
+const EPISODE_MASK: u64 = (1 << EPISODE_BITS) - 1;
+
+/// Pack (group, episode) into the SampleBuffer group key. The episode
+/// counter is masked into its 32-bit field so a runaway counter can
+/// never silently bleed into (and collide with) another group's bits.
+pub fn pack_group_key(grp: usize, episode: u64) -> u64 {
+    debug_assert!(
+        episode <= EPISODE_MASK,
+        "episode counter {episode} overflows the {EPISODE_BITS}-bit key field (group {grp})"
+    );
+    ((grp as u64) << EPISODE_BITS) | (episode & EPISODE_MASK)
+}
+
+/// Shared episode numbering: members of a group must roll the same
+/// task (GRPO needs multiple candidates per prompt), so the task seed
+/// is derived from (group, episode-index-within-group). `members` is
+/// the number of lanes per group *including* redundant spares — spare
+/// lanes get their own counters but derive the same key/seed at the
+/// same episode index, which is what makes their output interchangeable
+/// with a regular member's (Section 5.2.2).
+pub struct GroupTasks {
+    base_seed: u64,
+    members: usize,
+    counters: Vec<AtomicU64>,
+}
+
+impl GroupTasks {
+    pub fn new(num_groups: usize, members: usize, base_seed: u64) -> Self {
+        GroupTasks {
+            base_seed,
+            members,
+            counters: (0..num_groups * members).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Next (group_key, task_seed) for lane `member` of group `grp`.
+    /// The lane's local episode counter picks the episode; all lanes at
+    /// episode e of group g share a key and seed.
+    pub fn next(&self, grp: usize, member: usize) -> (u64, u64) {
+        let idx = grp * self.members + member;
+        let episode = self.counters[idx].fetch_add(1, Ordering::Relaxed);
+        let key = pack_group_key(grp, episode);
+        let seed = self
+            .base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(key.wrapping_mul(0xd1342543de82ef95));
+        (key, seed)
+    }
+}
+
+/// Where an episode is in its lifecycle. Transitions:
+/// `WaitingTicket -> SteppingEnv (reset) -> Generating -> SteppingEnv
+/// -> ... -> Scoring`, then the lane restarts at `WaitingTicket`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpisodeState {
+    /// No admission ticket yet (freshness budget exhausted), or the
+    /// lane is idle after shutdown.
+    WaitingTicket,
+    /// A generation request is in flight on the inference fleet.
+    Generating {
+        gen_id: u64,
+        /// hang-timeout strikes accrued on this generation
+        strikes: u32,
+    },
+    /// The env is applying reset/step on a worker, or its observation
+    /// latency timer is pending.
+    SteppingEnv,
+    /// Terminal bookkeeping: the trajectory is being pushed.
+    Scoring,
+}
+
+/// One rollout lane: a slot in the engine that runs episodes
+/// back-to-back, each producing one trajectory for `group`.
+pub struct Episode {
+    pub group: usize,
+    pub member: usize,
+    /// spare lane (member index >= env_group_size): its episodes are
+    /// expected to lose the race and be aborted (Section 5.2.2); wins
+    /// are counted as `EngineReport::spare_wins`
+    pub redundant: bool,
+    pub state: EpisodeState,
+    /// present when the env is "home"; None while a worker holds it
+    pub env: Option<Box<dyn BaseEnv>>,
+    /// env constants cached so they are readable while a worker holds it
+    pub max_steps: usize,
+    pub max_new_tokens: usize,
+    /// group key of the current episode
+    pub group_key: u64,
+    pub init_version: u64,
+    pub prompt: Vec<i32>,
+    pub context: Vec<i32>,
+    pub response: Vec<i32>,
+    pub response_mask: Vec<f32>,
+    pub logps: Vec<f32>,
+    pub turn: usize,
+    /// a step outcome parked behind its latency-deadline timer
+    pub pending: Option<StepResult>,
+    /// the episode's group completed while its env work was in flight;
+    /// cancel (reclaiming the ticket) at the next event for this lane
+    pub cancelled: bool,
+    /// invalidates timers scheduled for earlier episodes/generations
+    pub timer_epoch: u64,
+}
+
+impl Episode {
+    pub fn new(group: usize, member: usize, redundant: bool, env: Box<dyn BaseEnv>) -> Self {
+        let (max_steps, max_new_tokens) = (env.max_steps(), env.max_new_tokens());
+        Episode {
+            group,
+            member,
+            redundant,
+            state: EpisodeState::WaitingTicket,
+            env: Some(env),
+            max_steps,
+            max_new_tokens,
+            group_key: 0,
+            init_version: 0,
+            prompt: Vec::new(),
+            context: Vec::new(),
+            response: Vec::new(),
+            response_mask: Vec::new(),
+            logps: Vec::new(),
+            turn: 0,
+            pending: None,
+            cancelled: false,
+            timer_epoch: 0,
+        }
+    }
+
+    /// Start a fresh episode under an admission ticket.
+    pub fn begin(&mut self, group_key: u64, init_version: u64) {
+        self.group_key = group_key;
+        self.init_version = init_version;
+        self.prompt.clear();
+        self.context.clear();
+        self.response.clear();
+        self.response_mask.clear();
+        self.logps.clear();
+        self.turn = 0;
+        self.pending = None;
+        self.cancelled = false;
+        self.timer_epoch += 1;
+        self.state = EpisodeState::SteppingEnv; // reset runs on a worker
+    }
+
+    /// The env's reset finished: record the prompt and move to decode.
+    pub fn absorb_prompt(&mut self, prompt: Vec<i32>) {
+        self.context = prompt.clone();
+        self.prompt = prompt;
+    }
+
+    /// A generation finished: action tokens are trainable and join the
+    /// context.
+    pub fn absorb_action(&mut self, res: &GenResult) {
+        for (t, lp) in res.tokens.iter().zip(&res.logps) {
+            self.response.push(*t);
+            self.response_mask.push(1.0);
+            self.logps.push(*lp);
+        }
+        self.context.extend(&res.tokens);
+    }
+
+    /// A non-terminal env step observed: observation tokens join the
+    /// context, untrained.
+    pub fn absorb_obs(&mut self, obs: &[i32]) {
+        for &t in obs {
+            self.response.push(t);
+            self.response_mask.push(0.0);
+            self.logps.push(0.0);
+        }
+        self.context.extend(obs);
+    }
+
+    /// Assemble the finished trajectory (state moves to Scoring).
+    pub fn finish(&mut self, reward: f32) -> Trajectory {
+        self.state = EpisodeState::Scoring;
+        Trajectory {
+            prompt: std::mem::take(&mut self.prompt),
+            response: std::mem::take(&mut self.response),
+            response_mask: std::mem::take(&mut self.response_mask),
+            behavior_logps: std::mem::take(&mut self.logps),
+            reward,
+            group: self.group_key,
+            init_version: self.init_version,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::math::MathEnv;
+
+    #[test]
+    fn group_tasks_share_seeds_within_group_episode() {
+        let t = GroupTasks::new(2, 4, 42);
+        let (k0, s0) = t.next(0, 0);
+        let (k1, s1) = t.next(0, 1);
+        // same group, same episode index => same key and seed
+        assert_eq!(k0, k1);
+        assert_eq!(s0, s1);
+        // next episode for member 0 differs
+        let (k2, s2) = t.next(0, 0);
+        assert_ne!(k0, k2);
+        assert_ne!(s0, s2);
+        // other group differs
+        let (k3, s3) = t.next(1, 0);
+        assert_ne!(k0, k3);
+        assert_ne!(s0, s3);
+    }
+
+    #[test]
+    fn redundant_members_share_keys_with_regulars() {
+        // 1 group, 4 regular members + 2 spares = 6 lanes
+        let t = GroupTasks::new(1, 6, 7);
+        let keys: Vec<u64> = (0..6).map(|m| t.next(0, m).0).collect();
+        assert!(keys.iter().all(|&k| k == keys[0]), "{keys:?}");
+    }
+
+    #[test]
+    fn key_packing_is_collision_free_across_groups() {
+        // the old packing `(grp << 32) | episode` let an episode counter
+        // >= 2^32 bleed into the group bits; the mask confines it
+        assert_eq!(pack_group_key(0, 5), 5);
+        assert_eq!(pack_group_key(3, 5), (3u64 << 32) | 5);
+        assert_ne!(pack_group_key(0, u64::from(u32::MAX)), pack_group_key(1, 0));
+        assert_eq!(pack_group_key(1, 0) - 1, pack_group_key(0, u64::from(u32::MAX)));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    #[cfg(debug_assertions)]
+    fn key_packing_asserts_on_episode_overflow() {
+        let _ = pack_group_key(0, 1 << 32);
+    }
+
+    #[test]
+    fn episode_assembles_masked_trajectory() {
+        let mut ep = Episode::new(2, 1, false, Box::new(MathEnv::new()));
+        assert_eq!(ep.state, EpisodeState::WaitingTicket);
+        ep.begin(77, 4);
+        assert_eq!(ep.state, EpisodeState::SteppingEnv);
+        ep.absorb_prompt(vec![1, 2, 3]);
+        ep.absorb_action(&GenResult { id: 9, tokens: vec![5, 6], logps: vec![-0.1, -0.2], version: 4 });
+        ep.absorb_obs(&[8]);
+        ep.absorb_action(&GenResult { id: 10, tokens: vec![7], logps: vec![-0.3], version: 4 });
+        let traj = ep.finish(1.0);
+        assert_eq!(ep.state, EpisodeState::Scoring);
+        assert_eq!(traj.prompt, vec![1, 2, 3]);
+        assert_eq!(traj.response, vec![5, 6, 8, 7]);
+        assert_eq!(traj.response_mask, vec![1.0, 1.0, 0.0, 1.0]);
+        assert_eq!(traj.behavior_logps, vec![-0.1, -0.2, 0.0, -0.3]);
+        assert_eq!(traj.group, 77);
+        assert_eq!(traj.init_version, 4);
+        // begin() resets all per-episode buffers
+        ep.begin(78, 5);
+        assert!(ep.prompt.is_empty() && ep.response.is_empty() && ep.context.is_empty());
+        assert_eq!(ep.turn, 0);
+    }
+}

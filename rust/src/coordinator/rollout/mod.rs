@@ -1,0 +1,16 @@
+//! Event-driven rollout execution (replaces the thread-per-episode
+//! EnvManager):
+//!
+//!   * [`episode`] — per-lane episode state machines
+//!     (WaitingTicket -> Generating -> SteppingEnv -> Scoring) and the
+//!     shared [`GroupTasks`] episode numbering,
+//!   * [`engine`] — the [`RolloutEngine`] that multiplexes hundreds of
+//!     lanes over a fixed worker pool, driven by fleet completion
+//!     events, a timer wheel, and SampleBuffer hooks; home of the real
+//!     redundant-environment-rollout policy (Section 5.2.2).
+
+pub mod engine;
+pub mod episode;
+
+pub use engine::{EngineCfg, EngineReport, GenBackend, RolloutEngine};
+pub use episode::{pack_group_key, Episode, EpisodeState, GroupTasks};

@@ -2,7 +2,7 @@
 //! scale): where does the next `GenRequest` go?
 //!
 //! The pool fronts N `LlmProxy` replicas; a `Router` picks the target
-//! replica for each request from a load snapshot. Three policies:
+//! replica for each request from a load snapshot. Four policies:
 //!
 //!   * `RoundRobin` — cycle over replicas regardless of load (the
 //!     baseline most serving fabrics start from). Under the paper's
@@ -17,12 +17,24 @@
 //!     replica is saturated the request is held in the *pool* queue and
 //!     dispatched on the next completion, instead of over-committing a
 //!     replica's continuous-batching window.
+//!   * `Ewma` — latency-aware placement: the router keeps a per-replica
+//!     EWMA of the observed per-request token rate (fed by
+//!     [`Router::on_completion`] from both the real pool's collectors
+//!     and the virtual-time `sim/fleet.rs` mirror) and routes to the
+//!     replica with the smallest expected drain time,
+//!     `(outstanding + 1) / rate`. Unlike `LeastOutstanding` this
+//!     penalizes fail-slow or heterogeneous replicas even when their
+//!     queues look short; with no measurements yet it degrades to
+//!     least-outstanding, so cold replicas still get probed.
 //!
 //! Replicas that are suspended (mid weight-sync during a rolling
 //! update) are skipped by every policy, which is what lets the
 //! staggered broadcast keep N-1 replicas serving.
 
 use anyhow::{Context, Result};
+
+/// EWMA smoothing weight for per-replica token-rate observations.
+const EWMA_BETA: f64 = 0.2;
 
 /// One replica's load, as seen by the router.
 #[derive(Clone, Copy, Debug, Default)]
@@ -42,25 +54,30 @@ pub enum RoutePolicy {
     RoundRobin,
     LeastOutstanding,
     QueueSched,
+    Ewma,
 }
 
 impl RoutePolicy {
-    pub const ALL: [RoutePolicy; 3] =
-        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched];
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstanding,
+        RoutePolicy::QueueSched,
+        RoutePolicy::Ewma,
+    ];
 
     pub fn as_str(self) -> &'static str {
         match self {
             RoutePolicy::RoundRobin => "round_robin",
             RoutePolicy::LeastOutstanding => "least_outstanding",
             RoutePolicy::QueueSched => "queue",
+            RoutePolicy::Ewma => "ewma",
         }
     }
 
     pub fn parse(s: &str) -> Result<Self> {
-        Self::ALL
-            .into_iter()
-            .find(|p| p.as_str() == s)
-            .with_context(|| format!("unknown route_policy {s:?} (round_robin|least_outstanding|queue)"))
+        Self::ALL.into_iter().find(|p| p.as_str() == s).with_context(|| {
+            format!("unknown route_policy {s:?} (round_robin|least_outstanding|queue|ewma)")
+        })
     }
 }
 
@@ -70,18 +87,50 @@ impl Default for RoutePolicy {
     }
 }
 
-/// Stateful router (the round-robin cursor is the only state). Shared
-/// by the real `LlmProxyPool` and the virtual-time `sim::fleet` mirror
-/// so both exercise identical placement decisions.
+/// Stateful router (round-robin cursor + per-replica EWMA token rates).
+/// Shared by the real `LlmProxyPool` and the virtual-time `sim::fleet`
+/// mirror so both exercise identical placement decisions.
 #[derive(Clone, Debug)]
 pub struct Router {
     pub policy: RoutePolicy,
     rr_next: usize,
+    /// EWMA of observed per-request token rate, tokens per (virtual or
+    /// wall) second; 0.0 = no observation yet
+    rates: Vec<f64>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Self {
-        Router { policy, rr_next: 0 }
+        Router { policy, rr_next: 0, rates: Vec::new() }
+    }
+
+    /// Feed a completion observation: `tokens` generated in `secs` on
+    /// `replica`. Both the real pool's collectors and the sim mirror
+    /// call this; the unit of time only has to be self-consistent.
+    pub fn on_completion(&mut self, replica: usize, tokens: f64, secs: f64) {
+        if self.rates.len() <= replica {
+            self.rates.resize(replica + 1, 0.0);
+        }
+        let inst = tokens.max(0.0) / secs.max(1e-9);
+        let r = &mut self.rates[replica];
+        *r = if *r == 0.0 { inst } else { EWMA_BETA * inst + (1.0 - EWMA_BETA) * *r };
+    }
+
+    /// Current rate estimate for a replica (tokens/sec; 0 = unmeasured).
+    pub fn rate(&self, replica: usize) -> f64 {
+        self.rates.get(replica).copied().unwrap_or(0.0)
+    }
+
+    /// Expected drain time of `replica` if one more request lands on it.
+    /// Unmeasured replicas score 0 so they are probed first; ties fall
+    /// back to least-outstanding, then lowest index (deterministic).
+    fn ewma_score(&self, load: &ReplicaLoad, replica: usize) -> f64 {
+        let rate = self.rate(replica);
+        if rate <= 0.0 {
+            0.0
+        } else {
+            (load.outstanding + 1) as f64 / rate
+        }
     }
 
     /// Pick a replica for the next request. `None` means "hold the
@@ -116,6 +165,13 @@ impl Router {
             RoutePolicy::QueueSched => (0..n)
                 .filter(|&i| eligible(i) && loads[i].outstanding < loads[i].slots)
                 .min_by_key(|&i| loads[i].outstanding),
+            RoutePolicy::Ewma => (0..n).filter(|&i| eligible(i)).min_by(|&a, &b| {
+                let (sa, sb) = (self.ewma_score(&loads[a], a), self.ewma_score(&loads[b], b));
+                sa.partial_cmp(&sb)
+                    .unwrap()
+                    .then(loads[a].outstanding.cmp(&loads[b].outstanding))
+                    .then(a.cmp(&b))
+            }),
         }
     }
 }
@@ -176,6 +232,46 @@ mod tests {
         assert_eq!(r.route(&loads(&[4, 3, 4], 4)), Some(1));
         // pool saturated: hold in the pool queue
         assert_eq!(r.route(&loads(&[4, 4, 4], 4)), None);
+    }
+
+    #[test]
+    fn ewma_cold_start_degrades_to_least_outstanding() {
+        let mut r = Router::new(RoutePolicy::Ewma);
+        // no observations: all scores 0, least-outstanding tie-break
+        assert_eq!(r.route(&loads(&[3, 1, 2], 4)), Some(1));
+        assert_eq!(r.route(&loads(&[2, 1, 1], 4)), Some(1));
+    }
+
+    #[test]
+    fn ewma_penalizes_slow_replica_despite_short_queue() {
+        let mut r = Router::new(RoutePolicy::Ewma);
+        r.on_completion(0, 100.0, 10.0); // 10 tok/s: fail-slow
+        r.on_completion(1, 100.0, 1.0); // 100 tok/s
+        // replica 0 has the shorter queue but 10x the drain time:
+        // (1+1)/10 = 0.2 vs (3+1)/100 = 0.04
+        assert_eq!(r.route(&loads(&[1, 3], 8)), Some(1));
+        // least-outstanding would have picked the slow one
+        let mut lo = Router::new(RoutePolicy::LeastOutstanding);
+        assert_eq!(lo.route(&loads(&[1, 3], 8)), Some(0));
+    }
+
+    #[test]
+    fn ewma_probes_unmeasured_replicas_first() {
+        let mut r = Router::new(RoutePolicy::Ewma);
+        r.on_completion(0, 100.0, 1.0);
+        // replica 1 unmeasured (score 0) wins even with a longer queue
+        assert_eq!(r.route(&loads(&[0, 2], 8)), Some(1));
+    }
+
+    #[test]
+    fn ewma_smooths_observations() {
+        let mut r = Router::new(RoutePolicy::Ewma);
+        r.on_completion(0, 100.0, 1.0); // first sample sets the rate
+        assert!((r.rate(0) - 100.0).abs() < 1e-9);
+        r.on_completion(0, 200.0, 1.0);
+        // 0.2 * 200 + 0.8 * 100 = 120
+        assert!((r.rate(0) - 120.0).abs() < 1e-9);
+        assert_eq!(r.rate(5), 0.0); // never observed
     }
 
     #[test]

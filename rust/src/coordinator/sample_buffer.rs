@@ -2,17 +2,40 @@
 //! between EnvManager producers and the AsyncController consumer.
 //!
 //! Enforces the *per-sample* asynchronous ratio alpha: a producer must
-//! acquire a ticket (`begin_sample`) before starting generation; tickets
-//! are only granted while `outstanding < (1 + alpha) * batch`, so any
-//! sample in the buffer was initiated by a policy version no older than
-//! (n - alpha) when consumed at version n, and no admitted sample is
-//! wasted. GRPO group completeness is tracked here too: `get_batch`
-//! returns whole groups.
+//! acquire a ticket (`begin_sample` / `try_begin_sample`) before
+//! starting generation; tickets are only granted while `outstanding <
+//! (1 + alpha) * batch`, so any sample in the buffer was initiated by a
+//! policy version no older than (n - alpha) when consumed at version n,
+//! and no admitted sample is wasted. GRPO group completeness is tracked
+//! here too: `get_batch` returns whole groups.
+//!
+//! Event-driven producers (the RolloutEngine) register two completion
+//! hooks instead of blocking: a *capacity* hook fired whenever a ticket
+//! is retired (or the buffer shuts down), and a *group* hook fired with
+//! the group key whenever a group completes — including keys burned by
+//! stale eviction, so redundant in-flight members can be cancelled the
+//! moment their group can no longer use them (Section 5.2.2).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 
 use crate::rl::Trajectory;
+
+/// Outcome of a non-blocking admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Ticket granted; the value is the initiating policy version.
+    Granted(u64),
+    /// Freshness budget exhausted — retry after the capacity hook fires.
+    Full,
+    /// The buffer has shut down; no further tickets will be granted.
+    Shutdown,
+}
+
+/// Fired when a ticket is retired or the buffer shuts down.
+pub type CapacityHook = Box<dyn Fn() + Send + Sync>;
+/// Fired with the group key when a group completes (or is burned).
+pub type GroupHook = Box<dyn Fn(u64) + Send + Sync>;
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BufferStats {
@@ -73,6 +96,37 @@ pub struct SampleBuffer {
     capacity: usize,
     group_size: usize,
     alpha: f64,
+    /// observer hooks, held outside `inner` and always invoked with the
+    /// inner lock released (hooks may immediately call back in)
+    hooks: Mutex<Hooks>,
+}
+
+#[derive(Default)]
+struct Hooks {
+    capacity: Option<CapacityHook>,
+    group: Option<GroupHook>,
+}
+
+impl SampleBuffer {
+    /// Fire the capacity hook (inner lock must NOT be held).
+    fn notify_capacity(&self) {
+        if let Some(h) = &self.hooks.lock().unwrap().capacity {
+            h();
+        }
+    }
+
+    /// Fire the group hook for each completed/burned key (inner lock
+    /// must NOT be held).
+    fn notify_groups(&self, keys: &[u64]) {
+        if keys.is_empty() {
+            return;
+        }
+        if let Some(h) = &self.hooks.lock().unwrap().group {
+            for &k in keys {
+                h(k);
+            }
+        }
+    }
 }
 
 impl SampleBuffer {
@@ -96,7 +150,22 @@ impl SampleBuffer {
             capacity,
             group_size,
             alpha,
+            hooks: Mutex::new(Hooks::default()),
         }
+    }
+
+    /// Register the capacity hook (event-driven producers). Fired after
+    /// every ticket retirement and on shutdown; spurious firings are
+    /// fine — callers re-check with `try_begin_sample`.
+    pub fn set_capacity_hook(&self, hook: CapacityHook) {
+        self.hooks.lock().unwrap().capacity = Some(hook);
+    }
+
+    /// Register the group-completion hook. Fired with the group key
+    /// when a group becomes consumable, and for keys burned by stale
+    /// eviction — in both cases further work on the key is wasted.
+    pub fn set_group_hook(&self, hook: GroupHook) {
+        self.hooks.lock().unwrap().group = Some(hook);
     }
 
     pub fn capacity(&self) -> usize {
@@ -124,13 +193,38 @@ impl SampleBuffer {
         }
     }
 
+    /// Non-blocking admission for event-driven producers: grants a
+    /// ticket when the freshness budget allows, otherwise reports why
+    /// not. On `Full`, retry when the capacity hook fires.
+    pub fn try_begin_sample(&self) -> Admission {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            Admission::Shutdown
+        } else if g.outstanding < self.capacity {
+            g.outstanding += 1;
+            Admission::Granted(g.version)
+        } else {
+            Admission::Full
+        }
+    }
+
     /// Producer gave up on a ticket (aborted / failed env).
     pub fn cancel(&self) {
-        let mut g = self.inner.lock().unwrap();
-        debug_assert!(g.outstanding > 0);
-        g.outstanding = g.outstanding.saturating_sub(1);
-        g.stats.cancelled += 1;
-        self.cv.notify_all();
+        {
+            let mut g = self.inner.lock().unwrap();
+            debug_assert!(g.outstanding > 0);
+            g.outstanding = g.outstanding.saturating_sub(1);
+            g.stats.cancelled += 1;
+            self.cv.notify_all();
+        }
+        self.notify_capacity();
+    }
+
+    /// Has this group already completed (or been burned)? Redundant
+    /// producers consult this before starting an episode whose output
+    /// could only ever be surplus.
+    pub fn group_completed(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().completed_keys.contains(&key)
     }
 
     /// Producer completion: file the trajectory under its group; a
@@ -142,29 +236,38 @@ impl SampleBuffer {
     /// floor) are dropped and their tickets reclaimed — the producer
     /// immediately regenerates under the current policy.
     pub fn push(&self, traj: Trajectory) {
-        let mut g = self.inner.lock().unwrap();
-        let key = traj.group;
-        if g.completed_keys.contains(&key) {
-            g.stats.surplus += 1;
-            g.outstanding = g.outstanding.saturating_sub(1);
+        let mut completed: Option<u64> = None;
+        let mut reclaimed = false;
+        {
+            let mut g = self.inner.lock().unwrap();
+            let key = traj.group;
+            if g.completed_keys.contains(&key) {
+                g.stats.surplus += 1;
+                g.outstanding = g.outstanding.saturating_sub(1);
+                reclaimed = true;
+            } else if traj.init_version < g.freshness_floor(self.alpha) {
+                g.stats.stale_evicted += 1;
+                g.outstanding = g.outstanding.saturating_sub(1);
+                reclaimed = true;
+            } else {
+                g.stats.produced += 1;
+                let entry = g.partial.entry(key).or_default();
+                entry.push(traj);
+                if entry.len() == self.group_size {
+                    let grp = g.partial.remove(&key).unwrap();
+                    g.ready.push_back(grp);
+                    g.completed_keys.insert(key);
+                    completed = Some(key);
+                }
+            }
             self.cv.notify_all();
-            return;
         }
-        if traj.init_version < g.freshness_floor(self.alpha) {
-            g.stats.stale_evicted += 1;
-            g.outstanding = g.outstanding.saturating_sub(1);
-            self.cv.notify_all();
-            return;
+        if reclaimed {
+            self.notify_capacity();
         }
-        g.stats.produced += 1;
-        let entry = g.partial.entry(key).or_default();
-        entry.push(traj);
-        if entry.len() == self.group_size {
-            let grp = g.partial.remove(&key).unwrap();
-            g.ready.push_back(grp);
-            g.completed_keys.insert(key);
+        if let Some(key) = completed {
+            self.notify_groups(&[key]);
         }
-        self.cv.notify_all();
     }
 
     /// Blocking get_batch (paper Section 4.2): returns `n_groups`
@@ -216,37 +319,44 @@ impl SampleBuffer {
     /// never complete (GRPO needs full groups); producers regenerate
     /// under the new policy, so no quota is lost.
     pub fn bump_version(&self) -> u64 {
-        let mut g = self.inner.lock().unwrap();
-        g.version += 1;
-        g.outstanding = g.outstanding.saturating_sub(g.pending_retire);
-        g.pending_retire = 0;
-        let v = g.version;
-        let floor = g.freshness_floor(self.alpha);
-        let mut evicted = 0usize;
-        g.ready.retain(|grp| {
-            if grp.iter().all(|t| t.init_version >= floor) {
-                true
-            } else {
+        let (v, burned) = {
+            let mut g = self.inner.lock().unwrap();
+            g.version += 1;
+            g.outstanding = g.outstanding.saturating_sub(g.pending_retire);
+            g.pending_retire = 0;
+            let v = g.version;
+            let floor = g.freshness_floor(self.alpha);
+            let mut evicted = 0usize;
+            g.ready.retain(|grp| {
+                if grp.iter().all(|t| t.init_version >= floor) {
+                    true
+                } else {
+                    evicted += grp.len();
+                    false
+                }
+            });
+            let stale_keys: Vec<u64> = g
+                .partial
+                .iter()
+                .filter(|(_, grp)| grp.iter().any(|t| t.init_version < floor))
+                .map(|(k, _)| *k)
+                .collect();
+            for &k in &stale_keys {
+                let grp = g.partial.remove(&k).unwrap();
                 evicted += grp.len();
-                false
+                // the key is burned; surviving members' future pushes for
+                // it must be reclaimed as surplus rather than dangle
+                g.completed_keys.insert(k);
             }
-        });
-        let stale_keys: Vec<u64> = g
-            .partial
-            .iter()
-            .filter(|(_, grp)| grp.iter().any(|t| t.init_version < floor))
-            .map(|(k, _)| *k)
-            .collect();
-        for k in stale_keys {
-            let grp = g.partial.remove(&k).unwrap();
-            evicted += grp.len();
-            // the key is burned; surviving members' future pushes for it
-            // must be reclaimed as surplus rather than dangle
-            g.completed_keys.insert(k);
-        }
-        g.stats.stale_evicted += evicted;
-        g.outstanding = g.outstanding.saturating_sub(evicted);
-        self.cv.notify_all();
+            g.stats.stale_evicted += evicted;
+            g.outstanding = g.outstanding.saturating_sub(evicted);
+            self.cv.notify_all();
+            (v, stale_keys)
+        };
+        // retirement frees budget; burned keys cancel their in-flight
+        // redundant members (they could only ever produce surplus)
+        self.notify_capacity();
+        self.notify_groups(&burned);
         v
     }
 
@@ -268,8 +378,12 @@ impl SampleBuffer {
 
     /// Wake all waiters with a shutdown signal.
     pub fn shutdown(&self) {
-        self.inner.lock().unwrap().shutdown = true;
-        self.cv.notify_all();
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.shutdown = true;
+            self.cv.notify_all();
+        }
+        self.notify_capacity();
     }
 }
 
@@ -380,6 +494,65 @@ mod tests {
         assert_eq!(got, 32);
         // per-sample freshness: consumed gap bounded by alpha exactly
         assert!(b.stats().max_version_gap <= 1, "gap {}", b.stats().max_version_gap);
+    }
+
+    #[test]
+    fn try_begin_sample_reports_full_and_shutdown() {
+        let b = SampleBuffer::new(2, 2, 0.0); // capacity 2
+        assert!(matches!(b.try_begin_sample(), Admission::Granted(0)));
+        assert!(matches!(b.try_begin_sample(), Admission::Granted(0)));
+        assert_eq!(b.try_begin_sample(), Admission::Full);
+        b.cancel();
+        assert!(matches!(b.try_begin_sample(), Admission::Granted(0)));
+        b.shutdown();
+        assert_eq!(b.try_begin_sample(), Admission::Shutdown);
+    }
+
+    #[test]
+    fn hooks_fire_on_capacity_and_group_completion() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let b = Arc::new(SampleBuffer::new(4, 2, 1.0));
+        let caps = Arc::new(AtomicUsize::new(0));
+        let groups = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let c = caps.clone();
+        b.set_capacity_hook(Box::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }));
+        let gk = groups.clone();
+        b.set_group_hook(Box::new(move |k| gk.lock().unwrap().push(k)));
+
+        for _ in 0..4 {
+            b.begin_sample();
+        }
+        b.push(traj(7, 0));
+        b.push(traj(7, 0)); // group 7 completes here
+        assert_eq!(groups.lock().unwrap().as_slice(), &[7]);
+        assert!(b.group_completed(7));
+        assert!(!b.group_completed(8));
+        // surplus for a completed group reclaims a ticket => capacity
+        b.push(traj(7, 0));
+        assert!(caps.load(Ordering::SeqCst) >= 1, "surplus must fire capacity hook");
+        // cancel fires capacity too
+        let before = caps.load(Ordering::SeqCst);
+        b.cancel();
+        assert!(caps.load(Ordering::SeqCst) > before);
+        // shutdown fires capacity so waiters re-check
+        let before = caps.load(Ordering::SeqCst);
+        b.shutdown();
+        assert!(caps.load(Ordering::SeqCst) > before);
+    }
+
+    #[test]
+    fn burned_keys_fire_group_hook_on_bump() {
+        let b = Arc::new(SampleBuffer::new(2, 2, 0.0));
+        let groups = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let gk = groups.clone();
+        b.set_group_hook(Box::new(move |k| gk.lock().unwrap().push(k)));
+        b.begin_sample();
+        b.push(traj(3, 0)); // partial group 3 at version 0
+        b.bump_version(); // floor 1 > 0: group 3 burned
+        assert_eq!(groups.lock().unwrap().as_slice(), &[3]);
+        assert!(b.group_completed(3), "burned keys count as completed");
     }
 
     #[test]

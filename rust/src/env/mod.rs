@@ -65,14 +65,37 @@ pub struct StepResult {
     pub latency: f64,
 }
 
-/// The environment interface the EnvManager drives (paper Section 4.2:
-/// `reset` then a step loop against the shared LLMProxy).
+/// Outcome of [`BaseEnv::poll_step`]: the step result plus the latency
+/// deadline before the observation may be acted upon. Event-driven
+/// engines schedule `ready_in` on a timer wheel instead of sleeping.
+#[derive(Clone, Debug)]
+pub struct PendingStep {
+    pub result: StepResult,
+    /// simulated seconds until `result` becomes observable (0 = now);
+    /// scaled into real time by the engine's `latency_scale`
+    pub ready_in: f64,
+}
+
+/// The environment interface the rollout layer drives (paper Section
+/// 4.2: `reset` then a step loop against the shared LLMProxy).
 pub trait BaseEnv: Send {
     /// Start an episode; returns the fixed-length prompt tokens.
     fn reset(&mut self, task_seed: u64) -> Vec<i32>;
 
     /// Apply an action (generated tokens) and observe.
     fn step(&mut self, action: &[i32]) -> StepResult;
+
+    /// Non-blocking step surface for the event-driven RolloutEngine:
+    /// apply the action immediately and report the latency *deadline*
+    /// instead of expecting the caller to sleep through it. The default
+    /// delegates to [`step`](Self::step) and exposes its `latency` as
+    /// the deadline, so existing envs are engine-ready as-is; envs with
+    /// genuinely asynchronous backends can override.
+    fn poll_step(&mut self, action: &[i32]) -> PendingStep {
+        let result = self.step(action);
+        let ready_in = if result.latency.is_finite() { result.latency.max(0.0) } else { 0.0 };
+        PendingStep { result, ready_in }
+    }
 
     /// Maximum interaction turns per trajectory.
     fn max_steps(&self) -> usize;
@@ -87,6 +110,25 @@ pub trait BaseEnv: Send {
 #[cfg(test)]
 mod tests {
     use super::vocab;
+    use super::BaseEnv;
+
+    #[test]
+    fn poll_step_default_exposes_latency_deadline() {
+        let mut e = crate::env::alfworld::AlfworldEnv::new(
+            5,
+            crate::workload::EnvLatency::gaussian(2.0, 0.0),
+        );
+        e.reset(3);
+        let p = e.poll_step(&[vocab::digit(1)]);
+        assert!(p.ready_in > 0.0, "latency must surface as a deadline");
+        assert!((p.ready_in - p.result.latency).abs() < 1e-12);
+        // zero-latency envs are ready immediately
+        let mut m = crate::env::math::MathEnv::new();
+        m.reset(1);
+        let p = m.poll_step(&[vocab::EOS]);
+        assert_eq!(p.ready_in, 0.0);
+        assert!(p.result.done);
+    }
 
     #[test]
     fn number_roundtrip() {

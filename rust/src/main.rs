@@ -3,7 +3,8 @@
 //!
 //!   roll-flash train  config=examples/rlvr.yaml steps=40
 //!   roll-flash train  model=tiny alpha=2 variant=tis steps=20 \
-//!                     num_replicas=3 route_policy=queue rolling_update=true
+//!                     num_replicas=3 route_policy=ewma rolling_update=true \
+//!                     num_workers=8 redundancy_factor=1.25
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -30,7 +31,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: roll-flash <train|simulate|inspect> [key=value ...]\n\
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
-                 \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue> rolling_update=<bool>\n\
+                 \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma> rolling_update=<bool>\n\
+                 \u{20}         num_workers=<n> redundancy_factor=<f>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -58,8 +60,12 @@ fn train(cli: &Cli) -> Result<()> {
         None => cfg.route_policy,
     };
     let rolling_update = cli.bool_or("rolling_update", cfg.rolling_update);
+    let num_workers: usize = cli.parse_or("num_workers", cfg.num_workers);
+    let redundancy_factor: f64 = cli.parse_or("redundancy_factor", cfg.redundancy_factor);
 
-    let dir = PathBuf::from("artifacts").join(&model);
+    // resolved against the crate dir (where `make artifacts` writes),
+    // not the CWD, so the CLI works from the workspace root too
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
     anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` (missing {model})");
     let rt = ModelRuntime::load(&dir)?;
     let weights = rt.load_init_params()?;
@@ -77,12 +83,14 @@ fn train(cli: &Cli) -> Result<()> {
         seed: cfg.seed,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers,
+        redundancy_factor,
         num_replicas,
         route_policy,
         rolling_update,
     };
     println!(
-        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update}",
+        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor}",
         variant.as_str(),
         route_policy.as_str()
     );
@@ -94,6 +102,13 @@ fn train(cli: &Cli) -> Result<()> {
     }
     let report = system.shutdown()?;
     println!("max version gap {} (alpha {alpha})", report.buffer.max_version_gap);
+    println!(
+        "engine: {} episodes (peak {} in flight), {} redundant aborts, {} abandoned",
+        report.engine.episodes,
+        report.engine.peak_inflight,
+        report.engine.redundant_aborts,
+        report.engine.abandoned
+    );
     if num_replicas > 1 {
         println!("fleet: {} migrations, {} rolling waves", report.pool.migrated, report.pool.sync_waves);
         print!("{}", report.pool.format_table());
@@ -133,7 +148,11 @@ fn simulate(cli: &Cli) -> Result<()> {
 }
 
 fn inspect(cli: &Cli) -> Result<()> {
-    let dir = PathBuf::from(cli.str_or("artifacts", "artifacts/tiny"));
+    let default = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let dir = match cli.get("artifacts") {
+        Some(p) => PathBuf::from(p),
+        None => default,
+    };
     let rt = ModelRuntime::load(&dir)?;
     let m = &rt.manifest;
     println!(

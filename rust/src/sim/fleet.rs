@@ -14,6 +14,10 @@
 //!   * queue scheduling (pool-side backpressure at the decode-slot
 //!     cap) bounds per-replica co-residency, avoiding the
 //!     processor-sharing slowdown beyond the bandwidth knee;
+//!   * EWMA latency-aware routing measures each replica's delivered
+//!     token rate (the same `Router::on_completion` feed the real
+//!     pool's collectors use) and starves fail-slow / heterogeneous
+//!     replicas (`slow_replica`) that least-outstanding keeps feeding;
 //!   * staggered (rolling) weight sync keeps N-1 replicas decoding
 //!     through a model update; broadcast sync stalls all of them.
 
@@ -46,6 +50,9 @@ pub struct FleetSimConfig {
     pub sync_interval: f64,
     /// pause duration per replica per wave
     pub sync_time: f64,
+    /// heterogeneous fleet: replica `index` decodes `factor`x slower
+    /// (fail-slow hardware, thermal throttling, a noisy neighbor)
+    pub slow_replica: Option<(usize, f64)>,
     pub seed: u64,
 }
 
@@ -65,6 +72,7 @@ impl FleetSimConfig {
             decode: DecodeCost::qwen3_8b(),
             sync_interval: 120.0,
             sync_time: 10.0,
+            slow_replica: None,
             seed: 17,
         }
     }
@@ -90,6 +98,8 @@ pub struct FleetSimReport {
     pub max_inflight: usize,
     /// largest pool-side queue observed (backpressure depth)
     pub pool_queue_max: usize,
+    /// requests placed on each replica (routing share)
+    pub routed: Vec<usize>,
 }
 
 #[derive(Clone, Copy)]
@@ -103,26 +113,37 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     assert!(cfg.num_replicas > 0, "empty fleet");
     let n = cfg.num_replicas;
     let mut rng = Rng::new(cfg.seed);
-    let mut replicas: Vec<GpuPool> =
-        (0..n).map(|_| GpuPool::new(1, cfg.decode.token_time, cfg.knee, cfg.max_active)).collect();
+    let mut replicas: Vec<GpuPool> = (0..n)
+        .map(|r| {
+            let factor = match cfg.slow_replica {
+                Some((slow, f)) if slow == r => f.max(1e-9),
+                _ => 1.0,
+            };
+            GpuPool::new(1, cfg.decode.token_time * factor, cfg.knee, cfg.max_active)
+        })
+        .collect();
     let mut paused = vec![false; n];
     let mut router = Router::new(cfg.route_policy);
 
     let mut pending: VecDeque<(u64, f64)> = VecDeque::new(); // (id, tokens)
-    let mut submit_time: HashMap<u64, f64> = HashMap::new();
+    let mut submit_time: HashMap<u64, (f64, f64)> = HashMap::new(); // id -> (t, tokens)
+    // id -> placement time: the router's EWMA feed measures dispatch->
+    // completion, matching the real pool (InFlight::dispatched), not
+    // pool-queue wait
+    let mut dispatch_time: HashMap<u64, f64> = HashMap::new();
     let mut next_id = 0u64;
     let mut now = 0.0f64;
     let mut submitted = 0usize;
     let mut completed = 0usize;
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.total_requests);
-    let mut report = FleetSimReport::default();
+    let mut report = FleetSimReport { routed: vec![0; n], ..Default::default() };
     let mut max_paused = 0usize;
     let mut phase = SyncPhase::Idle {
         next: if cfg.sync_interval > 0.0 { cfg.sync_interval } else { f64::INFINITY },
     };
 
     let new_request = |pending: &mut VecDeque<(u64, f64)>,
-                           submit_time: &mut HashMap<u64, f64>,
+                           submit_time: &mut HashMap<u64, (f64, f64)>,
                            next_id: &mut u64,
                            rng: &mut Rng,
                            now: f64| {
@@ -130,13 +151,14 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         let tokens =
             cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time;
         pending.push_back((*next_id, tokens));
-        submit_time.insert(*next_id, now);
+        submit_time.insert(*next_id, (now, tokens));
         *next_id += 1;
     };
 
     // dispatch pool-queued requests while the router allows
     let dispatch = |replicas: &mut Vec<GpuPool>,
                     pending: &mut VecDeque<(u64, f64)>,
+                    dispatch_time: &mut HashMap<u64, f64>,
                     router: &mut Router,
                     paused: &[bool],
                     report: &mut FleetSimReport,
@@ -152,6 +174,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             let Some(r) = router.route(&loads) else { break };
             let (id, tokens) = pending.pop_front().unwrap();
             replicas[r].submit_to(0, id, tokens, now);
+            dispatch_time.insert(id, now);
+            report.routed[r] += 1;
             report.max_inflight = report.max_inflight.max(replicas[r].in_flight());
         }
         report.pool_queue_max = report.pool_queue_max.max(pending.len());
@@ -161,7 +185,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
         submitted += 1;
     }
-    dispatch(&mut replicas, &mut pending, &mut router, &paused, &mut report, now);
+    dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
 
     while completed < cfg.total_requests {
         // earliest generation completion across the fleet
@@ -182,14 +206,19 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             Some((t, r)) if t <= sync_t => {
                 now = t;
                 let id = replicas[r].pop_completion(t);
-                latencies.push(now - submit_time.remove(&id).unwrap_or(now));
+                let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
+                let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
+                // the same observation feed the real pool's collectors
+                // give the Router: dispatch-to-completion token rate
+                router.on_completion(r, tokens, now - t_dispatch);
+                latencies.push(now - t_submit);
                 completed += 1;
                 // closed loop: the freed client submits its next task
                 if submitted < cfg.total_requests {
                     new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
                     submitted += 1;
                 }
-                dispatch(&mut replicas, &mut pending, &mut router, &paused, &mut report, now);
+                dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
             }
             _ => {
                 assert!(
@@ -235,7 +264,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         SyncPhase::Idle { next: now + cfg.sync_interval }
                     }
                 };
-                dispatch(&mut replicas, &mut pending, &mut router, &paused, &mut report, now);
+                dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
             }
         }
     }
@@ -315,6 +344,52 @@ mod tests {
         let mut rr = skewed(RoutePolicy::RoundRobin);
         rr.max_active = 8;
         assert!(run(&rr).max_inflight > 8);
+    }
+
+    #[test]
+    fn ewma_starves_fail_slow_replica_more_than_least_outstanding() {
+        // replica 2 decodes 5x slower; both policies must finish the
+        // same work budget, but EWMA should place visibly less of it on
+        // the cripple (rate-aware) than least-outstanding (queue-aware)
+        let base = {
+            let mut c = skewed(RoutePolicy::LeastOutstanding);
+            c.slow_replica = Some((2, 5.0));
+            c
+        };
+        let lo = run(&base);
+        let mut ewma_cfg = base.clone();
+        ewma_cfg.route_policy = RoutePolicy::Ewma;
+        let ew = run(&ewma_cfg);
+        assert_eq!(lo.completed, base.total_requests);
+        assert_eq!(ew.completed, base.total_requests);
+        assert!(
+            ew.routed[2] < lo.routed[2],
+            "ewma must starve the slow replica: ewma {:?} vs lo {:?}",
+            ew.routed,
+            lo.routed
+        );
+        assert!(
+            ew.makespan <= lo.makespan * 1.05,
+            "ewma {:.0}s must not lose to least-outstanding {:.0}s",
+            ew.makespan,
+            lo.makespan
+        );
+    }
+
+    #[test]
+    fn ewma_matches_least_outstanding_on_homogeneous_fleet() {
+        // with identical replicas the rate estimates converge and EWMA
+        // behaves like least-outstanding: no pathological imbalance
+        let lo = run(&skewed(RoutePolicy::LeastOutstanding));
+        let ew = run(&skewed(RoutePolicy::Ewma));
+        assert_eq!(ew.completed, lo.completed);
+        assert!(
+            ew.makespan <= lo.makespan * 1.25,
+            "homogeneous ewma {:.0}s vs lo {:.0}s",
+            ew.makespan,
+            lo.makespan
+        );
+        assert!(ew.routed.iter().all(|&r| r > 0), "every replica serves: {:?}", ew.routed);
     }
 
     #[test]

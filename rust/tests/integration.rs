@@ -1,6 +1,6 @@
-//! Full-stack integration: LLMProxy + EnvManagers + SampleBuffer +
-//! AsyncController against the real PJRT engine (tiny artifacts).
-//! Skipped when `make artifacts` has not run.
+//! Full-stack integration: LLMProxy fleet + RolloutEngine +
+//! SampleBuffer + AsyncController against the real PJRT engine (tiny
+//! artifacts). Skipped when `make artifacts` has not run.
 
 use std::path::PathBuf;
 
@@ -78,6 +78,8 @@ fn fleet_collects_complete_groups() {
         seed: 3,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -117,6 +119,8 @@ fn sync_training_loop_runs_on_math_env() {
         seed: 5,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -162,6 +166,8 @@ fn async_training_overlaps_and_bounds_staleness() {
         seed: 11,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -189,7 +195,7 @@ fn async_training_overlaps_and_bounds_staleness() {
 }
 
 #[test]
-fn multiturn_env_manager_interleaves_obs_and_actions() {
+fn multiturn_engine_interleaves_obs_and_actions() {
     let Some(dir) = artifacts() else { return };
     let rt = ModelRuntime::load(&dir).unwrap();
     let weights = rt.load_init_params().unwrap();
@@ -203,6 +209,8 @@ fn multiturn_env_manager_interleaves_obs_and_actions() {
         seed: 9,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -247,6 +255,8 @@ fn redundant_groups_produce_surplus_without_blocking() {
         seed: 13,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
@@ -255,8 +265,14 @@ fn redundant_groups_produce_surplus_without_blocking() {
     let samples = system.buffer.get_batch(2).expect("batch");
     assert_eq!(samples.len(), 8);
     let report = system.shutdown().unwrap();
-    // the 5th member of each completed group is surplus
-    assert!(report.buffer.surplus > 0 || report.buffer.produced >= 8);
+    // the 5th member of each completed group is reclaimed: either its
+    // generation was aborted in flight (engine cancellation) or it
+    // finished first and was absorbed as surplus
+    assert!(
+        report.engine.redundant_aborts + report.engine.redundant_cancels > 0
+            || report.buffer.surplus > 0
+            || report.buffer.produced >= 8
+    );
 }
 
 // ---------------------------------------------------------------------------
@@ -401,6 +417,8 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         seed: 33,
         latency_scale: 0.0,
         hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
         num_replicas: 3,
         route_policy: RoutePolicy::QueueSched,
         rolling_update: true,
@@ -427,4 +445,148 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
     assert_eq!(report.pool.replicas.len(), 3);
     assert!(report.buffer.consumed >= 4 * 16);
     assert!(report.proxy.completed as usize >= report.buffer.consumed);
+}
+
+// ---------------------------------------------------------------------------
+// The event-driven RolloutEngine at scale, redundant rollout on the
+// real engine, and fleet fault injection.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_drives_256_episodes_on_8_workers() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    // 64 groups x 4 members = 256 concurrent episodes, 8 env workers
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 64,
+        env_group_size: 4,
+        consume_groups: 64,
+        consume_group_size: 4,
+        alpha: 0.0,
+        seed: 41,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+        num_workers: 8,
+        redundancy_factor: 1.0,
+        num_replicas: 2,
+        route_policy: RoutePolicy::LeastOutstanding,
+        rolling_update: true,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
+    assert_eq!(samples.len(), 256);
+    let mut counts = std::collections::BTreeMap::new();
+    for s in &samples {
+        *counts.entry(s.group).or_insert(0usize) += 1;
+    }
+    assert!(counts.values().all(|&c| c == 4), "complete groups only");
+    let report = system.shutdown().unwrap();
+    assert!(report.episodes >= 256);
+    assert_eq!(
+        report.engine.peak_inflight, 256,
+        "the engine must hold all 256 episodes in flight on 8 workers"
+    );
+}
+
+#[test]
+fn engine_redundancy_aborts_surplus_on_real_fleet() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    // 4 groups x 4 + redundancy 2.0 => 8 lanes racing per group
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha: 3.0, // admit every lane
+        seed: 43,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 2.0,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+    let samples = system.buffer.get_batch(4).expect("batch");
+    assert_eq!(samples.len(), 16);
+    let report = system.shutdown().unwrap();
+    // losers are reclaimed, not completed: cancellation dominates and
+    // the buffer sees (almost) no surplus completions
+    assert!(
+        report.engine.redundant_aborts + report.engine.redundant_cancels > 0,
+        "redundant lanes must be cancelled: {:?}",
+        report.engine
+    );
+    assert!(
+        report.buffer.surplus <= report.engine.redundant_aborts as usize
+            + report.engine.redundant_cancels as usize,
+        "cancellation should beat surplus completion: surplus {} vs {:?}",
+        report.buffer.surplus,
+        report.engine
+    );
+}
+
+#[test]
+fn replica_death_mid_run_keeps_training_alive() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let mut st = rt.train_state(&weights).unwrap();
+    let cfg = RolloutSystemCfg {
+        artifacts_dir: dir,
+        num_env_groups: 4,
+        env_group_size: 4,
+        consume_groups: 4,
+        consume_group_size: 4,
+        alpha: 1.0,
+        seed: 47,
+        latency_scale: 0.0,
+        hang_timeout: 0.5, // detect the dead replica's hung generations
+        num_workers: 4,
+        redundancy_factor: 1.0,
+        num_replicas: 2,
+        route_policy: RoutePolicy::LeastOutstanding,
+        rolling_update: true,
+    };
+    let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
+
+    // kill replica 1 after the first training step has consumed a batch
+    let proxy = system.proxy.clone();
+    let buffer = system.buffer.clone();
+    let killer = std::thread::spawn(move || {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        while buffer.version() < 1 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        proxy.kill_replica(1);
+    });
+
+    let steps = 3;
+    let ctl = ControllerCfg {
+        variant: PgVariant::Tis,
+        steps,
+        lr: 1e-3,
+        n_groups: 4,
+        group_size: 4,
+        sync_mode: false,
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
+    killer.join().unwrap();
+    // the step count is reached despite losing half the fleet mid-run
+    assert_eq!(logs.len(), steps, "training must survive the replica death");
+    let report = system.shutdown().unwrap();
+    assert!(report.buffer.consumed >= steps * 16);
+    // hung generations were migrated or abandoned-and-reclaimed, never
+    // leaked: every admission ticket is accounted for
+    let s = &report.buffer;
+    assert!(
+        s.produced + s.cancelled + s.surplus + s.stale_evicted >= s.consumed,
+        "ticket accounting leaked: {s:?}"
+    );
 }
