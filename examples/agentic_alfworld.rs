@@ -57,6 +57,8 @@ fn main() -> anyhow::Result<()> {
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",

@@ -67,6 +67,8 @@ fn main() -> anyhow::Result<()> {
             route_policy: policy,
             rolling_update: true,
             replica_slots: rt.manifest.decode_batch,
+            partial_migration: true,
+            min_salvage_tokens: 1,
         };
         let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
         // identical skewed workload for both policies: mostly short
@@ -113,6 +115,8 @@ fn main() -> anyhow::Result<()> {
         num_replicas: replicas,
         route_policy: route,
         rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {
@@ -137,10 +141,15 @@ fn main() -> anyhow::Result<()> {
         report.pool.sync_waves,
         replicas - 1
     );
-    println!("migrations {}  pool-queue depth mean {:.1} max {:.0}",
+    println!("migrations {} ({} resumed)  pool-queue depth mean {:.1} max {:.0}",
         report.pool.migrated,
+        report.pool.resumed,
         report.pool.pool_queue_depth.mean(),
         report.pool.pool_queue_depth.max()
+    );
+    println!(
+        "tokens salvaged {}  wasted {}",
+        report.pool.tokens.salvaged_tokens, report.pool.tokens.wasted_tokens
     );
     let bound = alpha.ceil();
     println!(

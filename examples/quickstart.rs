@@ -56,6 +56,8 @@ fn main() -> anyhow::Result<()> {
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 

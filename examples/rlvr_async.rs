@@ -66,6 +66,8 @@ fn main() -> anyhow::Result<()> {
         num_replicas,
         route_policy,
         rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;

@@ -25,8 +25,12 @@ fn cfg(groups: usize, group_size: usize) -> AgenticSimConfig {
 
 fn main() {
     println!("== Fig 10: redundant env rollout heatmap (quota 32x8 = 256) ==\n");
-    let base = run_rollout(&cfg(32, 8)).rollout_time;
-    println!("baseline 32x8: {base:.0}s\n");
+    let base_report = run_rollout(&cfg(32, 8));
+    let base = base_report.rollout_time;
+    println!(
+        "baseline 32x8: {base:.0}s ({} restarts re-decoding {:.0} tokens from scratch)\n",
+        base_report.restarts, base_report.wasted_tokens
+    );
     let group_sizes = [8usize, 9, 10, 11, 12];
     let header: Vec<String> = std::iter::once("groups \\ size".to_string())
         .chain(group_sizes.iter().map(|g| g.to_string()))
@@ -35,10 +39,13 @@ fn main() {
     let mut table = Table::new(&header_refs);
     let mut by_groups = Vec::new();
     let mut by_size = Vec::new();
+    let mut wasted_max = base_report.wasted_tokens;
     for groups in [32usize, 33, 34, 35, 36] {
         let mut row = vec![groups.to_string()];
         for &gs in &group_sizes {
-            let t = run_rollout(&cfg(groups, gs)).rollout_time;
+            let r = run_rollout(&cfg(groups, gs));
+            let t = r.rollout_time;
+            wasted_max = wasted_max.max(r.wasted_tokens);
             row.push(format!("{:.2}x", base / t));
             if gs == 8 {
                 by_groups.push(base / t); // grow groups, size fixed
@@ -50,6 +57,11 @@ fn main() {
         table.row(&row);
     }
     println!("{}", table.to_markdown());
+    println!(
+        "fail-stop restarts burn up to {wasted_max:.0} tokens per collection step here — \
+         redundancy hides the latency, but only prefix salvage (partial_migration in the \
+         coordinator fleet) recovers the decode work itself"
+    );
     println!(
         "adding groups (32->36, size 8): {:.2}x -> {:.2}x; adding size (8->12, 32 groups): {:.2}x -> {:.2}x",
         by_groups[0],

@@ -35,6 +35,8 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         num_replicas: 1,
         route_policy: Default::default(),
         rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {

@@ -13,7 +13,11 @@
 //!     starves a fail-slow replica that least-outstanding keeps
 //!     feeding (the heterogeneous-fleet regime);
 //!   * rolling weight sync keeps N-1 replicas decoding through a
-//!     model update; broadcast parks the whole fleet.
+//!     model update; broadcast parks the whole fleet;
+//!   * prefix-salvaging migration (`partial_migration`) conserves the
+//!     decoded tokens of requests moved off a fail-slow replica; the
+//!     from-scratch arm re-decodes them — the wasted-token gap is the
+//!     fail-slow bill the resumable-task surface eliminates.
 
 use roll_flash::coordinator::RoutePolicy;
 use roll_flash::metrics::Table;
@@ -105,6 +109,43 @@ fn main() {
         ]);
     }
     println!("{}", table.to_markdown());
+
+    println!("== Migration off a 5x fail-slow replica: salvage vs from-scratch (4 replicas) ==\n");
+    let mut table = Table::new(&[
+        "arm", "migrations", "salvaged tok", "wasted tok", "makespan s", "p99 lat s",
+    ]);
+    let mut wasted = Vec::new();
+    for partial in [true, false] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.sync_interval = 0.0;
+        cfg.slow_replica = Some((3, 5.0));
+        cfg.hang_timeout = 60.0;
+        cfg.partial_migration = partial;
+        let r = run(&cfg);
+        wasted.push(r.wasted_tokens);
+        table.row(&[
+            if partial { "partial_migration".into() } else { "from-scratch".to_string() },
+            r.migrations.to_string(),
+            format!("{:.0}", r.salvaged_tokens),
+            format!("{:.0}", r.wasted_tokens),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.p99_latency),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "wasted tokens: partial {:.0} vs from-scratch {:.0} ({})\n",
+        wasted[0],
+        wasted[1],
+        if wasted[0] < wasted[1] {
+            "salvage strictly lower — decoded prefixes survive migration"
+        } else {
+            "UNEXPECTED: salvage did not reduce waste"
+        }
+    );
 
     println!("== Weight sync: rolling vs broadcast (4 replicas) ==\n");
     let mut table = Table::new(&[

@@ -117,6 +117,12 @@ pub struct RollConfig {
     pub route_policy: RoutePolicy,
     /// staggered weight sync (at most one replica paused at a time)
     pub rolling_update: bool,
+    /// prefix-salvaging migration: a generation moved off a hung/dead
+    /// replica resumes from its decoded prefix instead of restarting;
+    /// false = the old abort-and-resubmit-from-scratch behavior
+    pub partial_migration: bool,
+    /// shortest salvaged prefix worth resuming (tokens)
+    pub min_salvage_tokens: usize,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -146,6 +152,8 @@ impl Default for RollConfig {
             num_replicas: 1,
             route_policy: RoutePolicy::LeastOutstanding,
             rolling_update: true,
+            partial_migration: true,
+            min_salvage_tokens: 1,
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -221,6 +229,12 @@ impl RollConfig {
         if let Some(Json::Bool(b)) = j.get("rolling_update") {
             cfg.rolling_update = *b;
         }
+        if let Some(Json::Bool(b)) = j.get("partial_migration") {
+            cfg.partial_migration = *b;
+        }
+        if let Some(v) = num(&j, "min_salvage_tokens") {
+            cfg.min_salvage_tokens = v as usize;
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -283,6 +297,7 @@ impl RollConfig {
             "redundancy_factor must be >= 1.0"
         );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be positive");
+        anyhow::ensure!(self.min_salvage_tokens >= 1, "min_salvage_tokens must be >= 1");
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
         Ok(())
     }
@@ -371,6 +386,24 @@ rolling_update: false
         assert!(d.rolling_update);
         assert!(RollConfig::from_yaml("num_replicas: 0").is_err());
         assert!(RollConfig::from_yaml("route_policy: bogus").is_err());
+    }
+
+    #[test]
+    fn parses_partial_migration_keys() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+partial_migration: false
+min_salvage_tokens: 16
+"#,
+        )
+        .unwrap();
+        assert!(!cfg.partial_migration);
+        assert_eq!(cfg.min_salvage_tokens, 16);
+        // defaults: salvage on, any decoded token worth keeping
+        let d = RollConfig::default();
+        assert!(d.partial_migration);
+        assert_eq!(d.min_salvage_tokens, 1);
+        assert!(RollConfig::from_yaml("min_salvage_tokens: 0").is_err());
     }
 
     #[test]

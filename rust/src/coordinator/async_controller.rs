@@ -53,6 +53,17 @@ pub struct StepLog {
     /// rolling-sync lag across inference replicas right after this
     /// step's model_update (max - min acknowledged weight version)
     pub replica_version_skew: u64,
+    /// samples consumed THIS step whose behavior policy was piecewise
+    /// across a weight update (a salvaged prefix resumed under newer
+    /// weights — partial migration). Zero whenever salvage is off or
+    /// no migration straddled a model_update.
+    pub cross_version_samples: usize,
+    /// decoded tokens salvaged by migration/resubmission during this
+    /// step (fleet-wide delta of the pool's TokenLedger)
+    pub salvaged_tokens: u64,
+    /// decoded tokens discarded without salvage during this step
+    /// (aborts + from-scratch migration; the fail-slow/fail-stop bill)
+    pub wasted_tokens: u64,
     pub wall_secs: f64,
 }
 
@@ -77,6 +88,11 @@ pub fn run_training(
 
     for step in 0..cfg.steps {
         let t0 = Instant::now();
+        // snapshot BEFORE get_batch: consumption stats (version gaps,
+        // cross-version counts) are recorded inside get_batch itself,
+        // so reading afterwards would always difference to zero
+        let gap_before = buffer.stats();
+        let tokens_before = proxy.token_stats();
         let Some(samples) = buffer.get_batch(cfg.n_groups) else {
             anyhow::bail!("sample buffer shut down mid-training");
         };
@@ -86,7 +102,6 @@ pub fn run_training(
 
         let advantages = rl::grpo_advantages(&samples);
         let signs = rl::topr_signs(&samples, &advantages);
-        let gap_before = buffer.stats();
 
         // minibatch sweep (gradient_accumulation analogue: sequential
         // Adam updates over chunks, as ppo_epochs=1 single pass)
@@ -123,6 +138,7 @@ pub fn run_training(
         }
 
         let gap_after = buffer.stats();
+        let tokens_after = proxy.token_stats();
         logs.push(StepLog {
             step,
             loss: agg.loss,
@@ -139,6 +155,13 @@ pub fn run_training(
             },
             max_version_gap: gap_after.max_version_gap,
             replica_version_skew: proxy.version_skew(),
+            cross_version_samples: gap_after
+                .cross_version_samples
+                .saturating_sub(gap_before.cross_version_samples),
+            salvaged_tokens: tokens_after
+                .salvaged_tokens
+                .saturating_sub(tokens_before.salvaged_tokens),
+            wasted_tokens: tokens_after.wasted_tokens.saturating_sub(tokens_before.wasted_tokens),
             wall_secs: t0.elapsed().as_secs_f64(),
         });
     }
@@ -147,11 +170,14 @@ pub fn run_training(
 
 /// Format a step log line (shared by examples and benches). `gap` is
 /// mean/max consumed staleness; `skew` is the rolling-sync replica
-/// weight-version spread at the end of the step.
+/// weight-version spread; `xver` counts piecewise-policy samples
+/// consumed this step (salvaged prefixes spanning an update); `salv`/
+/// `waste` are the step's decoded-token salvage and loss.
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
-        l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew, l.wall_secs
+        l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
+        l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.wall_secs
     )
 }

@@ -1,13 +1,14 @@
 //! Inference fleet (the paper's LLMProxy generalized to a *pool* of
-//! replicas): N `LlmProxy` engines behind one `generate` interface.
+//! replicas): N `LlmProxy` engines behind one resumable-task
+//! interface.
 //!
 //! The single-proxy coordinator cannot reproduce the Figure 1b scaling
 //! story — rollout throughput is capped by one decode loop. The pool
-//! adds the two load-bearing mechanisms of replica-level serving:
+//! adds the load-bearing mechanisms of replica-level serving:
 //!
-//!   1. *Load-balanced placement*: each request is routed by a
-//!      pluggable [`RoutePolicy`] (round-robin, least-outstanding, or
-//!      queue scheduling with pool-side backpressure — see
+//!   1. *Load-balanced placement*: each [`GenerationTask`] is routed by
+//!      a pluggable [`RoutePolicy`] (round-robin, least-outstanding,
+//!      queue scheduling with pool-side backpressure, or EWMA — see
 //!      `routing.rs`). A per-replica completion collector feeds
 //!      finished generations back to the caller and re-dispatches
 //!      pool-queued work as decode slots free up.
@@ -22,15 +23,27 @@
 //!      instead broadcast inline so it stays ordered before the
 //!      controller's `resume` on every replica's command channel —
 //!      sync mode remains strictly on-policy.
+//!   3. *Prefix-salvaging migration* (`partial_migration`, the
+//!      fail-slow story of Section 5.2.2): when a caller times out
+//!      waiting on a generation (`hang_timeout`), [`LlmProxyPool::
+//!      migrate`] RECLAIMs the request from its current replica —
+//!      receiving the tokens decoded so far — and resubmits it
+//!      elsewhere as a resumed task, keeping the original reply
+//!      channel. The moved generation re-prefills `prompt ++ prefix`
+//!      and continues where it stopped instead of re-decoding from
+//!      scratch. Salvages shorter than `min_salvage_tokens` (or any
+//!      salvage when the knob is off — the from-scratch arm) are
+//!      discarded and counted as `wasted_tokens`; reused prefixes
+//!      count as `salvaged_tokens`. Both live in the pool-shared
+//!      [`TokenLedger`], live-readable via `token_stats`.
 //!
-//! Fail-slow replicas are handled by abort-and-resubmit *migration*:
-//! when a caller times out waiting on a generation (`hang_timeout`),
-//! [`LlmProxyPool::migrate`] aborts the request on its current replica
-//! and resubmits the same prompt elsewhere, keeping the original reply
-//! channel so the caller just keeps waiting. Fail-*stop* replicas
-//! (event loop gone) are detected at submit time: the request fails
-//! over to a surviving replica, and when none survive it is dropped so
-//! the caller observes disconnection instead of hanging forever.
+//! Fail-*stop* replicas are handled on two paths: `kill_replica`
+//! drains salvage from the doomed loop and immediately re-dispatches
+//! its in-flight work to survivors (resumed when salvage succeeded),
+//! and a replica whose event loop is simply gone is detected at submit
+//! time — the request fails over to a surviving replica with its
+//! salvaged prefix intact, and when none survive it is dropped so the
+//! caller observes disconnection instead of hanging forever.
 //!
 //! Per-replica queue-depth and utilization are recorded into
 //! [`metrics::Histogram`]s and returned in the [`PoolReport`].
@@ -38,19 +51,35 @@
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::llm_proxy::{GenResult, LlmProxy, ProxyClient, ProxyReport};
+use crate::coordinator::llm_proxy::{
+    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
+    TokenStats,
+};
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
 use crate::metrics::{Histogram, Table};
 
+/// Longest the pool waits for a RECLAIM reply. A healthy (even
+/// fail-slow) loop answers between decode steps (~ms); a killed loop's
+/// reply channel disconnects immediately; only a truly wedged thread
+/// runs out the clock, in which case migration falls back to
+/// resubmitting whatever prefix the pool already holds (the wedged
+/// loop's late answer is counted wasted proxy-side). Kept short
+/// because `migrate` runs on the RolloutEngine's event thread: the
+/// worst-case stall per hung generation is one decode-step-scale
+/// wait, not a long freeze. A fully asynchronous reclaim is a ROADMAP
+/// follow-on.
+const SALVAGE_WAIT: Duration = Duration::from_millis(50);
+
 /// Fleet shape and behavior knobs (`num_replicas`, `route_policy`,
-/// `rolling_update` in YAML / CLI).
+/// `rolling_update`, `partial_migration`, `min_salvage_tokens` in
+/// YAML / CLI).
 #[derive(Clone, Debug)]
 pub struct PoolCfg {
     pub num_replicas: usize,
@@ -61,6 +90,13 @@ pub struct PoolCfg {
     /// decode slots per replica (the manifest's `decode_batch`) —
     /// the admission cap the queue-scheduling policy routes against
     pub replica_slots: usize,
+    /// carry the decoded prefix across migration / dead-replica
+    /// resubmission; false = the old abort-and-resubmit-from-scratch
+    /// behavior (decoded tokens are burned, but now counted)
+    pub partial_migration: bool,
+    /// shortest salvage worth resuming; shorter prefixes are dropped
+    /// (and counted wasted) rather than carried
+    pub min_salvage_tokens: usize,
 }
 
 impl PoolCfg {
@@ -70,27 +106,27 @@ impl PoolCfg {
             route_policy: RoutePolicy::default(),
             rolling_update: true,
             replica_slots,
+            partial_migration: true,
+            min_salvage_tokens: 1,
         }
     }
 }
 
 /// A request held pool-side (queue scheduling backpressure, or every
-/// replica suspended).
+/// replica suspended). The task keeps its salvaged prefix while it
+/// waits.
 struct Pending {
     pool_id: u64,
-    prompt: Vec<i32>,
-    max_new_tokens: usize,
-    reply: Sender<GenResult>,
+    task: GenerationTask,
 }
 
-/// A request dispatched to a replica. Prompt is retained so migration
-/// can resubmit it elsewhere with the same reply channel.
+/// A request dispatched to a replica. The task (prompt + current
+/// salvaged prefix) is retained so migration and dead-replica
+/// resubmission can move it with the same reply channel.
 struct InFlight {
     replica: usize,
     inner_id: u64,
-    prompt: Vec<i32>,
-    max_new_tokens: usize,
-    reply: Sender<GenResult>,
+    task: GenerationTask,
     migrations: u32,
     /// dispatch wall time — feeds the router's EWMA token-rate estimate
     dispatched: Instant,
@@ -118,6 +154,8 @@ struct PoolState {
     replica_version: Vec<u64>,
     routed: Vec<u64>,
     migrated: u64,
+    /// migrations/resubmissions that carried a salvaged prefix
+    resumed: u64,
     /// rolling-broadcast waves completed by the sync agent
     sync_waves: u64,
     /// decode slots per replica (routing admission cap)
@@ -153,34 +191,55 @@ impl PoolState {
 struct Shared {
     clients: Vec<ProxyClient>,
     state: Mutex<PoolState>,
+    /// live wasted/salvaged token counters, shared with every replica
+    ledger: Arc<TokenLedger>,
+    partial_migration: bool,
+    min_salvage_tokens: usize,
 }
 
 impl Shared {
     /// Dispatch a request to replica `r`; caller holds the state lock.
     /// A submit failure means the replica's event loop is gone — the
-    /// replica is marked dead and the request fails over: re-routed if
-    /// a replica is available now, re-queued while any survive, and
-    /// dropped (disconnecting the caller's reply channel) once the
-    /// whole fleet is dead.
+    /// replica is marked dead and the request fails over *with its
+    /// salvaged prefix intact*: re-routed if a replica is available
+    /// now, re-queued while any survive, and dropped (disconnecting
+    /// the caller's reply channel) once the whole fleet is dead.
     fn dispatch(&self, st: &mut PoolState, r: usize, req: Pending, migrations: u32) {
         let mut r = r;
         loop {
-            let tx = st.completion_tx[r].as_ref().expect("collector channel live").clone();
-            match self.clients[r].try_submit(req.prompt.clone(), req.max_new_tokens, tx) {
+            // a missing collector channel means the pool is tearing
+            // down (migrate/kill re-dispatch racing shutdown): drop the
+            // request — counting its carried prefix — so the caller
+            // observes disconnection
+            let Some(tx) = st.completion_tx[r].as_ref().cloned() else {
+                self.ledger.add_wasted(req.task.prefix.len() as u64);
+                return;
+            };
+            let replica_task = GenerationTask {
+                prompt: req.task.prompt.clone(),
+                prefix: req.task.prefix.clone(),
+                prefix_logps: req.task.prefix_logps.clone(),
+                prefix_version: req.task.prefix_version,
+                budget: req.task.budget,
+                greedy: req.task.greedy,
+                reply: tx,
+            };
+            match self.clients[r].try_submit(replica_task) {
                 Some(inner_id) => {
                     st.depth[r].record(st.outstanding[r] as f64);
                     st.by_inner[r].insert(inner_id, req.pool_id);
                     st.outstanding[r] += 1;
                     st.routed[r] += 1;
                     st.util[r].record(st.outstanding[r].min(st.slots) as f64 / st.slots as f64);
+                    if !req.task.prefix.is_empty() {
+                        st.resumed += 1;
+                    }
                     st.inflight.insert(
                         req.pool_id,
                         InFlight {
                             replica: r,
                             inner_id,
-                            prompt: req.prompt,
-                            max_new_tokens: req.max_new_tokens,
-                            reply: req.reply,
+                            task: req.task,
                             migrations,
                             dispatched: Instant::now(),
                         },
@@ -192,7 +251,12 @@ impl Shared {
                     let loads = st.loads();
                     match st.router.route_excluding(&loads, Some(r)) {
                         Some(next) => r = next,
-                        None if st.all_dead() => return, // drop: caller disconnects
+                        None if st.all_dead() => {
+                            // drop: caller disconnects; the salvaged
+                            // prefix dies with the fleet
+                            self.ledger.add_wasted(req.task.prefix.len() as u64);
+                            return;
+                        }
                         None => {
                             st.queue.push_back(req);
                             return;
@@ -206,7 +270,11 @@ impl Shared {
     /// Move pool-queued requests onto replicas while the router allows.
     fn drain(&self, st: &mut PoolState) {
         if st.all_dead() {
-            st.queue.clear(); // drop: callers observe disconnection
+            // drop: callers observe disconnection; carried prefixes are
+            // decoded work that now dies uncollected — count it
+            for p in st.queue.drain(..) {
+                self.ledger.add_wasted(p.task.prefix.len() as u64);
+            }
             return;
         }
         while !st.queue.is_empty() {
@@ -214,6 +282,40 @@ impl Shared {
             let Some(r) = st.router.route(&loads) else { break };
             let p = st.queue.pop_front().unwrap();
             self.dispatch(st, r, p, 0);
+        }
+    }
+
+    /// Fold a RECLAIM outcome into the task ahead of resubmission.
+    /// With `partial_migration` on and the salvage at or above the
+    /// floor, the decoded tokens become the task's resume prefix
+    /// (counted `salvaged`); otherwise the newly decoded progress is
+    /// burned (counted `wasted`), and with the knob off the task is
+    /// reset to a bare from-scratch prompt. A reclaim error (replica
+    /// gone or wedged) teaches us nothing — the task keeps whatever
+    /// prefix it already had, and the dead loop's own teardown
+    /// accounting owns the waste.
+    fn absorb_salvage(
+        &self,
+        task: &mut GenerationTask,
+        salvage: Result<Salvage, RecvTimeoutError>,
+    ) {
+        let Ok(s) = salvage else { return };
+        let old = task.prefix.len();
+        if self.partial_migration
+            && s.tokens.len() >= self.min_salvage_tokens
+            && s.tokens.len() >= old
+        {
+            self.ledger.add_salvaged((s.tokens.len() - old) as u64);
+            task.prefix = s.tokens;
+            task.prefix_logps = s.logps;
+            task.prefix_version = s.start_version;
+        } else {
+            let carried = if self.partial_migration { old } else { 0 };
+            self.ledger.add_wasted(s.tokens.len().saturating_sub(carried) as u64);
+            if !self.partial_migration {
+                task.prefix.clear();
+                task.prefix_logps.clear();
+            }
         }
     }
 }
@@ -227,19 +329,28 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
         let entry = {
             let mut st = shared.state.lock().unwrap();
             let Some(pool_id) = st.by_inner[r].remove(&res.id) else {
-                continue; // migrated or aborted after finishing: stale
+                // stale: the request was migrated or aborted after it
+                // finished — the racing completion is dropped, and its
+                // decoded tokens are burned (the resumed attempt, if
+                // any, re-decodes them)
+                shared.ledger.add_wasted(res.tokens.len() as u64);
+                continue;
             };
             st.outstanding[r] = st.outstanding[r].saturating_sub(1);
             let entry = st.inflight.remove(&pool_id);
             if let Some(e) = &entry {
-                st.router.on_completion(
-                    r,
-                    res.tokens.len() as f64,
-                    e.dispatched.elapsed().as_secs_f64(),
-                );
+                // feed the router only the tokens THIS replica decoded:
+                // crediting a resumed task's salvaged prefix over the
+                // time since re-dispatch would inflate the EWMA rate of
+                // whichever replica absorbs migrated work
+                let fresh = res.tokens.len().saturating_sub(e.task.prefix.len());
+                if fresh > 0 {
+                    st.router
+                        .on_completion(r, fresh as f64, e.dispatched.elapsed().as_secs_f64());
+                }
             }
             shared.drain(&mut st);
-            entry.map(|e| (pool_id, e.reply))
+            entry.map(|e| (pool_id, e.task.reply))
         };
         if let Some((pool_id, reply)) = entry {
             let _ = reply.send(GenResult {
@@ -247,6 +358,7 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
                 tokens: res.tokens,
                 logps: res.logps,
                 version: res.version,
+                prefix_version: res.prefix_version,
             });
         }
     }
@@ -299,9 +411,13 @@ pub struct ReplicaReport {
 pub struct PoolReport {
     pub replicas: Vec<ReplicaReport>,
     pub migrated: u64,
+    /// migrations/resubmissions dispatched with a salvaged prefix
+    pub resumed: u64,
     pub sync_waves: u64,
     /// pool-queue depth at submit time
     pub pool_queue_depth: Histogram,
+    /// fleet-wide decoded-token outcomes (salvaged vs wasted)
+    pub tokens: TokenStats,
 }
 
 impl PoolReport {
@@ -314,6 +430,8 @@ impl PoolReport {
             agg.tokens_generated += r.proxy.tokens_generated;
             agg.completed += r.proxy.completed;
             agg.aborted += r.proxy.aborted;
+            agg.reclaimed += r.proxy.reclaimed;
+            agg.wasted_tokens += r.proxy.wasted_tokens;
             agg.occupancy_sum += r.proxy.occupancy_sum;
         }
         agg
@@ -323,7 +441,8 @@ impl PoolReport {
     /// fleet section of bench/example reports.
     pub fn format_table(&self) -> String {
         let mut t = Table::new(&[
-            "replica", "routed", "completed", "aborted", "tokens", "util", "depth mean", "depth p99",
+            "replica", "routed", "completed", "aborted", "tokens", "wasted", "util", "depth mean",
+            "depth p99",
         ]);
         for (i, r) in self.replicas.iter().enumerate() {
             t.row(&[
@@ -332,6 +451,7 @@ impl PoolReport {
                 r.proxy.completed.to_string(),
                 r.proxy.aborted.to_string(),
                 r.proxy.tokens_generated.to_string(),
+                r.proxy.wasted_tokens.to_string(),
                 format!("{:.2}", r.utilization),
                 format!("{:.1}", r.queue_depth.mean()),
                 format!("{:.1}", r.queue_depth.percentile(99.0)),
@@ -342,9 +462,9 @@ impl PoolReport {
 }
 
 /// Client handle to a fleet of `LlmProxy` replicas. Mirrors the
-/// single-proxy surface (`generate`/`abort`/`update_weights`/
-/// `suspend`/`resume`/`shutdown`) so the EnvManager and the
-/// AsyncController are replica-count-agnostic.
+/// single-proxy surface (`generate`/`try_submit`/`abort`/
+/// `update_weights`/`suspend`/`resume`/`shutdown`) so the RolloutEngine
+/// and the AsyncController are replica-count-agnostic.
 pub struct LlmProxyPool {
     shared: Arc<Shared>,
     replicas: Vec<LlmProxy>,
@@ -359,7 +479,8 @@ impl LlmProxyPool {
     /// Spawn `num_replicas` proxy event loops plus one completion
     /// collector per replica (and, when rolling updates are on, the
     /// weight-sync agent). Each replica gets a decorrelated sampling
-    /// seed; replica 0 matches the single-proxy stream exactly.
+    /// seed; replica 0 matches the single-proxy stream exactly. All
+    /// replicas share one [`TokenLedger`].
     pub fn spawn(
         cfg: &PoolCfg,
         artifacts_dir: PathBuf,
@@ -369,18 +490,25 @@ impl LlmProxyPool {
     ) -> Result<Self> {
         anyhow::ensure!(cfg.num_replicas > 0, "num_replicas must be > 0");
         anyhow::ensure!(cfg.replica_slots > 0, "replica_slots must be > 0");
+        let ledger = Arc::new(TokenLedger::default());
         let replicas = (0..cfg.num_replicas)
             .map(|r| {
                 let rseed = seed ^ (r as u64).wrapping_mul(0x9e3779b97f4a7c15);
-                LlmProxy::spawn(artifacts_dir.clone(), init_weights.clone(), eos, rseed)
+                LlmProxy::spawn_with_ledger(
+                    artifacts_dir.clone(),
+                    init_weights.clone(),
+                    eos,
+                    rseed,
+                    ledger.clone(),
+                )
             })
             .collect();
-        Ok(Self::assemble(cfg, replicas))
+        Ok(Self::assemble(cfg, replicas, ledger))
     }
 
     /// Wire collectors, shared state, and the sync agent around an
     /// already-spawned replica set.
-    fn assemble(cfg: &PoolCfg, replicas: Vec<LlmProxy>) -> Self {
+    fn assemble(cfg: &PoolCfg, replicas: Vec<LlmProxy>, ledger: Arc<TokenLedger>) -> Self {
         let n = replicas.len();
         let clients: Vec<ProxyClient> = replicas.iter().map(|p| p.client()).collect();
         let mut completion_tx = Vec::with_capacity(n);
@@ -402,6 +530,7 @@ impl LlmProxyPool {
             replica_version: vec![0; n],
             routed: vec![0; n],
             migrated: 0,
+            resumed: 0,
             sync_waves: 0,
             slots: cfg.replica_slots,
             depth: vec![Histogram::new(1.0, 1.25); n],
@@ -409,7 +538,13 @@ impl LlmProxyPool {
             queue_depth: Histogram::new(1.0, 1.25),
             completion_tx,
         };
-        let shared = Arc::new(Shared { clients, state: Mutex::new(state) });
+        let shared = Arc::new(Shared {
+            clients,
+            state: Mutex::new(state),
+            ledger,
+            partial_migration: cfg.partial_migration,
+            min_salvage_tokens: cfg.min_salvage_tokens.max(1),
+        });
         let mut collectors = Vec::with_capacity(n);
         for (r, rx) in completion_rx.into_iter().enumerate() {
             let sh = shared.clone();
@@ -446,30 +581,27 @@ impl LlmProxyPool {
         self.shared.clients.len()
     }
 
-    /// ADD: route (or pool-queue) a generation request; returns
+    /// ADD: route (or pool-queue) a from-scratch generation; returns
     /// (pool id, reply receiver) — same shape as `LlmProxy::generate`.
     /// When the whole fleet is dead the reply sender is dropped, so the
     /// receiver observes disconnection instead of hanging.
     pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
         let (reply, rx) = channel();
-        (self.try_submit(prompt, max_new_tokens, reply).unwrap_or(0), rx)
+        let task = GenerationTask::fresh(prompt, max_new_tokens, reply);
+        (self.try_submit(task).unwrap_or(0), rx)
     }
 
-    /// ADD with a caller-supplied reply sender: the event-driven
-    /// RolloutEngine points every request at one shared completion
-    /// channel (results are demultiplexed by the returned pool id)
-    /// instead of blocking a thread per receiver. Returns `None` when
-    /// the whole fleet is dead — the request (and its reply sender) was
-    /// dropped, and on a *shared* reply channel that produces no
-    /// disconnect signal, so callers must not wait for a result.
-    pub fn try_submit(
-        &self,
-        prompt: Vec<i32>,
-        max_new_tokens: usize,
-        reply: Sender<GenResult>,
-    ) -> Option<u64> {
+    /// ADD a [`GenerationTask`] with a caller-supplied reply sender:
+    /// the event-driven RolloutEngine points every request at one
+    /// shared completion channel (results are demultiplexed by the
+    /// returned pool id) instead of blocking a thread per receiver.
+    /// Returns `None` when the whole fleet is dead — the task (and its
+    /// reply sender) was dropped, and on a *shared* reply channel that
+    /// produces no disconnect signal, so callers must not wait for a
+    /// result.
+    pub fn try_submit(&self, task: GenerationTask) -> Option<u64> {
         let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
-        let req = Pending { pool_id, prompt, max_new_tokens, reply };
+        let req = Pending { pool_id, task };
         let mut st = self.shared.state.lock().unwrap();
         if st.all_dead() {
             return None; // drop: nothing can ever serve this
@@ -484,10 +616,19 @@ impl LlmProxyPool {
     }
 
     /// ABORT by pool id: reclaims the request whether it is pool-queued
-    /// or on a replica. No-op for finished/unknown ids.
+    /// or on a replica (the replica counts its decoded tokens as
+    /// wasted). No-op for finished/unknown ids.
     pub fn abort(&self, pool_id: u64) {
         let mut st = self.shared.state.lock().unwrap();
-        st.queue.retain(|p| p.pool_id != pool_id);
+        st.queue.retain(|p| {
+            if p.pool_id == pool_id {
+                // a queued task's salvaged prefix dies with it
+                self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
+                false
+            } else {
+                true
+            }
+        });
         if let Some(e) = st.inflight.remove(&pool_id) {
             st.by_inner[e.replica].remove(&e.inner_id);
             st.outstanding[e.replica] = st.outstanding[e.replica].saturating_sub(1);
@@ -496,45 +637,50 @@ impl LlmProxyPool {
         }
     }
 
-    /// Abort-and-resubmit migration: move a (presumed hung) request off
-    /// its current replica onto another one, keeping the original reply
-    /// channel. Returns false when there is nowhere to move it (single
-    /// replica, all others suspended) or the request already finished —
-    /// callers should then keep waiting or give the episode up.
+    /// Prefix-salvaging migration: move a (presumed hung) request off
+    /// its current replica onto another one, keeping the original
+    /// reply channel. The old replica's decoded progress is RECLAIMed
+    /// and — when `partial_migration` allows — resumed on the target,
+    /// so the moved generation continues where it stopped. Returns
+    /// false when there is nowhere to move it (single replica, all
+    /// others suspended) or the request already finished — callers
+    /// should then keep waiting or give the episode up.
     pub fn migrate(&self, pool_id: u64) -> bool {
+        let (old, inner_old, mut entry, new_r) = {
+            let mut st = self.shared.state.lock().unwrap();
+            let n = self.shared.clients.len();
+            if n < 2 {
+                return false;
+            }
+            let (old, inner_old) = match st.inflight.get(&pool_id) {
+                Some(e) => (e.replica, e.inner_id),
+                None => return false,
+            };
+            let loads = st.loads();
+            // the policy's pick first; a saturated fleet still migrates
+            // to the least-outstanding survivor (being stuck behind a
+            // hung replica is strictly worse than a deep healthy queue)
+            let target = st.router.route_excluding(&loads, Some(old)).or_else(|| {
+                (0..n)
+                    .filter(|&i| i != old && !loads[i].suspended)
+                    .min_by_key(|&i| loads[i].outstanding)
+            });
+            let Some(new_r) = target else { return false };
+            // unregister on the old replica: a racing completion is
+            // dropped by the collector because the inner id is gone
+            st.by_inner[old].remove(&inner_old);
+            st.outstanding[old] = st.outstanding[old].saturating_sub(1);
+            let entry = st.inflight.remove(&pool_id).unwrap();
+            (old, inner_old, entry, new_r)
+        };
+        // reclaim outside the lock: a fail-slow replica answers between
+        // decode steps, a dead one disconnects, a wedged one runs out
+        // SALVAGE_WAIT — collectors keep flowing meanwhile
+        let salvage = self.shared.clients[old].reclaim(inner_old).recv_timeout(SALVAGE_WAIT);
+        self.shared.absorb_salvage(&mut entry.task, salvage);
         let mut st = self.shared.state.lock().unwrap();
-        let n = self.shared.clients.len();
-        if n < 2 {
-            return false;
-        }
-        let (old, inner_old) = match st.inflight.get(&pool_id) {
-            Some(e) => (e.replica, e.inner_id),
-            None => return false,
-        };
-        let loads = st.loads();
-        // the policy's pick first; a saturated fleet still migrates to
-        // the least-outstanding survivor (being stuck behind a hung
-        // replica is strictly worse than a deep healthy queue)
-        let target = st.router.route_excluding(&loads, Some(old)).or_else(|| {
-            (0..n)
-                .filter(|&i| i != old && !loads[i].suspended)
-                .min_by_key(|&i| loads[i].outstanding)
-        });
-        let Some(new_r) = target else { return false };
-        // reclaim on the old replica (no-op there if already finished;
-        // a racing completion is dropped by the collector because the
-        // inner id is unregistered here)
-        st.by_inner[old].remove(&inner_old);
-        st.outstanding[old] = st.outstanding[old].saturating_sub(1);
-        self.shared.clients[old].abort(inner_old);
-        let e = st.inflight.remove(&pool_id).unwrap();
-        let migrations = e.migrations + 1;
-        let req = Pending {
-            pool_id,
-            prompt: e.prompt,
-            max_new_tokens: e.max_new_tokens,
-            reply: e.reply,
-        };
+        let migrations = entry.migrations + 1;
+        let req = Pending { pool_id, task: entry.task };
         self.shared.dispatch(&mut st, new_r, req, migrations);
         st.migrated += 1;
         true
@@ -589,14 +735,62 @@ impl LlmProxyPool {
     }
 
     /// Fault injection (tests, chaos drills): hard-stop replica `r`'s
-    /// event loop as if the process died. Its in-flight generations
-    /// never complete — callers recover via hang-timeout migration —
-    /// and the replica is marked dead so no new work routes there.
+    /// event loop as if the process died. Before the loop stops, its
+    /// in-flight generations are RECLAIMed — commands are FIFO, so the
+    /// salvage drain is answered ahead of the shutdown — and
+    /// immediately re-dispatched to surviving replicas, resumed from
+    /// their salvaged prefixes when `partial_migration` allows. The
+    /// replica is marked dead so no new work routes there.
     pub fn kill_replica(&self, r: usize) {
-        let mut st = self.shared.state.lock().unwrap();
-        if r < st.dead.len() {
+        let victims: Vec<(u64, InFlight)> = {
+            let mut st = self.shared.state.lock().unwrap();
+            if r >= st.dead.len() {
+                return;
+            }
             st.dead[r] = true;
-            self.shared.clients[r].kill();
+            let ids: Vec<u64> = st
+                .inflight
+                .iter()
+                .filter(|(_, e)| e.replica == r)
+                .map(|(&pid, _)| pid)
+                .collect();
+            ids.into_iter()
+                .map(|pid| {
+                    let e = st.inflight.remove(&pid).unwrap();
+                    st.by_inner[r].remove(&e.inner_id);
+                    st.outstanding[r] = st.outstanding[r].saturating_sub(1);
+                    (pid, e)
+                })
+                .collect()
+        };
+        // enqueue every reclaim BEFORE the shutdown so the loop answers
+        // them on its way out, then stop it
+        let reclaims: Vec<(u64, InFlight, Receiver<Salvage>)> = victims
+            .into_iter()
+            .map(|(pid, e)| {
+                let rx = self.shared.clients[r].reclaim(e.inner_id);
+                (pid, e, rx)
+            })
+            .collect();
+        self.shared.clients[r].kill();
+        let mut resumed = Vec::with_capacity(reclaims.len());
+        for (pid, mut e, rx) in reclaims {
+            let salvage = rx.recv_timeout(SALVAGE_WAIT);
+            self.shared.absorb_salvage(&mut e.task, salvage);
+            resumed.push((pid, e));
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        for (pid, e) in resumed {
+            let req = Pending { pool_id: pid, task: e.task };
+            let loads = st.loads();
+            match st.router.route_excluding(&loads, Some(r)) {
+                Some(nr) => {
+                    self.shared.dispatch(&mut st, nr, req, e.migrations + 1);
+                    st.migrated += 1;
+                }
+                None if st.all_dead() => {} // drop: caller disconnects
+                None => st.queue.push_back(req),
+            }
         }
     }
 
@@ -610,6 +804,11 @@ impl LlmProxyPool {
         max - min
     }
 
+    /// Live fleet-wide decoded-token outcomes (salvaged vs wasted).
+    pub fn token_stats(&self) -> TokenStats {
+        self.shared.ledger.stats()
+    }
+
     /// Diagnostics: in-flight requests per replica.
     pub fn outstanding_per_replica(&self) -> Vec<usize> {
         self.shared.state.lock().unwrap().outstanding.clone()
@@ -618,6 +817,12 @@ impl LlmProxyPool {
     /// Diagnostics: requests currently held pool-side.
     pub fn pool_queue_len(&self) -> usize {
         self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Diagnostics: migrations/resubmissions that carried a salvaged
+    /// prefix so far.
+    pub fn resumed_dispatches(&self) -> u64 {
+        self.shared.state.lock().unwrap().resumed
     }
 
     /// Stop every replica and collector; gather the fleet report.
@@ -633,7 +838,9 @@ impl LlmProxyPool {
             for tx in st.completion_tx.iter_mut() {
                 tx.take();
             }
-            st.queue.clear();
+            for p in st.queue.drain(..) {
+                self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
+            }
         }
         // 3. join replica loops (drops their in-flight reply clones,
         //    letting the collectors observe disconnection)
@@ -659,8 +866,10 @@ impl LlmProxyPool {
         Ok(PoolReport {
             replicas,
             migrated: st.migrated,
+            resumed: st.resumed,
             sync_waves: st.sync_waves,
             pool_queue_depth: st.queue_depth.clone(),
+            tokens: self.shared.ledger.stats(),
         })
     }
 }
@@ -691,18 +900,38 @@ impl Drop for LlmProxyPool {
 mod tests {
     // The pool's routing/bookkeeping is exercised WITHOUT artifacts
     // against stub replicas (live event loops that accept commands but
-    // never decode — `LlmProxy::spawn_stub`). End-to-end generation
-    // runs live in rust/tests/integration.rs.
+    // never decode — `LlmProxy::spawn_stub`, or fake `fake_progress`
+    // decoded tokens on RECLAIM — `spawn_stub_with_progress`).
+    // End-to-end generation runs live in rust/tests/integration.rs.
     use super::*;
 
-    fn pool(n: usize, policy: RoutePolicy, slots: usize) -> LlmProxyPool {
-        let cfg = PoolCfg {
+    fn cfg(n: usize, policy: RoutePolicy, slots: usize) -> PoolCfg {
+        PoolCfg {
             num_replicas: n,
             route_policy: policy,
             rolling_update: false,
             replica_slots: slots,
-        };
-        LlmProxyPool::assemble(&cfg, (0..n).map(|_| LlmProxy::spawn_stub()).collect())
+            partial_migration: true,
+            min_salvage_tokens: 1,
+        }
+    }
+
+    fn pool(n: usize, policy: RoutePolicy, slots: usize) -> LlmProxyPool {
+        LlmProxyPool::assemble(
+            &cfg(n, policy, slots),
+            (0..n).map(|_| LlmProxy::spawn_stub()).collect(),
+            Arc::default(),
+        )
+    }
+
+    /// Stub fleet whose replicas fabricate `progress` decoded tokens
+    /// on every RECLAIM (salvage-path bookkeeping without artifacts).
+    fn pool_with_progress(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
+        LlmProxyPool::assemble(
+            pcfg,
+            (0..n).map(|_| LlmProxy::spawn_stub_with_progress(progress)).collect(),
+            Arc::default(),
+        )
     }
 
     #[test]
@@ -763,6 +992,49 @@ mod tests {
     }
 
     #[test]
+    fn migrate_salvages_decoded_prefix() {
+        // stub replicas fabricate 3 decoded tokens per reclaim: the
+        // migrated request must carry them and the ledger must count
+        let p = pool_with_progress(2, 3, &cfg(2, RoutePolicy::LeastOutstanding, 8));
+        let (id, _rx) = p.generate(vec![1, 2], 10);
+        assert!(p.migrate(id));
+        let stats = p.token_stats();
+        assert_eq!(stats.salvaged_tokens, 3, "{stats:?}");
+        assert_eq!(stats.wasted_tokens, 0, "{stats:?}");
+        assert_eq!(p.resumed_dispatches(), 1, "target dispatch must be a resume");
+        // a second migration salvages only the NEW progress (3 more
+        // fake tokens on top of the carried prefix)
+        assert!(p.migrate(id));
+        assert_eq!(p.token_stats().salvaged_tokens, 6);
+        assert_eq!(p.resumed_dispatches(), 2);
+    }
+
+    #[test]
+    fn from_scratch_arm_counts_waste_instead() {
+        let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+        c.partial_migration = false;
+        let p = pool_with_progress(2, 3, &c);
+        let (id, _rx) = p.generate(vec![1, 2], 10);
+        assert!(p.migrate(id));
+        let stats = p.token_stats();
+        assert_eq!(stats.salvaged_tokens, 0, "{stats:?}");
+        assert_eq!(stats.wasted_tokens, 3, "dropped progress must be counted: {stats:?}");
+        assert_eq!(p.resumed_dispatches(), 0, "from-scratch arm never resumes");
+    }
+
+    #[test]
+    fn min_salvage_floor_discards_short_prefixes() {
+        let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+        c.min_salvage_tokens = 5;
+        let p = pool_with_progress(2, 3, &c);
+        let (id, _rx) = p.generate(vec![1], 10);
+        assert!(p.migrate(id));
+        let stats = p.token_stats();
+        assert_eq!(stats.salvaged_tokens, 0, "{stats:?}");
+        assert_eq!(stats.wasted_tokens, 3, "below-floor salvage is burned: {stats:?}");
+    }
+
+    #[test]
     fn single_replica_cannot_migrate() {
         let p = pool(1, RoutePolicy::LeastOutstanding, 8);
         let (id, _rx) = p.generate(vec![1], 4);
@@ -786,9 +1058,9 @@ mod tests {
     fn submit_shares_one_reply_channel_with_unique_ids() {
         let p = pool(2, RoutePolicy::RoundRobin, 8);
         let (tx, _rx) = channel();
-        let a = p.try_submit(vec![1], 4, tx.clone()).unwrap();
-        let b = p.try_submit(vec![2], 4, tx.clone()).unwrap();
-        let c = p.try_submit(vec![3], 4, tx).unwrap();
+        let a = p.try_submit(GenerationTask::fresh(vec![1], 4, tx.clone())).unwrap();
+        let b = p.try_submit(GenerationTask::fresh(vec![2], 4, tx.clone())).unwrap();
+        let c = p.try_submit(GenerationTask::fresh(vec![3], 4, tx)).unwrap();
         assert!(a != b && b != c && a != c, "pool ids must demultiplex");
         assert_eq!(p.outstanding_per_replica(), vec![2, 1]);
     }
@@ -802,6 +1074,20 @@ mod tests {
         assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
         // out-of-range kill is a no-op
         p.kill_replica(99);
+    }
+
+    #[test]
+    fn kill_replica_salvages_and_redispatches_in_flight() {
+        let p = pool_with_progress(2, 4, &cfg(2, RoutePolicy::RoundRobin, 8));
+        let (_a, _rx_a) = p.generate(vec![1], 16); // RR -> replica 0
+        let (_b, _rx_b) = p.generate(vec![2], 16); // RR -> replica 1
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        p.kill_replica(0);
+        // the victim's request moved to replica 1 with its salvage
+        assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
+        let stats = p.token_stats();
+        assert_eq!(stats.salvaged_tokens, 4, "{stats:?}");
+        assert_eq!(p.resumed_dispatches(), 1);
     }
 
     #[test]
@@ -827,7 +1113,7 @@ mod tests {
         p.kill_replica(0);
         p.kill_replica(1);
         let (tx, _rx) = channel();
-        assert!(p.try_submit(vec![1], 4, tx).is_none());
+        assert!(p.try_submit(GenerationTask::fresh(vec![1], 4, tx)).is_none());
         // generate() still returns a disconnected receiver
         let (_, rx) = p.generate(vec![1], 4);
         assert!(rx.recv().is_err(), "reply channel must disconnect");
@@ -837,14 +1123,12 @@ mod tests {
     fn dead_replica_fails_over() {
         // replica 0 dies immediately (bogus artifacts); replica 1 is a
         // live stub. Requests routed at the corpse must fail over.
-        let cfg = PoolCfg {
-            num_replicas: 2,
-            route_policy: RoutePolicy::RoundRobin,
-            rolling_update: false,
-            replica_slots: 8,
-        };
         let dead = LlmProxy::spawn(PathBuf::from("/nonexistent-artifacts"), vec![], 2, 1);
-        let p = LlmProxyPool::assemble(&cfg, vec![dead, LlmProxy::spawn_stub()]);
+        let p = LlmProxyPool::assemble(
+            &cfg(2, RoutePolicy::RoundRobin, 8),
+            vec![dead, LlmProxy::spawn_stub()],
+            Arc::default(),
+        );
         // let the artifact-less replica's event loop exit
         std::thread::sleep(std::time::Duration::from_millis(100));
         let (_a, rx_a) = p.generate(vec![1], 4); // RR -> replica 0 -> failover

@@ -9,9 +9,20 @@
 //!   2. *Post-processing* — finished requests are immediately returned
 //!      to the originating client over its reply channel,
 //!   3. *Process commands* — ADD enqueues requests, ABORT interrupts
-//!      and reclaims them, UPDATE_WEIGHTS swaps the policy (the
-//!      AsyncController's suspend -> model_update -> resume),
-//!      SUSPEND/RESUME gate the loop for synchronous mode.
+//!      and reclaims them, RECLAIM interrupts and *salvages* the
+//!      decoded prefix (partial-rollout migration, Section 5.2.2),
+//!      UPDATE_WEIGHTS swaps the policy (the AsyncController's
+//!      suspend -> model_update -> resume), SUSPEND/RESUME gate the
+//!      loop for synchronous mode.
+//!
+//! The request surface is the resumable [`GenerationTask`]: a prompt
+//! plus an optional already-decoded prefix. On ADD the loop prefills
+//! `prompt ++ prefix` and continues decoding from where the previous
+//! attempt stopped, so a generation migrated off a hung or dead
+//! replica resumes instead of burning its decoded tokens. Every token
+//! dropped *without* salvage (ABORT, loop teardown) is counted into
+//! `ProxyReport::wasted_tokens` and the pool-shared [`TokenLedger`] —
+//! partial output never vanishes without a trace.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,30 +35,152 @@ use anyhow::Result;
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 
-/// A generation request (one sequence; prompt replication happens at
-/// the caller by submitting n independent requests — Section 5.1.2).
-pub struct GenRequest {
-    pub id: u64,
+/// A resumable generation request (one sequence; prompt replication
+/// happens at the caller by submitting n independent tasks —
+/// Section 5.1.2). `prefix` carries tokens decoded by an earlier
+/// attempt of the *same* logical generation: the proxy prefills
+/// `prompt ++ prefix` and keeps decoding, so migration off a fail-slow
+/// or dead replica salvages instead of restarting. A fresh task has an
+/// empty prefix.
+pub struct GenerationTask {
     pub prompt: Vec<i32>,
-    pub max_new_tokens: usize,
+    /// tokens already decoded by a previous attempt (salvaged prefix)
+    pub prefix: Vec<i32>,
+    /// behavior logprobs of the prefix tokens, recorded when they were
+    /// first decoded (pi_old must not be recomputed under new weights)
+    pub prefix_logps: Vec<f32>,
+    /// weight version that produced the *first* decoded token; only
+    /// meaningful when `prefix` is non-empty. A resumed generation may
+    /// finish under a newer version — the completion then reports a
+    /// piecewise-policy sequence (`GenResult::prefix_version` !=
+    /// `GenResult::version`).
+    pub prefix_version: u64,
+    /// total new-token budget for the logical generation; the salvaged
+    /// prefix counts against it (a resumed task decodes
+    /// `budget - prefix.len()` more tokens at most)
+    pub budget: usize,
+    /// argmax decoding instead of sampling: resume-deterministic, so a
+    /// migrated generation is token-identical to an uninterrupted one
+    pub greedy: bool,
     pub reply: Sender<GenResult>,
+}
+
+impl GenerationTask {
+    /// A from-scratch task: empty prefix, sampling decode.
+    pub fn fresh(prompt: Vec<i32>, budget: usize, reply: Sender<GenResult>) -> Self {
+        GenerationTask {
+            prompt,
+            prefix: Vec::new(),
+            prefix_logps: Vec::new(),
+            prefix_version: 0,
+            budget,
+            greedy: false,
+            reply,
+        }
+    }
+
+    /// Builder: switch to argmax decoding (eval episodes, determinism
+    /// tests).
+    pub fn with_greedy(mut self) -> Self {
+        self.greedy = true;
+        self
+    }
+
+    /// Tokens already decoded by earlier attempts.
+    pub fn decoded(&self) -> usize {
+        self.prefix.len()
+    }
+}
+
+/// A generation request as held by the proxy loop (task + loop id).
+struct GenRequest {
+    id: u64,
+    task: GenerationTask,
 }
 
 /// A finished generation.
 #[derive(Clone, Debug)]
 pub struct GenResult {
     pub id: u64,
-    /// generated tokens (including the terminating EOS if emitted)
+    /// generated tokens (including the terminating EOS if emitted).
+    /// For a resumed task this is the FULL response — salvaged prefix
+    /// plus the continuation — so callers never splice.
     pub tokens: Vec<i32>,
     /// behavior-policy logprob per generated token (pi_old for IS)
     pub logps: Vec<f32>,
     /// policy version that produced (finished) this sample
     pub version: u64,
+    /// policy version that produced the first token. Differs from
+    /// `version` when a salvaged prefix spans a weight update (or the
+    /// weights were swapped mid-decode): the sequence is piecewise-
+    /// policy and is surfaced as a `cross_version` sample downstream.
+    pub prefix_version: u64,
+}
+
+impl GenResult {
+    /// The sample straddles a weight update (piecewise behavior policy).
+    pub fn cross_version(&self) -> bool {
+        self.prefix_version != self.version
+    }
+}
+
+/// The decoded progress of an interrupted request, handed back by
+/// RECLAIM so the caller can resubmit it elsewhere as a resumed
+/// [`GenerationTask`].
+#[derive(Clone, Debug, Default)]
+pub struct Salvage {
+    pub tokens: Vec<i32>,
+    pub logps: Vec<f32>,
+    /// weight version that produced the first salvaged token
+    pub start_version: u64,
+}
+
+/// Pool-shared live counters for decoded-token outcomes. Replica loops
+/// add waste as they discard work; the fleet adds salvage as it reuses
+/// it. Readable at any time (`LlmProxyPool::token_stats`), unlike the
+/// per-replica `ProxyReport` which is only collected at shutdown.
+#[derive(Debug, Default)]
+pub struct TokenLedger {
+    wasted: AtomicU64,
+    salvaged: AtomicU64,
+}
+
+impl TokenLedger {
+    pub fn add_wasted(&self, n: u64) {
+        self.wasted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_salvaged(&self, n: u64) {
+        self.salvaged.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> TokenStats {
+        TokenStats {
+            wasted_tokens: self.wasted.load(Ordering::Relaxed),
+            salvaged_tokens: self.salvaged.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of a [`TokenLedger`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TokenStats {
+    /// decoded tokens discarded without salvage (aborts, teardown,
+    /// salvage below `min_salvage_tokens`, salvage with the
+    /// `partial_migration` arm off)
+    pub wasted_tokens: u64,
+    /// decoded tokens carried to a resumed attempt by migration or
+    /// dead-replica resubmission
+    pub salvaged_tokens: u64,
 }
 
 enum Cmd {
     Add(GenRequest),
     Abort(u64),
+    /// abort-with-salvage: remove the request and send its decoded
+    /// progress back on `reply`. Unknown/finished ids drop the reply
+    /// sender, which the caller observes as a disconnect.
+    Reclaim { id: u64, reply: Sender<Salvage> },
     UpdateWeights { weights: Vec<f32>, version: u64, ack: Option<Sender<()>> },
     Suspend,
     Resume,
@@ -65,31 +198,37 @@ pub struct ProxyClient {
 }
 
 impl ProxyClient {
-    /// ADD with a caller-supplied reply channel; returns the request id.
-    /// The pool points every request at its per-replica collector.
-    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize, reply: Sender<GenResult>) -> u64 {
-        self.try_submit(prompt, max_new_tokens, reply).unwrap_or(0)
+    /// ADD a [`GenerationTask`]; returns the request id. The pool
+    /// points every task at its per-replica collector.
+    pub fn submit(&self, task: GenerationTask) -> u64 {
+        self.try_submit(task).unwrap_or(0)
     }
 
     /// ADD that reports delivery: `None` means the proxy thread is gone
-    /// (its event loop exited), so the request — and its reply sender —
+    /// (its event loop exited), so the task — and its reply sender —
     /// were dropped. The fleet uses this to detect dead replicas and
     /// fail requests over instead of stranding callers.
-    pub fn try_submit(
-        &self,
-        prompt: Vec<i32>,
-        max_new_tokens: usize,
-        reply: Sender<GenResult>,
-    ) -> Option<u64> {
+    pub fn try_submit(&self, task: GenerationTask) -> Option<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Cmd::Add(GenRequest { id, prompt, max_new_tokens, reply })).ok().map(|_| id)
+        self.tx.send(Cmd::Add(GenRequest { id, task })).ok().map(|_| id)
     }
 
     /// ABORT: interrupt a running/queued request (its reply channel
-    /// simply never fires; the work is reclaimed). Aborting an id that
-    /// already finished (or never existed) is a no-op.
+    /// simply never fires; the decoded tokens are counted wasted).
+    /// Aborting an id that already finished (or never existed) is a
+    /// no-op.
     pub fn abort(&self, id: u64) {
         let _ = self.tx.send(Cmd::Abort(id));
+    }
+
+    /// RECLAIM: interrupt a running/queued request and receive its
+    /// decoded progress for resumption elsewhere. The returned channel
+    /// disconnects when the id is unknown/finished or the replica is
+    /// gone — callers bound the wait and fall back to from-scratch.
+    pub fn reclaim(&self, id: u64) -> Receiver<Salvage> {
+        let (reply, rx) = channel();
+        let _ = self.tx.send(Cmd::Reclaim { id, reply });
+        rx
     }
 
     /// model_update broadcast: swap weights and advance the version.
@@ -118,9 +257,10 @@ impl ProxyClient {
     }
 
     /// Fault injection: stop the event loop as if the replica process
-    /// died. In-flight requests are dropped without replies (callers
-    /// recover via hang-timeout migration); subsequent submissions fail
-    /// and the fleet marks the replica dead.
+    /// died. In-flight requests are dropped without replies (the fleet
+    /// drains salvage first — see `LlmProxyPool::kill_replica`);
+    /// subsequent submissions fail and the fleet marks the replica
+    /// dead.
     pub(crate) fn kill(&self) {
         let _ = self.tx.send(Cmd::Shutdown);
     }
@@ -129,6 +269,7 @@ impl ProxyClient {
 /// Client handle to the proxy thread.
 pub struct LlmProxy {
     client: ProxyClient,
+    ledger: Arc<TokenLedger>,
     join: Option<JoinHandle<Result<ProxyReport>>>,
 }
 
@@ -139,6 +280,15 @@ pub struct ProxyReport {
     pub tokens_generated: u64,
     pub completed: u64,
     pub aborted: u64,
+    /// requests interrupted by RECLAIM with their progress handed back
+    /// (successful salvage drains; NOT counted in `aborted`, which
+    /// keeps meaning real cancellations)
+    pub reclaimed: u64,
+    /// decoded tokens this replica discarded without salvage: aborts
+    /// (including the previously salvaged prefix of a resumed task —
+    /// the whole accumulated response is lost) and requests still held
+    /// when the loop exited
+    pub wasted_tokens: u64,
     /// decode-batch occupancy summed over steps (utilization proxy)
     pub occupancy_sum: u64,
 }
@@ -154,21 +304,39 @@ impl ProxyReport {
 }
 
 impl LlmProxy {
-    /// Spawn the proxy event loop. The thread constructs its own
-    /// ModelRuntime from `artifacts_dir`; `init_weights` is the flat
-    /// parameter snapshot; `eos` terminates generation.
+    /// Spawn the proxy event loop with a private token ledger. The
+    /// thread constructs its own ModelRuntime from `artifacts_dir`;
+    /// `init_weights` is the flat parameter snapshot; `eos` terminates
+    /// generation.
     pub fn spawn(
         artifacts_dir: std::path::PathBuf,
         init_weights: Vec<f32>,
         eos: i32,
         seed: u64,
     ) -> Self {
+        Self::spawn_with_ledger(artifacts_dir, init_weights, eos, seed, Arc::default())
+    }
+
+    /// Spawn with a caller-owned ledger (the pool shares one across
+    /// all replicas so fleet-level waste is live-readable).
+    pub(crate) fn spawn_with_ledger(
+        artifacts_dir: std::path::PathBuf,
+        init_weights: Vec<f32>,
+        eos: i32,
+        seed: u64,
+        ledger: Arc<TokenLedger>,
+    ) -> Self {
         let (tx, rx) = channel();
+        let lg = ledger.clone();
         let join = std::thread::Builder::new()
             .name("llm-proxy".into())
-            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx))
+            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx, lg))
             .expect("spawn llm-proxy");
-        LlmProxy { client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) }, join: Some(join) }
+        LlmProxy {
+            client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
+            ledger,
+            join: Some(join),
+        }
     }
 
     /// A cloneable command handle (no join handle; cannot shut down).
@@ -176,11 +344,19 @@ impl LlmProxy {
         self.client.clone()
     }
 
+    /// Live wasted/salvaged token counters for this replica's ledger.
+    pub fn token_stats(&self) -> TokenStats {
+        self.ledger.stats()
+    }
+
     /// Test-only replica with no engine: accepts commands, holds ADDed
-    /// requests without ever decoding them, acks weight swaps. Lets the
-    /// fleet's routing/bookkeeping be exercised without artifacts.
+    /// requests without ever decoding them, acks weight swaps, and
+    /// answers RECLAIM with `fake_progress` synthetic tokens appended
+    /// to the task's salvaged prefix (0 = hand back exactly what
+    /// arrived). Lets the fleet's routing/salvage bookkeeping be
+    /// exercised without artifacts.
     #[cfg(test)]
-    pub(crate) fn spawn_stub() -> Self {
+    pub(crate) fn spawn_stub_with_progress(fake_progress: usize) -> Self {
         let (tx, rx) = channel::<Cmd>();
         let join = std::thread::Builder::new()
             .name("llm-proxy-stub".into())
@@ -190,6 +366,22 @@ impl LlmProxy {
                     match cmd {
                         Cmd::Add(req) => held.push(req),
                         Cmd::Abort(id) => held.retain(|r| r.id != id),
+                        Cmd::Reclaim { id, reply } => {
+                            if let Some(i) = held.iter().position(|r| r.id == id) {
+                                let req = held.remove(i);
+                                let mut tokens = req.task.prefix;
+                                let mut logps = req.task.prefix_logps;
+                                for k in 0..fake_progress {
+                                    tokens.push(1 + k as i32);
+                                    logps.push(-0.5);
+                                }
+                                let _ = reply.send(Salvage {
+                                    tokens,
+                                    logps,
+                                    start_version: req.task.prefix_version,
+                                });
+                            }
+                        }
                         Cmd::UpdateWeights { ack, .. } => {
                             if let Some(ack) = ack {
                                 let _ = ack.send(());
@@ -202,20 +394,40 @@ impl LlmProxy {
                 Ok(ProxyReport::default())
             })
             .expect("spawn llm-proxy stub");
-        LlmProxy { client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) }, join: Some(join) }
+        LlmProxy {
+            client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
+            ledger: Arc::default(),
+            join: Some(join),
+        }
     }
 
-    /// ADD: enqueue a generation request; returns (id, reply receiver).
+    #[cfg(test)]
+    pub(crate) fn spawn_stub() -> Self {
+        Self::spawn_stub_with_progress(0)
+    }
+
+    /// ADD: enqueue a from-scratch generation; returns (id, reply
+    /// receiver). Convenience over [`ProxyClient::submit`].
     pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
         let (reply, rx) = channel();
-        let id = self.client.submit(prompt, max_new_tokens, reply);
+        let id = self.client.submit(GenerationTask::fresh(prompt, max_new_tokens, reply));
         (id, rx)
     }
 
+    /// ADD an explicit [`GenerationTask`] (resumed and/or greedy).
+    pub fn submit(&self, task: GenerationTask) -> u64 {
+        self.client.submit(task)
+    }
+
     /// ABORT: interrupt a running/queued request (its reply channel
-    /// simply never fires; the work is reclaimed).
+    /// simply never fires; the work is counted wasted).
     pub fn abort(&self, id: u64) {
         self.client.abort(id);
+    }
+
+    /// RECLAIM: interrupt and salvage (see [`ProxyClient::reclaim`]).
+    pub fn reclaim(&self, id: u64) -> Receiver<Salvage> {
+        self.client.reclaim(id)
     }
 
     /// model_update broadcast: swap weights and advance the version.
@@ -259,14 +471,19 @@ struct Slot {
     req: GenRequest,
     /// absolute write position in the row buffer
     pos: usize,
-    prompt_len: usize,
+    /// full response so far: salvaged prefix + locally decoded tokens
     tokens: Vec<i32>,
     logps: Vec<f32>,
+    /// weight version of the first response token (inherited from the
+    /// task's prefix_version on resume, stamped at admission otherwise)
+    start_version: u64,
 }
 
 /// ABORT shared by both command-handling sites: purge the queue AND
 /// any occupied decode slot (an abort landing while suspended must not
-/// leave the slot to decode on after resume).
+/// leave the slot to decode on after resume). Every decoded token
+/// dropped here — including the salvaged prefix a queued or resumed
+/// task carried — is accounted as wasted.
 fn do_abort(
     id: u64,
     queue: &mut VecDeque<GenRequest>,
@@ -274,15 +491,87 @@ fn do_abort(
     tokens_buf: &mut [i32],
     s: usize,
     report: &mut ProxyReport,
+    ledger: &TokenLedger,
 ) {
-    queue.retain(|r| r.id != id);
+    queue.retain(|r| {
+        if r.id == id {
+            report.wasted_tokens += r.task.prefix.len() as u64;
+            ledger.add_wasted(r.task.prefix.len() as u64);
+            false
+        } else {
+            true
+        }
+    });
     for (si, slot) in slots.iter_mut().enumerate() {
         if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
-            *slot = None;
+            let sl = slot.take().unwrap();
             report.aborted += 1;
+            report.wasted_tokens += sl.tokens.len() as u64;
+            ledger.add_wasted(sl.tokens.len() as u64);
             tokens_buf[si * s..(si + 1) * s].fill(0);
         }
     }
+}
+
+/// RECLAIM: like ABORT, but the decoded progress is handed back to the
+/// caller for resumption instead of being dropped — the *caller*
+/// decides whether to reuse or discard the salvage and accounts
+/// accordingly. If the caller is already gone (its bounded wait
+/// expired before a wedged loop got here), the send fails and the
+/// progress is counted wasted right here, so late salvage never
+/// vanishes untraced. Unknown/finished ids drop the reply sender.
+fn do_reclaim(
+    id: u64,
+    reply: Sender<Salvage>,
+    queue: &mut VecDeque<GenRequest>,
+    slots: &mut [Option<Slot>],
+    tokens_buf: &mut [i32],
+    s: usize,
+    report: &mut ProxyReport,
+    ledger: &TokenLedger,
+) {
+    let mut deliver = |salvage: Salvage, report: &mut ProxyReport| {
+        if let Err(undelivered) = reply.send(salvage) {
+            let n = undelivered.0.tokens.len() as u64;
+            report.wasted_tokens += n;
+            ledger.add_wasted(n);
+        }
+    };
+    if let Some(i) = queue.iter().position(|r| r.id == id) {
+        let req = queue.remove(i).unwrap();
+        deliver(
+            Salvage {
+                tokens: req.task.prefix,
+                logps: req.task.prefix_logps,
+                start_version: req.task.prefix_version,
+            },
+            report,
+        );
+        return;
+    }
+    for (si, slot) in slots.iter_mut().enumerate() {
+        if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
+            let sl = slot.take().unwrap();
+            report.reclaimed += 1;
+            tokens_buf[si * s..(si + 1) * s].fill(0);
+            deliver(
+                Salvage { tokens: sl.tokens, logps: sl.logps, start_version: sl.start_version },
+                report,
+            );
+            return;
+        }
+    }
+}
+
+/// Deterministic argmax over one row of logits (ties: lowest index).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &l) in row.iter().enumerate() {
+        if l > row[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 fn proxy_loop(
@@ -291,6 +580,7 @@ fn proxy_loop(
     eos: i32,
     seed: u64,
     rx: Receiver<Cmd>,
+    ledger: Arc<TokenLedger>,
 ) -> Result<ProxyReport> {
     let rt = ModelRuntime::load(&dir)?;
     let (b, s, v) = (rt.manifest.decode_batch, rt.manifest.max_seq, rt.manifest.vocab);
@@ -301,18 +591,38 @@ fn proxy_loop(
     let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
     let mut tokens_buf = vec![0i32; b * s];
     let mut queue: VecDeque<GenRequest> = VecDeque::new();
+    // commands received by the idle wait, funneled through the drain
+    let mut stash: VecDeque<Cmd> = VecDeque::new();
     let mut suspended = false;
     let mut report = ProxyReport::default();
 
     'outer: loop {
-        // --- service 3: process commands (non-blocking drain) ---
+        // --- service 3: process commands (stash + non-blocking drain) ---
         loop {
-            match rx.try_recv() {
-                Ok(Cmd::Add(req)) => queue.push_back(req),
-                Ok(Cmd::Abort(id)) => {
-                    do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report)
+            let cmd = match stash.pop_front() {
+                Some(c) => c,
+                None => match rx.try_recv() {
+                    Ok(c) => c,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                },
+            };
+            match cmd {
+                Cmd::Add(req) => queue.push_back(req),
+                Cmd::Abort(id) => {
+                    do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report, &ledger)
                 }
-                Ok(Cmd::UpdateWeights { weights, version: ver, ack }) => {
+                Cmd::Reclaim { id, reply } => do_reclaim(
+                    id,
+                    reply,
+                    &mut queue,
+                    &mut slots,
+                    &mut tokens_buf,
+                    s,
+                    &mut report,
+                    &ledger,
+                ),
+                Cmd::UpdateWeights { weights, version: ver, ack } => {
                     // suspend -> broadcast -> resume, atomically w.r.t.
                     // decode steps (we are between steps here)
                     params = rt.params_literal(&weights)?;
@@ -321,58 +631,72 @@ fn proxy_loop(
                         let _ = ack.send(());
                     }
                 }
-                Ok(Cmd::Suspend) => suspended = true,
-                Ok(Cmd::Resume) => suspended = false,
-                Ok(Cmd::Shutdown) => break 'outer,
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => break 'outer,
+                Cmd::Suspend => suspended = true,
+                Cmd::Resume => suspended = false,
+                Cmd::Shutdown => break 'outer,
             }
         }
 
-        // admit queued requests into free slots (continuous batching)
+        // admit queued tasks into free slots (continuous batching),
+        // prefilling prompt ++ salvaged prefix
         if !suspended {
             for si in 0..b {
                 if slots[si].is_none() {
-                    if let Some(req) = queue.pop_front() {
-                        let pl = req.prompt.len().min(s - 1);
-                        let row = &mut tokens_buf[si * s..(si + 1) * s];
-                        row.fill(0);
-                        row[..pl].copy_from_slice(&req.prompt[..pl]);
-                        slots[si] = Some(Slot {
-                            pos: pl,
-                            prompt_len: pl,
-                            tokens: Vec::new(),
-                            logps: Vec::new(),
-                            req,
-                        });
+                    let Some(mut req) = queue.pop_front() else { break };
+                    let pl = req.task.prompt.len().min(s - 1);
+                    let mut tokens = std::mem::take(&mut req.task.prefix);
+                    let mut logps = std::mem::take(&mut req.task.prefix_logps);
+                    // clamp the salvage to the row and the budget; a
+                    // truncated tail was decoded work that cannot be
+                    // reused here, so it is accounted, not vanished
+                    let full = tokens.len();
+                    tokens.truncate((s - 1 - pl).min(req.task.budget));
+                    let dropped = (full - tokens.len()) as u64;
+                    if dropped > 0 {
+                        report.wasted_tokens += dropped;
+                        ledger.add_wasted(dropped);
                     }
+                    logps.resize(tokens.len(), 0.0);
+                    let start_version =
+                        if tokens.is_empty() { version } else { req.task.prefix_version };
+                    if tokens.len() >= req.task.budget {
+                        // salvage already satisfies the budget: finish
+                        // without occupying a decode slot. Zero tokens
+                        // were decoded HERE, so the producing version
+                        // is the prefix's — stamping the replica's
+                        // current version would fabricate a piecewise
+                        // (cross_version) sample out of thin air
+                        report.completed += 1;
+                        let _ = req.task.reply.send(GenResult {
+                            id: req.id,
+                            tokens,
+                            logps,
+                            version: start_version,
+                            prefix_version: start_version,
+                        });
+                        continue;
+                    }
+                    let row = &mut tokens_buf[si * s..(si + 1) * s];
+                    row.fill(0);
+                    row[..pl].copy_from_slice(&req.task.prompt[..pl]);
+                    row[pl..pl + tokens.len()].copy_from_slice(&tokens);
+                    slots[si] = Some(Slot {
+                        pos: pl + tokens.len(),
+                        tokens,
+                        logps,
+                        start_version,
+                        req,
+                    });
                 }
             }
         }
 
         let active = slots.iter().filter(|x| x.is_some()).count();
         if suspended || active == 0 {
-            // idle: block briefly for the next command
+            // idle: block briefly for the next command and funnel it
+            // through the drain above on the next pass
             match rx.recv_timeout(std::time::Duration::from_millis(2)) {
-                Ok(cmd) => {
-                    // re-inject into the drain above on the next pass
-                    match cmd {
-                        Cmd::Add(req) => queue.push_back(req),
-                        Cmd::Abort(id) => {
-                            do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report)
-                        }
-                        Cmd::UpdateWeights { weights, version: ver, ack } => {
-                            params = rt.params_literal(&weights)?;
-                            version = ver;
-                            if let Some(ack) = ack {
-                                let _ = ack.send(());
-                            }
-                        }
-                        Cmd::Suspend => suspended = true,
-                        Cmd::Resume => suspended = false,
-                        Cmd::Shutdown => break 'outer,
-                    }
-                }
+                Ok(cmd) => stash.push_back(cmd),
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
             }
@@ -392,8 +716,13 @@ fn proxy_loop(
         for si in 0..b {
             let Some(slot) = slots[si].as_mut() else { continue };
             let row_logits = &logits[si * v..(si + 1) * v];
-            // temperature-1, top-p-1 raw sampling (paper Appendix A)
-            let tok = rng.sample_logits(row_logits) as i32;
+            // temperature-1, top-p-1 raw sampling (paper Appendix A),
+            // or argmax for greedy tasks (resume-deterministic)
+            let tok = if slot.req.task.greedy {
+                argmax(row_logits) as i32
+            } else {
+                rng.sample_logits(row_logits) as i32
+            };
             // exact behavior logprob from the same logits
             let max = row_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let lse: f32 =
@@ -405,21 +734,33 @@ fn proxy_loop(
             report.tokens_generated += 1;
 
             let done = tok == eos
-                || slot.tokens.len() >= slot.req.max_new_tokens
+                || slot.tokens.len() >= slot.req.task.budget
                 || slot.pos >= s;
             if done {
                 let slot = slots[si].take().unwrap();
                 report.completed += 1;
-                let _ = slot.req.reply.send(GenResult {
+                let _ = slot.req.task.reply.send(GenResult {
                     id: slot.req.id,
                     tokens: slot.tokens,
                     logps: slot.logps,
                     version,
+                    prefix_version: slot.start_version,
                 });
                 tokens_buf[si * s..(si + 1) * s].fill(0);
-                let _ = slot.prompt_len;
             }
         }
+    }
+
+    // teardown: requests still held never complete — their decoded
+    // tokens (including salvaged prefixes) are wasted unless a RECLAIM
+    // already pulled them out above
+    for slot in slots.iter_mut().filter_map(Option::take) {
+        report.wasted_tokens += slot.tokens.len() as u64;
+        ledger.add_wasted(slot.tokens.len() as u64);
+    }
+    for req in queue.drain(..) {
+        report.wasted_tokens += req.task.prefix.len() as u64;
+        ledger.add_wasted(req.task.prefix.len() as u64);
     }
 
     Ok(report)
@@ -428,7 +769,7 @@ fn proxy_loop(
 #[cfg(test)]
 mod tests {
     // Exercised end-to-end in rust/tests/integration.rs (requires
-    // artifacts); unit logic (occupancy math) tested here.
+    // artifacts); unit logic tested here.
     use super::*;
 
     #[test]
@@ -436,5 +777,133 @@ mod tests {
         let r = ProxyReport { decode_steps: 10, occupancy_sum: 40, ..Default::default() };
         assert!((r.mean_occupancy(8) - 0.5).abs() < 1e-12);
         assert_eq!(ProxyReport::default().mean_occupancy(8), 0.0);
+    }
+
+    #[test]
+    fn argmax_is_deterministic_on_ties() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[-1.0, -1.0]), 0);
+    }
+
+    #[test]
+    fn fresh_task_has_no_prefix_and_builder_sets_greedy() {
+        let (tx, _rx) = channel();
+        let t = GenerationTask::fresh(vec![1, 2], 8, tx).with_greedy();
+        assert!(t.prefix.is_empty() && t.prefix_logps.is_empty());
+        assert_eq!(t.decoded(), 0);
+        assert_eq!(t.budget, 8);
+        assert!(t.greedy);
+    }
+
+    #[test]
+    fn cross_version_flags_piecewise_sequences() {
+        let r = GenResult {
+            id: 1,
+            tokens: vec![5],
+            logps: vec![-0.1],
+            version: 3,
+            prefix_version: 2,
+        };
+        assert!(r.cross_version());
+        let r = GenResult { prefix_version: 3, ..r };
+        assert!(!r.cross_version());
+    }
+
+    #[test]
+    fn ledger_counts_are_live() {
+        let l = TokenLedger::default();
+        l.add_wasted(5);
+        l.add_salvaged(3);
+        l.add_wasted(2);
+        assert_eq!(l.stats(), TokenStats { wasted_tokens: 7, salvaged_tokens: 3 });
+    }
+
+    #[test]
+    fn abort_counts_wasted_tokens_from_queue_and_slots() {
+        let ledger = TokenLedger::default();
+        let mut report = ProxyReport::default();
+        let (reply, _rx) = channel();
+        let mut queue = VecDeque::new();
+        queue.push_back(GenRequest {
+            id: 1,
+            task: GenerationTask {
+                prefix: vec![9, 9, 9],
+                prefix_logps: vec![-0.1; 3],
+                ..GenerationTask::fresh(vec![1], 8, reply)
+            },
+        });
+        let s = 8;
+        let mut buf = vec![0i32; s];
+        let (reply2, _rx2) = channel();
+        let mut slots = vec![Some(Slot {
+            req: GenRequest { id: 2, task: GenerationTask::fresh(vec![1], 8, reply2) },
+            pos: 4,
+            tokens: vec![7, 7],
+            logps: vec![-0.2, -0.2],
+            start_version: 0,
+        })];
+        do_abort(1, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        do_abort(2, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        assert_eq!(report.wasted_tokens, 5, "3 queued-prefix + 2 decoded");
+        assert_eq!(ledger.stats().wasted_tokens, 5);
+        assert_eq!(report.aborted, 1, "only the slotted request counts as aborted");
+        assert!(queue.is_empty() && slots[0].is_none());
+    }
+
+    #[test]
+    fn reclaim_salvages_instead_of_wasting() {
+        let mut report = ProxyReport::default();
+        let (reply, _rx) = channel();
+        let s = 8;
+        let mut buf = vec![0i32; s];
+        let mut queue = VecDeque::new();
+        let mut slots = vec![Some(Slot {
+            req: GenRequest { id: 5, task: GenerationTask::fresh(vec![1], 8, reply) },
+            pos: 5,
+            tokens: vec![4, 5, 6],
+            logps: vec![-0.1, -0.2, -0.3],
+            start_version: 2,
+        })];
+        let ledger = TokenLedger::default();
+        let (stx, srx) = channel();
+        do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        let salvage = srx.recv().unwrap();
+        assert_eq!(salvage.tokens, vec![4, 5, 6]);
+        assert_eq!(salvage.logps.len(), 3);
+        assert_eq!(salvage.start_version, 2);
+        assert_eq!(report.wasted_tokens, 0, "salvaged work is not wasted");
+        assert_eq!(report.reclaimed, 1);
+        assert_eq!(report.aborted, 0, "a salvage drain is not a cancellation");
+        // unknown id: the reply sender is dropped -> disconnect
+        let (stx, srx) = channel();
+        do_reclaim(99, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        assert!(srx.recv().is_err());
+    }
+
+    #[test]
+    fn late_reclaim_with_dead_receiver_counts_wasted() {
+        // the migrate caller gave up (bounded wait expired) before the
+        // wedged loop processed the RECLAIM: the undeliverable salvage
+        // must be accounted, not silently dropped
+        let ledger = TokenLedger::default();
+        let mut report = ProxyReport::default();
+        let (reply, _rx) = channel();
+        let s = 8;
+        let mut buf = vec![0i32; s];
+        let mut queue = VecDeque::new();
+        let mut slots = vec![Some(Slot {
+            req: GenRequest { id: 5, task: GenerationTask::fresh(vec![1], 8, reply) },
+            pos: 5,
+            tokens: vec![4, 5, 6],
+            logps: vec![-0.1, -0.2, -0.3],
+            start_version: 0,
+        })];
+        let (stx, srx) = channel::<Salvage>();
+        drop(srx); // caller timed out and went away
+        do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        assert_eq!(report.wasted_tokens, 3, "undelivered salvage is wasted");
+        assert_eq!(ledger.stats().wasted_tokens, 3);
+        assert_eq!(report.reclaimed, 1);
     }
 }

@@ -7,13 +7,16 @@
 //!
 //! Fleet layer (`fleet.rs` + `routing.rs`): the paper's LLMProxy
 //! abstracts a *pool* of inference workers. `RolloutSystem` spawns
-//! `num_replicas` proxy event loops; every `GenRequest` is placed by a
-//! pluggable `RoutePolicy` (round-robin, least-outstanding, queue
-//! scheduling with pool-side backpressure, or EWMA latency-aware),
-//! `update_weights` rolls across replicas one at a time so at least
-//! N-1 keep decoding during a model update, and requests hung on a
-//! fail-slow replica are abort-and-resubmit migrated elsewhere
-//! (`hang_timeout`).
+//! `num_replicas` proxy event loops; every [`GenerationTask`] is
+//! placed by a pluggable `RoutePolicy` (round-robin,
+//! least-outstanding, queue scheduling with pool-side backpressure, or
+//! EWMA latency-aware), `update_weights` rolls across replicas one at
+//! a time so at least N-1 keep decoding during a model update, and
+//! requests hung on a fail-slow replica are migrated elsewhere
+//! (`hang_timeout`) — with `partial_migration` the decoded prefix is
+//! salvaged and the generation *resumes* on the target instead of
+//! restarting from scratch; salvaged/wasted decode work is tracked in
+//! a fleet-wide `TokenLedger`.
 //!
 //! Rollout layer (`rollout/`): a single `RolloutEngine` thread
 //! multiplexes every episode as a state machine over a fixed pool of
@@ -37,7 +40,10 @@ pub mod sample_buffer;
 
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
-pub use llm_proxy::{GenResult, LlmProxy, ProxyClient, ProxyReport};
+pub use llm_proxy::{
+    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
+    TokenStats,
+};
 pub use rollout::{EngineCfg, EngineReport, GenBackend, GroupTasks, RolloutEngine};
 pub use routing::{ReplicaLoad, RoutePolicy, Router};
 pub use sample_buffer::{Admission, BufferStats, SampleBuffer};
@@ -79,6 +85,13 @@ pub struct RolloutSystemCfg {
     /// staggered weight sync (>= N-1 replicas keep decoding); false =
     /// broadcast to every replica at once
     pub rolling_update: bool,
+    /// salvage the decoded prefix across migration / dead-replica
+    /// resubmission so moved generations resume instead of restarting;
+    /// false = the old abort-and-resubmit-from-scratch arm
+    pub partial_migration: bool,
+    /// shortest salvaged prefix worth resuming (shorter ones are
+    /// dropped and counted as wasted)
+    pub min_salvage_tokens: usize,
 }
 
 impl RolloutSystemCfg {
@@ -158,6 +171,8 @@ impl RolloutSystem {
             route_policy: cfg.route_policy,
             rolling_update: cfg.rolling_update,
             replica_slots: manifest.decode_batch,
+            partial_migration: cfg.partial_migration,
+            min_salvage_tokens: cfg.min_salvage_tokens,
         };
         let proxy = Arc::new(LlmProxyPool::spawn(
             &pool_cfg,
@@ -221,6 +236,8 @@ mod tests {
             num_replicas: 2,
             route_policy: RoutePolicy::LeastOutstanding,
             rolling_update: true,
+            partial_migration: true,
+            min_salvage_tokens: 1,
         }
     }
 

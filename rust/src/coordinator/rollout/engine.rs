@@ -22,6 +22,12 @@
 //! the group-completion hook aborts the losers' in-flight generations
 //! via the backend (`proxy.abort`), reclaiming their tickets — surplus
 //! work is cancelled, not completed.
+//!
+//! Generations go to the backend as resumable [`GenerationTask`]s: the
+//! hang watchdog's `migrate` salvages the decoded prefix inside the
+//! fleet (the episode keeps waiting on the same reply), while
+//! redundancy losers and shutdown use plain `abort` — there is no
+//! episode left to resume for, so the work is reclaimed outright.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,7 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::fleet::LlmProxyPool;
-use crate::coordinator::llm_proxy::GenResult;
+use crate::coordinator::llm_proxy::{GenResult, GenerationTask};
 use crate::coordinator::rollout::episode::{Episode, EpisodeState, GroupTasks};
 use crate::coordinator::sample_buffer::{Admission, SampleBuffer};
 use crate::env::{BaseEnv, PendingStep, StepResult};
@@ -51,16 +57,18 @@ const HEARTBEAT: Duration = Duration::from_millis(50);
 /// The slice of the inference fleet the engine needs. `LlmProxyPool`
 /// is the production backend; tests substitute deterministic mocks.
 pub trait GenBackend: Send + Sync {
-    /// Route a generation; the result arrives on `reply` carrying the
-    /// returned id. `None` means the request cannot be accepted at all
-    /// (the whole fleet is dead) and was dropped — callers must not
-    /// wait for a reply.
-    fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize, reply: Sender<GenResult>)
-        -> Option<u64>;
-    /// Interrupt and reclaim a request (no-op for finished ids).
+    /// Route a resumable [`GenerationTask`]; the result arrives on the
+    /// task's reply sender carrying the returned id. `None` means the
+    /// request cannot be accepted at all (the whole fleet is dead) and
+    /// was dropped — callers must not wait for a reply.
+    fn submit(&self, task: GenerationTask) -> Option<u64>;
+    /// Interrupt and reclaim a request outright (no-op for finished
+    /// ids). Used where the episode is over — redundancy losers,
+    /// shutdown — so there is nothing to salvage *for*.
     fn abort(&self, id: u64);
     /// Move a presumed-hung request to another replica, keeping its
-    /// reply channel. `false` = nowhere to move it.
+    /// reply channel; the backend salvages the decoded prefix when
+    /// configured to. `false` = nowhere to move it.
     fn migrate(&self, id: u64) -> bool {
         let _ = id;
         false
@@ -68,13 +76,8 @@ pub trait GenBackend: Send + Sync {
 }
 
 impl GenBackend for LlmProxyPool {
-    fn submit(
-        &self,
-        prompt: Vec<i32>,
-        max_new_tokens: usize,
-        reply: Sender<GenResult>,
-    ) -> Option<u64> {
-        LlmProxyPool::try_submit(self, prompt, max_new_tokens, reply)
+    fn submit(&self, task: GenerationTask) -> Option<u64> {
+        LlmProxyPool::try_submit(self, task)
     }
 
     fn abort(&self, id: u64) {
@@ -584,8 +587,9 @@ impl EngineLoop {
 
     fn submit_generation(&mut self, lane: usize) {
         let ep = &mut self.episodes[lane];
-        let submitted =
-            self.backend.submit(ep.context.clone(), ep.max_new_tokens, self.gen_tx.clone());
+        let task =
+            GenerationTask::fresh(ep.context.clone(), ep.max_new_tokens, self.gen_tx.clone());
+        let submitted = self.backend.submit(task);
         let Some(gen_id) = submitted else {
             // the whole inference fleet is dead: this lane can never
             // make progress — reclaim the ticket and retire it so the
@@ -855,13 +859,14 @@ mod tests {
     }
 
     impl GenBackend for InstantBackend {
-        fn submit(&self, _p: Vec<i32>, _m: usize, reply: Sender<GenResult>) -> Option<u64> {
+        fn submit(&self, task: GenerationTask) -> Option<u64> {
             let id = self.next.fetch_add(1, Ordering::Relaxed);
-            let _ = reply.send(GenResult {
+            let _ = task.reply.send(GenResult {
                 id,
                 tokens: vec![vocab::digit(3), vocab::EOS],
                 logps: vec![-0.1, -0.1],
                 version: 0,
+                prefix_version: 0,
             });
             Some(id)
         }
@@ -898,15 +903,16 @@ mod tests {
                 tokens: vec![vocab::digit(7), vocab::EOS],
                 logps: vec![-0.2, -0.2],
                 version: 0,
+                prefix_version: 0,
             });
             true
         }
     }
 
     impl GenBackend for PacedBackend {
-        fn submit(&self, _p: Vec<i32>, _m: usize, reply: Sender<GenResult>) -> Option<u64> {
+        fn submit(&self, task: GenerationTask) -> Option<u64> {
             let id = self.next.fetch_add(1, Ordering::Relaxed);
-            self.held.lock().unwrap().push_back((id, reply));
+            self.held.lock().unwrap().push_back((id, task.reply));
             Some(id)
         }
 
@@ -923,7 +929,7 @@ mod tests {
     }
 
     impl GenBackend for BlackholeBackend {
-        fn submit(&self, _p: Vec<i32>, _m: usize, _reply: Sender<GenResult>) -> Option<u64> {
+        fn submit(&self, _task: GenerationTask) -> Option<u64> {
             Some(self.next.fetch_add(1, Ordering::Relaxed))
         }
 
@@ -1087,7 +1093,7 @@ mod tests {
     fn dead_fleet_winds_down_instead_of_deadlocking() {
         struct DeadBackend;
         impl GenBackend for DeadBackend {
-            fn submit(&self, _p: Vec<i32>, _m: usize, _r: Sender<GenResult>) -> Option<u64> {
+            fn submit(&self, _task: GenerationTask) -> Option<u64> {
                 None
             }
             fn abort(&self, _id: u64) {}

@@ -113,6 +113,10 @@ pub struct Episode {
     pub response_mask: Vec<f32>,
     pub logps: Vec<f32>,
     pub turn: usize,
+    /// some absorbed generation straddled a weight update (a salvaged
+    /// prefix resumed under newer weights, or an in-place swap landed
+    /// mid-decode): the trajectory's behavior policy is piecewise
+    pub cross_version: bool,
     /// a step outcome parked behind its latency-deadline timer
     pub pending: Option<StepResult>,
     /// the episode's group completed while its env work was in flight;
@@ -141,6 +145,7 @@ impl Episode {
             response_mask: Vec::new(),
             logps: Vec::new(),
             turn: 0,
+            cross_version: false,
             pending: None,
             cancelled: false,
             timer_epoch: 0,
@@ -157,6 +162,7 @@ impl Episode {
         self.response_mask.clear();
         self.logps.clear();
         self.turn = 0;
+        self.cross_version = false;
         self.pending = None;
         self.cancelled = false;
         self.timer_epoch += 1;
@@ -170,8 +176,12 @@ impl Episode {
     }
 
     /// A generation finished: action tokens are trainable and join the
-    /// context.
+    /// context. A completion whose salvaged prefix spans a weight
+    /// update marks the whole trajectory piecewise-policy.
     pub fn absorb_action(&mut self, res: &GenResult) {
+        if res.cross_version() {
+            self.cross_version = true;
+        }
         for (t, lp) in res.tokens.iter().zip(&res.logps) {
             self.response.push(*t);
             self.response_mask.push(1.0);
@@ -202,6 +212,7 @@ impl Episode {
             reward,
             group: self.group_key,
             init_version: self.init_version,
+            cross_version: self.cross_version,
         }
     }
 }
@@ -261,9 +272,21 @@ mod tests {
         ep.begin(77, 4);
         assert_eq!(ep.state, EpisodeState::SteppingEnv);
         ep.absorb_prompt(vec![1, 2, 3]);
-        ep.absorb_action(&GenResult { id: 9, tokens: vec![5, 6], logps: vec![-0.1, -0.2], version: 4 });
+        ep.absorb_action(&GenResult {
+            id: 9,
+            tokens: vec![5, 6],
+            logps: vec![-0.1, -0.2],
+            version: 4,
+            prefix_version: 4,
+        });
         ep.absorb_obs(&[8]);
-        ep.absorb_action(&GenResult { id: 10, tokens: vec![7], logps: vec![-0.3], version: 4 });
+        ep.absorb_action(&GenResult {
+            id: 10,
+            tokens: vec![7],
+            logps: vec![-0.3],
+            version: 4,
+            prefix_version: 4,
+        });
         let traj = ep.finish(1.0);
         assert_eq!(ep.state, EpisodeState::Scoring);
         assert_eq!(traj.prompt, vec![1, 2, 3]);
@@ -272,9 +295,31 @@ mod tests {
         assert_eq!(traj.behavior_logps, vec![-0.1, -0.2, 0.0, -0.3]);
         assert_eq!(traj.group, 77);
         assert_eq!(traj.init_version, 4);
+        assert!(!traj.cross_version, "single-version actions are not piecewise");
         // begin() resets all per-episode buffers
         ep.begin(78, 5);
         assert!(ep.prompt.is_empty() && ep.response.is_empty() && ep.context.is_empty());
         assert_eq!(ep.turn, 0);
+    }
+
+    #[test]
+    fn salvaged_prefix_spanning_update_marks_cross_version() {
+        let mut ep = Episode::new(0, 0, false, Box::new(MathEnv::new()));
+        ep.begin(5, 1);
+        ep.absorb_prompt(vec![1]);
+        // resumed generation: first token decoded at version 1, the
+        // continuation finished at version 2
+        ep.absorb_action(&GenResult {
+            id: 1,
+            tokens: vec![4, 5],
+            logps: vec![-0.1, -0.2],
+            version: 2,
+            prefix_version: 1,
+        });
+        let traj = ep.finish(0.0);
+        assert!(traj.cross_version, "salvage spanning an update must be surfaced");
+        // the flag resets with the next episode
+        ep.begin(6, 2);
+        assert!(!ep.cross_version);
     }
 }

@@ -1,5 +1,5 @@
 //! Replica routing for the inference fleet (paper Section 4.2 at
-//! scale): where does the next `GenRequest` go?
+//! scale): where does the next `GenerationTask` go?
 //!
 //! The pool fronts N `LlmProxy` replicas; a `Router` picks the target
 //! replica for each request from a load snapshot. Four policies:

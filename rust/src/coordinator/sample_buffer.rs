@@ -46,6 +46,12 @@ pub struct BufferStats {
     /// samples arriving for an already-complete group (redundant
     /// environment rollout surplus, Section 5.2.2)
     pub surplus: usize,
+    /// consumed samples whose behavior policy was piecewise across a
+    /// weight update (a salvaged prefix resumed under newer weights —
+    /// partial migration). These sit inside the same alpha bound as
+    /// everything else (the gap is measured from `init_version`), but
+    /// importance ratios on the salvaged span use the older pi_old.
+    pub cross_version_samples: usize,
     pub max_version_gap: u64,
     pub sum_version_gap: u64,
 }
@@ -289,6 +295,9 @@ impl SampleBuffer {
                     let gap = v.saturating_sub(t.init_version);
                     g.stats.max_version_gap = g.stats.max_version_gap.max(gap);
                     g.stats.sum_version_gap += gap;
+                    if t.cross_version {
+                        g.stats.cross_version_samples += 1;
+                    }
                 }
                 g.stats.consumed += out.len();
                 self.cv.notify_all();
@@ -455,6 +464,18 @@ mod tests {
         assert_eq!(s.max_version_gap, 2);
         assert!((s.mean_version_gap() - 2.0).abs() < 1e-9);
         assert_eq!(s.stale_evicted, 0); // gap == alpha: admissible
+    }
+
+    #[test]
+    fn cross_version_samples_counted_at_consumption() {
+        let b = SampleBuffer::new(2, 2, 1.0);
+        b.begin_sample();
+        b.begin_sample();
+        b.push(Trajectory { cross_version: true, ..traj(0, 0) });
+        b.push(traj(0, 0));
+        assert_eq!(b.stats().cross_version_samples, 0, "counted when consumed, not pushed");
+        let _ = b.get_batch(1).unwrap();
+        assert_eq!(b.stats().cross_version_samples, 1);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //!   roll-flash train  config=examples/rlvr.yaml steps=40
 //!   roll-flash train  model=tiny alpha=2 variant=tis steps=20 \
 //!                     num_replicas=3 route_policy=ewma rolling_update=true \
-//!                     num_workers=8 redundancy_factor=1.25
+//!                     num_workers=8 redundancy_factor=1.25 \
+//!                     partial_migration=true min_salvage_tokens=4
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -32,7 +33,7 @@ fn main() -> Result<()> {
                 "usage: roll-flash <train|simulate|inspect> [key=value ...]\n\
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
                  \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma> rolling_update=<bool>\n\
-                 \u{20}         num_workers=<n> redundancy_factor=<f>\n\
+                 \u{20}         num_workers=<n> redundancy_factor=<f> partial_migration=<bool> min_salvage_tokens=<n>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -62,6 +63,9 @@ fn train(cli: &Cli) -> Result<()> {
     let rolling_update = cli.bool_or("rolling_update", cfg.rolling_update);
     let num_workers: usize = cli.parse_or("num_workers", cfg.num_workers);
     let redundancy_factor: f64 = cli.parse_or("redundancy_factor", cfg.redundancy_factor);
+    let partial_migration = cli.bool_or("partial_migration", cfg.partial_migration);
+    let min_salvage_tokens: usize =
+        cli.parse_or("min_salvage_tokens", cfg.min_salvage_tokens).max(1);
 
     // resolved against the crate dir (where `make artifacts` writes),
     // not the CWD, so the CLI works from the workspace root too
@@ -88,9 +92,11 @@ fn train(cli: &Cli) -> Result<()> {
         num_replicas,
         route_policy,
         rolling_update,
+        partial_migration,
+        min_salvage_tokens,
     };
     println!(
-        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor}",
+        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor} partial_migration={partial_migration}",
         variant.as_str(),
         route_policy.as_str()
     );
@@ -110,7 +116,14 @@ fn train(cli: &Cli) -> Result<()> {
         report.engine.abandoned
     );
     if num_replicas > 1 {
-        println!("fleet: {} migrations, {} rolling waves", report.pool.migrated, report.pool.sync_waves);
+        println!(
+            "fleet: {} migrations ({} resumed), {} rolling waves, tokens salvaged {} / wasted {}",
+            report.pool.migrated,
+            report.pool.resumed,
+            report.pool.sync_waves,
+            report.pool.tokens.salvaged_tokens,
+            report.pool.tokens.wasted_tokens
+        );
         print!("{}", report.pool.format_table());
     }
     Ok(())

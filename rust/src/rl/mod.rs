@@ -24,6 +24,11 @@ pub struct Trajectory {
     pub group: u64,
     /// policy version that initiated generation (Section 4.3)
     pub init_version: u64,
+    /// some generation in this trajectory straddled a weight update
+    /// (a prefix salvaged by partial migration resumed under newer
+    /// weights): the behavior policy is piecewise across versions.
+    /// Surfaced as `cross_version_samples` in buffer/step stats.
+    pub cross_version: bool,
 }
 
 impl Trajectory {
@@ -37,7 +42,16 @@ impl Trajectory {
         init_version: u64,
     ) -> Self {
         let response_mask = vec![1.0; response.len()];
-        Trajectory { prompt, response, response_mask, behavior_logps, reward, group, init_version }
+        Trajectory {
+            prompt,
+            response,
+            response_mask,
+            behavior_logps,
+            reward,
+            group,
+            init_version,
+            cross_version: false,
+        }
     }
 
     pub fn total_len(&self) -> usize {

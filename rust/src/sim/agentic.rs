@@ -100,6 +100,11 @@ pub struct AgenticReport {
     pub restarts: usize,
     pub gen_utilization: f64,
     pub tokens_generated: f64,
+    /// decode tokens burned by fail-stop restarts: every turn a
+    /// trajectory had decoded before its env died is re-decoded from
+    /// scratch (the abort-and-resubmit bill the resumable-task
+    /// coordinator surface avoids for migrations)
+    pub wasted_tokens: f64,
 }
 
 /// One rollout-collection step.
@@ -208,6 +213,9 @@ fn run_lockstep(cfg: &AgenticSimConfig) -> AgenticReport {
             let t = &mut trajs[ti];
             if t.turn >= t.dead_at {
                 barrier = barrier.max(cfg.retry_timeout);
+                // every action decoded for this trajectory (its turns
+                // so far plus this round's) restarts from scratch
+                report.wasted_tokens += (t.turn as f64 + 1.0) * tokens;
                 t.turn = 0;
                 t.dead_at = draw_dead_at(cfg, &mut rng);
                 report.restarts += 1;
@@ -280,6 +288,7 @@ fn run_env_async(cfg: &AgenticSimConfig) -> AgenticReport {
             if tr.turn >= tr.dead_at {
                 // env is dead: action times out, restart after detection
                 env_events.push(Reverse((T(now + cfg.retry_timeout), ti)));
+                report.wasted_tokens += (tr.turn as f64 + 1.0) * tokens;
                 tr.turn = usize::MAX - 1; // marker: restarting
                 report.restarts += 1;
             } else {

@@ -19,14 +19,29 @@
 //!     pool's collectors use) and starves fail-slow / heterogeneous
 //!     replicas (`slow_replica`) that least-outstanding keeps feeding;
 //!   * staggered (rolling) weight sync keeps N-1 replicas decoding
-//!     through a model update; broadcast sync stalls all of them.
+//!     through a model update; broadcast sync stalls all of them;
+//!   * *prefix-salvaging migration* (`hang_timeout` > 0): a request
+//!     that runs past the watchdog deadline is aborted off its replica
+//!     and resubmitted elsewhere through the same exclusion-routing
+//!     the real `LlmProxyPool::migrate` uses. With `partial_migration`
+//!     only the *remaining* tokens are re-decoded (the decoded prefix
+//!     is salvaged, counted in `salvaged_tokens`); the from-scratch
+//!     arm re-decodes everything and burns the progress into
+//!     `wasted_tokens` — the cost model behind
+//!     `benches/fig_fleet_scaling.rs`'s wasted-token comparison.
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
-use crate::sim::queue::GpuPool;
+use crate::sim::queue::{GpuPool, T};
 use crate::util::rng::Rng;
 use crate::workload::{DecodeCost, LengthProfile};
+
+/// Give up migrating a request after this many moves (mirrors the
+/// engine's MAX_GEN_MIGRATIONS): a genuinely long generation must be
+/// allowed to finish somewhere.
+const MAX_SIM_MIGRATIONS: u32 = 3;
 
 #[derive(Clone, Debug)]
 pub struct FleetSimConfig {
@@ -53,6 +68,14 @@ pub struct FleetSimConfig {
     /// heterogeneous fleet: replica `index` decodes `factor`x slower
     /// (fail-slow hardware, thermal throttling, a noisy neighbor)
     pub slow_replica: Option<(usize, f64)>,
+    /// migration watchdog: a request still running this many virtual
+    /// seconds after dispatch is moved to another replica (0 = never)
+    pub hang_timeout: f64,
+    /// carry the decoded prefix across migration (resume) vs re-decode
+    /// from scratch
+    pub partial_migration: bool,
+    /// shortest decoded prefix (token units) worth salvaging
+    pub min_salvage_tokens: f64,
     pub seed: u64,
 }
 
@@ -73,6 +96,9 @@ impl FleetSimConfig {
             sync_interval: 120.0,
             sync_time: 10.0,
             slow_replica: None,
+            hang_timeout: 0.0,
+            partial_migration: true,
+            min_salvage_tokens: 1.0,
             seed: 17,
         }
     }
@@ -100,6 +126,12 @@ pub struct FleetSimReport {
     pub pool_queue_max: usize,
     /// requests placed on each replica (routing share)
     pub routed: Vec<usize>,
+    /// watchdog migrations performed
+    pub migrations: usize,
+    /// decoded tokens carried across migrations (partial arm)
+    pub salvaged_tokens: f64,
+    /// decoded tokens re-decoded from scratch (the from-scratch bill)
+    pub wasted_tokens: f64,
 }
 
 #[derive(Clone, Copy)]
@@ -125,12 +157,20 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut paused = vec![false; n];
     let mut router = Router::new(cfg.route_policy);
 
-    let mut pending: VecDeque<(u64, f64)> = VecDeque::new(); // (id, tokens)
+    let mut pending: VecDeque<(u64, f64)> = VecDeque::new(); // (id, tokens to decode)
     let mut submit_time: HashMap<u64, (f64, f64)> = HashMap::new(); // id -> (t, tokens)
     // id -> placement time: the router's EWMA feed measures dispatch->
     // completion, matching the real pool (InFlight::dispatched), not
     // pool-queue wait
     let mut dispatch_time: HashMap<u64, f64> = HashMap::new();
+    // id -> current replica (the pool's InFlight::replica)
+    let mut placed: HashMap<u64, usize> = HashMap::new();
+    // id -> tokens assigned at the current dispatch (salvage baseline)
+    let mut work_left: HashMap<u64, f64> = HashMap::new();
+    // id -> watchdog strikes (mirrors InFlight::migrations)
+    let mut strikes: HashMap<u64, u32> = HashMap::new();
+    // (deadline, id, replica) — stale entries skipped on pop
+    let mut watchdogs: BinaryHeap<Reverse<(T, u64, usize)>> = BinaryHeap::new();
     let mut next_id = 0u64;
     let mut now = 0.0f64;
     let mut submitted = 0usize;
@@ -155,37 +195,46 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         *next_id += 1;
     };
 
+    // place a request on a specific replica (shared by pool-queue
+    // dispatch and migration), arming its watchdog
+    macro_rules! place {
+        ($r:expr, $id:expr, $tokens:expr, $now:expr) => {{
+            replicas[$r].submit_to(0, $id, $tokens, $now);
+            dispatch_time.insert($id, $now);
+            placed.insert($id, $r);
+            work_left.insert($id, $tokens);
+            report.routed[$r] += 1;
+            report.max_inflight = report.max_inflight.max(replicas[$r].in_flight());
+            if cfg.hang_timeout > 0.0 {
+                watchdogs.push(Reverse((T($now + cfg.hang_timeout), $id, $r)));
+            }
+        }};
+    }
+
     // dispatch pool-queued requests while the router allows
-    let dispatch = |replicas: &mut Vec<GpuPool>,
-                    pending: &mut VecDeque<(u64, f64)>,
-                    dispatch_time: &mut HashMap<u64, f64>,
-                    router: &mut Router,
-                    paused: &[bool],
-                    report: &mut FleetSimReport,
-                    now: f64| {
-        while !pending.is_empty() {
-            let loads: Vec<ReplicaLoad> = (0..replicas.len())
-                .map(|r| ReplicaLoad {
-                    outstanding: replicas[r].in_flight(),
-                    slots: cfg.max_active,
-                    suspended: paused[r],
-                })
-                .collect();
-            let Some(r) = router.route(&loads) else { break };
-            let (id, tokens) = pending.pop_front().unwrap();
-            replicas[r].submit_to(0, id, tokens, now);
-            dispatch_time.insert(id, now);
-            report.routed[r] += 1;
-            report.max_inflight = report.max_inflight.max(replicas[r].in_flight());
-        }
-        report.pool_queue_max = report.pool_queue_max.max(pending.len());
-    };
+    macro_rules! dispatch {
+        ($now:expr) => {{
+            while !pending.is_empty() {
+                let loads: Vec<ReplicaLoad> = (0..replicas.len())
+                    .map(|r| ReplicaLoad {
+                        outstanding: replicas[r].in_flight(),
+                        slots: cfg.max_active,
+                        suspended: paused[r],
+                    })
+                    .collect();
+                let Some(r) = router.route(&loads) else { break };
+                let (id, tokens) = pending.pop_front().unwrap();
+                place!(r, id, tokens, $now);
+            }
+            report.pool_queue_max = report.pool_queue_max.max(pending.len());
+        }};
+    }
 
     for _ in 0..cfg.clients.min(cfg.total_requests) {
         new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
         submitted += 1;
     }
-    dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
+    dispatch!(now);
 
     while completed < cfg.total_requests {
         // earliest generation completion across the fleet
@@ -202,69 +251,126 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             SyncPhase::Broadcast { until } => until,
             SyncPhase::Rolling { until, .. } => until,
         };
-        match gen {
-            Some((t, r)) if t <= sync_t => {
-                now = t;
-                let id = replicas[r].pop_completion(t);
-                let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
-                let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
-                // the same observation feed the real pool's collectors
-                // give the Router: dispatch-to-completion token rate
-                router.on_completion(r, tokens, now - t_dispatch);
-                latencies.push(now - t_submit);
-                completed += 1;
-                // closed loop: the freed client submits its next task
-                if submitted < cfg.total_requests {
-                    new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
-                    submitted += 1;
-                }
-                dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
+        let dog_t = watchdogs.peek().map(|Reverse((t, _, _))| t.0).unwrap_or(f64::INFINITY);
+
+        if dog_t.is_finite() && dog_t <= sync_t && gen.map(|(t, _)| dog_t <= t).unwrap_or(true) {
+            // --- watchdog: migrate a still-running request ------------
+            let Reverse((t, id, r)) = watchdogs.pop().unwrap();
+            if placed.get(&id) != Some(&r) {
+                continue; // stale: completed or already migrated
             }
-            _ => {
-                assert!(
-                    sync_t.is_finite(),
-                    "fleet sim starved: no completions and no sync events \
-                     (completed {completed}/{})",
-                    cfg.total_requests
-                );
-                now = sync_t;
-                phase = match phase {
-                    SyncPhase::Idle { .. } => {
-                        report.sync_waves += 1;
-                        if cfg.rolling_update {
-                            paused[0] = true;
-                            replicas[0].set_paused(true, now);
-                            max_paused = max_paused.max(1);
-                            SyncPhase::Rolling { replica: 0, until: now + cfg.sync_time }
-                        } else {
-                            for r in 0..n {
-                                paused[r] = true;
-                                replicas[r].set_paused(true, now);
-                            }
-                            max_paused = n;
-                            SyncPhase::Broadcast { until: now + cfg.sync_time }
-                        }
+            now = t.0;
+            if strikes.get(&id).copied().unwrap_or(0) >= MAX_SIM_MIGRATIONS {
+                continue; // let it finish where it is
+            }
+            let loads: Vec<ReplicaLoad> = (0..n)
+                .map(|i| ReplicaLoad {
+                    outstanding: replicas[i].in_flight(),
+                    slots: cfg.max_active,
+                    suspended: paused[i],
+                })
+                .collect();
+            // the policy's pick, then least-outstanding survivor — the
+            // same fallback LlmProxyPool::migrate uses
+            let target = router.route_excluding(&loads, Some(r)).or_else(|| {
+                (0..n)
+                    .filter(|&i| i != r && !loads[i].suspended)
+                    .min_by_key(|&i| loads[i].outstanding)
+            });
+            let Some(new_r) = target else {
+                // nowhere to move it right now (peers paused or
+                // saturated): re-arm and try again next period, like
+                // the real watchdog re-firing every hang_timeout
+                watchdogs.push(Reverse((T(now + cfg.hang_timeout), id, r)));
+                continue;
+            };
+            *strikes.entry(id).or_insert(0) += 1;
+            let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
+            let assigned = work_left.get(&id).copied().unwrap_or(remaining);
+            let decoded = (assigned - remaining).max(0.0);
+            report.migrations += 1;
+            let resubmit = if cfg.partial_migration && decoded >= cfg.min_salvage_tokens {
+                report.salvaged_tokens += decoded;
+                remaining.max(1e-9)
+            } else {
+                report.wasted_tokens += decoded;
+                assigned
+            };
+            place!(new_r, id, resubmit, now);
+        } else {
+            match gen {
+                Some((t, r)) if t <= sync_t => {
+                    now = t;
+                    let id = replicas[r].pop_completion(t);
+                    placed.remove(&id);
+                    strikes.remove(&id);
+                    let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
+                    let assigned = work_left.remove(&id).unwrap_or(tokens);
+                    let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
+                    // the same observation feed the real pool's
+                    // collectors give the Router: dispatch-to-completion
+                    // token rate, counting only the tokens decoded on
+                    // THIS replica since its dispatch (a salvaged
+                    // prefix must not inflate the target's EWMA)
+                    router.on_completion(r, assigned, now - t_dispatch);
+                    latencies.push(now - t_submit);
+                    completed += 1;
+                    // closed loop: the freed client submits its next task
+                    if submitted < cfg.total_requests {
+                        new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+                        submitted += 1;
                     }
-                    SyncPhase::Rolling { replica, .. } => {
-                        paused[replica] = false;
-                        replicas[replica].set_paused(false, now);
-                        if replica + 1 < n {
-                            paused[replica + 1] = true;
-                            replicas[replica + 1].set_paused(true, now);
-                            SyncPhase::Rolling { replica: replica + 1, until: now + cfg.sync_time }
-                        } else {
+                    dispatch!(now);
+                }
+                _ => {
+                    assert!(
+                        sync_t.is_finite(),
+                        "fleet sim starved: no completions, watchdogs, or sync events \
+                         (completed {completed}/{})",
+                        cfg.total_requests
+                    );
+                    now = sync_t;
+                    phase = match phase {
+                        SyncPhase::Idle { .. } => {
+                            report.sync_waves += 1;
+                            if cfg.rolling_update {
+                                paused[0] = true;
+                                replicas[0].set_paused(true, now);
+                                max_paused = max_paused.max(1);
+                                SyncPhase::Rolling { replica: 0, until: now + cfg.sync_time }
+                            } else {
+                                for r in 0..n {
+                                    paused[r] = true;
+                                    replicas[r].set_paused(true, now);
+                                }
+                                max_paused = n;
+                                SyncPhase::Broadcast { until: now + cfg.sync_time }
+                            }
+                        }
+                        SyncPhase::Rolling { replica, .. } => {
+                            paused[replica] = false;
+                            replicas[replica].set_paused(false, now);
+                            if replica + 1 < n {
+                                paused[replica + 1] = true;
+                                replicas[replica + 1].set_paused(true, now);
+                                SyncPhase::Rolling {
+                                    replica: replica + 1,
+                                    until: now + cfg.sync_time,
+                                }
+                            } else {
+                                SyncPhase::Idle { next: now + cfg.sync_interval }
+                            }
+                        }
+                        SyncPhase::Broadcast { .. } => {
+                            for r in 0..n {
+                                paused[r] = false;
+                                replicas[r].set_paused(false, now);
+                            }
                             SyncPhase::Idle { next: now + cfg.sync_interval }
                         }
-                    }
-                    SyncPhase::Broadcast { .. } => {
-                        for r in 0..n {
-                            paused[r] = false;
-                            replicas[r].set_paused(false, now);
-                        }
-                        SyncPhase::Idle { next: now + cfg.sync_interval }
-                    }
-                };
-                dispatch(&mut replicas, &mut pending, &mut dispatch_time, &mut router, &paused, &mut report, now);
+                    };
+                    dispatch!(now);
+                }
             }
         }
     }
@@ -313,6 +419,16 @@ mod tests {
         c.clients = 32;
         c.total_requests = 240;
         c.sync_interval = 0.0; // isolate the routing effect
+        c
+    }
+
+    /// One 6x fail-slow replica plus a migration watchdog: the regime
+    /// the salvage arm is for.
+    fn fail_slow(partial: bool) -> FleetSimConfig {
+        let mut c = skewed(RoutePolicy::LeastOutstanding);
+        c.slow_replica = Some((2, 6.0));
+        c.hang_timeout = 60.0;
+        c.partial_migration = partial;
         c
     }
 
@@ -390,6 +506,58 @@ mod tests {
             lo.makespan
         );
         assert!(ew.routed.iter().all(|&r| r > 0), "every replica serves: {:?}", ew.routed);
+    }
+
+    #[test]
+    fn watchdog_migrates_and_salvage_conserves_work() {
+        let r = run(&fail_slow(true));
+        assert_eq!(r.completed, 240, "every request must still finish");
+        assert!(r.migrations > 0, "watchdog must fire on the fail-slow replica");
+        assert!(r.salvaged_tokens > 0.0, "salvage must carry decoded work: {r:?}");
+        // the only waste path on the partial arm is a sub-min_salvage
+        // prefix (< 1 token of progress); real progress is conserved
+        assert!(
+            r.wasted_tokens < r.salvaged_tokens,
+            "partial arm must keep, not burn, decoded work: {r:?}"
+        );
+    }
+
+    #[test]
+    fn from_scratch_arm_wastes_what_salvage_keeps() {
+        let scratch = run(&fail_slow(false));
+        let partial = run(&fail_slow(true));
+        assert_eq!(scratch.completed, partial.completed);
+        assert!(scratch.migrations > 0 && partial.migrations > 0);
+        assert!(
+            partial.wasted_tokens < scratch.wasted_tokens,
+            "salvage must strictly reduce wasted tokens: partial {:.0} vs scratch {:.0}",
+            partial.wasted_tokens,
+            scratch.wasted_tokens
+        );
+        // same seed, same arrivals: total decode work (tokens) only
+        // differs by the re-decoded prefixes, so the salvage arm does
+        // no MORE work and finishes no later than from-scratch re-runs
+        assert!(
+            partial.tokens <= scratch.tokens + 1e-6,
+            "salvage must not add decode work: {:.0} vs {:.0}",
+            partial.tokens,
+            scratch.tokens
+        );
+        // a migrated-and-resumed request loses and duplicates nothing:
+        // decoded work for the completed set matches the assignment
+        assert!(
+            partial.salvaged_tokens > 0.0,
+            "the comparison is vacuous without salvage: {partial:?}"
+        );
+    }
+
+    #[test]
+    fn migration_determinism() {
+        let a = run(&fail_slow(true));
+        let b = run(&fail_slow(true));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.salvaged_tokens, b.salvaged_tokens);
     }
 
     #[test]

@@ -250,6 +250,7 @@ fn prop_assemble_batch_roundtrip() {
             reward: 1.0,
             group: 0,
             init_version: 0,
+            cross_version: false,
         };
         let adv = rng.normal() as f32;
         let b = rl::assemble_batch(&[t], &[adv], &[1.0], 1, max_seq);
