@@ -8,12 +8,14 @@
 #   make test        tier-1 verify (build + tests; engine-backed tests
 #                    auto-skip until `make artifacts` has run)
 #   make bench       regenerate every figure/table report
+#   make check       the full CI gauntlet locally (fmt + clippy +
+#                    build + test + bench compile)
 
 PYTHON ?= python3
 MODELS ?= tiny small
 ARTIFACTS_DIR := rust/artifacts
 
-.PHONY: artifacts build test bench clean
+.PHONY: artifacts build test bench check clean
 
 artifacts:
 	@for m in $(MODELS); do \
@@ -30,9 +32,17 @@ test:
 bench:
 	@for b in fig1b_scaling fig3a_allocation fig3b_rollout_size fig4_offpolicy \
 	         fig7_queue_sched fig8_prompt_repl fig9_env_async fig10_redundant \
-	         fig11_real_env fig_fleet_scaling table1_async_ratio prop_bounds; do \
+	         fig11_real_env fig_fleet_scaling fig_autoscale table1_async_ratio \
+	         prop_bounds; do \
 		cargo bench --bench $$b; \
 	done
+
+check:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
+	cargo build --release
+	cargo test -q
+	cargo bench --no-run
 
 clean:
 	cargo clean

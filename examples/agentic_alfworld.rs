@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(), // static fleet
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",
@@ -75,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         n_groups: consume_groups,
         group_size: consume_group_size,
         sync_mode: false,
+        autoscale: fleet.controller_autoscale(),
     };
     let t0 = std::time::Instant::now();
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;

@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(), // static fleet (see examples/autoscale.rs)
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {
@@ -126,6 +127,7 @@ fn main() -> anyhow::Result<()> {
         n_groups,
         group_size,
         sync_mode: alpha == 0.0,
+        autoscale: fleet.controller_autoscale(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(), // static fleet
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 
@@ -68,6 +69,7 @@ fn main() -> anyhow::Result<()> {
         n_groups,
         group_size,
         sync_mode: true,
+        autoscale: fleet.controller_autoscale(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

@@ -68,10 +68,19 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(), // static fleet
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
-    let ctl = ControllerCfg { variant, steps, lr, n_groups, group_size, sync_mode };
+    let ctl = ControllerCfg {
+        variant,
+        steps,
+        lr,
+        n_groups,
+        group_size,
+        sync_mode,
+        autoscale: fleet.controller_autoscale(),
+    };
 
     let t0 = std::time::Instant::now();
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;

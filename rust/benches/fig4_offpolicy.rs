@@ -37,6 +37,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(), // static fleet
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -46,6 +47,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         n_groups,
         group_size,
         sync_mode: alpha == 0.0,
+        autoscale: fleet.controller_autoscale(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     let report = system.shutdown().unwrap();

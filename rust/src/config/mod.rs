@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::autoscaler::AutoscaleCfg;
 use crate::coordinator::routing::RoutePolicy;
 use crate::util::json::Json;
 
@@ -123,6 +124,10 @@ pub struct RollConfig {
     pub partial_migration: bool,
     /// shortest salvaged prefix worth resuming (tokens)
     pub min_salvage_tokens: usize,
+    /// elastic fleet: queue-driven replica autoscaling (`autoscale:
+    /// {min_replicas, max_replicas, target_queue_depth, interval,
+    /// cooldown, hysteresis}`; presence of the block enables it)
+    pub autoscale: AutoscaleCfg,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -154,6 +159,7 @@ impl Default for RollConfig {
             rolling_update: true,
             partial_migration: true,
             min_salvage_tokens: 1,
+            autoscale: AutoscaleCfg::disabled(),
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -235,6 +241,33 @@ impl RollConfig {
         if let Some(v) = num(&j, "min_salvage_tokens") {
             cfg.min_salvage_tokens = v as usize;
         }
+        if let Some(a) = j.get("autoscale") {
+            // the block's presence turns the scaler on unless it says
+            // `enabled: false` explicitly (a documented off-switch that
+            // keeps the bounds in the file)
+            cfg.autoscale.enabled = true;
+            if let Some(Json::Bool(b)) = a.get("enabled") {
+                cfg.autoscale.enabled = *b;
+            }
+            if let Some(v) = num(a, "min_replicas") {
+                cfg.autoscale.min_replicas = v as usize;
+            }
+            if let Some(v) = num(a, "max_replicas") {
+                cfg.autoscale.max_replicas = v as usize;
+            }
+            if let Some(v) = num(a, "target_queue_depth") {
+                cfg.autoscale.target_queue_depth = v;
+            }
+            if let Some(v) = num(a, "interval") {
+                cfg.autoscale.interval = v;
+            }
+            if let Some(v) = num(a, "cooldown") {
+                cfg.autoscale.cooldown = v;
+            }
+            if let Some(v) = num(a, "hysteresis") {
+                cfg.autoscale.hysteresis = v;
+            }
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -299,6 +332,7 @@ impl RollConfig {
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be positive");
         anyhow::ensure!(self.min_salvage_tokens >= 1, "min_salvage_tokens must be >= 1");
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
+        self.autoscale.validate()?;
         Ok(())
     }
 
@@ -426,6 +460,49 @@ route_policy: ewma
         // rejects degenerate values
         assert!(RollConfig::from_yaml("num_workers: 0").is_err());
         assert!(RollConfig::from_yaml("redundancy_factor: 0.5").is_err());
+    }
+
+    #[test]
+    fn parses_autoscale_block() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+num_replicas: 2
+autoscale:
+  min_replicas: 2
+  max_replicas: 8
+  target_queue_depth: 6
+  interval: 2
+  cooldown: 5
+  hysteresis: 0.3
+"#,
+        )
+        .unwrap();
+        assert!(cfg.autoscale.enabled, "block presence enables the scaler");
+        assert_eq!(cfg.autoscale.min_replicas, 2);
+        assert_eq!(cfg.autoscale.max_replicas, 8);
+        assert!((cfg.autoscale.target_queue_depth - 6.0).abs() < 1e-12);
+        assert!((cfg.autoscale.interval - 2.0).abs() < 1e-12);
+        assert!((cfg.autoscale.cooldown - 5.0).abs() < 1e-12);
+        assert!((cfg.autoscale.hysteresis - 0.3).abs() < 1e-12);
+        // default: off, and the bounds are inert
+        assert!(!RollConfig::default().autoscale.enabled);
+        // explicit off-switch keeps the bounds in the file
+        let off = RollConfig::from_yaml("autoscale:\n  enabled: false\n").unwrap();
+        assert!(!off.autoscale.enabled);
+    }
+
+    #[test]
+    fn rejects_nonsensical_autoscale_bounds() {
+        for bad in [
+            "autoscale:\n  min_replicas: 0\n",
+            "autoscale:\n  min_replicas: 9\n  max_replicas: 2\n",
+            "autoscale:\n  interval: 0\n",
+            "autoscale:\n  interval: 4\n  cooldown: 1\n",
+            "autoscale:\n  target_queue_depth: 0\n",
+            "autoscale:\n  hysteresis: 1\n",
+        ] {
+            assert!(RollConfig::from_yaml(bad).is_err(), "{bad:?} should be rejected");
+        }
     }
 
     #[test]

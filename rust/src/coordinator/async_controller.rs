@@ -17,6 +17,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::PgVariant;
+use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler};
 use crate::coordinator::fleet::LlmProxyPool;
 use crate::coordinator::sample_buffer::SampleBuffer;
 use crate::rl;
@@ -32,6 +33,11 @@ pub struct ControllerCfg {
     pub group_size: usize,
     /// synchronous mode: suspend rollout during training
     pub sync_mode: bool,
+    /// elastic fleet: tick the queue-driven autoscaler between steps.
+    /// Only meaningful in async mode — a synchronous step leaves no
+    /// rollout running to scale against — and ignored when absent or
+    /// disabled.
+    pub autoscale: Option<AutoscaleCfg>,
 }
 
 /// Per-step training log (the Fig 4-style curve data).
@@ -64,6 +70,10 @@ pub struct StepLog {
     /// decoded tokens discarded without salvage during this step
     /// (aborts + from-scratch migration; the fail-slow/fail-stop bill)
     pub wasted_tokens: u64,
+    /// routable inference replicas at the end of this step — moves
+    /// between autoscale bounds when the elastic fleet is on, constant
+    /// otherwise
+    pub serving_replicas: usize,
     pub wall_secs: f64,
 }
 
@@ -85,6 +95,14 @@ pub fn run_training(
         "sequences per step ({per_step}) must be a multiple of train_batch ({b})"
     );
     let mut logs = Vec::with_capacity(cfg.steps);
+    // elastic fleet: the control loop lives on the training thread and
+    // runs between steps, where the pool's signals reflect a full
+    // collection interval. Sync mode suspends rollout during training,
+    // so there is nothing to scale against — the scaler stays off.
+    let mut autoscaler = cfg
+        .autoscale
+        .filter(|a| a.enabled && !cfg.sync_mode)
+        .map(Autoscaler::new);
 
     for step in 0..cfg.steps {
         let t0 = Instant::now();
@@ -136,6 +154,9 @@ pub fn run_training(
         if cfg.sync_mode {
             proxy.resume();
         }
+        if let Some(a) = autoscaler.as_mut() {
+            a.tick(proxy);
+        }
 
         let gap_after = buffer.stats();
         let tokens_after = proxy.token_stats();
@@ -162,6 +183,7 @@ pub fn run_training(
                 .salvaged_tokens
                 .saturating_sub(tokens_before.salvaged_tokens),
             wasted_tokens: tokens_after.wasted_tokens.saturating_sub(tokens_before.wasted_tokens),
+            serving_replicas: proxy.serving_replicas(),
             wall_secs: t0.elapsed().as_secs_f64(),
         });
     }
@@ -172,12 +194,14 @@ pub fn run_training(
 /// mean/max consumed staleness; `skew` is the rolling-sync replica
 /// weight-version spread; `xver` counts piecewise-policy samples
 /// consumed this step (salvaged prefixes spanning an update); `salv`/
-/// `waste` are the step's decoded-token salvage and loss.
+/// `waste` are the step's decoded-token salvage and loss; `repl` is
+/// the serving replica count (elastic under autoscaling).
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
         l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
-        l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.wall_secs
+        l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.serving_replicas,
+        l.wall_secs
     )
 }

@@ -1,0 +1,416 @@
+//! Elastic-fleet autoscaler: a control loop that grows and shrinks the
+//! `LlmProxyPool` from observed queue pressure instead of a static
+//! `num_replicas` knob.
+//!
+//! ROLL Flash's utilization claim is about a *fixed* GPU budget; the
+//! dual of that claim is that for a fixed workload the budget itself
+//! should track demand. A pool provisioned for the peak of a collection
+//! step idles through its long tail — exactly the bubble the paper's
+//! decoupling attacks. This module closes the loop:
+//!
+//!   * [`PoolSignals`] is the per-interval observation: serving replica
+//!     count, windowed pool-queue depth (p90 of the interval's
+//!     submissions — see `Histogram::reset`), and total in-flight work.
+//!   * [`decide`] is the *pure* decision function mapping (cfg,
+//!     signals) to a [`ScaleDecision`]: grow when the per-replica load
+//!     exceeds `target_queue_depth` by more than the hysteresis band,
+//!     shrink when it falls below it, clamp to `[min_replicas,
+//!     max_replicas]`. The same function runs against the real pool and
+//!     inside `sim/fleet.rs` virtual time, so the bench sweeps exercise
+//!     the exact decision logic that ships.
+//!   * [`Autoscaler`] adds the temporal policy — sample every
+//!     `interval`, back off `cooldown` seconds after any scale action
+//!     (growth must not flap into the drain it just triggered) — in
+//!     caller-supplied seconds, so wall time (the `tick` path the
+//!     AsyncController drives between training steps) and virtual time
+//!     (the sim) share one implementation.
+//!
+//! Scale-*down* is safe because of the PR 3 salvage machinery:
+//! [`LlmProxyPool::retire_replica`] RECLAIMs the victim's in-flight
+//! generations and re-dispatches them to survivors as resumed tasks, so
+//! shrinking the fleet burns no decoded tokens (the `TokenLedger`
+//! stays clean) and no caller observes the drain.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::fleet::LlmProxyPool;
+
+/// Autoscaler shape and cadence (`autoscale: {…}` in YAML / CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleCfg {
+    /// master switch: false = the pool stays at its spawned size
+    pub enabled: bool,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// target work (pool-queued + in-flight requests) per serving
+    /// replica; the loop sizes the fleet to hold this
+    pub target_queue_depth: f64,
+    /// seconds between decisions (wall or virtual)
+    pub interval: f64,
+    /// seconds after any Grow/Shrink before the next one; must be
+    /// >= interval so a scale action is observed before the next
+    pub cooldown: f64,
+    /// dead band around the target as a fraction (0.25 = only act when
+    /// per-replica load leaves [0.75, 1.25] x target)
+    pub hysteresis: f64,
+}
+
+impl AutoscaleCfg {
+    /// The config every call site starts from: autoscaling off.
+    pub fn disabled() -> Self {
+        AutoscaleCfg {
+            enabled: false,
+            min_replicas: 1,
+            max_replicas: 4,
+            target_queue_depth: 8.0,
+            interval: 1.0,
+            cooldown: 2.0,
+            hysteresis: 0.25,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(self.min_replicas > 0, "autoscale.min_replicas must be > 0");
+        anyhow::ensure!(
+            self.min_replicas <= self.max_replicas,
+            "autoscale.min_replicas ({}) must be <= max_replicas ({})",
+            self.min_replicas,
+            self.max_replicas
+        );
+        anyhow::ensure!(
+            self.target_queue_depth.is_finite() && self.target_queue_depth > 0.0,
+            "autoscale.target_queue_depth must be > 0"
+        );
+        anyhow::ensure!(
+            self.interval.is_finite() && self.interval > 0.0,
+            "autoscale.interval must be > 0"
+        );
+        anyhow::ensure!(
+            self.cooldown.is_finite() && self.cooldown >= self.interval,
+            "autoscale.cooldown ({}) must be >= interval ({}): a scale action must be \
+             observed at least once before the next one",
+            self.cooldown,
+            self.interval
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.hysteresis),
+            "autoscale.hysteresis must be in [0, 1)"
+        );
+        Ok(())
+    }
+}
+
+impl Default for AutoscaleCfg {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// What the control loop decided for this interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Grow(usize),
+    Shrink(usize),
+    Hold,
+}
+
+/// One interval's observation of the pool (or its sim mirror).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolSignals {
+    /// replicas currently routable (serving phase)
+    pub serving: usize,
+    /// pool-side queue depth: windowed p90 on the real pool,
+    /// instantaneous in the sim
+    pub queue_depth: f64,
+    /// requests in flight across serving replicas
+    pub outstanding: usize,
+    /// decode slots per replica (continuous-batching admission cap)
+    pub slots: usize,
+    /// cumulative `TokenLedger` wasted-token counter. The gate
+    /// differences consecutive readings: waste accruing within an
+    /// interval means decoded work is already being burned (failing
+    /// replicas, churning migrations) — shrinking then would pile a
+    /// drain onto a fleet mid-incident, so Shrink is suppressed for
+    /// that interval.
+    pub wasted_tokens: u64,
+}
+
+/// The pure decision function, shared verbatim by the real control loop
+/// and the `sim/fleet.rs` virtual-time mirror.
+///
+/// `desired = ceil(load / target_queue_depth)` where `load` is all work
+/// in the system (queued + in-flight requests), floored so in-flight
+/// work still fits the decode windows, clamped to the configured
+/// bounds. Hysteresis: act only when the observed per-replica load is
+/// outside `target * (1 -/+ hysteresis)`, so a fleet sitting near the
+/// target does not flap. A fleet below `min_replicas` (replicas died)
+/// always grows back regardless of load.
+pub fn decide(cfg: &AutoscaleCfg, s: &PoolSignals) -> ScaleDecision {
+    if s.serving < cfg.min_replicas {
+        return ScaleDecision::Grow(cfg.min_replicas - s.serving);
+    }
+    if s.serving > cfg.max_replicas {
+        return ScaleDecision::Shrink(s.serving - cfg.max_replicas);
+    }
+    let load = s.queue_depth.max(0.0) + s.outstanding as f64;
+    let per_replica = load / s.serving.max(1) as f64;
+    let desired = (load / cfg.target_queue_depth).ceil() as usize;
+    // never shrink below what the decode windows need for in-flight work
+    let floor = (s.outstanding as f64 / s.slots.max(1) as f64).ceil() as usize;
+    let desired = desired.max(floor).clamp(cfg.min_replicas, cfg.max_replicas);
+    if per_replica > cfg.target_queue_depth * (1.0 + cfg.hysteresis) && desired > s.serving {
+        ScaleDecision::Grow(desired - s.serving)
+    } else if per_replica < cfg.target_queue_depth * (1.0 - cfg.hysteresis) && desired < s.serving
+    {
+        ScaleDecision::Shrink(s.serving - desired)
+    } else {
+        ScaleDecision::Hold
+    }
+}
+
+/// Stateful wrapper around [`decide`]: interval sampling + post-action
+/// cooldown, in caller-supplied seconds so wall-clock (`tick`) and
+/// virtual-time (`decide_at` from the sim) callers share one clock
+/// policy.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    pub cfg: AutoscaleCfg,
+    origin: Instant,
+    last_tick: Option<f64>,
+    last_scale: Option<f64>,
+    /// ledger reading at the previous decision (waste-rate brake)
+    last_wasted: u64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleCfg) -> Self {
+        Autoscaler {
+            cfg,
+            origin: Instant::now(),
+            last_tick: None,
+            last_scale: None,
+            last_wasted: 0,
+        }
+    }
+
+    /// Gate + decide at `now` seconds (monotonic, caller's epoch).
+    /// Returns `Hold` without consulting [`decide`] when the interval
+    /// has not elapsed; suppresses Grow/Shrink during the cooldown
+    /// window — except the emergency grow-to-min path, which must not
+    /// wait out a cooldown while the fleet is below its floor.
+    pub fn decide_at(&mut self, now: f64, s: &PoolSignals) -> ScaleDecision {
+        if let Some(t) = self.last_tick {
+            if now - t < self.cfg.interval {
+                return ScaleDecision::Hold;
+            }
+        }
+        self.last_tick = Some(now);
+        let waste_delta = s.wasted_tokens.saturating_sub(self.last_wasted);
+        self.last_wasted = s.wasted_tokens;
+        let d = decide(&self.cfg, s);
+        if d == ScaleDecision::Hold {
+            return d;
+        }
+        // waste-rate brake: decoded tokens burned since the last look
+        // mean the fleet is already churning (failing replicas, racing
+        // migrations) — draining a replica on top of that would burn
+        // more. Growth is unaffected.
+        if matches!(d, ScaleDecision::Shrink(_)) && waste_delta > 0 {
+            return ScaleDecision::Hold;
+        }
+        let emergency = s.serving < self.cfg.min_replicas;
+        if !emergency {
+            if let Some(t) = self.last_scale {
+                if now - t < self.cfg.cooldown {
+                    return ScaleDecision::Hold;
+                }
+            }
+        }
+        self.last_scale = Some(now);
+        d
+    }
+
+    /// Wall-clock control step against the real pool: sample signals,
+    /// decide, apply. The AsyncController calls this between training
+    /// steps in async mode; it is cheap when the interval has not
+    /// elapsed. Returns what was decided (after gating).
+    pub fn tick(&mut self, pool: &LlmProxyPool) -> ScaleDecision {
+        let now = self.origin.elapsed().as_secs_f64();
+        // check the interval BEFORE sampling: autoscale_signals()
+        // resets the pool's queue-depth window, so an early tick must
+        // not read-and-discard the observations the next real decision
+        // needs (decide_at re-checks the same gate harmlessly)
+        if let Some(t) = self.last_tick {
+            if now - t < self.cfg.interval {
+                return ScaleDecision::Hold;
+            }
+        }
+        let signals = pool.autoscale_signals();
+        let d = self.decide_at(now, &signals);
+        match d {
+            ScaleDecision::Grow(n) => {
+                for _ in 0..n {
+                    if pool.serving_replicas() >= self.cfg.max_replicas
+                        || pool.add_replica().is_err()
+                    {
+                        break;
+                    }
+                }
+            }
+            ScaleDecision::Shrink(n) => {
+                for _ in 0..n {
+                    if pool.serving_replicas() <= self.cfg.min_replicas
+                        || !pool.retire_idlest()
+                    {
+                        break;
+                    }
+                }
+            }
+            ScaleDecision::Hold => {}
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleCfg {
+        AutoscaleCfg {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 8,
+            target_queue_depth: 4.0,
+            interval: 1.0,
+            cooldown: 3.0,
+            hysteresis: 0.25,
+        }
+    }
+
+    fn sig(serving: usize, queue: f64, outstanding: usize) -> PoolSignals {
+        PoolSignals { serving, queue_depth: queue, outstanding, slots: 8, wasted_tokens: 0 }
+    }
+
+    #[test]
+    fn validation_rejects_nonsense_bounds() {
+        assert!(cfg().validate().is_ok());
+        assert!(AutoscaleCfg::disabled().validate().is_ok(), "disabled cfg is always fine");
+        for mutate in [
+            (|c: &mut AutoscaleCfg| c.min_replicas = 0) as fn(&mut AutoscaleCfg),
+            |c| c.min_replicas = c.max_replicas + 1,
+            |c| c.interval = 0.0,
+            |c| c.interval = f64::NAN,
+            |c| c.cooldown = c.interval / 2.0,
+            |c| c.target_queue_depth = 0.0,
+            |c| c.hysteresis = 1.0,
+            |c| c.hysteresis = -0.1,
+        ] {
+            let mut c = cfg();
+            mutate(&mut c);
+            assert!(c.validate().is_err(), "{c:?} should be rejected");
+            // the same nonsense is fine while the scaler is off
+            c.enabled = false;
+            assert!(c.validate().is_ok(), "disabled cfg must not be validated: {c:?}");
+        }
+    }
+
+    #[test]
+    fn grows_under_queue_pressure() {
+        // load 24 over 2 replicas = 12/replica >> 4 * 1.25:
+        // desired = ceil(24/4) = 6 -> grow by 4
+        assert_eq!(decide(&cfg(), &sig(2, 16.0, 8)), ScaleDecision::Grow(4));
+    }
+
+    #[test]
+    fn shrinks_when_load_fits_fewer_replicas() {
+        // load 4 over 8 replicas = 0.5/replica << 4 * 0.75:
+        // desired = ceil(4/4) = 1 -> shrink by 7
+        assert_eq!(decide(&cfg(), &sig(8, 2.0, 2)), ScaleDecision::Shrink(7));
+        // idle fleet collapses to the floor
+        assert_eq!(decide(&cfg(), &sig(8, 0.0, 0)), ScaleDecision::Shrink(7));
+    }
+
+    #[test]
+    fn hysteresis_band_holds() {
+        // per-replica load inside [3, 5] with target 4: no action
+        assert_eq!(decide(&cfg(), &sig(4, 8.0, 8)), ScaleDecision::Hold); // 4/replica
+        assert_eq!(decide(&cfg(), &sig(4, 11.0, 8)), ScaleDecision::Hold); // 4.75
+        assert_eq!(decide(&cfg(), &sig(4, 5.0, 8)), ScaleDecision::Hold); // 3.25
+    }
+
+    #[test]
+    fn clamps_to_bounds() {
+        // colossal load cannot exceed max_replicas
+        assert_eq!(decide(&cfg(), &sig(8, 1000.0, 64)), ScaleDecision::Hold);
+        assert_eq!(decide(&cfg(), &sig(6, 1000.0, 64)), ScaleDecision::Grow(2));
+        // zero load cannot go below min_replicas
+        assert_eq!(decide(&cfg(), &sig(1, 0.0, 0)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn below_min_is_an_emergency_grow() {
+        // the fleet lost replicas (kill_replica): restore the floor
+        // regardless of load
+        let mut c = cfg();
+        c.min_replicas = 3;
+        assert_eq!(decide(&c, &sig(1, 0.0, 0)), ScaleDecision::Grow(2));
+        // and the gate does not make it wait out a cooldown
+        let mut a = Autoscaler::new(c);
+        assert_eq!(a.decide_at(0.0, &sig(3, 100.0, 0)), ScaleDecision::Grow(5));
+        assert_eq!(a.decide_at(1.0, &sig(1, 0.0, 0)), ScaleDecision::Grow(2));
+    }
+
+    #[test]
+    fn in_flight_floor_respects_decode_windows() {
+        // queue empty but 60 in flight on 8-slot replicas: shrinking to
+        // ceil(60/4)=15 would be clamped by max, but the floor
+        // ceil(60/8)=8 keeps the windows feasible anyway
+        let c = cfg();
+        let s = PoolSignals {
+            serving: 8,
+            queue_depth: 0.0,
+            outstanding: 60,
+            slots: 8,
+            wasted_tokens: 0,
+        };
+        assert_eq!(decide(&c, &s), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn waste_rate_brake_defers_shrink_but_not_growth() {
+        let mut a = Autoscaler::new(cfg());
+        // t=0: idle fleet, but 100 tokens were burned since the scaler
+        // last looked (first look: delta from 0) -> shrink suppressed
+        let wasteful = PoolSignals { wasted_tokens: 100, ..sig(8, 0.0, 0) };
+        assert_eq!(a.decide_at(0.0, &wasteful), ScaleDecision::Hold);
+        // t=1.2: waste stopped accruing (same cumulative reading) ->
+        // the shrink goes through
+        assert_eq!(a.decide_at(1.2, &wasteful), ScaleDecision::Shrink(7));
+        // growth is never braked by waste
+        let mut b = Autoscaler::new(cfg());
+        let loaded = PoolSignals { wasted_tokens: 100, ..sig(2, 16.0, 8) };
+        assert_eq!(b.decide_at(0.0, &loaded), ScaleDecision::Grow(4));
+    }
+
+    #[test]
+    fn gate_enforces_interval_and_cooldown() {
+        let mut a = Autoscaler::new(cfg());
+        // t=0: first sample, heavy load -> grow
+        assert_eq!(a.decide_at(0.0, &sig(2, 16.0, 8)), ScaleDecision::Grow(4));
+        // t=0.5: inside the interval -> hold without deciding
+        assert_eq!(a.decide_at(0.5, &sig(2, 16.0, 8)), ScaleDecision::Hold);
+        // t=1.5: interval elapsed but cooldown (3s) active -> hold
+        assert_eq!(a.decide_at(1.5, &sig(2, 16.0, 8)), ScaleDecision::Hold);
+        // t=3.2: cooldown over -> acts again
+        assert_eq!(a.decide_at(3.2, &sig(2, 16.0, 8)), ScaleDecision::Grow(4));
+        // a Hold decision does not re-arm the cooldown
+        assert_eq!(a.decide_at(4.4, &sig(6, 24.0, 0)), ScaleDecision::Hold);
+        assert_eq!(a.decide_at(6.3, &sig(6, 0.0, 0)), ScaleDecision::Shrink(5));
+    }
+}

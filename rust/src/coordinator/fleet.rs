@@ -1,6 +1,6 @@
 //! Inference fleet (the paper's LLMProxy generalized to a *pool* of
 //! replicas): N `LlmProxy` engines behind one resumable-task
-//! interface.
+//! interface, with an **elastic replica lifecycle**.
 //!
 //! The single-proxy coordinator cannot reproduce the Figure 1b scaling
 //! story — rollout throughput is capped by one decode loop. The pool
@@ -15,38 +15,51 @@
 //!   2. *Staggered (rolling) weight sync*: `update_weights` walks the
 //!      replicas one at a time, waiting for each to acknowledge the
 //!      swap before moving on, so at most one replica is paused while
-//!      the other N-1 keep decoding. Per-replica policy versions flow
-//!      into `GenResult::version`; the SampleBuffer's admission-ticket
-//!      freshness bound (gap <= alpha) is unaffected because tickets
-//!      are issued against the buffer's version, not a replica's.
-//!      While the pool is suspended (synchronous mode) the swap is
-//!      instead broadcast inline so it stays ordered before the
-//!      controller's `resume` on every replica's command channel —
-//!      sync mode remains strictly on-policy.
+//!      the other N-1 keep decoding. While the pool is suspended
+//!      (synchronous mode) the swap is instead broadcast inline so it
+//!      stays ordered before the controller's `resume` on every
+//!      replica's command channel — sync mode remains strictly
+//!      on-policy.
 //!   3. *Prefix-salvaging migration* (`partial_migration`, the
-//!      fail-slow story of Section 5.2.2): when a caller times out
-//!      waiting on a generation (`hang_timeout`), [`LlmProxyPool::
-//!      migrate`] RECLAIMs the request from its current replica —
-//!      receiving the tokens decoded so far — and resubmits it
-//!      elsewhere as a resumed task, keeping the original reply
-//!      channel. The moved generation re-prefills `prompt ++ prefix`
-//!      and continues where it stopped instead of re-decoding from
-//!      scratch. Salvages shorter than `min_salvage_tokens` (or any
-//!      salvage when the knob is off — the from-scratch arm) are
-//!      discarded and counted as `wasted_tokens`; reused prefixes
-//!      count as `salvaged_tokens`. Both live in the pool-shared
-//!      [`TokenLedger`], live-readable via `token_stats`.
+//!      fail-slow story of Section 5.2.2): a hung generation is
+//!      RECLAIMed from its replica — receiving the tokens decoded so
+//!      far — and resubmitted elsewhere as a resumed task on the same
+//!      reply channel. Salvages shorter than `min_salvage_tokens` (or
+//!      any salvage when the knob is off) are discarded and counted as
+//!      `wasted_tokens`; reused prefixes count as `salvaged_tokens` in
+//!      the pool-shared [`TokenLedger`].
+//!   4. *Elastic lifecycle* (`spawn → serving → draining → retired`,
+//!      driven by `coordinator/autoscaler.rs`): [`add_replica`]
+//!      spawns a fresh proxy loop at the pool's current weight
+//!      version, registers its collector and histograms, and opens it
+//!      to routing — reusing a retired slot when one exists;
+//!      [`retire_replica`] marks the slot *draining* (the `Router`
+//!      stops selecting it immediately), RECLAIM-salvages its
+//!      in-flight generations, joins the loop gracefully, re-dispatches
+//!      the salvaged work to survivors as resumed tasks, and archives
+//!      the occupant's [`ReplicaReport`]. Slot state is
+//!      generation-counted: a reused slot bumps its generation, resets
+//!      its histograms/routed counts, and clears the router's EWMA
+//!      estimate (`Router::reset_replica`), so a fresh occupant never
+//!      inherits its predecessor's statistics.
+//!
+//! [`add_replica`]: LlmProxyPool::add_replica
+//! [`retire_replica`]: LlmProxyPool::retire_replica
 //!
 //! Fail-*stop* replicas are handled on two paths: `kill_replica`
 //! drains salvage from the doomed loop and immediately re-dispatches
 //! its in-flight work to survivors (resumed when salvage succeeded),
 //! and a replica whose event loop is simply gone is detected at submit
 //! time — the request fails over to a surviving replica with its
-//! salvaged prefix intact, and when none survive it is dropped so the
-//! caller observes disconnection instead of hanging forever.
+//! salvaged prefix intact, and when no serving replica remains it is
+//! dropped so the caller observes disconnection instead of hanging
+//! forever.
 //!
 //! Per-replica queue-depth and utilization are recorded into
-//! [`metrics::Histogram`]s and returned in the [`PoolReport`].
+//! [`metrics::Histogram`]s and returned in the [`PoolReport`]; the
+//! pool-queue depth is additionally recorded into a *windowed*
+//! histogram (`Histogram::reset`) that the autoscaler reads once per
+//! interval.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -58,6 +71,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::autoscaler::PoolSignals;
 use crate::coordinator::llm_proxy::{
     GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
     TokenStats,
@@ -76,6 +90,13 @@ use crate::metrics::{Histogram, Table};
 /// wait, not a long freeze. A fully asynchronous reclaim is a ROADMAP
 /// follow-on.
 const SALVAGE_WAIT: Duration = Duration::from_millis(50);
+
+/// Spawns a replica for `(slot, generation)` — the hook that makes
+/// `add_replica` possible after the pool's construction arguments are
+/// gone. `LlmProxyPool::spawn` installs one that builds a real proxy
+/// loop at the pool's latest weight snapshot; tests install stub
+/// spawners.
+type ReplicaSpawner = Box<dyn Fn(usize, u64) -> LlmProxy + Send + Sync>;
 
 /// Fleet shape and behavior knobs (`num_replicas`, `route_policy`,
 /// `rolling_update`, `partial_migration`, `min_salvage_tokens` in
@@ -112,6 +133,19 @@ impl PoolCfg {
     }
 }
 
+/// Where a replica slot is in its lifecycle. Only `Serving` slots are
+/// routable; `Draining` is the transient phase inside `retire_replica`
+/// (in-flight work being salvaged out); `Dead` slots crashed and keep
+/// their weight-version lag visible; `Retired` slots drained cleanly
+/// and are reusable by `add_replica`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Serving,
+    Draining,
+    Dead,
+    Retired,
+}
+
 /// A request held pool-side (queue scheduling backpressure, or every
 /// replica suspended). The task keeps its salvaged prefix while it
 /// waits.
@@ -132,8 +166,23 @@ struct InFlight {
     dispatched: Instant,
 }
 
+fn depth_hist() -> Histogram {
+    Histogram::new(1.0, 1.25)
+}
+
+fn util_hist() -> Histogram {
+    Histogram::new(0.01, 1.25)
+}
+
 struct PoolState {
     router: Router,
+    /// per-slot command handles (index = slot; grows with the fleet)
+    clients: Vec<ProxyClient>,
+    /// per-slot lifecycle phase
+    phase: Vec<Phase>,
+    /// per-slot occupant generation: bumped every time a retired slot
+    /// is reused, so statistics never leak across occupants
+    generation: Vec<u64>,
     /// pool-side FIFO of requests awaiting a routable replica
     queue: VecDeque<Pending>,
     /// pool request id -> live request
@@ -146,11 +195,8 @@ struct PoolState {
     pool_suspended: bool,
     /// replica currently applying a rolling weight swap, if any
     syncing: Option<usize>,
-    /// replicas whose event loop exited (submit failed); never routed
-    /// to again
-    dead: Vec<bool>,
     /// last weight version each replica acknowledged — rolling-sync
-    /// skew is max - min of this vector
+    /// skew is max - min of this vector (retired slots excluded)
     replica_version: Vec<u64>,
     routed: Vec<u64>,
     migrated: u64,
@@ -158,17 +204,29 @@ struct PoolState {
     resumed: u64,
     /// rolling-broadcast waves completed by the sync agent
     sync_waves: u64,
+    /// replicas added after construction (autoscaler grow actions)
+    grown: u64,
     /// decode slots per replica (routing admission cap)
     slots: usize,
     /// per-replica outstanding at dispatch time
     depth: Vec<Histogram>,
     /// per-replica occupancy fraction (outstanding/slots) at dispatch
     util: Vec<Histogram>,
-    /// pool-queue length at submit (queue-scheduling backpressure)
+    /// pool-queue length at submit (lifetime, for the PoolReport)
     queue_depth: Histogram,
+    /// pool-queue length at submit since the autoscaler's last read
+    /// (reset every interval — the per-interval percentile feed)
+    queue_window: Histogram,
     /// master clones of the per-replica collector channels; taken at
-    /// shutdown so the collectors can observe disconnection
+    /// shutdown/retirement so the collectors can observe disconnection
     completion_tx: Vec<Option<Sender<GenResult>>>,
+    /// when the slot's current occupant started serving
+    serve_start: Vec<Option<Instant>>,
+    /// serving seconds already banked for the current occupant (killed
+    /// replicas stop accruing at the kill)
+    served: Vec<f64>,
+    /// archived reports of occupants drained out by `retire_replica`
+    retired: Vec<ReplicaReport>,
 }
 
 impl PoolState {
@@ -177,19 +235,35 @@ impl PoolState {
             .map(|r| ReplicaLoad {
                 outstanding: self.outstanding[r],
                 slots: self.slots,
-                suspended: self.pool_suspended || self.dead[r] || self.syncing == Some(r),
+                suspended: self.pool_suspended
+                    || self.phase[r] != Phase::Serving
+                    || self.syncing == Some(r),
             })
             .collect()
     }
 
-    fn all_dead(&self) -> bool {
-        self.dead.iter().all(|&d| d)
+    /// No slot can ever serve a request again (every occupant dead or
+    /// retired): queued work is dropped so callers observe
+    /// disconnection instead of waiting forever.
+    fn none_serviceable(&self) -> bool {
+        !self.phase.iter().any(|&p| p == Phase::Serving)
+    }
+
+    fn serving(&self) -> usize {
+        self.phase.iter().filter(|&&p| p == Phase::Serving).count()
+    }
+
+    /// Bank the current occupant's serving time (kill/retire/shutdown).
+    fn close_serve_clock(&mut self, r: usize) -> f64 {
+        if let Some(t) = self.serve_start[r].take() {
+            self.served[r] += t.elapsed().as_secs_f64();
+        }
+        self.served[r]
     }
 }
 
 /// State shared between callers, collectors, and the sync agent.
 struct Shared {
-    clients: Vec<ProxyClient>,
     state: Mutex<PoolState>,
     /// live wasted/salvaged token counters, shared with every replica
     ledger: Arc<TokenLedger>,
@@ -202,16 +276,38 @@ impl Shared {
     /// A submit failure means the replica's event loop is gone — the
     /// replica is marked dead and the request fails over *with its
     /// salvaged prefix intact*: re-routed if a replica is available
-    /// now, re-queued while any survive, and dropped (disconnecting
-    /// the caller's reply channel) once the whole fleet is dead.
+    /// now, re-queued while any serve, and dropped (disconnecting the
+    /// caller's reply channel) once no serving replica remains.
     fn dispatch(&self, st: &mut PoolState, r: usize, req: Pending, migrations: u32) {
         let mut r = r;
         loop {
-            // a missing collector channel means the pool is tearing
-            // down (migrate/kill re-dispatch racing shutdown): drop the
-            // request — counting its carried prefix — so the caller
-            // observes disconnection
             let Some(tx) = st.completion_tx[r].as_ref().cloned() else {
+                // no collector channel. A *retired* slot means the
+                // target was drained between selection and dispatch
+                // (migrate picks its target before the unlocked reclaim
+                // wait) — fail over exactly like a dead replica; the
+                // retired slot is suspended in `loads`, so the router
+                // cannot hand it back. A non-retired slot with no
+                // channel means the pool is tearing down: drop the
+                // request — counting its carried prefix — so the
+                // caller observes disconnection
+                if st.phase[r] == Phase::Retired {
+                    let loads = st.loads();
+                    match st.router.route_excluding(&loads, Some(r)) {
+                        Some(next) => {
+                            r = next;
+                            continue;
+                        }
+                        None if st.none_serviceable() => {
+                            self.ledger.add_wasted(req.task.prefix.len() as u64);
+                            return;
+                        }
+                        None => {
+                            st.queue.push_back(req);
+                            return;
+                        }
+                    }
+                }
                 self.ledger.add_wasted(req.task.prefix.len() as u64);
                 return;
             };
@@ -224,7 +320,7 @@ impl Shared {
                 greedy: req.task.greedy,
                 reply: tx,
             };
-            match self.clients[r].try_submit(replica_task) {
+            match st.clients[r].try_submit(replica_task) {
                 Some(inner_id) => {
                     st.depth[r].record(st.outstanding[r] as f64);
                     st.by_inner[r].insert(inner_id, req.pool_id);
@@ -247,11 +343,12 @@ impl Shared {
                     return;
                 }
                 None => {
-                    st.dead[r] = true;
+                    st.phase[r] = Phase::Dead;
+                    st.close_serve_clock(r);
                     let loads = st.loads();
                     match st.router.route_excluding(&loads, Some(r)) {
                         Some(next) => r = next,
-                        None if st.all_dead() => {
+                        None if st.none_serviceable() => {
                             // drop: caller disconnects; the salvaged
                             // prefix dies with the fleet
                             self.ledger.add_wasted(req.task.prefix.len() as u64);
@@ -269,7 +366,7 @@ impl Shared {
 
     /// Move pool-queued requests onto replicas while the router allows.
     fn drain(&self, st: &mut PoolState) {
-        if st.all_dead() {
+        if st.none_serviceable() {
             // drop: callers observe disconnection; carried prefixes are
             // decoded work that now dies uncollected — count it
             for p in st.queue.drain(..) {
@@ -364,35 +461,56 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
     }
 }
 
+fn spawn_collector(shared: &Arc<Shared>, r: usize, rx: Receiver<GenResult>) -> JoinHandle<()> {
+    let sh = shared.clone();
+    std::thread::Builder::new()
+        .name(format!("fleet-collect-{r}"))
+        .spawn(move || collector_loop(sh, r, rx))
+        .expect("spawn fleet collector")
+}
+
 /// Rolling weight-sync agent: serializes broadcast waves so that even
 /// with back-to-back training steps at most one replica is suspended at
 /// any moment. Each replica swap is acknowledged before the next
 /// begins; a dead replica's ack channel disconnects, which counts as
-/// done (fail-stop replicas must not wedge training).
+/// done (fail-stop replicas must not wedge training). Non-serving
+/// slots are skipped — a replica added mid-wave was already pinned to
+/// the latest weights at install time.
 fn sync_agent(shared: Arc<Shared>, rx: Receiver<(Vec<f32>, u64)>) {
     while let Ok((weights, version)) = rx.recv() {
-        for r in 0..shared.clients.len() {
-            {
+        let mut r = 0usize;
+        loop {
+            let client = {
                 let mut st = shared.state.lock().unwrap();
+                if r >= st.clients.len() {
+                    break;
+                }
+                if st.phase[r] != Phase::Serving {
+                    r += 1;
+                    continue;
+                }
                 st.syncing = Some(r);
-            }
-            let ack = shared.clients[r].update_weights_synced(weights.clone(), version);
+                st.clients[r].clone()
+            };
+            let ack = client.update_weights_synced(weights.clone(), version);
             // a dead replica's ack channel disconnects: the wave moves
             // on, but the replica is NOT stamped — version_skew keeps
             // reporting how far behind it really is
             let applied = ack.recv().is_ok();
             let mut st = shared.state.lock().unwrap();
             st.syncing = None;
-            if applied {
+            if applied && st.phase[r] != Phase::Retired {
                 st.replica_version[r] = version;
             }
             shared.drain(&mut st);
+            drop(st);
+            r += 1;
         }
         shared.state.lock().unwrap().sync_waves += 1;
     }
 }
 
-/// Final statistics for one replica.
+/// Final statistics for one replica-slot occupant.
 #[derive(Clone, Debug, Default)]
 pub struct ReplicaReport {
     pub proxy: ProxyReport,
@@ -404,16 +522,29 @@ pub struct ReplicaReport {
     pub queue_depth: Histogram,
     /// occupancy-fraction-at-dispatch histogram
     pub util_hist: Histogram,
+    /// the slot this occupant lived in
+    pub slot: usize,
+    /// occupant generation within the slot (0 = original occupant)
+    pub generation: u64,
+    /// wall seconds this occupant spent in the serving phase — the
+    /// replica-seconds currency the autoscaler economizes
+    pub serve_secs: f64,
 }
 
-/// Final fleet statistics (per replica + pool-level).
+/// Final fleet statistics (per live replica + retired occupants +
+/// pool-level).
 #[derive(Clone, Debug, Default)]
 pub struct PoolReport {
+    /// slots still occupied at shutdown (serving, draining, or dead)
     pub replicas: Vec<ReplicaReport>,
+    /// occupants drained out by `retire_replica`, in retirement order
+    pub retired: Vec<ReplicaReport>,
     pub migrated: u64,
     /// migrations/resubmissions dispatched with a salvaged prefix
     pub resumed: u64,
     pub sync_waves: u64,
+    /// replicas added after construction (autoscaler grow actions)
+    pub grown: u64,
     /// pool-queue depth at submit time
     pub pool_queue_depth: Histogram,
     /// fleet-wide decoded-token outcomes (salvaged vs wasted)
@@ -421,11 +552,16 @@ pub struct PoolReport {
 }
 
 impl PoolReport {
-    /// Sum of the per-replica loop reports (single-proxy-compatible
-    /// aggregate view).
+    /// Every occupant the pool ever had: live slots then retired ones.
+    pub fn all_occupants(&self) -> impl Iterator<Item = &ReplicaReport> {
+        self.replicas.iter().chain(self.retired.iter())
+    }
+
+    /// Sum of the per-occupant loop reports (single-proxy-compatible
+    /// aggregate view), including retired occupants.
     pub fn aggregate(&self) -> ProxyReport {
         let mut agg = ProxyReport::default();
-        for r in &self.replicas {
+        for r in self.all_occupants() {
             agg.decode_steps += r.proxy.decode_steps;
             agg.tokens_generated += r.proxy.tokens_generated;
             agg.completed += r.proxy.completed;
@@ -437,16 +573,34 @@ impl PoolReport {
         agg
     }
 
-    /// Markdown table of per-replica utilization and queue depth — the
-    /// fleet section of bench/example reports.
+    /// Total replica-seconds served across every occupant — what an
+    /// elastic fleet holds strictly below a static peak-provisioned one
+    /// (see `benches/fig_autoscale.rs`).
+    pub fn replica_seconds(&self) -> f64 {
+        self.all_occupants().map(|r| r.serve_secs).sum()
+    }
+
+    /// Fleet-wide dispatch-depth histogram, merged across every
+    /// occupant (live and retired slots share one bucket layout).
+    pub fn merged_queue_depth(&self) -> Histogram {
+        let mut h = depth_hist();
+        for r in self.all_occupants() {
+            h.merge(&r.queue_depth);
+        }
+        h
+    }
+
+    /// Markdown table of per-occupant utilization and queue depth — the
+    /// fleet section of bench/example reports. Retired occupants are
+    /// listed after the live slots as `slot~generation (retired)`.
     pub fn format_table(&self) -> String {
         let mut t = Table::new(&[
             "replica", "routed", "completed", "aborted", "tokens", "wasted", "util", "depth mean",
             "depth p99",
         ]);
-        for (i, r) in self.replicas.iter().enumerate() {
+        let mut row = |label: String, r: &ReplicaReport| {
             t.row(&[
-                i.to_string(),
+                label,
                 r.routed.to_string(),
                 r.proxy.completed.to_string(),
                 r.proxy.aborted.to_string(),
@@ -456,6 +610,12 @@ impl PoolReport {
                 format!("{:.1}", r.queue_depth.mean()),
                 format!("{:.1}", r.queue_depth.percentile(99.0)),
             ]);
+        };
+        for r in &self.replicas {
+            row(r.slot.to_string(), r);
+        }
+        for r in &self.retired {
+            row(format!("{}~{} (retired)", r.slot, r.generation), r);
         }
         t.to_markdown()
     }
@@ -464,15 +624,27 @@ impl PoolReport {
 /// Client handle to a fleet of `LlmProxy` replicas. Mirrors the
 /// single-proxy surface (`generate`/`try_submit`/`abort`/
 /// `update_weights`/`suspend`/`resume`/`shutdown`) so the RolloutEngine
-/// and the AsyncController are replica-count-agnostic.
+/// and the AsyncController are replica-count-agnostic, and adds the
+/// elastic lifecycle (`add_replica`/`retire_replica`) the autoscaler
+/// drives.
 pub struct LlmProxyPool {
     shared: Arc<Shared>,
-    replicas: Vec<LlmProxy>,
-    collectors: Vec<JoinHandle<()>>,
+    /// per-slot proxy handles; `None` = retired slot (loop joined)
+    replicas: Mutex<Vec<Option<LlmProxy>>>,
+    collectors: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// serializes add/retire so concurrent scale actions cannot race a
+    /// slot; never held while the state lock is held
+    lifecycle: Mutex<()>,
     sync_tx: Option<Sender<(Vec<f32>, u64)>>,
     sync_join: Option<JoinHandle<()>>,
     next_pool_id: AtomicU64,
     slots: usize,
+    /// builds new replicas for `add_replica`; absent on pools
+    /// assembled from pre-spawned replicas without a factory
+    spawner: Option<ReplicaSpawner>,
+    /// latest broadcast weights + version — what a freshly added
+    /// replica is pinned to
+    latest: Arc<Mutex<(Vec<f32>, u64)>>,
 }
 
 impl LlmProxyPool {
@@ -480,7 +652,9 @@ impl LlmProxyPool {
     /// collector per replica (and, when rolling updates are on, the
     /// weight-sync agent). Each replica gets a decorrelated sampling
     /// seed; replica 0 matches the single-proxy stream exactly. All
-    /// replicas share one [`TokenLedger`].
+    /// replicas share one [`TokenLedger`]. The pool retains a spawner
+    /// so `add_replica` can grow the fleet later at the then-current
+    /// weight version.
     pub fn spawn(
         cfg: &PoolCfg,
         artifacts_dir: PathBuf,
@@ -491,7 +665,8 @@ impl LlmProxyPool {
         anyhow::ensure!(cfg.num_replicas > 0, "num_replicas must be > 0");
         anyhow::ensure!(cfg.replica_slots > 0, "replica_slots must be > 0");
         let ledger = Arc::new(TokenLedger::default());
-        let replicas = (0..cfg.num_replicas)
+        let latest = Arc::new(Mutex::new((init_weights.clone(), 0u64)));
+        let replicas: Vec<LlmProxy> = (0..cfg.num_replicas)
             .map(|r| {
                 let rseed = seed ^ (r as u64).wrapping_mul(0x9e3779b97f4a7c15);
                 LlmProxy::spawn_with_ledger(
@@ -503,12 +678,39 @@ impl LlmProxyPool {
                 )
             })
             .collect();
-        Ok(Self::assemble(cfg, replicas, ledger))
+        let spawn_ledger = ledger.clone();
+        let spawn_latest = latest.clone();
+        let spawner: ReplicaSpawner = Box::new(move |slot, generation| {
+            let weights = spawn_latest.lock().unwrap().0.clone();
+            let rseed = seed
+                ^ (slot as u64).wrapping_mul(0x9e3779b97f4a7c15)
+                ^ generation.wrapping_mul(0xd1b54a32d192ed03);
+            LlmProxy::spawn_with_ledger(
+                artifacts_dir.clone(),
+                weights,
+                eos,
+                rseed,
+                spawn_ledger.clone(),
+            )
+        });
+        Ok(Self::assemble_with(cfg, replicas, ledger, Some(spawner), latest))
     }
 
     /// Wire collectors, shared state, and the sync agent around an
-    /// already-spawned replica set.
+    /// already-spawned replica set (tests; no spawner, so the pool
+    /// cannot grow).
+    #[cfg(test)]
     fn assemble(cfg: &PoolCfg, replicas: Vec<LlmProxy>, ledger: Arc<TokenLedger>) -> Self {
+        Self::assemble_with(cfg, replicas, ledger, None, Arc::new(Mutex::new((vec![], 0))))
+    }
+
+    fn assemble_with(
+        cfg: &PoolCfg,
+        replicas: Vec<LlmProxy>,
+        ledger: Arc<TokenLedger>,
+        spawner: Option<ReplicaSpawner>,
+        latest: Arc<Mutex<(Vec<f32>, u64)>>,
+    ) -> Self {
         let n = replicas.len();
         let clients: Vec<ProxyClient> = replicas.iter().map(|p| p.client()).collect();
         let mut completion_tx = Vec::with_capacity(n);
@@ -520,26 +722,32 @@ impl LlmProxyPool {
         }
         let state = PoolState {
             router: Router::new(cfg.route_policy),
+            clients,
+            phase: vec![Phase::Serving; n],
+            generation: vec![0; n],
             queue: VecDeque::new(),
             inflight: HashMap::new(),
             by_inner: vec![HashMap::new(); n],
             outstanding: vec![0; n],
             pool_suspended: false,
             syncing: None,
-            dead: vec![false; n],
             replica_version: vec![0; n],
             routed: vec![0; n],
             migrated: 0,
             resumed: 0,
             sync_waves: 0,
+            grown: 0,
             slots: cfg.replica_slots,
-            depth: vec![Histogram::new(1.0, 1.25); n],
-            util: vec![Histogram::new(0.01, 1.25); n],
-            queue_depth: Histogram::new(1.0, 1.25),
+            depth: (0..n).map(|_| depth_hist()).collect(),
+            util: (0..n).map(|_| util_hist()).collect(),
+            queue_depth: depth_hist(),
+            queue_window: depth_hist(),
             completion_tx,
+            serve_start: (0..n).map(|_| Some(Instant::now())).collect(),
+            served: vec![0.0; n],
+            retired: Vec::new(),
         };
         let shared = Arc::new(Shared {
-            clients,
             state: Mutex::new(state),
             ledger,
             partial_migration: cfg.partial_migration,
@@ -547,13 +755,7 @@ impl LlmProxyPool {
         });
         let mut collectors = Vec::with_capacity(n);
         for (r, rx) in completion_rx.into_iter().enumerate() {
-            let sh = shared.clone();
-            collectors.push(
-                std::thread::Builder::new()
-                    .name(format!("fleet-collect-{r}"))
-                    .spawn(move || collector_loop(sh, r, rx))
-                    .expect("spawn fleet collector"),
-            );
+            collectors.push(Some(spawn_collector(&shared, r, rx)));
         }
         let (sync_tx, sync_join) = if cfg.rolling_update && n > 1 {
             let (tx, rx) = channel();
@@ -568,23 +770,253 @@ impl LlmProxyPool {
         };
         LlmProxyPool {
             shared,
-            replicas,
-            collectors,
+            replicas: Mutex::new(replicas.into_iter().map(Some).collect()),
+            collectors: Mutex::new(collectors),
+            lifecycle: Mutex::new(()),
             sync_tx,
             sync_join,
             next_pool_id: AtomicU64::new(1),
             slots: cfg.replica_slots,
+            spawner,
+            latest,
         }
     }
 
+    /// Total replica slots ever opened (serving + draining + dead +
+    /// retired).
     pub fn num_replicas(&self) -> usize {
-        self.shared.clients.len()
+        self.shared.state.lock().unwrap().clients.len()
+    }
+
+    /// Replicas currently routable.
+    pub fn serving_replicas(&self) -> usize {
+        self.shared.state.lock().unwrap().serving()
+    }
+
+    /// GROW: spawn a fresh replica at the pool's latest weight version,
+    /// register its collector + histograms, and open it to routing —
+    /// reusing a retired slot (generation bumped, stats reset, router
+    /// EWMA cleared) when one exists, appending a new slot otherwise.
+    /// Returns the slot index. Fails on pools assembled without a
+    /// spawner.
+    pub fn add_replica(&self) -> Result<usize> {
+        let spawner = self
+            .spawner
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("pool has no replica spawner: cannot grow"))?;
+        let _guard = self.lifecycle.lock().unwrap();
+        let (slot, generation, fresh) = {
+            let st = self.shared.state.lock().unwrap();
+            match st.phase.iter().position(|&p| p == Phase::Retired) {
+                Some(s) => (s, st.generation[s] + 1, false),
+                None => (st.clients.len(), 0, true),
+            }
+        };
+        // spawning loads a runtime — keep it off the state lock so
+        // collectors and callers flow while the replica boots
+        let replica = spawner(slot, generation);
+        let client = replica.client();
+        // pin the newcomer to the latest broadcast weights: the spawner
+        // snapshot may have raced a concurrent update_weights
+        let (weights, version) = {
+            let l = self.latest.lock().unwrap();
+            (l.0.clone(), l.1)
+        };
+        client.update_weights(weights, version);
+        let (tx, rx) = channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if fresh {
+                st.clients.push(client);
+                st.phase.push(Phase::Serving);
+                st.generation.push(0);
+                st.by_inner.push(HashMap::new());
+                st.outstanding.push(0);
+                st.replica_version.push(version);
+                st.routed.push(0);
+                st.depth.push(depth_hist());
+                st.util.push(util_hist());
+                st.completion_tx.push(Some(tx));
+                st.serve_start.push(Some(Instant::now()));
+                st.served.push(0.0);
+            } else {
+                st.clients[slot] = client;
+                st.phase[slot] = Phase::Serving;
+                st.generation[slot] = generation;
+                st.by_inner[slot].clear();
+                st.outstanding[slot] = 0;
+                st.replica_version[slot] = version;
+                st.routed[slot] = 0;
+                st.depth[slot] = depth_hist();
+                st.util[slot] = util_hist();
+                st.completion_tx[slot] = Some(tx);
+                st.serve_start[slot] = Some(Instant::now());
+                st.served[slot] = 0.0;
+                // the new occupant must be probed fresh, not inherit
+                // the previous occupant's EWMA token rate
+                st.router.reset_replica(slot);
+            }
+            st.grown += 1;
+            if st.pool_suspended {
+                st.clients[slot].suspend();
+            }
+            // backlog flows onto the new replica immediately
+            self.shared.drain(&mut st);
+        }
+        {
+            let mut reps = self.replicas.lock().unwrap();
+            if fresh {
+                reps.push(Some(replica));
+            } else {
+                reps[slot] = Some(replica);
+            }
+        }
+        let handle = spawn_collector(&self.shared, slot, rx);
+        {
+            let mut cols = self.collectors.lock().unwrap();
+            if fresh {
+                cols.push(Some(handle));
+            } else {
+                cols[slot] = Some(handle);
+            }
+        }
+        Ok(slot)
+    }
+
+    /// SHRINK: drain replica `r` out of the fleet. The slot flips to
+    /// *draining* (the router stops selecting it instantly), its
+    /// in-flight generations are RECLAIM-salvaged, the loop is joined
+    /// gracefully (its report archived), and the salvaged work is
+    /// re-dispatched to survivors as resumed tasks on their original
+    /// reply channels — scale-down burns no decoded tokens. Returns
+    /// false when `r` is not serving or is the last serving replica
+    /// (the fleet never drains itself to zero).
+    pub fn retire_replica(&self, r: usize) -> bool {
+        let _guard = self.lifecycle.lock().unwrap();
+        let (client, victims) = {
+            let mut st = self.shared.state.lock().unwrap();
+            if r >= st.phase.len() || st.phase[r] != Phase::Serving {
+                return false;
+            }
+            if st.serving() < 2 {
+                return false; // never drain the last serving replica
+            }
+            st.phase[r] = Phase::Draining;
+            let ids: Vec<u64> = st
+                .inflight
+                .iter()
+                .filter(|(_, e)| e.replica == r)
+                .map(|(&pid, _)| pid)
+                .collect();
+            let victims: Vec<(u64, InFlight)> = ids
+                .into_iter()
+                .map(|pid| {
+                    let e = st.inflight.remove(&pid).unwrap();
+                    st.by_inner[r].remove(&e.inner_id);
+                    st.outstanding[r] = st.outstanding[r].saturating_sub(1);
+                    (pid, e)
+                })
+                .collect();
+            (st.clients[r].clone(), victims)
+        };
+        // enqueue every reclaim BEFORE the shutdown so the loop answers
+        // them (commands are FIFO), absorb the salvage, then join the
+        // loop gracefully and keep its report
+        let reclaims: Vec<(u64, InFlight, Receiver<Salvage>)> = victims
+            .into_iter()
+            .map(|(pid, e)| {
+                let rx = client.reclaim(e.inner_id);
+                (pid, e, rx)
+            })
+            .collect();
+        let mut salvaged = Vec::with_capacity(reclaims.len());
+        for (pid, mut e, rx) in reclaims {
+            let salvage = rx.recv_timeout(SALVAGE_WAIT);
+            self.shared.absorb_salvage(&mut e.task, salvage);
+            salvaged.push((pid, e));
+        }
+        let proxy = self.replicas.lock().unwrap()[r].take();
+        let proxy_report = match proxy {
+            Some(p) => p.shutdown().unwrap_or_default(),
+            None => ProxyReport::default(),
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // release the collector channel: with the loop joined (its
+            // in-flight reply clones dropped) the collector now exits
+            st.completion_tx[r].take();
+            for (pid, e) in salvaged {
+                let migrations = e.migrations + 1;
+                let req = Pending { pool_id: pid, task: e.task };
+                let loads = st.loads();
+                match st.router.route_excluding(&loads, Some(r)) {
+                    Some(nr) => {
+                        self.shared.dispatch(&mut st, nr, req, migrations);
+                        st.migrated += 1;
+                    }
+                    None if st.none_serviceable() => {
+                        // drop: caller disconnects with the fleet
+                        self.shared.ledger.add_wasted(req.task.prefix.len() as u64);
+                    }
+                    None => st.queue.push_back(req),
+                }
+            }
+            let serve_secs = st.close_serve_clock(r);
+            st.retired.push(ReplicaReport {
+                utilization: proxy_report.mean_occupancy(st.slots),
+                proxy: proxy_report,
+                routed: st.routed[r],
+                queue_depth: st.depth[r].clone(),
+                util_hist: st.util[r].clone(),
+                slot: r,
+                generation: st.generation[r],
+                serve_secs,
+            });
+            st.phase[r] = Phase::Retired;
+        }
+        if let Some(h) = self.collectors.lock().unwrap()[r].take() {
+            let _ = h.join();
+        }
+        true
+    }
+
+    /// SHRINK by policy: retire the serving replica with the fewest
+    /// in-flight requests (the cheapest drain). False when fewer than
+    /// two replicas serve.
+    pub fn retire_idlest(&self) -> bool {
+        let victim = {
+            let st = self.shared.state.lock().unwrap();
+            (0..st.phase.len())
+                .filter(|&i| st.phase[i] == Phase::Serving)
+                .min_by_key(|&i| st.outstanding[i])
+        };
+        match victim {
+            Some(r) => self.retire_replica(r),
+            None => false,
+        }
+    }
+
+    /// One interval's observation for the autoscaler: serving count,
+    /// total in-flight, and the windowed p90 pool-queue depth (the
+    /// window resets on every read; an interval with no submissions
+    /// falls back to the instantaneous queue length).
+    pub fn autoscale_signals(&self) -> PoolSignals {
+        let mut st = self.shared.state.lock().unwrap();
+        let window_p90 = st.queue_window.percentile(90.0);
+        st.queue_window.reset();
+        PoolSignals {
+            serving: st.serving(),
+            queue_depth: window_p90.max(st.queue.len() as f64),
+            outstanding: st.outstanding.iter().sum(),
+            slots: st.slots,
+            wasted_tokens: self.shared.ledger.stats().wasted_tokens,
+        }
     }
 
     /// ADD: route (or pool-queue) a from-scratch generation; returns
     /// (pool id, reply receiver) — same shape as `LlmProxy::generate`.
-    /// When the whole fleet is dead the reply sender is dropped, so the
-    /// receiver observes disconnection instead of hanging.
+    /// When no replica can ever serve it the reply sender is dropped,
+    /// so the receiver observes disconnection instead of hanging.
     pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
         let (reply, rx) = channel();
         let task = GenerationTask::fresh(prompt, max_new_tokens, reply);
@@ -595,18 +1027,19 @@ impl LlmProxyPool {
     /// the event-driven RolloutEngine points every request at one
     /// shared completion channel (results are demultiplexed by the
     /// returned pool id) instead of blocking a thread per receiver.
-    /// Returns `None` when the whole fleet is dead — the task (and its
-    /// reply sender) was dropped, and on a *shared* reply channel that
-    /// produces no disconnect signal, so callers must not wait for a
-    /// result.
+    /// Returns `None` when no serving replica remains — the task (and
+    /// its reply sender) was dropped, and on a *shared* reply channel
+    /// that produces no disconnect signal, so callers must not wait
+    /// for a result.
     pub fn try_submit(&self, task: GenerationTask) -> Option<u64> {
         let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
         let req = Pending { pool_id, task };
         let mut st = self.shared.state.lock().unwrap();
-        if st.all_dead() {
+        if st.none_serviceable() {
             return None; // drop: nothing can ever serve this
         }
         st.queue_depth.record(st.queue.len() as f64);
+        st.queue_window.record(st.queue.len() as f64);
         let loads = st.loads();
         match st.router.route(&loads) {
             Some(r) => self.shared.dispatch(&mut st, r, req, 0),
@@ -632,7 +1065,7 @@ impl LlmProxyPool {
         if let Some(e) = st.inflight.remove(&pool_id) {
             st.by_inner[e.replica].remove(&e.inner_id);
             st.outstanding[e.replica] = st.outstanding[e.replica].saturating_sub(1);
-            self.shared.clients[e.replica].abort(e.inner_id);
+            st.clients[e.replica].abort(e.inner_id);
             self.shared.drain(&mut st);
         }
     }
@@ -646,12 +1079,9 @@ impl LlmProxyPool {
     /// others suspended) or the request already finished — callers
     /// should then keep waiting or give the episode up.
     pub fn migrate(&self, pool_id: u64) -> bool {
-        let (old, inner_old, mut entry, new_r) = {
+        let (inner_old, mut entry, new_r, client) = {
             let mut st = self.shared.state.lock().unwrap();
-            let n = self.shared.clients.len();
-            if n < 2 {
-                return false;
-            }
+            let n = st.clients.len();
             let (old, inner_old) = match st.inflight.get(&pool_id) {
                 Some(e) => (e.replica, e.inner_id),
                 None => return false,
@@ -671,12 +1101,12 @@ impl LlmProxyPool {
             st.by_inner[old].remove(&inner_old);
             st.outstanding[old] = st.outstanding[old].saturating_sub(1);
             let entry = st.inflight.remove(&pool_id).unwrap();
-            (old, inner_old, entry, new_r)
+            (inner_old, entry, new_r, st.clients[old].clone())
         };
         // reclaim outside the lock: a fail-slow replica answers between
         // decode steps, a dead one disconnects, a wedged one runs out
         // SALVAGE_WAIT — collectors keep flowing meanwhile
-        let salvage = self.shared.clients[old].reclaim(inner_old).recv_timeout(SALVAGE_WAIT);
+        let salvage = client.reclaim(inner_old).recv_timeout(SALVAGE_WAIT);
         self.shared.absorb_salvage(&mut entry.task, salvage);
         let mut st = self.shared.state.lock().unwrap();
         let migrations = entry.migrations + 1;
@@ -686,21 +1116,25 @@ impl LlmProxyPool {
         true
     }
 
-    /// Suspend every replica (synchronous mode: rollout pauses during
-    /// training). New requests pool-queue until `resume`.
+    /// Suspend every live replica (synchronous mode: rollout pauses
+    /// during training). New requests pool-queue until `resume`.
     pub fn suspend(&self) {
         let mut st = self.shared.state.lock().unwrap();
         st.pool_suspended = true;
-        for c in &self.shared.clients {
-            c.suspend();
+        for r in 0..st.clients.len() {
+            if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
+                st.clients[r].suspend();
+            }
         }
     }
 
     pub fn resume(&self) {
         let mut st = self.shared.state.lock().unwrap();
         st.pool_suspended = false;
-        for c in &self.shared.clients {
-            c.resume();
+        for r in 0..st.clients.len() {
+            if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
+                st.clients[r].resume();
+            }
         }
         self.shared.drain(&mut st);
     }
@@ -711,8 +1145,14 @@ impl LlmProxyPool {
     /// suspended (sync mode) — or when rolling is off — broadcast
     /// inline instead: on each replica's command channel the swap then
     /// precedes the controller's Resume, which is exactly the
-    /// single-proxy on-policy ordering.
+    /// single-proxy on-policy ordering. The payload is also snapshot
+    /// as the pool's `latest`, which freshly added replicas are pinned
+    /// to.
     pub fn update_weights(&self, weights: Vec<f32>, version: u64) {
+        {
+            let mut l = self.latest.lock().unwrap();
+            *l = (weights.clone(), version);
+        }
         let suspended = self.shared.state.lock().unwrap().pool_suspended;
         if !suspended {
             if let Some(tx) = &self.sync_tx {
@@ -720,15 +1160,13 @@ impl LlmProxyPool {
                 return;
             }
         }
-        for c in &self.shared.clients {
-            c.update_weights(weights.clone(), version);
-        }
         // broadcast is ordered ahead of any later command on every live
         // channel, so live replicas are at `version` for new work; dead
         // replicas stay behind and keep showing up in version_skew
         let mut st = self.shared.state.lock().unwrap();
-        for r in 0..st.replica_version.len() {
-            if !st.dead[r] {
+        for r in 0..st.clients.len() {
+            if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
+                st.clients[r].update_weights(weights.clone(), version);
                 st.replica_version[r] = version;
             }
         }
@@ -742,37 +1180,40 @@ impl LlmProxyPool {
     /// their salvaged prefixes when `partial_migration` allows. The
     /// replica is marked dead so no new work routes there.
     pub fn kill_replica(&self, r: usize) {
-        let victims: Vec<(u64, InFlight)> = {
+        let (client, victims) = {
             let mut st = self.shared.state.lock().unwrap();
-            if r >= st.dead.len() {
+            if r >= st.phase.len() || matches!(st.phase[r], Phase::Dead | Phase::Retired) {
                 return;
             }
-            st.dead[r] = true;
+            st.phase[r] = Phase::Dead;
+            st.close_serve_clock(r);
             let ids: Vec<u64> = st
                 .inflight
                 .iter()
                 .filter(|(_, e)| e.replica == r)
                 .map(|(&pid, _)| pid)
                 .collect();
-            ids.into_iter()
+            let victims: Vec<(u64, InFlight)> = ids
+                .into_iter()
                 .map(|pid| {
                     let e = st.inflight.remove(&pid).unwrap();
                     st.by_inner[r].remove(&e.inner_id);
                     st.outstanding[r] = st.outstanding[r].saturating_sub(1);
                     (pid, e)
                 })
-                .collect()
+                .collect();
+            (st.clients[r].clone(), victims)
         };
         // enqueue every reclaim BEFORE the shutdown so the loop answers
         // them on its way out, then stop it
         let reclaims: Vec<(u64, InFlight, Receiver<Salvage>)> = victims
             .into_iter()
             .map(|(pid, e)| {
-                let rx = self.shared.clients[r].reclaim(e.inner_id);
+                let rx = client.reclaim(e.inner_id);
                 (pid, e, rx)
             })
             .collect();
-        self.shared.clients[r].kill();
+        client.kill();
         let mut resumed = Vec::with_capacity(reclaims.len());
         for (pid, mut e, rx) in reclaims {
             let salvage = rx.recv_timeout(SALVAGE_WAIT);
@@ -781,26 +1222,31 @@ impl LlmProxyPool {
         }
         let mut st = self.shared.state.lock().unwrap();
         for (pid, e) in resumed {
+            let migrations = e.migrations + 1;
             let req = Pending { pool_id: pid, task: e.task };
             let loads = st.loads();
             match st.router.route_excluding(&loads, Some(r)) {
                 Some(nr) => {
-                    self.shared.dispatch(&mut st, nr, req, e.migrations + 1);
+                    self.shared.dispatch(&mut st, nr, req, migrations);
                     st.migrated += 1;
                 }
-                None if st.all_dead() => {} // drop: caller disconnects
+                None if st.none_serviceable() => {} // drop: caller disconnects
                 None => st.queue.push_back(req),
             }
         }
     }
 
     /// Rolling-sync weight-version skew across the fleet: max - min of
-    /// the last version each replica acknowledged. 0 when every replica
-    /// runs the same weights (always, outside a sync wave).
+    /// the last version each live or dead replica acknowledged
+    /// (retired slots drained cleanly and are excluded). 0 when every
+    /// replica runs the same weights (always, outside a sync wave).
     pub fn version_skew(&self) -> u64 {
         let st = self.shared.state.lock().unwrap();
-        let max = st.replica_version.iter().copied().max().unwrap_or(0);
-        let min = st.replica_version.iter().copied().min().unwrap_or(0);
+        let versions = (0..st.replica_version.len())
+            .filter(|&r| st.phase[r] != Phase::Retired)
+            .map(|r| st.replica_version[r]);
+        let max = versions.clone().max().unwrap_or(0);
+        let min = versions.min().unwrap_or(0);
         max - min
     }
 
@@ -809,7 +1255,8 @@ impl LlmProxyPool {
         self.shared.ledger.stats()
     }
 
-    /// Diagnostics: in-flight requests per replica.
+    /// Diagnostics: in-flight requests per replica slot (retired slots
+    /// report 0).
     pub fn outstanding_per_replica(&self) -> Vec<usize> {
         self.shared.state.lock().unwrap().outstanding.clone()
     }
@@ -842,32 +1289,50 @@ impl LlmProxyPool {
                 self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
             }
         }
-        // 3. join replica loops (drops their in-flight reply clones,
-        //    letting the collectors observe disconnection)
-        let mut proxy_reports = Vec::new();
-        for p in self.replicas.drain(..) {
-            proxy_reports.push(p.shutdown()?);
+        // 3. join live replica loops (drops their in-flight reply
+        //    clones, letting the collectors observe disconnection);
+        //    retired slots were already joined by retire_replica
+        let mut proxy_reports: Vec<Option<ProxyReport>> = Vec::new();
+        {
+            let mut reps = self.replicas.lock().unwrap();
+            for p in reps.iter_mut() {
+                proxy_reports.push(match p.take() {
+                    Some(p) => Some(p.shutdown()?),
+                    None => None,
+                });
+            }
         }
-        for h in self.collectors.drain(..) {
-            let _ = h.join();
+        {
+            let mut cols = self.collectors.lock().unwrap();
+            for h in cols.iter_mut() {
+                if let Some(h) = h.take() {
+                    let _ = h.join();
+                }
+            }
         }
-        let st = self.shared.state.lock().unwrap();
-        let replicas = proxy_reports
-            .into_iter()
-            .enumerate()
-            .map(|(r, proxy)| ReplicaReport {
+        let mut st = self.shared.state.lock().unwrap();
+        let mut replicas = Vec::new();
+        for (r, proxy) in proxy_reports.into_iter().enumerate() {
+            let Some(proxy) = proxy else { continue };
+            let serve_secs = st.close_serve_clock(r);
+            replicas.push(ReplicaReport {
                 utilization: proxy.mean_occupancy(self.slots),
                 proxy,
                 routed: st.routed[r],
                 queue_depth: st.depth[r].clone(),
                 util_hist: st.util[r].clone(),
-            })
-            .collect();
+                slot: r,
+                generation: st.generation[r],
+                serve_secs,
+            });
+        }
         Ok(PoolReport {
             replicas,
+            retired: std::mem::take(&mut st.retired),
             migrated: st.migrated,
             resumed: st.resumed,
             sync_waves: st.sync_waves,
+            grown: st.grown,
             pool_queue_depth: st.queue_depth.clone(),
             tokens: self.shared.ledger.stats(),
         })
@@ -889,9 +1354,15 @@ impl Drop for LlmProxyPool {
             }
             st.queue.clear();
         }
-        self.replicas.clear();
-        for h in self.collectors.drain(..) {
-            let _ = h.join();
+        if let Ok(mut reps) = self.replicas.lock() {
+            reps.clear();
+        }
+        if let Ok(mut cols) = self.collectors.lock() {
+            for h in cols.iter_mut() {
+                if let Some(h) = h.take() {
+                    let _ = h.join();
+                }
+            }
         }
     }
 }
@@ -904,6 +1375,7 @@ mod tests {
     // decoded tokens on RECLAIM — `spawn_stub_with_progress`).
     // End-to-end generation runs live in rust/tests/integration.rs.
     use super::*;
+    use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, ScaleDecision};
 
     fn cfg(n: usize, policy: RoutePolicy, slots: usize) -> PoolCfg {
         PoolCfg {
@@ -931,6 +1403,18 @@ mod tests {
             pcfg,
             (0..n).map(|_| LlmProxy::spawn_stub_with_progress(progress)).collect(),
             Arc::default(),
+        )
+    }
+
+    /// Elastic stub fleet: `add_replica` spawns more stubs with the
+    /// same fabricated RECLAIM progress.
+    fn elastic_pool(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
+        LlmProxyPool::assemble_with(
+            pcfg,
+            (0..n).map(|_| LlmProxy::spawn_stub_with_progress(progress)).collect(),
+            Arc::default(),
+            Some(Box::new(move |_slot, _gen| LlmProxy::spawn_stub_with_progress(progress))),
+            Arc::new(Mutex::new((vec![], 0))),
         )
     }
 
@@ -1072,6 +1556,7 @@ mod tests {
         let _a = p.generate(vec![1], 4);
         let _b = p.generate(vec![1], 4);
         assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
+        assert_eq!(p.serving_replicas(), 1);
         // out-of-range kill is a no-op
         p.kill_replica(99);
     }
@@ -1141,5 +1626,147 @@ mod tests {
             ),
             "failed-over request must stay pending on the live replica"
         );
+    }
+
+    // --- elastic lifecycle -------------------------------------------
+
+    #[test]
+    fn add_replica_opens_slot_to_routing() {
+        let p = elastic_pool(1, 0, &cfg(1, RoutePolicy::LeastOutstanding, 8));
+        assert_eq!(p.serving_replicas(), 1);
+        let slot = p.add_replica().unwrap();
+        assert_eq!(slot, 1, "fresh slot appended");
+        assert_eq!(p.serving_replicas(), 2);
+        assert_eq!(p.num_replicas(), 2);
+        let _a = p.generate(vec![1], 4);
+        let _b = p.generate(vec![2], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1], "new slot must serve");
+    }
+
+    #[test]
+    fn add_replica_requires_a_spawner() {
+        let p = pool(1, RoutePolicy::LeastOutstanding, 8);
+        assert!(p.add_replica().is_err(), "assembled pools cannot grow");
+    }
+
+    #[test]
+    fn add_replica_drains_backlog_onto_newcomer() {
+        // 1 replica x 1 slot under QueueSched: the second request
+        // pool-queues; growth must flush it onto the new replica
+        let p = elastic_pool(1, 0, &cfg(1, RoutePolicy::QueueSched, 1));
+        let (_a, _rx_a) = p.generate(vec![1], 4);
+        let (_b, _rx_b) = p.generate(vec![2], 4);
+        assert_eq!(p.pool_queue_len(), 1);
+        p.add_replica().unwrap();
+        assert_eq!(p.pool_queue_len(), 0, "backlog flows onto the new replica");
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+    }
+
+    #[test]
+    fn retire_replica_salvages_and_redispatches() {
+        let p = elastic_pool(2, 5, &cfg(2, RoutePolicy::RoundRobin, 8));
+        let (_a, _rx_a) = p.generate(vec![1], 32); // RR -> replica 0
+        let (_b, _rx_b) = p.generate(vec![2], 32); // RR -> replica 1
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        assert!(p.retire_replica(0));
+        // the drained request moved to replica 1 as a resumed task
+        assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
+        assert_eq!(p.serving_replicas(), 1);
+        let stats = p.token_stats();
+        assert_eq!(stats.salvaged_tokens, 5, "drain must salvage, not burn: {stats:?}");
+        assert_eq!(stats.wasted_tokens, 0, "scale-down must waste nothing: {stats:?}");
+        assert_eq!(p.resumed_dispatches(), 1);
+        // retiring an already-retired slot is a no-op
+        assert!(!p.retire_replica(0));
+        // retiring the last serving replica is refused
+        assert!(!p.retire_replica(1));
+        let report = p.shutdown().unwrap();
+        assert_eq!(report.retired.len(), 1);
+        assert_eq!(report.retired[0].slot, 0);
+        assert_eq!(report.replicas.len(), 1, "only the survivor is live at shutdown");
+    }
+
+    #[test]
+    fn retired_slot_is_reused_with_bumped_generation() {
+        let p = elastic_pool(2, 0, &cfg(2, RoutePolicy::LeastOutstanding, 8));
+        assert!(p.retire_replica(0));
+        assert_eq!(p.serving_replicas(), 1);
+        let slot = p.add_replica().unwrap();
+        assert_eq!(slot, 0, "the retired slot is reused, not leaked");
+        assert_eq!(p.num_replicas(), 2, "no new slot appended");
+        assert_eq!(p.serving_replicas(), 2);
+        let _a = p.generate(vec![1], 4);
+        let _b = p.generate(vec![2], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1], "reused slot serves again");
+        let report = p.shutdown().unwrap();
+        assert_eq!(report.retired.len(), 1);
+        assert_eq!(report.retired[0].generation, 0, "first occupant archived");
+        let reused = report.replicas.iter().find(|r| r.slot == 0).unwrap();
+        assert_eq!(reused.generation, 1, "second occupant is generation 1");
+        assert_eq!(reused.routed, 1, "stats reset for the new occupant");
+        assert_eq!(report.grown, 1);
+    }
+
+    #[test]
+    fn autoscaler_grows_and_drains_stub_pool() {
+        // burst -> grow to max; abort the load -> shrink back to min,
+        // with every drain salvaging instead of wasting
+        let p = elastic_pool(1, 0, &cfg(1, RoutePolicy::LeastOutstanding, 8));
+        let mut scaler = Autoscaler::new(AutoscaleCfg {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 3,
+            target_queue_depth: 2.0,
+            interval: 0.0001,
+            cooldown: 0.0001,
+            hysteresis: 0.2,
+        });
+        let mut ids = Vec::new();
+        for i in 0..12 {
+            let (id, _rx) = p.generate(vec![i], 4);
+            ids.push(id);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let d = scaler.tick(&p);
+        assert!(matches!(d, ScaleDecision::Grow(_)), "burst must grow: {d:?}");
+        assert_eq!(p.serving_replicas(), 3, "clamped to max_replicas");
+        // load vanishes: the fleet collapses back to the floor
+        for id in ids {
+            p.abort(id);
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        while p.serving_replicas() > 1 {
+            let d = scaler.tick(&p);
+            assert!(
+                !matches!(d, ScaleDecision::Grow(_)),
+                "idle fleet must not grow: {d:?}"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(p.serving_replicas(), 1);
+        assert_eq!(p.token_stats().wasted_tokens, 0, "scale-down must waste nothing");
+        let report = p.shutdown().unwrap();
+        assert_eq!(report.grown, 2);
+        assert_eq!(report.retired.len(), 2);
+        assert!(report.replica_seconds() > 0.0);
+    }
+
+    #[test]
+    fn merged_queue_depth_spans_retired_occupants() {
+        let p = elastic_pool(2, 0, &cfg(2, RoutePolicy::RoundRobin, 8));
+        let (_a, _rx_a) = p.generate(vec![1], 4); // RR -> 0
+        let (_b, _rx_b) = p.generate(vec![2], 4); // RR -> 1
+        assert!(p.retire_replica(0));
+        let report = p.shutdown().unwrap();
+        let live: u64 = report.replicas.iter().map(|r| r.queue_depth.count()).sum();
+        let merged = report.merged_queue_depth();
+        assert_eq!(
+            merged.count(),
+            live + report.retired[0].queue_depth.count(),
+            "merge must span live and retired occupants"
+        );
+        // the redispatch landed on the survivor, so at least 3 dispatch
+        // samples exist fleet-wide
+        assert!(merged.count() >= 3, "{merged:?}");
     }
 }

@@ -32,6 +32,7 @@
 //! scale benches; here they execute against real decode/train steps.
 
 pub mod async_controller;
+pub mod autoscaler;
 pub mod fleet;
 pub mod llm_proxy;
 pub mod rollout;
@@ -39,6 +40,7 @@ pub mod routing;
 pub mod sample_buffer;
 
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
+pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
 pub use llm_proxy::{
     GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
@@ -92,6 +94,13 @@ pub struct RolloutSystemCfg {
     /// shortest salvaged prefix worth resuming (shorter ones are
     /// dropped and counted as wasted)
     pub min_salvage_tokens: usize,
+    /// elastic fleet: queue-driven replica autoscaling bounds and
+    /// cadence (`autoscale: {…}` in YAML; disabled by default, in
+    /// which case the pool stays at `num_replicas`). The control loop
+    /// itself runs on the training thread — thread this into
+    /// `ControllerCfg::autoscale` via `Self::controller_autoscale` so
+    /// it is configured in exactly one place.
+    pub autoscale: AutoscaleCfg,
 }
 
 impl RolloutSystemCfg {
@@ -112,7 +121,16 @@ impl RolloutSystemCfg {
             "redundancy_factor must be >= 1.0"
         );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be > 0 (empty inference fleet)");
+        self.autoscale.validate()?;
         Ok(())
+    }
+
+    /// The AsyncController's view of this cfg's autoscale knob: `Some`
+    /// only when enabled. Call sites hand this to
+    /// `ControllerCfg::autoscale` so a YAML/CLI `autoscale:` block
+    /// configured here cannot be silently inert.
+    pub fn controller_autoscale(&self) -> Option<AutoscaleCfg> {
+        self.autoscale.enabled.then_some(self.autoscale)
     }
 
     fn engine_cfg(&self) -> EngineCfg {
@@ -238,12 +256,37 @@ mod tests {
             rolling_update: true,
             partial_migration: true,
             min_salvage_tokens: 1,
+            autoscale: AutoscaleCfg::disabled(),
         }
     }
 
     #[test]
     fn valid_cfg_passes() {
         cfg().validate().unwrap();
+        let mut c = cfg();
+        c.autoscale = AutoscaleCfg { enabled: true, ..AutoscaleCfg::disabled() };
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn nonsensical_autoscale_bounds_rejected() {
+        for mutate in [
+            (|a: &mut AutoscaleCfg| a.min_replicas = 0) as fn(&mut AutoscaleCfg),
+            |a| a.min_replicas = a.max_replicas + 1,
+            |a| a.interval = 0.0,
+            |a| a.cooldown = a.interval / 2.0,
+            |a| a.target_queue_depth = 0.0,
+            |a| a.hysteresis = 1.5,
+        ] {
+            let mut c = cfg();
+            c.autoscale.enabled = true;
+            mutate(&mut c.autoscale);
+            assert!(c.validate().is_err(), "{:?} should be rejected", c.autoscale);
+            // the same bounds pass while autoscaling is off: the knobs
+            // are inert and must not block a static-fleet run
+            c.autoscale.enabled = false;
+            assert!(c.validate().is_ok());
+        }
     }
 
     #[test]

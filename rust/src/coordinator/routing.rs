@@ -121,6 +121,16 @@ impl Router {
         self.rates.get(replica).copied().unwrap_or(0.0)
     }
 
+    /// Forget everything measured about a replica slot. Called when an
+    /// elastic pool reuses a retired slot for a fresh replica: the new
+    /// occupant must be probed from scratch, not inherit the previous
+    /// occupant's EWMA token rate.
+    pub fn reset_replica(&mut self, replica: usize) {
+        if let Some(r) = self.rates.get_mut(replica) {
+            *r = 0.0;
+        }
+    }
+
     /// Expected drain time of `replica` if one more request lands on it.
     /// Unmeasured replicas score 0 so they are probed first; ties fall
     /// back to least-outstanding, then lowest index (deterministic).
@@ -272,6 +282,22 @@ mod tests {
         // 0.2 * 200 + 0.8 * 100 = 120
         assert!((r.rate(0) - 120.0).abs() < 1e-9);
         assert_eq!(r.rate(5), 0.0); // never observed
+    }
+
+    #[test]
+    fn reset_replica_clears_rate_for_slot_reuse() {
+        let mut r = Router::new(RoutePolicy::Ewma);
+        r.on_completion(0, 10.0, 10.0); // 1 tok/s: a cripple lived here
+        r.on_completion(1, 100.0, 1.0);
+        // slot 0 is reused by a fresh replica: without the reset the new
+        // occupant would inherit the cripple's rate and be starved
+        r.reset_replica(0);
+        assert_eq!(r.rate(0), 0.0);
+        // unmeasured again: probed first despite the other's history
+        assert_eq!(r.route(&loads(&[0, 0], 8)), Some(0));
+        // resetting an index never measured is a no-op
+        r.reset_replica(17);
+        assert_eq!(r.rate(17), 0.0);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //!   roll-flash train  model=tiny alpha=2 variant=tis steps=20 \
 //!                     num_replicas=3 route_policy=ewma rolling_update=true \
 //!                     num_workers=8 redundancy_factor=1.25 \
-//!                     partial_migration=true min_salvage_tokens=4
+//!                     partial_migration=true min_salvage_tokens=4 \
+//!                     autoscale=true min_replicas=1 max_replicas=8 \
+//!                     target_queue_depth=8 autoscale_interval=1 \
+//!                     autoscale_cooldown=2 autoscale_hysteresis=0.25
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -15,7 +18,8 @@ use anyhow::Result;
 use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
 use roll_flash::coordinator::{
-    format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
+    format_log, run_training, AutoscaleCfg, ControllerCfg, RolloutSystem, RolloutSystemCfg,
+    RoutePolicy,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
@@ -34,6 +38,8 @@ fn main() -> Result<()> {
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
                  \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma> rolling_update=<bool>\n\
                  \u{20}         num_workers=<n> redundancy_factor=<f> partial_migration=<bool> min_salvage_tokens=<n>\n\
+                 \u{20}         autoscale=<bool> min_replicas=<n> max_replicas=<n> target_queue_depth=<f>\n\
+                 \u{20}         autoscale_interval=<f> autoscale_cooldown=<f> autoscale_hysteresis=<f>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -66,6 +72,15 @@ fn train(cli: &Cli) -> Result<()> {
     let partial_migration = cli.bool_or("partial_migration", cfg.partial_migration);
     let min_salvage_tokens: usize =
         cli.parse_or("min_salvage_tokens", cfg.min_salvage_tokens).max(1);
+    let autoscale = AutoscaleCfg {
+        enabled: cli.bool_or("autoscale", cfg.autoscale.enabled),
+        min_replicas: cli.parse_or("min_replicas", cfg.autoscale.min_replicas),
+        max_replicas: cli.parse_or("max_replicas", cfg.autoscale.max_replicas),
+        target_queue_depth: cli.parse_or("target_queue_depth", cfg.autoscale.target_queue_depth),
+        interval: cli.parse_or("autoscale_interval", cfg.autoscale.interval),
+        cooldown: cli.parse_or("autoscale_cooldown", cfg.autoscale.cooldown),
+        hysteresis: cli.parse_or("autoscale_hysteresis", cfg.autoscale.hysteresis),
+    };
 
     // resolved against the crate dir (where `make artifacts` writes),
     // not the CWD, so the CLI works from the workspace root too
@@ -94,14 +109,35 @@ fn train(cli: &Cli) -> Result<()> {
         rolling_update,
         partial_migration,
         min_salvage_tokens,
+        autoscale,
     };
+    fleet.validate()?;
     println!(
-        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor} partial_migration={partial_migration}",
+        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor} partial_migration={partial_migration} autoscale={}",
         variant.as_str(),
-        route_policy.as_str()
+        route_policy.as_str(),
+        if autoscale.enabled {
+            format!(
+                "[{}..{}] target={} every {}s",
+                autoscale.min_replicas,
+                autoscale.max_replicas,
+                autoscale.target_queue_depth,
+                autoscale.interval
+            )
+        } else {
+            "off".into()
+        }
     );
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
-    let ctl = ControllerCfg { variant, steps, lr, n_groups, group_size, sync_mode: alpha == 0.0 };
+    let ctl = ControllerCfg {
+        variant,
+        steps,
+        lr,
+        n_groups,
+        group_size,
+        sync_mode: alpha == 0.0,
+        autoscale: fleet.controller_autoscale(),
+    };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {
         println!("{}", format_log(l));
@@ -115,7 +151,7 @@ fn train(cli: &Cli) -> Result<()> {
         report.engine.redundant_aborts,
         report.engine.abandoned
     );
-    if num_replicas > 1 {
+    if num_replicas > 1 || autoscale.enabled {
         println!(
             "fleet: {} migrations ({} resumed), {} rolling waves, tokens salvaged {} / wasted {}",
             report.pool.migrated,
@@ -124,6 +160,14 @@ fn train(cli: &Cli) -> Result<()> {
             report.pool.tokens.salvaged_tokens,
             report.pool.tokens.wasted_tokens
         );
+        if autoscale.enabled {
+            println!(
+                "elastic: grew {} / retired {} replicas, {:.1} replica-seconds served",
+                report.pool.grown,
+                report.pool.retired.len(),
+                report.pool.replica_seconds()
+            );
+        }
         print!("{}", report.pool.format_table());
     }
     Ok(())

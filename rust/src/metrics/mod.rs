@@ -58,6 +58,37 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram into this one. Both must share the same
+    /// bucket layout (min/growth) — the fleet report uses this to
+    /// aggregate per-replica histograms across retired slot occupants.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert!(
+            (self.min - other.min).abs() < 1e-12
+                && (self.growth - other.growth).abs() < 1e-12
+                && self.counts.len() == other.counts.len(),
+            "histogram bucket layouts differ: cannot merge"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Clear all recorded samples, keeping the bucket layout. Turns a
+    /// lifetime histogram into a windowed one: record, read, reset —
+    /// the autoscaler samples per-interval queue-depth percentiles this
+    /// way instead of lifetime ones.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0.0;
+        self.max = 0.0;
+    }
+
     /// Approximate percentile (bucket upper edge).
     pub fn percentile(&self, p: f64) -> f64 {
         if self.total == 0 {
@@ -203,6 +234,56 @@ mod tests {
         assert!(p50 > 4.0 && p50 < 6.0, "{p50}");
         let p99 = h.percentile(99.0);
         assert!(p99 > 9.0 && p99 < 11.0, "{p99}");
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_recording() {
+        let mut a = Histogram::new(0.001, 1.05);
+        let mut b = Histogram::new(0.001, 1.05);
+        let mut whole = Histogram::new(0.001, 1.05);
+        for i in 1..=500 {
+            a.record(i as f64 / 100.0);
+            whole.record(i as f64 / 100.0);
+        }
+        for i in 501..=1000 {
+            b.record(i as f64 / 100.0);
+            whole.record(i as f64 / 100.0);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.max() - whole.max()).abs() < 1e-12);
+        for p in [50.0, 90.0, 99.0] {
+            assert!((a.percentile(p) - whole.percentile(p)).abs() < 1e-9, "p{p}");
+        }
+        // merging an empty histogram is a no-op
+        let before = a.count();
+        a.merge(&Histogram::new(0.001, 1.05));
+        assert_eq!(a.count(), before);
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket layouts differ")]
+    fn histogram_merge_rejects_mismatched_layouts() {
+        let mut a = Histogram::new(0.001, 1.05);
+        a.merge(&Histogram::new(1.0, 1.25));
+    }
+
+    #[test]
+    fn histogram_reset_windows_recordings() {
+        let mut h = Histogram::new(1.0, 1.25);
+        h.record(10.0);
+        h.record(20.0);
+        assert_eq!(h.count(), 2);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+        // the layout survives: recording works again after the reset
+        h.record(5.0);
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 5.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Virtual-time mirror of the coordinator's inference fleet
 //! (`coordinator/fleet.rs`): N single-GPU decode replicas behind the
 //! *same* `Router` the real pool uses, driven by closed-loop clients
-//! (stand-ins for EnvManagers) over the paper's long-tail response
-//! lengths.
+//! (stand-ins for EnvManagers) — or an open-loop [`BurstTrace`] — over
+//! the paper's long-tail response lengths.
 //!
 //! This is where the fleet-level phenomena are reproduced at scale
 //! without hardware (DESIGN.md §3):
@@ -24,19 +24,26 @@
 //!     that runs past the watchdog deadline is aborted off its replica
 //!     and resubmitted elsewhere through the same exclusion-routing
 //!     the real `LlmProxyPool::migrate` uses. With `partial_migration`
-//!     only the *remaining* tokens are re-decoded (the decoded prefix
-//!     is salvaged, counted in `salvaged_tokens`); the from-scratch
-//!     arm re-decodes everything and burns the progress into
-//!     `wasted_tokens` — the cost model behind
-//!     `benches/fig_fleet_scaling.rs`'s wasted-token comparison.
+//!     only the *remaining* tokens are re-decoded, plus the cost of
+//!     replaying the salvaged prefix through prefill
+//!     (`prefill_time_per_token`, the KV rebuild a real engine pays on
+//!     resume); the from-scratch arm re-decodes everything and burns
+//!     the progress into `wasted_tokens`;
+//!   * *elastic autoscaling* (`autoscale: Some(cfg)`): the *same*
+//!     `coordinator::autoscaler::decide` function that drives the real
+//!     pool runs on the virtual clock, growing the fleet into bursts
+//!     and salvage-draining it back through troughs. Replica-seconds
+//!     are integrated per serving interval — the currency
+//!     `benches/fig_autoscale.rs` compares against static fleets.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
+use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
 use crate::sim::queue::{GpuPool, T};
 use crate::util::rng::Rng;
-use crate::workload::{DecodeCost, LengthProfile};
+use crate::workload::{BurstTrace, DecodeCost, LengthProfile};
 
 /// Give up migrating a request after this many moves (mirrors the
 /// engine's MAX_GEN_MIGRATIONS): a genuinely long generation must be
@@ -51,7 +58,7 @@ pub struct FleetSimConfig {
     /// broadcast (all paused together)
     pub rolling_update: bool,
     /// closed-loop clients (EnvManager stand-ins), each with one
-    /// request in flight
+    /// request in flight; ignored when `arrivals` is set
     pub clients: usize,
     /// total requests to complete (the sweep's fixed work budget)
     pub total_requests: usize,
@@ -76,6 +83,15 @@ pub struct FleetSimConfig {
     pub partial_migration: bool,
     /// shortest decoded prefix (token units) worth salvaging
     pub min_salvage_tokens: f64,
+    /// seconds per salvaged token replayed through prefill when a
+    /// resumed request re-dispatches (the KV rebuild bill; 0 = free)
+    pub prefill_time_per_token: f64,
+    /// open-loop bursty arrivals; `None` = closed-loop clients
+    pub arrivals: Option<BurstTrace>,
+    /// elastic fleet: run `coordinator::autoscaler::decide` on the
+    /// virtual clock between `min_replicas` and `max_replicas`;
+    /// `None` = static `num_replicas`
+    pub autoscale: Option<AutoscaleCfg>,
     pub seed: u64,
 }
 
@@ -99,6 +115,11 @@ impl FleetSimConfig {
             hang_timeout: 0.0,
             partial_migration: true,
             min_salvage_tokens: 1.0,
+            // ~40x faster than the 8 ms/token decode: a realistic KV
+            // rebuild rate, so salvage is cheap but not free
+            prefill_time_per_token: 2e-4,
+            arrivals: None,
+            autoscale: None,
             seed: 17,
         }
     }
@@ -128,10 +149,24 @@ pub struct FleetSimReport {
     pub routed: Vec<usize>,
     /// watchdog migrations performed
     pub migrations: usize,
-    /// decoded tokens carried across migrations (partial arm)
+    /// decoded tokens carried across migrations/drains (partial arm)
     pub salvaged_tokens: f64,
     /// decoded tokens re-decoded from scratch (the from-scratch bill)
     pub wasted_tokens: f64,
+    /// salvaged tokens replayed through prefill on re-dispatch (each
+    /// costs `prefill_time_per_token` of extra decode-equivalent work)
+    pub prefill_replay_tokens: f64,
+    /// autoscaler grow actions (replicas added)
+    pub scale_ups: usize,
+    /// autoscaler shrink actions (replicas drained)
+    pub scale_downs: usize,
+    /// most replicas serving at once
+    pub peak_replicas: usize,
+    /// replicas serving when the run ended
+    pub final_replicas: usize,
+    /// integral of serving replicas over time — the provisioning bill
+    /// an elastic fleet holds below a static peak-sized one
+    pub replica_seconds: f64,
 }
 
 #[derive(Clone, Copy)]
@@ -141,20 +176,41 @@ enum SyncPhase {
     Rolling { replica: usize, until: f64 },
 }
 
+/// Event tags for tie-breaking at equal virtual times: lower fires
+/// first. Watchdog before completions (matching the pre-elastic event
+/// order), arrivals before completions at the same instant, scale
+/// decisions after the work that triggered them, sync last.
+const EV_DOG: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+const EV_GEN: u8 = 2;
+const EV_SCALE: u8 = 3;
+const EV_SYNC: u8 = 4;
+
 pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     assert!(cfg.num_replicas > 0, "empty fleet");
-    let n = cfg.num_replicas;
+    let scale_cfg = cfg.autoscale.filter(|a| a.enabled);
+    let max_slots = scale_cfg.map(|a| a.max_replicas).unwrap_or(cfg.num_replicas);
+    let init_n = scale_cfg
+        .map(|a| cfg.num_replicas.clamp(a.min_replicas, a.max_replicas))
+        .unwrap_or(cfg.num_replicas);
+    let mut scaler = scale_cfg.map(Autoscaler::new);
     let mut rng = Rng::new(cfg.seed);
-    let mut replicas: Vec<GpuPool> = (0..n)
-        .map(|r| {
-            let factor = match cfg.slow_replica {
-                Some((slow, f)) if slow == r => f.max(1e-9),
-                _ => 1.0,
-            };
-            GpuPool::new(1, cfg.decode.token_time * factor, cfg.knee, cfg.max_active)
-        })
-        .collect();
-    let mut paused = vec![false; n];
+    // replaying a salvaged token through prefill costs this many
+    // decode-equivalent work units
+    let prefill_ratio = cfg.prefill_time_per_token / cfg.decode.token_time;
+
+    let slow_factor = |r: usize| match cfg.slow_replica {
+        Some((slow, f)) if slow == r => f.max(1e-9),
+        _ => 1.0,
+    };
+    let make_pool = |r: usize| {
+        GpuPool::new(1, cfg.decode.token_time * slow_factor(r), cfg.knee, cfg.max_active)
+    };
+    let mut replicas: Vec<GpuPool> = (0..init_n).map(make_pool).collect();
+    let mut paused = vec![false; init_n];
+    let mut serving = vec![true; init_n];
+    // virtual time each serving replica's current interval started
+    let mut activated = vec![0.0f64; init_n];
     let mut router = Router::new(cfg.route_policy);
 
     let mut pending: VecDeque<(u64, f64)> = VecDeque::new(); // (id, tokens to decode)
@@ -176,11 +232,21 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut submitted = 0usize;
     let mut completed = 0usize;
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.total_requests);
-    let mut report = FleetSimReport { routed: vec![0; n], ..Default::default() };
+    let mut report = FleetSimReport {
+        routed: vec![0; max_slots],
+        peak_replicas: init_n,
+        ..Default::default()
+    };
     let mut max_paused = 0usize;
     let mut phase = SyncPhase::Idle {
         next: if cfg.sync_interval > 0.0 { cfg.sync_interval } else { f64::INFINITY },
     };
+    let mut next_arrival = match &cfg.arrivals {
+        Some(trace) => trace.next_arrival(0.0, &mut rng),
+        None => f64::INFINITY,
+    };
+    let scale_interval = scale_cfg.map(|a| a.interval).unwrap_or(f64::INFINITY);
+    let mut next_scale = scale_interval;
 
     let new_request = |pending: &mut VecDeque<(u64, f64)>,
                            submit_time: &mut HashMap<u64, (f64, f64)>,
@@ -211,17 +277,23 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         }};
     }
 
+    macro_rules! loads {
+        () => {
+            (0..replicas.len())
+                .map(|r| ReplicaLoad {
+                    outstanding: replicas[r].in_flight(),
+                    slots: cfg.max_active,
+                    suspended: paused[r] || !serving[r],
+                })
+                .collect::<Vec<ReplicaLoad>>()
+        };
+    }
+
     // dispatch pool-queued requests while the router allows
     macro_rules! dispatch {
         ($now:expr) => {{
             while !pending.is_empty() {
-                let loads: Vec<ReplicaLoad> = (0..replicas.len())
-                    .map(|r| ReplicaLoad {
-                        outstanding: replicas[r].in_flight(),
-                        slots: cfg.max_active,
-                        suspended: paused[r],
-                    })
-                    .collect();
+                let loads: Vec<ReplicaLoad> = loads!();
                 let Some(r) = router.route(&loads) else { break };
                 let (id, tokens) = pending.pop_front().unwrap();
                 place!(r, id, tokens, $now);
@@ -230,16 +302,35 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         }};
     }
 
-    for _ in 0..cfg.clients.min(cfg.total_requests) {
-        new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
-        submitted += 1;
+    // fold an aborted request's progress into its resubmission size:
+    // salvage keeps the remaining work plus the prefill replay of the
+    // decoded prefix; from-scratch re-decodes everything
+    macro_rules! salvage_resubmit {
+        ($assigned:expr, $remaining:expr) => {{
+            let decoded = ($assigned - $remaining).max(0.0);
+            if cfg.partial_migration && decoded >= cfg.min_salvage_tokens {
+                report.salvaged_tokens += decoded;
+                report.prefill_replay_tokens += decoded;
+                $remaining.max(1e-9) + decoded * prefill_ratio
+            } else {
+                report.wasted_tokens += decoded;
+                $assigned
+            }
+        }};
     }
-    dispatch!(now);
+
+    if cfg.arrivals.is_none() {
+        for _ in 0..cfg.clients.min(cfg.total_requests) {
+            new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+            submitted += 1;
+        }
+        dispatch!(now);
+    }
 
     while completed < cfg.total_requests {
         // earliest generation completion across the fleet
         let mut gen: Option<(f64, usize)> = None;
-        for r in 0..n {
+        for r in 0..replicas.len() {
             if let Some(t) = replicas[r].peek_completion() {
                 if gen.map(|(bt, _)| t < bt).unwrap_or(true) {
                     gen = Some((t, r));
@@ -252,126 +343,218 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             SyncPhase::Rolling { until, .. } => until,
         };
         let dog_t = watchdogs.peek().map(|Reverse((t, _, _))| t.0).unwrap_or(f64::INFINITY);
+        let arr_t = if submitted < cfg.total_requests { next_arrival } else { f64::INFINITY };
 
-        if dog_t.is_finite() && dog_t <= sync_t && gen.map(|(t, _)| dog_t <= t).unwrap_or(true) {
-            // --- watchdog: migrate a still-running request ------------
-            let Reverse((t, id, r)) = watchdogs.pop().unwrap();
-            if placed.get(&id) != Some(&r) {
-                continue; // stale: completed or already migrated
+        // earliest event wins; tags break exact-time ties deterministically
+        let mut best: Option<(f64, u8)> = None;
+        for cand in [
+            (dog_t, EV_DOG),
+            (arr_t, EV_ARRIVE),
+            (gen.map(|(t, _)| t).unwrap_or(f64::INFINITY), EV_GEN),
+            (next_scale, EV_SCALE),
+            (sync_t, EV_SYNC),
+        ] {
+            if cand.0.is_finite() && best.map(|b| cand < b).unwrap_or(true) {
+                best = Some(cand);
             }
-            now = t.0;
-            if strikes.get(&id).copied().unwrap_or(0) >= MAX_SIM_MIGRATIONS {
-                continue; // let it finish where it is
-            }
-            let loads: Vec<ReplicaLoad> = (0..n)
-                .map(|i| ReplicaLoad {
-                    outstanding: replicas[i].in_flight(),
-                    slots: cfg.max_active,
-                    suspended: paused[i],
-                })
-                .collect();
-            // the policy's pick, then least-outstanding survivor — the
-            // same fallback LlmProxyPool::migrate uses
-            let target = router.route_excluding(&loads, Some(r)).or_else(|| {
-                (0..n)
-                    .filter(|&i| i != r && !loads[i].suspended)
-                    .min_by_key(|&i| loads[i].outstanding)
-            });
-            let Some(new_r) = target else {
-                // nowhere to move it right now (peers paused or
-                // saturated): re-arm and try again next period, like
-                // the real watchdog re-firing every hang_timeout
-                watchdogs.push(Reverse((T(now + cfg.hang_timeout), id, r)));
-                continue;
-            };
-            *strikes.entry(id).or_insert(0) += 1;
-            let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
-            let assigned = work_left.get(&id).copied().unwrap_or(remaining);
-            let decoded = (assigned - remaining).max(0.0);
-            report.migrations += 1;
-            let resubmit = if cfg.partial_migration && decoded >= cfg.min_salvage_tokens {
-                report.salvaged_tokens += decoded;
-                remaining.max(1e-9)
-            } else {
-                report.wasted_tokens += decoded;
-                assigned
-            };
-            place!(new_r, id, resubmit, now);
-        } else {
-            match gen {
-                Some((t, r)) if t <= sync_t => {
-                    now = t;
-                    let id = replicas[r].pop_completion(t);
-                    placed.remove(&id);
-                    strikes.remove(&id);
-                    let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
-                    let assigned = work_left.remove(&id).unwrap_or(tokens);
-                    let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
-                    // the same observation feed the real pool's
-                    // collectors give the Router: dispatch-to-completion
-                    // token rate, counting only the tokens decoded on
-                    // THIS replica since its dispatch (a salvaged
-                    // prefix must not inflate the target's EWMA)
-                    router.on_completion(r, assigned, now - t_dispatch);
-                    latencies.push(now - t_submit);
-                    completed += 1;
-                    // closed loop: the freed client submits its next task
-                    if submitted < cfg.total_requests {
-                        new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
-                        submitted += 1;
-                    }
-                    dispatch!(now);
+        }
+        let Some((_, tag)) = best else {
+            panic!(
+                "fleet sim starved: no completions, watchdogs, arrivals, scale, or sync \
+                 events (completed {completed}/{})",
+                cfg.total_requests
+            );
+        };
+
+        match tag {
+            EV_DOG => {
+                // --- watchdog: migrate a still-running request --------
+                let Reverse((t, id, r)) = watchdogs.pop().unwrap();
+                if placed.get(&id) != Some(&r) {
+                    continue; // stale: completed or already migrated
                 }
-                _ => {
-                    assert!(
-                        sync_t.is_finite(),
-                        "fleet sim starved: no completions, watchdogs, or sync events \
-                         (completed {completed}/{})",
-                        cfg.total_requests
-                    );
-                    now = sync_t;
-                    phase = match phase {
-                        SyncPhase::Idle { .. } => {
-                            report.sync_waves += 1;
-                            if cfg.rolling_update {
-                                paused[0] = true;
-                                replicas[0].set_paused(true, now);
-                                max_paused = max_paused.max(1);
-                                SyncPhase::Rolling { replica: 0, until: now + cfg.sync_time }
+                now = t.0;
+                if strikes.get(&id).copied().unwrap_or(0) >= MAX_SIM_MIGRATIONS {
+                    continue; // let it finish where it is
+                }
+                let loads: Vec<ReplicaLoad> = loads!();
+                // the policy's pick, then least-outstanding survivor —
+                // the same fallback LlmProxyPool::migrate uses
+                let target = router.route_excluding(&loads, Some(r)).or_else(|| {
+                    (0..replicas.len())
+                        .filter(|&i| i != r && !loads[i].suspended)
+                        .min_by_key(|&i| loads[i].outstanding)
+                });
+                let Some(new_r) = target else {
+                    // nowhere to move it right now (peers paused or
+                    // saturated): re-arm and try again next period, like
+                    // the real watchdog re-firing every hang_timeout
+                    watchdogs.push(Reverse((T(now + cfg.hang_timeout), id, r)));
+                    continue;
+                };
+                *strikes.entry(id).or_insert(0) += 1;
+                let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
+                let assigned = work_left.get(&id).copied().unwrap_or(remaining);
+                report.migrations += 1;
+                let resubmit = salvage_resubmit!(assigned, remaining);
+                place!(new_r, id, resubmit, now);
+            }
+            EV_ARRIVE => {
+                // --- open-loop arrival --------------------------------
+                now = next_arrival;
+                new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+                submitted += 1;
+                if let Some(trace) = &cfg.arrivals {
+                    next_arrival = trace.next_arrival(now, &mut rng);
+                }
+                dispatch!(now);
+            }
+            EV_GEN => {
+                let (t, r) = gen.unwrap();
+                now = t;
+                let id = replicas[r].pop_completion(t);
+                placed.remove(&id);
+                strikes.remove(&id);
+                let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
+                let assigned = work_left.remove(&id).unwrap_or(tokens);
+                let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
+                // the same observation feed the real pool's collectors
+                // give the Router: dispatch-to-completion token rate,
+                // counting only the tokens decoded on THIS replica
+                // since its dispatch (a salvaged prefix must not
+                // inflate the target's EWMA)
+                router.on_completion(r, assigned, now - t_dispatch);
+                latencies.push(now - t_submit);
+                completed += 1;
+                // closed loop: the freed client submits its next task
+                if cfg.arrivals.is_none() && submitted < cfg.total_requests {
+                    new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+                    submitted += 1;
+                }
+                dispatch!(now);
+            }
+            EV_SCALE => {
+                // --- autoscale decision on the virtual clock ----------
+                now = next_scale;
+                next_scale += scale_interval;
+                let scaler = scaler.as_mut().expect("scale event without autoscaler");
+                let signals = PoolSignals {
+                    serving: serving.iter().filter(|&&s| s).count(),
+                    queue_depth: pending.len() as f64,
+                    outstanding: placed.len(),
+                    slots: cfg.max_active,
+                    wasted_tokens: report.wasted_tokens as u64,
+                };
+                match scaler.decide_at(now, &signals) {
+                    ScaleDecision::Grow(k) => {
+                        for _ in 0..k {
+                            // reuse a drained slot (resetting its EWMA,
+                            // like the real pool) or open a fresh one
+                            if let Some(slot) = (0..replicas.len()).find(|&i| !serving[i]) {
+                                serving[slot] = true;
+                                activated[slot] = now;
+                                router.reset_replica(slot);
+                            } else if replicas.len() < max_slots {
+                                replicas.push(make_pool(replicas.len()));
+                                paused.push(false);
+                                serving.push(true);
+                                activated.push(now);
                             } else {
-                                for r in 0..n {
-                                    paused[r] = true;
-                                    replicas[r].set_paused(true, now);
-                                }
-                                max_paused = n;
-                                SyncPhase::Broadcast { until: now + cfg.sync_time }
+                                break;
+                            }
+                            report.scale_ups += 1;
+                        }
+                        let live = serving.iter().filter(|&&s| s).count();
+                        report.peak_replicas = report.peak_replicas.max(live);
+                        dispatch!(now);
+                    }
+                    ScaleDecision::Shrink(k) => {
+                        for _ in 0..k {
+                            let min_serving =
+                                scale_cfg.map(|a| a.min_replicas).unwrap_or(1);
+                            let live: Vec<usize> =
+                                (0..replicas.len()).filter(|&i| serving[i]).collect();
+                            if live.len() <= min_serving {
+                                break;
+                            }
+                            // drain the cheapest replica: fewest in flight
+                            let victim = *live
+                                .iter()
+                                .min_by_key(|&&i| replicas[i].in_flight())
+                                .unwrap();
+                            serving[victim] = false;
+                            report.replica_seconds += now - activated[victim];
+                            report.scale_downs += 1;
+                            // salvage-drain: every in-flight request is
+                            // aborted with its decoded progress kept
+                            // (plus prefill replay) and re-queued for
+                            // the survivors — the same RECLAIM path
+                            // retire_replica drives on the real pool
+                            let ids: Vec<u64> = placed
+                                .iter()
+                                .filter(|(_, &rr)| rr == victim)
+                                .map(|(&id, _)| id)
+                                .collect();
+                            for id in ids {
+                                let remaining =
+                                    replicas[victim].abort(id, now).unwrap_or(0.0);
+                                let assigned =
+                                    work_left.get(&id).copied().unwrap_or(remaining);
+                                let resubmit = salvage_resubmit!(assigned, remaining);
+                                placed.remove(&id);
+                                pending.push_back((id, resubmit));
                             }
                         }
-                        SyncPhase::Rolling { replica, .. } => {
-                            paused[replica] = false;
-                            replicas[replica].set_paused(false, now);
-                            if replica + 1 < n {
-                                paused[replica + 1] = true;
-                                replicas[replica + 1].set_paused(true, now);
-                                SyncPhase::Rolling {
-                                    replica: replica + 1,
-                                    until: now + cfg.sync_time,
-                                }
-                            } else {
-                                SyncPhase::Idle { next: now + cfg.sync_interval }
+                        dispatch!(now);
+                    }
+                    ScaleDecision::Hold => {}
+                }
+            }
+            EV_SYNC => {
+                now = sync_t;
+                let live = replicas.len();
+                phase = match phase {
+                    SyncPhase::Idle { .. } => {
+                        report.sync_waves += 1;
+                        if cfg.rolling_update {
+                            paused[0] = true;
+                            replicas[0].set_paused(true, now);
+                            max_paused = max_paused.max(1);
+                            SyncPhase::Rolling { replica: 0, until: now + cfg.sync_time }
+                        } else {
+                            for r in 0..live {
+                                paused[r] = true;
+                                replicas[r].set_paused(true, now);
                             }
+                            max_paused = live;
+                            SyncPhase::Broadcast { until: now + cfg.sync_time }
                         }
-                        SyncPhase::Broadcast { .. } => {
-                            for r in 0..n {
-                                paused[r] = false;
-                                replicas[r].set_paused(false, now);
+                    }
+                    SyncPhase::Rolling { replica, .. } => {
+                        paused[replica] = false;
+                        replicas[replica].set_paused(false, now);
+                        if replica + 1 < live {
+                            paused[replica + 1] = true;
+                            replicas[replica + 1].set_paused(true, now);
+                            SyncPhase::Rolling {
+                                replica: replica + 1,
+                                until: now + cfg.sync_time,
                             }
+                        } else {
                             SyncPhase::Idle { next: now + cfg.sync_interval }
                         }
-                    };
-                    dispatch!(now);
-                }
+                    }
+                    SyncPhase::Broadcast { .. } => {
+                        for r in 0..live {
+                            paused[r] = false;
+                            replicas[r].set_paused(false, now);
+                        }
+                        SyncPhase::Idle { next: now + cfg.sync_interval }
+                    }
+                };
+                dispatch!(now);
             }
+            _ => unreachable!(),
         }
     }
 
@@ -385,7 +568,15 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         .iter()
         .map(|p| p.total_work_done(now) / (p.capacity_rate() * now.max(1e-9)))
         .collect();
+    let n = replicas.len();
     report.min_decoding_during_sync = if report.sync_waves > 0 { n - max_paused } else { n };
+    report.final_replicas = serving.iter().filter(|&&s| s).count();
+    for r in 0..n {
+        if serving[r] {
+            report.replica_seconds += now - activated[r];
+        }
+    }
+    report.routed.truncate(n);
     report
 }
 
@@ -405,6 +596,36 @@ pub fn sweep_replicas(base: &FleetSimConfig, counts: &[usize]) -> Vec<(usize, Fl
             (c, run(&cfg))
         })
         .collect()
+}
+
+/// The bursty-arrival regime the autoscaler is for: shared by the
+/// elastic-vs-static unit test and `benches/fig_autoscale.rs`. Sized
+/// so one replica handles the trough and ~5 the burst.
+pub fn bursty_config(total_requests: usize) -> FleetSimConfig {
+    let mut cfg = FleetSimConfig::default_fleet(1);
+    cfg.lengths = LengthProfile::new(1500.0, 1.0, 16384);
+    cfg.sync_interval = 0.0;
+    cfg.total_requests = total_requests;
+    cfg.arrivals = Some(BurstTrace {
+        base_rate: 0.3,
+        burst_rate: 6.0,
+        period: 200.0,
+        duty: 0.25,
+    });
+    cfg
+}
+
+/// The elastic arm's scaler bounds for [`bursty_config`].
+pub fn bursty_autoscale(min_replicas: usize, max_replicas: usize) -> AutoscaleCfg {
+    AutoscaleCfg {
+        enabled: true,
+        min_replicas,
+        max_replicas,
+        target_queue_depth: 12.0,
+        interval: 5.0,
+        cooldown: 10.0,
+        hysteresis: 0.2,
+    }
 }
 
 #[cfg(test)]
@@ -534,14 +755,22 @@ mod tests {
             partial.wasted_tokens,
             scratch.wasted_tokens
         );
-        // same seed, same arrivals: total decode work (tokens) only
-        // differs by the re-decoded prefixes, so the salvage arm does
-        // no MORE work and finishes no later than from-scratch re-runs
+        // same seed, same arrivals: the salvage arm replays prefixes
+        // through prefill (~2.5% of their decode cost) instead of
+        // re-decoding them outright, so it still does less total work
         assert!(
             partial.tokens <= scratch.tokens + 1e-6,
             "salvage must not add decode work: {:.0} vs {:.0}",
             partial.tokens,
             scratch.tokens
+        );
+        assert!(
+            partial.prefill_replay_tokens > 0.0,
+            "salvage re-dispatch must pay the KV rebuild: {partial:?}"
+        );
+        assert_eq!(
+            scratch.prefill_replay_tokens, 0.0,
+            "from-scratch re-decodes; it never replays a prefix"
         );
         // a migrated-and-resumed request loses and duplicates nothing:
         // decoded work for the completed set matches the assignment
@@ -549,6 +778,32 @@ mod tests {
             partial.salvaged_tokens > 0.0,
             "the comparison is vacuous without salvage: {partial:?}"
         );
+    }
+
+    #[test]
+    fn prefill_replay_cost_is_charged_per_salvaged_token() {
+        // the same fail-slow run with free vs costed prefill replay:
+        // identical event order (resubmit sizes differ only by the
+        // replay term), strictly more decode-equivalent work when the
+        // KV rebuild is priced in
+        let mut free = fail_slow(true);
+        free.prefill_time_per_token = 0.0;
+        let mut costed = fail_slow(true);
+        costed.prefill_time_per_token = 2e-3; // replay at 1/4 of decode cost (exaggerated)
+        let f = run(&free);
+        let c = run(&costed);
+        assert_eq!(f.completed, c.completed);
+        assert!(f.salvaged_tokens > 0.0 && c.salvaged_tokens > 0.0);
+        assert!(
+            c.tokens > f.tokens,
+            "costed replay must add work: {:.0} vs {:.0}",
+            c.tokens,
+            f.tokens
+        );
+        // every salvaged token is replayed through prefill — the knob
+        // only prices the replay, it does not change what is replayed
+        assert_eq!(f.prefill_replay_tokens, f.salvaged_tokens);
+        assert_eq!(c.prefill_replay_tokens, c.salvaged_tokens);
     }
 
     #[test]
@@ -585,6 +840,92 @@ mod tests {
                 assert!(*u > 0.0 && *u <= 1.0 + 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn static_fleet_replica_seconds_are_n_times_makespan() {
+        let c = skewed(RoutePolicy::LeastOutstanding);
+        let r = run(&c);
+        assert!(
+            (r.replica_seconds - 4.0 * r.makespan).abs() < 1e-6,
+            "static 4-replica fleet: {} vs {}",
+            r.replica_seconds,
+            4.0 * r.makespan
+        );
+        assert_eq!(r.final_replicas, 4);
+        assert_eq!(r.peak_replicas, 4);
+        assert_eq!(r.scale_ups + r.scale_downs, 0);
+    }
+
+    #[test]
+    fn elastic_fleet_follows_the_burst_and_drains_back() {
+        // 680 requests: the last arrival lands deep in a trough, so the
+        // scaler has drained back to min by the time the run ends
+        let mut cfg = bursty_config(680);
+        cfg.autoscale = Some(bursty_autoscale(1, 6));
+        let r = run(&cfg);
+        assert_eq!(r.completed, 680, "every request must finish");
+        assert!(
+            r.peak_replicas >= 3,
+            "the burst must grow the fleet well past min: {r:?}"
+        );
+        assert!(r.scale_ups > 0 && r.scale_downs > 0, "{r:?}");
+        assert_eq!(
+            r.final_replicas,
+            1,
+            "the trough must drain the fleet back to min_replicas: {r:?}"
+        );
+        // drains salvage decoded work instead of burning it
+        assert!(
+            r.wasted_tokens <= r.salvaged_tokens,
+            "scale-down must salvage, not waste: {r:?}"
+        );
+    }
+
+    /// The acceptance shape for `benches/fig_autoscale.rs`: elastic
+    /// matches the static peak's completion rate within 5% while using
+    /// strictly fewer replica-seconds.
+    #[test]
+    fn elastic_matches_static_peak_at_lower_replica_seconds() {
+        let total = 680;
+        let static_peak = {
+            let mut c = bursty_config(total);
+            c.num_replicas = 6;
+            run(&c)
+        };
+        let elastic = {
+            let mut c = bursty_config(total);
+            c.autoscale = Some(bursty_autoscale(1, 6));
+            run(&c)
+        };
+        assert_eq!(static_peak.completed, elastic.completed);
+        // same completed work budget: completion rate = total/makespan
+        let rate_ratio = static_peak.makespan / elastic.makespan;
+        assert!(
+            rate_ratio >= 0.95,
+            "elastic must stay within 5% of static-peak throughput: \
+             elastic {:.0}s vs static {:.0}s ({rate_ratio:.3})",
+            elastic.makespan,
+            static_peak.makespan
+        );
+        assert!(
+            elastic.replica_seconds < static_peak.replica_seconds,
+            "elastic must hold strictly fewer replica-seconds: {:.0} vs {:.0}",
+            elastic.replica_seconds,
+            static_peak.replica_seconds
+        );
+    }
+
+    #[test]
+    fn elastic_determinism() {
+        let mut cfg = bursty_config(600);
+        cfg.autoscale = Some(bursty_autoscale(1, 6));
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.scale_ups, b.scale_ups);
+        assert_eq!(a.scale_downs, b.scale_downs);
+        assert_eq!(a.replica_seconds, b.replica_seconds);
     }
 
     #[test]

@@ -52,6 +52,49 @@ impl LengthProfile {
     }
 }
 
+/// Open-loop bursty arrival trace: a square wave between `burst_rate`
+/// (for `duty` of every `period`) and `base_rate` (the rest), with
+/// exponential inter-arrival times at the current rate. This is the
+/// demand shape the elastic-fleet autoscaler is for — a static fleet
+/// must be provisioned for the burst and idles through the trough,
+/// while the scaler follows the wave (see `benches/fig_autoscale.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct BurstTrace {
+    /// arrivals per virtual second outside bursts (> 0)
+    pub base_rate: f64,
+    /// arrivals per virtual second during bursts
+    pub burst_rate: f64,
+    /// seconds per burst cycle
+    pub period: f64,
+    /// fraction of each period spent at `burst_rate` (bursts lead)
+    pub duty: f64,
+}
+
+impl BurstTrace {
+    /// Instantaneous arrival rate at virtual time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let phase = (t.max(0.0) % self.period) / self.period;
+        if phase < self.duty {
+            self.burst_rate
+        } else {
+            self.base_rate
+        }
+    }
+
+    /// Next arrival time after `t` (exponential inter-arrival at the
+    /// rate in force at `t` — a step-rate approximation that keeps the
+    /// sim event loop single-pass and deterministic).
+    pub fn next_arrival(&self, t: f64, rng: &mut Rng) -> f64 {
+        let rate = self.rate_at(t).max(1e-9);
+        t + rng.exponential(1.0 / rate)
+    }
+
+    /// Mean arrival rate over a full cycle.
+    pub fn mean_rate(&self) -> f64 {
+        self.duty * self.burst_rate + (1.0 - self.duty) * self.base_rate
+    }
+}
+
 /// Gaussian environment step latency, truncated below (Fig 9).
 #[derive(Clone, Copy, Debug)]
 pub struct EnvLatency {
@@ -223,6 +266,31 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(p.sample(&mut rng), 100);
         }
+    }
+
+    #[test]
+    fn burst_trace_alternates_rates_and_orders_arrivals() {
+        let trace =
+            BurstTrace { base_rate: 1.0, burst_rate: 10.0, period: 100.0, duty: 0.3 };
+        assert_eq!(trace.rate_at(0.0), 10.0);
+        assert_eq!(trace.rate_at(29.0), 10.0);
+        assert_eq!(trace.rate_at(31.0), 1.0);
+        assert_eq!(trace.rate_at(131.0), 1.0, "periodic");
+        assert!((trace.mean_rate() - 3.7).abs() < 1e-12);
+        let mut rng = Rng::new(9);
+        let mut t = 0.0;
+        let mut in_burst = 0usize;
+        for _ in 0..2000 {
+            let next = trace.next_arrival(t, &mut rng);
+            assert!(next > t, "arrivals must advance time");
+            t = next;
+            if (t % trace.period) / trace.period < trace.duty {
+                in_burst += 1;
+            }
+        }
+        // most arrivals land inside the burst windows (10x the rate on
+        // 30% of the time axis)
+        assert!(in_burst > 1000, "burst arrivals: {in_burst}/2000");
     }
 
     #[test]

@@ -6,8 +6,8 @@ use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    run_training, ControllerCfg, GenerationTask, LlmProxy, LlmProxyPool, PoolCfg, RolloutSystem,
-    RolloutSystemCfg, RoutePolicy,
+    run_training, AutoscaleCfg, Autoscaler, ControllerCfg, GenerationTask, LlmProxy, LlmProxyPool,
+    PoolCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
 };
 use roll_flash::env::alfworld::AlfworldEnv;
 use roll_flash::env::math::MathEnv;
@@ -85,6 +85,7 @@ fn fleet_collects_complete_groups() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -128,6 +129,7 @@ fn sync_training_loop_runs_on_math_env() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -137,6 +139,7 @@ fn sync_training_loop_runs_on_math_env() {
         n_groups: 4,
         group_size: 4,
         sync_mode: true,
+        autoscale: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 3);
@@ -177,6 +180,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -186,6 +190,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         n_groups: 4,
         group_size: 4,
         sync_mode: false,
+        autoscale: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 5);
@@ -222,6 +227,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -270,6 +276,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -436,6 +443,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -445,6 +453,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         n_groups: 4,
         group_size: 4,
         sync_mode: false,
+        autoscale: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 4);
@@ -619,6 +628,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -659,6 +669,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -678,6 +689,124 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         report.buffer.surplus,
         report.engine
     );
+}
+
+// ---------------------------------------------------------------------------
+// Elastic fleet: the queue-driven autoscaler on the real engine.
+// ---------------------------------------------------------------------------
+
+/// Acceptance shape for the autoscaler subsystem: a burst grows the
+/// pool to at least `min_replicas + 2`, the trough drains it back to
+/// `min_replicas`, and scale-down burns zero decoded tokens (every
+/// in-flight generation is salvaged or completed; no request ever
+/// lands on a draining/retired replica — otherwise its reply would be
+/// lost and the final drain below would time out).
+#[test]
+fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
+    use std::sync::mpsc::TryRecvError;
+    use std::time::{Duration, Instant};
+
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let cfg = PoolCfg {
+        num_replicas: 1,
+        route_policy: RoutePolicy::LeastOutstanding,
+        rolling_update: false,
+        replica_slots: rt.manifest.decode_batch,
+        partial_migration: true,
+        min_salvage_tokens: 1,
+    };
+    let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 61).unwrap();
+    let mut scaler = Autoscaler::new(AutoscaleCfg {
+        enabled: true,
+        min_replicas: 1,
+        max_replicas: 4,
+        target_queue_depth: 2.0,
+        interval: 0.001,
+        cooldown: 0.002,
+        hysteresis: 0.2,
+    });
+
+    // --- burst: keep ~32 requests offered until the fleet has grown ---
+    let target = 3; // min_replicas + 2
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut active = Vec::new();
+    let mut peak = pool.serving_replicas();
+    let mut i = 0u32;
+    while peak < target {
+        assert!(
+            Instant::now() < deadline,
+            "autoscaler never grew to {target}: serving {}, signals {:?}",
+            pool.serving_replicas(),
+            pool.autoscale_signals()
+        );
+        while active.len() < 32 {
+            active.push(pool.generate(MathEnv::prompt_for(i % 9, 3), 6).1);
+            i += 1;
+        }
+        active.retain(|rx| match rx.try_recv() {
+            Ok(_) => false,
+            Err(TryRecvError::Empty) => true,
+            Err(TryRecvError::Disconnected) => panic!("request dropped by a live fleet"),
+        });
+        // tick only while the pool is visibly loaded: a burst tick is
+        // then a Grow or a Hold (shrinking needs per-replica load under
+        // 1.6, impossible at >= 16 outstanding on <= 4 replicas), so
+        // the zero-waste bill below is attributable to scale-down
+        // alone. The probe must NOT be autoscale_signals(), which
+        // would reset the scaler's queue-depth window.
+        if pool.outstanding_per_replica().iter().sum::<usize>() >= 16 {
+            scaler.tick(&pool);
+        }
+        peak = peak.max(pool.serving_replicas());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(peak >= target, "burst must grow the fleet to >= min+2 (saw {peak})");
+
+    // --- trough: stop offering load, drain, and shrink back to min ---
+    for rx in active {
+        let _ = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every burst request completes despite scaling");
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while pool.serving_replicas() > 1 {
+        assert!(
+            Instant::now() < deadline,
+            "autoscaler never drained back to min_replicas: serving {}",
+            pool.serving_replicas()
+        );
+        scaler.tick(&pool);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(pool.serving_replicas(), 1);
+    assert_eq!(pool.pool_queue_len(), 0, "no request may be stranded by the drain");
+    let stats = pool.token_stats();
+    assert_eq!(
+        stats.wasted_tokens, 0,
+        "scale-down must salvage or complete all in-flight work: {stats:?}"
+    );
+
+    // the survivor still serves after the churn
+    let (_, rx) = pool.generate(MathEnv::prompt_for(2, 2), 4);
+    rx.recv_timeout(Duration::from_secs(30)).expect("survivor serves after the drain");
+
+    let report = pool.shutdown().unwrap();
+    assert!(report.grown >= 2, "at least two grow actions: {report:?}");
+    assert_eq!(
+        report.retired.len(),
+        report.grown as usize,
+        "every grown replica drained back out"
+    );
+    for r in &report.retired {
+        assert_eq!(
+            r.proxy.wasted_tokens, 0,
+            "retired occupant slot {} gen {} burned decoded tokens",
+            r.slot, r.generation
+        );
+    }
+    assert!(report.replica_seconds() > 0.0);
 }
 
 #[test]
@@ -703,6 +832,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -725,6 +855,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         n_groups: 4,
         group_size: 4,
         sync_mode: false,
+        autoscale: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     killer.join().unwrap();

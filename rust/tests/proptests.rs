@@ -4,7 +4,7 @@
 //! in-tree harness: seeded random case generation + first-failing-seed
 //! reporting. Each property runs across many generated configurations.
 
-use roll_flash::coordinator::SampleBuffer;
+use roll_flash::coordinator::{ReplicaLoad, RoutePolicy, Router, SampleBuffer};
 use roll_flash::rl::{self, Trajectory};
 use roll_flash::sim::queue::GpuPool;
 use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
@@ -108,6 +108,89 @@ fn prop_queue_sched_meets_prop1_bound() {
         }
         let bound = Prop1 { k_workers: k, mu_gen: mu, l_gen }.completion_bound(q);
         assert!(now <= bound + 1e-6, "Prop 1 violated: {now} > {bound} (K={k}, Q={q})");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Router / elastic-fleet invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_router_never_selects_dead_or_draining_replicas() {
+    // Under arbitrary interleavings of the elastic lifecycle —
+    // kill_replica / retire_replica (slot stops serving), add_replica
+    // (slot opens or is reused with its EWMA reset) — plus random load
+    // and completion feed, the router must only ever pick serving
+    // slots, honor the migration exclusion, and (for work-conserving
+    // policies) find an eligible slot whenever one exists.
+    for_all_seeds(60, |rng| {
+        let policy = RoutePolicy::ALL[rng.below(RoutePolicy::ALL.len())];
+        let mut router = Router::new(policy);
+        // serving[r] mirrors the pool's Phase::Serving; false covers
+        // draining, dead, and retired alike — all unroutable
+        let mut serving: Vec<bool> = vec![true];
+        let mut outstanding: Vec<usize> = vec![0];
+        let slots = 1 + rng.below(8);
+        for _ in 0..300 {
+            match rng.below(8) {
+                0 => {
+                    // add_replica: fresh slot appended
+                    serving.push(true);
+                    outstanding.push(0);
+                }
+                1 => {
+                    // kill_replica / retire_replica: slot stops serving
+                    let r = rng.below(serving.len());
+                    serving[r] = false;
+                    outstanding[r] = 0;
+                }
+                2 => {
+                    // add_replica reusing a retired slot: EWMA cleared
+                    let r = rng.below(serving.len());
+                    if !serving[r] {
+                        serving[r] = true;
+                        router.reset_replica(r);
+                        assert_eq!(router.rate(r), 0.0, "reused slot must be unmeasured");
+                    }
+                }
+                3 => {
+                    // completion feed (EWMA observation)
+                    let r = rng.below(serving.len());
+                    router.on_completion(r, rng.range_f64(1.0, 500.0), rng.range_f64(0.1, 5.0));
+                    outstanding[r] = outstanding[r].saturating_sub(1);
+                }
+                _ => {
+                    let loads: Vec<ReplicaLoad> = (0..serving.len())
+                        .map(|r| ReplicaLoad {
+                            outstanding: outstanding[r],
+                            slots,
+                            suspended: !serving[r],
+                        })
+                        .collect();
+                    let exclude = if rng.chance(0.3) {
+                        Some(rng.below(serving.len()))
+                    } else {
+                        None
+                    };
+                    let picked = router.route_excluding(&loads, exclude);
+                    if let Some(r) = picked {
+                        assert!(serving[r], "routed to a dead/draining slot {r} ({policy:?})");
+                        assert_ne!(Some(r), exclude, "exclusion violated ({policy:?})");
+                        outstanding[r] += 1;
+                    } else {
+                        // None is only legitimate when no slot is
+                        // eligible: every slot is unroutable, excluded,
+                        // or (QueueSched) saturated
+                        let eligible = (0..serving.len()).any(|r| {
+                            serving[r]
+                                && Some(r) != exclude
+                                && (policy != RoutePolicy::QueueSched || outstanding[r] < slots)
+                        });
+                        assert!(!eligible, "router starved an eligible slot ({policy:?})");
+                    }
+                }
+            }
+        }
     });
 }
 
