@@ -8,14 +8,19 @@
 #   make test        tier-1 verify (build + tests; engine-backed tests
 #                    auto-skip until `make artifacts` has run)
 #   make bench       regenerate every figure/table report
+#   make test-races  the asynchronous-RECLAIM interleaving suite in
+#                    isolation (coordinator::reclaim_races + the
+#                    router lifecycle proptests), honoring
+#                    PROPTEST_CASES (default 64 here; CI raises it)
 #   make check       the full CI gauntlet locally (fmt + clippy +
 #                    build + test + bench compile)
 
 PYTHON ?= python3
 MODELS ?= tiny small
 ARTIFACTS_DIR := rust/artifacts
+PROPTEST_CASES ?= 64
 
-.PHONY: artifacts build test bench check clean
+.PHONY: artifacts build test test-races bench check clean
 
 artifacts:
 	@for m in $(MODELS); do \
@@ -28,6 +33,10 @@ build:
 
 test:
 	cargo build --release && cargo test -q
+
+test-races:
+	PROPTEST_CASES=$(PROPTEST_CASES) cargo test --release --lib reclaim_races -- --nocapture
+	PROPTEST_CASES=$(PROPTEST_CASES) cargo test --release --test proptests prop_router -- --nocapture
 
 bench:
 	@for b in fig1b_scaling fig3a_allocation fig3b_rollout_size fig4_offpolicy \

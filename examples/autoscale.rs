@@ -63,6 +63,8 @@ fn main() -> anyhow::Result<()> {
         replica_slots: rt.manifest.decode_batch,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 71)?;
     let scale_cfg = AutoscaleCfg {

@@ -69,6 +69,8 @@ fn main() -> anyhow::Result<()> {
             replica_slots: rt.manifest.decode_batch,
             partial_migration: true,
             min_salvage_tokens: 1,
+            salvage_timeout: 0.5,
+            reclaim_in_place: true,
         };
         let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
         // identical skewed workload for both policies: mostly short
@@ -117,6 +119,8 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(), // static fleet (see examples/autoscale.rs)
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;

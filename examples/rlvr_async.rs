@@ -68,6 +68,8 @@ fn main() -> anyhow::Result<()> {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
     };
     let sync_mode = alpha == 0.0;

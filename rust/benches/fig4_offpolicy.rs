@@ -37,6 +37,8 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();

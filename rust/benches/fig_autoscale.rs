@@ -99,6 +99,11 @@ fn main() {
          shrink burns (next to) nothing on the partial-migration arm",
         elastic.salvaged_tokens, elastic.prefill_replay_tokens, elastic.wasted_tokens
     );
+    println!(
+        "drain blocked {:.1} virtual seconds across {} shrinks — the salvage is \
+         collector-absorbed, never a synchronous wait on the control path",
+        elastic.drain_virtual_secs, elastic.scale_downs
+    );
 
     // the trough-sized static fleet shows what the scaler saves us
     // from: the burst backlog it can never catch up on

@@ -112,7 +112,7 @@ fn main() {
 
     println!("== Migration off a 5x fail-slow replica: salvage vs from-scratch (4 replicas) ==\n");
     let mut table = Table::new(&[
-        "arm", "migrations", "salvaged tok", "wasted tok", "makespan s", "p99 lat s",
+        "arm", "migrations", "in-place", "salvaged tok", "wasted tok", "makespan s", "p99 lat s",
     ]);
     let mut wasted = Vec::new();
     for partial in [true, false] {
@@ -129,6 +129,7 @@ fn main() {
         table.row(&[
             if partial { "partial_migration".into() } else { "from-scratch".to_string() },
             r.migrations.to_string(),
+            r.reclaims_in_place.to_string(),
             format!("{:.0}", r.salvaged_tokens),
             format!("{:.0}", r.wasted_tokens),
             format!("{:.0}", r.makespan),

@@ -124,6 +124,13 @@ pub struct RollConfig {
     pub partial_migration: bool,
     /// shortest salvaged prefix worth resuming (tokens)
     pub min_salvage_tokens: usize,
+    /// seconds the fleet's collectors wait for a RECLAIM answer before
+    /// re-dispatching a parked generation from its last salvaged
+    /// prefix (bounds a wedged replica; never a caller-path wait)
+    pub salvage_timeout: f64,
+    /// saturated hang-watchdog migrations salvage + re-enter pool
+    /// admission (ReclaimInPlace) instead of being refused
+    pub reclaim_in_place: bool,
     /// elastic fleet: queue-driven replica autoscaling (`autoscale:
     /// {min_replicas, max_replicas, target_queue_depth, interval,
     /// cooldown, hysteresis}`; presence of the block enables it)
@@ -159,6 +166,8 @@ impl Default for RollConfig {
             rolling_update: true,
             partial_migration: true,
             min_salvage_tokens: 1,
+            salvage_timeout: 0.5,
+            reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
@@ -240,6 +249,12 @@ impl RollConfig {
         }
         if let Some(v) = num(&j, "min_salvage_tokens") {
             cfg.min_salvage_tokens = v as usize;
+        }
+        if let Some(v) = num(&j, "salvage_timeout") {
+            cfg.salvage_timeout = v;
+        }
+        if let Some(Json::Bool(b)) = j.get("reclaim_in_place") {
+            cfg.reclaim_in_place = *b;
         }
         if let Some(a) = j.get("autoscale") {
             // the block's presence turns the scaler on unless it says
@@ -331,6 +346,10 @@ impl RollConfig {
         );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be positive");
         anyhow::ensure!(self.min_salvage_tokens >= 1, "min_salvage_tokens must be >= 1");
+        anyhow::ensure!(
+            self.salvage_timeout.is_finite() && self.salvage_timeout > 0.0,
+            "salvage_timeout must be > 0 seconds"
+        );
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
         self.autoscale.validate()?;
         Ok(())
@@ -438,6 +457,25 @@ min_salvage_tokens: 16
         assert!(d.partial_migration);
         assert_eq!(d.min_salvage_tokens, 1);
         assert!(RollConfig::from_yaml("min_salvage_tokens: 0").is_err());
+    }
+
+    #[test]
+    fn parses_async_reclaim_keys() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+salvage_timeout: 1.5
+reclaim_in_place: false
+"#,
+        )
+        .unwrap();
+        assert!((cfg.salvage_timeout - 1.5).abs() < 1e-12);
+        assert!(!cfg.reclaim_in_place);
+        // defaults: 500ms collector-side resolution, in-place on
+        let d = RollConfig::default();
+        assert!((d.salvage_timeout - 0.5).abs() < 1e-12);
+        assert!(d.reclaim_in_place);
+        assert!(RollConfig::from_yaml("salvage_timeout: 0").is_err());
+        assert!(RollConfig::from_yaml("salvage_timeout: -1").is_err());
     }
 
     #[test]

@@ -25,11 +25,17 @@
 //!     AsyncController drives between training steps) and virtual time
 //!     (the sim) share one implementation.
 //!
-//! Scale-*down* is safe because of the PR 3 salvage machinery:
-//! [`LlmProxyPool::retire_replica`] RECLAIMs the victim's in-flight
-//! generations and re-dispatches them to survivors as resumed tasks, so
-//! shrinking the fleet burns no decoded tokens (the `TokenLedger`
-//! stays clean) and no caller observes the drain.
+//! Scale-*down* is safe — and free on the control path — because of
+//! the asynchronous salvage machinery: [`LlmProxyPool::retire_replica`]
+//! parks the victim's in-flight generations for RECLAIM and returns
+//! immediately; the victim's own completion collector absorbs the
+//! salvage answers and re-dispatches resumed tasks to survivors (or
+//! delivers results that finished inside the drain window, exactly
+//! once). Shrinking the fleet burns no decoded tokens (the
+//! `TokenLedger` stays clean), no caller observes the drain, and
+//! `tick` never stalls the training thread on a drain — there is no
+//! caller-side salvage wait anywhere (`retire_replica` is O(lock), not
+//! O(SALVAGE_WAIT x in-flight)).
 
 use std::time::Instant;
 
@@ -238,7 +244,10 @@ impl Autoscaler {
     /// Wall-clock control step against the real pool: sample signals,
     /// decide, apply. The AsyncController calls this between training
     /// steps in async mode; it is cheap when the interval has not
-    /// elapsed. Returns what was decided (after gating).
+    /// elapsed, and a Shrink is cheap too — `retire_idlest` only flips
+    /// the slot to draining and parks its work for collector-absorbed
+    /// salvage, so the training thread never waits out a drain.
+    /// Returns what was decided (after gating).
     pub fn tick(&mut self, pool: &LlmProxyPool) -> ScaleDecision {
         let now = self.origin.elapsed().as_secs_f64();
         // check the interval BEFORE sampling: autoscale_signals()

@@ -21,11 +21,22 @@
 //!      replica's command channel — sync mode remains strictly
 //!      on-policy.
 //!   3. *Prefix-salvaging migration* (`partial_migration`, the
-//!      fail-slow story of Section 5.2.2): a hung generation is
-//!      RECLAIMed from its replica — receiving the tokens decoded so
-//!      far — and resubmitted elsewhere as a resumed task on the same
-//!      reply channel. Salvages shorter than `min_salvage_tokens` (or
-//!      any salvage when the knob is off) are discarded and counted as
+//!      fail-slow story of Section 5.2.2), now **fully asynchronous**:
+//!      `migrate`/`retire_replica`/`kill_replica` park the in-flight
+//!      entry in a *PendingSalvage* table and return immediately — no
+//!      caller-side salvage wait. The RECLAIM answer rides the
+//!      replica's own completion channel, so the per-replica collector
+//!      resolves each parked entry exactly once: either a [`Salvage`]
+//!      arrives (the task re-dispatches to a survivor, resumed from
+//!      its decoded prefix) or the generation's own `Done` beats it
+//!      (the finished result is delivered to the caller with zero
+//!      re-decode — the drain race is closed by channel FIFO order,
+//!      not by timing). When every peer's decode window is full, the
+//!      hang watchdog's migrate degrades to *ReclaimInPlace*
+//!      (`reclaim_in_place`): the hung generation is salvaged and
+//!      re-enters pool admission instead of piling onto a saturated
+//!      survivor. Salvages shorter than `min_salvage_tokens` (or any
+//!      salvage when the knob is off) are discarded and counted as
 //!      `wasted_tokens`; reused prefixes count as `salvaged_tokens` in
 //!      the pool-shared [`TokenLedger`].
 //!   4. *Elastic lifecycle* (`spawn → serving → draining → retired`,
@@ -34,14 +45,20 @@
 //!      version, registers its collector and histograms, and opens it
 //!      to routing — reusing a retired slot when one exists;
 //!      [`retire_replica`] marks the slot *draining* (the `Router`
-//!      stops selecting it immediately), RECLAIM-salvages its
-//!      in-flight generations, joins the loop gracefully, re-dispatches
-//!      the salvaged work to survivors as resumed tasks, and archives
-//!      the occupant's [`ReplicaReport`]. Slot state is
-//!      generation-counted: a reused slot bumps its generation, resets
-//!      its histograms/routed counts, and clears the router's EWMA
-//!      estimate (`Router::reset_replica`), so a fresh occupant never
-//!      inherits its predecessor's statistics.
+//!      stops selecting it immediately), parks its in-flight
+//!      generations for asynchronous salvage, orders the loop to stop,
+//!      and returns — the slot's own collector absorbs the salvage
+//!      answers, re-dispatches the work to survivors as resumed tasks,
+//!      joins the loop once its channel disconnects, and archives the
+//!      occupant's [`ReplicaReport`] (phase → retired). `retire_idlest`
+//!      is salvage-cost-aware: among equally idle replicas it drains
+//!      the one whose in-flight work carries the fewest
+//!      already-salvaged prefix tokens (the caller-side estimate of
+//!      the KV replay bill). Slot state is generation-counted: a
+//!      reused slot bumps its generation, resets its histograms/routed
+//!      counts, and clears the router's EWMA estimate
+//!      (`Router::reset_replica`), so a fresh occupant never inherits
+//!      its predecessor's statistics.
 //!
 //! [`add_replica`]: LlmProxyPool::add_replica
 //! [`retire_replica`]: LlmProxyPool::retire_replica
@@ -63,7 +80,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -73,23 +90,19 @@ use anyhow::Result;
 
 use crate::coordinator::autoscaler::PoolSignals;
 use crate::coordinator::llm_proxy::{
-    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
-    TokenStats,
+    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyEvent, ProxyReport, Salvage,
+    TokenLedger, TokenStats,
 };
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
 use crate::metrics::{Histogram, Table};
 
-/// Longest the pool waits for a RECLAIM reply. A healthy (even
-/// fail-slow) loop answers between decode steps (~ms); a killed loop's
-/// reply channel disconnects immediately; only a truly wedged thread
-/// runs out the clock, in which case migration falls back to
-/// resubmitting whatever prefix the pool already holds (the wedged
-/// loop's late answer is counted wasted proxy-side). Kept short
-/// because `migrate` runs on the RolloutEngine's event thread: the
-/// worst-case stall per hung generation is one decode-step-scale
-/// wait, not a long freeze. A fully asynchronous reclaim is a ROADMAP
-/// follow-on.
-const SALVAGE_WAIT: Duration = Duration::from_millis(50);
+/// Collector heartbeat: how often an idle per-replica collector wakes
+/// to expire parked salvages whose replica never answered (see
+/// `PoolCfg::salvage_timeout`). There is NO caller-side salvage wait
+/// anywhere — `migrate`/`retire_replica`/`kill_replica` park the entry
+/// and return; only the collectors ever touch this clock, and only
+/// while `Shared::parked_count` is non-zero.
+const SALVAGE_TICK: Duration = Duration::from_millis(5);
 
 /// Spawns a replica for `(slot, generation)` — the hook that makes
 /// `add_replica` possible after the pool's construction arguments are
@@ -118,6 +131,21 @@ pub struct PoolCfg {
     /// shortest salvage worth resuming; shorter prefixes are dropped
     /// (and counted wasted) rather than carried
     pub min_salvage_tokens: usize,
+    /// seconds a parked salvage may wait for its replica's RECLAIM
+    /// answer before the *collector* gives up and re-dispatches the
+    /// task from its last salvaged prefix. This is the collector-side
+    /// resolution timeout that replaced the old caller-side
+    /// SALVAGE_WAIT: it bounds how long a wedged replica can hold a
+    /// PendingSalvage entry, never how long `migrate`/`retire_replica`
+    /// take (those return immediately). A wedged loop's late answer is
+    /// counted wasted when it finally arrives.
+    pub salvage_timeout: f64,
+    /// when a hung generation has nowhere to move (every peer's decode
+    /// window is full), RECLAIM it in place: salvage the prefix and
+    /// re-enter pool admission — pause/rebalance without reserving a
+    /// saturated survivor. false = a saturated migrate is refused and
+    /// the watchdog simply re-fires later.
+    pub reclaim_in_place: bool,
 }
 
 impl PoolCfg {
@@ -129,6 +157,8 @@ impl PoolCfg {
             replica_slots,
             partial_migration: true,
             min_salvage_tokens: 1,
+            salvage_timeout: 0.5,
+            reclaim_in_place: true,
         }
     }
 }
@@ -152,6 +182,12 @@ enum Phase {
 struct Pending {
     pool_id: u64,
     task: GenerationTask,
+    /// placement preference, not a hard constraint: a task salvaged
+    /// off a (presumed hung) replica records it here so the drain
+    /// tries every other replica first — being stuck behind a hung
+    /// replica is strictly worse than a deep healthy queue — and only
+    /// returns to the source when nothing else is routable.
+    avoid: Option<usize>,
 }
 
 /// A request dispatched to a replica. The task (prompt + current
@@ -164,6 +200,50 @@ struct InFlight {
     migrations: u32,
     /// dispatch wall time — feeds the router's EWMA token-rate estimate
     dispatched: Instant,
+}
+
+/// Where a parked task goes once its RECLAIM resolves with a salvage
+/// (or times out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SalvageDest {
+    /// migration/drain: re-dispatch to a survivor, avoiding the source
+    Migrate,
+    /// ReclaimInPlace: re-enter pool-side admission (pause/rebalance)
+    /// — chosen when every peer's decode window is already full
+    Requeue,
+}
+
+/// An [`InFlight`] entry parked in the *PendingSalvage* table: its
+/// RECLAIM is in flight on the replica's completion channel and the
+/// replica's collector owns the resolution. The entry KEEPS its
+/// `by_inner` registration, so a completion racing the reclaim
+/// resolves the parked entry — delivered to the caller exactly once,
+/// with zero re-decode — instead of being dropped as stale (the old
+/// drain race, closed by construction).
+struct Parked {
+    replica: usize,
+    inner_id: u64,
+    task: GenerationTask,
+    migrations: u32,
+    /// original dispatch time (feeds the EWMA when the race resolves
+    /// as a completion)
+    dispatched: Instant,
+    /// when the collector stops waiting for the replica's answer and
+    /// re-dispatches from the last salvaged prefix
+    deadline: Instant,
+    dest: SalvageDest,
+}
+
+/// How a parked salvage resolved. Exactly one of these reaches
+/// `Shared::resolve_parked` per parked entry (late answers for
+/// already-resolved ids are counted wasted and dropped).
+enum Resolution {
+    /// the generation finished inside the reclaim window (drain race)
+    Completed(GenResult),
+    /// the replica handed back its decoded progress
+    Salvaged(Salvage),
+    /// the replica is gone or ran out `salvage_timeout`
+    Lost,
 }
 
 fn depth_hist() -> Histogram {
@@ -187,8 +267,18 @@ struct PoolState {
     queue: VecDeque<Pending>,
     /// pool request id -> live request
     inflight: HashMap<u64, InFlight>,
-    /// per replica: inner (proxy) id -> pool id. A completion whose
-    /// inner id is absent here was migrated or aborted — dropped.
+    /// PendingSalvage: pool id -> entry parked for asynchronous
+    /// RECLAIM, resolved exactly once by its replica's collector
+    parked: HashMap<u64, Parked>,
+    /// tombstones for parked entries killed by `abort`: (replica,
+    /// inner id) -> prefix tokens already counted wasted at the abort.
+    /// The in-flight RECLAIM answer, if it ever arrives, then bills
+    /// only the *new* progress — and a wedged replica that never
+    /// answers leaks nothing, because the prefix was billed up front.
+    aborted_parked: HashMap<(usize, u64), usize>,
+    /// per replica: inner (proxy) id -> pool id. Live AND parked
+    /// requests are registered; a completion whose inner id is absent
+    /// here was aborted — dropped as stale.
     by_inner: Vec<HashMap<u64, u64>>,
     outstanding: Vec<usize>,
     /// pool-wide suspend (sync mode): requests pool-queue until resume
@@ -200,6 +290,9 @@ struct PoolState {
     replica_version: Vec<u64>,
     routed: Vec<u64>,
     migrated: u64,
+    /// hung generations RECLAIMed in place (salvaged + re-queued
+    /// instead of moved) because every peer's window was full
+    reclaimed_in_place: u64,
     /// migrations/resubmissions that carried a salvaged prefix
     resumed: u64,
     /// rolling-broadcast waves completed by the sync agent
@@ -219,7 +312,7 @@ struct PoolState {
     queue_window: Histogram,
     /// master clones of the per-replica collector channels; taken at
     /// shutdown/retirement so the collectors can observe disconnection
-    completion_tx: Vec<Option<Sender<GenResult>>>,
+    completion_tx: Vec<Option<Sender<ProxyEvent>>>,
     /// when the slot's current occupant started serving
     serve_start: Vec<Option<Instant>>,
     /// serving seconds already banked for the current occupant (killed
@@ -260,6 +353,20 @@ impl PoolState {
         }
         self.served[r]
     }
+
+    /// Caller-side estimate of how expensive replica `r` would be to
+    /// drain: the already-salvaged prefix tokens its in-flight (and
+    /// parked) work carries. Fresh decode on the replica is invisible
+    /// until a RECLAIM answers, so the carried prefix length is the
+    /// best static proxy for the KV replay bill a retire would incur.
+    fn salvage_cost(&self, r: usize) -> usize {
+        self.inflight
+            .values()
+            .filter(|e| e.replica == r)
+            .map(|e| e.task.prefix.len())
+            .chain(self.parked.values().filter(|p| p.replica == r).map(|p| p.task.prefix.len()))
+            .sum()
+    }
 }
 
 /// State shared between callers, collectors, and the sync agent.
@@ -269,6 +376,17 @@ struct Shared {
     ledger: Arc<TokenLedger>,
     partial_migration: bool,
     min_salvage_tokens: usize,
+    /// collector-side resolution timeout for parked salvages
+    salvage_timeout: Duration,
+    /// saturated migrations salvage-and-requeue instead of refusing
+    reclaim_in_place: bool,
+    /// live count of PendingSalvage entries — the lock-free gate that
+    /// lets idle collectors skip the expiry sweep entirely
+    parked_count: AtomicUsize,
+    /// proxy handles of retiring slots; the slot's collector joins the
+    /// loop and archives the report once its channel disconnects.
+    /// Lock order: retiring may be taken before state, never after.
+    retiring: Mutex<HashMap<usize, LlmProxy>>,
 }
 
 impl Shared {
@@ -282,16 +400,15 @@ impl Shared {
         let mut r = r;
         loop {
             let Some(tx) = st.completion_tx[r].as_ref().cloned() else {
-                // no collector channel. A *retired* slot means the
-                // target was drained between selection and dispatch
-                // (migrate picks its target before the unlocked reclaim
-                // wait) — fail over exactly like a dead replica; the
-                // retired slot is suspended in `loads`, so the router
-                // cannot hand it back. A non-retired slot with no
+                // no collector channel. A *retired or draining* slot
+                // means the target drained out between selection and
+                // this dispatch — fail over exactly like a dead
+                // replica; such slots are suspended in `loads`, so the
+                // router cannot hand them back. A serving slot with no
                 // channel means the pool is tearing down: drop the
                 // request — counting its carried prefix — so the
                 // caller observes disconnection
-                if st.phase[r] == Phase::Retired {
+                if matches!(st.phase[r], Phase::Retired | Phase::Draining) {
                     let loads = st.loads();
                     match st.router.route_excluding(&loads, Some(r)) {
                         Some(next) => {
@@ -364,7 +481,11 @@ impl Shared {
         }
     }
 
-    /// Move pool-queued requests onto replicas while the router allows.
+    /// Move pool-queued requests onto replicas while the router
+    /// allows. A request's `avoid` preference is honored first and
+    /// relaxed only when no other replica is routable — a salvaged
+    /// task returns to its hung source replica as a last resort, never
+    /// as the first pick.
     fn drain(&self, st: &mut PoolState) {
         if st.none_serviceable() {
             // drop: callers observe disconnection; carried prefixes are
@@ -376,27 +497,27 @@ impl Shared {
         }
         while !st.queue.is_empty() {
             let loads = st.loads();
-            let Some(r) = st.router.route(&loads) else { break };
+            let avoid = st.queue.front().unwrap().avoid;
+            let picked = match st.router.route_excluding(&loads, avoid) {
+                Some(r) => Some(r),
+                // the avoided replica is the only routable one: better
+                // there than starving in the queue
+                None if avoid.is_some() => st.router.route(&loads),
+                None => None,
+            };
+            let Some(r) = picked else { break };
             let p = st.queue.pop_front().unwrap();
             self.dispatch(st, r, p, 0);
         }
     }
 
-    /// Fold a RECLAIM outcome into the task ahead of resubmission.
+    /// Fold a RECLAIM answer into the task ahead of resubmission.
     /// With `partial_migration` on and the salvage at or above the
     /// floor, the decoded tokens become the task's resume prefix
     /// (counted `salvaged`); otherwise the newly decoded progress is
     /// burned (counted `wasted`), and with the knob off the task is
-    /// reset to a bare from-scratch prompt. A reclaim error (replica
-    /// gone or wedged) teaches us nothing — the task keeps whatever
-    /// prefix it already had, and the dead loop's own teardown
-    /// accounting owns the waste.
-    fn absorb_salvage(
-        &self,
-        task: &mut GenerationTask,
-        salvage: Result<Salvage, RecvTimeoutError>,
-    ) {
-        let Ok(s) = salvage else { return };
+    /// reset to a bare from-scratch prompt.
+    fn absorb_salvage(&self, task: &mut GenerationTask, s: Salvage) {
         let old = task.prefix.len();
         if self.partial_migration
             && s.tokens.len() >= self.min_salvage_tokens
@@ -415,53 +536,310 @@ impl Shared {
             }
         }
     }
-}
 
-/// Per-replica completion collector: decrements load accounting, feeds
-/// the router's EWMA token-rate estimate, forwards the result to the
-/// original caller (rewriting the id to the pool id), and re-dispatches
-/// pool-queued work into the freed slot.
-fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<GenResult>) {
-    while let Ok(res) = rx.recv() {
-        let entry = {
-            let mut st = shared.state.lock().unwrap();
-            let Some(pool_id) = st.by_inner[r].remove(&res.id) else {
-                // stale: the request was migrated or aborted after it
-                // finished — the racing completion is dropped, and its
-                // decoded tokens are burned (the resumed attempt, if
-                // any, re-decodes them)
-                shared.ledger.add_wasted(res.tokens.len() as u64);
-                continue;
-            };
-            st.outstanding[r] = st.outstanding[r].saturating_sub(1);
-            let entry = st.inflight.remove(&pool_id);
-            if let Some(e) = &entry {
-                // feed the router only the tokens THIS replica decoded:
-                // crediting a resumed task's salvaged prefix over the
-                // time since re-dispatch would inflate the EWMA rate of
-                // whichever replica absorbs migrated work
-                let fresh = res.tokens.len().saturating_sub(e.task.prefix.len());
+    /// Park `pool_id`'s in-flight entry in the PendingSalvage table
+    /// and send its RECLAIM. Returns false when the id is not in
+    /// flight. Never blocks: the reclaim answer — or the generation's
+    /// own completion, whichever the replica emits first — resolves
+    /// the entry on the replica's collector; a loop that is already
+    /// gone resolves immediately (re-dispatch from the last salvaged
+    /// prefix). Caller holds the state lock.
+    fn park_for_reclaim(&self, st: &mut PoolState, pool_id: u64, dest: SalvageDest) -> bool {
+        let Some(entry) = st.inflight.remove(&pool_id) else { return false };
+        let InFlight { replica, inner_id, task, migrations, dispatched } = entry;
+        // the answer rides the replica's own completion channel, so it
+        // is totally FIFO-ordered against the request's Done event
+        let reply = st.completion_tx[replica].as_ref().cloned();
+        st.parked.insert(
+            pool_id,
+            Parked {
+                replica,
+                inner_id,
+                task,
+                migrations,
+                dispatched,
+                deadline: Instant::now() + self.salvage_timeout,
+                dest,
+            },
+        );
+        self.parked_count.fetch_add(1, Ordering::Relaxed);
+        let delivered = match reply {
+            Some(tx) => st.clients[replica].reclaim_via(inner_id, tx),
+            None => false,
+        };
+        if !delivered {
+            // the loop is gone: no answer will ever come
+            self.resolve_parked(st, pool_id, Resolution::Lost);
+        }
+        true
+    }
+
+    /// Resolve a parked salvage exactly once: deliver the completed
+    /// result (drain race — zero re-decode, nothing wasted), or fold
+    /// the salvage into the task and re-dispatch it by its
+    /// destination. Returns a caller reply to send after the state
+    /// lock drops (`Completed` resolutions only). A resolution for an
+    /// id no longer parked (expired, aborted) counts a late salvage's
+    /// tokens wasted and is otherwise a no-op — double resolution is
+    /// structurally impossible.
+    fn resolve_parked(
+        &self,
+        st: &mut PoolState,
+        pool_id: u64,
+        how: Resolution,
+    ) -> Option<(Sender<ProxyEvent>, GenResult)> {
+        let Some(p) = st.parked.remove(&pool_id) else {
+            if let Resolution::Salvaged(s) = how {
+                // expired or aborted before the answer arrived: the
+                // decoded progress has nowhere to go (for an expired
+                // entry this overcounts the re-used prefix — the
+                // conservative bill a wedged replica pays)
+                self.ledger.add_wasted(s.tokens.len() as u64);
+            }
+            return None;
+        };
+        self.parked_count.fetch_sub(1, Ordering::Relaxed);
+        st.by_inner[p.replica].remove(&p.inner_id);
+        st.outstanding[p.replica] = st.outstanding[p.replica].saturating_sub(1);
+        let mut task = p.task;
+        match how {
+            Resolution::Completed(res) => {
+                // the generation finished inside the reclaim window:
+                // deliver it once, count it completed, re-decode nothing
+                let fresh = res.tokens.len().saturating_sub(task.prefix.len());
                 if fresh > 0 {
-                    st.router
-                        .on_completion(r, fresh as f64, e.dispatched.elapsed().as_secs_f64());
+                    st.router.on_completion(
+                        p.replica,
+                        fresh as f64,
+                        p.dispatched.elapsed().as_secs_f64(),
+                    );
+                }
+                self.drain(st);
+                return Some((task.reply, GenResult { id: pool_id, ..res }));
+            }
+            Resolution::Salvaged(s) => self.absorb_salvage(&mut task, s),
+            Resolution::Lost => {} // keep whatever prefix the task carries
+        }
+        let migrations = p.migrations + 1;
+        // either way the task prefers to land anywhere but the replica
+        // it was just reclaimed from (drain relaxes this only when
+        // nothing else is routable)
+        let req = Pending { pool_id, task, avoid: Some(p.replica) };
+        match p.dest {
+            SalvageDest::Requeue => {
+                st.reclaimed_in_place += 1;
+                st.queue.push_back(req);
+                self.drain(st);
+            }
+            SalvageDest::Migrate => {
+                let loads = st.loads();
+                match st.router.route_excluding(&loads, Some(p.replica)) {
+                    Some(nr) => {
+                        self.dispatch(st, nr, req, migrations);
+                        st.migrated += 1;
+                    }
+                    None if st.none_serviceable() => {
+                        // drop: caller disconnects with the fleet
+                        self.ledger.add_wasted(req.task.prefix.len() as u64);
+                    }
+                    None => {
+                        // no survivor outside the source right now:
+                        // queue it (keeping the avoid preference) and
+                        // drain — with only the source still serving,
+                        // staying put beats stranding the task until
+                        // the next unrelated completion
+                        st.queue.push_back(req);
+                        self.drain(st);
+                    }
                 }
             }
-            shared.drain(&mut st);
-            entry.map(|e| (pool_id, e.task.reply))
-        };
-        if let Some((pool_id, reply)) = entry {
-            let _ = reply.send(GenResult {
-                id: pool_id,
-                tokens: res.tokens,
-                logps: res.logps,
-                version: res.version,
-                prefix_version: res.prefix_version,
-            });
+        }
+        None
+    }
+}
+
+/// Per-replica completion collector: the single resolver for
+/// everything replica `r` emits. Completions decrement load
+/// accounting, feed the router's EWMA token-rate estimate, and are
+/// forwarded to the original caller (rewriting the id to the pool id);
+/// RECLAIM answers resolve PendingSalvage entries — re-dispatching
+/// resumed tasks to survivors, or (when the generation finished inside
+/// the reclaim window) delivering the completed result with zero
+/// re-decode. Between events it expires parked entries whose replica
+/// never answered, and when its channel disconnects it finalizes a
+/// pending retirement (join the loop, archive the report, open the
+/// slot).
+fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<ProxyEvent>) {
+    loop {
+        match rx.recv_timeout(SALVAGE_TICK) {
+            Ok(ProxyEvent::Done(res)) => {
+                let deliver = {
+                    let mut st = shared.state.lock().unwrap();
+                    collector_on_done(&shared, &mut st, r, res)
+                };
+                if let Some((reply, res)) = deliver {
+                    let _ = reply.send(ProxyEvent::Done(res));
+                }
+            }
+            Ok(ProxyEvent::Reclaimed { id, salvage }) => {
+                let deliver = {
+                    let mut st = shared.state.lock().unwrap();
+                    collector_on_reclaimed(&shared, &mut st, r, id, salvage)
+                };
+                if let Some((reply, res)) = deliver {
+                    let _ = reply.send(ProxyEvent::Done(res));
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.parked_count.load(Ordering::Relaxed) == 0 {
+                    continue; // nothing parked fleet-wide: stay cheap
+                }
+                let now = Instant::now();
+                let mut st = shared.state.lock().unwrap();
+                let overdue: Vec<u64> = st
+                    .parked
+                    .iter()
+                    .filter(|(_, p)| p.replica == r && now >= p.deadline)
+                    .map(|(&pid, _)| pid)
+                    .collect();
+                for pid in overdue {
+                    // the replica never answered (wedged mid-decode):
+                    // give up and re-dispatch from the last salvaged
+                    // prefix; a late answer is counted wasted on
+                    // arrival
+                    shared.resolve_parked(&mut st, pid, Resolution::Lost);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // the loop has exited and every sender is gone. A crashed loop may
+    // have dropped unanswered reclaims on the floor — resolve any
+    // leftovers so no PendingSalvage entry leaks
+    {
+        let mut st = shared.state.lock().unwrap();
+        let leftovers: Vec<u64> = st
+            .parked
+            .iter()
+            .filter(|(_, p)| p.replica == r)
+            .map(|(&pid, _)| pid)
+            .collect();
+        for pid in leftovers {
+            shared.resolve_parked(&mut st, pid, Resolution::Lost);
+        }
+        // tombstones of aborted parked entries on this replica can
+        // never be answered now; their prefixes were billed at the
+        // abort, so they are just stale memory
+        st.aborted_parked.retain(|&(rep, _), _| rep != r);
+    }
+    finalize_retirement(&shared, r);
+}
+
+/// A completion from replica `r`: resolve the parked entry it raced
+/// (if any) or the live in-flight entry. Returns the caller delivery
+/// to perform after the state lock drops.
+fn collector_on_done(
+    shared: &Arc<Shared>,
+    st: &mut PoolState,
+    r: usize,
+    res: GenResult,
+) -> Option<(Sender<ProxyEvent>, GenResult)> {
+    let Some(&pool_id) = st.by_inner[r].get(&res.id) else {
+        // stale: the request was aborted after it finished — the
+        // racing completion is dropped and its decoded tokens burned.
+        // If the abort hit a PARKED entry whose generation finished
+        // inside the reclaim window, the salvaged prefix was already
+        // billed at the abort: consume the tombstone so only the fresh
+        // tokens are charged here
+        let carried = st.aborted_parked.remove(&(r, res.id)).unwrap_or(0);
+        shared.ledger.add_wasted(res.tokens.len().saturating_sub(carried) as u64);
+        return None;
+    };
+    if st.parked.contains_key(&pool_id) {
+        // the drain race, resolved the right way around: the
+        // generation finished inside the migrate/retire window
+        return shared.resolve_parked(st, pool_id, Resolution::Completed(res));
+    }
+    st.by_inner[r].remove(&res.id);
+    st.outstanding[r] = st.outstanding[r].saturating_sub(1);
+    let entry = st.inflight.remove(&pool_id);
+    if let Some(e) = &entry {
+        // feed the router only the tokens THIS replica decoded:
+        // crediting a resumed task's salvaged prefix over the time
+        // since re-dispatch would inflate the EWMA rate of whichever
+        // replica absorbs migrated work
+        let fresh = res.tokens.len().saturating_sub(e.task.prefix.len());
+        if fresh > 0 {
+            st.router.on_completion(r, fresh as f64, e.dispatched.elapsed().as_secs_f64());
+        }
+    }
+    shared.drain(st);
+    entry.map(|e| (e.task.reply, GenResult { id: pool_id, ..res }))
+}
+
+/// A RECLAIM answer from replica `r`, keyed by the *inner* id it was
+/// issued against.
+fn collector_on_reclaimed(
+    shared: &Arc<Shared>,
+    st: &mut PoolState,
+    r: usize,
+    inner_id: u64,
+    salvage: Option<Salvage>,
+) -> Option<(Sender<ProxyEvent>, GenResult)> {
+    match st.by_inner[r].get(&inner_id).copied() {
+        Some(pool_id) if st.parked.contains_key(&pool_id) => {
+            let how = match salvage {
+                Some(s) => Resolution::Salvaged(s),
+                // parked yet unknown at the replica without a prior
+                // Done on this channel: should not happen (FIFO), but
+                // a lost answer must still re-dispatch the task
+                None => Resolution::Lost,
+            };
+            shared.resolve_parked(st, pool_id, how)
+        }
+        _ => {
+            // already resolved: the Done beat this answer on the same
+            // channel, or the entry expired / was aborted. A late
+            // salvage has nowhere to go — but an aborted entry's
+            // prefix was billed at the abort, so its tombstone limits
+            // this to the NEW progress; an expired entry pays the
+            // documented conservative overcount. The tombstone is
+            // consumed on ANY answer (a None answer is the end of the
+            // story too — its Done, if one existed, ran just above)
+            let carried = st.aborted_parked.remove(&(r, inner_id)).unwrap_or(0);
+            if let Some(s) = salvage {
+                shared.ledger.add_wasted(s.tokens.len().saturating_sub(carried) as u64);
+            }
+            None
         }
     }
 }
 
-fn spawn_collector(shared: &Arc<Shared>, r: usize, rx: Receiver<GenResult>) -> JoinHandle<()> {
+/// Collector exit hook: if slot `r` was retiring, join its loop (the
+/// channel disconnect proves it exited), archive the occupant's
+/// report, and open the slot for reuse. The `retiring` lock is held
+/// across the archive so `pending_retirements` observes the slot until
+/// the report lands.
+fn finalize_retirement(shared: &Arc<Shared>, r: usize) {
+    let mut retiring = shared.retiring.lock().unwrap();
+    let Some(proxy) = retiring.remove(&r) else { return };
+    let proxy_report = proxy.shutdown().unwrap_or_default();
+    let mut st = shared.state.lock().unwrap();
+    let serve_secs = st.close_serve_clock(r);
+    st.retired.push(ReplicaReport {
+        utilization: proxy_report.mean_occupancy(st.slots),
+        proxy: proxy_report,
+        routed: st.routed[r],
+        queue_depth: st.depth[r].clone(),
+        util_hist: st.util[r].clone(),
+        slot: r,
+        generation: st.generation[r],
+        serve_secs,
+    });
+    st.phase[r] = Phase::Retired;
+}
+
+fn spawn_collector(shared: &Arc<Shared>, r: usize, rx: Receiver<ProxyEvent>) -> JoinHandle<()> {
     let sh = shared.clone();
     std::thread::Builder::new()
         .name(format!("fleet-collect-{r}"))
@@ -540,6 +918,9 @@ pub struct PoolReport {
     /// occupants drained out by `retire_replica`, in retirement order
     pub retired: Vec<ReplicaReport>,
     pub migrated: u64,
+    /// hung generations RECLAIMed in place (salvaged + re-queued)
+    /// because every peer's decode window was full at migrate time
+    pub reclaimed_in_place: u64,
     /// migrations/resubmissions dispatched with a salvaged prefix
     pub resumed: u64,
     pub sync_waves: u64,
@@ -664,6 +1045,10 @@ impl LlmProxyPool {
     ) -> Result<Self> {
         anyhow::ensure!(cfg.num_replicas > 0, "num_replicas must be > 0");
         anyhow::ensure!(cfg.replica_slots > 0, "replica_slots must be > 0");
+        anyhow::ensure!(
+            cfg.salvage_timeout.is_finite() && cfg.salvage_timeout > 0.0,
+            "salvage_timeout must be > 0 seconds"
+        );
         let ledger = Arc::new(TokenLedger::default());
         let latest = Arc::new(Mutex::new((init_weights.clone(), 0u64)));
         let replicas: Vec<LlmProxy> = (0..cfg.num_replicas)
@@ -727,6 +1112,8 @@ impl LlmProxyPool {
             generation: vec![0; n],
             queue: VecDeque::new(),
             inflight: HashMap::new(),
+            parked: HashMap::new(),
+            aborted_parked: HashMap::new(),
             by_inner: vec![HashMap::new(); n],
             outstanding: vec![0; n],
             pool_suspended: false,
@@ -734,6 +1121,7 @@ impl LlmProxyPool {
             replica_version: vec![0; n],
             routed: vec![0; n],
             migrated: 0,
+            reclaimed_in_place: 0,
             resumed: 0,
             sync_waves: 0,
             grown: 0,
@@ -752,6 +1140,10 @@ impl LlmProxyPool {
             ledger,
             partial_migration: cfg.partial_migration,
             min_salvage_tokens: cfg.min_salvage_tokens.max(1),
+            salvage_timeout: Duration::from_secs_f64(cfg.salvage_timeout.max(1e-3)),
+            reclaim_in_place: cfg.reclaim_in_place,
+            parked_count: AtomicUsize::new(0),
+            retiring: Mutex::new(HashMap::new()),
         });
         let mut collectors = Vec::with_capacity(n);
         for (r, rx) in completion_rx.into_iter().enumerate() {
@@ -844,6 +1236,9 @@ impl LlmProxyPool {
                 st.phase[slot] = Phase::Serving;
                 st.generation[slot] = generation;
                 st.by_inner[slot].clear();
+                // the new occupant's inner ids restart from 1: stale
+                // tombstones from the previous occupant must not match
+                st.aborted_parked.retain(|&(rep, _), _| rep != slot);
                 st.outstanding[slot] = 0;
                 st.replica_version[slot] = version;
                 st.routed[slot] = 0;
@@ -877,23 +1272,34 @@ impl LlmProxyPool {
             if fresh {
                 cols.push(Some(handle));
             } else {
-                cols[slot] = Some(handle);
+                // the previous occupant's collector archived the slot
+                // (phase Retired implies it is past its finalization)
+                // — join it before installing the successor's
+                if let Some(old) = cols[slot].replace(handle) {
+                    let _ = old.join();
+                }
             }
         }
         Ok(slot)
     }
 
-    /// SHRINK: drain replica `r` out of the fleet. The slot flips to
-    /// *draining* (the router stops selecting it instantly), its
-    /// in-flight generations are RECLAIM-salvaged, the loop is joined
-    /// gracefully (its report archived), and the salvaged work is
-    /// re-dispatched to survivors as resumed tasks on their original
-    /// reply channels — scale-down burns no decoded tokens. Returns
-    /// false when `r` is not serving or is the last serving replica
-    /// (the fleet never drains itself to zero).
+    /// SHRINK: drain replica `r` out of the fleet — without ever
+    /// blocking the caller. The slot flips to *draining* (the router
+    /// stops selecting it instantly), its in-flight generations are
+    /// parked in the PendingSalvage table with their RECLAIMs sent,
+    /// the loop is ordered to stop (commands are FIFO, so it answers
+    /// every reclaim on the way out), and the call returns. The slot's
+    /// collector then resolves each entry — re-dispatching resumed
+    /// tasks to survivors on their original reply channels, or
+    /// delivering a result that finished inside the drain window
+    /// exactly once — joins the loop, archives the occupant's
+    /// [`ReplicaReport`], and opens the slot (phase → retired).
+    /// Scale-down burns no decoded tokens and stalls no event thread.
+    /// Returns false when `r` is not serving or is the last serving
+    /// replica (the fleet never drains itself to zero).
     pub fn retire_replica(&self, r: usize) -> bool {
         let _guard = self.lifecycle.lock().unwrap();
-        let (client, victims) = {
+        {
             let mut st = self.shared.state.lock().unwrap();
             if r >= st.phase.len() || st.phase[r] != Phase::Serving {
                 return false;
@@ -902,98 +1308,68 @@ impl LlmProxyPool {
                 return false; // never drain the last serving replica
             }
             st.phase[r] = Phase::Draining;
-            let ids: Vec<u64> = st
-                .inflight
-                .iter()
-                .filter(|(_, e)| e.replica == r)
-                .map(|(&pid, _)| pid)
-                .collect();
-            let victims: Vec<(u64, InFlight)> = ids
-                .into_iter()
-                .map(|pid| {
-                    let e = st.inflight.remove(&pid).unwrap();
-                    st.by_inner[r].remove(&e.inner_id);
-                    st.outstanding[r] = st.outstanding[r].saturating_sub(1);
-                    (pid, e)
-                })
-                .collect();
-            (st.clients[r].clone(), victims)
-        };
-        // enqueue every reclaim BEFORE the shutdown so the loop answers
-        // them (commands are FIFO), absorb the salvage, then join the
-        // loop gracefully and keep its report
-        let reclaims: Vec<(u64, InFlight, Receiver<Salvage>)> = victims
-            .into_iter()
-            .map(|(pid, e)| {
-                let rx = client.reclaim(e.inner_id);
-                (pid, e, rx)
-            })
-            .collect();
-        let mut salvaged = Vec::with_capacity(reclaims.len());
-        for (pid, mut e, rx) in reclaims {
-            let salvage = rx.recv_timeout(SALVAGE_WAIT);
-            self.shared.absorb_salvage(&mut e.task, salvage);
-            salvaged.push((pid, e));
+            st.close_serve_clock(r);
         }
+        // stash the proxy handle for the collector to join BEFORE the
+        // loop can possibly exit, so the finalization never misses it
+        // (bind first: the replicas guard must not be held while the
+        // retiring lock is taken)
         let proxy = self.replicas.lock().unwrap()[r].take();
-        let proxy_report = match proxy {
-            Some(p) => p.shutdown().unwrap_or_default(),
-            None => ProxyReport::default(),
-        };
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            // release the collector channel: with the loop joined (its
-            // in-flight reply clones dropped) the collector now exits
-            st.completion_tx[r].take();
-            for (pid, e) in salvaged {
-                let migrations = e.migrations + 1;
-                let req = Pending { pool_id: pid, task: e.task };
-                let loads = st.loads();
-                match st.router.route_excluding(&loads, Some(r)) {
-                    Some(nr) => {
-                        self.shared.dispatch(&mut st, nr, req, migrations);
-                        st.migrated += 1;
-                    }
-                    None if st.none_serviceable() => {
-                        // drop: caller disconnects with the fleet
-                        self.shared.ledger.add_wasted(req.task.prefix.len() as u64);
-                    }
-                    None => st.queue.push_back(req),
-                }
-            }
-            let serve_secs = st.close_serve_clock(r);
-            st.retired.push(ReplicaReport {
-                utilization: proxy_report.mean_occupancy(st.slots),
-                proxy: proxy_report,
-                routed: st.routed[r],
-                queue_depth: st.depth[r].clone(),
-                util_hist: st.util[r].clone(),
-                slot: r,
-                generation: st.generation[r],
-                serve_secs,
-            });
-            st.phase[r] = Phase::Retired;
+        if let Some(proxy) = proxy {
+            self.shared.retiring.lock().unwrap().insert(r, proxy);
         }
-        if let Some(h) = self.collectors.lock().unwrap()[r].take() {
-            let _ = h.join();
+        let mut st = self.shared.state.lock().unwrap();
+        let ids: Vec<u64> = st
+            .inflight
+            .iter()
+            .filter(|(_, e)| e.replica == r)
+            .map(|(&pid, _)| pid)
+            .collect();
+        for pid in ids {
+            self.shared.park_for_reclaim(&mut st, pid, SalvageDest::Migrate);
         }
+        // release the master collector sender and order the loop down:
+        // it answers the reclaims above first (FIFO), then exits; once
+        // its last reply clone drops, the collector finalizes the slot
+        st.completion_tx[r].take();
+        st.clients[r].kill();
         true
     }
 
     /// SHRINK by policy: retire the serving replica with the fewest
-    /// in-flight requests (the cheapest drain). False when fewer than
-    /// two replicas serve.
+    /// in-flight requests; ties prefer the replica whose in-flight
+    /// work is cheapest to salvage (fewest already-carried prefix
+    /// tokens — the KV replay a drain would re-pay), then the lowest
+    /// slot. False when fewer than two replicas serve.
     pub fn retire_idlest(&self) -> bool {
         let victim = {
             let st = self.shared.state.lock().unwrap();
             (0..st.phase.len())
                 .filter(|&i| st.phase[i] == Phase::Serving)
-                .min_by_key(|&i| st.outstanding[i])
+                .min_by_key(|&i| (st.outstanding[i], st.salvage_cost(i), i))
         };
         match victim {
             Some(r) => self.retire_replica(r),
             None => false,
         }
+    }
+
+    /// PendingSalvage entries currently awaiting resolution (parked by
+    /// `migrate`/`retire_replica`/`kill_replica`). Diagnostics: tests
+    /// and examples use this to observe the asynchronous drain settle.
+    pub fn pending_reclaims(&self) -> usize {
+        self.shared.parked_count.load(Ordering::Relaxed)
+    }
+
+    /// Retiring slots whose report has not been archived yet.
+    pub fn pending_retirements(&self) -> usize {
+        self.shared.retiring.lock().unwrap().len()
+    }
+
+    /// Hung generations RECLAIMed in place so far (see
+    /// `PoolCfg::reclaim_in_place`).
+    pub fn reclaims_in_place(&self) -> u64 {
+        self.shared.state.lock().unwrap().reclaimed_in_place
     }
 
     /// One interval's observation for the autoscaler: serving count,
@@ -1014,10 +1390,12 @@ impl LlmProxyPool {
     }
 
     /// ADD: route (or pool-queue) a from-scratch generation; returns
-    /// (pool id, reply receiver) — same shape as `LlmProxy::generate`.
-    /// When no replica can ever serve it the reply sender is dropped,
-    /// so the receiver observes disconnection instead of hanging.
-    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
+    /// (pool id, reply receiver) — same shape as `LlmProxy::generate`
+    /// (the receiver yields `ProxyEvent::Done`; unwrap with
+    /// [`ProxyEvent::done`]). When no replica can ever serve it the
+    /// reply sender is dropped, so the receiver observes disconnection
+    /// instead of hanging.
+    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<ProxyEvent>) {
         let (reply, rx) = channel();
         let task = GenerationTask::fresh(prompt, max_new_tokens, reply);
         (self.try_submit(task).unwrap_or(0), rx)
@@ -1033,7 +1411,7 @@ impl LlmProxyPool {
     /// for a result.
     pub fn try_submit(&self, task: GenerationTask) -> Option<u64> {
         let pool_id = self.next_pool_id.fetch_add(1, Ordering::Relaxed);
-        let req = Pending { pool_id, task };
+        let req = Pending { pool_id, task, avoid: None };
         let mut st = self.shared.state.lock().unwrap();
         if st.none_serviceable() {
             return None; // drop: nothing can ever serve this
@@ -1067,53 +1445,55 @@ impl LlmProxyPool {
             st.outstanding[e.replica] = st.outstanding[e.replica].saturating_sub(1);
             st.clients[e.replica].abort(e.inner_id);
             self.shared.drain(&mut st);
+        } else if let Some(p) = st.parked.remove(&pool_id) {
+            // abort of a mid-reclaim request: unpark it so the pending
+            // answer resolves to nothing. The already-salvaged prefix
+            // is billed wasted HERE — a wedged replica that never
+            // answers must not leak it from the ledger — and a
+            // tombstone lets the answer, if it ever arrives, bill only
+            // the new progress (see the collector's already-resolved
+            // branch). No abort command is needed: the in-flight
+            // RECLAIM removes the request from the replica either way.
+            self.shared.parked_count.fetch_sub(1, Ordering::Relaxed);
+            st.by_inner[p.replica].remove(&p.inner_id);
+            st.outstanding[p.replica] = st.outstanding[p.replica].saturating_sub(1);
+            self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
+            st.aborted_parked.insert((p.replica, p.inner_id), p.task.prefix.len());
+            self.shared.drain(&mut st);
         }
     }
 
     /// Prefix-salvaging migration: move a (presumed hung) request off
-    /// its current replica onto another one, keeping the original
-    /// reply channel. The old replica's decoded progress is RECLAIMed
-    /// and — when `partial_migration` allows — resumed on the target,
-    /// so the moved generation continues where it stopped. Returns
-    /// false when there is nowhere to move it (single replica, all
-    /// others suspended) or the request already finished — callers
-    /// should then keep waiting or give the episode up.
+    /// its current replica, keeping the original reply channel. The
+    /// entry is parked in the PendingSalvage table and the call
+    /// returns immediately — the replica's collector absorbs the
+    /// RECLAIM answer and re-dispatches the task, resumed from its
+    /// decoded prefix when `partial_migration` allows, or delivers the
+    /// result outright if the generation finished inside the window.
+    /// When every peer's decode window is full, the request is
+    /// RECLAIMed *in place* instead (`reclaim_in_place`): salvaged and
+    /// re-entered into pool admission — paused, not piled onto a
+    /// saturated survivor. Returns false when the request is unknown /
+    /// already finished, or there is no other serving replica at all —
+    /// callers should then keep waiting or give the episode up.
     pub fn migrate(&self, pool_id: u64) -> bool {
-        let (inner_old, mut entry, new_r, client) = {
-            let mut st = self.shared.state.lock().unwrap();
-            let n = st.clients.len();
-            let (old, inner_old) = match st.inflight.get(&pool_id) {
-                Some(e) => (e.replica, e.inner_id),
-                None => return false,
-            };
-            let loads = st.loads();
-            // the policy's pick first; a saturated fleet still migrates
-            // to the least-outstanding survivor (being stuck behind a
-            // hung replica is strictly worse than a deep healthy queue)
-            let target = st.router.route_excluding(&loads, Some(old)).or_else(|| {
-                (0..n)
-                    .filter(|&i| i != old && !loads[i].suspended)
-                    .min_by_key(|&i| loads[i].outstanding)
-            });
-            let Some(new_r) = target else { return false };
-            // unregister on the old replica: a racing completion is
-            // dropped by the collector because the inner id is gone
-            st.by_inner[old].remove(&inner_old);
-            st.outstanding[old] = st.outstanding[old].saturating_sub(1);
-            let entry = st.inflight.remove(&pool_id).unwrap();
-            (inner_old, entry, new_r, st.clients[old].clone())
-        };
-        // reclaim outside the lock: a fail-slow replica answers between
-        // decode steps, a dead one disconnects, a wedged one runs out
-        // SALVAGE_WAIT — collectors keep flowing meanwhile
-        let salvage = client.reclaim(inner_old).recv_timeout(SALVAGE_WAIT);
-        self.shared.absorb_salvage(&mut entry.task, salvage);
         let mut st = self.shared.state.lock().unwrap();
-        let migrations = entry.migrations + 1;
-        let req = Pending { pool_id, task: entry.task };
-        self.shared.dispatch(&mut st, new_r, req, migrations);
-        st.migrated += 1;
-        true
+        let Some(entry) = st.inflight.get(&pool_id) else { return false };
+        let old = entry.replica;
+        let loads = st.loads();
+        let movable = st.router.has_free_candidate(&loads, Some(old));
+        let peers = (0..loads.len()).any(|i| i != old && !loads[i].suspended);
+        let dest = if movable {
+            SalvageDest::Migrate
+        } else if peers && self.shared.reclaim_in_place {
+            // ReclaimInPlace: the pool is saturated — pause the hung
+            // generation (salvage + re-enter admission) rather than
+            // force it onto an already-full survivor
+            SalvageDest::Requeue
+        } else {
+            return false; // single replica / nowhere to go: keep waiting
+        };
+        self.shared.park_for_reclaim(&mut st, pool_id, dest)
     }
 
     /// Suspend every live replica (synchronous mode: rollout pauses
@@ -1173,67 +1553,33 @@ impl LlmProxyPool {
     }
 
     /// Fault injection (tests, chaos drills): hard-stop replica `r`'s
-    /// event loop as if the process died. Before the loop stops, its
-    /// in-flight generations are RECLAIMed — commands are FIFO, so the
-    /// salvage drain is answered ahead of the shutdown — and
-    /// immediately re-dispatched to surviving replicas, resumed from
-    /// their salvaged prefixes when `partial_migration` allows. The
-    /// replica is marked dead so no new work routes there.
+    /// event loop as if the process died — without blocking the
+    /// caller. The replica is marked dead (no new work routes there),
+    /// its in-flight generations are parked with their RECLAIMs sent,
+    /// and the loop is ordered down — commands are FIFO, so the
+    /// salvage drain is answered ahead of the shutdown, and the dead
+    /// slot's collector re-dispatches the resumed tasks to survivors.
+    /// A loop that already exited resolves every entry immediately
+    /// (re-dispatch from the last salvaged prefix).
     pub fn kill_replica(&self, r: usize) {
-        let (client, victims) = {
-            let mut st = self.shared.state.lock().unwrap();
-            if r >= st.phase.len() || matches!(st.phase[r], Phase::Dead | Phase::Retired) {
-                return;
-            }
-            st.phase[r] = Phase::Dead;
-            st.close_serve_clock(r);
-            let ids: Vec<u64> = st
-                .inflight
-                .iter()
-                .filter(|(_, e)| e.replica == r)
-                .map(|(&pid, _)| pid)
-                .collect();
-            let victims: Vec<(u64, InFlight)> = ids
-                .into_iter()
-                .map(|pid| {
-                    let e = st.inflight.remove(&pid).unwrap();
-                    st.by_inner[r].remove(&e.inner_id);
-                    st.outstanding[r] = st.outstanding[r].saturating_sub(1);
-                    (pid, e)
-                })
-                .collect();
-            (st.clients[r].clone(), victims)
-        };
-        // enqueue every reclaim BEFORE the shutdown so the loop answers
-        // them on its way out, then stop it
-        let reclaims: Vec<(u64, InFlight, Receiver<Salvage>)> = victims
-            .into_iter()
-            .map(|(pid, e)| {
-                let rx = client.reclaim(e.inner_id);
-                (pid, e, rx)
-            })
-            .collect();
-        client.kill();
-        let mut resumed = Vec::with_capacity(reclaims.len());
-        for (pid, mut e, rx) in reclaims {
-            let salvage = rx.recv_timeout(SALVAGE_WAIT);
-            self.shared.absorb_salvage(&mut e.task, salvage);
-            resumed.push((pid, e));
-        }
         let mut st = self.shared.state.lock().unwrap();
-        for (pid, e) in resumed {
-            let migrations = e.migrations + 1;
-            let req = Pending { pool_id: pid, task: e.task };
-            let loads = st.loads();
-            match st.router.route_excluding(&loads, Some(r)) {
-                Some(nr) => {
-                    self.shared.dispatch(&mut st, nr, req, migrations);
-                    st.migrated += 1;
-                }
-                None if st.none_serviceable() => {} // drop: caller disconnects
-                None => st.queue.push_back(req),
-            }
+        if r >= st.phase.len()
+            || matches!(st.phase[r], Phase::Dead | Phase::Retired | Phase::Draining)
+        {
+            return;
         }
+        st.phase[r] = Phase::Dead;
+        st.close_serve_clock(r);
+        let ids: Vec<u64> = st
+            .inflight
+            .iter()
+            .filter(|(_, e)| e.replica == r)
+            .map(|(&pid, _)| pid)
+            .collect();
+        for pid in ids {
+            self.shared.park_for_reclaim(&mut st, pid, SalvageDest::Migrate);
+        }
+        st.clients[r].kill();
     }
 
     /// Rolling-sync weight-version skew across the fleet: max - min of
@@ -1290,8 +1636,12 @@ impl LlmProxyPool {
             }
         }
         // 3. join live replica loops (drops their in-flight reply
-        //    clones, letting the collectors observe disconnection);
-        //    retired slots were already joined by retire_replica
+        //    clones, letting the collectors observe disconnection).
+        //    Retired/retiring slots are None here: their loops are
+        //    joined by their own collector (finalize_retirement), and
+        //    a retirement still in flight completes before step 4's
+        //    collector join returns — the archive is guaranteed to be
+        //    in `st.retired` when the report is assembled below
         let mut proxy_reports: Vec<Option<ProxyReport>> = Vec::new();
         {
             let mut reps = self.replicas.lock().unwrap();
@@ -1330,12 +1680,71 @@ impl LlmProxyPool {
             replicas,
             retired: std::mem::take(&mut st.retired),
             migrated: st.migrated,
+            reclaimed_in_place: st.reclaimed_in_place,
             resumed: st.resumed,
             sync_waves: st.sync_waves,
             grown: st.grown,
             pool_queue_depth: st.queue_depth.clone(),
             tokens: self.shared.ledger.stats(),
         })
+    }
+}
+
+#[cfg(test)]
+impl LlmProxyPool {
+    /// Block until every PendingSalvage entry has resolved and every
+    /// retiring slot has archived its report. Panics after `timeout`.
+    pub(crate) fn settle(&self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        while self.pending_reclaims() > 0 || self.pending_retirements() > 0 {
+            assert!(
+                Instant::now() < deadline,
+                "salvage never settled: {} parked, {} retiring",
+                self.pending_reclaims(),
+                self.pending_retirements()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Already-salvaged prefix tokens attached to live work (in
+    /// flight, pool-queued, or parked) — the "still in the system"
+    /// side of the token-conservation ledger balance.
+    pub(crate) fn prefix_tokens_outstanding(&self) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.inflight.values().map(|e| e.task.prefix.len()).sum::<usize>()
+            + st.queue.iter().map(|p| p.task.prefix.len()).sum::<usize>()
+            + st.parked.values().map(|p| p.task.prefix.len()).sum::<usize>()
+    }
+
+    /// Structural invariants that double resolution or a leaked
+    /// PendingSalvage entry would break. Called by the race proptests
+    /// after every operation.
+    pub(crate) fn check_invariants(&self) {
+        let st = self.shared.state.lock().unwrap();
+        for r in 0..st.outstanding.len() {
+            let inflight = st.inflight.values().filter(|e| e.replica == r).count();
+            let parked = st.parked.values().filter(|p| p.replica == r).count();
+            assert_eq!(
+                st.outstanding[r],
+                inflight + parked,
+                "outstanding drift on replica {r}: {} != {inflight} in flight + {parked} parked",
+                st.outstanding[r]
+            );
+            assert_eq!(
+                st.by_inner[r].len(),
+                inflight + parked,
+                "by_inner drift on replica {r}"
+            );
+        }
+        for pid in st.inflight.keys() {
+            assert!(!st.parked.contains_key(pid), "pool id {pid} both in flight and parked");
+        }
+        assert_eq!(
+            st.parked.len(),
+            self.shared.parked_count.load(Ordering::Relaxed),
+            "parked_count gauge drifted from the PendingSalvage table"
+        );
     }
 }
 
@@ -1367,17 +1776,17 @@ impl Drop for LlmProxyPool {
     }
 }
 
+/// Stub-pool constructors shared by the unit tests below and the
+/// `coordinator::reclaim_races` interleaving suite. All exercise the
+/// pool's routing/salvage bookkeeping WITHOUT artifacts, against live
+/// stub event loops that accept commands but never decode (see the
+/// `spawn_stub_*` family in `llm_proxy.rs`). End-to-end generation
+/// runs live in rust/tests/integration.rs.
 #[cfg(test)]
-mod tests {
-    // The pool's routing/bookkeeping is exercised WITHOUT artifacts
-    // against stub replicas (live event loops that accept commands but
-    // never decode — `LlmProxy::spawn_stub`, or fake `fake_progress`
-    // decoded tokens on RECLAIM — `spawn_stub_with_progress`).
-    // End-to-end generation runs live in rust/tests/integration.rs.
+pub(crate) mod testing {
     use super::*;
-    use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, ScaleDecision};
 
-    fn cfg(n: usize, policy: RoutePolicy, slots: usize) -> PoolCfg {
+    pub(crate) fn cfg(n: usize, policy: RoutePolicy, slots: usize) -> PoolCfg {
         PoolCfg {
             num_replicas: n,
             route_policy: policy,
@@ -1385,10 +1794,12 @@ mod tests {
             replica_slots: slots,
             partial_migration: true,
             min_salvage_tokens: 1,
+            salvage_timeout: 2.0,
+            reclaim_in_place: true,
         }
     }
 
-    fn pool(n: usize, policy: RoutePolicy, slots: usize) -> LlmProxyPool {
+    pub(crate) fn pool(n: usize, policy: RoutePolicy, slots: usize) -> LlmProxyPool {
         LlmProxyPool::assemble(
             &cfg(n, policy, slots),
             (0..n).map(|_| LlmProxy::spawn_stub()).collect(),
@@ -1398,7 +1809,7 @@ mod tests {
 
     /// Stub fleet whose replicas fabricate `progress` decoded tokens
     /// on every RECLAIM (salvage-path bookkeeping without artifacts).
-    fn pool_with_progress(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
+    pub(crate) fn pool_with_progress(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
         LlmProxyPool::assemble(
             pcfg,
             (0..n).map(|_| LlmProxy::spawn_stub_with_progress(progress)).collect(),
@@ -1408,7 +1819,7 @@ mod tests {
 
     /// Elastic stub fleet: `add_replica` spawns more stubs with the
     /// same fabricated RECLAIM progress.
-    fn elastic_pool(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
+    pub(crate) fn elastic_pool(n: usize, progress: usize, pcfg: &PoolCfg) -> LlmProxyPool {
         LlmProxyPool::assemble_with(
             pcfg,
             (0..n).map(|_| LlmProxy::spawn_stub_with_progress(progress)).collect(),
@@ -1417,6 +1828,65 @@ mod tests {
             Arc::new(Mutex::new((vec![], 0))),
         )
     }
+
+    /// Pool of stubs that answer RECLAIM by finishing the generation
+    /// first (the drain race, fabricated deterministically).
+    pub(crate) fn elastic_finishing_pool(
+        n: usize,
+        finish_tokens: usize,
+        pcfg: &PoolCfg,
+    ) -> LlmProxyPool {
+        LlmProxyPool::assemble_with(
+            pcfg,
+            (0..n).map(|_| LlmProxy::spawn_stub_finishing_on_reclaim(finish_tokens)).collect(),
+            Arc::default(),
+            Some(Box::new(move |_slot, _gen| {
+                LlmProxy::spawn_stub_finishing_on_reclaim(finish_tokens)
+            })),
+            Arc::new(Mutex::new((vec![], 0))),
+        )
+    }
+
+    /// Pool of stubs that delay every RECLAIM answer by `delay` —
+    /// fail-slow replicas for the caller-latency tests.
+    pub(crate) fn delayed_pool(
+        n: usize,
+        progress: usize,
+        delay: Duration,
+        pcfg: &PoolCfg,
+    ) -> LlmProxyPool {
+        LlmProxyPool::assemble(
+            pcfg,
+            (0..n).map(|_| LlmProxy::spawn_stub_with_reclaim_delay(progress, delay)).collect(),
+            Arc::default(),
+        )
+    }
+
+    /// Pool of stubs that never answer RECLAIM at all — wedged
+    /// replicas for the resolution-timeout tests.
+    pub(crate) fn mute_pool(n: usize, pcfg: &PoolCfg) -> LlmProxyPool {
+        LlmProxyPool::assemble(
+            pcfg,
+            (0..n).map(|_| LlmProxy::spawn_stub_mute()).collect(),
+            Arc::default(),
+        )
+    }
+
+    /// Pool over a caller-supplied (possibly heterogeneous) stub set —
+    /// e.g. one wedged replica next to a healthy one.
+    pub(crate) fn custom_pool(replicas: Vec<LlmProxy>, pcfg: &PoolCfg) -> LlmProxyPool {
+        LlmProxyPool::assemble(pcfg, replicas, Arc::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::*;
+    use super::*;
+    use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, ScaleDecision};
+
+    /// Generous settle window for stub pools (they resolve in µs).
+    const SETTLE: Duration = Duration::from_secs(10);
 
     #[test]
     fn rejects_zero_replicas() {
@@ -1470,9 +1940,11 @@ mod tests {
         let (id, _rx) = p.generate(vec![1, 2, 3], 4);
         assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
         assert!(p.migrate(id));
+        p.settle(SETTLE); // the collector absorbs the salvage
         assert_eq!(p.outstanding_per_replica(), vec![0, 1]);
         // unknown request: nothing to migrate
         assert!(!p.migrate(12345));
+        p.check_invariants();
     }
 
     #[test]
@@ -1482,6 +1954,7 @@ mod tests {
         let p = pool_with_progress(2, 3, &cfg(2, RoutePolicy::LeastOutstanding, 8));
         let (id, _rx) = p.generate(vec![1, 2], 10);
         assert!(p.migrate(id));
+        p.settle(SETTLE);
         let stats = p.token_stats();
         assert_eq!(stats.salvaged_tokens, 3, "{stats:?}");
         assert_eq!(stats.wasted_tokens, 0, "{stats:?}");
@@ -1489,8 +1962,10 @@ mod tests {
         // a second migration salvages only the NEW progress (3 more
         // fake tokens on top of the carried prefix)
         assert!(p.migrate(id));
+        p.settle(SETTLE);
         assert_eq!(p.token_stats().salvaged_tokens, 6);
         assert_eq!(p.resumed_dispatches(), 2);
+        p.check_invariants();
     }
 
     #[test]
@@ -1500,6 +1975,7 @@ mod tests {
         let p = pool_with_progress(2, 3, &c);
         let (id, _rx) = p.generate(vec![1, 2], 10);
         assert!(p.migrate(id));
+        p.settle(SETTLE);
         let stats = p.token_stats();
         assert_eq!(stats.salvaged_tokens, 0, "{stats:?}");
         assert_eq!(stats.wasted_tokens, 3, "dropped progress must be counted: {stats:?}");
@@ -1513,6 +1989,7 @@ mod tests {
         let p = pool_with_progress(2, 3, &c);
         let (id, _rx) = p.generate(vec![1], 10);
         assert!(p.migrate(id));
+        p.settle(SETTLE);
         let stats = p.token_stats();
         assert_eq!(stats.salvaged_tokens, 0, "{stats:?}");
         assert_eq!(stats.wasted_tokens, 3, "below-floor salvage is burned: {stats:?}");
@@ -1568,11 +2045,13 @@ mod tests {
         let (_b, _rx_b) = p.generate(vec![2], 16); // RR -> replica 1
         assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
         p.kill_replica(0);
+        p.settle(SETTLE);
         // the victim's request moved to replica 1 with its salvage
         assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
         let stats = p.token_stats();
         assert_eq!(stats.salvaged_tokens, 4, "{stats:?}");
         assert_eq!(p.resumed_dispatches(), 1);
+        p.check_invariants();
     }
 
     #[test]
@@ -1668,10 +2147,11 @@ mod tests {
         let (_a, _rx_a) = p.generate(vec![1], 32); // RR -> replica 0
         let (_b, _rx_b) = p.generate(vec![2], 32); // RR -> replica 1
         assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
-        assert!(p.retire_replica(0));
+        assert!(p.retire_replica(0), "retire must be accepted");
+        assert_eq!(p.serving_replicas(), 1, "the router drops the slot instantly");
+        p.settle(SETTLE); // collector-absorbed salvage + archive
         // the drained request moved to replica 1 as a resumed task
         assert_eq!(p.outstanding_per_replica(), vec![0, 2]);
-        assert_eq!(p.serving_replicas(), 1);
         let stats = p.token_stats();
         assert_eq!(stats.salvaged_tokens, 5, "drain must salvage, not burn: {stats:?}");
         assert_eq!(stats.wasted_tokens, 0, "scale-down must waste nothing: {stats:?}");
@@ -1690,6 +2170,7 @@ mod tests {
     fn retired_slot_is_reused_with_bumped_generation() {
         let p = elastic_pool(2, 0, &cfg(2, RoutePolicy::LeastOutstanding, 8));
         assert!(p.retire_replica(0));
+        p.settle(SETTLE); // slot must be archived (phase Retired) to be reusable
         assert_eq!(p.serving_replicas(), 1);
         let slot = p.add_replica().unwrap();
         assert_eq!(slot, 0, "the retired slot is reused, not leaked");
@@ -1744,6 +2225,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         assert_eq!(p.serving_replicas(), 1);
+        p.settle(SETTLE);
         assert_eq!(p.token_stats().wasted_tokens, 0, "scale-down must waste nothing");
         let report = p.shutdown().unwrap();
         assert_eq!(report.grown, 2);
@@ -1757,6 +2239,7 @@ mod tests {
         let (_a, _rx_a) = p.generate(vec![1], 4); // RR -> 0
         let (_b, _rx_b) = p.generate(vec![2], 4); // RR -> 1
         assert!(p.retire_replica(0));
+        p.settle(SETTLE); // the redispatch must land before shutdown
         let report = p.shutdown().unwrap();
         let live: u64 = report.replicas.iter().map(|r| r.queue_depth.count()).sum();
         let merged = report.merged_queue_depth();

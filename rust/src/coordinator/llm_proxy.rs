@@ -23,6 +23,15 @@
 //! dropped *without* salvage (ABORT, loop teardown) is counted into
 //! `ProxyReport::wasted_tokens` and the pool-shared [`TokenLedger`] —
 //! partial output never vanishes without a trace.
+//!
+//! All replies ride one channel type, [`ProxyEvent`]: completions as
+//! `Done`, RECLAIM answers as `Reclaimed`. Because the loop emits both
+//! onto whatever senders it holds *from one thread*, a caller that
+//! points a task's reply and its reclaim at the same channel gets a
+//! total FIFO order between "it finished" and "it was salvaged" — the
+//! property the fleet's collectors use to close the drain race: a
+//! generation that completes just before the RECLAIM lands has its
+//! `Done` strictly ahead of the empty `Reclaimed` answer.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -62,12 +71,16 @@ pub struct GenerationTask {
     /// argmax decoding instead of sampling: resume-deterministic, so a
     /// migrated generation is token-identical to an uninterrupted one
     pub greedy: bool,
-    pub reply: Sender<GenResult>,
+    /// where the completion ([`ProxyEvent::Done`]) is delivered. The
+    /// fleet points every replica-side task at the replica's collector
+    /// channel, which also receives the RECLAIM answers — one FIFO
+    /// stream per replica.
+    pub reply: Sender<ProxyEvent>,
 }
 
 impl GenerationTask {
     /// A from-scratch task: empty prefix, sampling decode.
-    pub fn fresh(prompt: Vec<i32>, budget: usize, reply: Sender<GenResult>) -> Self {
+    pub fn fresh(prompt: Vec<i32>, budget: usize, reply: Sender<ProxyEvent>) -> Self {
         GenerationTask {
             prompt,
             prefix: Vec::new(),
@@ -135,6 +148,33 @@ pub struct Salvage {
     pub start_version: u64,
 }
 
+/// What a replica emits onto a reply channel: finished generations as
+/// [`Done`](ProxyEvent::Done), RECLAIM answers as
+/// [`Reclaimed`](ProxyEvent::Reclaimed). Both are sent by the proxy
+/// thread, so on any single channel they arrive in the order the loop
+/// produced them. `Reclaimed { salvage: None }` means the id was
+/// unknown at the replica — because it already finished (its `Done`
+/// precedes the answer on the same channel) or never existed.
+#[derive(Debug)]
+pub enum ProxyEvent {
+    Done(GenResult),
+    Reclaimed { id: u64, salvage: Option<Salvage> },
+}
+
+impl ProxyEvent {
+    /// Unwrap a completed generation; panics on a reclaim answer. For
+    /// callers that never issue RECLAIMs on their reply channel
+    /// (tests, examples, the single-proxy training surface).
+    pub fn done(self) -> GenResult {
+        match self {
+            ProxyEvent::Done(r) => r,
+            ProxyEvent::Reclaimed { id, .. } => {
+                panic!("expected a completed generation, got a reclaim answer for {id}")
+            }
+        }
+    }
+}
+
 /// Pool-shared live counters for decoded-token outcomes. Replica loops
 /// add waste as they discard work; the fleet adds salvage as it reuses
 /// it. Readable at any time (`LlmProxyPool::token_stats`), unlike the
@@ -177,10 +217,11 @@ pub struct TokenStats {
 enum Cmd {
     Add(GenRequest),
     Abort(u64),
-    /// abort-with-salvage: remove the request and send its decoded
-    /// progress back on `reply`. Unknown/finished ids drop the reply
-    /// sender, which the caller observes as a disconnect.
-    Reclaim { id: u64, reply: Sender<Salvage> },
+    /// abort-with-salvage: remove the request and answer on `reply`
+    /// with `ProxyEvent::Reclaimed` — decoded progress for live ids,
+    /// `salvage: None` for unknown/finished ones (the caller's channel
+    /// already carries the `Done` in the latter case).
+    Reclaim { id: u64, reply: Sender<ProxyEvent> },
     UpdateWeights { weights: Vec<f32>, version: u64, ack: Option<Sender<()>> },
     Suspend,
     Resume,
@@ -221,14 +262,23 @@ impl ProxyClient {
         let _ = self.tx.send(Cmd::Abort(id));
     }
 
-    /// RECLAIM: interrupt a running/queued request and receive its
-    /// decoded progress for resumption elsewhere. The returned channel
-    /// disconnects when the id is unknown/finished or the replica is
-    /// gone — callers bound the wait and fall back to from-scratch.
-    pub fn reclaim(&self, id: u64) -> Receiver<Salvage> {
+    /// RECLAIM onto a dedicated channel: interrupt a running/queued
+    /// request and receive its decoded progress for resumption
+    /// elsewhere. Unknown/finished ids answer `Reclaimed { salvage:
+    /// None }`; a gone replica disconnects the channel.
+    pub fn reclaim(&self, id: u64) -> Receiver<ProxyEvent> {
         let (reply, rx) = channel();
         let _ = self.tx.send(Cmd::Reclaim { id, reply });
         rx
+    }
+
+    /// RECLAIM answered onto a caller-supplied sender — the fleet
+    /// passes the replica's own completion channel, so the answer is
+    /// totally ordered against the request's possible `Done` event.
+    /// Returns false when the proxy thread is gone (no answer will
+    /// ever come); never blocks.
+    pub(crate) fn reclaim_via(&self, id: u64, reply: Sender<ProxyEvent>) -> bool {
+        self.tx.send(Cmd::Reclaim { id, reply }).is_ok()
     }
 
     /// model_update broadcast: swap weights and advance the version.
@@ -264,6 +314,18 @@ impl ProxyClient {
     pub(crate) fn kill(&self) {
         let _ = self.tx.send(Cmd::Shutdown);
     }
+}
+
+/// How a test stub answers RECLAIM (see `spawn_stub_inner`).
+#[cfg(test)]
+#[derive(Clone, Copy)]
+enum StubReclaim {
+    /// fabricate this many freshly decoded tokens on top of the prefix
+    Salvage(usize),
+    /// emit a `Done` first, then answer `salvage: None` (drain race)
+    FinishFirst(usize),
+    /// never answer (wedged replica)
+    Mute,
 }
 
 /// Client handle to the proxy thread.
@@ -357,6 +419,44 @@ impl LlmProxy {
     /// exercised without artifacts.
     #[cfg(test)]
     pub(crate) fn spawn_stub_with_progress(fake_progress: usize) -> Self {
+        Self::spawn_stub_inner(StubReclaim::Salvage(fake_progress), std::time::Duration::ZERO)
+    }
+
+    #[cfg(test)]
+    pub(crate) fn spawn_stub() -> Self {
+        Self::spawn_stub_with_progress(0)
+    }
+
+    /// Stub that sleeps `delay` before processing each RECLAIM —
+    /// a fail-slow replica whose salvage answers arrive late. Lets
+    /// tests assert the caller path never waits on them.
+    #[cfg(test)]
+    pub(crate) fn spawn_stub_with_reclaim_delay(
+        fake_progress: usize,
+        delay: std::time::Duration,
+    ) -> Self {
+        Self::spawn_stub_inner(StubReclaim::Salvage(fake_progress), delay)
+    }
+
+    /// Stub that *finishes* a held generation the moment a RECLAIM for
+    /// it arrives: the `Done` (prefix + `finish_tokens` fakes) is
+    /// emitted on the task's reply channel first, then the reclaim is
+    /// answered `salvage: None` — the drain race, fabricated
+    /// deterministically.
+    #[cfg(test)]
+    pub(crate) fn spawn_stub_finishing_on_reclaim(finish_tokens: usize) -> Self {
+        Self::spawn_stub_inner(StubReclaim::FinishFirst(finish_tokens), std::time::Duration::ZERO)
+    }
+
+    /// Stub that never answers RECLAIMs at all — a wedged replica.
+    /// Exercises the collector-side resolution timeout.
+    #[cfg(test)]
+    pub(crate) fn spawn_stub_mute() -> Self {
+        Self::spawn_stub_inner(StubReclaim::Mute, std::time::Duration::ZERO)
+    }
+
+    #[cfg(test)]
+    fn spawn_stub_inner(behavior: StubReclaim, reclaim_delay: std::time::Duration) -> Self {
         let (tx, rx) = channel::<Cmd>();
         let join = std::thread::Builder::new()
             .name("llm-proxy-stub".into())
@@ -367,19 +467,56 @@ impl LlmProxy {
                         Cmd::Add(req) => held.push(req),
                         Cmd::Abort(id) => held.retain(|r| r.id != id),
                         Cmd::Reclaim { id, reply } => {
-                            if let Some(i) = held.iter().position(|r| r.id == id) {
-                                let req = held.remove(i);
-                                let mut tokens = req.task.prefix;
-                                let mut logps = req.task.prefix_logps;
-                                for k in 0..fake_progress {
-                                    tokens.push(1 + k as i32);
-                                    logps.push(-0.5);
+                            if !reclaim_delay.is_zero() {
+                                std::thread::sleep(reclaim_delay);
+                            }
+                            let found = held.iter().position(|r| r.id == id);
+                            match (behavior, found) {
+                                (StubReclaim::Mute, _) => {}
+                                (StubReclaim::Salvage(progress), Some(i)) => {
+                                    let req = held.remove(i);
+                                    let mut tokens = req.task.prefix;
+                                    let mut logps = req.task.prefix_logps;
+                                    for k in 0..progress {
+                                        tokens.push(1 + k as i32);
+                                        logps.push(-0.5);
+                                    }
+                                    let _ = reply.send(ProxyEvent::Reclaimed {
+                                        id,
+                                        salvage: Some(Salvage {
+                                            tokens,
+                                            logps,
+                                            start_version: req.task.prefix_version,
+                                        }),
+                                    });
                                 }
-                                let _ = reply.send(Salvage {
-                                    tokens,
-                                    logps,
-                                    start_version: req.task.prefix_version,
-                                });
+                                (StubReclaim::FinishFirst(extra), Some(i)) => {
+                                    // the generation "finished racing
+                                    // the reclaim": Done first, then
+                                    // the empty answer — FIFO on the
+                                    // collector's channel
+                                    let req = held.remove(i);
+                                    let mut tokens = req.task.prefix.clone();
+                                    let mut logps = req.task.prefix_logps.clone();
+                                    for k in 0..extra {
+                                        tokens.push(7 + k as i32);
+                                        logps.push(-0.25);
+                                    }
+                                    let pv = req.task.prefix_version;
+                                    let _ = req.task.reply.send(ProxyEvent::Done(GenResult {
+                                        id,
+                                        tokens,
+                                        logps,
+                                        version: pv,
+                                        prefix_version: pv,
+                                    }));
+                                    let _ =
+                                        reply.send(ProxyEvent::Reclaimed { id, salvage: None });
+                                }
+                                (_, None) => {
+                                    let _ =
+                                        reply.send(ProxyEvent::Reclaimed { id, salvage: None });
+                                }
                             }
                         }
                         Cmd::UpdateWeights { ack, .. } => {
@@ -401,14 +538,10 @@ impl LlmProxy {
         }
     }
 
-    #[cfg(test)]
-    pub(crate) fn spawn_stub() -> Self {
-        Self::spawn_stub_with_progress(0)
-    }
-
     /// ADD: enqueue a from-scratch generation; returns (id, reply
-    /// receiver). Convenience over [`ProxyClient::submit`].
-    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<GenResult>) {
+    /// receiver). The receiver yields `ProxyEvent::Done` — unwrap with
+    /// [`ProxyEvent::done`]. Convenience over [`ProxyClient::submit`].
+    pub fn generate(&self, prompt: Vec<i32>, max_new_tokens: usize) -> (u64, Receiver<ProxyEvent>) {
         let (reply, rx) = channel();
         let id = self.client.submit(GenerationTask::fresh(prompt, max_new_tokens, reply));
         (id, rx)
@@ -426,7 +559,7 @@ impl LlmProxy {
     }
 
     /// RECLAIM: interrupt and salvage (see [`ProxyClient::reclaim`]).
-    pub fn reclaim(&self, id: u64) -> Receiver<Salvage> {
+    pub fn reclaim(&self, id: u64) -> Receiver<ProxyEvent> {
         self.client.reclaim(id)
     }
 
@@ -516,13 +649,15 @@ fn do_abort(
 /// RECLAIM: like ABORT, but the decoded progress is handed back to the
 /// caller for resumption instead of being dropped — the *caller*
 /// decides whether to reuse or discard the salvage and accounts
-/// accordingly. If the caller is already gone (its bounded wait
-/// expired before a wedged loop got here), the send fails and the
-/// progress is counted wasted right here, so late salvage never
-/// vanishes untraced. Unknown/finished ids drop the reply sender.
+/// accordingly. Unknown/finished ids are answered explicitly with
+/// `salvage: None` so the caller's collector can tell "nothing left to
+/// salvage" (the `Done` precedes this answer on the same channel) from
+/// "replica gone" (channel disconnect). If the reply channel is
+/// already closed (pool teardown), the progress is counted wasted
+/// right here, so late salvage never vanishes untraced.
 fn do_reclaim(
     id: u64,
-    reply: Sender<Salvage>,
+    reply: Sender<ProxyEvent>,
     queue: &mut VecDeque<GenRequest>,
     slots: &mut [Option<Slot>],
     tokens_buf: &mut [i32],
@@ -530,36 +665,27 @@ fn do_reclaim(
     report: &mut ProxyReport,
     ledger: &TokenLedger,
 ) {
-    let mut deliver = |salvage: Salvage, report: &mut ProxyReport| {
-        if let Err(undelivered) = reply.send(salvage) {
-            let n = undelivered.0.tokens.len() as u64;
-            report.wasted_tokens += n;
-            ledger.add_wasted(n);
-        }
-    };
-    if let Some(i) = queue.iter().position(|r| r.id == id) {
+    let salvage = if let Some(i) = queue.iter().position(|r| r.id == id) {
         let req = queue.remove(i).unwrap();
-        deliver(
-            Salvage {
-                tokens: req.task.prefix,
-                logps: req.task.prefix_logps,
-                start_version: req.task.prefix_version,
-            },
-            report,
-        );
-        return;
-    }
-    for (si, slot) in slots.iter_mut().enumerate() {
-        if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
-            let sl = slot.take().unwrap();
-            report.reclaimed += 1;
-            tokens_buf[si * s..(si + 1) * s].fill(0);
-            deliver(
-                Salvage { tokens: sl.tokens, logps: sl.logps, start_version: sl.start_version },
-                report,
-            );
-            return;
-        }
+        Some(Salvage {
+            tokens: req.task.prefix,
+            logps: req.task.prefix_logps,
+            start_version: req.task.prefix_version,
+        })
+    } else if let Some(si) =
+        (0..slots.len()).find(|&si| slots[si].as_ref().map(|sl| sl.req.id) == Some(id))
+    {
+        let sl = slots[si].take().unwrap();
+        report.reclaimed += 1;
+        tokens_buf[si * s..(si + 1) * s].fill(0);
+        Some(Salvage { tokens: sl.tokens, logps: sl.logps, start_version: sl.start_version })
+    } else {
+        None
+    };
+    let n = salvage.as_ref().map(|sv| sv.tokens.len() as u64).unwrap_or(0);
+    if reply.send(ProxyEvent::Reclaimed { id, salvage }).is_err() && n > 0 {
+        report.wasted_tokens += n;
+        ledger.add_wasted(n);
     }
 }
 
@@ -667,13 +793,13 @@ fn proxy_loop(
                         // current version would fabricate a piecewise
                         // (cross_version) sample out of thin air
                         report.completed += 1;
-                        let _ = req.task.reply.send(GenResult {
+                        let _ = req.task.reply.send(ProxyEvent::Done(GenResult {
                             id: req.id,
                             tokens,
                             logps,
                             version: start_version,
                             prefix_version: start_version,
-                        });
+                        }));
                         continue;
                     }
                     let row = &mut tokens_buf[si * s..(si + 1) * s];
@@ -739,13 +865,13 @@ fn proxy_loop(
             if done {
                 let slot = slots[si].take().unwrap();
                 report.completed += 1;
-                let _ = slot.req.task.reply.send(GenResult {
+                let _ = slot.req.task.reply.send(ProxyEvent::Done(GenResult {
                     id: slot.req.id,
                     tokens: slot.tokens,
                     logps: slot.logps,
                     version,
                     prefix_version: slot.start_version,
-                });
+                }));
                 tokens_buf[si * s..(si + 1) * s].fill(0);
             }
         }
@@ -868,22 +994,30 @@ mod tests {
         let ledger = TokenLedger::default();
         let (stx, srx) = channel();
         do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
-        let salvage = srx.recv().unwrap();
+        let ProxyEvent::Reclaimed { id, salvage: Some(salvage) } = srx.recv().unwrap() else {
+            panic!("live id must answer with salvage");
+        };
+        assert_eq!(id, 5);
         assert_eq!(salvage.tokens, vec![4, 5, 6]);
         assert_eq!(salvage.logps.len(), 3);
         assert_eq!(salvage.start_version, 2);
         assert_eq!(report.wasted_tokens, 0, "salvaged work is not wasted");
         assert_eq!(report.reclaimed, 1);
         assert_eq!(report.aborted, 0, "a salvage drain is not a cancellation");
-        // unknown id: the reply sender is dropped -> disconnect
+        // unknown id: an explicit empty answer, not silence — the
+        // caller's collector uses it to tell "already finished" from
+        // "replica gone"
         let (stx, srx) = channel();
         do_reclaim(99, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
-        assert!(srx.recv().is_err());
+        match srx.recv().unwrap() {
+            ProxyEvent::Reclaimed { id: 99, salvage: None } => {}
+            other => panic!("unknown id must answer salvage: None, got {other:?}"),
+        }
     }
 
     #[test]
     fn late_reclaim_with_dead_receiver_counts_wasted() {
-        // the migrate caller gave up (bounded wait expired) before the
+        // the pool tore down (collector channel closed) before the
         // wedged loop processed the RECLAIM: the undeliverable salvage
         // must be accounted, not silently dropped
         let ledger = TokenLedger::default();
@@ -899,8 +1033,8 @@ mod tests {
             logps: vec![-0.1, -0.2, -0.3],
             start_version: 0,
         })];
-        let (stx, srx) = channel::<Salvage>();
-        drop(srx); // caller timed out and went away
+        let (stx, srx) = channel::<ProxyEvent>();
+        drop(srx); // the collector is gone
         do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
         assert_eq!(report.wasted_tokens, 3, "undelivered salvage is wasted");
         assert_eq!(ledger.stats().wasted_tokens, 3);

@@ -35,6 +35,8 @@ pub mod async_controller;
 pub mod autoscaler;
 pub mod fleet;
 pub mod llm_proxy;
+#[cfg(test)]
+mod reclaim_races;
 pub mod rollout;
 pub mod routing;
 pub mod sample_buffer;
@@ -43,8 +45,8 @@ pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
 pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
 pub use llm_proxy::{
-    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyReport, Salvage, TokenLedger,
-    TokenStats,
+    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyEvent, ProxyReport, Salvage,
+    TokenLedger, TokenStats,
 };
 pub use rollout::{EngineCfg, EngineReport, GenBackend, GroupTasks, RolloutEngine};
 pub use routing::{ReplicaLoad, RoutePolicy, Router};
@@ -94,6 +96,14 @@ pub struct RolloutSystemCfg {
     /// shortest salvaged prefix worth resuming (shorter ones are
     /// dropped and counted as wasted)
     pub min_salvage_tokens: usize,
+    /// seconds the per-replica collectors wait for a RECLAIM answer
+    /// before re-dispatching a parked task from its last salvaged
+    /// prefix (bounds a wedged replica's hold on a PendingSalvage
+    /// entry; never a caller-path wait)
+    pub salvage_timeout: f64,
+    /// saturated hang-watchdog migrations salvage + re-enter pool
+    /// admission (ReclaimInPlace) instead of being refused
+    pub reclaim_in_place: bool,
     /// elastic fleet: queue-driven replica autoscaling bounds and
     /// cadence (`autoscale: {…}` in YAML; disabled by default, in
     /// which case the pool stays at `num_replicas`). The control loop
@@ -121,6 +131,10 @@ impl RolloutSystemCfg {
             "redundancy_factor must be >= 1.0"
         );
         anyhow::ensure!(self.num_replicas > 0, "num_replicas must be > 0 (empty inference fleet)");
+        anyhow::ensure!(
+            self.salvage_timeout.is_finite() && self.salvage_timeout > 0.0,
+            "salvage_timeout must be > 0 seconds"
+        );
         self.autoscale.validate()?;
         Ok(())
     }
@@ -191,6 +205,8 @@ impl RolloutSystem {
             replica_slots: manifest.decode_batch,
             partial_migration: cfg.partial_migration,
             min_salvage_tokens: cfg.min_salvage_tokens,
+            salvage_timeout: cfg.salvage_timeout,
+            reclaim_in_place: cfg.reclaim_in_place,
         };
         let proxy = Arc::new(LlmProxyPool::spawn(
             &pool_cfg,
@@ -256,6 +272,8 @@ mod tests {
             rolling_update: true,
             partial_migration: true,
             min_salvage_tokens: 1,
+            salvage_timeout: 0.5,
+            reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
         }
     }
@@ -301,6 +319,8 @@ mod tests {
             |c| c.redundancy_factor = 0.5,
             |c| c.redundancy_factor = f64::NAN,
             |c| c.alpha = -1.0,
+            |c| c.salvage_timeout = 0.0,
+            |c| c.salvage_timeout = f64::NAN,
         ] {
             let mut c = cfg();
             mutate(&mut c);

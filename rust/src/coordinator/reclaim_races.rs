@@ -1,0 +1,446 @@
+//! Race-hunting suite for the asynchronous RECLAIM machinery
+//! (`fleet.rs` PendingSalvage): deterministic drain-race regressions,
+//! caller-latency bounds, and seeded interleaving properties over the
+//! elastic lifecycle.
+//!
+//! Everything here runs against stub replicas (no artifacts): live
+//! event loops that hold requests without decoding and fabricate
+//! RECLAIM behavior on demand — prompt salvage, finish-inside-the-
+//! window (the drain race), delayed answers (fail-slow), or silence
+//! (wedged). The properties honor `PROPTEST_CASES` so CI can sweep
+//! far more interleavings than a local run (`make test-races`).
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::fleet::testing::{
+    cfg, custom_pool, delayed_pool, elastic_finishing_pool, elastic_pool, mute_pool,
+    pool_with_progress,
+};
+use crate::coordinator::fleet::LlmProxyPool;
+use crate::coordinator::llm_proxy::{GenerationTask, LlmProxy, ProxyEvent};
+use crate::coordinator::routing::RoutePolicy;
+use crate::util::rng::Rng;
+
+const SETTLE: Duration = Duration::from_secs(10);
+
+/// Seeded-case harness matching rust/tests/proptests.rs: `PROPTEST_CASES`
+/// overrides the default case count (the dedicated CI race job raises
+/// it), and a failure reports the first failing seed for reproduction.
+fn for_all_seeds(default_cases: u64, f: impl Fn(&mut Rng)) {
+    let n = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_cases);
+    for seed in 0..n {
+        let mut rng = Rng::new(0xACE ^ seed.wrapping_mul(0x9e3779b97f4a7c15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("reclaim race property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn submit(p: &LlmProxyPool, tx: &std::sync::mpsc::Sender<ProxyEvent>) -> Option<u64> {
+    p.try_submit(GenerationTask::fresh(vec![1, 2, 3], 64, tx.clone()))
+}
+
+// ---------------------------------------------------------------------------
+// Drain-race regressions: a generation finishing inside the reclaim
+// window is delivered exactly once, counted completed, never re-decoded.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_race_retire_delivers_finished_result_once() {
+    let p = elastic_finishing_pool(2, 5, &cfg(2, RoutePolicy::RoundRobin, 8));
+    let (tx_a, rx_a) = channel();
+    let a = p.try_submit(GenerationTask::fresh(vec![1, 2], 32, tx_a)).unwrap(); // RR -> 0
+    let (tx_b, rx_b) = channel();
+    let _b = p.try_submit(GenerationTask::fresh(vec![3], 32, tx_b)).unwrap(); // RR -> 1
+    assert!(p.retire_replica(0));
+    p.settle(SETTLE);
+    // the stub finished the generation the moment the drain's RECLAIM
+    // arrived: the result must reach the caller — once, with the pool id
+    let res = rx_a.recv_timeout(Duration::from_secs(5)).expect("completion delivered").done();
+    assert_eq!(res.id, a, "result must carry the pool id");
+    assert_eq!(res.tokens.len(), 5);
+    assert!(
+        rx_a.recv_timeout(Duration::from_millis(50)).is_err(),
+        "the drain-raced completion must be delivered exactly once"
+    );
+    let stats = p.token_stats();
+    assert_eq!(stats.wasted_tokens, 0, "a finished result is completed, not wasted: {stats:?}");
+    assert_eq!(stats.salvaged_tokens, 0, "nothing to salvage: it finished: {stats:?}");
+    assert_eq!(p.resumed_dispatches(), 0, "zero re-decode: the task is never re-dispatched");
+    assert_eq!(p.outstanding_per_replica(), vec![0, 1], "b is untouched, a is done");
+    assert!(rx_b.try_recv().is_err(), "the survivor's request is still running");
+    p.check_invariants();
+    let report = p.shutdown().unwrap();
+    assert_eq!(report.retired.len(), 1, "the drained occupant is archived");
+    assert_eq!(report.migrated, 0, "nothing moved: the race resolved as a completion");
+}
+
+#[test]
+fn drain_race_kill_and_migrate_deliver_once_without_rewaste() {
+    // kill arm
+    let p = elastic_finishing_pool(2, 3, &cfg(2, RoutePolicy::RoundRobin, 8));
+    let (tx_a, rx_a) = channel();
+    let a = p.try_submit(GenerationTask::fresh(vec![1], 32, tx_a)).unwrap(); // RR -> 0
+    p.kill_replica(0);
+    p.settle(SETTLE);
+    let res = rx_a.recv_timeout(Duration::from_secs(5)).expect("kill-raced completion").done();
+    assert_eq!(res.id, a);
+    assert!(rx_a.recv_timeout(Duration::from_millis(50)).is_err(), "double delivery");
+    assert_eq!(p.token_stats().wasted_tokens, 0);
+    assert_eq!(p.resumed_dispatches(), 0);
+    p.check_invariants();
+    drop(p);
+
+    // migrate arm
+    let p = elastic_finishing_pool(2, 4, &cfg(2, RoutePolicy::LeastOutstanding, 8));
+    let (tx_c, rx_c) = channel();
+    let c = p.try_submit(GenerationTask::fresh(vec![9], 32, tx_c)).unwrap(); // LO -> 0
+    assert!(p.migrate(c));
+    p.settle(SETTLE);
+    let res = rx_c.recv_timeout(Duration::from_secs(5)).expect("migrate-raced completion").done();
+    assert_eq!(res.id, c);
+    assert!(rx_c.recv_timeout(Duration::from_millis(50)).is_err(), "double delivery");
+    assert_eq!(p.token_stats().wasted_tokens, 0, "no first-result-counted-wasted");
+    assert_eq!(p.outstanding_per_replica(), vec![0, 0], "nothing re-decodes anywhere");
+    p.check_invariants();
+}
+
+// ---------------------------------------------------------------------------
+// Caller-latency bounds: no control-plane call waits on a salvage.
+// ---------------------------------------------------------------------------
+
+/// `migrate` / `retire_replica` / `kill_replica` must return promptly
+/// even when every RECLAIM answer is hundreds of ms away (the old
+/// code blocked up to SALVAGE_WAIT per hung generation on the
+/// caller's thread — the RolloutEngine's event loop). Budgets are
+/// generous multiples of the O(µs) lock work to stay CI-safe while
+/// remaining far below the stub's answer delay.
+#[test]
+fn control_plane_calls_return_without_blocking_on_salvage() {
+    let delay = Duration::from_millis(250);
+    let budget = Duration::from_millis(100);
+    let mut c = cfg(3, RoutePolicy::LeastOutstanding, 8);
+    c.salvage_timeout = 30.0; // answers must resolve, never expire
+    let p = delayed_pool(3, 2, delay, &c);
+    let (sink, _keep) = channel();
+    let a = submit(&p, &sink).unwrap(); // LO -> 0
+    let _b = submit(&p, &sink).unwrap(); // LO -> 1
+    let _c = submit(&p, &sink).unwrap(); // LO -> 2
+    assert_eq!(p.outstanding_per_replica(), vec![1, 1, 1]);
+
+    let t = Instant::now();
+    assert!(p.migrate(a));
+    assert!(t.elapsed() < budget, "migrate blocked on the salvage: {:?}", t.elapsed());
+    let t = Instant::now();
+    assert!(p.retire_replica(1));
+    assert!(t.elapsed() < budget, "retire_replica blocked on the salvage: {:?}", t.elapsed());
+    let t = Instant::now();
+    p.kill_replica(2);
+    assert!(t.elapsed() < budget, "kill_replica blocked on the salvage: {:?}", t.elapsed());
+
+    // the collectors absorb all three delayed answers off-thread
+    p.settle(Duration::from_secs(30));
+    let stats = p.token_stats();
+    assert_eq!(stats.salvaged_tokens, 6, "every reclaim salvaged its 2 tokens: {stats:?}");
+    assert_eq!(stats.wasted_tokens, 0, "{stats:?}");
+    assert_eq!(
+        p.outstanding_per_replica()[0],
+        3,
+        "all three tasks resumed on the lone survivor"
+    );
+    p.check_invariants();
+}
+
+/// A wedged replica (never answers RECLAIM) must not leak the parked
+/// entry: the collector-side `salvage_timeout` expires it and the task
+/// re-dispatches from its last salvaged prefix.
+#[test]
+fn wedged_replica_salvage_expires_and_redispatches() {
+    let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+    c.salvage_timeout = 0.05;
+    let p = mute_pool(2, &c);
+    let (sink, _keep) = channel();
+    let a = submit(&p, &sink).unwrap(); // LO -> 0
+    let t = Instant::now();
+    assert!(p.migrate(a));
+    assert!(t.elapsed() < Duration::from_millis(100), "caller must not wait out the wedge");
+    p.settle(SETTLE);
+    assert_eq!(
+        p.outstanding_per_replica(),
+        vec![0, 1],
+        "the expired entry re-dispatches to the survivor"
+    );
+    let stats = p.token_stats();
+    assert_eq!(stats.salvaged_tokens, 0, "the wedge yielded nothing: {stats:?}");
+    assert_eq!(stats.wasted_tokens, 0, "an empty prefix wastes nothing: {stats:?}");
+    p.check_invariants();
+}
+
+/// Aborting a mid-reclaim (parked) request must bill its salvaged
+/// prefix immediately — a wedged replica that never answers the
+/// in-flight RECLAIM would otherwise leak the tokens from the ledger —
+/// and a late answer must bill only the *new* progress (the tombstone
+/// prevents double-charging the prefix).
+#[test]
+fn abort_of_parked_entry_bills_prefix_exactly_once() {
+    // arm 1: the reclaim is never answered (wedged target)
+    let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+    c.salvage_timeout = 30.0; // expiry must not race the assertions
+    let p = custom_pool(
+        vec![LlmProxy::spawn_stub_with_progress(4), LlmProxy::spawn_stub_mute()],
+        &c,
+    );
+    let (sink, _keep) = channel();
+    let a = submit(&p, &sink).unwrap(); // LO -> 0 (the healthy stub)
+    assert!(p.migrate(a));
+    p.settle(SETTLE); // salvage 4 -> resumed on the mute replica 1
+    assert_eq!(p.token_stats().salvaged_tokens, 4);
+    assert_eq!(p.prefix_tokens_outstanding(), 4);
+    assert!(p.migrate(a), "park on the wedged replica");
+    p.abort(a); // abort while the reclaim hangs, forever unanswered
+    assert_eq!(p.pending_reclaims(), 0, "abort must unpark");
+    let stats = p.token_stats();
+    assert_eq!(
+        stats.wasted_tokens, 4,
+        "the salvaged prefix must be billed at the abort, not deferred \
+         to an answer that never comes: {stats:?}"
+    );
+    assert_eq!(p.prefix_tokens_outstanding(), 0);
+    // conservation holds even against a wedged replica
+    assert_eq!(stats.salvaged_tokens, stats.wasted_tokens);
+    p.check_invariants();
+
+    // arm 2: the answer does arrive (late) — only the NEW progress is
+    // billed on top; the prefix is never double-charged
+    let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+    c.salvage_timeout = 30.0;
+    // wide window: the abort below must land before this answer even
+    // under heavy CI scheduling noise
+    let delay = Duration::from_millis(500);
+    let p = custom_pool(
+        vec![
+            LlmProxy::spawn_stub_with_reclaim_delay(3, delay),
+            LlmProxy::spawn_stub_with_reclaim_delay(3, delay),
+        ],
+        &c,
+    );
+    let (sink, _keep) = channel();
+    let b = submit(&p, &sink).unwrap(); // LO -> 0
+    assert!(p.migrate(b));
+    p.settle(SETTLE); // salvage 3 -> resumed on replica 1 with prefix 3
+    assert_eq!(p.token_stats().salvaged_tokens, 3);
+    assert!(p.migrate(b), "park again; the answer is half a second away");
+    p.abort(b); // lands well inside the delay window
+    // prefix billed at the abort...
+    assert_eq!(p.token_stats().wasted_tokens, 3);
+    // ...and the late answer (prefix 3 + progress 3 = 6 tokens) adds
+    // exactly the 3 new tokens — 6 total, not 9
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while p.token_stats().wasted_tokens < 6 {
+        assert!(Instant::now() < deadline, "late salvage never accounted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stats = p.token_stats();
+    assert_eq!(stats.wasted_tokens, 6, "prefix double-charged: {stats:?}");
+    assert_eq!(stats.salvaged_tokens, 3, "{stats:?}");
+    p.check_invariants();
+}
+
+// ---------------------------------------------------------------------------
+// ReclaimInPlace and salvage-cost-aware retire.
+// ---------------------------------------------------------------------------
+
+/// With every peer's decode window full, the watchdog's migrate
+/// degrades to ReclaimInPlace: the hung generation is salvaged and
+/// re-enters pool admission (behind the backlog) instead of being
+/// piled onto a saturated survivor.
+#[test]
+fn saturated_pool_reclaims_in_place_instead_of_stacking() {
+    let p = pool_with_progress(2, 4, &cfg(2, RoutePolicy::QueueSched, 1));
+    let (sink, _keep) = channel();
+    let a = submit(&p, &sink).unwrap(); // slot on 0
+    let _b = submit(&p, &sink).unwrap(); // slot on 1
+    let _c = submit(&p, &sink).unwrap(); // pool-queued (both windows full)
+    assert_eq!(p.pool_queue_len(), 1);
+    assert!(p.migrate(a), "a saturated migrate must still reclaim");
+    p.settle(SETTLE);
+    assert_eq!(p.reclaims_in_place(), 1);
+    let stats = p.token_stats();
+    assert_eq!(stats.salvaged_tokens, 4, "the pause keeps the decoded prefix: {stats:?}");
+    assert_eq!(stats.wasted_tokens, 0, "{stats:?}");
+    // the freed window admitted the backlog; the paused task waits
+    // with its prefix intact
+    assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+    assert_eq!(p.pool_queue_len(), 1);
+    assert_eq!(p.prefix_tokens_outstanding(), 4, "the queued task carries the salvage");
+    p.check_invariants();
+
+    // knob off: the saturated migrate is refused outright and parks
+    // nothing
+    let mut c2 = cfg(2, RoutePolicy::QueueSched, 1);
+    c2.reclaim_in_place = false;
+    let p2 = pool_with_progress(2, 0, &c2);
+    let (sink2, _keep2) = channel();
+    let a2 = submit(&p2, &sink2).unwrap();
+    let _b2 = submit(&p2, &sink2).unwrap();
+    assert!(!p2.migrate(a2), "reclaim_in_place=false refuses a saturated migrate");
+    assert_eq!(p2.pending_reclaims(), 0);
+    assert_eq!(p2.reclaims_in_place(), 0);
+}
+
+/// `retire_idlest` tie-break: among equally idle replicas, drain the
+/// one whose in-flight work carries the fewest already-salvaged
+/// prefix tokens (the cheapest KV replay).
+#[test]
+fn retire_idlest_breaks_ties_toward_cheapest_salvage() {
+    let p = elastic_pool(2, 4, &cfg(2, RoutePolicy::LeastOutstanding, 8));
+    let (sink, _keep) = channel();
+    let a = submit(&p, &sink).unwrap(); // LO -> 0
+    assert!(p.migrate(a)); // resumes on 1 with a 4-token salvaged prefix
+    p.settle(SETTLE);
+    assert_eq!(p.outstanding_per_replica(), vec![0, 1]);
+    let _b = submit(&p, &sink).unwrap(); // LO -> 0 (prefix-free)
+    assert_eq!(p.outstanding_per_replica(), vec![1, 1], "counts must tie");
+    assert!(p.retire_idlest());
+    p.settle(SETTLE);
+    let report = p.shutdown().unwrap();
+    assert_eq!(report.retired.len(), 1);
+    assert_eq!(
+        report.retired[0].slot, 0,
+        "equally idle: the prefix-free replica is the cheaper drain"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Interleaving properties.
+// ---------------------------------------------------------------------------
+
+/// Token conservation under arbitrary interleavings of
+/// kill/retire/migrate/add/submit on a stub pool whose replicas
+/// fabricate `progress` decoded tokens per RECLAIM: every fabricated
+/// token is either attached to live work or accounted wasted —
+/// `salvaged == live_prefix + wasted` — and no PendingSalvage entry
+/// leaks or resolves twice (the structural invariants would break).
+/// Ops deliberately do NOT quiesce between steps: kill/retire/add land
+/// while earlier reclaims are still parked mid-resolution, which is
+/// exactly the overlapped state the table has to survive
+/// (`check_invariants` holds under the state lock at any instant; only
+/// the final ledger balance needs the quiescent read).
+#[test]
+fn prop_reclaim_interleavings_conserve_tokens() {
+    for_all_seeds(24, |rng| {
+        let progress = 1 + rng.below(4);
+        let policy = RoutePolicy::ALL[rng.below(RoutePolicy::ALL.len())];
+        let mut c = cfg(2, policy, 1 + rng.below(4));
+        c.salvage_timeout = 10.0;
+        let p = elastic_pool(2, progress, &c);
+        let (sink, _keep) = channel();
+        let mut ids: Vec<u64> = Vec::new();
+        for _ in 0..30 {
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    if let Some(id) = submit(&p, &sink) {
+                        ids.push(id);
+                    }
+                }
+                3 | 4 => {
+                    if let Some(&id) = ids.get(rng.below(ids.len().max(1))) {
+                        p.migrate(id);
+                    }
+                }
+                5 => {
+                    p.kill_replica(rng.below(p.num_replicas()));
+                }
+                6 => {
+                    p.retire_replica(rng.below(p.num_replicas()));
+                }
+                _ => {
+                    let _ = p.add_replica();
+                }
+            }
+            // occasionally let the dust settle so both the quiescent
+            // and the mid-resolution shapes are exercised
+            if rng.chance(0.2) {
+                p.settle(SETTLE);
+            }
+            p.check_invariants();
+        }
+        p.settle(SETTLE);
+        assert_eq!(p.pending_reclaims(), 0, "PendingSalvage leak");
+        let stats = p.token_stats();
+        let live = p.prefix_tokens_outstanding() as u64;
+        assert_eq!(
+            stats.salvaged_tokens,
+            live + stats.wasted_tokens,
+            "ledger imbalance: salvaged {} != live prefix {} + wasted {}",
+            stats.salvaged_tokens,
+            live,
+            stats.wasted_tokens
+        );
+        p.check_invariants();
+    });
+}
+
+/// Exactly-once delivery under arbitrary interleavings when every
+/// RECLAIM races a completion (finishing stubs): each submitted
+/// request observes at most one `Done`, and nothing is ever counted
+/// wasted or re-decoded. Like the conservation property, ops overlap
+/// in-flight resolutions on purpose — the drain races pile up across
+/// kill/retire/migrate without a quiescent point between them.
+#[test]
+fn prop_drain_race_interleavings_deliver_exactly_once() {
+    for_all_seeds(24, |rng| {
+        let policy = RoutePolicy::ALL[rng.below(RoutePolicy::ALL.len())];
+        let p = elastic_finishing_pool(2, 3, &cfg(2, policy, 1 + rng.below(4)));
+        let (sink, rx) = channel();
+        let mut ids: Vec<u64> = Vec::new();
+        for _ in 0..30 {
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    if let Some(id) = submit(&p, &sink) {
+                        ids.push(id);
+                    }
+                }
+                3 | 4 => {
+                    if let Some(&id) = ids.get(rng.below(ids.len().max(1))) {
+                        p.migrate(id);
+                    }
+                }
+                5 => {
+                    p.kill_replica(rng.below(p.num_replicas()));
+                }
+                6 => {
+                    p.retire_replica(rng.below(p.num_replicas()));
+                }
+                _ => {
+                    let _ = p.add_replica();
+                }
+            }
+            if rng.chance(0.2) {
+                p.settle(SETTLE);
+            }
+            p.check_invariants();
+        }
+        p.settle(SETTLE);
+        let mut delivered: std::collections::HashMap<u64, usize> = Default::default();
+        while let Ok(ev) = rx.try_recv() {
+            if let ProxyEvent::Done(res) = ev {
+                *delivered.entry(res.id).or_insert(0) += 1;
+            }
+        }
+        for (id, count) in &delivered {
+            assert_eq!(*count, 1, "request {id} delivered {count} times");
+            assert!(ids.contains(id), "delivery for an unknown id {id}");
+        }
+        let stats = p.token_stats();
+        assert_eq!(stats.wasted_tokens, 0, "drain races must never waste: {stats:?}");
+        assert_eq!(p.resumed_dispatches(), 0, "drain races must never re-decode");
+        p.check_invariants();
+    });
+}

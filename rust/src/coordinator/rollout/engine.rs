@@ -24,10 +24,13 @@
 //! work is cancelled, not completed.
 //!
 //! Generations go to the backend as resumable [`GenerationTask`]s: the
-//! hang watchdog's `migrate` salvages the decoded prefix inside the
-//! fleet (the episode keeps waiting on the same reply), while
-//! redundancy losers and shutdown use plain `abort` — there is no
-//! episode left to resume for, so the work is reclaimed outright.
+//! hang watchdog's `migrate` is a *non-blocking* reclaim — the fleet
+//! parks the request, salvages the decoded prefix via its own
+//! collectors (or reclaims it in place when every peer is saturated),
+//! and the episode keeps waiting on the same reply; the watchdog call
+//! itself never stalls the event thread. Redundancy losers and
+//! shutdown use plain `abort` — there is no episode left to resume
+//! for, so the work is reclaimed outright.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -39,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::fleet::LlmProxyPool;
-use crate::coordinator::llm_proxy::{GenResult, GenerationTask};
+use crate::coordinator::llm_proxy::{GenResult, GenerationTask, ProxyEvent};
 use crate::coordinator::rollout::episode::{Episode, EpisodeState, GroupTasks};
 use crate::coordinator::sample_buffer::{Admission, SampleBuffer};
 use crate::env::{BaseEnv, PendingStep, StepResult};
@@ -66,9 +69,11 @@ pub trait GenBackend: Send + Sync {
     /// ids). Used where the episode is over — redundancy losers,
     /// shutdown — so there is nothing to salvage *for*.
     fn abort(&self, id: u64);
-    /// Move a presumed-hung request to another replica, keeping its
-    /// reply channel; the backend salvages the decoded prefix when
-    /// configured to. `false` = nowhere to move it.
+    /// Move a presumed-hung request off its replica (or reclaim it in
+    /// place when the pool is saturated), keeping its reply channel;
+    /// the backend salvages the decoded prefix asynchronously when
+    /// configured to — the call never blocks on the salvage. `false` =
+    /// nowhere to move it.
     fn migrate(&self, id: u64) -> bool {
         let _ = id;
         false
@@ -352,7 +357,7 @@ impl RolloutEngine {
             envs.len()
         );
         let (event_tx, event_rx) = channel::<Event>();
-        let (gen_tx, gen_rx) = channel::<GenResult>();
+        let (gen_tx, gen_rx) = channel::<ProxyEvent>();
         let (work_tx, work_rx) = channel::<Work>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
@@ -366,12 +371,16 @@ impl RolloutEngine {
             let _ = tx.send(Event::GroupDone(key));
         }));
 
-        // completion forwarder: shared reply channel -> event stream
+        // completion forwarder: shared reply channel -> event stream.
+        // The engine never issues RECLAIMs against its own channel
+        // (the pool's collectors absorb those internally), so reclaim
+        // answers are structurally absent; only completions flow.
         let tx = event_tx.clone();
         std::thread::Builder::new()
             .name("rollout-gen-fwd".into())
             .spawn(move || {
-                while let Ok(res) = gen_rx.recv() {
+                while let Ok(ev) = gen_rx.recv() {
+                    let ProxyEvent::Done(res) = ev else { continue };
                     if tx.send(Event::Gen(res)).is_err() {
                         return;
                     }
@@ -454,7 +463,7 @@ struct EngineLoop {
     waiting: VecDeque<usize>,
     tickets_held: usize,
     work_tx: Sender<Work>,
-    gen_tx: Sender<GenResult>,
+    gen_tx: Sender<ProxyEvent>,
     wheel: TimerWheel,
     report: EngineReport,
 }
@@ -861,13 +870,13 @@ mod tests {
     impl GenBackend for InstantBackend {
         fn submit(&self, task: GenerationTask) -> Option<u64> {
             let id = self.next.fetch_add(1, Ordering::Relaxed);
-            let _ = task.reply.send(GenResult {
+            let _ = task.reply.send(ProxyEvent::Done(GenResult {
                 id,
                 tokens: vec![vocab::digit(3), vocab::EOS],
                 logps: vec![-0.1, -0.1],
                 version: 0,
                 prefix_version: 0,
-            });
+            }));
             Some(id)
         }
 
@@ -879,7 +888,7 @@ mod tests {
     /// Completes requests one at a time on a pacing thread, so a group
     /// race has deterministic winners and in-flight losers.
     struct PacedBackend {
-        held: Mutex<VecDeque<(u64, Sender<GenResult>)>>,
+        held: Mutex<VecDeque<(u64, Sender<ProxyEvent>)>>,
         next: AtomicU64,
         aborted: AtomicU64,
     }
@@ -898,13 +907,13 @@ mod tests {
             let Some((id, reply)) = self.held.lock().unwrap().pop_front() else {
                 return false;
             };
-            let _ = reply.send(GenResult {
+            let _ = reply.send(ProxyEvent::Done(GenResult {
                 id,
                 tokens: vec![vocab::digit(7), vocab::EOS],
                 logps: vec![-0.2, -0.2],
                 version: 0,
                 prefix_version: 0,
-            });
+            }));
             true
         }
     }

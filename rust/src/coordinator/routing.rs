@@ -150,6 +150,20 @@ impl Router {
         self.route_excluding(loads, None)
     }
 
+    /// Non-mutating saturation probe: does any replica other than
+    /// `exclude` have a *free decode slot* to absorb a migrated
+    /// request right now? Unlike [`route_excluding`](Self::route_excluding)
+    /// this never advances policy state (round-robin cursor), so the
+    /// fleet can use it to choose between moving a hung request and
+    /// RECLAIMing it in place — piling a migration onto a replica
+    /// whose continuous-batching window is already full only trades
+    /// one queue for another.
+    pub fn has_free_candidate(&self, loads: &[ReplicaLoad], exclude: Option<usize>) -> bool {
+        loads.iter().enumerate().any(|(i, l)| {
+            !l.suspended && Some(i) != exclude && l.outstanding < l.slots
+        })
+    }
+
     /// Like [`route`](Self::route) but never returns `exclude` — used
     /// by abort-and-resubmit migration away from a hung replica.
     pub fn route_excluding(&mut self, loads: &[ReplicaLoad], exclude: Option<usize>) -> Option<usize> {
@@ -324,5 +338,30 @@ mod tests {
     fn empty_fleet_routes_nowhere() {
         let mut r = Router::new(RoutePolicy::RoundRobin);
         assert_eq!(r.route(&[]), None);
+    }
+
+    #[test]
+    fn free_candidate_probe_sees_slots_and_exclusion() {
+        let r = Router::new(RoutePolicy::LeastOutstanding);
+        // replica 1 has the only free window
+        assert!(r.has_free_candidate(&loads(&[4, 3], 4), None));
+        // ...but not when it is the excluded (hung) replica
+        assert!(!r.has_free_candidate(&loads(&[4, 3], 4), Some(1)));
+        // fully saturated fleet: nowhere to move anything
+        assert!(!r.has_free_candidate(&loads(&[4, 4, 4], 4), None));
+        // suspension hides a free window
+        let mut l = loads(&[0, 4], 4);
+        l[0].suspended = true;
+        assert!(!r.has_free_candidate(&l, None));
+        assert!(!r.has_free_candidate(&[], None));
+    }
+
+    #[test]
+    fn free_candidate_probe_never_mutates_policy_state() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let l = loads(&[0, 0, 0], 4);
+        assert!(r.has_free_candidate(&l, Some(0)));
+        // the probe must not have advanced the round-robin cursor
+        assert_eq!(r.route(&l), Some(0));
     }
 }

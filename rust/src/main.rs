@@ -6,6 +6,7 @@
 //!                     num_replicas=3 route_policy=ewma rolling_update=true \
 //!                     num_workers=8 redundancy_factor=1.25 \
 //!                     partial_migration=true min_salvage_tokens=4 \
+//!                     salvage_timeout=0.5 reclaim_in_place=true \
 //!                     autoscale=true min_replicas=1 max_replicas=8 \
 //!                     target_queue_depth=8 autoscale_interval=1 \
 //!                     autoscale_cooldown=2 autoscale_hysteresis=0.25
@@ -38,6 +39,7 @@ fn main() -> Result<()> {
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
                  \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma> rolling_update=<bool>\n\
                  \u{20}         num_workers=<n> redundancy_factor=<f> partial_migration=<bool> min_salvage_tokens=<n>\n\
+                 \u{20}         salvage_timeout=<f> reclaim_in_place=<bool>\n\
                  \u{20}         autoscale=<bool> min_replicas=<n> max_replicas=<n> target_queue_depth=<f>\n\
                  \u{20}         autoscale_interval=<f> autoscale_cooldown=<f> autoscale_hysteresis=<f>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
@@ -72,6 +74,8 @@ fn train(cli: &Cli) -> Result<()> {
     let partial_migration = cli.bool_or("partial_migration", cfg.partial_migration);
     let min_salvage_tokens: usize =
         cli.parse_or("min_salvage_tokens", cfg.min_salvage_tokens).max(1);
+    let salvage_timeout: f64 = cli.parse_or("salvage_timeout", cfg.salvage_timeout);
+    let reclaim_in_place = cli.bool_or("reclaim_in_place", cfg.reclaim_in_place);
     let autoscale = AutoscaleCfg {
         enabled: cli.bool_or("autoscale", cfg.autoscale.enabled),
         min_replicas: cli.parse_or("min_replicas", cfg.autoscale.min_replicas),
@@ -109,6 +113,8 @@ fn train(cli: &Cli) -> Result<()> {
         rolling_update,
         partial_migration,
         min_salvage_tokens,
+        salvage_timeout,
+        reclaim_in_place,
         autoscale,
     };
     fleet.validate()?;
@@ -153,9 +159,10 @@ fn train(cli: &Cli) -> Result<()> {
     );
     if num_replicas > 1 || autoscale.enabled {
         println!(
-            "fleet: {} migrations ({} resumed), {} rolling waves, tokens salvaged {} / wasted {}",
+            "fleet: {} migrations ({} resumed, {} reclaimed in place), {} rolling waves, tokens salvaged {} / wasted {}",
             report.pool.migrated,
             report.pool.resumed,
+            report.pool.reclaimed_in_place,
             report.pool.sync_waves,
             report.pool.tokens.salvaged_tokens,
             report.pool.tokens.wasted_tokens

@@ -22,10 +22,14 @@
 //!     through a model update; broadcast sync stalls all of them;
 //!   * *prefix-salvaging migration* (`hang_timeout` > 0): a request
 //!     that runs past the watchdog deadline is aborted off its replica
-//!     and resubmitted elsewhere through the same exclusion-routing
-//!     the real `LlmProxyPool::migrate` uses. With `partial_migration`
-//!     only the *remaining* tokens are re-decoded, plus the cost of
-//!     replaying the salvaged prefix through prefill
+//!     and resubmitted elsewhere through the same saturation probe +
+//!     exclusion-routing the real `LlmProxyPool::migrate` uses — move
+//!     when a peer has a free decode window, *ReclaimInPlace* when the
+//!     pool is saturated (`reclaim_in_place`: salvage + re-enter pool
+//!     admission, so the paused request escapes to whichever window
+//!     frees first), re-arm when there is no peer at all. With
+//!     `partial_migration` only the *remaining* tokens are re-decoded,
+//!     plus the cost of replaying the salvaged prefix through prefill
 //!     (`prefill_time_per_token`, the KV rebuild a real engine pays on
 //!     resume); the from-scratch arm re-decodes everything and burns
 //!     the progress into `wasted_tokens`;
@@ -81,6 +85,9 @@ pub struct FleetSimConfig {
     /// carry the decoded prefix across migration (resume) vs re-decode
     /// from scratch
     pub partial_migration: bool,
+    /// saturated watchdog fires salvage + requeue in place (the real
+    /// pool's ReclaimInPlace arm); false = re-arm and wait
+    pub reclaim_in_place: bool,
     /// shortest decoded prefix (token units) worth salvaging
     pub min_salvage_tokens: f64,
     /// seconds per salvaged token replayed through prefill when a
@@ -114,6 +121,7 @@ impl FleetSimConfig {
             slow_replica: None,
             hang_timeout: 0.0,
             partial_migration: true,
+            reclaim_in_place: true,
             min_salvage_tokens: 1.0,
             // ~40x faster than the 8 ms/token decode: a realistic KV
             // rebuild rate, so salvage is cheap but not free
@@ -149,6 +157,20 @@ pub struct FleetSimReport {
     pub routed: Vec<usize>,
     /// watchdog migrations performed
     pub migrations: usize,
+    /// watchdog firings resolved as ReclaimInPlace (salvage + requeue,
+    /// no target replica reserved — the saturated-pool arm)
+    pub reclaims_in_place: usize,
+    /// virtual seconds the autoscale shrink's salvaged requests spent
+    /// between being RECLAIMed off the retiring replica and being
+    /// re-dispatched onto a survivor (summed over drained requests,
+    /// measured at the actual re-placement). With the non-blocking
+    /// drain and spare survivor capacity this is exactly 0.0 — every
+    /// victim re-dispatches at the same virtual instant the shrink
+    /// fires. A reintroduced synchronous SALVAGE_WAIT (a deferred
+    /// handoff event, a drain that parks victims behind a delay)
+    /// shows up here as positive time; asserted == 0 by
+    /// `autoscale_shrink_blocks_zero_virtual_time`.
+    pub drain_virtual_secs: f64,
     /// decoded tokens carried across migrations/drains (partial arm)
     pub salvaged_tokens: f64,
     /// decoded tokens re-decoded from scratch (the from-scratch bill)
@@ -213,7 +235,11 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut activated = vec![0.0f64; init_n];
     let mut router = Router::new(cfg.route_policy);
 
-    let mut pending: VecDeque<(u64, f64)> = VecDeque::new(); // (id, tokens to decode)
+    // (id, tokens to decode, replica to avoid). The avoid entry mirrors
+    // the real pool's Pending::avoid: a salvaged request prefers any
+    // replica but the one it was reclaimed from, relaxed only when
+    // nothing else is routable.
+    let mut pending: VecDeque<(u64, f64, Option<usize>)> = VecDeque::new();
     let mut submit_time: HashMap<u64, (f64, f64)> = HashMap::new(); // id -> (t, tokens)
     // id -> placement time: the router's EWMA feed measures dispatch->
     // completion, matching the real pool (InFlight::dispatched), not
@@ -225,6 +251,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut work_left: HashMap<u64, f64> = HashMap::new();
     // id -> watchdog strikes (mirrors InFlight::migrations)
     let mut strikes: HashMap<u64, u32> = HashMap::new();
+    // ids salvaged off a retiring replica and not yet re-placed ->
+    // the virtual time the drain reclaimed them (feeds the
+    // drain_virtual_secs handoff-latency tripwire)
+    let mut drain_pending: HashMap<u64, f64> = HashMap::new();
     // (deadline, id, replica) — stale entries skipped on pop
     let mut watchdogs: BinaryHeap<Reverse<(T, u64, usize)>> = BinaryHeap::new();
     let mut next_id = 0u64;
@@ -248,7 +278,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let scale_interval = scale_cfg.map(|a| a.interval).unwrap_or(f64::INFINITY);
     let mut next_scale = scale_interval;
 
-    let new_request = |pending: &mut VecDeque<(u64, f64)>,
+    let new_request = |pending: &mut VecDeque<(u64, f64, Option<usize>)>,
                            submit_time: &mut HashMap<u64, (f64, f64)>,
                            next_id: &mut u64,
                            rng: &mut Rng,
@@ -256,7 +286,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         let len = cfg.lengths.sample(rng);
         let tokens =
             cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time;
-        pending.push_back((*next_id, tokens));
+        pending.push_back((*next_id, tokens, None));
         submit_time.insert(*next_id, (now, tokens));
         *next_id += 1;
     };
@@ -266,6 +296,11 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     macro_rules! place {
         ($r:expr, $id:expr, $tokens:expr, $now:expr) => {{
             replicas[$r].submit_to(0, $id, $tokens, $now);
+            if let Some(t0) = drain_pending.remove(&$id) {
+                // handoff latency of a scale-down salvage: stays 0.0
+                // while the drain re-dispatches at the shrink instant
+                report.drain_virtual_secs += $now - t0;
+            }
             dispatch_time.insert($id, $now);
             placed.insert($id, $r);
             work_left.insert($id, $tokens);
@@ -289,13 +324,21 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         };
     }
 
-    // dispatch pool-queued requests while the router allows
+    // dispatch pool-queued requests while the router allows; the
+    // front's avoid preference is tried first and relaxed only when
+    // nothing else is routable (mirrors Shared::drain)
     macro_rules! dispatch {
         ($now:expr) => {{
             while !pending.is_empty() {
                 let loads: Vec<ReplicaLoad> = loads!();
-                let Some(r) = router.route(&loads) else { break };
-                let (id, tokens) = pending.pop_front().unwrap();
+                let avoid = pending.front().unwrap().2;
+                let picked = match router.route_excluding(&loads, avoid) {
+                    Some(r) => Some(r),
+                    None if avoid.is_some() => router.route(&loads),
+                    None => None,
+                };
+                let Some(r) = picked else { break };
+                let (id, tokens, _) = pending.pop_front().unwrap();
                 place!(r, id, tokens, $now);
             }
             report.pool_queue_max = report.pool_queue_max.max(pending.len());
@@ -368,7 +411,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
 
         match tag {
             EV_DOG => {
-                // --- watchdog: migrate a still-running request --------
+                // --- watchdog: reclaim a still-running request --------
                 let Reverse((t, id, r)) = watchdogs.pop().unwrap();
                 if placed.get(&id) != Some(&r) {
                     continue; // stale: completed or already migrated
@@ -378,26 +421,44 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     continue; // let it finish where it is
                 }
                 let loads: Vec<ReplicaLoad> = loads!();
-                // the policy's pick, then least-outstanding survivor —
-                // the same fallback LlmProxyPool::migrate uses
-                let target = router.route_excluding(&loads, Some(r)).or_else(|| {
-                    (0..replicas.len())
-                        .filter(|&i| i != r && !loads[i].suspended)
-                        .min_by_key(|&i| loads[i].outstanding)
-                });
-                let Some(new_r) = target else {
-                    // nowhere to move it right now (peers paused or
-                    // saturated): re-arm and try again next period, like
-                    // the real watchdog re-firing every hang_timeout
+                // the same decision the real LlmProxyPool::migrate
+                // makes: move when a peer has a free decode window;
+                // ReclaimInPlace (salvage + re-enter admission) when
+                // every peer is saturated; re-arm when no peer exists
+                let movable = router.has_free_candidate(&loads, Some(r));
+                let peers =
+                    (0..replicas.len()).any(|i| i != r && !loads[i].suspended);
+                if movable {
+                    let Some(new_r) = router.route_excluding(&loads, Some(r)) else {
+                        watchdogs.push(Reverse((T(now + cfg.hang_timeout), id, r)));
+                        continue;
+                    };
+                    *strikes.entry(id).or_insert(0) += 1;
+                    let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
+                    let assigned = work_left.get(&id).copied().unwrap_or(remaining);
+                    report.migrations += 1;
+                    let resubmit = salvage_resubmit!(assigned, remaining);
+                    place!(new_r, id, resubmit, now);
+                } else if peers && cfg.reclaim_in_place {
+                    // pause/rebalance without moving: the salvaged
+                    // request joins the pool queue and escapes to
+                    // whichever window frees first
+                    *strikes.entry(id).or_insert(0) += 1;
+                    let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
+                    let assigned = work_left.get(&id).copied().unwrap_or(remaining);
+                    report.reclaims_in_place += 1;
+                    let resubmit = salvage_resubmit!(assigned, remaining);
+                    placed.remove(&id);
+                    work_left.remove(&id);
+                    dispatch_time.remove(&id);
+                    pending.push_back((id, resubmit, Some(r)));
+                    dispatch!(now);
+                } else {
+                    // single replica / every peer paused: re-arm and
+                    // try again next period, like the real watchdog
+                    // re-firing every hang_timeout
                     watchdogs.push(Reverse((T(now + cfg.hang_timeout), id, r)));
-                    continue;
-                };
-                *strikes.entry(id).or_insert(0) += 1;
-                let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
-                let assigned = work_left.get(&id).copied().unwrap_or(remaining);
-                report.migrations += 1;
-                let resubmit = salvage_resubmit!(assigned, remaining);
-                place!(new_r, id, resubmit, now);
+                }
             }
             EV_ARRIVE => {
                 // --- open-loop arrival --------------------------------
@@ -469,6 +530,12 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         dispatch!(now);
                     }
                     ScaleDecision::Shrink(k) => {
+                        // the salvage drain below happens entirely at
+                        // `now` and its victims re-place inside the
+                        // same event (survivors have capacity when the
+                        // scaler shrinks): any change that defers the
+                        // handoff — a blocking SALVAGE_WAIT equivalent
+                        // — accrues drain_virtual_secs at re-placement
                         for _ in 0..k {
                             let min_serving =
                                 scale_cfg.map(|a| a.min_replicas).unwrap_or(1);
@@ -502,7 +569,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                     work_left.get(&id).copied().unwrap_or(remaining);
                                 let resubmit = salvage_resubmit!(assigned, remaining);
                                 placed.remove(&id);
-                                pending.push_back((id, resubmit));
+                                drain_pending.insert(id, now);
+                                pending.push_back((id, resubmit, Some(victim)));
                             }
                         }
                         dispatch!(now);
@@ -813,6 +881,54 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.migrations, b.migrations);
         assert_eq!(a.salvaged_tokens, b.salvaged_tokens);
+        assert_eq!(a.reclaims_in_place, b.reclaims_in_place);
+    }
+
+    /// A saturated pool (every peer's decode window full at watchdog
+    /// time) must resolve the hang as ReclaimInPlace: salvage + rejoin
+    /// the pool queue, escaping to whichever window frees first. With
+    /// 6 closed-loop clients over 2 one-slot replicas, both windows
+    /// are full at every instant a watchdog can fire, so in-place is
+    /// the only arm that can trigger.
+    #[test]
+    fn saturated_watchdog_reclaims_in_place() {
+        let mut c = FleetSimConfig::default_fleet(2);
+        c.route_policy = RoutePolicy::QueueSched;
+        c.max_active = 1;
+        c.clients = 6;
+        c.total_requests = 40;
+        c.sync_interval = 0.0;
+        c.lengths = LengthProfile::new(800.0, 1.0, 8192);
+        c.slow_replica = Some((0, 8.0));
+        c.hang_timeout = 30.0;
+        let r = run(&c);
+        assert_eq!(r.completed, 40, "every request must still finish");
+        assert!(r.reclaims_in_place > 0, "saturation must trigger the in-place arm: {r:?}");
+        assert_eq!(r.migrations, 0, "no free window ever existed to migrate into: {r:?}");
+        assert!(r.salvaged_tokens > 0.0, "the pause keeps decoded work: {r:?}");
+        // the knob off: the watchdog just re-arms — no reclaim at all
+        let mut off = c.clone();
+        off.reclaim_in_place = false;
+        let r_off = run(&off);
+        assert_eq!(r_off.completed, 40);
+        assert_eq!(r_off.reclaims_in_place, 0);
+        assert_eq!(r_off.migrations, 0);
+    }
+
+    /// The latency satellite's sim mirror: autoscale shrink performs
+    /// its whole salvage drain at one virtual instant — zero blocked
+    /// virtual time, guarding against ever reintroducing a synchronous
+    /// SALVAGE_WAIT on the scale-down path.
+    #[test]
+    fn autoscale_shrink_blocks_zero_virtual_time() {
+        let mut cfg = bursty_config(680);
+        cfg.autoscale = Some(bursty_autoscale(1, 6));
+        let r = run(&cfg);
+        assert!(r.scale_downs > 0, "the trough must actually drain replicas: {r:?}");
+        assert_eq!(
+            r.drain_virtual_secs, 0.0,
+            "scale-down salvage must not consume virtual time: {r:?}"
+        );
     }
 
     #[test]

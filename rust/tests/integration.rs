@@ -39,7 +39,7 @@ fn proxy_generates_and_respects_commands() {
         rxs.push(proxy.generate(prompt, 4).1);
     }
     for rx in rxs {
-        let res = rx.recv().expect("generation completes");
+        let res = rx.recv().expect("generation completes").done();
         assert!(!res.tokens.is_empty() && res.tokens.len() <= 4);
         assert_eq!(res.tokens.len(), res.logps.len());
         assert!(res.logps.iter().all(|&l| l <= 0.0 && l.is_finite()));
@@ -49,7 +49,7 @@ fn proxy_generates_and_respects_commands() {
     // weight update bumps the reported version
     proxy.update_weights(weights, 3);
     let (_, rx) = proxy.generate(MathEnv::prompt_for(1, 2), 4);
-    assert_eq!(rx.recv().unwrap().version, 3);
+    assert_eq!(rx.recv().unwrap().done().version, 3);
 
     // abort: the reply channel never fires
     proxy.suspend(); // hold decoding so the abort lands first
@@ -85,6 +85,8 @@ fn fleet_collects_complete_groups() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -129,6 +131,8 @@ fn sync_training_loop_runs_on_math_env() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -180,6 +184,8 @@ fn async_training_overlaps_and_bounds_staleness() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -227,6 +233,8 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
@@ -276,6 +284,8 @@ fn redundant_groups_produce_surplus_without_blocking() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -305,7 +315,7 @@ fn proxy_abort_of_finished_request_is_noop() {
     let proxy = LlmProxy::spawn(dir, weights, vocab::EOS, 21);
 
     let (id, rx) = proxy.generate(MathEnv::prompt_for(3, 4), 4);
-    let res = rx.recv().expect("generation completes");
+    let res = rx.recv().expect("generation completes").done();
     assert_eq!(res.id, id);
     // the id is already retired: ABORT must neither panic nor count
     proxy.abort(id);
@@ -335,7 +345,7 @@ fn proxy_update_weights_while_suspended_applies() {
     // no decode while suspended
     assert!(rx.recv_timeout(std::time::Duration::from_millis(200)).is_err());
     proxy.resume();
-    let res = rx.recv().expect("resumes after suspend");
+    let res = rx.recv().expect("resumes after suspend").done();
     assert_eq!(res.version, 7, "post-resume samples carry the suspended-applied version");
     proxy.shutdown().unwrap();
 }
@@ -348,8 +358,8 @@ fn proxy_versions_monotonic_across_suspend_resume() {
     let proxy = LlmProxy::spawn(dir, weights.clone(), vocab::EOS, 23);
 
     let mut versions = Vec::new();
-    let mut recv_version = |rx: std::sync::mpsc::Receiver<roll_flash::coordinator::GenResult>| {
-        versions.push(rx.recv().expect("generation completes").version);
+    let mut recv_version = |rx: std::sync::mpsc::Receiver<roll_flash::coordinator::ProxyEvent>| {
+        versions.push(rx.recv().expect("generation completes").done().version);
     };
     recv_version(proxy.generate(MathEnv::prompt_for(1, 1), 4).1);
     proxy.update_weights(weights.clone(), 1);
@@ -385,6 +395,8 @@ fn pool_generates_across_replicas() {
         replica_slots: rt.manifest.decode_batch,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights.clone(), vocab::EOS, 31).unwrap();
 
@@ -394,7 +406,7 @@ fn pool_generates_across_replicas() {
         rxs.push((id, rx));
     }
     for (id, rx) in rxs {
-        let res = rx.recv().expect("fleet serves the request");
+        let res = rx.recv().expect("fleet serves the request").done();
         assert_eq!(res.id, id, "results carry the pool id");
         assert!(!res.tokens.is_empty() && res.tokens.len() <= 4);
         assert_eq!(res.tokens.len(), res.logps.len());
@@ -443,6 +455,8 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -485,7 +499,7 @@ fn greedy_reference(
     let proxy = LlmProxy::spawn(dir.to_path_buf(), weights.to_vec(), vocab::EOS, 501);
     let (reply, rx) = std::sync::mpsc::channel();
     proxy.submit(GenerationTask::fresh(prompt, budget, reply).with_greedy());
-    let res = rx.recv().expect("reference generation completes");
+    let res = rx.recv().expect("reference generation completes").done();
     proxy.shutdown().unwrap();
     res
 }
@@ -506,6 +520,8 @@ fn migrated_greedy_generation_matches_uninterrupted() {
         replica_slots: rt.manifest.decode_batch,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 52).unwrap();
     let (reply, rx) = std::sync::mpsc::channel();
@@ -517,7 +533,7 @@ fn migrated_greedy_generation_matches_uninterrupted() {
     // degrades to plain greedy determinism — never a flake
     std::thread::sleep(std::time::Duration::from_millis(5));
     let migrated = pool.migrate(id);
-    let res = rx.recv().expect("migrated generation completes");
+    let res = rx.recv().expect("migrated generation completes").done();
     assert_eq!(
         res.tokens, reference.tokens,
         "greedy resume must be token-identical (migrated: {migrated})"
@@ -559,6 +575,8 @@ fn kill_replica_mid_generation_salvages_without_dup_or_loss() {
         replica_slots: rt.manifest.decode_batch,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 53).unwrap();
     // warmup probe: wait for one full generation so PJRT compilation /
@@ -583,7 +601,8 @@ fn kill_replica_mid_generation_salvages_without_dup_or_loss() {
     for ((_, rx), reference) in rxs.into_iter().zip(&references) {
         let res = rx
             .recv_timeout(std::time::Duration::from_secs(30))
-            .expect("every request survives the kill");
+            .expect("every request survives the kill")
+            .done();
         // byte-identical to the uninterrupted run = no token was
         // duplicated or lost across the salvage + resume
         assert_eq!(&res.tokens, reference, "kill-resume must not corrupt the stream");
@@ -628,6 +647,8 @@ fn engine_drives_256_episodes_on_8_workers() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -669,6 +690,8 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
@@ -716,6 +739,8 @@ fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
         replica_slots: rt.manifest.decode_batch,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 61).unwrap();
     let mut scaler = Autoscaler::new(AutoscaleCfg {
@@ -832,6 +857,8 @@ fn replica_death_mid_run_keeps_training_alive() {
         rolling_update: true,
         partial_migration: true,
         min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
         autoscale: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();

@@ -13,8 +13,19 @@ use roll_flash::util::rng::Rng;
 use roll_flash::workload::LengthProfile;
 
 /// Mini property harness: run `f` on `n` seeded cases; panic with the
-/// failing seed for reproduction.
+/// failing seed for reproduction. `PROPTEST_CASES` overrides the
+/// per-property default (proptest's convention) so the dedicated CI
+/// race job — and anyone hunting an interleaving bug locally — can
+/// sweep far more cases: `PROPTEST_CASES=500 make test-races`.
+/// (Deliberately mirrored in `coordinator/reclaim_races.rs`, which is
+/// a lib cfg(test) module and cannot share this integration-test-crate
+/// helper without a public test-support surface — keep the two in
+/// sync.)
 fn for_all_seeds(n: u64, f: impl Fn(&mut Rng)) {
+    let n = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(n);
     for seed in 0..n {
         let mut rng = Rng::new(0xBEEF ^ seed.wrapping_mul(0x9e3779b97f4a7c15));
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
