@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
+        trace: Default::default(),     // recorder off
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",

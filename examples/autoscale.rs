@@ -26,7 +26,7 @@ use std::sync::mpsc::TryRecvError;
 use std::time::{Duration, Instant};
 
 use roll_flash::coordinator::{
-    AutoscaleCfg, Autoscaler, LlmProxyPool, PoolCfg, RoutePolicy, ScaleDecision,
+    AutoscaleCfg, Autoscaler, LlmProxyPool, PoolCfg, RoutePolicy, ScaleDecision, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::env::vocab;
@@ -65,6 +65,8 @@ fn main() -> anyhow::Result<()> {
         min_salvage_tokens: 1,
         salvage_timeout: 0.5,
         reclaim_in_place: true,
+        // in-memory tracing: scale decisions land in the pool ring
+        trace: TraceCfg { enabled: true, ring_capacity: 4096, export_path: None },
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 71)?;
     let scale_cfg = AutoscaleCfg {
@@ -159,6 +161,9 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(stats.wasted_tokens == 0, "scale-down wasted decoded tokens: {stats:?}");
 
     println!("\n== fleet report (live + retired occupants) ==\n");
+    let scale_events =
+        pool.recorder().events().iter().filter(|e| e.name == "scale").count();
+    println!("flight recorder: {scale_events} scale decisions traced in the pool ring\n");
     let report = pool.shutdown()?;
     print!("{}", report.format_table());
     println!(

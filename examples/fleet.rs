@@ -12,18 +12,26 @@
 //!
 //!     make artifacts
 //!     cargo run --release --example fleet -- \
-//!         [model=tiny] [replicas=3] [alpha=1] [steps=6] [route=queue]
+//!         [model=tiny] [replicas=3] [alpha=1] [steps=6] [route=queue] \
+//!         [trace_path=/tmp/fleet-trace]
+//!
+//! With `trace_path=` the flight recorder is enabled and the run
+//! exports `trace.json` (openable in chrome://tracing / Perfetto),
+//! `trace.jsonl`, and metrics snapshots into that directory.
 //!
 //! Without artifacts the demo falls back to the virtual-time fleet
-//! mirror (`sim::fleet`), which exercises the same `Router`.
+//! mirror (`sim::fleet`), which exercises the same `Router` — and,
+//! with `trace_path=`, records the same event schema on the virtual
+//! clock.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    format_log, run_training, ControllerCfg, LlmProxyPool, PoolCfg, RolloutSystem,
-    RolloutSystemCfg, RoutePolicy,
+    format_log, run_training, ControllerCfg, FlightRecorder, LlmProxyPool, PoolCfg,
+    RolloutSystem, RolloutSystemCfg, RoutePolicy, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::env::vocab;
@@ -46,11 +54,20 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = arg("steps", "6").parse()?;
     let route = RoutePolicy::parse(&arg("route", "queue"))?;
     anyhow::ensure!(replicas >= 3, "fleet demo wants >= 3 replicas (got {replicas})");
+    let trace_path = {
+        let p = arg("trace_path", "");
+        if p.is_empty() { None } else { Some(PathBuf::from(p)) }
+    };
+    let trace = TraceCfg {
+        enabled: trace_path.is_some() || arg("trace", "false") == "true",
+        ring_capacity: 1 << 14,
+        export_path: trace_path.clone(),
+    };
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts missing (run `make artifacts`): falling back to the sim mirror\n");
-        return sim_fallback(replicas);
+        return sim_fallback(replicas, trace_path.as_deref());
     }
 
     let rt = ModelRuntime::load(&dir)?;
@@ -71,6 +88,9 @@ fn main() -> anyhow::Result<()> {
             min_salvage_tokens: 1,
             salvage_timeout: 0.5,
             reclaim_in_place: true,
+            // the training fleet below owns the export; the race pools
+            // stay untraced so they don't overwrite its files
+            trace: TraceCfg::disabled(),
         };
         let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
         // identical skewed workload for both policies: mostly short
@@ -122,6 +142,7 @@ fn main() -> anyhow::Result<()> {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet (see examples/autoscale.rs)
+        trace: trace.clone(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {
@@ -157,6 +178,10 @@ fn main() -> anyhow::Result<()> {
         "tokens salvaged {}  wasted {}",
         report.pool.tokens.salvaged_tokens, report.pool.tokens.wasted_tokens
     );
+    println!(
+        "time attribution {} (busy/sync/idle % of serving replica-seconds)",
+        report.pool.attribution().format_compact()
+    );
     let bound = alpha.ceil();
     println!(
         "freshness: max_version_gap {} <= ceil(alpha) {} (mean gap {:.2})",
@@ -171,16 +196,24 @@ fn main() -> anyhow::Result<()> {
         bound
     );
     println!("OK: fleet served {} episodes across {replicas} replicas", report.episodes);
+    if let Some(p) = &trace_path {
+        println!(
+            "trace: wrote {0}/trace.json (chrome://tracing), {0}/trace.jsonl, {0}/metrics.txt",
+            p.display()
+        );
+    }
     Ok(())
 }
 
 /// Virtual-time stand-in when artifacts are absent: same Router, same
-/// policies, scaled-up load.
-fn sim_fallback(replicas: usize) -> anyhow::Result<()> {
+/// policies, scaled-up load. With `trace_path` the last run records
+/// virtual-timestamp events and exports the same trace files the real
+/// pool writes.
+fn sim_fallback(replicas: usize, trace_path: Option<&Path>) -> anyhow::Result<()> {
     let mut base = FleetSimConfig::default_fleet(replicas);
     base.lengths = LengthProfile::new(2000.0, 1.2, 30720);
     base.sync_interval = 0.0;
-    let mut table = Table::new(&["policy", "makespan s", "p99 lat s", "tok/s"]);
+    let mut table = Table::new(&["policy", "makespan s", "p99 lat s", "tok/s", "attr b/s/i"]);
     for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
         let mut cfg = base.clone();
         cfg.route_policy = policy;
@@ -190,15 +223,28 @@ fn sim_fallback(replicas: usize) -> anyhow::Result<()> {
             format!("{:.0}", r.makespan),
             format!("{:.1}", r.p99_latency),
             format!("{:.0}", r.throughput),
+            r.attr.format_compact(),
         ]);
     }
     println!("{}", table.to_markdown());
+    let recorder = trace_path.map(|_| Arc::new(FlightRecorder::new(1 << 14)));
     let mut rolling = FleetSimConfig::default_fleet(replicas);
     rolling.sync_interval = 60.0;
+    rolling.trace = recorder.clone();
     let r = run_sim(&rolling);
     println!(
-        "rolling sync: {} waves, min decoding replicas {} (of {replicas})",
-        r.sync_waves, r.min_decoding_during_sync
+        "rolling sync: {} waves, min decoding replicas {} (of {replicas}), attribution {}",
+        r.sync_waves,
+        r.min_decoding_during_sync,
+        r.attr.format_compact()
     );
+    if let (Some(rec), Some(p)) = (recorder, trace_path) {
+        rec.export_to_dir(p)?;
+        println!(
+            "trace: wrote {0}/trace.json (chrome://tracing) and {0}/trace.jsonl \
+             (virtual timestamps)",
+            p.display()
+        );
+    }
     Ok(())
 }

@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
+        trace: Default::default(),     // recorder off
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;

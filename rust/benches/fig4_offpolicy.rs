@@ -40,6 +40,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
+        trace: Default::default(),     // recorder off
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {

@@ -40,6 +40,7 @@ fn main() {
         "ups/downs",
         "salvaged",
         "wasted",
+        "attr b/s/i",
     ]);
     let mut static_rows = Vec::new();
     for n in [1usize, 2, 4, 6] {
@@ -56,6 +57,7 @@ fn main() {
             "-".into(),
             format!("{:.0}", r.salvaged_tokens),
             format!("{:.0}", r.wasted_tokens),
+            r.attr.format_compact(),
         ]);
         static_rows.push((n, r));
     }
@@ -75,8 +77,13 @@ fn main() {
         format!("{}/{}", elastic.scale_ups, elastic.scale_downs),
         format!("{:.0}", elastic.salvaged_tokens),
         format!("{:.0}", elastic.wasted_tokens),
+        elastic.attr.format_compact(),
     ]);
     println!("{}", table.to_markdown());
+    println!(
+        "attr = busy/sync/idle % of serving replica-seconds: the over-provisioned \
+         static fleets idle through every trough; elastic keeps its replicas busy\n"
+    );
 
     // acceptance: elastic >= 0.95x static-peak completion rate at
     // strictly lower replica-seconds

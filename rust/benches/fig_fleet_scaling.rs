@@ -90,7 +90,9 @@ fn main() {
     println!("token-rate estimate prices the slow replica out of placement.\n");
 
     println!("== Routing under skew (4 replicas, fixed work budget) ==\n");
-    let mut table = Table::new(&["policy", "makespan s", "mean lat s", "p99 lat s", "max co-res", "pool q max"]);
+    let mut table = Table::new(&[
+        "policy", "makespan s", "mean lat s", "p99 lat s", "max co-res", "pool q max", "attr b/s/i",
+    ]);
     for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::QueueSched] {
         let mut cfg = base.clone();
         cfg.num_replicas = 4;
@@ -106,9 +108,12 @@ fn main() {
             format!("{:.1}", r.p99_latency),
             r.max_inflight.to_string(),
             r.pool_queue_max.to_string(),
+            r.attr.format_compact(),
         ]);
     }
     println!("{}", table.to_markdown());
+    println!("the attribution column shows where round-robin loses: idle bubbles on");
+    println!("replicas whose queues drained while a straggler pinned the others.\n");
 
     println!("== Migration off a 5x fail-slow replica: salvage vs from-scratch (4 replicas) ==\n");
     let mut table = Table::new(&[
@@ -150,7 +155,7 @@ fn main() {
 
     println!("== Weight sync: rolling vs broadcast (4 replicas) ==\n");
     let mut table = Table::new(&[
-        "sync", "waves", "min decoding replicas", "makespan s", "tok/s",
+        "sync", "waves", "min decoding replicas", "makespan s", "tok/s", "attr b/s/i",
     ]);
     for rolling in [true, false] {
         let mut cfg = base.clone();
@@ -167,9 +172,12 @@ fn main() {
             r.min_decoding_during_sync.to_string(),
             format!("{:.0}", r.makespan),
             format!("{:.0}", r.throughput),
+            r.attr.format_compact(),
         ]);
     }
     println!("{}", table.to_markdown());
     println!("rolling keeps >= N-1 replicas decoding during every model update;");
-    println!("broadcast parks the fleet for the whole sync window.");
+    println!("broadcast parks the fleet for the whole sync window. The attribution");
+    println!("column (busy/sync/idle % of serving replica-seconds) prices the");
+    println!("difference: broadcast's sync share is the fleet-wide stall bill.");
 }

@@ -5,7 +5,9 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use roll_flash::coordinator::SampleBuffer;
+use roll_flash::coordinator::{LlmProxyPool, PoolCfg, RoutePolicy, SampleBuffer, TraceCfg};
+use roll_flash::env::vocab;
+use roll_flash::metrics::trace::{EventPhase, FlightRecorder};
 use roll_flash::rl::Trajectory;
 use roll_flash::sim::queue::GpuPool;
 use roll_flash::sim::rlvr::{run, RlvrSimConfig};
@@ -90,7 +92,37 @@ fn main() {
     });
     println!("SampleBuffer: {:.2}M samples/s through begin/push/get/bump", n_samples as f64 / t / 1e6);
 
-    // 4. real engine: decode + train step latency (tiny artifacts)
+    // 4. FlightRecorder primitive: the cost the tracing satellite adds
+    //    to every pool submit/complete. Disabled must be one relaxed
+    //    load + branch (zero-cost when off); enabled is a ring push.
+    {
+        let off = FlightRecorder::disabled();
+        let on = FlightRecorder::new(1 << 16);
+        let n = 1_000_000u64;
+        let per_event = |rec: &FlightRecorder| {
+            let t = bench(5, || {
+                for i in 0..n {
+                    // black_box defeats dead-load elimination of the
+                    // disabled recorder's early-return path
+                    let i = std::hint::black_box(i);
+                    rec.emit("submit", EventPhase::Instant, i, None, 0, 0, String::new());
+                    rec.emit("done", EventPhase::Instant, i, Some(0), 0, 0, String::new());
+                }
+            });
+            t / (2 * n) as f64
+        };
+        let e_off = per_event(&off);
+        let e_on = per_event(&on);
+        println!(
+            "FlightRecorder: disabled {:.2}ns/event (branch-only), enabled {:.0}ns/event \
+             ({:.1}M events/s)",
+            e_off * 1e9,
+            e_on * 1e9,
+            1.0 / e_on / 1e6
+        );
+    }
+
+    // 5. real engine: decode + train step latency (tiny artifacts)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if dir.join("manifest.json").exists() {
         let rt = ModelRuntime::load(&dir).unwrap();
@@ -126,6 +158,48 @@ fn main() {
             "PJRT train_step (tiny, B={tb}): {:.1}ms ({:.0} tokens/s)",
             t * 1e3,
             (tb * ts2) as f64 / t
+        );
+
+        // 6. recorder overhead on the REAL pool's submit/complete path:
+        //    48 short generations through a 2-replica fleet, traced vs
+        //    untraced. Acceptance: enabled stays under 3% — the
+        //    recorder is off the decode path, so the emit cost
+        //    disappears into the engine's per-step latency.
+        let run_pool = |trace: TraceCfg| {
+            let cfg = PoolCfg {
+                num_replicas: 2,
+                route_policy: RoutePolicy::LeastOutstanding,
+                rolling_update: true,
+                replica_slots: rt.manifest.decode_batch,
+                partial_migration: true,
+                min_salvage_tokens: 1,
+                salvage_timeout: 0.5,
+                reclaim_in_place: true,
+                trace,
+            };
+            let pool =
+                LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 7).unwrap();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..48).map(|_| pool.generate(vec![3; 4], 6).1).collect();
+            for rx in rxs {
+                rx.recv().expect("pool serves the request");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            pool.shutdown().unwrap();
+            wall
+        };
+        let t_off = run_pool(TraceCfg::disabled());
+        let t_on = run_pool(TraceCfg {
+            enabled: true,
+            ring_capacity: 1 << 14,
+            export_path: None,
+        });
+        let overhead = (t_on / t_off.max(1e-9) - 1.0) * 100.0;
+        println!(
+            "pool submit/complete (2 replicas, 48 reqs): untraced {:.1}ms, traced {:.1}ms \
+             ({overhead:+.2}% — target < 3%)",
+            t_off * 1e3,
+            t_on * 1e3
         );
     } else {
         println!("(skipping PJRT timings: run `make artifacts`)");

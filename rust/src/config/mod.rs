@@ -9,6 +9,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::autoscaler::AutoscaleCfg;
 use crate::coordinator::routing::RoutePolicy;
+use crate::metrics::trace::TraceCfg;
 use crate::util::json::Json;
 
 /// Off-policy objective selector (`pg_variant` in the paper config).
@@ -135,6 +136,10 @@ pub struct RollConfig {
     /// {min_replicas, max_replicas, target_queue_depth, interval,
     /// cooldown, hysteresis}`; presence of the block enables it)
     pub autoscale: AutoscaleCfg,
+    /// flight recorder: per-request lifecycle traces + replica time
+    /// attribution (`trace: {enabled, ring_capacity, export_path}`;
+    /// presence of the block enables it)
+    pub trace: TraceCfg,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -169,6 +174,7 @@ impl Default for RollConfig {
             salvage_timeout: 0.5,
             reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
+            trace: TraceCfg::disabled(),
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -283,6 +289,20 @@ impl RollConfig {
                 cfg.autoscale.hysteresis = v;
             }
         }
+        if let Some(t) = j.get("trace") {
+            // like autoscale: the block's presence turns the recorder
+            // on unless it says `enabled: false` explicitly
+            cfg.trace.enabled = true;
+            if let Some(Json::Bool(b)) = t.get("enabled") {
+                cfg.trace.enabled = *b;
+            }
+            if let Some(v) = num(t, "ring_capacity") {
+                cfg.trace.ring_capacity = v as usize;
+            }
+            if let Some(v) = t.get("export_path").and_then(Json::as_str) {
+                cfg.trace.export_path = Some(v.into());
+            }
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -351,6 +371,10 @@ impl RollConfig {
             "salvage_timeout must be > 0 seconds"
         );
         anyhow::ensure!(!self.actor_infer.device_mapping.is_empty(), "empty infer devices");
+        anyhow::ensure!(
+            !self.trace.enabled || self.trace.ring_capacity > 0,
+            "trace.ring_capacity must be > 0 when tracing is enabled"
+        );
         self.autoscale.validate()?;
         Ok(())
     }
@@ -527,6 +551,32 @@ autoscale:
         // explicit off-switch keeps the bounds in the file
         let off = RollConfig::from_yaml("autoscale:\n  enabled: false\n").unwrap();
         assert!(!off.autoscale.enabled);
+    }
+
+    #[test]
+    fn parses_trace_block() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+trace:
+  ring_capacity: 512
+  export_path: /tmp/roll-trace
+"#,
+        )
+        .unwrap();
+        assert!(cfg.trace.enabled, "block presence enables the recorder");
+        assert_eq!(cfg.trace.ring_capacity, 512);
+        assert_eq!(cfg.trace.export_path.as_deref(), Some(Path::new("/tmp/roll-trace")));
+        // default: off, in-memory, 4096-deep rings
+        let d = RollConfig::default();
+        assert!(!d.trace.enabled);
+        assert_eq!(d.trace.ring_capacity, 4096);
+        assert_eq!(d.trace.export_path, None);
+        // explicit off-switch keeps the knobs in the file
+        let off = RollConfig::from_yaml("trace:\n  enabled: false\n  ring_capacity: 64\n").unwrap();
+        assert!(!off.trace.enabled);
+        assert_eq!(off.trace.ring_capacity, 64);
+        // a zero-capacity ring cannot hold events
+        assert!(RollConfig::from_yaml("trace:\n  ring_capacity: 0\n").is_err());
     }
 
     #[test]

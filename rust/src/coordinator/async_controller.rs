@@ -20,6 +20,7 @@ use crate::config::PgVariant;
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler};
 use crate::coordinator::fleet::LlmProxyPool;
 use crate::coordinator::sample_buffer::SampleBuffer;
+use crate::metrics::trace::AttrSnapshot;
 use crate::rl;
 use crate::runtime::{ModelRuntime, TrainState};
 
@@ -75,6 +76,12 @@ pub struct StepLog {
     /// otherwise
     pub serving_replicas: usize,
     pub wall_secs: f64,
+    /// where the fleet's replica-seconds went during this step — the
+    /// per-step delta of the pool's time attribution (decode-busy,
+    /// prefill, salvage replay, weight-sync pause, draining, idle
+    /// bubble). `attr.serving_total()` tracks
+    /// `serving_replicas × wall_secs` for a static fleet.
+    pub attr: AttrSnapshot,
 }
 
 /// Run the training loop. `rt`/`st` belong to the calling thread (the
@@ -111,6 +118,7 @@ pub fn run_training(
         // so reading afterwards would always difference to zero
         let gap_before = buffer.stats();
         let tokens_before = proxy.token_stats();
+        let attr_before = proxy.attribution();
         let Some(samples) = buffer.get_batch(cfg.n_groups) else {
             anyhow::bail!("sample buffer shut down mid-training");
         };
@@ -185,6 +193,7 @@ pub fn run_training(
             wasted_tokens: tokens_after.wasted_tokens.saturating_sub(tokens_before.wasted_tokens),
             serving_replicas: proxy.serving_replicas(),
             wall_secs: t0.elapsed().as_secs_f64(),
+            attr: proxy.attribution().delta(&attr_before),
         });
     }
     Ok(logs)
@@ -195,13 +204,15 @@ pub fn run_training(
 /// weight-version spread; `xver` counts piecewise-policy samples
 /// consumed this step (salvaged prefixes spanning an update); `salv`/
 /// `waste` are the step's decoded-token salvage and loss; `repl` is
-/// the serving replica count (elastic under autoscaling).
+/// the serving replica count (elastic under autoscaling); `attr` is
+/// the step's replica-time split as busy/sync/idle percent of serving
+/// time (`-` until the recorder has attributed anything).
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  attr {}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
         l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
         l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.serving_replicas,
-        l.wall_secs
+        l.attr.format_compact(), l.wall_secs
     )
 }

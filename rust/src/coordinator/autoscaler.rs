@@ -42,6 +42,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::fleet::LlmProxyPool;
+use crate::metrics::trace::EventPhase;
 
 /// Autoscaler shape and cadence (`autoscale: {…}` in YAML / CLI).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -281,6 +282,27 @@ impl Autoscaler {
                 }
             }
             ScaleDecision::Hold => {}
+        }
+        // the flight recorder sees every applied decision, so a trace
+        // shows why the replica lanes appear and drain
+        if d != ScaleDecision::Hold {
+            let rec = pool.recorder();
+            if rec.is_enabled() {
+                rec.emit(
+                    "scale",
+                    EventPhase::Instant,
+                    0,
+                    None,
+                    0,
+                    0,
+                    format!(
+                        "{d:?} serving={} queue_p90={:.1} outstanding={}",
+                        pool.serving_replicas(),
+                        signals.queue_depth,
+                        signals.outstanding
+                    ),
+                );
+            }
         }
         d
     }

@@ -77,6 +77,17 @@
 //! pool-queue depth is additionally recorded into a *windowed*
 //! histogram (`Histogram::reset`) that the autoscaler reads once per
 //! interval.
+//!
+//! **Observability**: the pool carries a [`FlightRecorder`]
+//! (`PoolCfg::trace`) that records every request's lifecycle — submit
+//! → queue-wait → route → prefill → decode → {park / salvage /
+//! re-dispatch / abort} → done — into per-replica rings, a central
+//! [`MetricsRegistry`] of named counters (`metrics()`), and per-slot
+//! [`Attribution`] accumulators classifying every replica-second
+//! (`attribution()`, rolled into [`ReplicaReport`]/[`PoolReport`]).
+//! When `trace.export_path` is set, `shutdown` writes `trace.json`
+//! (Chrome `trace_event`, openable in `chrome://tracing`/Perfetto),
+//! `trace.jsonl`, and `metrics.{txt,csv}` into that directory.
 
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -94,15 +105,11 @@ use crate::coordinator::llm_proxy::{
     TokenLedger, TokenStats,
 };
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
+use crate::metrics::registry::{Counter, HistogramHandle, MetricsRegistry};
+use crate::metrics::trace::{
+    AttrSnapshot, Attribution, EventPhase, FlightRecorder, TraceCfg,
+};
 use crate::metrics::{Histogram, Table};
-
-/// Collector heartbeat: how often an idle per-replica collector wakes
-/// to expire parked salvages whose replica never answered (see
-/// `PoolCfg::salvage_timeout`). There is NO caller-side salvage wait
-/// anywhere — `migrate`/`retire_replica`/`kill_replica` park the entry
-/// and return; only the collectors ever touch this clock, and only
-/// while `Shared::parked_count` is non-zero.
-const SALVAGE_TICK: Duration = Duration::from_millis(5);
 
 /// Spawns a replica for `(slot, generation)` — the hook that makes
 /// `add_replica` possible after the pool's construction arguments are
@@ -146,6 +153,10 @@ pub struct PoolCfg {
     /// saturated survivor. false = a saturated migrate is refused and
     /// the watchdog simply re-fires later.
     pub reclaim_in_place: bool,
+    /// flight-recorder knobs (`trace: {enabled, ring_capacity,
+    /// export_path}` in YAML / CLI); disabled costs one branch per
+    /// would-be event
+    pub trace: TraceCfg,
 }
 
 impl PoolCfg {
@@ -159,6 +170,7 @@ impl PoolCfg {
             min_salvage_tokens: 1,
             salvage_timeout: 0.5,
             reclaim_in_place: true,
+            trace: TraceCfg::disabled(),
         }
     }
 }
@@ -305,11 +317,18 @@ struct PoolState {
     depth: Vec<Histogram>,
     /// per-replica occupancy fraction (outstanding/slots) at dispatch
     util: Vec<Histogram>,
-    /// pool-queue length at submit (lifetime, for the PoolReport)
-    queue_depth: Histogram,
     /// pool-queue length at submit since the autoscaler's last read
-    /// (reset every interval — the per-interval percentile feed)
+    /// (reset every interval — the per-interval percentile feed).
+    /// The *lifetime* pool-queue histogram lives in the metrics
+    /// registry (`pool.queue_depth`), not here.
     queue_window: Histogram,
+    /// per-slot time-attribution of the current occupant's proxy loop
+    /// (shared `Arc` with the loop); reset to a fresh accumulator when
+    /// the slot's report is archived so occupants never blend
+    attr: Vec<Arc<Attribution>>,
+    /// when the slot's current occupant left service and began
+    /// draining (pool-side half of the `Draining` attribution bucket)
+    drain_start: Vec<Option<Instant>>,
     /// master clones of the per-replica collector channels; taken at
     /// shutdown/retirement so the collectors can observe disconnection
     completion_tx: Vec<Option<Sender<ProxyEvent>>>,
@@ -369,6 +388,42 @@ impl PoolState {
     }
 }
 
+/// Pre-registered handles into the pool's [`MetricsRegistry`]: the
+/// hot paths bump these lock-free cells and never touch the registry
+/// lock again after construction.
+struct FleetMetrics {
+    registry: Arc<MetricsRegistry>,
+    submitted: Counter,
+    completed: Counter,
+    migrated: Counter,
+    reclaimed_in_place: Counter,
+    /// parked salvages whose replica never answered inside
+    /// `salvage_timeout` (the collectors' deadline sweeps)
+    expired: Counter,
+    grown: Counter,
+    retired: Counter,
+    /// pool-queue length at submit (lifetime) — the registry-owned
+    /// replacement for the old ad-hoc `PoolState.queue_depth` field
+    pool_queue_depth: HistogramHandle,
+}
+
+impl FleetMetrics {
+    fn new() -> Self {
+        let registry = Arc::new(MetricsRegistry::new());
+        FleetMetrics {
+            submitted: registry.counter("pool.submitted"),
+            completed: registry.counter("pool.completed"),
+            migrated: registry.counter("pool.migrated"),
+            reclaimed_in_place: registry.counter("pool.reclaimed_in_place"),
+            expired: registry.counter("pool.salvage_expired"),
+            grown: registry.counter("pool.grown"),
+            retired: registry.counter("pool.retired"),
+            pool_queue_depth: registry.histogram("pool.queue_depth", 1.0, 1.25),
+            registry,
+        }
+    }
+}
+
 /// State shared between callers, collectors, and the sync agent.
 struct Shared {
     state: Mutex<PoolState>,
@@ -381,15 +436,53 @@ struct Shared {
     /// saturated migrations salvage-and-requeue instead of refusing
     reclaim_in_place: bool,
     /// live count of PendingSalvage entries — the lock-free gate that
-    /// lets idle collectors skip the expiry sweep entirely
+    /// lets collectors block indefinitely when nothing is parked
     parked_count: AtomicUsize,
     /// proxy handles of retiring slots; the slot's collector joins the
     /// loop and archives the report once its channel disconnects.
     /// Lock order: retiring may be taken before state, never after.
     retiring: Mutex<HashMap<usize, LlmProxy>>,
+    /// lifecycle tracing (a disabled recorder is one branch per event)
+    recorder: Arc<FlightRecorder>,
+    /// named counters/histograms, snapshot-and-reset by reporters
+    metrics: FleetMetrics,
+    /// routing policy, echoed into `route` trace events
+    route_policy: RoutePolicy,
 }
 
 impl Shared {
+    /// Pool-level (ring 0) trace event for request `req`.
+    fn ev_pool(&self, name: &'static str, phase: EventPhase, req: u64, detail: String) {
+        self.recorder.emit(name, phase, req, None, 0, 0, detail);
+    }
+
+    /// Replica-level trace event stamped with the slot's current
+    /// generation and acknowledged weight version. Caller holds the
+    /// state lock.
+    fn ev_replica(
+        &self,
+        st: &PoolState,
+        name: &'static str,
+        phase: EventPhase,
+        req: u64,
+        r: usize,
+        detail: String,
+    ) {
+        self.recorder.emit(name, phase, req, Some(r), st.generation[r], st.replica_version[r], detail);
+    }
+
+    /// A request enters the pool queue: open its `queue` span.
+    /// Every `st.queue.push_back` site pairs with a `trace_queue_end`
+    /// at the pop/drop site, so the span invariant holds: a request
+    /// has an open `queue` span iff it sits in `st.queue`.
+    fn trace_queue_begin(&self, req: u64) {
+        self.ev_pool("queue", EventPhase::Begin, req, String::new());
+    }
+
+    fn trace_queue_end(&self, req: u64) {
+        self.ev_pool("queue", EventPhase::End, req, String::new());
+    }
+
     /// Dispatch a request to replica `r`; caller holds the state lock.
     /// A submit failure means the replica's event loop is gone — the
     /// replica is marked dead and the request fails over *with its
@@ -417,15 +510,18 @@ impl Shared {
                         }
                         None if st.none_serviceable() => {
                             self.ledger.add_wasted(req.task.prefix.len() as u64);
+                            self.ev_pool("lost", EventPhase::Instant, req.pool_id, String::new());
                             return;
                         }
                         None => {
+                            self.trace_queue_begin(req.pool_id);
                             st.queue.push_back(req);
                             return;
                         }
                     }
                 }
                 self.ledger.add_wasted(req.task.prefix.len() as u64);
+                self.ev_pool("lost", EventPhase::Instant, req.pool_id, String::new());
                 return;
             };
             let replica_task = GenerationTask {
@@ -446,6 +542,33 @@ impl Shared {
                     st.util[r].record(st.outstanding[r].min(st.slots) as f64 / st.slots as f64);
                     if !req.task.prefix.is_empty() {
                         st.resumed += 1;
+                    }
+                    if self.recorder.is_enabled() {
+                        let policy = self.route_policy;
+                        self.ev_replica(
+                            st,
+                            "route",
+                            EventPhase::Instant,
+                            req.pool_id,
+                            r,
+                            format!("replica={r} policy={policy:?}"),
+                        );
+                        self.ev_replica(
+                            st,
+                            "prefill",
+                            EventPhase::Instant,
+                            req.pool_id,
+                            r,
+                            format!("prefix={}", req.task.prefix.len()),
+                        );
+                        self.ev_replica(
+                            st,
+                            "decode",
+                            EventPhase::Begin,
+                            req.pool_id,
+                            r,
+                            format!("migrations={migrations}"),
+                        );
                     }
                     st.inflight.insert(
                         req.pool_id,
@@ -469,9 +592,11 @@ impl Shared {
                             // drop: caller disconnects; the salvaged
                             // prefix dies with the fleet
                             self.ledger.add_wasted(req.task.prefix.len() as u64);
+                            self.ev_pool("lost", EventPhase::Instant, req.pool_id, String::new());
                             return;
                         }
                         None => {
+                            self.trace_queue_begin(req.pool_id);
                             st.queue.push_back(req);
                             return;
                         }
@@ -492,6 +617,8 @@ impl Shared {
             // decoded work that now dies uncollected — count it
             for p in st.queue.drain(..) {
                 self.ledger.add_wasted(p.task.prefix.len() as u64);
+                self.trace_queue_end(p.pool_id);
+                self.ev_pool("lost", EventPhase::Instant, p.pool_id, String::new());
             }
             return;
         }
@@ -507,6 +634,7 @@ impl Shared {
             };
             let Some(r) = picked else { break };
             let p = st.queue.pop_front().unwrap();
+            self.trace_queue_end(p.pool_id);
             self.dispatch(st, r, p, 0);
         }
     }
@@ -563,8 +691,18 @@ impl Shared {
             },
         );
         self.parked_count.fetch_add(1, Ordering::Relaxed);
+        self.ev_replica(st, "park", EventPhase::Instant, pool_id, replica, String::new());
         let delivered = match reply {
-            Some(tx) => st.clients[replica].reclaim_via(inner_id, tx),
+            Some(tx) => {
+                let ok = st.clients[replica].reclaim_via(inner_id, tx.clone());
+                if ok {
+                    // wake the replica's collector (it may be blocked in
+                    // a plain recv with nothing previously parked) so it
+                    // adopts this entry's expiry deadline
+                    let _ = tx.send(ProxyEvent::Nudge);
+                }
+                ok
+            }
             None => false,
         };
         if !delivered {
@@ -590,10 +728,13 @@ impl Shared {
     ) -> Option<(Sender<ProxyEvent>, GenResult)> {
         let Some(p) = st.parked.remove(&pool_id) else {
             if let Resolution::Salvaged(s) = how {
-                // expired or aborted before the answer arrived: the
-                // decoded progress has nowhere to go (for an expired
-                // entry this overcounts the re-used prefix — the
-                // conservative bill a wedged replica pays)
+                // aborted or expired before the answer arrived: the
+                // entry left a tombstone carrying the prefix length
+                // that was already billed (abort) or lives on in the
+                // re-dispatched task (expiry), so the collector's
+                // already-resolved branch bills only the NEW progress.
+                // Reaching here without a tombstone cannot happen for
+                // parked entries — bill everything, conservatively.
                 self.ledger.add_wasted(s.tokens.len() as u64);
             }
             return None;
@@ -601,11 +742,25 @@ impl Shared {
         self.parked_count.fetch_sub(1, Ordering::Relaxed);
         st.by_inner[p.replica].remove(&p.inner_id);
         st.outstanding[p.replica] = st.outstanding[p.replica].saturating_sub(1);
+        if self.recorder.is_enabled() {
+            let name = match &how {
+                Resolution::Completed(_) => "done",
+                Resolution::Salvaged(_) => "salvage",
+                Resolution::Lost => "expired",
+            };
+            let detail = match &how {
+                Resolution::Salvaged(s) => format!("tokens={}", s.tokens.len()),
+                _ => String::new(),
+            };
+            self.ev_replica(st, "decode", EventPhase::End, pool_id, p.replica, String::new());
+            self.ev_replica(st, name, EventPhase::Instant, pool_id, p.replica, detail);
+        }
         let mut task = p.task;
         match how {
             Resolution::Completed(res) => {
                 // the generation finished inside the reclaim window:
                 // deliver it once, count it completed, re-decode nothing
+                self.metrics.completed.inc();
                 let fresh = res.tokens.len().saturating_sub(task.prefix.len());
                 if fresh > 0 {
                     st.router.on_completion(
@@ -618,7 +773,13 @@ impl Shared {
                 return Some((task.reply, GenResult { id: pool_id, ..res }));
             }
             Resolution::Salvaged(s) => self.absorb_salvage(&mut task, s),
-            Resolution::Lost => {} // keep whatever prefix the task carries
+            Resolution::Lost => {
+                // the replica may still answer after the deadline; a
+                // tombstone records the prefix that lives on in the
+                // re-dispatched task so the late answer is billed for
+                // exactly the NEW progress, not the whole salvage
+                st.aborted_parked.insert((p.replica, p.inner_id), task.prefix.len());
+            }
         }
         let migrations = p.migrations + 1;
         // either way the task prefers to land anywhere but the replica
@@ -628,6 +789,8 @@ impl Shared {
         match p.dest {
             SalvageDest::Requeue => {
                 st.reclaimed_in_place += 1;
+                self.metrics.reclaimed_in_place.inc();
+                self.trace_queue_begin(req.pool_id);
                 st.queue.push_back(req);
                 self.drain(st);
             }
@@ -635,12 +798,15 @@ impl Shared {
                 let loads = st.loads();
                 match st.router.route_excluding(&loads, Some(p.replica)) {
                     Some(nr) => {
+                        self.ev_pool("redispatch", EventPhase::Instant, pool_id, String::new());
                         self.dispatch(st, nr, req, migrations);
                         st.migrated += 1;
+                        self.metrics.migrated.inc();
                     }
                     None if st.none_serviceable() => {
                         // drop: caller disconnects with the fleet
                         self.ledger.add_wasted(req.task.prefix.len() as u64);
+                        self.ev_pool("lost", EventPhase::Instant, pool_id, String::new());
                     }
                     None => {
                         // no survivor outside the source right now:
@@ -648,6 +814,7 @@ impl Shared {
                         // drain — with only the source still serving,
                         // staying put beats stranding the task until
                         // the next unrelated completion
+                        self.trace_queue_begin(req.pool_id);
                         st.queue.push_back(req);
                         self.drain(st);
                     }
@@ -665,14 +832,60 @@ impl Shared {
 /// RECLAIM answers resolve PendingSalvage entries — re-dispatching
 /// resumed tasks to survivors, or (when the generation finished inside
 /// the reclaim window) delivering the completed result with zero
-/// re-decode. Between events it expires parked entries whose replica
-/// never answered, and when its channel disconnects it finalizes a
-/// pending retirement (join the loop, archive the report, open the
-/// slot).
+/// re-decode. When nothing is parked fleet-wide it blocks on the
+/// channel outright; while entries are parked on this replica it
+/// sleeps exactly until the earliest deadline (no polling tick, no
+/// idle wakeups — a [`ProxyEvent::Nudge`] from `park_for_reclaim`
+/// interrupts the blocking wait so a fresh deadline is adopted). When
+/// its channel disconnects it finalizes a pending retirement (join
+/// the loop, archive the report, open the slot).
 fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<ProxyEvent>) {
-    loop {
-        match rx.recv_timeout(SALVAGE_TICK) {
-            Ok(ProxyEvent::Done(res)) => {
+    'events: loop {
+        // Earliest expiry deadline among the entries parked on THIS
+        // replica, if any. The lock-free parked_count gate keeps the
+        // common (nothing parked anywhere) path off the state lock.
+        let next_deadline = if shared.parked_count.load(Ordering::Relaxed) == 0 {
+            None
+        } else {
+            let st = shared.state.lock().unwrap();
+            st.parked.values().filter(|p| p.replica == r).map(|p| p.deadline).min()
+        };
+        let ev = match next_deadline {
+            None => match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break 'events,
+            },
+            Some(deadline) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    // the replica never answered (wedged mid-decode):
+                    // give up and re-dispatch from the last salvaged
+                    // prefix; a late answer bills only its new progress
+                    // (the entry leaves a tombstone behind)
+                    let mut st = shared.state.lock().unwrap();
+                    let sweep_now = Instant::now();
+                    let overdue: Vec<u64> = st
+                        .parked
+                        .iter()
+                        .filter(|(_, p)| p.replica == r && sweep_now >= p.deadline)
+                        .map(|(&pid, _)| pid)
+                        .collect();
+                    for pid in overdue {
+                        shared.metrics.expired.inc();
+                        shared.resolve_parked(&mut st, pid, Resolution::Lost);
+                    }
+                    continue;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(ev) => ev,
+                    // expiry is due: loop around to sweep it
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => break 'events,
+                }
+            }
+        };
+        match ev {
+            ProxyEvent::Done(res) => {
                 let deliver = {
                     let mut st = shared.state.lock().unwrap();
                     collector_on_done(&shared, &mut st, r, res)
@@ -681,7 +894,7 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<ProxyEvent>) {
                     let _ = reply.send(ProxyEvent::Done(res));
                 }
             }
-            Ok(ProxyEvent::Reclaimed { id, salvage }) => {
+            ProxyEvent::Reclaimed { id, salvage } => {
                 let deliver = {
                     let mut st = shared.state.lock().unwrap();
                     collector_on_reclaimed(&shared, &mut st, r, id, salvage)
@@ -690,27 +903,8 @@ fn collector_loop(shared: Arc<Shared>, r: usize, rx: Receiver<ProxyEvent>) {
                     let _ = reply.send(ProxyEvent::Done(res));
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if shared.parked_count.load(Ordering::Relaxed) == 0 {
-                    continue; // nothing parked fleet-wide: stay cheap
-                }
-                let now = Instant::now();
-                let mut st = shared.state.lock().unwrap();
-                let overdue: Vec<u64> = st
-                    .parked
-                    .iter()
-                    .filter(|(_, p)| p.replica == r && now >= p.deadline)
-                    .map(|(&pid, _)| pid)
-                    .collect();
-                for pid in overdue {
-                    // the replica never answered (wedged mid-decode):
-                    // give up and re-dispatch from the last salvaged
-                    // prefix; a late answer is counted wasted on
-                    // arrival
-                    shared.resolve_parked(&mut st, pid, Resolution::Lost);
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
+            // a park just (re)armed a deadline: recompute at loop top
+            ProxyEvent::Nudge => {}
         }
     }
     // the loop has exited and every sender is gone. A crashed loop may
@@ -762,6 +956,18 @@ fn collector_on_done(
     }
     st.by_inner[r].remove(&res.id);
     st.outstanding[r] = st.outstanding[r].saturating_sub(1);
+    shared.metrics.completed.inc();
+    if shared.recorder.is_enabled() {
+        shared.ev_replica(st, "decode", EventPhase::End, pool_id, r, String::new());
+        shared.ev_replica(
+            st,
+            "done",
+            EventPhase::Instant,
+            pool_id,
+            r,
+            format!("tokens={}", res.tokens.len()),
+        );
+    }
     let entry = st.inflight.remove(&pool_id);
     if let Some(e) = &entry {
         // feed the router only the tokens THIS replica decoded:
@@ -800,12 +1006,14 @@ fn collector_on_reclaimed(
         _ => {
             // already resolved: the Done beat this answer on the same
             // channel, or the entry expired / was aborted. A late
-            // salvage has nowhere to go — but an aborted entry's
-            // prefix was billed at the abort, so its tombstone limits
-            // this to the NEW progress; an expired entry pays the
-            // documented conservative overcount. The tombstone is
-            // consumed on ANY answer (a None answer is the end of the
-            // story too — its Done, if one existed, ran just above)
+            // salvage has nowhere to go — but both abort and expiry
+            // leave a tombstone carrying the prefix length that was
+            // already billed (abort) or re-dispatched with the task
+            // (expiry), so the bill here is EXACTLY the new progress
+            // the wedged replica decoded after the entry was parked.
+            // The tombstone is consumed on ANY answer (a None answer
+            // is the end of the story too — its Done, if one existed,
+            // ran just above)
             let carried = st.aborted_parked.remove(&(r, inner_id)).unwrap_or(0);
             if let Some(s) = salvage {
                 shared.ledger.add_wasted(s.tokens.len().saturating_sub(carried) as u64);
@@ -826,6 +1034,16 @@ fn finalize_retirement(shared: &Arc<Shared>, r: usize) {
     let proxy_report = proxy.shutdown().unwrap_or_default();
     let mut st = shared.state.lock().unwrap();
     let serve_secs = st.close_serve_clock(r);
+    // archive the occupant's time-attribution, adding the pool-side
+    // drain tail (between leaving service and this finalization), and
+    // hand the slot a fresh accumulator so occupants never blend
+    let mut attr = st.attr[r].snapshot();
+    if let Some(t) = st.drain_start[r].take() {
+        attr.draining += t.elapsed().as_secs_f64();
+    }
+    st.attr[r] = Arc::default();
+    shared.metrics.retired.inc();
+    shared.ev_replica(&st, "retired", EventPhase::Instant, 0, r, String::new());
     st.retired.push(ReplicaReport {
         utilization: proxy_report.mean_occupancy(st.slots),
         proxy: proxy_report,
@@ -835,6 +1053,7 @@ fn finalize_retirement(shared: &Arc<Shared>, r: usize) {
         slot: r,
         generation: st.generation[r],
         serve_secs,
+        attr,
     });
     st.phase[r] = Phase::Retired;
 }
@@ -879,6 +1098,16 @@ fn sync_agent(shared: Arc<Shared>, rx: Receiver<(Vec<f32>, u64)>) {
             st.syncing = None;
             if applied && st.phase[r] != Phase::Retired {
                 st.replica_version[r] = version;
+                if shared.recorder.is_enabled() {
+                    shared.ev_replica(
+                        &st,
+                        "weight_sync",
+                        EventPhase::Instant,
+                        0,
+                        r,
+                        format!("version={version}"),
+                    );
+                }
             }
             shared.drain(&mut st);
             drop(st);
@@ -907,6 +1136,9 @@ pub struct ReplicaReport {
     /// wall seconds this occupant spent in the serving phase — the
     /// replica-seconds currency the autoscaler economizes
     pub serve_secs: f64,
+    /// where this occupant's replica-seconds went: decode-busy /
+    /// prefill / prefill-replay / weight-sync / draining / idle-bubble
+    pub attr: AttrSnapshot,
 }
 
 /// Final fleet statistics (per live replica + retired occupants +
@@ -971,13 +1203,26 @@ impl PoolReport {
         h
     }
 
+    /// Fleet-wide time-attribution, merged across every occupant —
+    /// the paper's resource bubbles, split by cause instead of
+    /// aggregated into one utilization number.
+    pub fn attribution(&self) -> AttrSnapshot {
+        let mut total = AttrSnapshot::default();
+        for r in self.all_occupants() {
+            total.merge(&r.attr);
+        }
+        total
+    }
+
     /// Markdown table of per-occupant utilization and queue depth — the
     /// fleet section of bench/example reports. Retired occupants are
     /// listed after the live slots as `slot~generation (retired)`.
+    /// `attr b/s/i` is the occupant's serving time split into
+    /// busy/weight-sync/idle percent (see `AttrSnapshot`).
     pub fn format_table(&self) -> String {
         let mut t = Table::new(&[
             "replica", "routed", "completed", "aborted", "tokens", "wasted", "util", "depth mean",
-            "depth p99",
+            "depth p99", "attr b/s/i",
         ]);
         let mut row = |label: String, r: &ReplicaReport| {
             t.row(&[
@@ -990,6 +1235,7 @@ impl PoolReport {
                 format!("{:.2}", r.utilization),
                 format!("{:.1}", r.queue_depth.mean()),
                 format!("{:.1}", r.queue_depth.percentile(99.0)),
+                r.attr.format_compact(),
             ]);
         };
         for r in &self.replicas {
@@ -1026,6 +1272,9 @@ pub struct LlmProxyPool {
     /// latest broadcast weights + version — what a freshly added
     /// replica is pinned to
     latest: Arc<Mutex<(Vec<f32>, u64)>>,
+    /// where `shutdown` writes `trace.{json,jsonl}` and
+    /// `metrics.{txt,csv}` (`PoolCfg::trace.export_path`)
+    export_path: Option<PathBuf>,
 }
 
 impl LlmProxyPool {
@@ -1048,6 +1297,10 @@ impl LlmProxyPool {
         anyhow::ensure!(
             cfg.salvage_timeout.is_finite() && cfg.salvage_timeout > 0.0,
             "salvage_timeout must be > 0 seconds"
+        );
+        anyhow::ensure!(
+            !cfg.trace.enabled || cfg.trace.ring_capacity > 0,
+            "trace.ring_capacity must be > 0 when tracing is enabled"
         );
         let ledger = Arc::new(TokenLedger::default());
         let latest = Arc::new(Mutex::new((init_weights.clone(), 0u64)));
@@ -1105,6 +1358,7 @@ impl LlmProxyPool {
             completion_tx.push(Some(tx));
             completion_rx.push(rx);
         }
+        let attr: Vec<Arc<Attribution>> = replicas.iter().map(|p| p.attribution()).collect();
         let state = PoolState {
             router: Router::new(cfg.route_policy),
             clients,
@@ -1128,8 +1382,9 @@ impl LlmProxyPool {
             slots: cfg.replica_slots,
             depth: (0..n).map(|_| depth_hist()).collect(),
             util: (0..n).map(|_| util_hist()).collect(),
-            queue_depth: depth_hist(),
             queue_window: depth_hist(),
+            attr,
+            drain_start: vec![None; n],
             completion_tx,
             serve_start: (0..n).map(|_| Some(Instant::now())).collect(),
             served: vec![0.0; n],
@@ -1144,6 +1399,9 @@ impl LlmProxyPool {
             reclaim_in_place: cfg.reclaim_in_place,
             parked_count: AtomicUsize::new(0),
             retiring: Mutex::new(HashMap::new()),
+            recorder: FlightRecorder::from_cfg(&cfg.trace),
+            metrics: FleetMetrics::new(),
+            route_policy: cfg.route_policy,
         });
         let mut collectors = Vec::with_capacity(n);
         for (r, rx) in completion_rx.into_iter().enumerate() {
@@ -1171,6 +1429,7 @@ impl LlmProxyPool {
             slots: cfg.replica_slots,
             spawner,
             latest,
+            export_path: cfg.trace.export_path.clone(),
         }
     }
 
@@ -1208,6 +1467,7 @@ impl LlmProxyPool {
         // collectors and callers flow while the replica boots
         let replica = spawner(slot, generation);
         let client = replica.client();
+        let attr = replica.attribution();
         // pin the newcomer to the latest broadcast weights: the spawner
         // snapshot may have raced a concurrent update_weights
         let (weights, version) = {
@@ -1228,6 +1488,8 @@ impl LlmProxyPool {
                 st.routed.push(0);
                 st.depth.push(depth_hist());
                 st.util.push(util_hist());
+                st.attr.push(attr);
+                st.drain_start.push(None);
                 st.completion_tx.push(Some(tx));
                 st.serve_start.push(Some(Instant::now()));
                 st.served.push(0.0);
@@ -1244,6 +1506,8 @@ impl LlmProxyPool {
                 st.routed[slot] = 0;
                 st.depth[slot] = depth_hist();
                 st.util[slot] = util_hist();
+                st.attr[slot] = attr;
+                st.drain_start[slot] = None;
                 st.completion_tx[slot] = Some(tx);
                 st.serve_start[slot] = Some(Instant::now());
                 st.served[slot] = 0.0;
@@ -1252,6 +1516,8 @@ impl LlmProxyPool {
                 st.router.reset_replica(slot);
             }
             st.grown += 1;
+            self.shared.metrics.grown.inc();
+            self.shared.ev_replica(&st, "grow", EventPhase::Instant, 0, slot, String::new());
             if st.pool_suspended {
                 st.clients[slot].suspend();
             }
@@ -1309,6 +1575,8 @@ impl LlmProxyPool {
             }
             st.phase[r] = Phase::Draining;
             st.close_serve_clock(r);
+            st.drain_start[r] = Some(Instant::now());
+            self.shared.ev_replica(&st, "retire", EventPhase::Instant, 0, r, String::new());
         }
         // stash the proxy handle for the collector to join BEFORE the
         // loop can possibly exit, so the finalization never misses it
@@ -1416,12 +1684,24 @@ impl LlmProxyPool {
         if st.none_serviceable() {
             return None; // drop: nothing can ever serve this
         }
-        st.queue_depth.record(st.queue.len() as f64);
+        self.shared.metrics.submitted.inc();
+        self.shared.metrics.pool_queue_depth.record(st.queue.len() as f64);
         st.queue_window.record(st.queue.len() as f64);
+        if self.shared.recorder.is_enabled() {
+            self.shared.ev_pool(
+                "submit",
+                EventPhase::Instant,
+                pool_id,
+                format!("prompt={}", req.task.prompt.len()),
+            );
+        }
         let loads = st.loads();
         match st.router.route(&loads) {
             Some(r) => self.shared.dispatch(&mut st, r, req, 0),
-            None => st.queue.push_back(req),
+            None => {
+                self.shared.trace_queue_begin(pool_id);
+                st.queue.push_back(req);
+            }
         }
         Some(pool_id)
     }
@@ -1435,6 +1715,8 @@ impl LlmProxyPool {
             if p.pool_id == pool_id {
                 // a queued task's salvaged prefix dies with it
                 self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
+                self.shared.trace_queue_end(pool_id);
+                self.shared.ev_pool("abort", EventPhase::Instant, pool_id, String::new());
                 false
             } else {
                 true
@@ -1444,6 +1726,10 @@ impl LlmProxyPool {
             st.by_inner[e.replica].remove(&e.inner_id);
             st.outstanding[e.replica] = st.outstanding[e.replica].saturating_sub(1);
             st.clients[e.replica].abort(e.inner_id);
+            if self.shared.recorder.is_enabled() {
+                self.shared.ev_replica(&st, "decode", EventPhase::End, pool_id, e.replica, String::new());
+                self.shared.ev_replica(&st, "abort", EventPhase::Instant, pool_id, e.replica, String::new());
+            }
             self.shared.drain(&mut st);
         } else if let Some(p) = st.parked.remove(&pool_id) {
             // abort of a mid-reclaim request: unpark it so the pending
@@ -1459,6 +1745,10 @@ impl LlmProxyPool {
             st.outstanding[p.replica] = st.outstanding[p.replica].saturating_sub(1);
             self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
             st.aborted_parked.insert((p.replica, p.inner_id), p.task.prefix.len());
+            if self.shared.recorder.is_enabled() {
+                self.shared.ev_replica(&st, "decode", EventPhase::End, pool_id, p.replica, String::new());
+                self.shared.ev_replica(&st, "abort", EventPhase::Instant, pool_id, p.replica, String::new());
+            }
             self.shared.drain(&mut st);
         }
     }
@@ -1550,6 +1840,14 @@ impl LlmProxyPool {
                 st.replica_version[r] = version;
             }
         }
+        if self.shared.recorder.is_enabled() {
+            self.shared.ev_pool(
+                "weight_sync",
+                EventPhase::Instant,
+                0,
+                format!("version={version} broadcast=true"),
+            );
+        }
     }
 
     /// Fault injection (tests, chaos drills): hard-stop replica `r`'s
@@ -1570,6 +1868,7 @@ impl LlmProxyPool {
         }
         st.phase[r] = Phase::Dead;
         st.close_serve_clock(r);
+        self.shared.ev_replica(&st, "kill", EventPhase::Instant, 0, r, String::new());
         let ids: Vec<u64> = st
             .inflight
             .iter()
@@ -1618,6 +1917,41 @@ impl LlmProxyPool {
         self.shared.state.lock().unwrap().resumed
     }
 
+    /// The pool's flight recorder (disabled unless `PoolCfg::trace`
+    /// enables it) — the autoscaler and controller stamp their own
+    /// lifecycle events through this handle.
+    pub fn recorder(&self) -> Arc<FlightRecorder> {
+        self.shared.recorder.clone()
+    }
+
+    /// The pool's named-metrics registry (counters + the lifetime
+    /// pool-queue histogram). Reporters may `snapshot_and_reset` for
+    /// windowed readings.
+    pub fn metrics(&self) -> Arc<MetricsRegistry> {
+        self.shared.metrics.registry.clone()
+    }
+
+    /// Live fleet-wide time-attribution: archived retirees plus every
+    /// slot's current occupant. `StepLog` takes per-step deltas of
+    /// this; categories sum to total replica-seconds (serving ones to
+    /// `serving_replicas × wall_secs`).
+    pub fn attribution(&self) -> AttrSnapshot {
+        let st = self.shared.state.lock().unwrap();
+        let mut total = AttrSnapshot::default();
+        for rep in &st.retired {
+            total.merge(&rep.attr);
+        }
+        for (r, a) in st.attr.iter().enumerate() {
+            let mut s = a.snapshot();
+            // a slot mid-drain owes its pool-side drain tail too
+            if let Some(t) = st.drain_start[r] {
+                s.draining += t.elapsed().as_secs_f64();
+            }
+            total.merge(&s);
+        }
+        total
+    }
+
     /// Stop every replica and collector; gather the fleet report.
     pub fn shutdown(mut self) -> Result<PoolReport> {
         // 1. finish any queued rolling-sync waves
@@ -1633,6 +1967,8 @@ impl LlmProxyPool {
             }
             for p in st.queue.drain(..) {
                 self.shared.ledger.add_wasted(p.task.prefix.len() as u64);
+                self.shared.trace_queue_end(p.pool_id);
+                self.shared.ev_pool("lost", EventPhase::Instant, p.pool_id, String::new());
             }
         }
         // 3. join live replica loops (drops their in-flight reply
@@ -1665,6 +2001,10 @@ impl LlmProxyPool {
         for (r, proxy) in proxy_reports.into_iter().enumerate() {
             let Some(proxy) = proxy else { continue };
             let serve_secs = st.close_serve_clock(r);
+            let mut attr = st.attr[r].snapshot();
+            if let Some(t) = st.drain_start[r].take() {
+                attr.draining += t.elapsed().as_secs_f64();
+            }
             replicas.push(ReplicaReport {
                 utilization: proxy.mean_occupancy(self.slots),
                 proxy,
@@ -1674,9 +2014,10 @@ impl LlmProxyPool {
                 slot: r,
                 generation: st.generation[r],
                 serve_secs,
+                attr,
             });
         }
-        Ok(PoolReport {
+        let report = PoolReport {
             replicas,
             retired: std::mem::take(&mut st.retired),
             migrated: st.migrated,
@@ -1684,9 +2025,17 @@ impl LlmProxyPool {
             resumed: st.resumed,
             sync_waves: st.sync_waves,
             grown: st.grown,
-            pool_queue_depth: st.queue_depth.clone(),
+            pool_queue_depth: self.shared.metrics.pool_queue_depth.read(),
             tokens: self.shared.ledger.stats(),
-        })
+        };
+        drop(st);
+        if let Some(dir) = &self.export_path {
+            self.shared.recorder.export_to_dir(dir)?;
+            let snap = self.shared.metrics.registry.snapshot();
+            std::fs::write(dir.join("metrics.txt"), snap.to_text())?;
+            std::fs::write(dir.join("metrics.csv"), snap.to_csv())?;
+        }
+        Ok(report)
     }
 }
 
@@ -1796,6 +2145,7 @@ pub(crate) mod testing {
             min_salvage_tokens: 1,
             salvage_timeout: 2.0,
             reclaim_in_place: true,
+            trace: TraceCfg::disabled(),
         }
     }
 
@@ -2251,5 +2601,104 @@ mod tests {
         // the redispatch landed on the survivor, so at least 3 dispatch
         // samples exist fleet-wide
         assert!(merged.count() >= 3, "{merged:?}");
+    }
+
+    // --- observability -----------------------------------------------
+
+    #[test]
+    fn trace_covers_every_request_and_round_trips() {
+        use crate::metrics::trace::check_span_nesting;
+        use crate::util::json::Json;
+        let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+        c.trace = TraceCfg { enabled: true, ring_capacity: 4096, export_path: None };
+        let p = pool_with_progress(2, 3, &c);
+        let mut ids = Vec::new();
+        for i in 0..4 {
+            let (id, _rx) = p.generate(vec![i], 8);
+            ids.push(id);
+        }
+        assert!(p.migrate(ids[0]));
+        p.settle(SETTLE);
+        for &id in &ids {
+            p.abort(id);
+        }
+        p.settle(SETTLE);
+        let rec = p.recorder();
+        let events = rec.events();
+        for &id in &ids {
+            assert!(
+                events.iter().any(|e| e.req == id && e.name == "submit"),
+                "request {id} missing from the trace"
+            );
+        }
+        // the migrated request's full story is on record
+        let names: Vec<&str> =
+            events.iter().filter(|e| e.req == ids[0]).map(|e| e.name).collect();
+        for expect in ["submit", "route", "prefill", "decode", "park", "salvage", "redispatch", "abort"]
+        {
+            assert!(names.contains(&expect), "{expect} missing from {names:?}");
+        }
+        // every span closed, none interleaved
+        check_span_nesting(&events).unwrap();
+        assert_eq!(rec.dropped(), 0);
+        // exports round-trip through the JSON parser
+        let chrome = Json::parse(&rec.export_chrome_trace()).expect("chrome trace parses");
+        let evs = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), events.len());
+        for line in rec.export_jsonl().lines() {
+            Json::parse(line).expect("every JSONL line parses");
+        }
+        // the registry counted the same story
+        let snap = p.metrics().snapshot();
+        let counter = |name: &str| {
+            snap.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        assert_eq!(counter("pool.submitted"), 4);
+        assert_eq!(counter("pool.migrated"), 1);
+    }
+
+    #[test]
+    fn attribution_sums_to_serving_replica_seconds() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        let base = p.attribution();
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(300));
+        let delta = p.attribution().delta(&base);
+        let wall = t0.elapsed().as_secs_f64();
+        let expect = 2.0 * wall; // serving_replicas × wall_secs
+        let got = delta.serving_total();
+        assert!(
+            (got - expect).abs() <= 0.4 * expect + 0.05,
+            "attribution drifted: {got:.3}s attributed vs {expect:.3}s of replica time"
+        );
+        assert!(
+            delta.idle_bubble >= 0.8 * got,
+            "stub replicas never decode: idle must dominate: {delta:?}"
+        );
+        assert!(delta.draining.abs() < 1e-6, "nothing drained: {delta:?}");
+        // the per-occupant split survives into the report and table
+        let report = p.shutdown().unwrap();
+        assert!(report.attribution().serving_total() >= got - 0.05);
+        assert!(report.format_table().contains("attr b/s/i"));
+    }
+
+    #[test]
+    fn shutdown_exports_trace_and_metrics_files() {
+        let dir = std::env::temp_dir().join(format!("fleet-trace-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = cfg(1, RoutePolicy::RoundRobin, 4);
+        c.trace =
+            TraceCfg { enabled: true, ring_capacity: 1024, export_path: Some(dir.clone()) };
+        let p = pool_with_progress(1, 0, &c);
+        let _g = p.generate(vec![1], 4);
+        p.shutdown().unwrap();
+        for f in ["trace.json", "trace.jsonl", "metrics.txt", "metrics.csv"] {
+            assert!(dir.join(f).exists(), "{f} must be exported at shutdown");
+        }
+        let text = std::fs::read_to_string(dir.join("trace.json")).unwrap();
+        crate::util::json::Json::parse(&text).expect("exported chrome trace parses");
+        let metrics = std::fs::read_to_string(dir.join("metrics.txt")).unwrap();
+        assert!(metrics.contains("counter pool.submitted 1"), "{metrics}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

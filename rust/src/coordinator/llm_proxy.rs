@@ -41,6 +41,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::metrics::trace::{AttrCategory, AttrStopwatch, Attribution};
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 
@@ -159,6 +160,12 @@ pub struct Salvage {
 pub enum ProxyEvent {
     Done(GenResult),
     Reclaimed { id: u64, salvage: Option<Salvage> },
+    /// Collector wakeup hint, sent by the *pool* (never a proxy loop)
+    /// onto a replica's collector channel when a salvage is parked
+    /// there: the collector recomputes its expiry deadline instead of
+    /// polling on a tick. Carries no payload and never reaches caller
+    /// reply channels.
+    Nudge,
 }
 
 impl ProxyEvent {
@@ -170,6 +177,9 @@ impl ProxyEvent {
             ProxyEvent::Done(r) => r,
             ProxyEvent::Reclaimed { id, .. } => {
                 panic!("expected a completed generation, got a reclaim answer for {id}")
+            }
+            ProxyEvent::Nudge => {
+                panic!("expected a completed generation, got a collector nudge")
             }
         }
     }
@@ -332,6 +342,9 @@ enum StubReclaim {
 pub struct LlmProxy {
     client: ProxyClient,
     ledger: Arc<TokenLedger>,
+    /// where this loop's wall-seconds went (decode/prefill/sync/idle);
+    /// the loop laps it continuously, the pool reads it live
+    attr: Arc<Attribution>,
     join: Option<JoinHandle<Result<ProxyReport>>>,
 }
 
@@ -390,13 +403,16 @@ impl LlmProxy {
     ) -> Self {
         let (tx, rx) = channel();
         let lg = ledger.clone();
+        let attr: Arc<Attribution> = Arc::default();
+        let at = attr.clone();
         let join = std::thread::Builder::new()
             .name("llm-proxy".into())
-            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx, lg))
+            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx, lg, at))
             .expect("spawn llm-proxy");
         LlmProxy {
             client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
             ledger,
+            attr,
             join: Some(join),
         }
     }
@@ -409,6 +425,12 @@ impl LlmProxy {
     /// Live wasted/salvaged token counters for this replica's ledger.
     pub fn token_stats(&self) -> TokenStats {
         self.ledger.stats()
+    }
+
+    /// The loop's live time-attribution accumulator (shared with the
+    /// proxy thread; the pool aggregates these into `PoolReport`).
+    pub fn attribution(&self) -> Arc<Attribution> {
+        self.attr.clone()
     }
 
     /// Test-only replica with no engine: accepts commands, holds ADDed
@@ -458,11 +480,25 @@ impl LlmProxy {
     #[cfg(test)]
     fn spawn_stub_inner(behavior: StubReclaim, reclaim_delay: std::time::Duration) -> Self {
         let (tx, rx) = channel::<Cmd>();
+        let attr: Arc<Attribution> = Arc::default();
+        let at = attr.clone();
         let join = std::thread::Builder::new()
             .name("llm-proxy-stub".into())
             .spawn(move || {
+                // a stub never decodes, so its whole life is an idle
+                // bubble; lap at the real loop's 2 ms idle cadence so
+                // live attribution reads stay fresh
+                let mut sw = AttrStopwatch::new(at);
                 let mut held: Vec<GenRequest> = Vec::new();
-                while let Ok(cmd) = rx.recv() {
+                'stub: loop {
+                    let cmd = match rx.recv_timeout(std::time::Duration::from_millis(2)) {
+                        Ok(cmd) => cmd,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                            sw.lap(AttrCategory::IdleBubble);
+                            continue;
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
                     match cmd {
                         Cmd::Add(req) => held.push(req),
                         Cmd::Abort(id) => held.retain(|r| r.id != id),
@@ -525,8 +561,9 @@ impl LlmProxy {
                             }
                         }
                         Cmd::Suspend | Cmd::Resume => {}
-                        Cmd::Shutdown => break,
+                        Cmd::Shutdown => break 'stub,
                     }
+                    sw.lap(AttrCategory::IdleBubble);
                 }
                 Ok(ProxyReport::default())
             })
@@ -534,6 +571,7 @@ impl LlmProxy {
         LlmProxy {
             client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
             ledger: Arc::default(),
+            attr,
             join: Some(join),
         }
     }
@@ -707,6 +745,7 @@ fn proxy_loop(
     seed: u64,
     rx: Receiver<Cmd>,
     ledger: Arc<TokenLedger>,
+    attr: Arc<Attribution>,
 ) -> Result<ProxyReport> {
     let rt = ModelRuntime::load(&dir)?;
     let (b, s, v) = (rt.manifest.decode_batch, rt.manifest.max_seq, rt.manifest.vocab);
@@ -721,9 +760,13 @@ fn proxy_loop(
     let mut stash: VecDeque<Cmd> = VecDeque::new();
     let mut suspended = false;
     let mut report = ProxyReport::default();
+    // time-attribution: every instant of this loop's life lands in
+    // exactly one category, lapped at the segment boundaries below
+    let mut sw = AttrStopwatch::new(attr);
 
     'outer: loop {
         // --- service 3: process commands (stash + non-blocking drain) ---
+        let mut swapped_weights = false;
         loop {
             let cmd = match stash.pop_front() {
                 Some(c) => c,
@@ -753,6 +796,7 @@ fn proxy_loop(
                     // decode steps (we are between steps here)
                     params = rt.params_literal(&weights)?;
                     version = ver;
+                    swapped_weights = true;
                     if let Some(ack) = ack {
                         let _ = ack.send(());
                     }
@@ -762,9 +806,15 @@ fn proxy_loop(
                 Cmd::Shutdown => break 'outer,
             }
         }
+        if swapped_weights {
+            // the drain segment was dominated by the parameter rebuild
+            sw.lap(AttrCategory::WeightSync);
+        }
 
         // admit queued tasks into free slots (continuous batching),
         // prefilling prompt ++ salvaged prefix
+        let mut admitted_fresh = false;
+        let mut admitted_resumed = false;
         if !suspended {
             for si in 0..b {
                 if slots[si].is_none() {
@@ -806,6 +856,13 @@ fn proxy_loop(
                     row.fill(0);
                     row[..pl].copy_from_slice(&req.task.prompt[..pl]);
                     row[pl..pl + tokens.len()].copy_from_slice(&tokens);
+                    if tokens.is_empty() {
+                        admitted_fresh = true;
+                    } else {
+                        // the KV rebuild of a salvaged prefix: the
+                        // migration bill, attributed separately
+                        admitted_resumed = true;
+                    }
                     slots[si] = Some(Slot {
                         pos: pl + tokens.len(),
                         tokens,
@@ -815,6 +872,11 @@ fn proxy_loop(
                     });
                 }
             }
+        }
+        if admitted_resumed {
+            sw.lap(AttrCategory::PrefillReplay);
+        } else if admitted_fresh {
+            sw.lap(AttrCategory::Prefill);
         }
 
         let active = slots.iter().filter(|x| x.is_some()).count();
@@ -826,6 +888,9 @@ fn proxy_loop(
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'outer,
             }
+            // suspended = waiting out a weight sync; otherwise the
+            // paper's resource bubble: nothing to decode
+            sw.lap(if suspended { AttrCategory::WeightSync } else { AttrCategory::IdleBubble });
             continue;
         }
 
@@ -875,6 +940,7 @@ fn proxy_loop(
                 tokens_buf[si * s..(si + 1) * s].fill(0);
             }
         }
+        sw.lap(AttrCategory::DecodeBusy);
     }
 
     // teardown: requests still held never complete — their decoded

@@ -52,6 +52,9 @@ pub use rollout::{EngineCfg, EngineReport, GenBackend, GroupTasks, RolloutEngine
 pub use routing::{ReplicaLoad, RoutePolicy, Router};
 pub use sample_buffer::{Admission, BufferStats, SampleBuffer};
 
+// the trace knobs ride along with the fleet cfg, so surface them here
+pub use crate::metrics::trace::{FlightRecorder, TraceCfg};
+
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -111,6 +114,12 @@ pub struct RolloutSystemCfg {
     /// `ControllerCfg::autoscale` via `Self::controller_autoscale` so
     /// it is configured in exactly one place.
     pub autoscale: AutoscaleCfg,
+    /// flight recorder: per-request lifecycle spans in bounded
+    /// per-replica rings plus replica time-attribution, exported as
+    /// JSONL + Chrome `trace_event` JSON at shutdown (`trace: {…}` in
+    /// YAML, `trace=`/`trace_path=` on the CLI; disabled by default —
+    /// off, the recorder is a single branch per call site)
+    pub trace: TraceCfg,
 }
 
 impl RolloutSystemCfg {
@@ -136,6 +145,10 @@ impl RolloutSystemCfg {
             "salvage_timeout must be > 0 seconds"
         );
         self.autoscale.validate()?;
+        anyhow::ensure!(
+            !self.trace.enabled || self.trace.ring_capacity > 0,
+            "trace.ring_capacity must be > 0 when tracing is enabled"
+        );
         Ok(())
     }
 
@@ -207,6 +220,7 @@ impl RolloutSystem {
             min_salvage_tokens: cfg.min_salvage_tokens,
             salvage_timeout: cfg.salvage_timeout,
             reclaim_in_place: cfg.reclaim_in_place,
+            trace: cfg.trace.clone(),
         };
         let proxy = Arc::new(LlmProxyPool::spawn(
             &pool_cfg,
@@ -225,8 +239,16 @@ impl RolloutSystem {
         }
         let stop = Arc::new(AtomicBool::new(false));
         let backend: Arc<dyn GenBackend> = proxy.clone();
-        let engine =
-            RolloutEngine::start(engine_cfg, backend, buffer.clone(), stop.clone(), envs)?;
+        // one registry covers both layers: the engine's counters land
+        // in the pool's shutdown metrics export
+        let engine = RolloutEngine::start_with_metrics(
+            engine_cfg,
+            backend,
+            buffer.clone(),
+            stop.clone(),
+            envs,
+            Some(proxy.metrics()),
+        )?;
         Ok(RolloutSystem { proxy, buffer, stop, engine })
     }
 
@@ -275,6 +297,7 @@ mod tests {
             salvage_timeout: 0.5,
             reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
+            trace: TraceCfg::disabled(),
         }
     }
 
@@ -326,6 +349,17 @@ mod tests {
             mutate(&mut c);
             assert!(c.validate().is_err(), "{c:?} should be rejected");
         }
+    }
+
+    #[test]
+    fn zero_capacity_trace_ring_rejected_only_when_enabled() {
+        let mut c = cfg();
+        c.trace = TraceCfg { enabled: true, ring_capacity: 0, export_path: None };
+        assert!(c.validate().is_err());
+        c.trace.enabled = false;
+        assert!(c.validate().is_ok(), "inert trace knobs must not block a run");
+        c.trace = TraceCfg { enabled: true, ring_capacity: 64, export_path: None };
+        c.validate().unwrap();
     }
 
     #[test]

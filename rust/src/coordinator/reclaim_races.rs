@@ -250,6 +250,52 @@ fn abort_of_parked_entry_bills_prefix_exactly_once() {
     assert_eq!(stats.wasted_tokens, 6, "prefix double-charged: {stats:?}");
     assert_eq!(stats.salvaged_tokens, 3, "{stats:?}");
     p.check_invariants();
+
+    // arm 3: expiry instead of abort — the entry times out (Lost), the
+    // task re-dispatches carrying its prefix, and the LATE answer is
+    // billed for exactly the new progress. The tombstone threads the
+    // resumed-prefix length through the expiry, so the 6-token answer
+    // (prefix 3 + progress 3) wastes exactly 3 — not 6.
+    let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+    c.salvage_timeout = 0.15; // expires long before the stub answers
+    let delay = Duration::from_millis(600);
+    let p = custom_pool(
+        vec![
+            LlmProxy::spawn_stub_with_progress(3),
+            LlmProxy::spawn_stub_with_reclaim_delay(3, delay),
+        ],
+        &c,
+    );
+    let (sink, _keep) = channel();
+    let d = submit(&p, &sink).unwrap(); // LO -> 0 (the prompt stub)
+    assert!(p.migrate(d));
+    p.settle(SETTLE); // salvage 3 -> resumed on the slow replica 1
+    assert_eq!(p.token_stats().salvaged_tokens, 3);
+    assert_eq!(p.prefix_tokens_outstanding(), 3);
+    assert!(p.migrate(d), "park on the slow replica; its answer is 600ms away");
+    // the deadline wakeup expires the entry at ~150ms and re-dispatches
+    // the task (prefix intact) to the survivor
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while p.pending_reclaims() > 0 {
+        assert!(Instant::now() < deadline, "expiry never fired");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(p.token_stats().wasted_tokens, 0, "the prefix lives on: nothing billed yet");
+    assert_eq!(p.outstanding_per_replica(), vec![1, 0], "re-dispatched to the survivor");
+    assert_eq!(p.prefix_tokens_outstanding(), 3, "the re-dispatched task carries the prefix");
+    // the late answer lands ~450ms later: 6 tokens, of which 3 are the
+    // prefix already re-dispatched — exactly 3 new tokens are wasted
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while p.token_stats().wasted_tokens < 3 {
+        assert!(Instant::now() < deadline, "late salvage never accounted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    p.settle(SETTLE);
+    let stats = p.token_stats();
+    assert_eq!(stats.wasted_tokens, 3, "late answer billed beyond its new progress: {stats:?}");
+    assert_eq!(stats.salvaged_tokens, 3, "{stats:?}");
+    assert_eq!(p.prefix_tokens_outstanding(), 3);
+    p.check_invariants();
 }
 
 // ---------------------------------------------------------------------------

@@ -46,6 +46,7 @@ use crate::coordinator::llm_proxy::{GenResult, GenerationTask, ProxyEvent};
 use crate::coordinator::rollout::episode::{Episode, EpisodeState, GroupTasks};
 use crate::coordinator::sample_buffer::{Admission, SampleBuffer};
 use crate::env::{BaseEnv, PendingStep, StepResult};
+use crate::metrics::registry::{Counter, Gauge, MetricsRegistry};
 
 /// Give up on an episode after this many generation-hang strikes.
 const MAX_GEN_MIGRATIONS: u32 = 3;
@@ -167,6 +168,39 @@ pub struct EngineReport {
     pub timers_fired: u64,
     /// peak concurrently admitted episodes (tickets held at once)
     pub peak_inflight: usize,
+}
+
+/// Engine-side handles into the fleet's central [`MetricsRegistry`]:
+/// the same tallies as [`EngineReport`], but live — windowed snapshots
+/// and the shutdown metrics export see them without waiting for the
+/// engine to join. Absent when the caller has no registry (mock-backend
+/// tests).
+struct EngineMetrics {
+    episodes: Counter,
+    redundant_aborts: Counter,
+    redundant_cancels: Counter,
+    gen_migrations: Counter,
+    abandoned: Counter,
+    lane_failures: Counter,
+    spare_wins: Counter,
+    timers_fired: Counter,
+    tickets_held: Gauge,
+}
+
+impl EngineMetrics {
+    fn new(reg: &MetricsRegistry) -> Self {
+        EngineMetrics {
+            episodes: reg.counter("engine.episodes"),
+            redundant_aborts: reg.counter("engine.redundant_aborts"),
+            redundant_cancels: reg.counter("engine.redundant_cancels"),
+            gen_migrations: reg.counter("engine.gen_migrations"),
+            abandoned: reg.counter("engine.abandoned"),
+            lane_failures: reg.counter("engine.lane_failures"),
+            spare_wins: reg.counter("engine.spare_wins"),
+            timers_fired: reg.counter("engine.timers_fired"),
+            tickets_held: reg.gauge("engine.tickets_held"),
+        }
+    }
 }
 
 /// Everything that wakes the engine.
@@ -347,6 +381,21 @@ impl RolloutEngine {
         stop: Arc<AtomicBool>,
         envs: Vec<Box<dyn BaseEnv>>,
     ) -> Result<Self> {
+        Self::start_with_metrics(cfg, backend, buffer, stop, envs, None)
+    }
+
+    /// Like [`Self::start`], but the engine also mirrors its report
+    /// tallies into `registry` counters (`engine.*`) as they happen —
+    /// `RolloutSystem` hands over the pool's central registry so one
+    /// metrics export covers both layers.
+    pub fn start_with_metrics(
+        cfg: EngineCfg,
+        backend: Arc<dyn GenBackend>,
+        buffer: Arc<SampleBuffer>,
+        stop: Arc<AtomicBool>,
+        envs: Vec<Box<dyn BaseEnv>>,
+        registry: Option<Arc<MetricsRegistry>>,
+    ) -> Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(
             envs.len() == cfg.total_lanes(),
@@ -426,6 +475,7 @@ impl RolloutEngine {
             gen_tx,
             wheel: TimerWheel::new(),
             report: EngineReport::default(),
+            metrics: registry.map(|r| EngineMetrics::new(&r)),
         };
         let join = std::thread::Builder::new()
             .name("rollout-engine".into())
@@ -466,6 +516,7 @@ struct EngineLoop {
     gen_tx: Sender<ProxyEvent>,
     wheel: TimerWheel,
     report: EngineReport,
+    metrics: Option<EngineMetrics>,
 }
 
 impl EngineLoop {
@@ -513,6 +564,17 @@ impl EngineLoop {
         // on the normal stop path (the caller already shut it down).
         self.buffer.shutdown();
         self.report
+    }
+
+    /// Mirror a report increment into the live registry, if attached.
+    fn bump(&self, f: impl Fn(&EngineMetrics)) {
+        if let Some(m) = &self.metrics {
+            f(m);
+        }
+    }
+
+    fn note_tickets(&self) {
+        self.bump(|m| m.tickets_held.set(self.tickets_held as f64));
     }
 
     fn handle(&mut self, ev: Event) {
@@ -565,6 +627,7 @@ impl EngineLoop {
         if step.result.latency > self.cfg.hang_timeout {
             // fail-stop env: the step took longer than we tolerate
             self.report.abandoned += 1;
+            self.bump(|m| m.abandoned.inc());
             self.cancel_episode(lane);
             return;
         }
@@ -605,6 +668,7 @@ impl EngineLoop {
             // engine winds down instead of waiting on a reply that was
             // dropped without a disconnect signal
             self.report.abandoned += 1;
+            self.bump(|m| m.abandoned.inc());
             self.fail_lane(lane);
             return;
         };
@@ -629,6 +693,7 @@ impl EngineLoop {
             return; // stale: the awaited thing already happened
         }
         self.report.timers_fired += 1;
+        self.bump(|m| m.timers_fired.inc());
         match t.kind {
             TimerKind::ObsReady => {
                 if ep.cancelled {
@@ -645,6 +710,7 @@ impl EngineLoop {
                     self.backend.abort(gen_id);
                     self.gen_map.remove(&gen_id);
                     self.report.abandoned += 1;
+                    self.bump(|m| m.abandoned.inc());
                     self.cancel_episode(t.lane);
                     return;
                 }
@@ -653,6 +719,7 @@ impl EngineLoop {
                 // a completion; either way keep watching
                 if self.backend.migrate(gen_id) {
                     self.report.gen_migrations += 1;
+                    self.bump(|m| m.gen_migrations.inc());
                 }
                 self.episodes[t.lane].state = EpisodeState::Generating { gen_id, strikes };
                 self.wheel.schedule(
@@ -704,6 +771,7 @@ impl EngineLoop {
         self.episodes[lane].begin(key, init_version);
         self.by_key.entry(key).or_default().push(lane);
         self.tickets_held += 1;
+        self.note_tickets();
         self.report.peak_inflight = self.report.peak_inflight.max(self.tickets_held);
         let env = self.episodes[lane].env.take().expect("env home between episodes");
         let _ = self.work_tx.send(Work::Reset { lane, env, seed });
@@ -722,10 +790,12 @@ impl EngineLoop {
                     self.backend.abort(gen_id);
                     self.gen_map.remove(&gen_id);
                     self.report.redundant_aborts += 1;
+                    self.bump(|m| m.redundant_aborts.inc());
                     self.cancel_episode(lane);
                 }
                 EpisodeState::SteppingEnv => {
                     self.report.redundant_cancels += 1;
+                    self.bump(|m| m.redundant_cancels.inc());
                     if self.episodes[lane].env.is_some() {
                         self.cancel_episode(lane); // parked on a timer
                     } else {
@@ -746,8 +816,11 @@ impl EngineLoop {
         let traj = self.episodes[lane].finish(reward);
         self.tickets_held -= 1;
         self.report.episodes += 1;
+        self.bump(|m| m.episodes.inc());
+        self.note_tickets();
         if self.episodes[lane].redundant {
             self.report.spare_wins += 1;
+            self.bump(|m| m.spare_wins.inc());
         }
         self.buffer.push(traj); // may fire capacity/group hooks
         self.start_next(lane);
@@ -759,6 +832,7 @@ impl EngineLoop {
         let key = self.episodes[lane].group_key;
         self.remove_from_key(lane, key);
         self.tickets_held -= 1;
+        self.note_tickets();
         self.buffer.cancel();
         if !self.retired[lane] {
             self.retire(lane);
@@ -767,6 +841,7 @@ impl EngineLoop {
 
     fn on_lane_failed(&mut self, lane: usize) {
         self.report.lane_failures += 1;
+        self.bump(|m| m.lane_failures.inc());
         self.fail_lane(lane);
     }
 
@@ -778,6 +853,7 @@ impl EngineLoop {
         self.episodes[lane].pending = None;
         self.episodes[lane].timer_epoch += 1;
         self.tickets_held -= 1;
+        self.note_tickets();
         self.buffer.cancel();
         self.start_next(lane);
     }
@@ -829,6 +905,7 @@ impl EngineLoop {
                     self.backend.abort(gen_id);
                     self.gen_map.remove(&gen_id);
                     self.tickets_held -= 1;
+                    self.note_tickets();
                     self.buffer.cancel();
                     self.retire(lane);
                 }
@@ -836,6 +913,7 @@ impl EngineLoop {
                     if self.episodes[lane].env.is_some() {
                         self.episodes[lane].pending = None;
                         self.tickets_held -= 1;
+                        self.note_tickets();
                         self.buffer.cancel();
                         self.retire(lane);
                     } else {

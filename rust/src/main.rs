@@ -9,7 +9,8 @@
 //!                     salvage_timeout=0.5 reclaim_in_place=true \
 //!                     autoscale=true min_replicas=1 max_replicas=8 \
 //!                     target_queue_depth=8 autoscale_interval=1 \
-//!                     autoscale_cooldown=2 autoscale_hysteresis=0.25
+//!                     autoscale_cooldown=2 autoscale_hysteresis=0.25 \
+//!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -20,7 +21,7 @@ use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
 use roll_flash::coordinator::{
     format_log, run_training, AutoscaleCfg, ControllerCfg, RolloutSystem, RolloutSystemCfg,
-    RoutePolicy,
+    RoutePolicy, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
@@ -42,6 +43,7 @@ fn main() -> Result<()> {
                  \u{20}         salvage_timeout=<f> reclaim_in_place=<bool>\n\
                  \u{20}         autoscale=<bool> min_replicas=<n> max_replicas=<n> target_queue_depth=<f>\n\
                  \u{20}         autoscale_interval=<f> autoscale_cooldown=<f> autoscale_hysteresis=<f>\n\
+                 \u{20}         trace=<bool> trace_ring=<n> trace_path=<dir>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -85,6 +87,13 @@ fn train(cli: &Cli) -> Result<()> {
         cooldown: cli.parse_or("autoscale_cooldown", cfg.autoscale.cooldown),
         hysteresis: cli.parse_or("autoscale_hysteresis", cfg.autoscale.hysteresis),
     };
+    // a trace_path on the CLI implies tracing, like the YAML block
+    let trace = TraceCfg {
+        enabled: cli.bool_or("trace", cfg.trace.enabled || cli.get("trace_path").is_some()),
+        ring_capacity: cli.parse_or("trace_ring", cfg.trace.ring_capacity),
+        export_path: cli.get("trace_path").map(PathBuf::from).or(cfg.trace.export_path.clone()),
+    };
+    let trace_export = trace.export_path.clone().filter(|_| trace.enabled);
 
     // resolved against the crate dir (where `make artifacts` writes),
     // not the CWD, so the CLI works from the workspace root too
@@ -116,6 +125,7 @@ fn train(cli: &Cli) -> Result<()> {
         salvage_timeout,
         reclaim_in_place,
         autoscale,
+        trace,
     };
     fleet.validate()?;
     println!(
@@ -176,6 +186,12 @@ fn train(cli: &Cli) -> Result<()> {
             );
         }
         print!("{}", report.pool.format_table());
+    }
+    if let Some(p) = &trace_export {
+        println!(
+            "trace: wrote {0}/trace.json (chrome://tracing), {0}/trace.jsonl, {0}/metrics.txt",
+            p.display()
+        );
     }
     Ok(())
 }

@@ -1,7 +1,12 @@
 //! Metrics substrate: log-bucketed histograms, utilization ledgers,
-//! and table/CSV emitters used by the bench harness.
+//! and table/CSV emitters used by the bench harness, plus the
+//! flight-recorder tracing layer ([`trace`]) and the central named
+//! metrics registry ([`registry`]).
 
-use std::collections::BTreeMap;
+pub mod registry;
+pub mod trace;
+
+use std::collections::HashMap;
 use std::fmt::Write as _;
 
 /// Log-bucketed latency/size histogram (HDR-lite, std-only).
@@ -140,28 +145,40 @@ impl UtilizationLedger {
     }
 }
 
-/// Named scalar metrics with insertion-ordered emit.
+/// Named scalar metrics with insertion-ordered emit: the CSV header
+/// lists keys in the order they were first set, so columns line up
+/// with the writer's narrative rather than alphabetically.
 #[derive(Clone, Debug, Default)]
 pub struct Scalars {
-    vals: BTreeMap<String, f64>,
+    vals: Vec<(String, f64)>,
+    index: HashMap<String, usize>,
 }
 
 impl Scalars {
     pub fn set(&mut self, k: &str, v: f64) {
-        self.vals.insert(k.to_string(), v);
+        match self.index.get(k) {
+            Some(&i) => self.vals[i].1 = v,
+            None => {
+                self.index.insert(k.to_string(), self.vals.len());
+                self.vals.push((k.to_string(), v));
+            }
+        }
     }
 
     pub fn add(&mut self, k: &str, v: f64) {
-        *self.vals.entry(k.to_string()).or_insert(0.0) += v;
+        match self.index.get(k) {
+            Some(&i) => self.vals[i].1 += v,
+            None => self.set(k, v),
+        }
     }
 
     pub fn get(&self, k: &str) -> Option<f64> {
-        self.vals.get(k).copied()
+        self.index.get(k).map(|&i| self.vals[i].1)
     }
 
     pub fn to_csv_row(&self) -> (String, String) {
-        let header = self.vals.keys().cloned().collect::<Vec<_>>().join(",");
-        let row = self.vals.values().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(",");
+        let header = self.vals.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>().join(",");
+        let row = self.vals.iter().map(|(_, v)| format!("{v:.6}")).collect::<Vec<_>>().join(",");
         (header, row)
     }
 }
@@ -293,6 +310,21 @@ mod tests {
         u.close(5.0); // 4 workers x 5s = 20 worker-seconds
         assert!((u.utilization() - 0.5).abs() < 1e-12);
         assert!((u.bubble_time() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalars_emit_insertion_order() {
+        let mut s = Scalars::default();
+        s.set("zulu", 1.0);
+        s.set("alpha", 2.0);
+        s.add("mike", 3.0);
+        s.set("alpha", 4.0); // overwrite must not move the column
+        s.add("zulu", 0.5);
+        let (header, row) = s.to_csv_row();
+        assert_eq!(header, "zulu,alpha,mike", "first-set order, not alphabetical");
+        assert_eq!(row, "1.500000,4.000000,3.000000");
+        assert_eq!(s.get("alpha"), Some(4.0));
+        assert_eq!(s.get("missing"), None);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Central metrics registry: named counters, gauges, and histograms
+//! with snapshot-and-reset semantics, replacing the ad-hoc `Histogram`
+//! fields that accreted across the fleet layers. Components register
+//! handles once (registration is idempotent by name) and bump them
+//! lock-free on the hot path; reporters take a [`MetricsSnapshot`] for
+//! text/CSV export. Names are emitted in registration order.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Histogram;
+
+/// Monotonic event counter. `Clone` shares the underlying cell.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as f64 bits).
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared handle onto a registry-owned [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistogramHandle(Arc<Mutex<Histogram>>);
+
+impl HistogramHandle {
+    pub fn record(&self, v: f64) {
+        self.0.lock().unwrap().record(v);
+    }
+
+    /// Read the current distribution (clone; the live one keeps
+    /// accumulating).
+    pub fn read(&self) -> Histogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Vec<(String, Counter)>,
+    gauges: Vec<(String, Gauge)>,
+    hists: Vec<(String, HistogramHandle)>,
+    index: HashMap<String, ()>,
+}
+
+/// The registry itself. Handle lookups take the registry lock;
+/// recording through a handle touches only that handle's cell, so hot
+/// paths register once up front and never contend here again.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("MetricsRegistry")
+            .field("counters", &inner.counters.len())
+            .field("gauges", &inner.gauges.len())
+            .field("histograms", &inner.hists.len())
+            .finish()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch-or-create the counter called `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, c)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        assert!(
+            !inner.index.contains_key(name),
+            "metric name {name:?} already registered with a different kind"
+        );
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        inner.counters.push((name.to_string(), c.clone()));
+        inner.index.insert(name.to_string(), ());
+        c
+    }
+
+    /// Fetch-or-create the gauge called `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, g)) = inner.gauges.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        assert!(
+            !inner.index.contains_key(name),
+            "metric name {name:?} already registered with a different kind"
+        );
+        let g = Gauge(Arc::new(AtomicU64::new(0f64.to_bits())));
+        inner.gauges.push((name.to_string(), g.clone()));
+        inner.index.insert(name.to_string(), ());
+        g
+    }
+
+    /// Fetch-or-create the histogram called `name`. The bucket layout
+    /// (`min`, `growth`) only applies on first registration.
+    pub fn histogram(&self, name: &str, min: f64, growth: f64) -> HistogramHandle {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, h)) = inner.hists.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        assert!(
+            !inner.index.contains_key(name),
+            "metric name {name:?} already registered with a different kind"
+        );
+        let h = HistogramHandle(Arc::new(Mutex::new(Histogram::new(min, growth))));
+        inner.hists.push((name.to_string(), h.clone()));
+        inner.index.insert(name.to_string(), ());
+        h
+    }
+
+    /// Read every metric without disturbing it.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.collect(false)
+    }
+
+    /// Read every metric and reset it to zero/empty — the windowed
+    /// read reporters use between steps. Gauges are instantaneous and
+    /// keep their value.
+    pub fn snapshot_and_reset(&self) -> MetricsSnapshot {
+        self.collect(true)
+    }
+
+    fn collect(&self, reset: bool) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap();
+        let counters = inner
+            .counters
+            .iter()
+            .map(|(n, c)| {
+                let v = if reset { c.0.swap(0, Ordering::Relaxed) } else { c.get() };
+                (n.clone(), v)
+            })
+            .collect();
+        let gauges = inner.gauges.iter().map(|(n, g)| (n.clone(), g.get())).collect();
+        let hists = inner
+            .hists
+            .iter()
+            .map(|(n, h)| {
+                let mut guard = h.0.lock().unwrap();
+                let snap = guard.clone();
+                if reset {
+                    guard.reset();
+                }
+                (n.clone(), snap)
+            })
+            .collect();
+        MetricsSnapshot { counters, gauges, hists }
+    }
+}
+
+/// Point-in-time reading of a [`MetricsRegistry`], in registration
+/// order.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, Histogram)>,
+}
+
+impl MetricsSnapshot {
+    /// Human-readable dump, one metric per line.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (n, v) in &self.counters {
+            let _ = writeln!(out, "counter {n} {v}");
+        }
+        for (n, v) in &self.gauges {
+            let _ = writeln!(out, "gauge {n} {v:.6}");
+        }
+        for (n, h) in &self.hists {
+            let _ = writeln!(
+                out,
+                "histogram {n} count={} mean={:.6} p50={:.6} p99={:.6} max={:.6}",
+                h.count(),
+                h.mean(),
+                h.percentile(50.0),
+                h.percentile(99.0),
+                h.max()
+            );
+        }
+        out
+    }
+
+    /// Two-line CSV (header + row); histograms expand to
+    /// `name.count/mean/p50/p99/max` columns.
+    pub fn to_csv(&self) -> String {
+        let mut header: Vec<String> = Vec::new();
+        let mut row: Vec<String> = Vec::new();
+        for (n, v) in &self.counters {
+            header.push(n.clone());
+            row.push(v.to_string());
+        }
+        for (n, v) in &self.gauges {
+            header.push(n.clone());
+            row.push(format!("{v:.6}"));
+        }
+        for (n, h) in &self.hists {
+            for (suffix, v) in [
+                ("count", h.count() as f64),
+                ("mean", h.mean()),
+                ("p50", h.percentile(50.0)),
+                ("p99", h.percentile(99.0)),
+                ("max", h.max()),
+            ] {
+                header.push(format!("{n}.{suffix}"));
+                row.push(format!("{v:.6}"));
+            }
+        }
+        format!("{}\n{}\n", header.join(","), row.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_shared() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("requests");
+        let b = reg.counter("requests");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same name -> same cell");
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters, vec![("requests".to_string(), 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn name_collision_across_kinds_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_and_reset_windows_counters_and_hists() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("done");
+        let g = reg.gauge("depth");
+        let h = reg.histogram("latency", 1e-6, 1.1);
+        c.add(5);
+        g.set(7.5);
+        h.record(0.25);
+        let s1 = reg.snapshot_and_reset();
+        assert_eq!(s1.counters[0].1, 5);
+        assert_eq!(s1.gauges[0].1, 7.5);
+        assert_eq!(s1.hists[0].1.count(), 1);
+        // counters and histograms reset; gauges persist
+        let s2 = reg.snapshot();
+        assert_eq!(s2.counters[0].1, 0);
+        assert_eq!(s2.gauges[0].1, 7.5);
+        assert_eq!(s2.hists[0].1.count(), 0);
+        // the live handles still work after the reset
+        c.inc();
+        assert_eq!(reg.snapshot().counters[0].1, 1);
+    }
+
+    #[test]
+    fn exports_emit_registration_order() {
+        let reg = MetricsRegistry::new();
+        reg.counter("zulu");
+        reg.counter("alpha");
+        reg.gauge("mike");
+        reg.histogram("lat", 1e-6, 1.1).record(1.0);
+        let snap = reg.snapshot();
+        let text = snap.to_text();
+        let z = text.find("zulu").unwrap();
+        let a = text.find("alpha").unwrap();
+        assert!(z < a, "registration order, not alphabetical:\n{text}");
+        let csv = snap.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        let row = lines.next().unwrap();
+        assert!(header.starts_with("zulu,alpha,mike,lat.count"), "{header}");
+        assert_eq!(header.split(',').count(), row.split(',').count());
+    }
+}

@@ -1,0 +1,734 @@
+//! Flight recorder: lock-light per-request lifecycle tracing and
+//! replica time-attribution, shared by the real fleet
+//! (`coordinator/fleet.rs`, wall clock) and the virtual-time sim
+//! (`sim/fleet.rs`, virtual clock).
+//!
+//! Two instruments live here:
+//!
+//!   * [`FlightRecorder`] — bounded per-replica ring buffers of
+//!     structured [`TraceEvent`]s covering the request lifecycle
+//!     (submit → queue-wait → route → prefill → decode →
+//!     {park / salvage / re-dispatch / abort} → done), exportable as
+//!     JSONL or Chrome `trace_event` JSON (open the file in
+//!     `chrome://tracing` or <https://ui.perfetto.dev>). Timestamps are
+//!     plain `f64` seconds so the real pool records wall time since the
+//!     recorder's epoch and the sim records virtual time through the
+//!     same API. The off switch is a single relaxed atomic load —
+//!     `record` returns before touching any lock or allocation, so a
+//!     disabled recorder costs one predictable branch
+//!     (`benches/perf_hotpath.rs` measures both states).
+//!
+//!   * [`Attribution`] — six atomic accumulators classifying every
+//!     wall-second of a replica loop's life into
+//!     {decode-busy, prefill, prefill-replay, weight-sync pause,
+//!     draining, idle-bubble}. Proxy loops drive it through
+//!     [`AttrStopwatch`]; the sim computes the same categories from its
+//!     virtual-time integrals. Per-step deltas surface in `StepLog`
+//!     and per-replica totals in `PoolReport` — the paper's resource
+//!     bubbles, attributed instead of aggregated.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Tracing knobs, wired through `RolloutSystemCfg` / YAML
+/// (`trace: {enabled, ring_capacity, export_path}`) / CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceCfg {
+    /// master switch; off = the recorder is a single branch per call
+    pub enabled: bool,
+    /// events retained per ring (one ring per replica slot + one
+    /// pool-level ring); wraparound keeps the newest
+    pub ring_capacity: usize,
+    /// directory to write `trace.json` (Chrome), `trace.jsonl`, and
+    /// metrics snapshots into at shutdown; `None` = in-memory only
+    pub export_path: Option<PathBuf>,
+}
+
+impl TraceCfg {
+    pub fn disabled() -> Self {
+        TraceCfg { enabled: false, ring_capacity: 4096, export_path: None }
+    }
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// Chrome `trace_event` phase of an event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventPhase {
+    /// span open (`ph: "B"`)
+    Begin,
+    /// span close (`ph: "E"`)
+    End,
+    /// point event (`ph: "i"`)
+    Instant,
+}
+
+impl EventPhase {
+    fn chrome(self) -> &'static str {
+        match self {
+            EventPhase::Begin => "B",
+            EventPhase::End => "E",
+            EventPhase::Instant => "i",
+        }
+    }
+}
+
+/// One structured lifecycle event. `replica: None` marks pool-level
+/// events (submit, queue); `Some(slot)` events carry the slot's
+/// `generation` so a reused slot's occupants stay distinguishable.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// recorder-wide emission order (total order across rings)
+    pub seq: u64,
+    /// seconds — wall time since the recorder epoch, or virtual time
+    pub t: f64,
+    pub name: &'static str,
+    pub phase: EventPhase,
+    /// pool-level request id
+    pub req: u64,
+    pub replica: Option<usize>,
+    /// replica slot generation (0 for pool-level events)
+    pub generation: u64,
+    /// weight version in force when the event fired
+    pub version: u64,
+    /// freeform payload (routing policy, token counts, …)
+    pub detail: String,
+}
+
+/// Bounded event ring: wraparound overwrites the oldest entry.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    /// index of the oldest entry once the ring is full
+    head: usize,
+    cap: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring { buf: Vec::with_capacity(cap.min(1024)), head: 0, cap }
+    }
+
+    /// Returns true when an old event was overwritten.
+    fn push(&mut self, ev: TraceEvent) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+            false
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            true
+        }
+    }
+
+    /// Oldest-first snapshot.
+    fn ordered(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// The recorder. Ring selection is per replica slot (index `slot + 1`;
+/// ring 0 holds pool-level events), each behind its own mutex so
+/// collectors on different replicas never contend; the outer `RwLock`
+/// is only write-locked when a new slot appears.
+pub struct FlightRecorder {
+    enabled: AtomicBool,
+    cap: usize,
+    epoch: Instant,
+    rings: RwLock<Vec<Arc<Mutex<Ring>>>>,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("enabled", &self.is_enabled())
+            .field("ring_capacity", &self.cap)
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(ring_capacity: usize) -> Self {
+        assert!(ring_capacity > 0, "ring_capacity must be positive");
+        FlightRecorder {
+            enabled: AtomicBool::new(true),
+            cap: ring_capacity,
+            epoch: Instant::now(),
+            rings: RwLock::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// A permanently-off recorder: every `record` is one branch.
+    pub fn disabled() -> Self {
+        let r = Self::new(1);
+        r.enabled.store(false, Ordering::Relaxed);
+        r
+    }
+
+    pub fn from_cfg(cfg: &TraceCfg) -> Arc<Self> {
+        Arc::new(if cfg.enabled { Self::new(cfg.ring_capacity) } else { Self::disabled() })
+    }
+
+    /// The hot-path gate: call sites that would allocate a `detail`
+    /// string should check this first.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Wall seconds since the recorder epoch (the real pool's clock;
+    /// the sim passes its virtual `now` instead).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record at the current wall clock.
+    #[inline]
+    pub fn emit(
+        &self,
+        name: &'static str,
+        phase: EventPhase,
+        req: u64,
+        replica: Option<usize>,
+        generation: u64,
+        version: u64,
+        detail: String,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let t = self.now();
+        self.push(name, phase, req, replica, generation, version, t, detail);
+    }
+
+    /// Record at an explicit timestamp (virtual-time callers).
+    #[inline]
+    pub fn emit_at(
+        &self,
+        name: &'static str,
+        phase: EventPhase,
+        req: u64,
+        replica: Option<usize>,
+        generation: u64,
+        version: u64,
+        t: f64,
+        detail: String,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.push(name, phase, req, replica, generation, version, t, detail);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &self,
+        name: &'static str,
+        phase: EventPhase,
+        req: u64,
+        replica: Option<usize>,
+        generation: u64,
+        version: u64,
+        t: f64,
+        detail: String,
+    ) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = TraceEvent { seq, t, name, phase, req, replica, generation, version, detail };
+        let idx = replica.map(|r| r + 1).unwrap_or(0);
+        let ring = self.ring(idx);
+        let overwrote = ring.lock().unwrap().push(ev);
+        if overwrote {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn ring(&self, idx: usize) -> Arc<Mutex<Ring>> {
+        {
+            let rings = self.rings.read().unwrap();
+            if let Some(r) = rings.get(idx) {
+                return r.clone();
+            }
+        }
+        let mut rings = self.rings.write().unwrap();
+        while rings.len() <= idx {
+            rings.push(Arc::new(Mutex::new(Ring::new(self.cap))));
+        }
+        rings[idx].clone()
+    }
+
+    /// Snapshot of every ring, in global emission order.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let rings: Vec<Arc<Mutex<Ring>>> = self.rings.read().unwrap().clone();
+        let mut out: Vec<TraceEvent> = Vec::new();
+        for r in rings {
+            out.extend(r.lock().unwrap().ordered());
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+
+    /// One JSON object per line.
+    pub fn export_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in self.events() {
+            out.push_str(&format!(
+                "{{\"seq\":{},\"t\":{:.6},\"name\":{},\"ph\":\"{}\",\"req\":{},\"replica\":{},\
+                 \"generation\":{},\"version\":{},\"detail\":{}}}\n",
+                e.seq,
+                e.t,
+                Json::Str(e.name.to_string()),
+                e.phase.chrome(),
+                e.req,
+                e.replica.map(|r| r as i64).unwrap_or(-1),
+                e.generation,
+                e.version,
+                Json::Str(e.detail.clone()),
+            ));
+        }
+        out
+    }
+
+    /// Chrome `trace_event` JSON (`{"traceEvents": [...]}`). `pid` is
+    /// the replica slot + 1 (0 = pool level), `tid` the request id,
+    /// `ts` microseconds.
+    pub fn export_chrome_trace(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        for (i, e) in self.events().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let scope = if e.phase == EventPhase::Instant { ",\"s\":\"t\"" } else { "" };
+            out.push_str(&format!(
+                "{{\"name\":{},\"cat\":\"fleet\",\"ph\":\"{}\"{scope},\"ts\":{:.3},\"pid\":{},\
+                 \"tid\":{},\"args\":{{\"generation\":{},\"version\":{},\"detail\":{}}}}}",
+                Json::Str(e.name.to_string()),
+                e.phase.chrome(),
+                e.t * 1e6,
+                e.replica.map(|r| r + 1).unwrap_or(0),
+                e.req,
+                e.generation,
+                e.version,
+                Json::Str(e.detail.clone()),
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write `trace.json` (Chrome) and `trace.jsonl` into `dir`.
+    pub fn export_to_dir(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("trace.json"), self.export_chrome_trace())?;
+        std::fs::write(dir.join("trace.jsonl"), self.export_jsonl())?;
+        Ok(())
+    }
+}
+
+/// Well-formedness check over a request's span events: every `Begin`
+/// closes with a matching `End` (innermost first) and nothing dangles.
+/// Shared by the recorder's own tests and the fleet/sim suites.
+pub fn check_span_nesting(events: &[TraceEvent]) -> Result<(), String> {
+    use std::collections::HashMap;
+    let mut open: HashMap<u64, Vec<&'static str>> = HashMap::new();
+    let mut sorted: Vec<&TraceEvent> = events.iter().collect();
+    sorted.sort_by_key(|e| e.seq);
+    for e in sorted {
+        match e.phase {
+            EventPhase::Begin => open.entry(e.req).or_default().push(e.name),
+            EventPhase::End => {
+                let stack = open.entry(e.req).or_default();
+                match stack.pop() {
+                    Some(top) if top == e.name => {}
+                    Some(top) => {
+                        return Err(format!(
+                            "req {}: End({}) closes open span {top:?} (interleaved overlap)",
+                            e.req, e.name
+                        ));
+                    }
+                    None => {
+                        return Err(format!("req {}: End({}) without a Begin", e.req, e.name));
+                    }
+                }
+            }
+            EventPhase::Instant => {}
+        }
+    }
+    for (req, stack) in &open {
+        if !stack.is_empty() {
+            return Err(format!("req {req}: spans left open: {stack:?}"));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Replica time-attribution
+// ---------------------------------------------------------------------------
+
+/// Where a replica-second went. Every instant of a proxy loop's life
+/// lands in exactly one category; `Draining` is pool-side time between
+/// a slot leaving service and its retirement being finalized (counted
+/// in addition to the serving-time categories).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttrCategory {
+    /// decode steps + sampling on admitted work
+    DecodeBusy = 0,
+    /// admission of fresh prompts into decode rows
+    Prefill = 1,
+    /// admission that replays a salvaged prefix (the KV rebuild bill)
+    PrefillReplay = 2,
+    /// weight rebuild on UPDATE_WEIGHTS, or suspended waiting out a
+    /// broadcast sync
+    WeightSync = 3,
+    /// draining toward retirement (pool-side, after the serve clock
+    /// closed)
+    Draining = 4,
+    /// nothing to decode — the paper's resource bubble
+    IdleBubble = 5,
+}
+
+impl AttrCategory {
+    pub const ALL: [AttrCategory; 6] = [
+        AttrCategory::DecodeBusy,
+        AttrCategory::Prefill,
+        AttrCategory::PrefillReplay,
+        AttrCategory::WeightSync,
+        AttrCategory::Draining,
+        AttrCategory::IdleBubble,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AttrCategory::DecodeBusy => "decode_busy",
+            AttrCategory::Prefill => "prefill",
+            AttrCategory::PrefillReplay => "prefill_replay",
+            AttrCategory::WeightSync => "weight_sync",
+            AttrCategory::Draining => "draining",
+            AttrCategory::IdleBubble => "idle_bubble",
+        }
+    }
+}
+
+/// Lock-free accumulator (microseconds per category), shared between a
+/// proxy loop and the pool that reports on it.
+#[derive(Debug, Default)]
+pub struct Attribution {
+    micros: [AtomicU64; 6],
+}
+
+impl Attribution {
+    pub fn add(&self, cat: AttrCategory, secs: f64) {
+        if secs > 0.0 {
+            self.micros[cat as usize].fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> AttrSnapshot {
+        let s = |c: AttrCategory| self.micros[c as usize].load(Ordering::Relaxed) as f64 / 1e6;
+        AttrSnapshot {
+            decode_busy: s(AttrCategory::DecodeBusy),
+            prefill: s(AttrCategory::Prefill),
+            prefill_replay: s(AttrCategory::PrefillReplay),
+            weight_sync: s(AttrCategory::WeightSync),
+            draining: s(AttrCategory::Draining),
+            idle_bubble: s(AttrCategory::IdleBubble),
+        }
+    }
+}
+
+/// A point-in-time (or per-step delta) reading of an [`Attribution`],
+/// in seconds per category.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AttrSnapshot {
+    pub decode_busy: f64,
+    pub prefill: f64,
+    pub prefill_replay: f64,
+    pub weight_sync: f64,
+    pub draining: f64,
+    pub idle_bubble: f64,
+}
+
+impl AttrSnapshot {
+    /// Seconds attributed while serving (everything but `draining`) —
+    /// the quantity that sums to `serving_replicas × wall_secs`.
+    pub fn serving_total(&self) -> f64 {
+        self.decode_busy + self.prefill + self.prefill_replay + self.weight_sync + self.idle_bubble
+    }
+
+    /// All attributed seconds including the drain tail.
+    pub fn total(&self) -> f64 {
+        self.serving_total() + self.draining
+    }
+
+    pub fn merge(&mut self, o: &AttrSnapshot) {
+        self.decode_busy += o.decode_busy;
+        self.prefill += o.prefill;
+        self.prefill_replay += o.prefill_replay;
+        self.weight_sync += o.weight_sync;
+        self.draining += o.draining;
+        self.idle_bubble += o.idle_bubble;
+    }
+
+    /// Per-step delta against an earlier reading (clamped at zero so a
+    /// replica retiring mid-step cannot go negative).
+    pub fn delta(&self, earlier: &AttrSnapshot) -> AttrSnapshot {
+        let d = |a: f64, b: f64| (a - b).max(0.0);
+        AttrSnapshot {
+            decode_busy: d(self.decode_busy, earlier.decode_busy),
+            prefill: d(self.prefill, earlier.prefill),
+            prefill_replay: d(self.prefill_replay, earlier.prefill_replay),
+            weight_sync: d(self.weight_sync, earlier.weight_sync),
+            draining: d(self.draining, earlier.draining),
+            idle_bubble: d(self.idle_bubble, earlier.idle_bubble),
+        }
+    }
+
+    /// Fraction of serving time spent decoding.
+    pub fn busy_frac(&self) -> f64 {
+        let t = self.serving_total();
+        if t <= 0.0 {
+            0.0
+        } else {
+            (self.decode_busy + self.prefill + self.prefill_replay) / t
+        }
+    }
+
+    /// Fraction of serving time lost to idle bubbles.
+    pub fn bubble_frac(&self) -> f64 {
+        let t = self.serving_total();
+        if t <= 0.0 { 0.0 } else { self.idle_bubble / t }
+    }
+
+    /// The attribution column the fleet tables print:
+    /// `busy/sync/idle` percent of serving time.
+    pub fn format_compact(&self) -> String {
+        let t = self.serving_total();
+        if t <= 0.0 {
+            return "-".into();
+        }
+        format!(
+            "{:.0}/{:.0}/{:.0}%",
+            100.0 * self.busy_frac(),
+            100.0 * self.weight_sync / t,
+            100.0 * self.bubble_frac(),
+        )
+    }
+}
+
+/// Segment timer for event loops: every `lap(cat)` attributes the time
+/// since the previous lap to `cat`, so the loop's whole life is
+/// covered with no gaps and no double counting.
+pub struct AttrStopwatch {
+    attr: Arc<Attribution>,
+    last: Instant,
+}
+
+impl AttrStopwatch {
+    pub fn new(attr: Arc<Attribution>) -> Self {
+        AttrStopwatch { attr, last: Instant::now() }
+    }
+
+    pub fn lap(&mut self, cat: AttrCategory) {
+        let now = Instant::now();
+        self.attr.add(cat, (now - self.last).as_secs_f64());
+        self.last = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(rec: &FlightRecorder, name: &'static str, phase: EventPhase, req: u64) {
+        rec.emit(name, phase, req, Some(0), 0, 0, String::new());
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_events() {
+        let rec = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            ev(&rec, "decode", EventPhase::Instant, i);
+        }
+        let evs = rec.events();
+        assert_eq!(evs.len(), 4, "ring holds exactly its capacity");
+        let reqs: Vec<u64> = evs.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9], "newest events survive the wrap");
+        assert_eq!(rec.dropped(), 6, "each overwrite is counted");
+    }
+
+    #[test]
+    fn rings_are_per_replica() {
+        let rec = FlightRecorder::new(2);
+        // 3 events on replica 0 would wrap a shared ring of 2; with
+        // per-replica rings both replicas keep their own newest 2
+        for r in [0usize, 1, 0, 1, 0, 1] {
+            rec.emit("decode", EventPhase::Instant, r as u64, Some(r), 0, 0, String::new());
+        }
+        rec.emit("submit", EventPhase::Instant, 9, None, 0, 0, String::new());
+        let evs = rec.events();
+        assert_eq!(evs.iter().filter(|e| e.replica == Some(0)).count(), 2);
+        assert_eq!(evs.iter().filter(|e| e.replica == Some(1)).count(), 2);
+        assert_eq!(evs.iter().filter(|e| e.replica.is_none()).count(), 1);
+        // global order is preserved across rings
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = FlightRecorder::disabled();
+        ev(&rec, "decode", EventPhase::Instant, 1);
+        assert!(rec.events().is_empty());
+        assert_eq!(rec.dropped(), 0);
+        rec.set_enabled(true);
+        ev(&rec, "decode", EventPhase::Instant, 2);
+        assert_eq!(rec.events().len(), 1);
+    }
+
+    #[test]
+    fn span_nesting_checker_accepts_well_formed() {
+        let rec = FlightRecorder::new(64);
+        for req in 0..3u64 {
+            ev(&rec, "queue", EventPhase::Begin, req);
+            ev(&rec, "queue", EventPhase::End, req);
+            ev(&rec, "decode", EventPhase::Begin, req);
+            ev(&rec, "prefill", EventPhase::Begin, req);
+            ev(&rec, "prefill", EventPhase::End, req);
+            ev(&rec, "done", EventPhase::Instant, req);
+            ev(&rec, "decode", EventPhase::End, req);
+        }
+        check_span_nesting(&rec.events()).unwrap();
+    }
+
+    #[test]
+    fn span_nesting_checker_rejects_malformed() {
+        let rec = FlightRecorder::new(64);
+        ev(&rec, "decode", EventPhase::Begin, 1);
+        assert!(
+            check_span_nesting(&rec.events()).is_err(),
+            "a dangling Begin must be rejected"
+        );
+        ev(&rec, "decode", EventPhase::End, 1);
+        check_span_nesting(&rec.events()).unwrap();
+        // interleaved overlap on one request id
+        ev(&rec, "a", EventPhase::Begin, 2);
+        ev(&rec, "b", EventPhase::Begin, 2);
+        ev(&rec, "a", EventPhase::End, 2);
+        assert!(check_span_nesting(&rec.events()).is_err(), "interleaved spans must be rejected");
+        // an End with no Begin
+        let rec = FlightRecorder::new(8);
+        ev(&rec, "x", EventPhase::End, 3);
+        assert!(check_span_nesting(&rec.events()).is_err());
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_json_parser() {
+        let rec = FlightRecorder::new(64);
+        rec.emit("submit", EventPhase::Instant, 7, None, 0, 0, "policy=\"queue\"".into());
+        rec.emit("decode", EventPhase::Begin, 7, Some(2), 3, 11, String::new());
+        rec.emit("decode", EventPhase::End, 7, Some(2), 3, 11, "tokens=5".into());
+        let text = rec.export_chrome_trace();
+        let j = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let evs = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+        assert_eq!(evs.len(), 3);
+        let first = &evs[0];
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("submit"));
+        assert_eq!(first.get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(first.get("pid").and_then(Json::as_f64), Some(0.0), "pool-level pid 0");
+        assert_eq!(first.get("tid").and_then(Json::as_f64), Some(7.0));
+        // the escaped detail survives the round trip
+        assert_eq!(
+            first.get("args").and_then(|a| a.get("detail")).and_then(Json::as_str),
+            Some("policy=\"queue\"")
+        );
+        let span = &evs[1];
+        assert_eq!(span.get("pid").and_then(Json::as_f64), Some(3.0), "replica 2 -> pid 3");
+        assert_eq!(
+            span.get("args").and_then(|a| a.get("version")).and_then(Json::as_f64),
+            Some(11.0)
+        );
+
+        // JSONL: every line parses on its own
+        let jsonl = rec.export_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            Json::parse(line).expect("each JSONL line is a JSON object");
+        }
+    }
+
+    #[test]
+    fn virtual_timestamps_pass_through() {
+        let rec = FlightRecorder::new(8);
+        rec.emit_at("decode", EventPhase::Begin, 1, Some(0), 0, 0, 123.5, String::new());
+        let evs = rec.events();
+        assert_eq!(evs[0].t, 123.5);
+    }
+
+    #[test]
+    fn attribution_accumulates_and_deltas() {
+        let attr = Attribution::default();
+        attr.add(AttrCategory::DecodeBusy, 2.0);
+        attr.add(AttrCategory::IdleBubble, 1.0);
+        attr.add(AttrCategory::WeightSync, 0.5);
+        let a = attr.snapshot();
+        assert!((a.serving_total() - 3.5).abs() < 1e-6, "{a:?}");
+        attr.add(AttrCategory::DecodeBusy, 1.0);
+        attr.add(AttrCategory::Draining, 0.25);
+        let b = attr.snapshot();
+        let d = b.delta(&a);
+        assert!((d.decode_busy - 1.0).abs() < 1e-6);
+        assert!((d.draining - 0.25).abs() < 1e-6);
+        assert!((d.idle_bubble).abs() < 1e-6);
+        assert!((b.total() - 4.75).abs() < 1e-6);
+        // negative-duration guard
+        attr.add(AttrCategory::Prefill, -5.0);
+        assert_eq!(attr.snapshot().prefill, 0.0);
+        // merge sums categories
+        let mut m = a;
+        m.merge(&d);
+        assert!((m.total() - b.total()).abs() < 1e-6);
+        assert!(b.busy_frac() > 0.0 && b.bubble_frac() > 0.0);
+        assert!(!b.format_compact().is_empty());
+    }
+
+    #[test]
+    fn stopwatch_covers_every_segment() {
+        let attr = Arc::new(Attribution::default());
+        let t0 = Instant::now();
+        let mut sw = AttrStopwatch::new(attr.clone());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        sw.lap(AttrCategory::DecodeBusy);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        sw.lap(AttrCategory::IdleBubble);
+        let wall = t0.elapsed().as_secs_f64();
+        let s = attr.snapshot();
+        assert!(s.decode_busy >= 0.015, "{s:?}");
+        assert!(s.idle_bubble >= 0.005, "{s:?}");
+        // laps partition the wall time: no double counting
+        assert!(s.serving_total() <= wall + 1e-3, "{s:?} vs wall {wall}");
+    }
+}

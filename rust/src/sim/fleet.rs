@@ -42,9 +42,11 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
+use crate::metrics::trace::{AttrSnapshot, EventPhase, FlightRecorder};
 use crate::sim::queue::{GpuPool, T};
 use crate::util::rng::Rng;
 use crate::workload::{BurstTrace, DecodeCost, LengthProfile};
@@ -99,6 +101,11 @@ pub struct FleetSimConfig {
     /// virtual clock between `min_replicas` and `max_replicas`;
     /// `None` = static `num_replicas`
     pub autoscale: Option<AutoscaleCfg>,
+    /// flight recorder fed with *virtual*-timestamp lifecycle events
+    /// (`FlightRecorder::emit_at`): the same schema the real pool
+    /// records, so a sim run exports the identical Chrome trace /
+    /// JSONL shape. `None` = no tracing (zero overhead).
+    pub trace: Option<Arc<FlightRecorder>>,
     pub seed: u64,
 }
 
@@ -128,6 +135,7 @@ impl FleetSimConfig {
             prefill_time_per_token: 2e-4,
             arrivals: None,
             autoscale: None,
+            trace: None,
             seed: 17,
         }
     }
@@ -189,6 +197,16 @@ pub struct FleetSimReport {
     /// integral of serving replicas over time — the provisioning bill
     /// an elastic fleet holds below a static peak-sized one
     pub replica_seconds: f64,
+    /// where every serving replica-second went, mirrored from the real
+    /// pool's time attribution: `weight_sync` is the exact pause
+    /// integral, `prefill`/`prefill_replay` are priced at full speed
+    /// (`prefill_time` per completion, `prefill_time_per_token` per
+    /// replayed token — processor-sharing slowdown above the knee is
+    /// absorbed by `decode_busy`), `draining` is 0 (sim drains are
+    /// instantaneous), and `idle_bubble` is the residual. By
+    /// construction `attr.total() == replica_seconds` on a static
+    /// fleet (no sync wave can touch a drained slot).
+    pub attr: AttrSnapshot,
 }
 
 #[derive(Clone, Copy)]
@@ -217,6 +235,9 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         .unwrap_or(cfg.num_replicas);
     let mut scaler = scale_cfg.map(Autoscaler::new);
     let mut rng = Rng::new(cfg.seed);
+    // virtual-time flight recorder: same event names as the real pool,
+    // timestamps are the sim clock (emit_at), ring = replica slot
+    let rec: Option<&FlightRecorder> = cfg.trace.as_deref();
     // replaying a salvaged token through prefill costs this many
     // decode-equivalent work units
     let prefill_ratio = cfg.prefill_time_per_token / cfg.decode.token_time;
@@ -288,6 +309,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time;
         pending.push_back((*next_id, tokens, None));
         submit_time.insert(*next_id, (now, tokens));
+        if let Some(r) = rec {
+            r.emit_at(
+                "submit",
+                EventPhase::Instant,
+                *next_id,
+                None,
+                0,
+                0,
+                now,
+                format!("tokens={tokens:.0}"),
+            );
+        }
         *next_id += 1;
     };
 
@@ -304,6 +337,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             dispatch_time.insert($id, $now);
             placed.insert($id, $r);
             work_left.insert($id, $tokens);
+            if let Some(rec) = rec {
+                rec.emit_at(
+                    "route",
+                    EventPhase::Instant,
+                    $id,
+                    Some($r),
+                    0,
+                    0,
+                    $now,
+                    format!("tokens={:.0}", $tokens),
+                );
+            }
             report.routed[$r] += 1;
             report.max_inflight = report.max_inflight.max(replicas[$r].in_flight());
             if cfg.hang_timeout > 0.0 {
@@ -438,6 +483,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     let assigned = work_left.get(&id).copied().unwrap_or(remaining);
                     report.migrations += 1;
                     let resubmit = salvage_resubmit!(assigned, remaining);
+                    if let Some(rec) = rec {
+                        rec.emit_at(
+                            "salvage",
+                            EventPhase::Instant,
+                            id,
+                            Some(r),
+                            0,
+                            0,
+                            now,
+                            format!("migrate to={new_r} decoded={:.0}", assigned - remaining),
+                        );
+                    }
                     place!(new_r, id, resubmit, now);
                 } else if peers && cfg.reclaim_in_place {
                     // pause/rebalance without moving: the salvaged
@@ -448,6 +505,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     let assigned = work_left.get(&id).copied().unwrap_or(remaining);
                     report.reclaims_in_place += 1;
                     let resubmit = salvage_resubmit!(assigned, remaining);
+                    if let Some(rec) = rec {
+                        rec.emit_at(
+                            "salvage",
+                            EventPhase::Instant,
+                            id,
+                            Some(r),
+                            0,
+                            0,
+                            now,
+                            format!("reclaim_in_place decoded={:.0}", assigned - remaining),
+                        );
+                    }
                     placed.remove(&id);
                     work_left.remove(&id);
                     dispatch_time.remove(&id);
@@ -485,6 +554,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 // since its dispatch (a salvaged prefix must not
                 // inflate the target's EWMA)
                 router.on_completion(r, assigned, now - t_dispatch);
+                if let Some(rec) = rec {
+                    rec.emit_at(
+                        "done",
+                        EventPhase::Instant,
+                        id,
+                        Some(r),
+                        0,
+                        0,
+                        now,
+                        format!("latency={:.2}", now - t_submit),
+                    );
+                }
                 latencies.push(now - t_submit);
                 completed += 1;
                 // closed loop: the freed client submits its next task
@@ -506,7 +587,25 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     slots: cfg.max_active,
                     wasted_tokens: report.wasted_tokens as u64,
                 };
-                match scaler.decide_at(now, &signals) {
+                let decision = scaler.decide_at(now, &signals);
+                if let Some(rec) = rec {
+                    if decision != ScaleDecision::Hold {
+                        rec.emit_at(
+                            "scale",
+                            EventPhase::Instant,
+                            0,
+                            None,
+                            0,
+                            0,
+                            now,
+                            format!(
+                                "{decision:?} serving={} queue={}",
+                                signals.serving, signals.queue_depth
+                            ),
+                        );
+                    }
+                }
+                match decision {
                     ScaleDecision::Grow(k) => {
                         for _ in 0..k {
                             // reuse a drained slot (resetting its EWMA,
@@ -552,6 +651,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                             serving[victim] = false;
                             report.replica_seconds += now - activated[victim];
                             report.scale_downs += 1;
+                            if let Some(rec) = rec {
+                                rec.emit_at(
+                                    "retire",
+                                    EventPhase::Instant,
+                                    0,
+                                    Some(victim),
+                                    0,
+                                    0,
+                                    now,
+                                    format!("in_flight={}", replicas[victim].in_flight()),
+                                );
+                            }
                             // salvage-drain: every in-flight request is
                             // aborted with its decoded progress kept
                             // (plus prefill replay) and re-queued for
@@ -568,6 +679,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                 let assigned =
                                     work_left.get(&id).copied().unwrap_or(remaining);
                                 let resubmit = salvage_resubmit!(assigned, remaining);
+                                if let Some(rec) = rec {
+                                    rec.emit_at(
+                                        "salvage",
+                                        EventPhase::Instant,
+                                        id,
+                                        Some(victim),
+                                        0,
+                                        0,
+                                        now,
+                                        format!("drain decoded={:.0}", assigned - remaining),
+                                    );
+                                }
                                 placed.remove(&id);
                                 drain_pending.insert(id, now);
                                 pending.push_back((id, resubmit, Some(victim)));
@@ -584,6 +707,19 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 phase = match phase {
                     SyncPhase::Idle { .. } => {
                         report.sync_waves += 1;
+                        if let Some(rec) = rec {
+                            let mode = if cfg.rolling_update { "rolling" } else { "broadcast" };
+                            rec.emit_at(
+                                "weight_sync",
+                                EventPhase::Instant,
+                                0,
+                                None,
+                                0,
+                                0,
+                                now,
+                                format!("wave={} mode={mode}", report.sync_waves),
+                            );
+                        }
                         if cfg.rolling_update {
                             paused[0] = true;
                             replicas[0].set_paused(true, now);
@@ -644,6 +780,23 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             report.replica_seconds += now - activated[r];
         }
     }
+    // time attribution, mirroring the real pool's categories. Busy and
+    // paused are exact integrals from the GPU model; the prefill
+    // buckets are priced at full speed (token-equivalents folded into
+    // the decode budget), so any processor-sharing stretch lands in
+    // decode_busy; idle is the residual of the serving integral.
+    let busy: f64 = replicas.iter().map(|p| p.total_busy_secs(now)).sum();
+    let synced: f64 = replicas.iter().map(|p| p.paused_secs(now)).sum();
+    let prefill = completed as f64 * cfg.decode.prefill_time;
+    let prefill_replay = report.prefill_replay_tokens * cfg.prefill_time_per_token;
+    report.attr = AttrSnapshot {
+        decode_busy: (busy - prefill - prefill_replay).max(0.0),
+        prefill: prefill.min(busy),
+        prefill_replay: prefill_replay.min((busy - prefill).max(0.0)),
+        weight_sync: synced,
+        draining: 0.0,
+        idle_bubble: (report.replica_seconds - busy - synced).max(0.0),
+    };
     report.routed.truncate(n);
     report
 }
@@ -1052,5 +1205,79 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    /// The sim half of the recorder satellite: with a fail-slow
+    /// replica, salvage migrations, and rolling sync all active, the
+    /// six attribution categories must tile the serving replica-second
+    /// integral exactly — no wall-second unaccounted, none counted
+    /// twice.
+    #[test]
+    fn attribution_tiles_serving_replica_seconds() {
+        let mut c = fail_slow(true);
+        c.sync_interval = 60.0;
+        let r = run(&c);
+        assert_eq!(r.completed, c.total_requests);
+        let a = r.attr;
+        assert!(r.migrations > 0 && r.sync_waves > 0, "{r:?}");
+        assert!(a.decode_busy > 0.0, "{a:?}");
+        assert!(a.prefill > 0.0, "every completion paid prefill: {a:?}");
+        assert!(a.prefill_replay > 0.0, "salvage re-dispatch replays prefixes: {a:?}");
+        assert!(a.weight_sync > 0.0, "rolling waves paused replicas: {a:?}");
+        assert_eq!(a.draining, 0.0, "sim drains are instantaneous");
+        assert!(a.idle_bubble >= 0.0, "{a:?}");
+        let sum = a.total();
+        assert!(
+            (sum - r.replica_seconds).abs() < 1e-6 * r.replica_seconds.max(1.0),
+            "categories must tile the serving integral: {sum:.3} vs {:.3} ({a:?})",
+            r.replica_seconds
+        );
+        // the idle residual is genuine, not manufactured by clamping:
+        // busy work + pauses really fit inside the serving integral
+        assert!(
+            a.decode_busy + a.prefill + a.prefill_replay + a.weight_sync
+                <= r.replica_seconds + 1e-6,
+            "{a:?} vs {}",
+            r.replica_seconds
+        );
+    }
+
+    /// A traced sim run records the real pool's event schema on the
+    /// virtual clock: one submit and one done per request, salvage
+    /// instants for every watchdog reclaim, well-formed span nesting,
+    /// and a Chrome-trace export that parses.
+    #[test]
+    fn virtual_time_trace_mirrors_pool_schema() {
+        let rec = Arc::new(FlightRecorder::new(4096));
+        let mut c = fail_slow(true);
+        c.trace = Some(rec.clone());
+        let r = run(&c);
+        assert!(r.migrations > 0, "{r:?}");
+        assert_eq!(rec.dropped(), 0, "rings must hold the whole run");
+        let events = rec.events();
+        let count = |n: &str| events.iter().filter(|e| e.name == n).count();
+        assert_eq!(count("submit"), c.total_requests);
+        assert_eq!(count("done"), c.total_requests);
+        assert_eq!(
+            count("salvage"),
+            r.migrations + r.reclaims_in_place,
+            "one salvage instant per watchdog reclaim: {r:?}"
+        );
+        assert!(count("route") >= c.total_requests, "re-dispatches add routes");
+        crate::metrics::trace::check_span_nesting(&events).unwrap();
+        // timestamps are the virtual clock: the run's last event is the
+        // final completion, at exactly the reported makespan
+        let t_max = events.iter().map(|e| e.t).fold(0.0, f64::max);
+        assert!((t_max - r.makespan).abs() < 1e-9, "{t_max} vs {}", r.makespan);
+        let parsed = crate::util::json::Json::parse(&rec.export_chrome_trace())
+            .expect("chrome trace must parse");
+        let n = parsed.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len());
+        assert_eq!(n, Some(events.len()));
+        // tracing must not perturb the virtual timeline
+        let mut untraced = c.clone();
+        untraced.trace = None;
+        let u = run(&untraced);
+        assert_eq!(u.makespan, r.makespan);
+        assert_eq!(u.migrations, r.migrations);
     }
 }

@@ -47,6 +47,10 @@ struct Gpu {
     epoch: u64,
     /// cumulative decoded tokens (utilization accounting)
     work_done: f64,
+    /// seconds with >= 1 resident sequence actually decoding — the
+    /// direct integral, NOT derivable from `work_done` (below the knee
+    /// a busy second decodes fewer than `knee` tokens)
+    busy_secs: f64,
 }
 
 impl Gpu {
@@ -68,6 +72,7 @@ impl Gpu {
                 a.remaining -= dt * rate;
             }
             self.work_done += dt * rate * self.active.len() as f64;
+            self.busy_secs += dt;
         }
         self.last = t;
     }
@@ -91,6 +96,10 @@ pub struct GpuPool {
     pub knee: usize,
     pub max_active: usize,
     paused: bool,
+    /// completed pause intervals (weight-sync barriers), in seconds
+    paused_total: f64,
+    /// virtual time the current pause began, while paused
+    paused_since: Option<f64>,
     /// (finish_time, gpu, epoch) — stale entries skipped on pop
     heap: BinaryHeap<Reverse<(T, usize, u64)>>,
     /// seq id -> gpu index
@@ -106,6 +115,8 @@ impl GpuPool {
             knee,
             max_active,
             paused: false,
+            paused_total: 0.0,
+            paused_since: None,
             heap: BinaryHeap::new(),
             placement: HashMap::new(),
         }
@@ -133,6 +144,24 @@ impl GpuPool {
                 g.work_done + rate * (now - g.last).max(0.0) * g.active.len() as f64
             })
             .sum()
+    }
+
+    /// GPU-seconds spent decoding (>= 1 resident sequence, unpaused)
+    /// up to `now`, without mutating — the sim's DecodeBusy category.
+    pub fn total_busy_secs(&self, now: f64) -> f64 {
+        self.gpus
+            .iter()
+            .map(|g| {
+                let decoding = g.rate(self.token_time, self.knee, self.paused) > 0.0;
+                g.busy_secs + if decoding { (now - g.last).max(0.0) } else { 0.0 }
+            })
+            .sum()
+    }
+
+    /// Seconds the whole pool has spent suspended for weight sync up
+    /// to `now` (each second costs `n_gpus` replica-seconds).
+    pub fn paused_secs(&self, now: f64) -> f64 {
+        self.paused_total + self.paused_since.map_or(0.0, |s| (now - s).max(0.0))
     }
 
     fn reschedule(&mut self, gi: usize) {
@@ -229,6 +258,11 @@ impl GpuPool {
             self.gpus[gi].update_to(now, self.token_time, self.knee, self.paused);
         }
         self.paused = paused;
+        if paused {
+            self.paused_since = Some(now);
+        } else if let Some(s) = self.paused_since.take() {
+            self.paused_total += (now - s).max(0.0);
+        }
         for gi in 0..self.gpus.len() {
             self.reschedule(gi);
         }
@@ -361,5 +395,28 @@ mod tests {
         let t = pool.peek_completion().unwrap();
         pool.pop_completion(t);
         assert!((pool.total_work_done(t) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn busy_and_paused_time_integrals() {
+        let mut pool = GpuPool::new(2, 0.01, 4, 8);
+        // one 100-token seq on gpu 0: busy exactly [0, 1], gpu 1 idle —
+        // below the knee, so work_done*token_time/knee would UNDERCOUNT
+        // busy time (1 token/step, not 4); the direct integral must not
+        pool.submit(1, 100.0, 0.0);
+        let t = pool.peek_completion().unwrap();
+        pool.pop_completion(t);
+        assert!((pool.total_busy_secs(t) - 1.0).abs() < 1e-9);
+        assert_eq!(pool.paused_secs(t), 0.0);
+        // a 2s weight-sync pause accrues paused time, not busy time
+        pool.submit(2, 100.0, t);
+        pool.set_paused(true, t + 0.5);
+        assert!((pool.paused_secs(t + 1.5) - 1.0).abs() < 1e-9, "mid-pause read");
+        pool.set_paused(false, t + 2.5);
+        assert!((pool.paused_secs(t + 2.5) - 2.0).abs() < 1e-9);
+        let done = pool.peek_completion().unwrap();
+        assert!((done - (t + 3.0)).abs() < 1e-9, "0.5s decode + 2s pause + 0.5s decode");
+        pool.pop_completion(done);
+        assert!((pool.total_busy_secs(done) - 2.0).abs() < 1e-9, "pause must not count busy");
     }
 }

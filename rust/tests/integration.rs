@@ -88,6 +88,7 @@ fn fleet_collects_complete_groups() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -134,6 +135,7 @@ fn sync_training_loop_runs_on_math_env() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -187,6 +189,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -236,6 +239,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -287,6 +291,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -397,6 +402,7 @@ fn pool_generates_across_replicas() {
         min_salvage_tokens: 1,
         salvage_timeout: 0.5,
         reclaim_in_place: true,
+        trace: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights.clone(), vocab::EOS, 31).unwrap();
 
@@ -458,6 +464,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -522,6 +529,7 @@ fn migrated_greedy_generation_matches_uninterrupted() {
         min_salvage_tokens: 1,
         salvage_timeout: 0.5,
         reclaim_in_place: true,
+        trace: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 52).unwrap();
     let (reply, rx) = std::sync::mpsc::channel();
@@ -577,6 +585,7 @@ fn kill_replica_mid_generation_salvages_without_dup_or_loss() {
         min_salvage_tokens: 1,
         salvage_timeout: 0.5,
         reclaim_in_place: true,
+        trace: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 53).unwrap();
     // warmup probe: wait for one full generation so PJRT compilation /
@@ -650,6 +659,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -693,6 +703,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -741,6 +752,7 @@ fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
         min_salvage_tokens: 1,
         salvage_timeout: 0.5,
         reclaim_in_place: true,
+        trace: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 61).unwrap();
     let mut scaler = Autoscaler::new(AutoscaleCfg {
@@ -860,6 +872,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         autoscale: Default::default(),
+        trace: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -897,4 +910,74 @@ fn replica_death_mid_run_keeps_training_alive() {
         s.produced + s.cancelled + s.surplus + s.stale_evicted >= s.consumed,
         "ticket accounting leaked: {s:?}"
     );
+}
+
+/// Flight recorder end-to-end on the real engine: every submitted
+/// request appears as `submit` .. `done` in the recorder, span
+/// nesting is well-formed, the exported Chrome trace parses, and the
+/// fleet attribution tiles serving replica-seconds (loose bound: the
+/// wall clock keeps running between spawn and shutdown).
+#[test]
+fn trace_covers_every_request_and_attribution_tiles_serving_time() {
+    use roll_flash::coordinator::TraceCfg;
+    use roll_flash::metrics::trace::check_span_nesting;
+    use roll_flash::util::json::Json;
+
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let cfg = PoolCfg {
+        num_replicas: 2,
+        route_policy: RoutePolicy::LeastOutstanding,
+        rolling_update: true,
+        replica_slots: rt.manifest.decode_batch,
+        partial_migration: true,
+        min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
+        trace: TraceCfg { enabled: true, ring_capacity: 1 << 14, export_path: None },
+    };
+    let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 83).unwrap();
+    let n = 24usize;
+    let mut rxs = Vec::new();
+    for i in 0..n as u32 {
+        rxs.push(pool.generate(MathEnv::prompt_for(i % 9, 3), 6).1);
+    }
+    for rx in rxs {
+        rx.recv().expect("fleet serves every traced request");
+    }
+
+    let rec = pool.recorder();
+    let events = rec.events();
+    assert_eq!(rec.dropped(), 0, "16k ring must not wrap under 24 requests");
+    let count = |name: &str| events.iter().filter(|e| e.name == name).count();
+    assert_eq!(count("submit"), n, "one submit per request");
+    assert_eq!(count("done"), n, "every request completes exactly once");
+    assert!(count("route") >= n, "each request is routed at least once");
+    assert!(count("prefill") >= n, "each dispatch prefills");
+    check_span_nesting(&events).expect("queue/decode spans balance");
+    // every submitted id reaches done — the trace covers the full
+    // request population, not a sample
+    for e in events.iter().filter(|e| e.name == "submit") {
+        assert!(
+            events.iter().any(|d| d.name == "done" && d.req == e.req),
+            "request {} submitted but never done",
+            e.req
+        );
+    }
+
+    let chrome = rec.export_chrome_trace();
+    let j = Json::parse(&chrome).expect("chrome trace is valid JSON");
+    let arr = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert_eq!(arr.len(), events.len(), "no event lost in chrome export");
+
+    let report = pool.shutdown().unwrap();
+    let attr = report.attribution();
+    let serving = report.replica_seconds();
+    assert!(attr.serving_total() > 0.0, "attribution recorded nothing: {attr:?}");
+    assert!(
+        (attr.serving_total() - serving).abs() <= 0.4 * serving + 0.1,
+        "attribution {attr:?} does not tile serving replica-seconds {serving:.3}"
+    );
+    assert!(attr.draining.abs() < 1e-6, "no replica retired in this run: {attr:?}");
 }
