@@ -41,8 +41,8 @@ test-races:
 bench:
 	@for b in fig1b_scaling fig3a_allocation fig3b_rollout_size fig4_offpolicy \
 	         fig7_queue_sched fig8_prompt_repl fig9_env_async fig10_redundant \
-	         fig11_real_env fig_fleet_scaling fig_autoscale table1_async_ratio \
-	         prop_bounds; do \
+	         fig11_real_env fig_fleet_scaling fig_autoscale fig_tail_latency \
+	         table1_async_ratio prop_bounds; do \
 		cargo bench --bench $$b; \
 	done
 

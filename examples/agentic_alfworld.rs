@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
+        predictor: Default::default(),
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",

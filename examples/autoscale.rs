@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         reclaim_in_place: true,
         // in-memory tracing: scale decisions land in the pool ring
         trace: TraceCfg { enabled: true, ring_capacity: 4096, export_path: None },
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 71)?;
     let scale_cfg = AutoscaleCfg {
@@ -77,6 +78,8 @@ fn main() -> anyhow::Result<()> {
         interval: 0.005,
         cooldown: 0.01,
         hysteresis: 0.2,
+        adaptive_target: false,
+        decode_knee: 16.0,
     };
     scale_cfg.validate()?;
     let mut scaler = Autoscaler::new(scale_cfg);

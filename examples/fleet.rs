@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
             // the training fleet below owns the export; the race pools
             // stay untraced so they don't overwrite its files
             trace: TraceCfg::disabled(),
+            predictor: Default::default(),
         };
         let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
         // identical skewed workload for both policies: mostly short
@@ -143,6 +144,7 @@ fn main() -> anyhow::Result<()> {
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet (see examples/autoscale.rs)
         trace: trace.clone(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {

@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
+        predictor: Default::default(),
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;

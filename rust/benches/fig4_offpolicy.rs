@@ -41,6 +41,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         reclaim_in_place: true,
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {

@@ -176,6 +176,7 @@ fn main() {
                 salvage_timeout: 0.5,
                 reclaim_in_place: true,
                 trace,
+                predictor: Default::default(),
             };
             let pool =
                 LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 7).unwrap();

@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::coordinator::autoscaler::AutoscaleCfg;
+use crate::coordinator::length_predictor::PredictorCfg;
 use crate::coordinator::routing::RoutePolicy;
 use crate::metrics::trace::TraceCfg;
 use crate::util::json::Json;
@@ -140,6 +141,10 @@ pub struct RollConfig {
     /// attribution (`trace: {enabled, ring_capacity, export_path}`;
     /// presence of the block enables it)
     pub trace: TraceCfg,
+    /// generation-length predictor behind tail-aware scheduling
+    /// (`length_predictor: {ewma_beta, sketch_capacity, long_quantile,
+    /// min_samples, default_len}`; always on — the knobs only shape it)
+    pub predictor: PredictorCfg,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -175,6 +180,7 @@ impl Default for RollConfig {
             reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
             trace: TraceCfg::disabled(),
+            predictor: PredictorCfg::default(),
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -288,6 +294,29 @@ impl RollConfig {
             if let Some(v) = num(a, "hysteresis") {
                 cfg.autoscale.hysteresis = v;
             }
+            if let Some(Json::Bool(b)) = a.get("adaptive_target") {
+                cfg.autoscale.adaptive_target = *b;
+            }
+            if let Some(v) = num(a, "decode_knee") {
+                cfg.autoscale.decode_knee = v;
+            }
+        }
+        if let Some(p) = j.get("length_predictor") {
+            if let Some(v) = num(p, "ewma_beta") {
+                cfg.predictor.ewma_beta = v;
+            }
+            if let Some(v) = num(p, "sketch_capacity") {
+                cfg.predictor.sketch_capacity = v as usize;
+            }
+            if let Some(v) = num(p, "long_quantile") {
+                cfg.predictor.long_quantile = v;
+            }
+            if let Some(v) = num(p, "min_samples") {
+                cfg.predictor.min_samples = v as usize;
+            }
+            if let Some(v) = num(p, "default_len") {
+                cfg.predictor.default_len = v;
+            }
         }
         if let Some(t) = j.get("trace") {
             // like autoscale: the block's presence turns the recorder
@@ -376,6 +405,7 @@ impl RollConfig {
             "trace.ring_capacity must be > 0 when tracing is enabled"
         );
         self.autoscale.validate()?;
+        self.predictor.validate()?;
         Ok(())
     }
 
@@ -577,6 +607,46 @@ trace:
         assert_eq!(off.trace.ring_capacity, 64);
         // a zero-capacity ring cannot hold events
         assert!(RollConfig::from_yaml("trace:\n  ring_capacity: 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_length_predictor_and_adaptive_autoscale_keys() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+route_policy: tail_aware
+length_predictor:
+  ewma_beta: 0.5
+  sketch_capacity: 128
+  long_quantile: 0.9
+  min_samples: 4
+  default_len: 512
+autoscale:
+  adaptive_target: true
+  decode_knee: 32
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.route_policy, RoutePolicy::TailAware);
+        assert!((cfg.predictor.ewma_beta - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.predictor.sketch_capacity, 128);
+        assert!((cfg.predictor.long_quantile - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.predictor.min_samples, 4);
+        assert!((cfg.predictor.default_len - 512.0).abs() < 1e-12);
+        assert!(cfg.autoscale.adaptive_target);
+        assert!((cfg.autoscale.decode_knee - 32.0).abs() < 1e-12);
+        // defaults: FIFO-compatible predictor knobs, fixed-target scaler
+        let d = RollConfig::default();
+        assert!(!d.autoscale.adaptive_target);
+        assert!((d.predictor.ewma_beta - 0.2).abs() < 1e-12);
+        // degenerate knobs are rejected at parse time
+        assert!(RollConfig::from_yaml("length_predictor:\n  ewma_beta: 0\n").is_err());
+        assert!(RollConfig::from_yaml("length_predictor:\n  long_quantile: 1\n").is_err());
+        assert!(RollConfig::from_yaml("length_predictor:\n  sketch_capacity: 0\n").is_err());
+        assert!(RollConfig::from_yaml("length_predictor:\n  default_len: 0\n").is_err());
+        assert!(
+            RollConfig::from_yaml("autoscale:\n  adaptive_target: true\n  decode_knee: 0\n")
+                .is_err()
+        );
     }
 
     #[test]

@@ -82,6 +82,12 @@ pub struct StepLog {
     /// bubble). `attr.serving_total()` tracks
     /// `serving_replicas × wall_secs` for a static fleet.
     pub attr: AttrSnapshot,
+    /// p50 episode-completion latency (dispatch → Done, seconds) among
+    /// episodes that finished during this step; 0 when none did
+    pub lat_p50: f64,
+    /// p99 episode-completion latency for the same window — the
+    /// long-tail scoreboard the length-aware scheduling drives down
+    pub lat_p99: f64,
 }
 
 /// Run the training loop. `rt`/`st` belong to the calling thread (the
@@ -168,6 +174,7 @@ pub fn run_training(
 
         let gap_after = buffer.stats();
         let tokens_after = proxy.token_stats();
+        let (lat_p50, lat_p99) = proxy.latency_percentiles();
         logs.push(StepLog {
             step,
             loss: agg.loss,
@@ -194,6 +201,8 @@ pub fn run_training(
             serving_replicas: proxy.serving_replicas(),
             wall_secs: t0.elapsed().as_secs_f64(),
             attr: proxy.attribution().delta(&attr_before),
+            lat_p50,
+            lat_p99,
         });
     }
     Ok(logs)
@@ -206,13 +215,15 @@ pub fn run_training(
 /// `waste` are the step's decoded-token salvage and loss; `repl` is
 /// the serving replica count (elastic under autoscaling); `attr` is
 /// the step's replica-time split as busy/sync/idle percent of serving
-/// time (`-` until the recorder has attributed anything).
+/// time (`-` until the recorder has attributed anything); `lat` is the
+/// step's p50/p99 episode-completion latency in seconds (0/0 when no
+/// episode finished inside the step).
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  attr {}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  attr {}  lat {:.2}/{:.2}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
         l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
         l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.serving_replicas,
-        l.attr.format_compact(), l.wall_secs
+        l.attr.format_compact(), l.lat_p50, l.lat_p99, l.wall_secs
     )
 }

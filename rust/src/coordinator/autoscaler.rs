@@ -62,6 +62,13 @@ pub struct AutoscaleCfg {
     /// dead band around the target as a fraction (0.25 = only act when
     /// per-replica load leaves [0.75, 1.25] x target)
     pub hysteresis: f64,
+    /// derive the per-replica target from `decode_knee` x the live
+    /// generation-length profile (mean/p90) instead of the hand-tuned
+    /// `target_queue_depth` constant; the constant becomes the ceiling
+    pub adaptive_target: bool,
+    /// requests per replica where decode throughput saturates (the
+    /// knee of the decode-batch curve) — the adaptive target's scale
+    pub decode_knee: f64,
 }
 
 impl AutoscaleCfg {
@@ -75,6 +82,8 @@ impl AutoscaleCfg {
             interval: 1.0,
             cooldown: 2.0,
             hysteresis: 0.25,
+            adaptive_target: false,
+            decode_knee: 16.0,
         }
     }
 
@@ -108,6 +117,12 @@ impl AutoscaleCfg {
             (0.0..1.0).contains(&self.hysteresis),
             "autoscale.hysteresis must be in [0, 1)"
         );
+        if self.adaptive_target {
+            anyhow::ensure!(
+                self.decode_knee.is_finite() && self.decode_knee > 0.0,
+                "autoscale.decode_knee must be > 0 when adaptive_target is on"
+            );
+        }
         Ok(())
     }
 }
@@ -145,6 +160,14 @@ pub struct PoolSignals {
     /// drain onto a fleet mid-incident, so Shrink is suppressed for
     /// that interval.
     pub wasted_tokens: u64,
+    /// live mean generation length from the shared [`LengthPredictor`]
+    /// (0 until anything completes)
+    ///
+    /// [`LengthPredictor`]: crate::coordinator::length_predictor::LengthPredictor
+    pub pred_mean_len: f64,
+    /// live p90 generation length (heavy tails push p90 far above the
+    /// mean — exactly when per-replica queues must stay shallow)
+    pub pred_p90_len: f64,
 }
 
 /// The pure decision function, shared verbatim by the real control loop
@@ -157,6 +180,15 @@ pub struct PoolSignals {
 /// outside `target * (1 -/+ hysteresis)`, so a fleet sitting near the
 /// target does not flap. A fleet below `min_replicas` (replicas died)
 /// always grows back regardless of load.
+///
+/// With `adaptive_target` on, the per-replica target is derived from
+/// the live length profile instead of the hand-tuned constant:
+/// `decode_knee * mean/p90`, clamped to `[1, target_queue_depth]`. A
+/// homogeneous workload (mean ~= p90) keeps the full decode-knee
+/// batch; a heavy tail (p90 >> mean) pulls the target down, because a
+/// straggler pins its whole batch and deep per-replica queues turn
+/// into tail latency rather than throughput. Until anything completes
+/// the profile is empty and the constant applies unchanged.
 pub fn decide(cfg: &AutoscaleCfg, s: &PoolSignals) -> ScaleDecision {
     if s.serving < cfg.min_replicas {
         return ScaleDecision::Grow(cfg.min_replicas - s.serving);
@@ -164,16 +196,20 @@ pub fn decide(cfg: &AutoscaleCfg, s: &PoolSignals) -> ScaleDecision {
     if s.serving > cfg.max_replicas {
         return ScaleDecision::Shrink(s.serving - cfg.max_replicas);
     }
+    let target = if cfg.adaptive_target && s.pred_mean_len > 0.0 && s.pred_p90_len > 0.0 {
+        (cfg.decode_knee * s.pred_mean_len / s.pred_p90_len).clamp(1.0, cfg.target_queue_depth)
+    } else {
+        cfg.target_queue_depth
+    };
     let load = s.queue_depth.max(0.0) + s.outstanding as f64;
     let per_replica = load / s.serving.max(1) as f64;
-    let desired = (load / cfg.target_queue_depth).ceil() as usize;
+    let desired = (load / target).ceil() as usize;
     // never shrink below what the decode windows need for in-flight work
     let floor = (s.outstanding as f64 / s.slots.max(1) as f64).ceil() as usize;
     let desired = desired.max(floor).clamp(cfg.min_replicas, cfg.max_replicas);
-    if per_replica > cfg.target_queue_depth * (1.0 + cfg.hysteresis) && desired > s.serving {
+    if per_replica > target * (1.0 + cfg.hysteresis) && desired > s.serving {
         ScaleDecision::Grow(desired - s.serving)
-    } else if per_replica < cfg.target_queue_depth * (1.0 - cfg.hysteresis) && desired < s.serving
-    {
+    } else if per_replica < target * (1.0 - cfg.hysteresis) && desired < s.serving {
         ScaleDecision::Shrink(s.serving - desired)
     } else {
         ScaleDecision::Hold
@@ -321,11 +357,21 @@ mod tests {
             interval: 1.0,
             cooldown: 3.0,
             hysteresis: 0.25,
+            adaptive_target: false,
+            decode_knee: 16.0,
         }
     }
 
     fn sig(serving: usize, queue: f64, outstanding: usize) -> PoolSignals {
-        PoolSignals { serving, queue_depth: queue, outstanding, slots: 8, wasted_tokens: 0 }
+        PoolSignals {
+            serving,
+            queue_depth: queue,
+            outstanding,
+            slots: 8,
+            wasted_tokens: 0,
+            pred_mean_len: 0.0,
+            pred_p90_len: 0.0,
+        }
     }
 
     #[test]
@@ -341,6 +387,14 @@ mod tests {
             |c| c.target_queue_depth = 0.0,
             |c| c.hysteresis = 1.0,
             |c| c.hysteresis = -0.1,
+            |c| {
+                c.adaptive_target = true;
+                c.decode_knee = 0.0;
+            },
+            |c| {
+                c.adaptive_target = true;
+                c.decode_knee = f64::NAN;
+            },
         ] {
             let mut c = cfg();
             mutate(&mut c);
@@ -411,6 +465,30 @@ mod tests {
             wasted_tokens: 0,
         };
         assert_eq!(decide(&c, &s), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn adaptive_target_tracks_the_length_profile() {
+        let mut c = cfg();
+        c.adaptive_target = true;
+        c.decode_knee = 4.0;
+        // cold profile: the hand-tuned constant applies unchanged
+        assert_eq!(decide(&c, &sig(4, 8.0, 8)), ScaleDecision::Hold);
+        // homogeneous lengths (mean == p90): the knee is the target —
+        // same as target_queue_depth here, so still a hold
+        let homog = PoolSignals { pred_mean_len: 500.0, pred_p90_len: 500.0, ..sig(4, 8.0, 8) };
+        assert_eq!(decide(&c, &homog), ScaleDecision::Hold);
+        // heavy tail (p90 = 4x mean): target drops to 4 * 0.25 = 1, so
+        // the same 4-per-replica load now demands a much wider fleet
+        let tailed = PoolSignals { pred_mean_len: 500.0, pred_p90_len: 2000.0, ..sig(4, 8.0, 8) };
+        assert_eq!(decide(&c, &tailed), ScaleDecision::Grow(4), "16 load / target 1 -> 8 wide");
+        // the adaptive target never exceeds the configured constant
+        let short = PoolSignals { pred_mean_len: 500.0, pred_p90_len: 100.0, ..sig(4, 8.0, 8) };
+        assert_eq!(decide(&c, &short), ScaleDecision::Hold, "clamped to target_queue_depth");
+        // ... and never collapses below one request per replica
+        let extreme =
+            PoolSignals { pred_mean_len: 1.0, pred_p90_len: 1e9, ..sig(8, 0.0, 8) };
+        assert_eq!(decide(&c, &extreme), ScaleDecision::Hold, "floor at 1: 8 load needs 8");
     }
 
     #[test]

@@ -8,10 +8,12 @@
 //!
 //!   1. *Load-balanced placement*: each [`GenerationTask`] is routed by
 //!      a pluggable [`RoutePolicy`] (round-robin, least-outstanding,
-//!      queue scheduling with pool-side backpressure, or EWMA — see
-//!      `routing.rs`). A per-replica completion collector feeds
-//!      finished generations back to the caller and re-dispatches
-//!      pool-queued work as decode slots free up.
+//!      queue scheduling with pool-side backpressure, EWMA, or
+//!      length-aware tail packing — see `routing.rs`). A per-replica
+//!      completion collector feeds finished generations back to the
+//!      caller, updates the shared [`LengthPredictor`] with each
+//!      completion's true length, and re-dispatches pool-queued work
+//!      as decode slots free up.
 //!   2. *Staggered (rolling) weight sync*: `update_weights` walks the
 //!      replicas one at a time, waiting for each to acknowledge the
 //!      swap before moving on, so at most one replica is paused while
@@ -100,11 +102,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::autoscaler::PoolSignals;
+use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
 use crate::coordinator::llm_proxy::{
-    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyEvent, ProxyReport, Salvage,
-    TokenLedger, TokenStats,
+    GenResult, GenerationTask, LlmProxy, ProgressGossip, ProxyClient, ProxyEvent, ProxyReport,
+    Salvage, TokenLedger, TokenStats,
 };
-use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
+use crate::coordinator::routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
 use crate::metrics::registry::{Counter, HistogramHandle, MetricsRegistry};
 use crate::metrics::trace::{
     AttrSnapshot, Attribution, EventPhase, FlightRecorder, TraceCfg,
@@ -157,6 +160,10 @@ pub struct PoolCfg {
     /// export_path}` in YAML / CLI); disabled costs one branch per
     /// would-be event
     pub trace: TraceCfg,
+    /// generation-length predictor shape (`length_predictor: {…}` in
+    /// YAML / CLI) — feeds TailAware routing, two-class proxy
+    /// admission, and the autoscaler's adaptive target
+    pub predictor: PredictorCfg,
 }
 
 impl PoolCfg {
@@ -171,6 +178,7 @@ impl PoolCfg {
             salvage_timeout: 0.5,
             reclaim_in_place: true,
             trace: TraceCfg::disabled(),
+            predictor: PredictorCfg::default(),
         }
     }
 }
@@ -212,6 +220,10 @@ struct InFlight {
     migrations: u32,
     /// dispatch wall time — feeds the router's EWMA token-rate estimate
     dispatched: Instant,
+    /// predicted remaining tokens at dispatch — the per-replica
+    /// predicted-remaining load score sums these (minus the gossiped
+    /// decode progress since)
+    predicted: f64,
 }
 
 /// Where a parked task goes once its RECLAIM resolves with a salvage
@@ -244,6 +256,8 @@ struct Parked {
     /// re-dispatches from the last salvaged prefix
     deadline: Instant,
     dest: SalvageDest,
+    /// predicted remaining tokens, carried from the in-flight entry
+    predicted: f64,
 }
 
 /// How a parked salvage resolved. Exactly one of these reaches
@@ -264,6 +278,10 @@ fn depth_hist() -> Histogram {
 
 fn util_hist() -> Histogram {
     Histogram::new(0.01, 1.25)
+}
+
+fn latency_hist() -> Histogram {
+    Histogram::new(1e-3, 1.25)
 }
 
 struct PoolState {
@@ -326,6 +344,14 @@ struct PoolState {
     /// (shared `Arc` with the loop); reset to a fresh accumulator when
     /// the slot's report is archived so occupants never blend
     attr: Vec<Arc<Attribution>>,
+    /// per-slot progress gossip shared with the occupant's decode loop:
+    /// monotonic decoded totals + live fresh-token gauge, the
+    /// caller-side view of decode progress that RECLAIM answers would
+    /// otherwise be the only source of
+    gossip: Vec<Arc<ProgressGossip>>,
+    /// episode-completion latency (dispatch → Done) since the last
+    /// StepLog read; reset on every read, like `queue_window`
+    lat_window: Histogram,
     /// when the slot's current occupant left service and began
     /// draining (pool-side half of the `Draining` attribution bucket)
     drain_start: Vec<Option<Instant>>,
@@ -350,8 +376,27 @@ impl PoolState {
                 suspended: self.pool_suspended
                     || self.phase[r] != Phase::Serving
                     || self.syncing == Some(r),
+                predicted_remaining: self.predicted_remaining(r),
             })
             .collect()
+    }
+
+    /// Predicted tokens replica `r` still owes: the sum of its
+    /// in-flight (and parked) predictions minus the fresh decode
+    /// progress its loop has gossiped since dispatch, floored at one
+    /// token per outstanding request. This is TailAware's load score —
+    /// a replica holding one 10k-token straggler is "fuller" than one
+    /// holding four 100-token rollouts.
+    fn predicted_remaining(&self, r: usize) -> f64 {
+        let predicted: f64 = self
+            .inflight
+            .values()
+            .filter(|e| e.replica == r)
+            .map(|e| e.predicted)
+            .chain(self.parked.values().filter(|p| p.replica == r).map(|p| p.predicted))
+            .sum();
+        let decoded = self.gossip.get(r).map(|g| g.inflight_fresh() as f64).unwrap_or(0.0);
+        (predicted - decoded).max(self.outstanding[r] as f64)
     }
 
     /// No slot can ever serve a request again (every occupant dead or
@@ -405,6 +450,9 @@ struct FleetMetrics {
     /// pool-queue length at submit (lifetime) — the registry-owned
     /// replacement for the old ad-hoc `PoolState.queue_depth` field
     pool_queue_depth: HistogramHandle,
+    /// dispatch → Done wall seconds per episode (lifetime) — the
+    /// tail-latency scoreboard `fig_tail_latency` reads
+    completion_latency: HistogramHandle,
 }
 
 impl FleetMetrics {
@@ -419,6 +467,7 @@ impl FleetMetrics {
             grown: registry.counter("pool.grown"),
             retired: registry.counter("pool.retired"),
             pool_queue_depth: registry.histogram("pool.queue_depth", 1.0, 1.25),
+            completion_latency: registry.histogram("pool.completion_latency", 1e-3, 1.25),
             registry,
         }
     }
@@ -448,6 +497,10 @@ struct Shared {
     metrics: FleetMetrics,
     /// routing policy, echoed into `route` trace events
     route_policy: RoutePolicy,
+    /// shared generation-length predictor: fed by the collectors on
+    /// every completion, read by routing / admission stamps / the
+    /// autoscaler signals
+    predictor: Arc<LengthPredictor>,
 }
 
 impl Shared {
@@ -483,6 +536,18 @@ impl Shared {
         self.ev_pool("queue", EventPhase::End, req, String::new());
     }
 
+    /// Length-scheduling hint for routing `task`: predicted remaining
+    /// tokens (budget-clamped, prefix-discounted) plus the long/short
+    /// class. Only `TailAware` consumes it; every other policy ignores
+    /// the hint entirely.
+    fn hint_for(&self, task: &GenerationTask) -> Option<RouteHint> {
+        let predicted = self.predictor.predict_for(task.group, task.budget);
+        Some(RouteHint {
+            predicted_len: predicted.saturating_sub(task.prefix.len()).max(1) as f64,
+            long: self.predictor.classify(predicted as f64),
+        })
+    }
+
     /// Dispatch a request to replica `r`; caller holds the state lock.
     /// A submit failure means the replica's event loop is gone — the
     /// replica is marked dead and the request fails over *with its
@@ -491,6 +556,15 @@ impl Shared {
     /// caller's reply channel) once no serving replica remains.
     fn dispatch(&self, st: &mut PoolState, r: usize, req: Pending, migrations: u32) {
         let mut r = r;
+        let mut req = req;
+        // stamp the length-scheduling hints at (re)dispatch time: the
+        // prediction is re-derived on every hop so a salvaged prefix
+        // shrinks the remaining estimate, and the budget clamp
+        // guarantees the stamp never exceeds what the row can hold
+        let predicted = self.predictor.predict_for(req.task.group, req.task.budget);
+        req.task.predicted_len = predicted;
+        req.task.long_class = self.predictor.classify(predicted as f64);
+        let remaining = predicted.saturating_sub(req.task.prefix.len()).max(1);
         loop {
             let Some(tx) = st.completion_tx[r].as_ref().cloned() else {
                 // no collector channel. A *retired or draining* slot
@@ -503,7 +577,8 @@ impl Shared {
                 // caller observes disconnection
                 if matches!(st.phase[r], Phase::Retired | Phase::Draining) {
                     let loads = st.loads();
-                    match st.router.route_excluding(&loads, Some(r)) {
+                    let hint = self.hint_for(&req.task);
+                    match st.router.route_excluding_hinted(&loads, Some(r), hint) {
                         Some(next) => {
                             r = next;
                             continue;
@@ -531,6 +606,9 @@ impl Shared {
                 prefix_version: req.task.prefix_version,
                 budget: req.task.budget,
                 greedy: req.task.greedy,
+                group: req.task.group,
+                predicted_len: req.task.predicted_len,
+                long_class: req.task.long_class,
                 reply: tx,
             };
             match st.clients[r].try_submit(replica_task) {
@@ -578,6 +656,7 @@ impl Shared {
                             task: req.task,
                             migrations,
                             dispatched: Instant::now(),
+                            predicted: remaining as f64,
                         },
                     );
                     return;
@@ -586,7 +665,8 @@ impl Shared {
                     st.phase[r] = Phase::Dead;
                     st.close_serve_clock(r);
                     let loads = st.loads();
-                    match st.router.route_excluding(&loads, Some(r)) {
+                    let hint = self.hint_for(&req.task);
+                    match st.router.route_excluding_hinted(&loads, Some(r), hint) {
                         Some(next) => r = next,
                         None if st.none_serviceable() => {
                             // drop: caller disconnects; the salvaged
@@ -624,12 +704,14 @@ impl Shared {
         }
         while !st.queue.is_empty() {
             let loads = st.loads();
-            let avoid = st.queue.front().unwrap().avoid;
-            let picked = match st.router.route_excluding(&loads, avoid) {
+            let front = st.queue.front().unwrap();
+            let avoid = front.avoid;
+            let hint = self.hint_for(&front.task);
+            let picked = match st.router.route_excluding_hinted(&loads, avoid, hint) {
                 Some(r) => Some(r),
                 // the avoided replica is the only routable one: better
                 // there than starving in the queue
-                None if avoid.is_some() => st.router.route(&loads),
+                None if avoid.is_some() => st.router.route_hinted(&loads, hint),
                 None => None,
             };
             let Some(r) = picked else { break };
@@ -674,7 +756,7 @@ impl Shared {
     /// prefix). Caller holds the state lock.
     fn park_for_reclaim(&self, st: &mut PoolState, pool_id: u64, dest: SalvageDest) -> bool {
         let Some(entry) = st.inflight.remove(&pool_id) else { return false };
-        let InFlight { replica, inner_id, task, migrations, dispatched } = entry;
+        let InFlight { replica, inner_id, task, migrations, dispatched, predicted } = entry;
         // the answer rides the replica's own completion channel, so it
         // is totally FIFO-ordered against the request's Done event
         let reply = st.completion_tx[replica].as_ref().cloned();
@@ -688,6 +770,7 @@ impl Shared {
                 dispatched,
                 deadline: Instant::now() + self.salvage_timeout,
                 dest,
+                predicted,
             },
         );
         self.parked_count.fetch_add(1, Ordering::Relaxed);
@@ -761,6 +844,10 @@ impl Shared {
                 // the generation finished inside the reclaim window:
                 // deliver it once, count it completed, re-decode nothing
                 self.metrics.completed.inc();
+                self.predictor.record(task.group, res.tokens.len());
+                let lat = p.dispatched.elapsed().as_secs_f64().max(1e-6);
+                st.lat_window.record(lat);
+                self.metrics.completion_latency.record(lat);
                 let fresh = res.tokens.len().saturating_sub(task.prefix.len());
                 if fresh > 0 {
                     st.router.on_completion(
@@ -796,7 +883,8 @@ impl Shared {
             }
             SalvageDest::Migrate => {
                 let loads = st.loads();
-                match st.router.route_excluding(&loads, Some(p.replica)) {
+                let hint = self.hint_for(&req.task);
+                match st.router.route_excluding_hinted(&loads, Some(p.replica), hint) {
                     Some(nr) => {
                         self.ev_pool("redispatch", EventPhase::Instant, pool_id, String::new());
                         self.dispatch(st, nr, req, migrations);
@@ -970,6 +1058,10 @@ fn collector_on_done(
     }
     let entry = st.inflight.remove(&pool_id);
     if let Some(e) = &entry {
+        shared.predictor.record(e.task.group, res.tokens.len());
+        let lat = e.dispatched.elapsed().as_secs_f64().max(1e-6);
+        st.lat_window.record(lat);
+        shared.metrics.completion_latency.record(lat);
         // feed the router only the tokens THIS replica decoded:
         // crediting a resumed task's salvaged prefix over the time
         // since re-dispatch would inflate the EWMA rate of whichever
@@ -1302,6 +1394,7 @@ impl LlmProxyPool {
             !cfg.trace.enabled || cfg.trace.ring_capacity > 0,
             "trace.ring_capacity must be > 0 when tracing is enabled"
         );
+        cfg.predictor.validate()?;
         let ledger = Arc::new(TokenLedger::default());
         let latest = Arc::new(Mutex::new((init_weights.clone(), 0u64)));
         let replicas: Vec<LlmProxy> = (0..cfg.num_replicas)
@@ -1359,6 +1452,8 @@ impl LlmProxyPool {
             completion_rx.push(rx);
         }
         let attr: Vec<Arc<Attribution>> = replicas.iter().map(|p| p.attribution()).collect();
+        let gossip: Vec<Arc<ProgressGossip>> =
+            replicas.iter().map(|p| p.progress_gossip()).collect();
         let state = PoolState {
             router: Router::new(cfg.route_policy),
             clients,
@@ -1384,6 +1479,8 @@ impl LlmProxyPool {
             util: (0..n).map(|_| util_hist()).collect(),
             queue_window: depth_hist(),
             attr,
+            gossip,
+            lat_window: latency_hist(),
             drain_start: vec![None; n],
             completion_tx,
             serve_start: (0..n).map(|_| Some(Instant::now())).collect(),
@@ -1402,6 +1499,7 @@ impl LlmProxyPool {
             recorder: FlightRecorder::from_cfg(&cfg.trace),
             metrics: FleetMetrics::new(),
             route_policy: cfg.route_policy,
+            predictor: Arc::new(LengthPredictor::new(cfg.predictor)),
         });
         let mut collectors = Vec::with_capacity(n);
         for (r, rx) in completion_rx.into_iter().enumerate() {
@@ -1468,6 +1566,7 @@ impl LlmProxyPool {
         let replica = spawner(slot, generation);
         let client = replica.client();
         let attr = replica.attribution();
+        let gossip = replica.progress_gossip();
         // pin the newcomer to the latest broadcast weights: the spawner
         // snapshot may have raced a concurrent update_weights
         let (weights, version) = {
@@ -1489,6 +1588,7 @@ impl LlmProxyPool {
                 st.depth.push(depth_hist());
                 st.util.push(util_hist());
                 st.attr.push(attr);
+                st.gossip.push(gossip);
                 st.drain_start.push(None);
                 st.completion_tx.push(Some(tx));
                 st.serve_start.push(Some(Instant::now()));
@@ -1507,6 +1607,7 @@ impl LlmProxyPool {
                 st.depth[slot] = depth_hist();
                 st.util[slot] = util_hist();
                 st.attr[slot] = attr;
+                st.gossip[slot] = gossip;
                 st.drain_start[slot] = None;
                 st.completion_tx[slot] = Some(tx);
                 st.serve_start[slot] = Some(Instant::now());
@@ -1605,16 +1706,22 @@ impl LlmProxyPool {
     }
 
     /// SHRINK by policy: retire the serving replica with the fewest
-    /// in-flight requests; ties prefer the replica whose in-flight
-    /// work is cheapest to salvage (fewest already-carried prefix
-    /// tokens — the KV replay a drain would re-pay), then the lowest
-    /// slot. False when fewer than two replicas serve.
+    /// in-flight requests; ties prefer the replica with the fewest
+    /// predicted-remaining tokens (the decode work a drain would
+    /// interrupt), then the cheapest true salvage bill — the carried
+    /// prefix PLUS the fresh decode progress its loop has gossiped,
+    /// which is the KV replay a drain would actually re-pay — then the
+    /// lowest slot. False when fewer than two replicas serve.
     pub fn retire_idlest(&self) -> bool {
         let victim = {
             let st = self.shared.state.lock().unwrap();
             (0..st.phase.len())
                 .filter(|&i| st.phase[i] == Phase::Serving)
-                .min_by_key(|&i| (st.outstanding[i], st.salvage_cost(i), i))
+                .min_by_key(|&i| {
+                    let replay =
+                        st.salvage_cost(i) + st.gossip[i].inflight_fresh() as usize;
+                    (st.outstanding[i], st.predicted_remaining(i).round() as u64, replay, i)
+                })
         };
         match victim {
             Some(r) => self.retire_replica(r),
@@ -1648,13 +1755,34 @@ impl LlmProxyPool {
         let mut st = self.shared.state.lock().unwrap();
         let window_p90 = st.queue_window.percentile(90.0);
         st.queue_window.reset();
+        let profile = self.shared.predictor.snapshot();
         PoolSignals {
             serving: st.serving(),
             queue_depth: window_p90.max(st.queue.len() as f64),
             outstanding: st.outstanding.iter().sum(),
             slots: st.slots,
             wasted_tokens: self.shared.ledger.stats().wasted_tokens,
+            pred_mean_len: profile.mean,
+            pred_p90_len: profile.p90,
         }
+    }
+
+    /// Windowed episode-completion-latency percentiles `(p50, p99)` in
+    /// seconds since the last read; the window resets on every read
+    /// (`StepLog`'s per-step feed — the lifetime histogram stays in the
+    /// metrics registry as `pool.completion_latency`). `(0, 0)` when no
+    /// episode completed in the window.
+    pub fn latency_percentiles(&self) -> (f64, f64) {
+        let mut st = self.shared.state.lock().unwrap();
+        let out = (st.lat_window.percentile(50.0), st.lat_window.percentile(99.0));
+        st.lat_window.reset();
+        out
+    }
+
+    /// Shared generation-length predictor (diagnostics + the engine's
+    /// sim mirror feed).
+    pub fn length_predictor(&self) -> Arc<LengthPredictor> {
+        self.shared.predictor.clone()
     }
 
     /// ADD: route (or pool-queue) a from-scratch generation; returns
@@ -1696,7 +1824,8 @@ impl LlmProxyPool {
             );
         }
         let loads = st.loads();
-        match st.router.route(&loads) {
+        let hint = self.shared.hint_for(&req.task);
+        match st.router.route_hinted(&loads, hint) {
             Some(r) => self.shared.dispatch(&mut st, r, req, 0),
             None => {
                 self.shared.trace_queue_begin(pool_id);
@@ -2146,6 +2275,7 @@ pub(crate) mod testing {
             salvage_timeout: 2.0,
             reclaim_in_place: true,
             trace: TraceCfg::disabled(),
+            predictor: PredictorCfg::default(),
         }
     }
 
@@ -2551,6 +2681,8 @@ mod tests {
             interval: 0.0001,
             cooldown: 0.0001,
             hysteresis: 0.2,
+            adaptive_target: false,
+            decode_knee: 16.0,
         });
         let mut ids = Vec::new();
         for i in 0..12 {
@@ -2700,5 +2832,50 @@ mod tests {
         let metrics = std::fs::read_to_string(dir.join("metrics.txt")).unwrap();
         assert!(metrics.contains("counter pool.submitted 1"), "{metrics}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // --- length-aware scheduling -------------------------------------
+
+    #[test]
+    fn tail_aware_pool_serves_cold_start_without_starvation() {
+        // a cold predictor classifies everything short; TailAware must
+        // still place every request (spill keeps it work-conserving)
+        let p = pool(3, RoutePolicy::TailAware, 2);
+        for i in 0..6 {
+            let _ = p.generate(vec![i], 4);
+        }
+        assert_eq!(p.outstanding_per_replica().iter().sum::<usize>(), 6);
+        assert_eq!(p.pool_queue_len(), 0);
+        let sig = p.autoscale_signals();
+        assert_eq!(sig.pred_mean_len, 0.0, "nothing completed yet");
+        let (p50, p99) = p.latency_percentiles();
+        assert_eq!((p50, p99), (0.0, 0.0), "no completions: empty latency window");
+    }
+
+    #[test]
+    fn retire_idlest_prefers_predicted_cheapest_victim() {
+        // equal request counts: the tie must break on
+        // predicted-remaining tokens (budget-clamped default
+        // predictions here), not slot order
+        let p = elastic_pool(3, 0, &cfg(3, RoutePolicy::RoundRobin, 8));
+        let (_a, _rx_a) = p.generate(vec![1], 400); // RR -> replica 0, predicted 256
+        let (_b, _rx_b) = p.generate(vec![2], 4); // RR -> replica 1, predicted 4
+        let (_c, _rx_c) = p.generate(vec![3], 400); // RR -> replica 2, predicted 256
+        assert!(p.retire_idlest());
+        p.settle(SETTLE);
+        assert_eq!(p.serving_replicas(), 2);
+        assert_eq!(
+            p.outstanding_per_replica()[1],
+            0,
+            "replica 1 held the fewest predicted-remaining tokens and must drain"
+        );
+        p.check_invariants();
+    }
+
+    #[test]
+    fn predictor_rejects_invalid_cfg_at_spawn() {
+        let mut c = PoolCfg::single(4);
+        c.predictor.ewma_beta = 0.0;
+        assert!(LlmProxyPool::spawn(&c, PathBuf::from("/x"), vec![], 2, 0).is_err());
     }
 }

@@ -1,0 +1,433 @@
+//! Generation-length prediction for tail-aware scheduling (RollPacker,
+//! arxiv 2509.21009; ROADMAP "Continuous batching + long-tail length
+//! scheduling").
+//!
+//! The long-tail stall is a *scheduling* problem: a 30k-token straggler
+//! admitted late pins its decode batch long after the short work around
+//! it finished. But generation length is predictable enough to schedule
+//! by — rollouts of the same prompt group (GRPO members, retries of the
+//! same env task) have strongly correlated lengths. This module keeps a
+//! per-group [`GroupStats`] (EWMA mean + a fixed-size reservoir
+//! [`QuantileSketch`] for p50/p90) updated on every completion, plus a
+//! global fallback for cold groups, and serves three consumers:
+//!
+//!   * **routing** — `RoutePolicy::TailAware` scores replicas by
+//!     predicted-*remaining*-tokens and packs predicted-long rollouts
+//!     onto a dedicated sub-pool (see `routing.rs`);
+//!   * **proxy admission** — the decode loop admits
+//!     shortest-predicted-first within a long-work reservation
+//!     (`llm_proxy.rs::pick_admission`);
+//!   * **autoscaler** — `target_queue_depth` is derived from the decode
+//!     knee x the live mean/p90 length ratio instead of a hand-tuned
+//!     constant (`autoscaler.rs::decide`).
+//!
+//! Everything here is deterministic: the reservoir uses a fixed-seed
+//! LCG (never wall clock or thread identity), so the virtual-time sim
+//! mirror replays identically — the same property every other shared
+//! policy in this codebase holds.
+//!
+//! Guard rails (the "bad prediction" bugfix): a prediction is always
+//! >= 1 token, a zero-sample group falls back global-then-default
+//! instead of predicting 0, and [`predict_for`](LengthPredictor::predict_for)
+//! clamps to the task's budget — so a wild estimate can bias *ordering*
+//! but can never size a task past the `max_seq` its budget already
+//! respects.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Predictor shape (`length_predictor: {…}` in YAML / CLI).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredictorCfg {
+    /// EWMA smoothing weight for per-group mean length
+    pub ewma_beta: f64,
+    /// reservoir size of each quantile sketch (fixed memory per group)
+    pub sketch_capacity: usize,
+    /// completions quantile above which a rollout is classified "long"
+    /// (the admission reservation + dedicated-replica class boundary)
+    pub long_quantile: f64,
+    /// observations before a group's own stats are trusted over the
+    /// global fallback (cold-start guard)
+    pub min_samples: u64,
+    /// prediction when nothing has ever completed (tokens)
+    pub default_len: f64,
+}
+
+impl PredictorCfg {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.ewma_beta > 0.0 && self.ewma_beta <= 1.0,
+            "length_predictor.ewma_beta must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.sketch_capacity >= 8,
+            "length_predictor.sketch_capacity must be >= 8"
+        );
+        anyhow::ensure!(
+            self.long_quantile > 0.0 && self.long_quantile < 1.0,
+            "length_predictor.long_quantile must be in (0, 1)"
+        );
+        anyhow::ensure!(self.min_samples >= 1, "length_predictor.min_samples must be >= 1");
+        anyhow::ensure!(
+            self.default_len.is_finite() && self.default_len >= 1.0,
+            "length_predictor.default_len must be >= 1"
+        );
+        Ok(())
+    }
+}
+
+impl Default for PredictorCfg {
+    fn default() -> Self {
+        PredictorCfg {
+            ewma_beta: 0.2,
+            sketch_capacity: 64,
+            long_quantile: 0.8,
+            min_samples: 8,
+            default_len: 256.0,
+        }
+    }
+}
+
+/// Fixed-size reservoir sampler with quantile reads (Vitter's
+/// algorithm R over a deterministic LCG). Memory is O(capacity)
+/// regardless of stream length; quantiles are computed by sorting the
+/// <= capacity retained samples on read.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    cap: usize,
+    samples: Vec<f64>,
+    seen: u64,
+    /// deterministic replacement stream — NEVER wall clock or a
+    /// thread-local RNG, so sim replays are bit-identical
+    lcg: u64,
+}
+
+impl QuantileSketch {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        QuantileSketch {
+            cap,
+            samples: Vec::with_capacity(cap),
+            seen: 0,
+            lcg: 0x9e3779b97f4a7c15,
+        }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // Knuth MMIX LCG; low bits discarded
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.lcg >> 11
+    }
+
+    pub fn insert(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // each of the `seen` stream elements survives with equal
+            // probability cap/seen
+            let j = (self.next_rand() % self.seen) as usize;
+            if j < self.cap {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    /// Total values ever inserted (not the retained count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Approximate `q`-quantile (q in [0, 1]) of the stream; 0.0 when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (q.clamp(0.0, 1.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx]
+    }
+}
+
+/// Per-group observation state: EWMA mean + quantile reservoir.
+#[derive(Clone, Debug)]
+struct GroupStats {
+    ewma: f64,
+    count: u64,
+    sketch: QuantileSketch,
+}
+
+impl GroupStats {
+    fn new(capacity: usize) -> Self {
+        GroupStats { ewma: 0.0, count: 0, sketch: QuantileSketch::new(capacity) }
+    }
+
+    fn record(&mut self, len: f64, beta: f64) {
+        self.count += 1;
+        self.ewma = if self.count == 1 { len } else { beta * len + (1.0 - beta) * self.ewma };
+        self.sketch.insert(len);
+    }
+}
+
+struct Inner {
+    groups: HashMap<u64, GroupStats>,
+    global: GroupStats,
+}
+
+/// What the fleet-wide length profile looks like right now — the
+/// autoscaler's `pred_mean_len`/`pred_p90_len` signals and the
+/// diagnostics surface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LengthSnapshot {
+    /// EWMA mean generation length across all completions (tokens)
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    /// completions observed fleet-wide
+    pub samples: u64,
+}
+
+/// Shared generation-length predictor. One instance per pool (and one
+/// per sim run), behind a mutex so the collectors, the submit path, and
+/// the autoscaler read a consistent state. All operations are O(1)
+/// except quantile reads, which sort <= sketch_capacity samples.
+pub struct LengthPredictor {
+    cfg: PredictorCfg,
+    inner: Mutex<Inner>,
+}
+
+impl LengthPredictor {
+    pub fn new(cfg: PredictorCfg) -> Self {
+        LengthPredictor {
+            inner: Mutex::new(Inner {
+                groups: HashMap::new(),
+                global: GroupStats::new(cfg.sketch_capacity),
+            }),
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> PredictorCfg {
+        self.cfg
+    }
+
+    /// Feed one completed generation: `len` tokens for prompt-group
+    /// `group`. Called by the pool's collectors on every `Done` and by
+    /// the sim on every virtual completion.
+    pub fn record(&self, group: u64, len: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let len = (len as f64).max(1.0);
+        g.global.record(len, self.cfg.ewma_beta);
+        g.groups
+            .entry(group)
+            .or_insert_with(|| GroupStats::new(self.cfg.sketch_capacity))
+            .record(len, self.cfg.ewma_beta);
+    }
+
+    /// Predicted total generation length for the next rollout of
+    /// `group`, in tokens. Fallback chain: the group's own EWMA once it
+    /// has `min_samples` observations, else the global EWMA once *it*
+    /// does, else `default_len`. Always >= 1.
+    pub fn predict(&self, group: u64) -> f64 {
+        let g = self.inner.lock().unwrap();
+        let v = match g.groups.get(&group) {
+            Some(st) if st.count >= self.cfg.min_samples => st.ewma,
+            _ if g.global.count >= self.cfg.min_samples => g.global.ewma,
+            _ => self.cfg.default_len,
+        };
+        v.max(1.0)
+    }
+
+    /// [`predict`](Self::predict) clamped to a task's new-token budget:
+    /// the value that may size scheduling decisions. The budget already
+    /// respects the replica's `max_seq` (the proxy clamps rows to it),
+    /// so a runaway estimate can never imply an overflowing placement.
+    pub fn predict_for(&self, group: u64, budget: usize) -> usize {
+        (self.predict(group).round() as usize).clamp(1, budget.max(1))
+    }
+
+    /// Is a rollout with this predicted length in the long class? True
+    /// once the fleet has seen `min_samples` completions and the
+    /// prediction clears the global `long_quantile`. Cold start
+    /// classifies everything short, so scheduling degrades to FIFO
+    /// until there is data to act on.
+    pub fn classify(&self, predicted: f64) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.global.count >= self.cfg.min_samples
+            && predicted >= g.global.sketch.quantile(self.cfg.long_quantile)
+    }
+
+    /// Fleet-wide length profile (autoscaler signals + diagnostics).
+    pub fn snapshot(&self) -> LengthSnapshot {
+        let g = self.inner.lock().unwrap();
+        LengthSnapshot {
+            mean: g.global.ewma,
+            p50: g.global.sketch.quantile(0.5),
+            p90: g.global.sketch.quantile(0.9),
+            samples: g.global.count,
+        }
+    }
+}
+
+impl std::fmt::Debug for LengthPredictor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let snap = self.snapshot();
+        f.debug_struct("LengthPredictor").field("cfg", &self.cfg).field("global", &snap).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cfg_validation_rejects_nonsense() {
+        assert!(PredictorCfg::default().validate().is_ok());
+        for mutate in [
+            (|c: &mut PredictorCfg| c.ewma_beta = 0.0) as fn(&mut PredictorCfg),
+            |c| c.ewma_beta = 1.5,
+            |c| c.sketch_capacity = 4,
+            |c| c.long_quantile = 0.0,
+            |c| c.long_quantile = 1.0,
+            |c| c.min_samples = 0,
+            |c| c.default_len = 0.0,
+            |c| c.default_len = f64::NAN,
+        ] {
+            let mut c = PredictorCfg::default();
+            mutate(&mut c);
+            assert!(c.validate().is_err(), "{c:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn sketch_tracks_quantiles_of_heavy_tailed_stream() {
+        // lognormal sigma=1.1 (the qwen3_base tail factor): a 128-slot
+        // reservoir over 20k samples must land near the exact p50/p90
+        let mut rng = Rng::new(11);
+        let (mu, sigma) = crate::util::rng::lognormal_params(2000.0, 1.1);
+        let mut sketch = QuantileSketch::new(128);
+        let mut xs = Vec::new();
+        for _ in 0..20_000 {
+            let v = rng.lognormal(mu, sigma);
+            sketch.insert(v);
+            xs.push(v);
+        }
+        assert_eq!(sketch.seen(), 20_000);
+        for q in [50.0, 90.0] {
+            let exact = crate::util::percentile(&xs, q);
+            let approx = sketch.quantile(q / 100.0);
+            assert!(
+                (approx - exact).abs() / exact < 0.35,
+                "p{q}: sketch {approx:.0} vs exact {exact:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_is_deterministic_and_bounded() {
+        let feed = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut s = QuantileSketch::new(32);
+            for _ in 0..5000 {
+                s.insert(rng.lognormal(7.0, 1.0));
+            }
+            (s.quantile(0.5), s.quantile(0.9), s.samples.len())
+        };
+        let a = feed(3);
+        let b = feed(3);
+        assert_eq!(a, b, "same stream must reproduce the same sketch");
+        assert_eq!(a.2, 32, "memory stays at capacity");
+        // non-finite values are ignored, not stored
+        let mut s = QuantileSketch::new(8);
+        s.insert(f64::NAN);
+        s.insert(f64::INFINITY);
+        assert_eq!(s.seen(), 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges_to_a_shifted_mean() {
+        let p = LengthPredictor::new(PredictorCfg::default());
+        for _ in 0..50 {
+            p.record(1, 100);
+        }
+        assert!((p.predict(1) - 100.0).abs() < 1e-9, "constant stream converges exactly");
+        // the group's generations get 10x longer (curriculum shift):
+        // the EWMA must track within ~20 completions at beta=0.2
+        for _ in 0..20 {
+            p.record(1, 1000);
+        }
+        let est = p.predict(1);
+        assert!(est > 900.0, "EWMA must converge toward the new regime: {est}");
+    }
+
+    #[test]
+    fn cold_start_falls_back_group_then_global_then_default() {
+        let cfg = PredictorCfg { min_samples: 4, default_len: 256.0, ..Default::default() };
+        let p = LengthPredictor::new(cfg);
+        // nothing observed anywhere: the default
+        assert_eq!(p.predict(7), 256.0);
+        // global warm, group 7 cold: the global estimate
+        for _ in 0..6 {
+            p.record(1, 5000);
+        }
+        assert!((p.predict(7) - 5000.0).abs() < 1e-9, "cold group uses the global fallback");
+        // group 7 crosses min_samples: its own stats take over
+        for _ in 0..4 {
+            p.record(7, 40);
+        }
+        assert!((p.predict(7) - 40.0).abs() < 1e-9, "warm group trusts itself");
+        // a group below min_samples still uses the fallback
+        p.record(9, 9999);
+        assert!((p.predict(9) - p.snapshot().mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prediction_never_exceeds_budget_or_drops_below_one() {
+        // the bugfix regression: a wild estimate (or an empty group)
+        // must clamp into [1, budget] so no placement can imply more
+        // tokens than the row the budget was sized for
+        let p = LengthPredictor::new(PredictorCfg::default());
+        for _ in 0..20 {
+            p.record(1, 1_000_000); // pathological observations
+        }
+        assert_eq!(p.predict_for(1, 128), 128, "clamped to the budget");
+        assert_eq!(p.predict_for(1, 0), 1, "degenerate budget still yields a sane value");
+        // zero-sample group: default_len, clamped the same way
+        assert_eq!(p.predict_for(42, 64), 64);
+        let tiny = LengthPredictor::new(PredictorCfg {
+            default_len: 1.0,
+            ..PredictorCfg::default()
+        });
+        assert_eq!(tiny.predict_for(42, 64), 1, "floor holds at 1 token");
+    }
+
+    #[test]
+    fn classify_splits_the_tail_and_is_cold_start_safe() {
+        let cfg = PredictorCfg { min_samples: 8, long_quantile: 0.8, ..Default::default() };
+        let p = LengthPredictor::new(cfg);
+        assert!(!p.classify(1e9), "cold start classifies everything short (FIFO degrade)");
+        // 100 short + 10 long completions: the p80 sits inside the
+        // short mass, so only the tail classifies long
+        for i in 0..100 {
+            p.record(i % 4, 100 + i);
+        }
+        for _ in 0..10 {
+            p.record(99, 30_000);
+        }
+        assert!(p.classify(30_000.0), "tail lengths are long");
+        assert!(!p.classify(50.0), "short lengths are short");
+        let snap = p.snapshot();
+        assert_eq!(snap.samples, 110);
+        assert!(snap.p90 >= snap.p50, "{snap:?}");
+        assert!(snap.mean > 0.0);
+    }
+}

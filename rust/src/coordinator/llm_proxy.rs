@@ -72,6 +72,18 @@ pub struct GenerationTask {
     /// argmax decoding instead of sampling: resume-deterministic, so a
     /// migrated generation is token-identical to an uninterrupted one
     pub greedy: bool,
+    /// prompt-group key for the generation-length predictor (GRPO
+    /// members / retries of one env task share it). 0 is a valid group;
+    /// ungrouped callers just share one statistics bucket.
+    pub group: u64,
+    /// predicted total generation length in tokens, stamped by the
+    /// fleet's `LengthPredictor` at dispatch (0 = no prediction: the
+    /// admission order falls back to the budget, i.e. FIFO among equal
+    /// budgets). Already clamped to `budget`.
+    pub predicted_len: usize,
+    /// predictor classified this rollout into the long class — admitted
+    /// under the long-work reservation instead of shortest-first
+    pub long_class: bool,
     /// where the completion ([`ProxyEvent::Done`]) is delivered. The
     /// fleet points every replica-side task at the replica's collector
     /// channel, which also receives the RECLAIM answers — one FIFO
@@ -89,6 +101,9 @@ impl GenerationTask {
             prefix_version: 0,
             budget,
             greedy: false,
+            group: 0,
+            predicted_len: 0,
+            long_class: false,
             reply,
         }
     }
@@ -110,6 +125,10 @@ impl GenerationTask {
 struct GenRequest {
     id: u64,
     task: GenerationTask,
+    /// admission rounds in which a younger request was admitted ahead
+    /// of this one — the starvation clock for [`pick_admission`]'s
+    /// aging bound
+    passed_over: u32,
 }
 
 /// A finished generation.
@@ -212,6 +231,48 @@ impl TokenLedger {
     }
 }
 
+/// Per-replica decode-progress gossip, published by the proxy loop on
+/// every decoded token and read lock-free by the pool. Two numbers:
+/// the monotonic total ever decoded here, and the tokens decoded for
+/// requests *currently in slots* that are not yet covered by any
+/// salvaged prefix. The latter is what `retire_idlest` adds to the
+/// carried-prefix salvage cost to rank victims by TRUE decoded totals
+/// — without gossip a replica that decoded 5k fresh tokens looks as
+/// cheap to retire as one that decoded none.
+#[derive(Debug, Default)]
+pub struct ProgressGossip {
+    decoded_total: AtomicU64,
+    inflight_fresh: AtomicU64,
+}
+
+impl ProgressGossip {
+    /// One token decoded into a live slot.
+    fn on_token(&self) {
+        self.decoded_total.fetch_add(1, Ordering::Relaxed);
+        self.inflight_fresh.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A slot closed (done / abort / reclaim / teardown): its `fresh`
+    /// locally-decoded tokens are no longer at risk in flight.
+    fn on_slot_closed(&self, fresh: usize) {
+        let _ = self.inflight_fresh.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(fresh as u64))
+        });
+    }
+
+    /// Tokens ever decoded by this replica (monotonic).
+    pub fn decoded_total(&self) -> u64 {
+        self.decoded_total.load(Ordering::Relaxed)
+    }
+
+    /// Freshly decoded tokens currently at risk in live slots (i.e.
+    /// what a retire/kill would have to salvage beyond carried
+    /// prefixes).
+    pub fn inflight_fresh(&self) -> u64 {
+        self.inflight_fresh.load(Ordering::Relaxed)
+    }
+}
+
 /// Snapshot of a [`TokenLedger`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TokenStats {
@@ -261,7 +322,7 @@ impl ProxyClient {
     /// fail requests over instead of stranding callers.
     pub fn try_submit(&self, task: GenerationTask) -> Option<u64> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Cmd::Add(GenRequest { id, task })).ok().map(|_| id)
+        self.tx.send(Cmd::Add(GenRequest { id, task, passed_over: 0 })).ok().map(|_| id)
     }
 
     /// ABORT: interrupt a running/queued request (its reply channel
@@ -345,6 +406,9 @@ pub struct LlmProxy {
     /// where this loop's wall-seconds went (decode/prefill/sync/idle);
     /// the loop laps it continuously, the pool reads it live
     attr: Arc<Attribution>,
+    /// live decoded-token gossip (shared with the loop; the pool reads
+    /// it for retire-victim ranking and predicted-remaining loads)
+    gossip: Arc<ProgressGossip>,
     join: Option<JoinHandle<Result<ProxyReport>>>,
 }
 
@@ -405,14 +469,17 @@ impl LlmProxy {
         let lg = ledger.clone();
         let attr: Arc<Attribution> = Arc::default();
         let at = attr.clone();
+        let gossip: Arc<ProgressGossip> = Arc::default();
+        let gs = gossip.clone();
         let join = std::thread::Builder::new()
             .name("llm-proxy".into())
-            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx, lg, at))
+            .spawn(move || proxy_loop(artifacts_dir, init_weights, eos, seed, rx, lg, at, gs))
             .expect("spawn llm-proxy");
         LlmProxy {
             client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
             ledger,
             attr,
+            gossip,
             join: Some(join),
         }
     }
@@ -431,6 +498,13 @@ impl LlmProxy {
     /// proxy thread; the pool aggregates these into `PoolReport`).
     pub fn attribution(&self) -> Arc<Attribution> {
         self.attr.clone()
+    }
+
+    /// The loop's live decode-progress gossip (decoded totals +
+    /// in-flight fresh tokens). A stub replica never decodes, so its
+    /// gossip stays zero — exactly the truth.
+    pub fn progress_gossip(&self) -> Arc<ProgressGossip> {
+        self.gossip.clone()
     }
 
     /// Test-only replica with no engine: accepts commands, holds ADDed
@@ -572,6 +646,7 @@ impl LlmProxy {
             client: ProxyClient { tx, next_id: Arc::new(AtomicU64::new(1)) },
             ledger: Arc::default(),
             attr,
+            gossip: Arc::default(),
             join: Some(join),
         }
     }
@@ -648,6 +723,76 @@ struct Slot {
     /// weight version of the first response token (inherited from the
     /// task's prefix_version on resume, stamped at admission otherwise)
     start_version: u64,
+    /// tokens of `tokens` that were carried in as salvage; the excess
+    /// over this is fresh local decode progress (gossip accounting)
+    salvaged: usize,
+}
+
+/// How many admission rounds a queued request may be passed over before
+/// it jumps to the head of the order regardless of class or predicted
+/// length — the starvation-proof aging bound of the two-class admission
+/// ([`pick_admission`]). With a decode batch of `b`, a request is
+/// admitted after at most `AGING_LIMIT` slot-fill decisions skip it.
+const AGING_LIMIT: u32 = 32;
+
+/// Two-class admission order over the replica queue (replaces plain
+/// FIFO `pop_front`). Priority:
+///
+///   1. **aged** — any request passed over [`AGING_LIMIT`] times goes
+///      first (oldest such), so no prediction pattern can starve it;
+///   2. **long-work reservation** — while fewer than `long_reserve`
+///      occupied slots hold long-class work and a long request is
+///      queued, the oldest long request is admitted: shortest-first
+///      alone would park the tail behind an endless short stream;
+///   3. **shortest-predicted-first** — minimum predicted *remaining*
+///      tokens (prediction minus carried salvage; unpredicted requests
+///      count their full budget), ties oldest-first. With a cold
+///      predictor every request scores its budget, so equal-budget
+///      traffic degrades to exact FIFO — the pre-existing order.
+///
+/// Every request older than the admitted one gets its `passed_over`
+/// clock bumped.
+fn pick_admission(
+    queue: &mut VecDeque<GenRequest>,
+    active_long: usize,
+    long_reserve: usize,
+) -> Option<GenRequest> {
+    if queue.is_empty() {
+        return None;
+    }
+    let remaining = |r: &GenRequest| {
+        let predicted = if r.task.predicted_len == 0 { r.task.budget } else { r.task.predicted_len };
+        predicted.saturating_sub(r.task.prefix.len()).max(1)
+    };
+    let shortest = |q: &VecDeque<GenRequest>| {
+        q.iter()
+            .enumerate()
+            .min_by_key(|(i, r)| (remaining(r), *i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    };
+    let idx = if let Some(aged) = queue.iter().position(|r| r.passed_over >= AGING_LIMIT) {
+        aged
+    } else if active_long < long_reserve {
+        queue.iter().position(|r| r.task.long_class).unwrap_or_else(|| shortest(queue))
+    } else {
+        shortest(queue)
+    };
+    for (i, r) in queue.iter_mut().enumerate() {
+        if i < idx {
+            r.passed_over += 1;
+        }
+    }
+    queue.remove(idx)
+}
+
+/// The loop's accounting sinks, bundled so the command handlers stay
+/// under a sane argument count: per-loop report, pool-shared waste
+/// ledger, and the decode-progress gossip.
+struct Sinks<'a> {
+    report: &'a mut ProxyReport,
+    ledger: &'a TokenLedger,
+    gossip: &'a ProgressGossip,
 }
 
 /// ABORT shared by both command-handling sites: purge the queue AND
@@ -661,13 +806,12 @@ fn do_abort(
     slots: &mut [Option<Slot>],
     tokens_buf: &mut [i32],
     s: usize,
-    report: &mut ProxyReport,
-    ledger: &TokenLedger,
+    sinks: &mut Sinks<'_>,
 ) {
     queue.retain(|r| {
         if r.id == id {
-            report.wasted_tokens += r.task.prefix.len() as u64;
-            ledger.add_wasted(r.task.prefix.len() as u64);
+            sinks.report.wasted_tokens += r.task.prefix.len() as u64;
+            sinks.ledger.add_wasted(r.task.prefix.len() as u64);
             false
         } else {
             true
@@ -676,9 +820,10 @@ fn do_abort(
     for (si, slot) in slots.iter_mut().enumerate() {
         if slot.as_ref().map(|sl| sl.req.id) == Some(id) {
             let sl = slot.take().unwrap();
-            report.aborted += 1;
-            report.wasted_tokens += sl.tokens.len() as u64;
-            ledger.add_wasted(sl.tokens.len() as u64);
+            sinks.report.aborted += 1;
+            sinks.report.wasted_tokens += sl.tokens.len() as u64;
+            sinks.ledger.add_wasted(sl.tokens.len() as u64);
+            sinks.gossip.on_slot_closed(sl.tokens.len() - sl.salvaged);
             tokens_buf[si * s..(si + 1) * s].fill(0);
         }
     }
@@ -700,8 +845,7 @@ fn do_reclaim(
     slots: &mut [Option<Slot>],
     tokens_buf: &mut [i32],
     s: usize,
-    report: &mut ProxyReport,
-    ledger: &TokenLedger,
+    sinks: &mut Sinks<'_>,
 ) {
     let salvage = if let Some(i) = queue.iter().position(|r| r.id == id) {
         let req = queue.remove(i).unwrap();
@@ -714,7 +858,8 @@ fn do_reclaim(
         (0..slots.len()).find(|&si| slots[si].as_ref().map(|sl| sl.req.id) == Some(id))
     {
         let sl = slots[si].take().unwrap();
-        report.reclaimed += 1;
+        sinks.report.reclaimed += 1;
+        sinks.gossip.on_slot_closed(sl.tokens.len() - sl.salvaged);
         tokens_buf[si * s..(si + 1) * s].fill(0);
         Some(Salvage { tokens: sl.tokens, logps: sl.logps, start_version: sl.start_version })
     } else {
@@ -722,8 +867,8 @@ fn do_reclaim(
     };
     let n = salvage.as_ref().map(|sv| sv.tokens.len() as u64).unwrap_or(0);
     if reply.send(ProxyEvent::Reclaimed { id, salvage }).is_err() && n > 0 {
-        report.wasted_tokens += n;
-        ledger.add_wasted(n);
+        sinks.report.wasted_tokens += n;
+        sinks.ledger.add_wasted(n);
     }
 }
 
@@ -738,6 +883,7 @@ fn argmax(row: &[f32]) -> usize {
     best
 }
 
+#[allow(clippy::too_many_arguments)]
 fn proxy_loop(
     dir: std::path::PathBuf,
     init_weights: Vec<f32>,
@@ -746,6 +892,7 @@ fn proxy_loop(
     rx: Receiver<Cmd>,
     ledger: Arc<TokenLedger>,
     attr: Arc<Attribution>,
+    gossip: Arc<ProgressGossip>,
 ) -> Result<ProxyReport> {
     let rt = ModelRuntime::load(&dir)?;
     let (b, s, v) = (rt.manifest.decode_batch, rt.manifest.max_seq, rt.manifest.vocab);
@@ -778,9 +925,14 @@ fn proxy_loop(
             };
             match cmd {
                 Cmd::Add(req) => queue.push_back(req),
-                Cmd::Abort(id) => {
-                    do_abort(id, &mut queue, &mut slots, &mut tokens_buf, s, &mut report, &ledger)
-                }
+                Cmd::Abort(id) => do_abort(
+                    id,
+                    &mut queue,
+                    &mut slots,
+                    &mut tokens_buf,
+                    s,
+                    &mut Sinks { report: &mut report, ledger: &ledger, gossip: &gossip },
+                ),
                 Cmd::Reclaim { id, reply } => do_reclaim(
                     id,
                     reply,
@@ -788,8 +940,7 @@ fn proxy_loop(
                     &mut slots,
                     &mut tokens_buf,
                     s,
-                    &mut report,
-                    &ledger,
+                    &mut Sinks { report: &mut report, ledger: &ledger, gossip: &gossip },
                 ),
                 Cmd::UpdateWeights { weights, version: ver, ack } => {
                     // suspend -> broadcast -> resume, atomically w.r.t.
@@ -812,13 +963,22 @@ fn proxy_loop(
         }
 
         // admit queued tasks into free slots (continuous batching),
-        // prefilling prompt ++ salvaged prefix
+        // prefilling prompt ++ salvaged prefix. Order is the two-class
+        // length-aware admission of `pick_admission`, not FIFO: a
+        // quarter of the batch is reserved for long-class work, the
+        // rest fills shortest-predicted-first with an aging bound.
         let mut admitted_fresh = false;
         let mut admitted_resumed = false;
         if !suspended {
+            let mut active_long =
+                slots.iter().flatten().filter(|sl| sl.req.task.long_class).count();
+            let long_reserve = (b / 4).max(1);
             for si in 0..b {
                 if slots[si].is_none() {
-                    let Some(mut req) = queue.pop_front() else { break };
+                    let Some(mut req) = pick_admission(&mut queue, active_long, long_reserve)
+                    else {
+                        break;
+                    };
                     let pl = req.task.prompt.len().min(s - 1);
                     let mut tokens = std::mem::take(&mut req.task.prefix);
                     let mut logps = std::mem::take(&mut req.task.prefix_logps);
@@ -863,8 +1023,12 @@ fn proxy_loop(
                         // migration bill, attributed separately
                         admitted_resumed = true;
                     }
+                    if req.task.long_class {
+                        active_long += 1;
+                    }
                     slots[si] = Some(Slot {
                         pos: pl + tokens.len(),
+                        salvaged: tokens.len(),
                         tokens,
                         logps,
                         start_version,
@@ -923,6 +1087,7 @@ fn proxy_loop(
             tokens_buf[si * s + slot.pos] = tok;
             slot.pos += 1;
             report.tokens_generated += 1;
+            gossip.on_token();
 
             let done = tok == eos
                 || slot.tokens.len() >= slot.req.task.budget
@@ -930,6 +1095,7 @@ fn proxy_loop(
             if done {
                 let slot = slots[si].take().unwrap();
                 report.completed += 1;
+                gossip.on_slot_closed(slot.tokens.len() - slot.salvaged);
                 let _ = slot.req.task.reply.send(ProxyEvent::Done(GenResult {
                     id: slot.req.id,
                     tokens: slot.tokens,
@@ -949,6 +1115,7 @@ fn proxy_loop(
     for slot in slots.iter_mut().filter_map(Option::take) {
         report.wasted_tokens += slot.tokens.len() as u64;
         ledger.add_wasted(slot.tokens.len() as u64);
+        gossip.on_slot_closed(slot.tokens.len() - slot.salvaged);
     }
     for req in queue.drain(..) {
         report.wasted_tokens += req.task.prefix.len() as u64;
@@ -1024,23 +1191,35 @@ mod tests {
                 prefix_logps: vec![-0.1; 3],
                 ..GenerationTask::fresh(vec![1], 8, reply)
             },
+            passed_over: 0,
         });
         let s = 8;
         let mut buf = vec![0i32; s];
         let (reply2, _rx2) = channel();
         let mut slots = vec![Some(Slot {
-            req: GenRequest { id: 2, task: GenerationTask::fresh(vec![1], 8, reply2) },
+            req: GenRequest {
+                id: 2,
+                task: GenerationTask::fresh(vec![1], 8, reply2),
+                passed_over: 0,
+            },
             pos: 4,
             tokens: vec![7, 7],
             logps: vec![-0.2, -0.2],
             start_version: 0,
+            salvaged: 0,
         })];
-        do_abort(1, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
-        do_abort(2, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        let gossip = ProgressGossip::default();
+        gossip.on_token();
+        gossip.on_token(); // the 2 decoded tokens in the slot
+        let mut sinks = Sinks { report: &mut report, ledger: &ledger, gossip: &gossip };
+        do_abort(1, &mut queue, &mut slots, &mut buf, s, &mut sinks);
+        do_abort(2, &mut queue, &mut slots, &mut buf, s, &mut sinks);
         assert_eq!(report.wasted_tokens, 5, "3 queued-prefix + 2 decoded");
         assert_eq!(ledger.stats().wasted_tokens, 5);
         assert_eq!(report.aborted, 1, "only the slotted request counts as aborted");
         assert!(queue.is_empty() && slots[0].is_none());
+        assert_eq!(gossip.decoded_total(), 2, "the monotonic total survives the abort");
+        assert_eq!(gossip.inflight_fresh(), 0, "aborted fresh tokens leave the gauge");
     }
 
     #[test]
@@ -1051,15 +1230,32 @@ mod tests {
         let mut buf = vec![0i32; s];
         let mut queue = VecDeque::new();
         let mut slots = vec![Some(Slot {
-            req: GenRequest { id: 5, task: GenerationTask::fresh(vec![1], 8, reply) },
+            req: GenRequest {
+                id: 5,
+                task: GenerationTask::fresh(vec![1], 8, reply),
+                passed_over: 0,
+            },
             pos: 5,
             tokens: vec![4, 5, 6],
             logps: vec![-0.1, -0.2, -0.3],
             start_version: 2,
+            salvaged: 1,
         })];
         let ledger = TokenLedger::default();
+        let gossip = ProgressGossip::default();
+        gossip.on_token();
+        gossip.on_token(); // 2 fresh on top of 1 salvaged
         let (stx, srx) = channel();
-        do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        do_reclaim(
+            5,
+            stx,
+            &mut queue,
+            &mut slots,
+            &mut buf,
+            s,
+            &mut Sinks { report: &mut report, ledger: &ledger, gossip: &gossip },
+        );
+        assert_eq!(gossip.inflight_fresh(), 0, "reclaimed fresh tokens leave the gauge");
         let ProxyEvent::Reclaimed { id, salvage: Some(salvage) } = srx.recv().unwrap() else {
             panic!("live id must answer with salvage");
         };
@@ -1074,7 +1270,15 @@ mod tests {
         // caller's collector uses it to tell "already finished" from
         // "replica gone"
         let (stx, srx) = channel();
-        do_reclaim(99, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        do_reclaim(
+            99,
+            stx,
+            &mut queue,
+            &mut slots,
+            &mut buf,
+            s,
+            &mut Sinks { report: &mut report, ledger: &ledger, gossip: &gossip },
+        );
         match srx.recv().unwrap() {
             ProxyEvent::Reclaimed { id: 99, salvage: None } => {}
             other => panic!("unknown id must answer salvage: None, got {other:?}"),
@@ -1093,17 +1297,113 @@ mod tests {
         let mut buf = vec![0i32; s];
         let mut queue = VecDeque::new();
         let mut slots = vec![Some(Slot {
-            req: GenRequest { id: 5, task: GenerationTask::fresh(vec![1], 8, reply) },
+            req: GenRequest {
+                id: 5,
+                task: GenerationTask::fresh(vec![1], 8, reply),
+                passed_over: 0,
+            },
             pos: 5,
             tokens: vec![4, 5, 6],
             logps: vec![-0.1, -0.2, -0.3],
             start_version: 0,
+            salvaged: 0,
         })];
+        let gossip = ProgressGossip::default();
         let (stx, srx) = channel::<ProxyEvent>();
         drop(srx); // the collector is gone
-        do_reclaim(5, stx, &mut queue, &mut slots, &mut buf, s, &mut report, &ledger);
+        do_reclaim(
+            5,
+            stx,
+            &mut queue,
+            &mut slots,
+            &mut buf,
+            s,
+            &mut Sinks { report: &mut report, ledger: &ledger, gossip: &gossip },
+        );
         assert_eq!(report.wasted_tokens, 3, "undelivered salvage is wasted");
         assert_eq!(ledger.stats().wasted_tokens, 3);
         assert_eq!(report.reclaimed, 1);
+    }
+
+    /// A queued request with an explicit length prediction/class.
+    fn qreq(id: u64, predicted_len: usize, long_class: bool, budget: usize) -> GenRequest {
+        let (reply, _rx) = channel();
+        let task = GenerationTask {
+            predicted_len,
+            long_class,
+            ..GenerationTask::fresh(vec![1], budget, reply)
+        };
+        GenRequest { id, task, passed_over: 0 }
+    }
+
+    #[test]
+    fn admission_is_shortest_predicted_first_and_fifo_when_cold() {
+        // warm predictor: shortest predicted remaining goes first
+        let mut q: VecDeque<GenRequest> =
+            [qreq(1, 900, false, 1000), qreq(2, 50, false, 1000), qreq(3, 200, false, 1000)]
+                .into_iter()
+                .collect();
+        // reservation satisfied (active_long >= reserve): pure shortest
+        assert_eq!(pick_admission(&mut q, 1, 1).unwrap().id, 2);
+        assert_eq!(pick_admission(&mut q, 1, 1).unwrap().id, 3);
+        assert_eq!(pick_admission(&mut q, 1, 1).unwrap().id, 1);
+        assert!(pick_admission(&mut q, 1, 1).is_none());
+        // cold predictor (predicted_len == 0, equal budgets): exact FIFO
+        let mut q: VecDeque<GenRequest> =
+            [qreq(1, 0, false, 64), qreq(2, 0, false, 64), qreq(3, 0, false, 64)]
+                .into_iter()
+                .collect();
+        for want in [1, 2, 3] {
+            assert_eq!(pick_admission(&mut q, 1, 1).unwrap().id, want);
+        }
+        // a carried salvage prefix shortens the predicted remaining
+        let mut long_but_nearly_done = qreq(7, 500, false, 1000);
+        long_but_nearly_done.task.prefix = vec![9; 490]; // 10 to go
+        let mut q: VecDeque<GenRequest> =
+            [qreq(1, 100, false, 1000), long_but_nearly_done].into_iter().collect();
+        assert_eq!(pick_admission(&mut q, 1, 1).unwrap().id, 7);
+    }
+
+    #[test]
+    fn admission_reserves_slots_for_long_work() {
+        let fill = || -> VecDeque<GenRequest> {
+            [qreq(1, 10, false, 1000), qreq(2, 30_000, true, 50_000), qreq(3, 20, false, 1000)]
+                .into_iter()
+                .collect()
+        };
+        // no long work in the batch yet: the reservation admits the
+        // long request ahead of shorter predictions
+        let mut q = fill();
+        assert_eq!(pick_admission(&mut q, 0, 2).unwrap().id, 2);
+        // reservation full: shortest-first resumes
+        let mut q = fill();
+        assert_eq!(pick_admission(&mut q, 2, 2).unwrap().id, 1);
+        // reservation open but nothing long queued: shortest-first
+        let mut q: VecDeque<GenRequest> =
+            [qreq(1, 500, false, 1000), qreq(2, 20, false, 1000)].into_iter().collect();
+        assert_eq!(pick_admission(&mut q, 0, 2).unwrap().id, 2);
+    }
+
+    #[test]
+    fn admission_aging_bound_is_starvation_proof() {
+        // request 1 predicts huge; an endless stream of short work
+        // would starve it under pure shortest-first. Count how many
+        // admissions it takes before it surfaces anyway.
+        let mut q: VecDeque<GenRequest> = [qreq(1, 100_000, false, 100_000)].into_iter().collect();
+        let mut next_id = 2;
+        let mut rounds = 0u32;
+        loop {
+            rounds += 1;
+            assert!(rounds <= AGING_LIMIT + 1, "aging bound failed to fire");
+            // keep one short competitor queued at all times
+            q.push_back(qreq(next_id, 5, false, 1000));
+            next_id += 1;
+            if pick_admission(&mut q, 1, 1).unwrap().id == 1 {
+                break;
+            }
+        }
+        assert!(rounds > 1, "the straggler must not win while its clock is fresh");
+        // the passed-over clocks of the skipped competitors carried over
+        assert!(q.iter().all(|r| r.passed_over <= AGING_LIMIT));
     }
 }

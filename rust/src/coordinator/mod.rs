@@ -34,6 +34,7 @@
 pub mod async_controller;
 pub mod autoscaler;
 pub mod fleet;
+pub mod length_predictor;
 pub mod llm_proxy;
 #[cfg(test)]
 mod reclaim_races;
@@ -44,12 +45,13 @@ pub mod sample_buffer;
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
 pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
+pub use length_predictor::{LengthPredictor, LengthSnapshot, PredictorCfg, QuantileSketch};
 pub use llm_proxy::{
-    GenResult, GenerationTask, LlmProxy, ProxyClient, ProxyEvent, ProxyReport, Salvage,
-    TokenLedger, TokenStats,
+    GenResult, GenerationTask, LlmProxy, ProgressGossip, ProxyClient, ProxyEvent, ProxyReport,
+    Salvage, TokenLedger, TokenStats,
 };
 pub use rollout::{EngineCfg, EngineReport, GenBackend, GroupTasks, RolloutEngine};
-pub use routing::{ReplicaLoad, RoutePolicy, Router};
+pub use routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
 pub use sample_buffer::{Admission, BufferStats, SampleBuffer};
 
 // the trace knobs ride along with the fleet cfg, so surface them here
@@ -120,6 +122,10 @@ pub struct RolloutSystemCfg {
     /// YAML, `trace=`/`trace_path=` on the CLI; disabled by default —
     /// off, the recorder is a single branch per call site)
     pub trace: TraceCfg,
+    /// generation-length predictor shape (`length_predictor: {…}` in
+    /// YAML / CLI): feeds TailAware routing, the proxy's two-class
+    /// admission, and the autoscaler's adaptive target
+    pub predictor: PredictorCfg,
 }
 
 impl RolloutSystemCfg {
@@ -145,6 +151,7 @@ impl RolloutSystemCfg {
             "salvage_timeout must be > 0 seconds"
         );
         self.autoscale.validate()?;
+        self.predictor.validate()?;
         anyhow::ensure!(
             !self.trace.enabled || self.trace.ring_capacity > 0,
             "trace.ring_capacity must be > 0 when tracing is enabled"
@@ -221,6 +228,7 @@ impl RolloutSystem {
             salvage_timeout: cfg.salvage_timeout,
             reclaim_in_place: cfg.reclaim_in_place,
             trace: cfg.trace.clone(),
+            predictor: cfg.predictor,
         };
         let proxy = Arc::new(LlmProxyPool::spawn(
             &pool_cfg,
@@ -298,6 +306,7 @@ mod tests {
             reclaim_in_place: true,
             autoscale: AutoscaleCfg::disabled(),
             trace: TraceCfg::disabled(),
+            predictor: PredictorCfg::default(),
         }
     }
 

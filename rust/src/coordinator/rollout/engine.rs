@@ -659,8 +659,11 @@ impl EngineLoop {
 
     fn submit_generation(&mut self, lane: usize) {
         let ep = &mut self.episodes[lane];
-        let task =
+        let mut task =
             GenerationTask::fresh(ep.context.clone(), ep.max_new_tokens, self.gen_tx.clone());
+        // prompt-group identity for the pool's length predictor: members
+        // of the same env group share a generation-length distribution
+        task.group = ep.group as u64;
         let submitted = self.backend.submit(task);
         let Some(gen_id) = submitted else {
             // the whole inference fleet is dead: this lane can never

@@ -2,7 +2,7 @@
 //! scale): where does the next `GenerationTask` go?
 //!
 //! The pool fronts N `LlmProxy` replicas; a `Router` picks the target
-//! replica for each request from a load snapshot. Four policies:
+//! replica for each request from a load snapshot. Five policies:
 //!
 //!   * `RoundRobin` — cycle over replicas regardless of load (the
 //!     baseline most serving fabrics start from). Under the paper's
@@ -26,6 +26,20 @@
 //!     penalizes fail-slow or heterogeneous replicas even when their
 //!     queues look short; with no measurements yet it degrades to
 //!     least-outstanding, so cold replicas still get probed.
+//!   * `TailAware` — length-prediction-aware packing (RollPacker,
+//!     arxiv 2509.21009): the last quarter of the eligible replicas is
+//!     a dedicated *long pool*; rollouts the `LengthPredictor`
+//!     classifies long are packed there so stragglers share decode
+//!     batches with each other instead of pinning short work, and the
+//!     load score is `ReplicaLoad::predicted_remaining` *tokens* (not
+//!     request count), so one 30k-token straggler outweighs ten short
+//!     requests. Like `QueueSched` it only places into free decode
+//!     slots — saturation holds work in the pool queue. Starvation
+//!     safety is two-layered: routing is work-conserving (a class
+//!     spills to the other sub-pool rather than wait for its own), and
+//!     the proxy's admission order carries an explicit aging bound
+//!     (`llm_proxy::AGING_LIMIT`), so neither class can be starved by
+//!     the other.
 //!
 //! Replicas that are suspended (mid weight-sync during a rolling
 //! update) are skipped by every policy, which is what lets the
@@ -46,6 +60,23 @@ pub struct ReplicaLoad {
     pub slots: usize,
     /// replica is mid weight-sync (rolling update) — do not route here
     pub suspended: bool,
+    /// predicted tokens still to be generated across everything in
+    /// flight on the replica (predictor estimate minus gossiped decode
+    /// progress; 0.0 when the predictor is cold). `TailAware`'s load
+    /// score — request *cost*, where `outstanding` is request count.
+    pub predicted_remaining: f64,
+}
+
+/// Per-request routing hint derived from the `LengthPredictor`:
+/// how long this rollout is expected to run and which admission class
+/// it falls in. `None`/default (cold predictor) degrades `TailAware`
+/// to shortest-predicted-remaining over all replicas.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouteHint {
+    /// predicted tokens still to generate for this request
+    pub predicted_len: f64,
+    /// predictor classified this rollout into the long class
+    pub long: bool,
 }
 
 /// Request-placement policy (`route_policy` in YAML / CLI).
@@ -55,14 +86,16 @@ pub enum RoutePolicy {
     LeastOutstanding,
     QueueSched,
     Ewma,
+    TailAware,
 }
 
 impl RoutePolicy {
-    pub const ALL: [RoutePolicy; 4] = [
+    pub const ALL: [RoutePolicy; 5] = [
         RoutePolicy::RoundRobin,
         RoutePolicy::LeastOutstanding,
         RoutePolicy::QueueSched,
         RoutePolicy::Ewma,
+        RoutePolicy::TailAware,
     ];
 
     pub fn as_str(self) -> &'static str {
@@ -71,12 +104,16 @@ impl RoutePolicy {
             RoutePolicy::LeastOutstanding => "least_outstanding",
             RoutePolicy::QueueSched => "queue",
             RoutePolicy::Ewma => "ewma",
+            RoutePolicy::TailAware => "tail_aware",
         }
     }
 
     pub fn parse(s: &str) -> Result<Self> {
         Self::ALL.into_iter().find(|p| p.as_str() == s).with_context(|| {
-            format!("unknown route_policy {s:?} (round_robin|least_outstanding|queue|ewma)")
+            format!(
+                "unknown route_policy {s:?} \
+                 (round_robin|least_outstanding|queue|ewma|tail_aware)"
+            )
         })
     }
 }
@@ -145,9 +182,16 @@ impl Router {
 
     /// Pick a replica for the next request. `None` means "hold the
     /// request in the pool queue": every replica is suspended, or (for
-    /// `QueueSched`) every replica's decode window is full.
+    /// `QueueSched`/`TailAware`) every replica's decode window is full.
     pub fn route(&mut self, loads: &[ReplicaLoad]) -> Option<usize> {
-        self.route_excluding(loads, None)
+        self.route_excluding_hinted(loads, None, None)
+    }
+
+    /// [`route`](Self::route) with a per-request length hint. Only
+    /// `TailAware` reads the hint; every other policy ignores it, so
+    /// callers can pass whatever the predictor knows unconditionally.
+    pub fn route_hinted(&mut self, loads: &[ReplicaLoad], hint: Option<RouteHint>) -> Option<usize> {
+        self.route_excluding_hinted(loads, None, hint)
     }
 
     /// Non-mutating saturation probe: does any replica other than
@@ -167,6 +211,17 @@ impl Router {
     /// Like [`route`](Self::route) but never returns `exclude` — used
     /// by abort-and-resubmit migration away from a hung replica.
     pub fn route_excluding(&mut self, loads: &[ReplicaLoad], exclude: Option<usize>) -> Option<usize> {
+        self.route_excluding_hinted(loads, exclude, None)
+    }
+
+    /// The full placement entry point: exclusion for migration plus the
+    /// request's length hint for `TailAware` class packing.
+    pub fn route_excluding_hinted(
+        &mut self,
+        loads: &[ReplicaLoad],
+        exclude: Option<usize>,
+        hint: Option<RouteHint>,
+    ) -> Option<usize> {
         let n = loads.len();
         if n == 0 {
             return None;
@@ -196,6 +251,41 @@ impl Router {
                     .then(loads[a].outstanding.cmp(&loads[b].outstanding))
                     .then(a.cmp(&b))
             }),
+            RoutePolicy::TailAware => {
+                let elig: Vec<usize> = (0..n).filter(|&i| eligible(i)).collect();
+                if elig.is_empty() {
+                    return None;
+                }
+                // the last quarter (>= 1 replica once the fleet has 2)
+                // is the dedicated long pool; with a single eligible
+                // replica everything shares it
+                let long_n = if elig.len() >= 2 { elig.len().div_ceil(4) } else { 0 };
+                let (short_pool, long_pool) = elig.split_at(elig.len() - long_n);
+                let pick = |pool: &[usize]| {
+                    pool.iter()
+                        .copied()
+                        // free decode slot required, like QueueSched:
+                        // saturation backs up into the pool queue
+                        .filter(|&i| loads[i].outstanding < loads[i].slots)
+                        .min_by(|&a, &b| {
+                            loads[a]
+                                .predicted_remaining
+                                .partial_cmp(&loads[b].predicted_remaining)
+                                .unwrap()
+                                .then(loads[a].outstanding.cmp(&loads[b].outstanding))
+                                .then(a.cmp(&b))
+                        })
+                };
+                let (preferred, other) = if hint.is_some_and(|h| h.long) {
+                    (long_pool, short_pool)
+                } else {
+                    (short_pool, long_pool)
+                };
+                // work-conserving spill: a class never waits for its
+                // own sub-pool while the other has a free slot, so the
+                // split can bias placement but never starve a request
+                pick(preferred).or_else(|| pick(other))
+            }
         }
     }
 }
@@ -207,8 +297,29 @@ mod tests {
     fn loads(outstanding: &[usize], slots: usize) -> Vec<ReplicaLoad> {
         outstanding
             .iter()
-            .map(|&o| ReplicaLoad { outstanding: o, slots, suspended: false })
+            .map(|&o| ReplicaLoad { outstanding: o, slots, ..Default::default() })
             .collect()
+    }
+
+    /// Loads with an explicit predicted-remaining-token column.
+    fn tail_loads(pred: &[f64], outstanding: &[usize], slots: usize) -> Vec<ReplicaLoad> {
+        pred.iter()
+            .zip(outstanding)
+            .map(|(&p, &o)| ReplicaLoad {
+                outstanding: o,
+                slots,
+                suspended: false,
+                predicted_remaining: p,
+            })
+            .collect()
+    }
+
+    fn long_hint() -> Option<RouteHint> {
+        Some(RouteHint { predicted_len: 10_000.0, long: true })
+    }
+
+    fn short_hint() -> Option<RouteHint> {
+        Some(RouteHint { predicted_len: 100.0, long: false })
     }
 
     #[test]
@@ -354,6 +465,84 @@ mod tests {
         l[0].suspended = true;
         assert!(!r.has_free_candidate(&l, None));
         assert!(!r.has_free_candidate(&[], None));
+    }
+
+    #[test]
+    fn tail_aware_packs_long_work_onto_the_dedicated_pool() {
+        let mut r = Router::new(RoutePolicy::TailAware);
+        // 4 replicas: replicas 0..3 short pool, replica 3 long pool
+        let l = tail_loads(&[0.0, 0.0, 0.0, 0.0], &[0, 0, 0, 0], 4);
+        assert_eq!(r.route_hinted(&l, long_hint()), Some(3), "long work goes to the long pool");
+        assert_eq!(r.route_hinted(&l, short_hint()), Some(0), "short work stays together");
+        // no hint (cold predictor / non-engine caller) behaves short
+        assert_eq!(r.route_hinted(&l, None), Some(0));
+    }
+
+    #[test]
+    fn tail_aware_scores_by_predicted_tokens_not_request_count() {
+        let mut r = Router::new(RoutePolicy::TailAware);
+        // replica 0 holds ONE 30k-token straggler, replica 1 holds
+        // three short rollouts: request-count routing (least
+        // outstanding) would stack onto the straggler; token-aware
+        // routing must not
+        let l = tail_loads(&[30_000.0, 600.0, 0.0], &[1, 3, 4], 4);
+        assert_eq!(r.route_hinted(&l, short_hint()), Some(1));
+        // ties on predicted tokens fall back to outstanding, then index
+        let l = tail_loads(&[500.0, 500.0, 0.0], &[2, 1, 4], 4);
+        assert_eq!(r.route_hinted(&l, short_hint()), Some(1));
+    }
+
+    #[test]
+    fn tail_aware_spills_rather_than_starving_a_class() {
+        let mut r = Router::new(RoutePolicy::TailAware);
+        // long pool (replica 3) is saturated: long work spills into the
+        // short pool instead of waiting behind its own class
+        let l = tail_loads(&[0.0, 0.0, 0.0, 9e9], &[0, 0, 0, 4], 4);
+        assert_eq!(r.route_hinted(&l, long_hint()), Some(0));
+        // short pool saturated: short work spills into the long pool
+        let l = tail_loads(&[9e9, 9e9, 9e9, 0.0], &[4, 4, 4, 0], 4);
+        assert_eq!(r.route_hinted(&l, short_hint()), Some(3));
+        // everything saturated: hold in the pool queue (QueueSched
+        // semantics — never over-commit a decode window)
+        let l = tail_loads(&[1.0, 1.0, 1.0, 1.0], &[4, 4, 4, 4], 4);
+        assert_eq!(r.route_hinted(&l, long_hint()), None);
+        assert_eq!(r.route_hinted(&l, short_hint()), None);
+    }
+
+    #[test]
+    fn tail_aware_single_replica_serves_both_classes() {
+        let mut r = Router::new(RoutePolicy::TailAware);
+        let l = tail_loads(&[0.0], &[0], 4);
+        assert_eq!(r.route_hinted(&l, long_hint()), Some(0));
+        assert_eq!(r.route_hinted(&l, short_hint()), Some(0));
+    }
+
+    #[test]
+    fn tail_aware_respects_suspension_and_exclusion() {
+        let mut r = Router::new(RoutePolicy::TailAware);
+        let mut l = tail_loads(&[0.0, 0.0, 0.0, 0.0], &[0, 0, 0, 0], 4);
+        // the long replica is suspended mid-sync: the split recomputes
+        // over the remaining eligible set (last of {0,1,2} = 2)
+        l[3].suspended = true;
+        assert_eq!(r.route_hinted(&l, long_hint()), Some(2));
+        // exclusion (migration away from a hung replica) is honored
+        let l = tail_loads(&[0.0, 5.0, 0.0], &[0, 1, 0], 4);
+        assert_eq!(r.route_excluding_hinted(&l, Some(0), short_hint()), Some(1));
+    }
+
+    #[test]
+    fn hint_is_ignored_by_every_other_policy() {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastOutstanding,
+            RoutePolicy::QueueSched,
+            RoutePolicy::Ewma,
+        ] {
+            let mut hinted = Router::new(p);
+            let mut plain = Router::new(p);
+            let l = loads(&[2, 0, 1], 4);
+            assert_eq!(hinted.route_hinted(&l, long_hint()), plain.route(&l), "{p:?}");
+        }
     }
 
     #[test]

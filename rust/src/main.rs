@@ -10,6 +10,10 @@
 //!                     autoscale=true min_replicas=1 max_replicas=8 \
 //!                     target_queue_depth=8 autoscale_interval=1 \
 //!                     autoscale_cooldown=2 autoscale_hysteresis=0.25 \
+//!                     adaptive_target=true decode_knee=16 \
+//!                     predictor_beta=0.2 predictor_sketch=64 \
+//!                     predictor_quantile=0.8 predictor_min_samples=8 \
+//!                     predictor_default_len=256 \
 //!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
@@ -20,8 +24,8 @@ use anyhow::Result;
 use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
 use roll_flash::coordinator::{
-    format_log, run_training, AutoscaleCfg, ControllerCfg, RolloutSystem, RolloutSystemCfg,
-    RoutePolicy, TraceCfg,
+    format_log, run_training, AutoscaleCfg, ControllerCfg, PredictorCfg, RolloutSystem,
+    RolloutSystemCfg, RoutePolicy, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
@@ -38,11 +42,14 @@ fn main() -> Result<()> {
             eprintln!(
                 "usage: roll-flash <train|simulate|inspect> [key=value ...]\n\
                  train:    config=<yaml> | model=<tiny|small> alpha=<f> variant=<pg> steps=<n> lr=<f>\n\
-                 \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma> rolling_update=<bool>\n\
+                 \u{20}         num_replicas=<n> route_policy=<round_robin|least_outstanding|queue|ewma|tail_aware> rolling_update=<bool>\n\
                  \u{20}         num_workers=<n> redundancy_factor=<f> partial_migration=<bool> min_salvage_tokens=<n>\n\
                  \u{20}         salvage_timeout=<f> reclaim_in_place=<bool>\n\
                  \u{20}         autoscale=<bool> min_replicas=<n> max_replicas=<n> target_queue_depth=<f>\n\
                  \u{20}         autoscale_interval=<f> autoscale_cooldown=<f> autoscale_hysteresis=<f>\n\
+                 \u{20}         adaptive_target=<bool> decode_knee=<f>\n\
+                 \u{20}         predictor_beta=<f> predictor_sketch=<n> predictor_quantile=<f>\n\
+                 \u{20}         predictor_min_samples=<n> predictor_default_len=<f>\n\
                  \u{20}         trace=<bool> trace_ring=<n> trace_path=<dir>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
@@ -86,6 +93,15 @@ fn train(cli: &Cli) -> Result<()> {
         interval: cli.parse_or("autoscale_interval", cfg.autoscale.interval),
         cooldown: cli.parse_or("autoscale_cooldown", cfg.autoscale.cooldown),
         hysteresis: cli.parse_or("autoscale_hysteresis", cfg.autoscale.hysteresis),
+        adaptive_target: cli.bool_or("adaptive_target", cfg.autoscale.adaptive_target),
+        decode_knee: cli.parse_or("decode_knee", cfg.autoscale.decode_knee),
+    };
+    let predictor = PredictorCfg {
+        ewma_beta: cli.parse_or("predictor_beta", cfg.predictor.ewma_beta),
+        sketch_capacity: cli.parse_or("predictor_sketch", cfg.predictor.sketch_capacity),
+        long_quantile: cli.parse_or("predictor_quantile", cfg.predictor.long_quantile),
+        min_samples: cli.parse_or("predictor_min_samples", cfg.predictor.min_samples),
+        default_len: cli.parse_or("predictor_default_len", cfg.predictor.default_len),
     };
     // a trace_path on the CLI implies tracing, like the YAML block
     let trace = TraceCfg {
@@ -126,6 +142,7 @@ fn train(cli: &Cli) -> Result<()> {
         reclaim_in_place,
         autoscale,
         trace,
+        predictor,
     };
     fleet.validate()?;
     println!(

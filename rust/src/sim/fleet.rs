@@ -38,14 +38,24 @@
 //!     pool runs on the virtual clock, growing the fleet into bursts
 //!     and salvage-draining it back through troughs. Replica-seconds
 //!     are integrated per serving interval — the currency
-//!     `benches/fig_autoscale.rs` compares against static fleets.
+//!     `benches/fig_autoscale.rs` compares against static fleets;
+//!   * *length-aware tail scheduling* (`route_policy: TailAware`): the
+//!     *same* `LengthPredictor` the real pool shares across its hot
+//!     paths runs on virtual completions, feeding tail-aware routing
+//!     hints, predicted-remaining-token load scores, and the two-class
+//!     (shortest-predicted-first within a long-work reservation, with
+//!     an aging bound) admission order mirrored from the proxy's
+//!     decode loop. Any other policy keeps the exact pre-predictor
+//!     FIFO event sequence, so `benches/fig_tail_latency.rs` can read
+//!     fifo-vs-tail-aware arms off identical workloads.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
-use crate::coordinator::routing::{ReplicaLoad, RoutePolicy, Router};
+use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
+use crate::coordinator::routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
 use crate::metrics::trace::{AttrSnapshot, EventPhase, FlightRecorder};
 use crate::sim::queue::{GpuPool, T};
 use crate::util::rng::Rng;
@@ -55,6 +65,11 @@ use crate::workload::{BurstTrace, DecodeCost, LengthProfile};
 /// engine's MAX_GEN_MIGRATIONS): a genuinely long generation must be
 /// allowed to finish somewhere.
 const MAX_SIM_MIGRATIONS: u32 = 3;
+
+/// Starvation-proof aging bound for the two-class admission order
+/// (mirrors the proxy's AGING_LIMIT): an entry passed over this many
+/// dispatch rounds is admitted next regardless of class.
+const SIM_AGING_LIMIT: u32 = 32;
 
 #[derive(Clone, Debug)]
 pub struct FleetSimConfig {
@@ -106,6 +121,10 @@ pub struct FleetSimConfig {
     /// records, so a sim run exports the identical Chrome trace /
     /// JSONL shape. `None` = no tracing (zero overhead).
     pub trace: Option<Arc<FlightRecorder>>,
+    /// generation-length predictor knobs; scheduling acts on its output
+    /// only under `RoutePolicy::TailAware` (other policies keep the
+    /// exact legacy FIFO event order)
+    pub predictor: PredictorCfg,
     pub seed: u64,
 }
 
@@ -136,6 +155,7 @@ impl FleetSimConfig {
             arrivals: None,
             autoscale: None,
             trace: None,
+            predictor: PredictorCfg::default(),
             seed: 17,
         }
     }
@@ -150,6 +170,10 @@ pub struct FleetSimReport {
     /// tokens per virtual second over the whole run
     pub throughput: f64,
     pub mean_latency: f64,
+    /// episode-completion latency quantiles — the tail-latency bench's
+    /// scoreboard (submit -> done on the virtual clock)
+    pub p50_latency: f64,
+    pub p90_latency: f64,
     pub p99_latency: f64,
     pub per_replica_util: Vec<f64>,
     /// fewest replicas decoding at any instant inside a sync window
@@ -226,6 +250,19 @@ const EV_GEN: u8 = 2;
 const EV_SCALE: u8 = 3;
 const EV_SYNC: u8 = 4;
 
+/// A pool-queued request (the sim's `Pending` mirror). `avoid` mirrors
+/// the real pool's salvage preference; `group` is the prompt-group key
+/// fed to the length predictor; `passes` counts dispatch rounds the
+/// two-class admission passed this entry over (aging bound input).
+#[derive(Clone, Copy)]
+struct PendReq {
+    id: u64,
+    tokens: f64,
+    avoid: Option<usize>,
+    group: u64,
+    passes: u32,
+}
+
 pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     assert!(cfg.num_replicas > 0, "empty fleet");
     let scale_cfg = cfg.autoscale.filter(|a| a.enabled);
@@ -255,13 +292,25 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     // virtual time each serving replica's current interval started
     let mut activated = vec![0.0f64; init_n];
     let mut router = Router::new(cfg.route_policy);
+    // the same predictor the real pool shares across routing, admission
+    // and autoscaling, fed on every virtual completion. Prompt groups
+    // are the log2 bucket of a request's total decode work — the sim's
+    // stand-in for "prompts of one group share a length distribution".
+    cfg.predictor.validate().expect("invalid predictor cfg");
+    let predictor = LengthPredictor::new(cfg.predictor);
+    let tail_aware = cfg.route_policy == RoutePolicy::TailAware;
+    // id -> predicted tokens at dispatch (TailAware only): the
+    // predicted-remaining-token load score, floored at live outstanding
+    let mut pred_of: HashMap<u64, f64> = HashMap::new();
+    // ids currently placed whose prediction classified them long
+    let mut long_ids: HashSet<u64> = HashSet::new();
 
-    // (id, tokens to decode, replica to avoid). The avoid entry mirrors
-    // the real pool's Pending::avoid: a salvaged request prefers any
-    // replica but the one it was reclaimed from, relaxed only when
-    // nothing else is routable.
-    let mut pending: VecDeque<(u64, f64, Option<usize>)> = VecDeque::new();
-    let mut submit_time: HashMap<u64, (f64, f64)> = HashMap::new(); // id -> (t, tokens)
+    // The avoid entry mirrors the real pool's Pending::avoid: a
+    // salvaged request prefers any replica but the one it was reclaimed
+    // from, relaxed only when nothing else is routable.
+    let mut pending: VecDeque<PendReq> = VecDeque::new();
+    // id -> (submit time, total tokens, prompt group)
+    let mut submit_time: HashMap<u64, (f64, f64, u64)> = HashMap::new();
     // id -> placement time: the router's EWMA feed measures dispatch->
     // completion, matching the real pool (InFlight::dispatched), not
     // pool-queue wait
@@ -299,16 +348,17 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let scale_interval = scale_cfg.map(|a| a.interval).unwrap_or(f64::INFINITY);
     let mut next_scale = scale_interval;
 
-    let new_request = |pending: &mut VecDeque<(u64, f64, Option<usize>)>,
-                           submit_time: &mut HashMap<u64, (f64, f64)>,
+    let new_request = |pending: &mut VecDeque<PendReq>,
+                           submit_time: &mut HashMap<u64, (f64, f64, u64)>,
                            next_id: &mut u64,
                            rng: &mut Rng,
                            now: f64| {
         let len = cfg.lengths.sample(rng);
         let tokens =
             cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time;
-        pending.push_back((*next_id, tokens, None));
-        submit_time.insert(*next_id, (now, tokens));
+        let group = tokens.max(1.0).log2() as u64;
+        pending.push_back(PendReq { id: *next_id, tokens, avoid: None, group, passes: 0 });
+        submit_time.insert(*next_id, (now, tokens, group));
         if let Some(r) = rec {
             r.emit_at(
                 "submit",
@@ -364,27 +414,98 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     outstanding: replicas[r].in_flight(),
                     slots: cfg.max_active,
                     suspended: paused[r] || !serving[r],
+                    // predicted-remaining-token load score (TailAware):
+                    // sum of at-dispatch predictions for the replica's
+                    // in-flight set, floored at its live outstanding —
+                    // the same floor Shared::predicted_remaining applies
+                    predicted_remaining: {
+                        let inflight = replicas[r].in_flight() as f64;
+                        if tail_aware {
+                            placed
+                                .iter()
+                                .filter(|&(_, &rr)| rr == r)
+                                .map(|(id, _)| pred_of.get(id).copied().unwrap_or(1.0))
+                                .sum::<f64>()
+                                .max(inflight)
+                        } else {
+                            inflight
+                        }
+                    },
                 })
                 .collect::<Vec<ReplicaLoad>>()
         };
     }
 
-    // dispatch pool-queued requests while the router allows; the
-    // front's avoid preference is tried first and relaxed only when
-    // nothing else is routable (mirrors Shared::drain)
+    // dispatch pool-queued requests while the router allows. Legacy
+    // policies keep strict FIFO (the front's avoid preference is tried
+    // first and relaxed only when nothing else is routable, mirroring
+    // Shared::drain). TailAware admits in the proxy's two-class order:
+    // aged entries first (starvation bound), then the long-work
+    // reservation's oldest long entry, then shortest-predicted-first —
+    // exact FIFO while the predictor is cold (all predictions equal,
+    // stable min picks the oldest).
     macro_rules! dispatch {
         ($now:expr) => {{
             while !pending.is_empty() {
                 let loads: Vec<ReplicaLoad> = loads!();
-                let avoid = pending.front().unwrap().2;
-                let picked = match router.route_excluding(&loads, avoid) {
+                let idx = if !tail_aware {
+                    0
+                } else {
+                    let live_n = serving.iter().filter(|&&s| s).count().max(1);
+                    // fleet-scope long reservation: the proxy reserves
+                    // (decode batch / 4) long slots per replica; the
+                    // sim's decode-batch analog is the knee
+                    let reserve = live_n * (cfg.knee / 4).max(1);
+                    let mut aged = None;
+                    let mut oldest_long = None;
+                    let mut shortest = 0usize;
+                    let mut best = f64::INFINITY;
+                    for (i, e) in pending.iter().enumerate() {
+                        let pred = predictor.predict(e.group);
+                        if aged.is_none() && e.passes >= SIM_AGING_LIMIT {
+                            aged = Some(i);
+                        }
+                        if oldest_long.is_none() && predictor.classify(pred) {
+                            oldest_long = Some(i);
+                        }
+                        if pred < best {
+                            best = pred;
+                            shortest = i;
+                        }
+                    }
+                    match (aged, oldest_long) {
+                        (Some(i), _) => i,
+                        (None, Some(i)) if long_ids.len() < reserve => i,
+                        _ => shortest,
+                    }
+                };
+                let e = pending[idx];
+                let hint = if tail_aware {
+                    let pred = predictor.predict(e.group);
+                    Some(RouteHint { predicted_len: pred, long: predictor.classify(pred) })
+                } else {
+                    None
+                };
+                let picked = match router.route_excluding_hinted(&loads, e.avoid, hint) {
                     Some(r) => Some(r),
-                    None if avoid.is_some() => router.route(&loads),
+                    None if e.avoid.is_some() => router.route_hinted(&loads, hint),
                     None => None,
                 };
                 let Some(r) = picked else { break };
-                let (id, tokens, _) = pending.pop_front().unwrap();
-                place!(r, id, tokens, $now);
+                let _ = pending.remove(idx);
+                // everything older than the admitted entry was passed
+                // over this round (feeds the aging bound)
+                for p in pending.iter_mut().take(idx) {
+                    p.passes += 1;
+                }
+                if tail_aware {
+                    let h = hint.unwrap();
+                    pred_of.insert(e.id, h.predicted_len.max(1.0));
+                    if h.long {
+                        long_ids.insert(e.id);
+                    }
+                }
+                place!(r, e.id, e.tokens, $now);
             }
             report.pool_queue_max = report.pool_queue_max.max(pending.len());
         }};
@@ -520,7 +641,16 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     placed.remove(&id);
                     work_left.remove(&id);
                     dispatch_time.remove(&id);
-                    pending.push_back((id, resubmit, Some(r)));
+                    pred_of.remove(&id);
+                    long_ids.remove(&id);
+                    let group = submit_time.get(&id).map(|&(_, _, g)| g).unwrap_or(0);
+                    pending.push_back(PendReq {
+                        id,
+                        tokens: resubmit,
+                        avoid: Some(r),
+                        group,
+                        passes: 0,
+                    });
                     dispatch!(now);
                 } else {
                     // single replica / every peer paused: re-arm and
@@ -545,9 +675,14 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 let id = replicas[r].pop_completion(t);
                 placed.remove(&id);
                 strikes.remove(&id);
-                let (t_submit, tokens) = submit_time.remove(&id).unwrap_or((now, 0.0));
+                pred_of.remove(&id);
+                long_ids.remove(&id);
+                let (t_submit, tokens, group) = submit_time.remove(&id).unwrap_or((now, 0.0, 0));
                 let assigned = work_left.remove(&id).unwrap_or(tokens);
                 let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
+                // every virtual completion feeds the shared length
+                // predictor, exactly like the real pool's collectors
+                predictor.record(group, tokens.round() as usize);
                 // the same observation feed the real pool's collectors
                 // give the Router: dispatch-to-completion token rate,
                 // counting only the tokens decoded on THIS replica
@@ -580,12 +715,15 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 now = next_scale;
                 next_scale += scale_interval;
                 let scaler = scaler.as_mut().expect("scale event without autoscaler");
+                let profile = predictor.snapshot();
                 let signals = PoolSignals {
                     serving: serving.iter().filter(|&&s| s).count(),
                     queue_depth: pending.len() as f64,
                     outstanding: placed.len(),
                     slots: cfg.max_active,
                     wasted_tokens: report.wasted_tokens as u64,
+                    pred_mean_len: profile.mean,
+                    pred_p90_len: profile.p90,
                 };
                 let decision = scaler.decide_at(now, &signals);
                 if let Some(rec) = rec {
@@ -643,10 +781,28 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                             if live.len() <= min_serving {
                                 break;
                             }
-                            // drain the cheapest replica: fewest in flight
+                            // drain the cheapest replica: fewest in
+                            // flight, then least predicted-remaining
+                            // work (mirrors retire_idlest; identical to
+                            // the legacy stable first-min for non-
+                            // TailAware runs, where both keys collapse
+                            // to in-flight)
                             let victim = *live
                                 .iter()
-                                .min_by_key(|&&i| replicas[i].in_flight())
+                                .min_by_key(|&&i| {
+                                    let pred = if tail_aware {
+                                        placed
+                                            .iter()
+                                            .filter(|&(_, &rr)| rr == i)
+                                            .map(|(id, _)| {
+                                                pred_of.get(id).copied().unwrap_or(1.0)
+                                            })
+                                            .sum::<f64>()
+                                    } else {
+                                        replicas[i].in_flight() as f64
+                                    };
+                                    (replicas[i].in_flight(), pred.round() as u64, i)
+                                })
                                 .unwrap();
                             serving[victim] = false;
                             report.replica_seconds += now - activated[victim];
@@ -692,8 +848,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                     );
                                 }
                                 placed.remove(&id);
+                                pred_of.remove(&id);
+                                long_ids.remove(&id);
                                 drain_pending.insert(id, now);
-                                pending.push_back((id, resubmit, Some(victim)));
+                                let group =
+                                    submit_time.get(&id).map(|&(_, _, g)| g).unwrap_or(0);
+                                pending.push_back(PendReq {
+                                    id,
+                                    tokens: resubmit,
+                                    avoid: Some(victim),
+                                    group,
+                                    passes: 0,
+                                });
                             }
                         }
                         dispatch!(now);
@@ -767,6 +933,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     report.tokens = replicas.iter().map(|p| p.total_work_done(now)).sum();
     report.throughput = if now > 0.0 { report.tokens / now } else { 0.0 };
     report.mean_latency = crate::util::mean(&latencies);
+    report.p50_latency = crate::util::percentile(&latencies, 50.0);
+    report.p90_latency = crate::util::percentile(&latencies, 90.0);
     report.p99_latency = crate::util::percentile(&latencies, 99.0);
     report.per_replica_util = replicas
         .iter()
@@ -846,6 +1014,8 @@ pub fn bursty_autoscale(min_replicas: usize, max_replicas: usize) -> AutoscaleCf
         interval: 5.0,
         cooldown: 10.0,
         hysteresis: 0.2,
+        adaptive_target: false,
+        decode_knee: 16.0,
     }
 }
 
@@ -1205,6 +1375,61 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    /// The tentpole's sim acceptance: length-aware scheduling over a
+    /// heavy-tailed length distribution must finish the same work
+    /// budget faster than FIFO-ish round-robin without regressing the
+    /// tail — the comparison `benches/fig_tail_latency.rs` tabulates.
+    #[test]
+    fn tail_aware_beats_round_robin_under_heavy_tail() {
+        let rr = run(&skewed(RoutePolicy::RoundRobin));
+        let ta = run(&skewed(RoutePolicy::TailAware));
+        assert_eq!(rr.completed, 240);
+        assert_eq!(ta.completed, 240, "tail-aware must not strand work");
+        assert!(
+            ta.makespan < rr.makespan,
+            "tail-aware {:.0}s should beat round-robin {:.0}s",
+            ta.makespan,
+            rr.makespan
+        );
+        assert!(ta.p99_latency <= rr.p99_latency * 1.05, "tail should not regress");
+        assert!(ta.p50_latency <= rr.p50_latency * 1.05, "median should not regress");
+        // quantiles are ordered and populated
+        assert!(ta.p50_latency > 0.0);
+        assert!(ta.p50_latency <= ta.p90_latency && ta.p90_latency <= ta.p99_latency);
+    }
+
+    #[test]
+    fn tail_aware_determinism() {
+        let cfg = skewed(RoutePolicy::TailAware);
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.routed, b.routed);
+        assert_eq!(a.p99_latency, b.p99_latency);
+    }
+
+    /// No-starvation under churn: tail-aware admission + routing with
+    /// watchdog reclaims and autoscale grow/drain all active must still
+    /// complete every request (the aging bound and work-conserving
+    /// spill guarantee progress for both classes).
+    #[test]
+    fn tail_aware_survives_churn_without_starvation() {
+        let mut cfg = bursty_config(400);
+        cfg.route_policy = RoutePolicy::TailAware;
+        cfg.lengths = LengthProfile::new(800.0, 1.3, 30000);
+        cfg.hang_timeout = 90.0;
+        cfg.autoscale = Some(bursty_autoscale(1, 6));
+        let r = run(&cfg);
+        assert_eq!(r.completed, 400, "churn must not starve any request: {r:?}");
+        assert!(r.scale_ups > 0 && r.scale_downs > 0, "{r:?}");
+        // and it stays deterministic with every mechanism engaged
+        let again = run(&cfg);
+        assert_eq!(r.makespan, again.makespan);
+        assert_eq!(r.migrations + r.reclaims_in_place, again.migrations + again.reclaims_in_place);
     }
 
     /// The sim half of the recorder satellite: with a fail-slow

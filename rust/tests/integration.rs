@@ -89,6 +89,7 @@ fn fleet_collects_complete_groups() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -136,6 +137,7 @@ fn sync_training_loop_runs_on_math_env() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -190,6 +192,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -240,6 +243,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -292,6 +296,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -403,6 +408,7 @@ fn pool_generates_across_replicas() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights.clone(), vocab::EOS, 31).unwrap();
 
@@ -465,6 +471,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -530,6 +537,7 @@ fn migrated_greedy_generation_matches_uninterrupted() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 52).unwrap();
     let (reply, rx) = std::sync::mpsc::channel();
@@ -586,6 +594,7 @@ fn kill_replica_mid_generation_salvages_without_dup_or_loss() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 53).unwrap();
     // warmup probe: wait for one full generation so PJRT compilation /
@@ -660,6 +669,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -704,6 +714,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -753,6 +764,7 @@ fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 61).unwrap();
     let mut scaler = Autoscaler::new(AutoscaleCfg {
@@ -763,6 +775,8 @@ fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
         interval: 0.001,
         cooldown: 0.002,
         hysteresis: 0.2,
+        adaptive_target: false,
+        decode_knee: 16.0,
     });
 
     // --- burst: keep ~32 requests offered until the fleet has grown ---
@@ -873,6 +887,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         reclaim_in_place: true,
         autoscale: Default::default(),
         trace: Default::default(),
+        predictor: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -936,6 +951,7 @@ fn trace_covers_every_request_and_attribution_tiles_serving_time() {
         salvage_timeout: 0.5,
         reclaim_in_place: true,
         trace: TraceCfg { enabled: true, ring_capacity: 1 << 14, export_path: None },
+        predictor: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 83).unwrap();
     let n = 24usize;

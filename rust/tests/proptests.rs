@@ -6,6 +6,7 @@
 
 use roll_flash::coordinator::{ReplicaLoad, RoutePolicy, Router, SampleBuffer};
 use roll_flash::rl::{self, Trajectory};
+use roll_flash::sim::fleet::{bursty_autoscale, run as fleet_run, FleetSimConfig};
 use roll_flash::sim::queue::GpuPool;
 use roll_flash::sim::rlvr::{run, RlvrSimConfig, Scheduling};
 use roll_flash::theory::{Prop1, Prop2};
@@ -176,6 +177,7 @@ fn prop_router_never_selects_dead_or_draining_replicas() {
                             outstanding: outstanding[r],
                             slots,
                             suspended: !serving[r],
+                            predicted_remaining: outstanding[r] as f64,
                         })
                         .collect();
                     let exclude = if rng.chance(0.3) {
@@ -191,17 +193,58 @@ fn prop_router_never_selects_dead_or_draining_replicas() {
                     } else {
                         // None is only legitimate when no slot is
                         // eligible: every slot is unroutable, excluded,
-                        // or (QueueSched) saturated
+                        // or (QueueSched/TailAware, which require a
+                        // free decode slot) saturated
+                        let windowed = policy == RoutePolicy::QueueSched
+                            || policy == RoutePolicy::TailAware;
                         let eligible = (0..serving.len()).any(|r| {
                             serving[r]
                                 && Some(r) != exclude
-                                && (policy != RoutePolicy::QueueSched || outstanding[r] < slots)
+                                && (!windowed || outstanding[r] < slots)
                         });
                         assert!(!eligible, "router starved an eligible slot ({policy:?})");
                     }
                 }
             }
         }
+    });
+}
+
+#[test]
+fn prop_tail_aware_never_starves_under_churn() {
+    // The length-aware scheduler must stay work-conserving under
+    // arbitrary kill/retire/add interleavings: random fleet shapes,
+    // heavy-tailed lengths, a migration watchdog (kill + requeue), a
+    // fail-slow replica, weight-sync pauses, and the autoscaler
+    // (add/retire) all churning at once. The aging bound caps how long
+    // two-class admission can pass over any request, so every request
+    // must complete — and the whole run must replay deterministically.
+    for_all_seeds(10, |rng| {
+        let mut cfg = FleetSimConfig::default_fleet(1 + rng.below(4));
+        cfg.route_policy = RoutePolicy::TailAware;
+        cfg.lengths =
+            LengthProfile::new(rng.range_f64(300.0, 1200.0), rng.range_f64(0.8, 1.5), 30000);
+        cfg.clients = 8 + rng.below(48);
+        cfg.total_requests = 60 + rng.below(90);
+        cfg.sync_interval = if rng.chance(0.5) { 0.0 } else { rng.range_f64(60.0, 200.0) };
+        cfg.hang_timeout = if rng.chance(0.7) { rng.range_f64(40.0, 150.0) } else { 0.0 };
+        cfg.reclaim_in_place = rng.chance(0.5);
+        cfg.partial_migration = rng.chance(0.5);
+        if rng.chance(0.5) {
+            cfg.slow_replica = Some((0, rng.range_f64(2.0, 6.0)));
+        }
+        if rng.chance(0.6) {
+            let max = cfg.num_replicas + 1 + rng.below(4);
+            cfg.autoscale = Some(bursty_autoscale(1, max));
+        }
+        cfg.max_active = cfg.knee + rng.below(32);
+        cfg.seed = rng.next_u64();
+        let a = fleet_run(&cfg);
+        assert_eq!(a.completed, cfg.total_requests, "tail-aware starved work under churn");
+        let b = fleet_run(&cfg);
+        assert_eq!(a.makespan, b.makespan, "non-deterministic tail-aware sim");
+        assert_eq!(a.migrations, b.migrations);
+        assert_eq!(a.reclaims_in_place, b.reclaims_in_place);
     });
 }
 
