@@ -14,13 +14,18 @@
 #                    PROPTEST_CASES (default 64 here; CI raises it)
 #   make check       the full CI gauntlet locally (fmt + clippy +
 #                    build + test + bench compile)
+#   make freeze-lock generate + stage Cargo.lock, resolving the xla
+#                    `branch = "main"` pin to concrete SHAs (ROADMAP
+#                    container note: the dev image has no cargo, so
+#                    the first machine with a toolchain runs this and
+#                    commits the result; CI fails until it exists)
 
 PYTHON ?= python3
 MODELS ?= tiny small
 ARTIFACTS_DIR := rust/artifacts
 PROPTEST_CASES ?= 64
 
-.PHONY: artifacts build test test-races bench check clean
+.PHONY: artifacts build test test-races bench check freeze-lock clean
 
 artifacts:
 	@for m in $(MODELS); do \
@@ -52,6 +57,12 @@ check:
 	cargo build --release
 	cargo test -q
 	cargo bench --no-run
+
+freeze-lock:
+	cargo generate-lockfile
+	git add Cargo.lock
+	@echo "Cargo.lock generated and staged — commit it to freeze the xla"
+	@echo "branch pin against xla_extension 0.5.1 (see ROADMAP container note)"
 
 clean:
 	cargo clean

@@ -42,6 +42,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {

@@ -17,9 +17,13 @@
 //!   * prefix-salvaging migration (`partial_migration`) conserves the
 //!     decoded tokens of requests moved off a fail-slow replica; the
 //!     from-scratch arm re-decodes them — the wasted-token gap is the
-//!     fail-slow bill the resumable-task surface eliminates.
+//!     fail-slow bill the resumable-task surface eliminates;
+//!   * fleet-wide KV-prefix reuse (`kv_cache`) routes multi-turn
+//!     follow-ups and in-place salvage back to the replica already
+//!     holding their KV, cutting the prefill-replay token stream by
+//!     an order of magnitude on agentic traffic.
 
-use roll_flash::coordinator::RoutePolicy;
+use roll_flash::coordinator::{KvCacheCfg, RoutePolicy};
 use roll_flash::metrics::Table;
 use roll_flash::sim::fleet::{run, sweep_replicas, FleetSimConfig};
 use roll_flash::workload::LengthProfile;
@@ -117,7 +121,8 @@ fn main() {
 
     println!("== Migration off a 5x fail-slow replica: salvage vs from-scratch (4 replicas) ==\n");
     let mut table = Table::new(&[
-        "arm", "migrations", "in-place", "salvaged tok", "wasted tok", "makespan s", "p99 lat s",
+        "arm", "migrations", "in-place", "salvaged tok", "replay tok", "wasted tok", "makespan s",
+        "p99 lat s",
     ]);
     let mut wasted = Vec::new();
     for partial in [true, false] {
@@ -136,12 +141,15 @@ fn main() {
             r.migrations.to_string(),
             r.reclaims_in_place.to_string(),
             format!("{:.0}", r.salvaged_tokens),
+            format!("{:.0}", r.prefill_replay_tokens),
             format!("{:.0}", r.wasted_tokens),
             format!("{:.0}", r.makespan),
             format!("{:.1}", r.p99_latency),
         ]);
     }
     println!("{}", table.to_markdown());
+    println!("the replay column is the KV-rebuild bill each salvage pays on resume —");
+    println!("the token stream the pool-level prefix index exists to shrink.\n");
     println!(
         "wasted tokens: partial {:.0} vs from-scratch {:.0} ({})\n",
         wasted[0],
@@ -152,6 +160,84 @@ fn main() {
             "UNEXPECTED: salvage did not reduce waste"
         }
     );
+
+    println!("== KV-prefix reuse: multi-turn agentic traffic, ewma vs cache-aware (4 replicas) ==\n");
+    let kv_on = KvCacheCfg {
+        enabled: true,
+        block_tokens: 16,
+        kv_bytes_budget: 1 << 30,
+        bytes_per_token: 4096,
+        invalidate_on_weight_sync: true,
+    };
+    let mut table = Table::new(&[
+        "arm", "replay tok", "kv hits", "hit tok", "evictions", "makespan s", "tok/s", "p99 lat s",
+    ]);
+    let mut replay = Vec::new();
+    for cache_aware in [false, true] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.route_policy = RoutePolicy::Ewma;
+        cfg.sync_interval = 0.0;
+        // 4-turn conversations: each follow-up carries the whole
+        // conversation as context — cached on its replica or replayed
+        cfg.multi_turn = 4;
+        if cache_aware {
+            cfg.kv_cache = kv_on;
+        }
+        let r = run(&cfg);
+        replay.push(r.prefill_replay_tokens);
+        table.row(&[
+            if cache_aware { "ewma + kv index".into() } else { "ewma".to_string() },
+            format!("{:.0}", r.prefill_replay_tokens),
+            r.kv_hits.to_string(),
+            format!("{:.0}", r.kv_hit_tokens),
+            r.kv_evictions.to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.0}", r.throughput),
+            format!("{:.1}", r.p99_latency),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!(
+        "prefill replay: ewma {:.0} vs cache-aware {:.0} tok ({:.1}% cut) — follow-up",
+        replay[0],
+        replay[1],
+        100.0 * (1.0 - replay[1] / replay[0].max(1e-9))
+    );
+    println!("turns resume on the replica already holding their conversation's KV.\n");
+
+    println!("== KV-prefix reuse under fail-slow salvage (4 replicas, watchdog on) ==\n");
+    let mut table = Table::new(&[
+        "arm", "migrations", "in-place", "replay tok", "kv hits", "makespan s", "p99 lat s",
+    ]);
+    for cache_aware in [false, true] {
+        let mut cfg = base.clone();
+        cfg.num_replicas = 4;
+        cfg.clients = 96;
+        cfg.total_requests = 600;
+        cfg.route_policy = RoutePolicy::Ewma;
+        cfg.sync_interval = 0.0;
+        cfg.slow_replica = Some((3, 5.0));
+        cfg.hang_timeout = 60.0;
+        if cache_aware {
+            cfg.kv_cache = kv_on;
+        }
+        let r = run(&cfg);
+        table.row(&[
+            if cache_aware { "ewma + kv index".into() } else { "ewma".to_string() },
+            r.migrations.to_string(),
+            r.reclaims_in_place.to_string(),
+            format!("{:.0}", r.prefill_replay_tokens),
+            r.kv_hits.to_string(),
+            format!("{:.0}", r.makespan),
+            format!("{:.1}", r.p99_latency),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("an in-place reclaim that re-dispatches onto its own replica finds the");
+    println!("salvaged prefix still resident and replays nothing.\n");
 
     println!("== Weight sync: rolling vs broadcast (4 replicas) ==\n");
     let mut table = Table::new(&[

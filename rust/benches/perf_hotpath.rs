@@ -5,7 +5,10 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use roll_flash::coordinator::{LlmProxyPool, PoolCfg, RoutePolicy, SampleBuffer, TraceCfg};
+use roll_flash::coordinator::{
+    KvCacheCfg, KvPrefixIndex, LlmProxyPool, PoolCfg, ReplicaLoad, RouteHint, RoutePolicy, Router,
+    SampleBuffer, TraceCfg,
+};
 use roll_flash::env::vocab;
 use roll_flash::metrics::trace::{EventPhase, FlightRecorder};
 use roll_flash::rl::Trajectory;
@@ -122,7 +125,100 @@ fn main() {
         );
     }
 
-    // 5. real engine: decode + train step latency (tiny artifacts)
+    // 5. KV-prefix index primitives: the cost cache-aware dispatch
+    //    adds per request. Inserts hash whole blocks of the prompt;
+    //    lookups walk the block chain; the tight-budget arm forces an
+    //    LRU eviction on essentially every insert.
+    {
+        let cfg = KvCacheCfg {
+            enabled: true,
+            block_tokens: 16,
+            kv_bytes_budget: 64 << 20,
+            bytes_per_token: 4096,
+            invalidate_on_weight_sync: true,
+        };
+        let mut rng = Rng::new(7);
+        // 512 prompts of 256..768 tokens sharing a 64-token system
+        // prefix (the sharing pattern the radix chain exists for)
+        let prompts: Vec<Vec<i32>> = (0..512)
+            .map(|_| {
+                let n = rng.range_f64(256.0, 768.0) as usize;
+                let mut p = vec![11i32; 64];
+                p.extend((0..n).map(|_| rng.range_f64(0.0, 50_000.0) as i32));
+                p
+            })
+            .collect();
+        let n_ops = 20_000usize;
+        let t_ins = bench(5, || {
+            let mut idx = KvPrefixIndex::new(cfg, 8);
+            for i in 0..n_ops {
+                idx.insert(i % 8, &prompts[i % prompts.len()]);
+            }
+        });
+        let mut idx = KvPrefixIndex::new(cfg, 8);
+        for (i, p) in prompts.iter().enumerate() {
+            idx.insert(i % 8, p);
+        }
+        let t_look = bench(5, || {
+            let mut acc = 0usize;
+            for i in 0..n_ops {
+                acc += idx.lookup(i % 8, &prompts[i % prompts.len()]);
+            }
+            std::hint::black_box(acc);
+        });
+        let tight = KvCacheCfg { kv_bytes_budget: 1024 * 4096, ..cfg };
+        let t_evict = bench(5, || {
+            let mut idx = KvPrefixIndex::new(tight, 8);
+            for i in 0..n_ops {
+                idx.insert(i % 8, &prompts[i % prompts.len()]);
+            }
+        });
+        println!(
+            "KvPrefixIndex: insert {:.0}ns/op, lookup {:.0}ns/op, insert+evict {:.0}ns/op",
+            t_ins / n_ops as f64 * 1e9,
+            t_look / n_ops as f64 * 1e9,
+            t_evict / n_ops as f64 * 1e9
+        );
+
+        // routed-with-cache-hint vs plain: the full per-dispatch route
+        // decision with and without a populated `cached` vector.
+        // Acceptance: the cache override stays within ~3% of the plain
+        // policy pick at fleet sizes that matter.
+        let loads: Vec<ReplicaLoad> = (0..8)
+            .map(|r| ReplicaLoad {
+                outstanding: r % 4,
+                slots: 8,
+                suspended: false,
+                predicted_remaining: (r % 4) as f64,
+            })
+            .collect();
+        let n_routes = 1_000_000usize;
+        let mut plain_router = Router::new(RoutePolicy::LeastOutstanding);
+        let t_plain = bench(5, || {
+            for _ in 0..n_routes {
+                std::hint::black_box(plain_router.route_hinted(std::hint::black_box(&loads), None));
+            }
+        });
+        let mut hint_router = Router::new(RoutePolicy::LeastOutstanding);
+        let cached: Vec<usize> = vec![0, 0, 0, 48, 0, 0, 0, 0];
+        let t_hint = bench(5, || {
+            for _ in 0..n_routes {
+                let hint = RouteHint { cached: cached.clone(), ..RouteHint::default() };
+                std::hint::black_box(
+                    hint_router.route_hinted(std::hint::black_box(&loads), Some(hint)),
+                );
+            }
+        });
+        let per_plain = t_plain / n_routes as f64 * 1e9;
+        let per_hint = t_hint / n_routes as f64 * 1e9;
+        println!(
+            "route (8 replicas): plain {per_plain:.0}ns, with kv hint {per_hint:.0}ns \
+             ({:+.1}% — includes the hint's Vec clone)",
+            (per_hint / per_plain.max(1e-9) - 1.0) * 100.0
+        );
+    }
+
+    // 6. real engine: decode + train step latency (tiny artifacts)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if dir.join("manifest.json").exists() {
         let rt = ModelRuntime::load(&dir).unwrap();
@@ -160,7 +256,7 @@ fn main() {
             (tb * ts2) as f64 / t
         );
 
-        // 6. recorder overhead on the REAL pool's submit/complete path:
+        // 7. recorder overhead on the REAL pool's submit/complete path:
         //    48 short generations through a 2-replica fleet, traced vs
         //    untraced. Acceptance: enabled stays under 3% — the
         //    recorder is off the decode path, so the emit cost
@@ -177,6 +273,7 @@ fn main() {
                 reclaim_in_place: true,
                 trace,
                 predictor: Default::default(),
+                kv_cache: Default::default(),
             };
             let pool =
                 LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 7).unwrap();

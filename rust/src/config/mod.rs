@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::coordinator::autoscaler::AutoscaleCfg;
+use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::PredictorCfg;
 use crate::coordinator::routing::RoutePolicy;
 use crate::metrics::trace::TraceCfg;
@@ -145,6 +146,15 @@ pub struct RollConfig {
     /// (`length_predictor: {ewma_beta, sketch_capacity, long_quantile,
     /// min_samples, default_len}`; always on — the knobs only shape it)
     pub predictor: PredictorCfg,
+    /// fleet-wide KV-prefix index + cache-aware routing (`kv_cache:
+    /// {block_tokens, kv_bytes_budget, bytes_per_token,
+    /// invalidate_on_weight_sync}`; presence of the block enables it —
+    /// absent, placement and accounting stay byte-identical to legacy)
+    pub kv_cache: KvCacheCfg,
+    /// virtual-time sim: seconds of replica time one prefill/replay
+    /// token costs (`prefill_time_per_token` — sweepable replay-cost
+    /// sensitivity for `sim/fleet.rs` and the fig benches)
+    pub prefill_time_per_token: f64,
     pub adv_estimator: String,
     pub reward_norm: String,
     pub actor_train: ActorConfig,
@@ -181,6 +191,8 @@ impl Default for RollConfig {
             autoscale: AutoscaleCfg::disabled(),
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
+            kv_cache: KvCacheCfg::disabled(),
+            prefill_time_per_token: 2e-4,
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
             actor_train: ActorConfig::default(),
@@ -318,6 +330,29 @@ impl RollConfig {
                 cfg.predictor.default_len = v;
             }
         }
+        if let Some(k) = j.get("kv_cache") {
+            // like autoscale/trace: the block's presence turns the
+            // index on unless it says `enabled: false` explicitly
+            cfg.kv_cache.enabled = true;
+            if let Some(Json::Bool(b)) = k.get("enabled") {
+                cfg.kv_cache.enabled = *b;
+            }
+            if let Some(v) = num(k, "block_tokens") {
+                cfg.kv_cache.block_tokens = v as usize;
+            }
+            if let Some(v) = num(k, "kv_bytes_budget") {
+                cfg.kv_cache.kv_bytes_budget = v as u64;
+            }
+            if let Some(v) = num(k, "bytes_per_token") {
+                cfg.kv_cache.bytes_per_token = v as u64;
+            }
+            if let Some(Json::Bool(b)) = k.get("invalidate_on_weight_sync") {
+                cfg.kv_cache.invalidate_on_weight_sync = *b;
+            }
+        }
+        if let Some(v) = num(&j, "prefill_time_per_token") {
+            cfg.prefill_time_per_token = v;
+        }
         if let Some(t) = j.get("trace") {
             // like autoscale: the block's presence turns the recorder
             // on unless it says `enabled: false` explicitly
@@ -406,6 +441,11 @@ impl RollConfig {
         );
         self.autoscale.validate()?;
         self.predictor.validate()?;
+        self.kv_cache.validate()?;
+        anyhow::ensure!(
+            self.prefill_time_per_token.is_finite() && self.prefill_time_per_token >= 0.0,
+            "prefill_time_per_token must be finite and >= 0"
+        );
         Ok(())
     }
 
@@ -647,6 +687,44 @@ autoscale:
             RollConfig::from_yaml("autoscale:\n  adaptive_target: true\n  decode_knee: 0\n")
                 .is_err()
         );
+    }
+
+    #[test]
+    fn parses_kv_cache_block_and_prefill_time() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+kv_cache:
+  block_tokens: 32
+  kv_bytes_budget: 1048576
+  bytes_per_token: 2048
+  invalidate_on_weight_sync: false
+prefill_time_per_token: 0.001
+"#,
+        )
+        .unwrap();
+        assert!(cfg.kv_cache.enabled, "block presence enables the index");
+        assert_eq!(cfg.kv_cache.block_tokens, 32);
+        assert_eq!(cfg.kv_cache.kv_bytes_budget, 1 << 20);
+        assert_eq!(cfg.kv_cache.bytes_per_token, 2048);
+        assert!(!cfg.kv_cache.invalidate_on_weight_sync);
+        assert!((cfg.prefill_time_per_token - 1e-3).abs() < 1e-12);
+        // default: index off, sim replay cost at the historical 2e-4
+        let d = RollConfig::default();
+        assert!(!d.kv_cache.enabled);
+        assert!((d.prefill_time_per_token - 2e-4).abs() < 1e-12);
+        // explicit off-switch keeps the knobs in the file
+        let off = RollConfig::from_yaml("kv_cache:\n  enabled: false\n  block_tokens: 8\n").unwrap();
+        assert!(!off.kv_cache.enabled);
+        assert_eq!(off.kv_cache.block_tokens, 8);
+        // degenerate knobs rejected only while enabled
+        assert!(RollConfig::from_yaml("kv_cache:\n  block_tokens: 0\n").is_err());
+        assert!(RollConfig::from_yaml("kv_cache:\n  bytes_per_token: 0\n").is_err());
+        assert!(
+            RollConfig::from_yaml("kv_cache:\n  kv_bytes_budget: 16\n  block_tokens: 16\n")
+                .is_err(),
+            "budget below one block is unusable"
+        );
+        assert!(RollConfig::from_yaml("prefill_time_per_token: -1").is_err());
     }
 
     #[test]

@@ -71,6 +71,10 @@ pub struct StepLog {
     /// decoded tokens discarded without salvage during this step
     /// (aborts + from-scratch migration; the fail-slow/fail-stop bill)
     pub wasted_tokens: u64,
+    /// prompt/prefix tokens served from a replica's KV cache instead
+    /// of being re-prefilled this step (fleet-wide ledger delta; zero
+    /// while `kv_cache` is disabled)
+    pub prefix_hit_tokens: u64,
     /// routable inference replicas at the end of this step — moves
     /// between autoscale bounds when the elastic fleet is on, constant
     /// otherwise
@@ -198,6 +202,9 @@ pub fn run_training(
                 .salvaged_tokens
                 .saturating_sub(tokens_before.salvaged_tokens),
             wasted_tokens: tokens_after.wasted_tokens.saturating_sub(tokens_before.wasted_tokens),
+            prefix_hit_tokens: tokens_after
+                .prefix_hit_tokens
+                .saturating_sub(tokens_before.prefix_hit_tokens),
             serving_replicas: proxy.serving_replicas(),
             wall_secs: t0.elapsed().as_secs_f64(),
             attr: proxy.attribution().delta(&attr_before),
@@ -212,7 +219,9 @@ pub fn run_training(
 /// mean/max consumed staleness; `skew` is the rolling-sync replica
 /// weight-version spread; `xver` counts piecewise-policy samples
 /// consumed this step (salvaged prefixes spanning an update); `salv`/
-/// `waste` are the step's decoded-token salvage and loss; `repl` is
+/// `waste` are the step's decoded-token salvage and loss; `kvhit` is
+/// the step's prefix tokens served from replica KV caches instead of
+/// re-prefill (the pool-level prefix index at work); `repl` is
 /// the serving replica count (elastic under autoscaling); `attr` is
 /// the step's replica-time split as busy/sync/idle percent of serving
 /// time (`-` until the recorder has attributed anything); `lat` is the
@@ -220,10 +229,10 @@ pub fn run_training(
 /// episode finished inside the step).
 pub fn format_log(l: &StepLog) -> String {
     format!(
-        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  repl {}  attr {}  lat {:.2}/{:.2}  {:.2}s",
+        "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  kvhit {}  repl {}  attr {}  lat {:.2}/{:.2}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
         l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
-        l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.serving_replicas,
-        l.attr.format_compact(), l.lat_p50, l.lat_p99, l.wall_secs
+        l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.prefix_hit_tokens,
+        l.serving_replicas, l.attr.format_compact(), l.lat_p50, l.lat_p99, l.wall_secs
     )
 }

@@ -102,6 +102,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::autoscaler::PoolSignals;
+use crate::coordinator::kv_index::{KvCacheCfg, KvPrefixIndex};
 use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
 use crate::coordinator::llm_proxy::{
     GenResult, GenerationTask, LlmProxy, ProgressGossip, ProxyClient, ProxyEvent, ProxyReport,
@@ -164,6 +165,11 @@ pub struct PoolCfg {
     /// YAML / CLI) — feeds TailAware routing, two-class proxy
     /// admission, and the autoscaler's adaptive target
     pub predictor: PredictorCfg,
+    /// KV-prefix index + cache-aware routing (`kv_cache: {…}` in
+    /// YAML / CLI): track which token prefixes are KV-resident per
+    /// serving replica and prefer placements where resume is free.
+    /// Disabled = legacy placement, byte for byte.
+    pub kv_cache: KvCacheCfg,
 }
 
 impl PoolCfg {
@@ -179,6 +185,7 @@ impl PoolCfg {
             reclaim_in_place: true,
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
+            kv_cache: KvCacheCfg::disabled(),
         }
     }
 }
@@ -358,6 +365,18 @@ struct PoolState {
     /// master clones of the per-replica collector channels; taken at
     /// shutdown/retirement so the collectors can observe disconnection
     completion_tx: Vec<Option<Sender<ProxyEvent>>>,
+    /// pool-level KV-prefix index: which token prefixes are resident
+    /// per serving replica (inserted on completion/salvage, invalidated
+    /// on kill/retire/slot-reuse/weight-sync, LRU under the per-replica
+    /// byte budget). Lives under the state lock like the router.
+    kv: KvPrefixIndex,
+    /// dispatches whose target already held part of the task's prefix
+    kv_hits: u64,
+    /// kv-enabled dispatches that found no cached prefix anywhere
+    kv_misses: u64,
+    /// prompt/prefix tokens found KV-resident at dispatch (re-prefill
+    /// avoided)
+    kv_hit_tokens: u64,
     /// when the slot's current occupant started serving
     serve_start: Vec<Option<Instant>>,
     /// serving seconds already banked for the current occupant (killed
@@ -447,6 +466,11 @@ struct FleetMetrics {
     expired: Counter,
     grown: Counter,
     retired: Counter,
+    /// KV-prefix index outcomes at dispatch (cache-aware routing)
+    kv_hits: Counter,
+    kv_misses: Counter,
+    kv_hit_tokens: Counter,
+    kv_evictions: Counter,
     /// pool-queue length at submit (lifetime) — the registry-owned
     /// replacement for the old ad-hoc `PoolState.queue_depth` field
     pool_queue_depth: HistogramHandle,
@@ -466,6 +490,10 @@ impl FleetMetrics {
             expired: registry.counter("pool.salvage_expired"),
             grown: registry.counter("pool.grown"),
             retired: registry.counter("pool.retired"),
+            kv_hits: registry.counter("pool.kv_hits"),
+            kv_misses: registry.counter("pool.kv_misses"),
+            kv_hit_tokens: registry.counter("pool.kv_hit_tokens"),
+            kv_evictions: registry.counter("pool.kv_evictions"),
             pool_queue_depth: registry.histogram("pool.queue_depth", 1.0, 1.25),
             completion_latency: registry.histogram("pool.completion_latency", 1e-3, 1.25),
             registry,
@@ -538,13 +566,29 @@ impl Shared {
 
     /// Length-scheduling hint for routing `task`: predicted remaining
     /// tokens (budget-clamped, prefix-discounted) plus the long/short
-    /// class. Only `TailAware` consumes it; every other policy ignores
-    /// the hint entirely.
-    fn hint_for(&self, task: &GenerationTask) -> Option<RouteHint> {
+    /// class, and — with the KV-prefix index on — the per-replica
+    /// cached-prefix match over `prompt ++ prefix` that drives the
+    /// router's cache-aware override. Only `TailAware` consumes the
+    /// length fields; an empty `cached` leaves every policy's decision
+    /// byte-identical to the legacy path.
+    fn hint_for(&self, st: &PoolState, task: &GenerationTask) -> Option<RouteHint> {
         let predicted = self.predictor.predict_for(task.group, task.budget);
+        let cached = if st.kv.enabled() {
+            let mut key = task.prompt.clone();
+            key.extend_from_slice(&task.prefix);
+            let per: Vec<usize> = (0..st.phase.len())
+                .map(|r| {
+                    if st.phase[r] == Phase::Serving { st.kv.lookup(r, &key) } else { 0 }
+                })
+                .collect();
+            if per.iter().all(|&c| c == 0) { Vec::new() } else { per }
+        } else {
+            Vec::new()
+        };
         Some(RouteHint {
             predicted_len: predicted.saturating_sub(task.prefix.len()).max(1) as f64,
             long: self.predictor.classify(predicted as f64),
+            cached,
         })
     }
 
@@ -565,6 +609,15 @@ impl Shared {
         req.task.predicted_len = predicted;
         req.task.long_class = self.predictor.classify(predicted as f64);
         let remaining = predicted.saturating_sub(req.task.prefix.len()).max(1);
+        // the KV-index key is the exact token stream the replica will
+        // prefill: prompt plus any salvaged/episode prefix
+        let kv_key: Option<Vec<i32>> = if st.kv.enabled() {
+            let mut k = req.task.prompt.clone();
+            k.extend_from_slice(&req.task.prefix);
+            Some(k)
+        } else {
+            None
+        };
         loop {
             let Some(tx) = st.completion_tx[r].as_ref().cloned() else {
                 // no collector channel. A *retired or draining* slot
@@ -577,7 +630,7 @@ impl Shared {
                 // caller observes disconnection
                 if matches!(st.phase[r], Phase::Retired | Phase::Draining) {
                     let loads = st.loads();
-                    let hint = self.hint_for(&req.task);
+                    let hint = self.hint_for(st, &req.task);
                     match st.router.route_excluding_hinted(&loads, Some(r), hint) {
                         Some(next) => {
                             r = next;
@@ -599,6 +652,7 @@ impl Shared {
                 self.ev_pool("lost", EventPhase::Instant, req.pool_id, String::new());
                 return;
             };
+            let cached = kv_key.as_ref().map_or(0, |k| st.kv.lookup(r, k));
             let replica_task = GenerationTask {
                 prompt: req.task.prompt.clone(),
                 prefix: req.task.prefix.clone(),
@@ -609,6 +663,8 @@ impl Shared {
                 group: req.task.group,
                 predicted_len: req.task.predicted_len,
                 long_class: req.task.long_class,
+                conversation: req.task.conversation,
+                cached_prefix: cached,
                 reply: tx,
             };
             match st.clients[r].try_submit(replica_task) {
@@ -620,6 +676,39 @@ impl Shared {
                     st.util[r].record(st.outstanding[r].min(st.slots) as f64 / st.slots as f64);
                     if !req.task.prefix.is_empty() {
                         st.resumed += 1;
+                    }
+                    if let Some(k) = kv_key.as_ref() {
+                        if cached > 0 {
+                            st.kv_hits += 1;
+                            st.kv_hit_tokens += cached as u64;
+                            self.metrics.kv_hits.inc();
+                            self.metrics.kv_hit_tokens.add(cached as u64);
+                            self.ledger.add_prefix_hit(cached as u64);
+                            st.kv.touch(r, k);
+                            if self.recorder.is_enabled() {
+                                self.ev_replica(
+                                    st,
+                                    "kv_hit",
+                                    EventPhase::Instant,
+                                    req.pool_id,
+                                    r,
+                                    format!("cached={cached}"),
+                                );
+                            }
+                        } else {
+                            st.kv_misses += 1;
+                            self.metrics.kv_misses.inc();
+                            if self.recorder.is_enabled() {
+                                self.ev_replica(
+                                    st,
+                                    "kv_miss",
+                                    EventPhase::Instant,
+                                    req.pool_id,
+                                    r,
+                                    String::new(),
+                                );
+                            }
+                        }
                     }
                     if self.recorder.is_enabled() {
                         let policy = self.route_policy;
@@ -663,9 +752,10 @@ impl Shared {
                 }
                 None => {
                     st.phase[r] = Phase::Dead;
+                    st.kv.invalidate_replica(r);
                     st.close_serve_clock(r);
                     let loads = st.loads();
-                    let hint = self.hint_for(&req.task);
+                    let hint = self.hint_for(st, &req.task);
                     match st.router.route_excluding_hinted(&loads, Some(r), hint) {
                         Some(next) => r = next,
                         None if st.none_serviceable() => {
@@ -705,9 +795,22 @@ impl Shared {
         while !st.queue.is_empty() {
             let loads = st.loads();
             let front = st.queue.front().unwrap();
-            let avoid = front.avoid;
-            let hint = self.hint_for(&front.task);
-            let picked = match st.router.route_excluding_hinted(&loads, avoid, hint) {
+            let mut avoid = front.avoid;
+            let hint = self.hint_for(st, &front.task);
+            // `avoid` is a soft preference (the salvage source may be
+            // slow, not dead). When that same replica holds the best
+            // cached prefix for the task, going back is the cheaper
+            // resume — drop the avoidance and let the cache-aware
+            // override send it home.
+            if let (Some(a), Some(h)) = (avoid, hint.as_ref()) {
+                if !h.cached.is_empty() {
+                    let at_avoid = h.cached.get(a).copied().unwrap_or(0);
+                    if at_avoid > 0 && h.cached.iter().all(|&c| c <= at_avoid) {
+                        avoid = None;
+                    }
+                }
+            }
+            let picked = match st.router.route_excluding_hinted(&loads, avoid, hint.clone()) {
                 Some(r) => Some(r),
                 // the avoided replica is the only routable one: better
                 // there than starving in the queue
@@ -718,6 +821,42 @@ impl Shared {
             let p = st.queue.pop_front().unwrap();
             self.trace_queue_end(p.pool_id);
             self.dispatch(st, r, p, 0);
+        }
+    }
+
+    /// Record that replica `r` now holds KV state covering
+    /// `prompt ++ tokens` (a completion it just decoded, or a salvage
+    /// it produced). No-op while the index is disabled or the slot is
+    /// not serving. Evictions forced by the insert are counted and
+    /// traced. Caller holds the state lock.
+    fn kv_insert_done(
+        &self,
+        st: &mut PoolState,
+        r: usize,
+        prompt: &[i32],
+        tokens: &[i32],
+        req: u64,
+    ) {
+        if !st.kv.enabled() || st.phase[r] != Phase::Serving {
+            return;
+        }
+        let mut key = prompt.to_vec();
+        key.extend_from_slice(tokens);
+        let before = st.kv.stats().evictions;
+        st.kv.insert(r, &key);
+        let evicted = st.kv.stats().evictions - before;
+        if evicted > 0 {
+            self.metrics.kv_evictions.add(evicted);
+            if self.recorder.is_enabled() {
+                self.ev_replica(
+                    st,
+                    "kv_evict",
+                    EventPhase::Instant,
+                    req,
+                    r,
+                    format!("blocks={evicted}"),
+                );
+            }
         }
     }
 
@@ -856,10 +995,17 @@ impl Shared {
                         p.dispatched.elapsed().as_secs_f64(),
                     );
                 }
+                self.kv_insert_done(st, p.replica, &task.prompt, &res.tokens, pool_id);
                 self.drain(st);
                 return Some((task.reply, GenResult { id: pool_id, ..res }));
             }
-            Resolution::Salvaged(s) => self.absorb_salvage(&mut task, s),
+            Resolution::Salvaged(s) => {
+                self.absorb_salvage(&mut task, s);
+                // the source still holds KV for everything it decoded;
+                // while it keeps serving, the index remembers so the
+                // re-dispatch can send the resume home for free
+                self.kv_insert_done(st, p.replica, &task.prompt, &task.prefix, pool_id);
+            }
             Resolution::Lost => {
                 // the replica may still answer after the deadline; a
                 // tombstone records the prefix that lives on in the
@@ -883,7 +1029,7 @@ impl Shared {
             }
             SalvageDest::Migrate => {
                 let loads = st.loads();
-                let hint = self.hint_for(&req.task);
+                let hint = self.hint_for(st, &req.task);
                 match st.router.route_excluding_hinted(&loads, Some(p.replica), hint) {
                     Some(nr) => {
                         self.ev_pool("redispatch", EventPhase::Instant, pool_id, String::new());
@@ -1058,6 +1204,7 @@ fn collector_on_done(
     }
     let entry = st.inflight.remove(&pool_id);
     if let Some(e) = &entry {
+        shared.kv_insert_done(st, r, &e.task.prompt, &res.tokens, pool_id);
         shared.predictor.record(e.task.group, res.tokens.len());
         let lat = e.dispatched.elapsed().as_secs_f64().max(1e-6);
         st.lat_window.record(lat);
@@ -1190,6 +1337,7 @@ fn sync_agent(shared: Arc<Shared>, rx: Receiver<(Vec<f32>, u64)>) {
             st.syncing = None;
             if applied && st.phase[r] != Phase::Retired {
                 st.replica_version[r] = version;
+                st.kv.set_version(r, version);
                 if shared.recorder.is_enabled() {
                     shared.ev_replica(
                         &st,
@@ -1254,6 +1402,15 @@ pub struct PoolReport {
     pub pool_queue_depth: Histogram,
     /// fleet-wide decoded-token outcomes (salvaged vs wasted)
     pub tokens: TokenStats,
+    /// dispatches that landed on a replica already holding part of the
+    /// task's prefix (KV-prefix index on)
+    pub kv_hits: u64,
+    /// kv-enabled dispatches with no cached prefix anywhere
+    pub kv_misses: u64,
+    /// prompt/prefix tokens whose re-prefill the index avoided
+    pub kv_hit_tokens: u64,
+    /// index blocks evicted under the per-replica byte budget
+    pub kv_evictions: u64,
 }
 
 impl PoolReport {
@@ -1395,6 +1552,7 @@ impl LlmProxyPool {
             "trace.ring_capacity must be > 0 when tracing is enabled"
         );
         cfg.predictor.validate()?;
+        cfg.kv_cache.validate()?;
         let ledger = Arc::new(TokenLedger::default());
         let latest = Arc::new(Mutex::new((init_weights.clone(), 0u64)));
         let replicas: Vec<LlmProxy> = (0..cfg.num_replicas)
@@ -1483,6 +1641,10 @@ impl LlmProxyPool {
             lat_window: latency_hist(),
             drain_start: vec![None; n],
             completion_tx,
+            kv: KvPrefixIndex::new(cfg.kv_cache, n),
+            kv_hits: 0,
+            kv_misses: 0,
+            kv_hit_tokens: 0,
             serve_start: (0..n).map(|_| Some(Instant::now())).collect(),
             served: vec![0.0; n],
             retired: Vec::new(),
@@ -1615,6 +1777,8 @@ impl LlmProxyPool {
                 // the new occupant must be probed fresh, not inherit
                 // the previous occupant's EWMA token rate
                 st.router.reset_replica(slot);
+                // ...nor the previous occupant's advertised KV state
+                st.kv.invalidate_replica(slot);
             }
             st.grown += 1;
             self.shared.metrics.grown.inc();
@@ -1675,6 +1839,7 @@ impl LlmProxyPool {
                 return false; // never drain the last serving replica
             }
             st.phase[r] = Phase::Draining;
+            st.kv.invalidate_replica(r);
             st.close_serve_clock(r);
             st.drain_start[r] = Some(Instant::now());
             self.shared.ev_replica(&st, "retire", EventPhase::Instant, 0, r, String::new());
@@ -1824,7 +1989,7 @@ impl LlmProxyPool {
             );
         }
         let loads = st.loads();
-        let hint = self.shared.hint_for(&req.task);
+        let hint = self.shared.hint_for(&st, &req.task);
         match st.router.route_hinted(&loads, hint) {
             Some(r) => self.shared.dispatch(&mut st, r, req, 0),
             None => {
@@ -1967,6 +2132,7 @@ impl LlmProxyPool {
             if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
                 st.clients[r].update_weights(weights.clone(), version);
                 st.replica_version[r] = version;
+                st.kv.set_version(r, version);
             }
         }
         if self.shared.recorder.is_enabled() {
@@ -1996,6 +2162,7 @@ impl LlmProxyPool {
             return;
         }
         st.phase[r] = Phase::Dead;
+        st.kv.invalidate_replica(r);
         st.close_serve_clock(r);
         self.shared.ev_replica(&st, "kill", EventPhase::Instant, 0, r, String::new());
         let ids: Vec<u64> = st
@@ -2156,6 +2323,10 @@ impl LlmProxyPool {
             grown: st.grown,
             pool_queue_depth: self.shared.metrics.pool_queue_depth.read(),
             tokens: self.shared.ledger.stats(),
+            kv_hits: st.kv_hits,
+            kv_misses: st.kv_misses,
+            kv_hit_tokens: st.kv_hit_tokens,
+            kv_evictions: st.kv.stats().evictions,
         };
         drop(st);
         if let Some(dir) = &self.export_path {
@@ -2276,6 +2447,7 @@ pub(crate) mod testing {
             reclaim_in_place: true,
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
+            kv_cache: KvCacheCfg::disabled(),
         }
     }
 
@@ -2445,6 +2617,96 @@ mod tests {
         p.settle(SETTLE);
         assert_eq!(p.token_stats().salvaged_tokens, 6);
         assert_eq!(p.resumed_dispatches(), 2);
+        p.check_invariants();
+    }
+
+    /// The tentpole's engine-path acceptance, on live stub replicas:
+    /// a salvaged prefix lands in the source replica's KV index, a
+    /// later request sharing the prompt is routed back there by the
+    /// cache override (overriding least-outstanding), the dispatch
+    /// counts the hit in the ledger and PoolReport, and the flight
+    /// recorder sees kv_hit/kv_miss instants.
+    #[test]
+    fn kv_index_routes_prompt_sharers_back_and_counts_hits() {
+        let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+        c.kv_cache = KvCacheCfg {
+            enabled: true,
+            block_tokens: 2,
+            kv_bytes_budget: 1 << 20,
+            bytes_per_token: 16,
+            invalidate_on_weight_sync: true,
+        };
+        c.trace = TraceCfg { enabled: true, ring_capacity: 4096, export_path: None };
+        let p = pool_with_progress(2, 3, &c);
+        let rec = p.recorder();
+
+        // decode starts on replica 0, then migrates to replica 1 with
+        // 3 fabricated salvage tokens: prompt ++ prefix (7 tokens = 3
+        // whole blocks) is now indexed on the SOURCE replica
+        let (id, _rx) = p.generate(vec![1, 2, 3, 4], 10);
+        assert!(p.migrate(id));
+        p.settle(SETTLE);
+        assert_eq!(p.outstanding_per_replica(), vec![0, 1]);
+
+        // two unrelated requests load replica 0 past replica 1, so
+        // least-outstanding on its own would pick replica 1 next
+        let (_f1, _rx1) = p.generate(vec![9, 9, 9, 9], 10);
+        let (_f2, _rx2) = p.generate(vec![9, 9, 9, 9], 10);
+        assert_eq!(p.outstanding_per_replica(), vec![2, 1]);
+
+        // a prompt-sharing request must override the load signal and
+        // resume where its 4-token prefix (2 blocks) is cached
+        let (_id2, _rx3) = p.generate(vec![1, 2, 3, 4], 10);
+        assert_eq!(
+            p.outstanding_per_replica(),
+            vec![3, 1],
+            "cache-aware routing must return the prompt to replica 0"
+        );
+        let stats = p.token_stats();
+        assert_eq!(stats.prefix_hit_tokens, 4, "{stats:?}");
+
+        let events = rec.events();
+        assert!(
+            events.iter().any(|e| e.name == "kv_hit"),
+            "the hit must land in the flight recorder"
+        );
+        assert!(
+            events.iter().any(|e| e.name == "kv_miss"),
+            "cold dispatches under the enabled index record misses"
+        );
+
+        let report = p.shutdown().unwrap();
+        assert_eq!(report.kv_hits, 1, "{report:?}");
+        assert_eq!(report.kv_hit_tokens, 4, "{report:?}");
+        assert!(report.kv_misses >= 1, "{report:?}");
+    }
+
+    /// Killing a replica drops its cached prefixes: the next
+    /// prompt-sharer must not be routed to (or credited against) the
+    /// dead slot's stale KV.
+    #[test]
+    fn kv_index_forgets_killed_replicas() {
+        let mut c = cfg(2, RoutePolicy::LeastOutstanding, 8);
+        c.kv_cache = KvCacheCfg {
+            enabled: true,
+            block_tokens: 2,
+            kv_bytes_budget: 1 << 20,
+            bytes_per_token: 16,
+            invalidate_on_weight_sync: true,
+        };
+        let p = pool_with_progress(2, 3, &c);
+        let (id, _rx) = p.generate(vec![1, 2, 3, 4], 10);
+        assert!(p.migrate(id));
+        p.settle(SETTLE);
+        // the cached copy lives on replica 0; kill it
+        p.kill_replica(0);
+        p.settle(SETTLE);
+        let (_id2, _rx2) = p.generate(vec![1, 2, 3, 4], 10);
+        assert_eq!(
+            p.token_stats().prefix_hit_tokens,
+            0,
+            "a dead replica's KV must never be credited"
+        );
         p.check_invariants();
     }
 

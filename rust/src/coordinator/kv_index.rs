@@ -1,0 +1,485 @@
+//! Fleet-wide KV-prefix index (the Laminar direction, arxiv
+//! 2510.12633): a pool-level map of which token-id prefixes are
+//! resident in each serving replica's KV cache, so the router can send
+//! work *to its state* — a salvaged task resumes where its prefix
+//! already lives, a multi-turn episode returns to the replica holding
+//! its conversation — instead of paying full prefill replay on
+//! whichever replica load-balancing happens to pick.
+//!
+//! The index is a hashed block-chain (the radix-tree equivalent vLLM
+//! uses for prefix caching, flattened into hash space): token streams
+//! are chunked into fixed `block_tokens` blocks and each block's key is
+//! the running hash of *everything up to and including it*, so a key at
+//! depth d identifies one exact prefix of d blocks. Lookup walks the
+//! chain until the first missing block; the match length is exact (no
+//! false positives beyond 64-bit hash collisions). Parent/children
+//! links make eviction structural: only chain *leaves* are evictable,
+//! oldest-touched first, under a per-replica `kv_bytes_budget`.
+//!
+//! Maintenance is event-driven from the fleet's existing lifecycle
+//! flow (`coordinator/fleet.rs`): insert on completion/salvage,
+//! invalidate the whole replica on kill/retire/slot-reuse, and — per
+//! `invalidate_on_weight_sync` — whenever the replica acknowledges a
+//! new weight version (stale-version KV must never be advertised as
+//! reusable). The index itself is policy-free bookkeeping; the routing
+//! preference lives in `Router` (`RouteHint::cached`), and the proxy
+//! charges only the *uncovered* portion of a resume to
+//! prefill/prefill_replay (`TokenLedger::prefix_hit_tokens`).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+/// `kv_cache:` config block (YAML / CLI), validated. Disabled by
+/// default: every routing decision and attribution bill is
+/// byte-identical to the pre-index behavior until the block is present.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvCacheCfg {
+    pub enabled: bool,
+    /// tokens per hashed index block; a prefix match is resolved at
+    /// this granularity (smaller = finer matches, more index entries)
+    pub block_tokens: usize,
+    /// per-replica budget for *indexed* KV bytes; LRU leaf eviction
+    /// keeps the advertised state under it
+    pub kv_bytes_budget: u64,
+    /// KV bytes one cached token occupies (model-dependent; prices
+    /// `block_tokens` blocks against the budget)
+    pub bytes_per_token: u64,
+    /// drop a replica's whole index when it acknowledges a new weight
+    /// version (KV computed under old weights is not reusable for
+    /// exact resume; `false` keeps it — the approximate-reuse stance)
+    pub invalidate_on_weight_sync: bool,
+}
+
+impl KvCacheCfg {
+    /// The inert default: no index maintained, no routing preference,
+    /// no accounting — the legacy placement stack, byte for byte.
+    pub fn disabled() -> Self {
+        KvCacheCfg {
+            enabled: false,
+            block_tokens: 16,
+            // 64 MiB of KV per replica at 4 KiB/token = 16k tokens
+            kv_bytes_budget: 64 << 20,
+            bytes_per_token: 4096,
+            invalidate_on_weight_sync: true,
+        }
+    }
+
+    /// Tokens the per-replica budget can hold (floor at one block so a
+    /// tiny budget still caches something).
+    pub fn budget_tokens(&self) -> u64 {
+        (self.kv_bytes_budget / self.bytes_per_token.max(1)).max(self.block_tokens as u64)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(()); // inert knobs are never rejected
+        }
+        anyhow::ensure!(self.block_tokens >= 1, "kv_cache.block_tokens must be >= 1");
+        anyhow::ensure!(self.bytes_per_token >= 1, "kv_cache.bytes_per_token must be >= 1");
+        anyhow::ensure!(
+            self.kv_bytes_budget >= self.block_tokens as u64 * self.bytes_per_token,
+            "kv_cache.kv_bytes_budget must hold at least one block \
+             ({} tokens x {} bytes)",
+            self.block_tokens,
+            self.bytes_per_token
+        );
+        Ok(())
+    }
+}
+
+impl Default for KvCacheCfg {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// One indexed block: a node in the per-replica prefix chain.
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    /// key of the previous block in this prefix (None at depth 1)
+    parent: Option<u64>,
+    /// chains extending through this block; only leaves (0) may evict
+    children: u32,
+    /// logical LRU clock value of the last insert/touch
+    touch: u64,
+}
+
+/// Counters the index feeds back to `FleetMetrics`/`PoolReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvIndexStats {
+    pub blocks: usize,
+    pub evictions: u64,
+}
+
+/// The pool-level prefix index. Not internally locked: it lives inside
+/// `PoolState` (the fleet) or a sim local, under their existing
+/// synchronization, and uses a deterministic logical tick for LRU so
+/// virtual-time runs replay exactly.
+#[derive(Debug)]
+pub struct KvPrefixIndex {
+    cfg: KvCacheCfg,
+    /// per replica slot: block key -> node
+    blocks: Vec<HashMap<u64, Block>>,
+    /// weight version the slot's index was built under
+    version: Vec<u64>,
+    /// logical LRU clock (monotone per mutation, never wall time)
+    tick: u64,
+    evictions: u64,
+}
+
+/// FNV-1a 64-bit step over one token, chained: the running hash after
+/// block d is the identity of the d-block prefix.
+#[inline]
+fn fnv_step(mut h: u64, tok: i32) -> u64 {
+    for b in tok.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+impl KvPrefixIndex {
+    pub fn new(cfg: KvCacheCfg, num_replicas: usize) -> Self {
+        KvPrefixIndex {
+            cfg,
+            blocks: (0..num_replicas).map(|_| HashMap::new()).collect(),
+            version: vec![0; num_replicas],
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn cfg(&self) -> &KvCacheCfg {
+        &self.cfg
+    }
+
+    fn ensure_replica(&mut self, r: usize) {
+        while self.blocks.len() <= r {
+            self.blocks.push(HashMap::new());
+            self.version.push(0);
+        }
+    }
+
+    /// Record that `tokens` (the full `prompt ++ decoded` stream) is
+    /// now KV-resident on replica `r`. Only whole blocks are indexed;
+    /// the sub-block tail is simply not advertised. Touches the whole
+    /// chain (LRU refresh) and evicts leaves if `r` runs over budget.
+    pub fn insert(&mut self, r: usize, tokens: &[i32]) {
+        if !self.cfg.enabled || tokens.len() < self.cfg.block_tokens {
+            return;
+        }
+        self.ensure_replica(r);
+        self.tick += 1;
+        let tick = self.tick;
+        let mut h = FNV_OFFSET;
+        let mut parent: Option<u64> = None;
+        for chunk in tokens.chunks_exact(self.cfg.block_tokens) {
+            for &t in chunk {
+                h = fnv_step(h, t);
+            }
+            let map = &mut self.blocks[r];
+            match map.get_mut(&h) {
+                Some(b) => b.touch = tick,
+                None => {
+                    map.insert(h, Block { parent, children: 0, touch: tick });
+                    if let Some(p) = parent {
+                        if let Some(pb) = map.get_mut(&p) {
+                            pb.children += 1;
+                        }
+                    }
+                }
+            }
+            parent = Some(h);
+        }
+        self.evict_over_budget(r);
+    }
+
+    /// Longest indexed prefix of `tokens` resident on replica `r`, in
+    /// tokens (a multiple of `block_tokens`). Pure: routing probes
+    /// every replica without perturbing LRU order.
+    pub fn lookup(&self, r: usize, tokens: &[i32]) -> usize {
+        if !self.cfg.enabled || r >= self.blocks.len() {
+            return 0;
+        }
+        let map = &self.blocks[r];
+        if map.is_empty() {
+            return 0;
+        }
+        let mut h = FNV_OFFSET;
+        let mut matched = 0usize;
+        for chunk in tokens.chunks_exact(self.cfg.block_tokens) {
+            for &t in chunk {
+                h = fnv_step(h, t);
+            }
+            if !map.contains_key(&h) {
+                break;
+            }
+            matched += self.cfg.block_tokens;
+        }
+        matched
+    }
+
+    /// LRU-refresh the matched chain after the router actually placed
+    /// work on it (a hit that is never touched would be the first
+    /// evicted despite being the hottest state in the pool).
+    pub fn touch(&mut self, r: usize, tokens: &[i32]) {
+        if !self.cfg.enabled || r >= self.blocks.len() {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let mut h = FNV_OFFSET;
+        for chunk in tokens.chunks_exact(self.cfg.block_tokens) {
+            for &t in chunk {
+                h = fnv_step(h, t);
+            }
+            match self.blocks[r].get_mut(&h) {
+                Some(b) => b.touch = tick,
+                None => break,
+            }
+        }
+    }
+
+    /// Drop everything advertised for replica `r` (kill, retire, slot
+    /// reuse: the KV state is gone or belongs to a previous occupant).
+    pub fn invalidate_replica(&mut self, r: usize) {
+        if r < self.blocks.len() {
+            self.blocks[r].clear();
+        }
+    }
+
+    /// The replica acknowledged weight version `v`. Under
+    /// `invalidate_on_weight_sync` a version change drops its index —
+    /// prefixes decoded under old weights are not exact-resume state.
+    pub fn set_version(&mut self, r: usize, v: u64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.ensure_replica(r);
+        if self.version[r] != v {
+            self.version[r] = v;
+            if self.cfg.invalidate_on_weight_sync {
+                self.blocks[r].clear();
+            }
+        }
+    }
+
+    /// Weight version the slot's surviving index was built under.
+    pub fn version(&self, r: usize) -> u64 {
+        self.version.get(r).copied().unwrap_or(0)
+    }
+
+    /// Indexed KV bytes currently advertised for replica `r`.
+    pub fn replica_bytes(&self, r: usize) -> u64 {
+        let blocks = self.blocks.get(r).map(|m| m.len()).unwrap_or(0) as u64;
+        blocks * self.cfg.block_tokens as u64 * self.cfg.bytes_per_token
+    }
+
+    pub fn replica_blocks(&self, r: usize) -> usize {
+        self.blocks.get(r).map(|m| m.len()).unwrap_or(0)
+    }
+
+    pub fn stats(&self) -> KvIndexStats {
+        KvIndexStats {
+            blocks: self.blocks.iter().map(|m| m.len()).sum(),
+            evictions: self.evictions,
+        }
+    }
+
+    /// Evict least-recently-touched *leaves* until `r` fits its byte
+    /// budget. Leaves-only keeps every surviving key's full chain
+    /// intact, so `lookup` lengths stay exact.
+    fn evict_over_budget(&mut self, r: usize) {
+        let budget_blocks =
+            (self.cfg.budget_tokens() / self.cfg.block_tokens.max(1) as u64).max(1) as usize;
+        while self.blocks[r].len() > budget_blocks {
+            let victim = self.blocks[r]
+                .iter()
+                .filter(|(_, b)| b.children == 0)
+                .min_by_key(|(&k, b)| (b.touch, k))
+                .map(|(&k, b)| (k, b.parent));
+            let Some((key, parent)) = victim else { break };
+            self.blocks[r].remove(&key);
+            if let Some(p) = parent {
+                if let Some(pb) = self.blocks[r].get_mut(&p) {
+                    pb.children = pb.children.saturating_sub(1);
+                }
+            }
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(block: usize, budget_tokens: u64) -> KvCacheCfg {
+        KvCacheCfg {
+            enabled: true,
+            block_tokens: block,
+            kv_bytes_budget: budget_tokens * 4096,
+            bytes_per_token: 4096,
+            invalidate_on_weight_sync: true,
+        }
+    }
+
+    fn toks(n: usize, salt: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i * 7 + salt).collect()
+    }
+
+    #[test]
+    fn validation() {
+        assert!(KvCacheCfg::disabled().validate().is_ok());
+        assert!(cfg(16, 1024).validate().is_ok());
+        let mut bad = cfg(0, 1024);
+        assert!(bad.validate().is_err());
+        bad = cfg(16, 1024);
+        bad.bytes_per_token = 0;
+        assert!(bad.validate().is_err());
+        bad = cfg(16, 1024);
+        bad.kv_bytes_budget = 8 * 4096; // < one 16-token block
+        assert!(bad.validate().is_err());
+        // disabled knobs are inert even when degenerate
+        let mut off = bad;
+        off.enabled = false;
+        assert!(off.validate().is_ok());
+    }
+
+    #[test]
+    fn lookup_matches_longest_inserted_prefix() {
+        let mut ix = KvPrefixIndex::new(cfg(4, 1024), 2);
+        let stream = toks(19, 0); // 4 full blocks + 3-token tail
+        ix.insert(0, &stream);
+        assert_eq!(ix.lookup(0, &stream), 16, "whole blocks only, tail unadvertised");
+        // a shorter probe of the same prefix matches its own length
+        assert_eq!(ix.lookup(0, &stream[..8]), 8);
+        // a probe diverging inside block 3 matches the shared 2 blocks
+        let mut fork = stream.clone();
+        fork[9] = -1;
+        assert_eq!(ix.lookup(0, &fork), 8);
+        // nothing was ever inserted on replica 1 (or an unknown slot)
+        assert_eq!(ix.lookup(1, &stream), 0);
+        assert_eq!(ix.lookup(7, &stream), 0);
+        // disabled index never matches
+        let off = KvPrefixIndex::new(KvCacheCfg::disabled(), 2);
+        assert_eq!(off.lookup(0, &stream), 0);
+    }
+
+    #[test]
+    fn shared_prefixes_share_blocks() {
+        let mut ix = KvPrefixIndex::new(cfg(4, 1024), 1);
+        let a = toks(16, 0);
+        let mut b = a.clone();
+        b.extend(toks(8, 100)); // same 4 blocks, then 2 more
+        ix.insert(0, &a);
+        let after_a = ix.replica_blocks(0);
+        ix.insert(0, &b);
+        assert_eq!(after_a, 4);
+        assert_eq!(ix.replica_blocks(0), 6, "the shared prefix is not duplicated");
+        assert_eq!(ix.lookup(0, &a), 16);
+        assert_eq!(ix.lookup(0, &b), 24);
+    }
+
+    #[test]
+    fn invalidation_clears_the_replica() {
+        let mut ix = KvPrefixIndex::new(cfg(4, 1024), 2);
+        ix.insert(0, &toks(16, 0));
+        ix.insert(1, &toks(16, 1));
+        ix.invalidate_replica(0);
+        assert_eq!(ix.lookup(0, &toks(16, 0)), 0);
+        assert_eq!(ix.lookup(1, &toks(16, 1)), 16, "peers unaffected");
+        assert_eq!(ix.replica_bytes(0), 0);
+    }
+
+    #[test]
+    fn weight_sync_invalidates_per_cfg() {
+        let mut ix = KvPrefixIndex::new(cfg(4, 1024), 1);
+        ix.insert(0, &toks(16, 0));
+        ix.set_version(0, 1);
+        assert_eq!(ix.lookup(0, &toks(16, 0)), 0, "new weights drop the index");
+        assert_eq!(ix.version(0), 1);
+        // same version again: no-op
+        ix.insert(0, &toks(16, 0));
+        ix.set_version(0, 1);
+        assert_eq!(ix.lookup(0, &toks(16, 0)), 16);
+        // the approximate-reuse stance keeps the index across versions
+        let mut keep = cfg(4, 1024);
+        keep.invalidate_on_weight_sync = false;
+        let mut ix = KvPrefixIndex::new(keep, 1);
+        ix.insert(0, &toks(16, 0));
+        ix.set_version(0, 3);
+        assert_eq!(ix.lookup(0, &toks(16, 0)), 16);
+        assert_eq!(ix.version(0), 3);
+    }
+
+    #[test]
+    fn lru_evicts_leaves_and_respects_budget() {
+        // budget: 3 blocks of 4 tokens
+        let mut ix = KvPrefixIndex::new(cfg(4, 12), 1);
+        let long = toks(12, 0); // 3 blocks, one chain
+        ix.insert(0, &long);
+        assert_eq!(ix.replica_blocks(0), 3);
+        // a new unrelated chain forces eviction of the *leaf* (deepest
+        // block) of the oldest chain, never a middle block
+        ix.insert(0, &toks(4, 500));
+        assert!(ix.replica_blocks(0) <= 3, "budget enforced");
+        assert!(ix.stats().evictions >= 1);
+        // the survivor's remaining match length is a clean prefix
+        let m = ix.lookup(0, &long);
+        assert!(m == 8 || m == 4, "leaf-first eviction truncates, never holes: {m}");
+        assert_eq!(ix.lookup(0, &toks(4, 500)), 4, "the fresh insert survives");
+        // budget is never exceeded under sustained churn
+        for salt in 0..50 {
+            ix.insert(0, &toks(8, 1000 + salt));
+            assert!(
+                ix.replica_bytes(0) <= ix.cfg().kv_bytes_budget,
+                "over budget: {} > {}",
+                ix.replica_bytes(0),
+                ix.cfg().kv_bytes_budget
+            );
+        }
+    }
+
+    #[test]
+    fn touch_refreshes_lru_order() {
+        let mut ix = KvPrefixIndex::new(cfg(4, 8), 1); // 2-block budget
+        let hot = toks(4, 0);
+        let cold = toks(4, 100);
+        ix.insert(0, &hot);
+        ix.insert(0, &cold);
+        ix.touch(0, &hot); // hot is now newest despite older insert
+        ix.insert(0, &toks(4, 200)); // evicts one: must be cold
+        assert_eq!(ix.lookup(0, &hot), 4, "touched chain survives eviction");
+        assert_eq!(ix.lookup(0, &cold), 0);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut ix = KvPrefixIndex::new(cfg(4, 16), 2);
+            for i in 0..30 {
+                ix.insert(i % 2, &toks(8 + (i % 3) * 4, i as i32));
+            }
+            (ix.stats(), ix.replica_blocks(0), ix.replica_blocks(1))
+        };
+        assert_eq!(run(), run(), "logical-tick LRU must replay identically");
+    }
+
+    #[test]
+    fn disabled_index_is_inert_and_free() {
+        let mut ix = KvPrefixIndex::new(KvCacheCfg::disabled(), 4);
+        ix.insert(0, &toks(64, 0));
+        ix.set_version(0, 9);
+        ix.touch(0, &toks(64, 0));
+        assert_eq!(ix.stats(), KvIndexStats::default());
+        assert_eq!(ix.replica_bytes(0), 0);
+    }
+}

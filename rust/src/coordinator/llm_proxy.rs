@@ -84,6 +84,19 @@ pub struct GenerationTask {
     /// predictor classified this rollout into the long class — admitted
     /// under the long-work reservation instead of shortest-first
     pub long_class: bool,
+    /// conversation identity for multi-turn agentic episodes: every
+    /// turn of one episode carries the same key (the engine stamps
+    /// `Episode::group_key`, like PR 7 stamped `group`), so the pool's
+    /// KV-prefix index can route a returning turn to the replica still
+    /// holding the conversation's KV state. 0 = no conversation
+    /// affinity (single-turn callers).
+    pub conversation: u64,
+    /// tokens of this task's `prompt ++ prefix` the *target* replica
+    /// already holds in KV cache, stamped by the fleet at dispatch from
+    /// the prefix index (0 = no match / index disabled). The proxy
+    /// skips re-prefill for the covered portion: only the uncovered
+    /// delta is billed to `prefill`/`prefill_replay` attribution.
+    pub cached_prefix: usize,
     /// where the completion ([`ProxyEvent::Done`]) is delivered. The
     /// fleet points every replica-side task at the replica's collector
     /// channel, which also receives the RECLAIM answers — one FIFO
@@ -104,6 +117,8 @@ impl GenerationTask {
             group: 0,
             predicted_len: 0,
             long_class: false,
+            conversation: 0,
+            cached_prefix: 0,
             reply,
         }
     }
@@ -212,6 +227,7 @@ impl ProxyEvent {
 pub struct TokenLedger {
     wasted: AtomicU64,
     salvaged: AtomicU64,
+    prefix_hit: AtomicU64,
 }
 
 impl TokenLedger {
@@ -223,10 +239,18 @@ impl TokenLedger {
         self.salvaged.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Prompt/prefix tokens a dispatch found already KV-resident on its
+    /// target replica (the KV-prefix index match) — prefill work the
+    /// fleet did NOT have to redo. Charged by the pool at dispatch.
+    pub fn add_prefix_hit(&self, n: u64) {
+        self.prefix_hit.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> TokenStats {
         TokenStats {
             wasted_tokens: self.wasted.load(Ordering::Relaxed),
             salvaged_tokens: self.salvaged.load(Ordering::Relaxed),
+            prefix_hit_tokens: self.prefix_hit.load(Ordering::Relaxed),
         }
     }
 }
@@ -283,6 +307,10 @@ pub struct TokenStats {
     /// decoded tokens carried to a resumed attempt by migration or
     /// dead-replica resubmission
     pub salvaged_tokens: u64,
+    /// prompt/prefix tokens found already KV-resident on the dispatch
+    /// target (KV-prefix index hits) — re-prefill work avoided by
+    /// cache-aware routing
+    pub prefix_hit_tokens: u64,
 }
 
 enum Cmd {
@@ -1016,7 +1044,15 @@ fn proxy_loop(
                     row.fill(0);
                     row[..pl].copy_from_slice(&req.task.prompt[..pl]);
                     row[pl..pl + tokens.len()].copy_from_slice(&tokens);
-                    if tokens.is_empty() {
+                    // re-prefill owed: the router may have placed this
+                    // task on a replica whose KV cache already covers
+                    // part of `prompt ++ prefix` (the pool stamped the
+                    // match length at dispatch); only the uncovered
+                    // delta is billed. A resumed task whose whole
+                    // accumulated response is cache-covered rebuilds
+                    // nothing — its admission is NOT a replay.
+                    let covered = req.task.cached_prefix.min(pl + tokens.len());
+                    if tokens.is_empty() || covered >= pl + tokens.len() {
                         admitted_fresh = true;
                     } else {
                         // the KV rebuild of a salvaged prefix: the
@@ -1175,7 +1211,11 @@ mod tests {
         l.add_wasted(5);
         l.add_salvaged(3);
         l.add_wasted(2);
-        assert_eq!(l.stats(), TokenStats { wasted_tokens: 7, salvaged_tokens: 3 });
+        l.add_prefix_hit(11);
+        assert_eq!(
+            l.stats(),
+            TokenStats { wasted_tokens: 7, salvaged_tokens: 3, prefix_hit_tokens: 11 }
+        );
     }
 
     #[test]

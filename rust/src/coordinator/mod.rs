@@ -34,6 +34,7 @@
 pub mod async_controller;
 pub mod autoscaler;
 pub mod fleet;
+pub mod kv_index;
 pub mod length_predictor;
 pub mod llm_proxy;
 #[cfg(test)]
@@ -45,6 +46,7 @@ pub mod sample_buffer;
 pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
 pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
+pub use kv_index::{KvCacheCfg, KvIndexStats, KvPrefixIndex};
 pub use length_predictor::{LengthPredictor, LengthSnapshot, PredictorCfg, QuantileSketch};
 pub use llm_proxy::{
     GenResult, GenerationTask, LlmProxy, ProgressGossip, ProxyClient, ProxyEvent, ProxyReport,
@@ -126,6 +128,10 @@ pub struct RolloutSystemCfg {
     /// YAML / CLI): feeds TailAware routing, the proxy's two-class
     /// admission, and the autoscaler's adaptive target
     pub predictor: PredictorCfg,
+    /// fleet-wide KV-prefix index + cache-aware routing (`kv_cache:
+    /// {…}` in YAML / CLI; disabled by default — placement, admission,
+    /// and accounting stay byte-identical to the legacy stack)
+    pub kv_cache: KvCacheCfg,
 }
 
 impl RolloutSystemCfg {
@@ -152,6 +158,7 @@ impl RolloutSystemCfg {
         );
         self.autoscale.validate()?;
         self.predictor.validate()?;
+        self.kv_cache.validate()?;
         anyhow::ensure!(
             !self.trace.enabled || self.trace.ring_capacity > 0,
             "trace.ring_capacity must be > 0 when tracing is enabled"
@@ -229,6 +236,7 @@ impl RolloutSystem {
             reclaim_in_place: cfg.reclaim_in_place,
             trace: cfg.trace.clone(),
             predictor: cfg.predictor,
+            kv_cache: cfg.kv_cache,
         };
         let proxy = Arc::new(LlmProxyPool::spawn(
             &pool_cfg,
@@ -307,6 +315,7 @@ mod tests {
             autoscale: AutoscaleCfg::disabled(),
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
+            kv_cache: KvCacheCfg::disabled(),
         }
     }
 

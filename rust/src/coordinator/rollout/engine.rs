@@ -664,6 +664,13 @@ impl EngineLoop {
         // prompt-group identity for the pool's length predictor: members
         // of the same env group share a generation-length distribution
         task.group = ep.group as u64;
+        // conversation identity for the pool's KV-prefix index: one
+        // multi-turn episode instance is (group_key, member), so every
+        // turn of the same conversation carries the same stamp and the
+        // cache-aware router can send its growing context back to the
+        // replica that already holds it
+        task.conversation =
+            ep.group_key.wrapping_mul(0x9e3779b97f4a7c15) ^ (ep.member as u64 + 1);
         let submitted = self.backend.submit(task);
         let Some(gen_id) = submitted else {
             // the whole inference fleet is dead: this lane can never

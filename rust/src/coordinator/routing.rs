@@ -67,16 +67,25 @@ pub struct ReplicaLoad {
     pub predicted_remaining: f64,
 }
 
-/// Per-request routing hint derived from the `LengthPredictor`:
-/// how long this rollout is expected to run and which admission class
-/// it falls in. `None`/default (cold predictor) degrades `TailAware`
-/// to shortest-predicted-remaining over all replicas.
-#[derive(Clone, Copy, Debug, Default)]
+/// Per-request routing hint derived from the `LengthPredictor` and the
+/// pool's KV-prefix index: how long this rollout is expected to run,
+/// which admission class it falls in, and how much of its
+/// `prompt ++ prefix` each replica already holds in KV. `None`/default
+/// (cold predictor, disabled index) degrades `TailAware` to
+/// shortest-predicted-remaining over all replicas and leaves every
+/// policy's placement byte-identical to the unhinted router.
+#[derive(Clone, Debug, Default)]
 pub struct RouteHint {
     /// predicted tokens still to generate for this request
     pub predicted_len: f64,
     /// predictor classified this rollout into the long class
     pub long: bool,
+    /// per-replica cached-prefix match length in tokens, indexed by
+    /// replica slot (`KvPrefixIndex::lookup` of the task's
+    /// `prompt ++ prefix`). Empty (the default) = no cache preference:
+    /// the cache-aware override is skipped entirely and every policy
+    /// routes exactly as before the index existed.
+    pub cached: Vec<usize>,
 }
 
 /// Request-placement policy (`route_policy` in YAML / CLI).
@@ -187,9 +196,11 @@ impl Router {
         self.route_excluding_hinted(loads, None, None)
     }
 
-    /// [`route`](Self::route) with a per-request length hint. Only
-    /// `TailAware` reads the hint; every other policy ignores it, so
-    /// callers can pass whatever the predictor knows unconditionally.
+    /// [`route`](Self::route) with a per-request hint. `TailAware`
+    /// reads the length class; every policy honors a non-empty
+    /// `cached` vector as a placement override (longest matching
+    /// cached prefix wins, work-conserving); otherwise the hint is
+    /// ignored, so callers can pass whatever they know unconditionally.
     pub fn route_hinted(&mut self, loads: &[ReplicaLoad], hint: Option<RouteHint>) -> Option<usize> {
         self.route_excluding_hinted(loads, None, hint)
     }
@@ -227,6 +238,33 @@ impl Router {
             return None;
         }
         let eligible = |i: usize| !loads[i].suspended && Some(i) != exclude;
+        // Cache-aware override (the KV-prefix index): if the hint names
+        // replicas already holding part of this request's prefix, the
+        // longest match wins — provided it is eligible AND has a free
+        // decode slot (work-conserving: a hot replica's full window
+        // never wedges the request; it falls through to the base
+        // policy). Ties break on fewer outstanding, then lowest index.
+        // An empty `cached` vector (disabled index, non-engine caller)
+        // skips this entirely, keeping legacy placement byte-identical.
+        if let Some(h) = hint.as_ref() {
+            if !h.cached.is_empty() {
+                let best = (0..n)
+                    .filter(|&i| {
+                        eligible(i)
+                            && loads[i].outstanding < loads[i].slots
+                            && h.cached.get(i).copied().unwrap_or(0) > 0
+                    })
+                    .max_by(|&a, &b| {
+                        h.cached[a]
+                            .cmp(&h.cached[b])
+                            .then(loads[b].outstanding.cmp(&loads[a].outstanding))
+                            .then(b.cmp(&a))
+                    });
+                if best.is_some() {
+                    return best;
+                }
+            }
+        }
         match self.policy {
             RoutePolicy::RoundRobin => {
                 for k in 0..n {
@@ -276,7 +314,7 @@ impl Router {
                                 .then(a.cmp(&b))
                         })
                 };
-                let (preferred, other) = if hint.is_some_and(|h| h.long) {
+                let (preferred, other) = if hint.as_ref().is_some_and(|h| h.long) {
                     (long_pool, short_pool)
                 } else {
                     (short_pool, long_pool)
@@ -315,11 +353,16 @@ mod tests {
     }
 
     fn long_hint() -> Option<RouteHint> {
-        Some(RouteHint { predicted_len: 10_000.0, long: true })
+        Some(RouteHint { predicted_len: 10_000.0, long: true, ..Default::default() })
     }
 
     fn short_hint() -> Option<RouteHint> {
-        Some(RouteHint { predicted_len: 100.0, long: false })
+        Some(RouteHint { predicted_len: 100.0, long: false, ..Default::default() })
+    }
+
+    /// Hint carrying only a per-replica cached-prefix column.
+    fn cache_hint(cached: &[usize]) -> Option<RouteHint> {
+        Some(RouteHint { cached: cached.to_vec(), ..Default::default() })
     }
 
     #[test]
@@ -543,6 +586,81 @@ mod tests {
             let l = loads(&[2, 0, 1], 4);
             assert_eq!(hinted.route_hinted(&l, long_hint()), plain.route(&l), "{p:?}");
         }
+    }
+
+    #[test]
+    fn empty_cached_hint_is_byte_identical_for_every_policy() {
+        // the legacy guarantee: a hint without cache information (the
+        // only kind that exists when `kv_cache` is disabled) must not
+        // perturb any policy's decision sequence, cursor included
+        for p in RoutePolicy::ALL {
+            let mut hinted = Router::new(p);
+            let mut plain = Router::new(p);
+            for l in [loads(&[2, 0, 1], 4), loads(&[0, 0, 0], 4), loads(&[4, 4, 1], 4)] {
+                for _ in 0..5 {
+                    assert_eq!(
+                        hinted.route_hinted(&l, cache_hint(&[])),
+                        plain.route(&l),
+                        "{p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_override_prefers_longest_matching_prefix() {
+        // replica 2 holds the longest cached prefix: every policy sends
+        // the request there, whatever its own score says
+        for p in RoutePolicy::ALL {
+            let mut r = Router::new(p);
+            let l = loads(&[0, 1, 2], 4);
+            assert_eq!(r.route_hinted(&l, cache_hint(&[64, 128, 512])), Some(2), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn cache_override_is_work_conserving() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        // best-cached replica 2 has a full decode window: the override
+        // falls to the next cached replica with a free slot
+        let l = loads(&[0, 1, 4], 4);
+        assert_eq!(r.route_hinted(&l, cache_hint(&[0, 128, 512])), Some(1));
+        // every cached replica is full: fall through to the base policy
+        // rather than wedging behind the hot replica
+        let l = loads(&[0, 4, 4], 4);
+        assert_eq!(r.route_hinted(&l, cache_hint(&[0, 128, 512])), Some(0));
+        // saturated QueueSched fleet: cached-but-full holds in queue
+        let mut q = Router::new(RoutePolicy::QueueSched);
+        let l = loads(&[4, 4, 4], 4);
+        assert_eq!(q.route_hinted(&l, cache_hint(&[0, 0, 512])), None);
+    }
+
+    #[test]
+    fn cache_override_ties_break_on_outstanding_then_index() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        // equal match length: fewer outstanding wins
+        let l = loads(&[3, 1, 2], 4);
+        assert_eq!(r.route_hinted(&l, cache_hint(&[256, 256, 0])), Some(1));
+        // full tie: lowest index (deterministic)
+        let l = loads(&[1, 1, 1], 4);
+        assert_eq!(r.route_hinted(&l, cache_hint(&[256, 256, 256])), Some(0));
+    }
+
+    #[test]
+    fn cache_override_honors_exclusion_and_suspension() {
+        let mut r = Router::new(RoutePolicy::LeastOutstanding);
+        // the cached replica is the one being migrated away from:
+        // exclusion is hard, cache preference never resurrects it
+        let l = loads(&[0, 5], 4);
+        assert_eq!(r.route_excluding_hinted(&l, Some(0), cache_hint(&[512, 0])), Some(1));
+        // suspended mid weight-sync: same
+        let mut l = loads(&[0, 5], 4);
+        l[0].suspended = true;
+        assert_eq!(r.route_hinted(&l, cache_hint(&[512, 0])), Some(1));
+        // a short cached column never panics on a larger fleet
+        let l = loads(&[5, 5, 0], 4);
+        assert_eq!(r.route_hinted(&l, cache_hint(&[0, 9])), Some(1));
     }
 
     #[test]

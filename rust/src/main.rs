@@ -14,6 +14,8 @@
 //!                     predictor_beta=0.2 predictor_sketch=64 \
 //!                     predictor_quantile=0.8 predictor_min_samples=8 \
 //!                     predictor_default_len=256 \
+//!                     kv_cache=true kv_block_tokens=16 kv_bytes_budget=67108864 \
+//!                     kv_bytes_per_token=4096 kv_invalidate_on_sync=true \
 //!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
@@ -24,8 +26,8 @@ use anyhow::Result;
 use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
 use roll_flash::coordinator::{
-    format_log, run_training, AutoscaleCfg, ControllerCfg, PredictorCfg, RolloutSystem,
-    RolloutSystemCfg, RoutePolicy, TraceCfg,
+    format_log, run_training, AutoscaleCfg, ControllerCfg, KvCacheCfg, PredictorCfg,
+    RolloutSystem, RolloutSystemCfg, RoutePolicy, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
@@ -50,6 +52,8 @@ fn main() -> Result<()> {
                  \u{20}         adaptive_target=<bool> decode_knee=<f>\n\
                  \u{20}         predictor_beta=<f> predictor_sketch=<n> predictor_quantile=<f>\n\
                  \u{20}         predictor_min_samples=<n> predictor_default_len=<f>\n\
+                 \u{20}         kv_cache=<bool> kv_block_tokens=<n> kv_bytes_budget=<n>\n\
+                 \u{20}         kv_bytes_per_token=<n> kv_invalidate_on_sync=<bool>\n\
                  \u{20}         trace=<bool> trace_ring=<n> trace_path=<dir>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
@@ -103,6 +107,14 @@ fn train(cli: &Cli) -> Result<()> {
         min_samples: cli.parse_or("predictor_min_samples", cfg.predictor.min_samples),
         default_len: cli.parse_or("predictor_default_len", cfg.predictor.default_len),
     };
+    let kv_cache = KvCacheCfg {
+        enabled: cli.bool_or("kv_cache", cfg.kv_cache.enabled),
+        block_tokens: cli.parse_or("kv_block_tokens", cfg.kv_cache.block_tokens),
+        kv_bytes_budget: cli.parse_or("kv_bytes_budget", cfg.kv_cache.kv_bytes_budget),
+        bytes_per_token: cli.parse_or("kv_bytes_per_token", cfg.kv_cache.bytes_per_token),
+        invalidate_on_weight_sync: cli
+            .bool_or("kv_invalidate_on_sync", cfg.kv_cache.invalidate_on_weight_sync),
+    };
     // a trace_path on the CLI implies tracing, like the YAML block
     let trace = TraceCfg {
         enabled: cli.bool_or("trace", cfg.trace.enabled || cli.get("trace_path").is_some()),
@@ -143,6 +155,7 @@ fn train(cli: &Cli) -> Result<()> {
         autoscale,
         trace,
         predictor,
+        kv_cache,
     };
     fleet.validate()?;
     println!(
@@ -203,6 +216,15 @@ fn train(cli: &Cli) -> Result<()> {
             );
         }
         print!("{}", report.pool.format_table());
+    }
+    if kv_cache.enabled {
+        println!(
+            "kv cache: {} hits / {} misses, {} prefix tokens reused, {} blocks evicted",
+            report.pool.kv_hits,
+            report.pool.kv_misses,
+            report.pool.kv_hit_tokens,
+            report.pool.kv_evictions
+        );
     }
     if let Some(p) = &trace_export {
         println!(

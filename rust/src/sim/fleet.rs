@@ -33,6 +33,12 @@
 //!     (`prefill_time_per_token`, the KV rebuild a real engine pays on
 //!     resume); the from-scratch arm re-decodes everything and burns
 //!     the progress into `wasted_tokens`;
+//!   * *fleet-wide KV-prefix reuse* (`kv_cache.enabled`): each replica
+//!     caches conversation KV under a byte budget; routing prefers the
+//!     replica holding the longest cached prefix (the same cache-aware
+//!     override the real `Router` applies), so multi-turn follow-ups
+//!     (`multi_turn` > 1) and in-place salvage resume where the KV
+//!     lives and replay only the *uncached* context through prefill;
 //!   * *elastic autoscaling* (`autoscale: Some(cfg)`): the *same*
 //!     `coordinator::autoscaler::decide` function that drives the real
 //!     pool runs on the virtual clock, growing the fleet into bursts
@@ -54,6 +60,7 @@ use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
+use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
 use crate::coordinator::routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
 use crate::metrics::trace::{AttrSnapshot, EventPhase, FlightRecorder};
@@ -110,6 +117,18 @@ pub struct FleetSimConfig {
     /// seconds per salvaged token replayed through prefill when a
     /// resumed request re-dispatches (the KV rebuild bill; 0 = free)
     pub prefill_time_per_token: f64,
+    /// fleet-wide KV-prefix reuse (mirrors `PoolCfg::kv_cache`): each
+    /// replica caches conversation KV up to `budget_tokens()`, routing
+    /// prefers the replica holding the longest cached prefix, and only
+    /// the uncached portion of a request's context is replayed through
+    /// prefill at placement. Disabled by default — the legacy event
+    /// sequence is untouched.
+    pub kv_cache: KvCacheCfg,
+    /// turns per conversation for closed-loop clients: each completion
+    /// chains a follow-up request whose context is the conversation so
+    /// far (multi-turn agentic episodes). 1 = the legacy single-turn
+    /// workload; open-loop arrivals always start fresh conversations.
+    pub multi_turn: usize,
     /// open-loop bursty arrivals; `None` = closed-loop clients
     pub arrivals: Option<BurstTrace>,
     /// elastic fleet: run `coordinator::autoscaler::decide` on the
@@ -152,6 +171,8 @@ impl FleetSimConfig {
             // ~40x faster than the 8 ms/token decode: a realistic KV
             // rebuild rate, so salvage is cheap but not free
             prefill_time_per_token: 2e-4,
+            kv_cache: KvCacheCfg::disabled(),
+            multi_turn: 1,
             arrivals: None,
             autoscale: None,
             trace: None,
@@ -210,6 +231,16 @@ pub struct FleetSimReport {
     /// salvaged tokens replayed through prefill on re-dispatch (each
     /// costs `prefill_time_per_token` of extra decode-equivalent work)
     pub prefill_replay_tokens: f64,
+    /// placements that found cached conversation KV on the chosen
+    /// replica (kv_cache arm only)
+    pub kv_hits: u64,
+    /// context-bearing placements that found no cached prefix
+    pub kv_misses: u64,
+    /// context tokens served from a replica's KV cache instead of
+    /// being replayed through prefill
+    pub kv_hit_tokens: f64,
+    /// cached conversations dropped to stay under the KV byte budget
+    pub kv_evictions: u64,
     /// autoscaler grow actions (replicas added)
     pub scale_ups: usize,
     /// autoscaler shrink actions (replicas drained)
@@ -261,6 +292,13 @@ struct PendReq {
     avoid: Option<usize>,
     group: u64,
     passes: u32,
+    /// conversation identity — the KV-reuse key (fresh requests open
+    /// their own conversation: `conv == id`)
+    conv: u64,
+    /// context tokens decoded in earlier turns / before a salvage:
+    /// served from a replica's KV cache when routed there, replayed
+    /// through prefill otherwise
+    ctx: f64,
 }
 
 pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
@@ -278,6 +316,17 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     // replaying a salvaged token through prefill costs this many
     // decode-equivalent work units
     let prefill_ratio = cfg.prefill_time_per_token / cfg.decode.token_time;
+    if cfg.kv_cache.enabled {
+        cfg.kv_cache.validate().expect("invalid kv cache cfg");
+    }
+    let kv_on = cfg.kv_cache.enabled;
+    // per-replica conversation KV cache: conv -> (cached context
+    // tokens, LRU tick). The budget is token-denominated, mirroring
+    // the real index's kv_bytes_budget / bytes_per_token.
+    let kv_budget = cfg.kv_cache.budget_tokens() as f64;
+    let mut kv_store: Vec<HashMap<u64, (f64, u64)>> = vec![HashMap::new(); max_slots];
+    let mut kv_held: Vec<f64> = vec![0.0; max_slots];
+    let mut kv_tick: u64 = 0;
 
     let slow_factor = |r: usize| match cfg.slow_replica {
         Some((slow, f)) if slow == r => f.max(1e-9),
@@ -311,6 +360,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut pending: VecDeque<PendReq> = VecDeque::new();
     // id -> (submit time, total tokens, prompt group)
     let mut submit_time: HashMap<u64, (f64, f64, u64)> = HashMap::new();
+    // id -> (conversation, turn number, context tokens at dispatch)
+    let mut conv_of: HashMap<u64, (u64, u32, f64)> = HashMap::new();
     // id -> placement time: the router's EWMA feed measures dispatch->
     // completion, matching the real pool (InFlight::dispatched), not
     // pool-queue wait
@@ -348,17 +399,23 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let scale_interval = scale_cfg.map(|a| a.interval).unwrap_or(f64::INFINITY);
     let mut next_scale = scale_interval;
 
+    // `chain` continues an existing conversation: (conv, turn, ctx) of
+    // the follow-up; `None` opens a fresh single-context conversation
     let new_request = |pending: &mut VecDeque<PendReq>,
                            submit_time: &mut HashMap<u64, (f64, f64, u64)>,
+                           conv_of: &mut HashMap<u64, (u64, u32, f64)>,
                            next_id: &mut u64,
                            rng: &mut Rng,
-                           now: f64| {
+                           now: f64,
+                           chain: Option<(u64, u32, f64)>| {
         let len = cfg.lengths.sample(rng);
         let tokens =
             cfg.decode.effective_tokens(len) + cfg.decode.prefill_time / cfg.decode.token_time;
         let group = tokens.max(1.0).log2() as u64;
-        pending.push_back(PendReq { id: *next_id, tokens, avoid: None, group, passes: 0 });
+        let (conv, turn, ctx) = chain.unwrap_or((*next_id, 1, 0.0));
+        pending.push_back(PendReq { id: *next_id, tokens, avoid: None, group, passes: 0, conv, ctx });
         submit_time.insert(*next_id, (now, tokens, group));
+        conv_of.insert(*next_id, (conv, turn, ctx));
         if let Some(r) = rec {
             r.emit_at(
                 "submit",
@@ -404,6 +461,94 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             if cfg.hang_timeout > 0.0 {
                 watchdogs.push(Reverse((T($now + cfg.hang_timeout), $id, $r)));
             }
+        }};
+    }
+
+    // conversation-KV bookkeeping (all no-ops while kv_cache is off)
+    macro_rules! kv_lookup {
+        ($r:expr, $conv:expr) => {
+            kv_store[$r].get(&$conv).map(|&(t, _)| t).unwrap_or(0.0)
+        };
+    }
+    macro_rules! kv_insert {
+        ($r:expr, $conv:expr, $ctx:expr) => {{
+            if kv_on && serving[$r] && $ctx > 0.0 {
+                kv_tick += 1;
+                let prev =
+                    kv_store[$r].insert($conv, ($ctx, kv_tick)).map(|(t, _)| t).unwrap_or(0.0);
+                kv_held[$r] += $ctx - prev;
+                // LRU-evict whole conversations until back under
+                // budget (deterministic: full min over (tick, conv))
+                while kv_held[$r] > kv_budget && !kv_store[$r].is_empty() {
+                    let victim = kv_store[$r]
+                        .iter()
+                        .map(|(&c, &(_, tick))| (tick, c))
+                        .min()
+                        .map(|(_, c)| c)
+                        .unwrap();
+                    let (t, _) = kv_store[$r].remove(&victim).unwrap();
+                    kv_held[$r] -= t;
+                    report.kv_evictions += 1;
+                }
+            }
+        }};
+    }
+    macro_rules! kv_invalidate {
+        ($r:expr) => {{
+            if kv_on {
+                kv_store[$r].clear();
+                kv_held[$r] = 0.0;
+            }
+        }};
+    }
+    // place a request, serving its conversation context from the
+    // chosen replica's KV cache where possible and replaying the rest
+    // through prefill — the charge the real proxy skips on a prefix hit
+    macro_rules! kv_place {
+        ($r:expr, $e:expr, $now:expr) => {{
+            let e: PendReq = $e;
+            let mut service = e.tokens;
+            if e.ctx > 0.0 {
+                let cached = if kv_on { kv_lookup!($r, e.conv).min(e.ctx) } else { 0.0 };
+                let replay = (e.ctx - cached).max(0.0);
+                if cached > 0.0 {
+                    report.kv_hits += 1;
+                    report.kv_hit_tokens += cached;
+                    kv_tick += 1;
+                    if let Some(entry) = kv_store[$r].get_mut(&e.conv) {
+                        entry.1 = kv_tick;
+                    }
+                    if let Some(rec) = rec {
+                        rec.emit_at(
+                            "kv_hit",
+                            EventPhase::Instant,
+                            e.id,
+                            Some($r),
+                            0,
+                            0,
+                            $now,
+                            format!("cached={cached:.0}"),
+                        );
+                    }
+                } else if kv_on {
+                    report.kv_misses += 1;
+                    if let Some(rec) = rec {
+                        rec.emit_at(
+                            "kv_miss",
+                            EventPhase::Instant,
+                            e.id,
+                            Some($r),
+                            0,
+                            0,
+                            $now,
+                            String::new(),
+                        );
+                    }
+                }
+                report.prefill_replay_tokens += replay;
+                service += replay * prefill_ratio;
+            }
+            place!($r, e.id, service, $now);
         }};
     }
 
@@ -480,15 +625,55 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     }
                 };
                 let e = pending[idx];
+                // cache-aware routing: per-replica cached-context view
+                // for this conversation. All-zero collapses to an empty
+                // vec — policies keep their legacy pick byte-identically
+                let cached_per: Vec<usize> = if kv_on && e.ctx > 0.0 {
+                    let per: Vec<usize> = (0..replicas.len())
+                        .map(|r| {
+                            if serving[r] && !paused[r] {
+                                kv_lookup!(r, e.conv).min(e.ctx) as usize
+                            } else {
+                                0
+                            }
+                        })
+                        .collect();
+                    if per.iter().all(|&c| c == 0) {
+                        Vec::new()
+                    } else {
+                        per
+                    }
+                } else {
+                    Vec::new()
+                };
                 let hint = if tail_aware {
                     let pred = predictor.predict(e.group);
-                    Some(RouteHint { predicted_len: pred, long: predictor.classify(pred) })
+                    Some(RouteHint {
+                        predicted_len: pred,
+                        long: predictor.classify(pred),
+                        cached: cached_per,
+                    })
+                } else if !cached_per.is_empty() {
+                    Some(RouteHint { cached: cached_per, ..RouteHint::default() })
                 } else {
                     None
                 };
-                let picked = match router.route_excluding_hinted(&loads, e.avoid, hint) {
+                // a salvaged request's avoid preference is dropped when
+                // the avoided replica holds the longest cached prefix
+                // (mirrors Shared::drain): resuming where the KV lives
+                // beats avoiding the reclaim source
+                let mut avoid = e.avoid;
+                if let (Some(a), Some(h)) = (avoid, hint.as_ref()) {
+                    if !h.cached.is_empty() {
+                        let at_avoid = h.cached.get(a).copied().unwrap_or(0);
+                        if at_avoid > 0 && h.cached.iter().all(|&c| c <= at_avoid) {
+                            avoid = None;
+                        }
+                    }
+                }
+                let picked = match router.route_excluding_hinted(&loads, avoid, hint.clone()) {
                     Some(r) => Some(r),
-                    None if e.avoid.is_some() => router.route_hinted(&loads, hint),
+                    None if avoid.is_some() => router.route_hinted(&loads, hint.clone()),
                     None => None,
                 };
                 let Some(r) = picked else { break };
@@ -505,32 +690,45 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         long_ids.insert(e.id);
                     }
                 }
-                place!(r, e.id, e.tokens, $now);
+                kv_place!(r, e, $now);
             }
             report.pool_queue_max = report.pool_queue_max.max(pending.len());
         }};
     }
 
-    // fold an aborted request's progress into its resubmission size:
+    // fold an aborted request's progress into its resubmission:
     // salvage keeps the remaining work plus the prefill replay of the
-    // decoded prefix; from-scratch re-decodes everything
+    // decoded prefix; from-scratch re-decodes everything. Evaluates to
+    // (resubmit tokens, new context). With the KV index on, the
+    // decoded prefix stays resident in the source replica's cache
+    // (unless the source is retiring) and joins the request's context
+    // instead of being charged here — the replay bill is paid at
+    // re-placement against whatever cache the router finds, which is
+    // what makes salvage (near) free when the request resumes in place.
     macro_rules! salvage_resubmit {
-        ($assigned:expr, $remaining:expr) => {{
+        ($assigned:expr, $remaining:expr, $conv:expr, $ctx:expr, $src:expr, $keep_src:expr) => {{
             let decoded = ($assigned - $remaining).max(0.0);
             if cfg.partial_migration && decoded >= cfg.min_salvage_tokens {
                 report.salvaged_tokens += decoded;
-                report.prefill_replay_tokens += decoded;
-                $remaining.max(1e-9) + decoded * prefill_ratio
+                if kv_on {
+                    if $keep_src {
+                        kv_insert!($src, $conv, $ctx + decoded);
+                    }
+                    ($remaining.max(1e-9), $ctx + decoded)
+                } else {
+                    report.prefill_replay_tokens += decoded;
+                    ($remaining.max(1e-9) + decoded * prefill_ratio, $ctx)
+                }
             } else {
                 report.wasted_tokens += decoded;
-                $assigned
+                ($assigned, $ctx)
             }
         }};
     }
 
     if cfg.arrivals.is_none() {
         for _ in 0..cfg.clients.min(cfg.total_requests) {
-            new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+            new_request(&mut pending, &mut submit_time, &mut conv_of, &mut next_id, &mut rng, now, None);
             submitted += 1;
         }
         dispatch!(now);
@@ -603,7 +801,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
                     let assigned = work_left.get(&id).copied().unwrap_or(remaining);
                     report.migrations += 1;
-                    let resubmit = salvage_resubmit!(assigned, remaining);
+                    let (conv, turn, ctx) = conv_of.get(&id).copied().unwrap_or((id, 1, 0.0));
+                    let (resubmit, new_ctx) =
+                        salvage_resubmit!(assigned, remaining, conv, ctx, r, true);
+                    conv_of.insert(id, (conv, turn, new_ctx));
                     if let Some(rec) = rec {
                         rec.emit_at(
                             "salvage",
@@ -616,7 +817,19 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                             format!("migrate to={new_r} decoded={:.0}", assigned - remaining),
                         );
                     }
-                    place!(new_r, id, resubmit, now);
+                    kv_place!(
+                        new_r,
+                        PendReq {
+                            id,
+                            tokens: resubmit,
+                            avoid: None,
+                            group: 0,
+                            passes: 0,
+                            conv,
+                            ctx: new_ctx,
+                        },
+                        now
+                    );
                 } else if peers && cfg.reclaim_in_place {
                     // pause/rebalance without moving: the salvaged
                     // request joins the pool queue and escapes to
@@ -625,7 +838,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     let remaining = replicas[r].abort(id, now).unwrap_or(0.0);
                     let assigned = work_left.get(&id).copied().unwrap_or(remaining);
                     report.reclaims_in_place += 1;
-                    let resubmit = salvage_resubmit!(assigned, remaining);
+                    let (conv, turn, ctx) = conv_of.get(&id).copied().unwrap_or((id, 1, 0.0));
+                    let (resubmit, new_ctx) =
+                        salvage_resubmit!(assigned, remaining, conv, ctx, r, true);
+                    conv_of.insert(id, (conv, turn, new_ctx));
                     if let Some(rec) = rec {
                         rec.emit_at(
                             "salvage",
@@ -650,6 +866,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         avoid: Some(r),
                         group,
                         passes: 0,
+                        conv,
+                        ctx: new_ctx,
                     });
                     dispatch!(now);
                 } else {
@@ -662,7 +880,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             EV_ARRIVE => {
                 // --- open-loop arrival --------------------------------
                 now = next_arrival;
-                new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+                new_request(&mut pending, &mut submit_time, &mut conv_of, &mut next_id, &mut rng, now, None);
                 submitted += 1;
                 if let Some(trace) = &cfg.arrivals {
                     next_arrival = trace.next_arrival(now, &mut rng);
@@ -678,7 +896,11 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 pred_of.remove(&id);
                 long_ids.remove(&id);
                 let (t_submit, tokens, group) = submit_time.remove(&id).unwrap_or((now, 0.0, 0));
+                let (conv, turn, ctx) = conv_of.remove(&id).unwrap_or((id, 1, 0.0));
                 let assigned = work_left.remove(&id).unwrap_or(tokens);
+                // the finished turn's KV stays resident on its replica:
+                // the conversation's next turn can resume here for free
+                kv_insert!(r, conv, ctx + tokens);
                 let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
                 // every virtual completion feeds the shared length
                 // predictor, exactly like the real pool's collectors
@@ -703,9 +925,16 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 }
                 latencies.push(now - t_submit);
                 completed += 1;
-                // closed loop: the freed client submits its next task
+                // closed loop: the freed client submits its next task —
+                // the conversation's follow-up turn while it has turns
+                // left, a fresh conversation otherwise
                 if cfg.arrivals.is_none() && submitted < cfg.total_requests {
-                    new_request(&mut pending, &mut submit_time, &mut next_id, &mut rng, now);
+                    let chain = if (turn as usize) < cfg.multi_turn.max(1) {
+                        Some((conv, turn + 1, ctx + tokens))
+                    } else {
+                        None
+                    };
+                    new_request(&mut pending, &mut submit_time, &mut conv_of, &mut next_id, &mut rng, now, chain);
                     submitted += 1;
                 }
                 dispatch!(now);
@@ -752,6 +981,9 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                 serving[slot] = true;
                                 activated[slot] = now;
                                 router.reset_replica(slot);
+                                // a revived slot comes up cold, like the
+                                // real pool's add_replica slot reuse
+                                kv_invalidate!(slot);
                             } else if replicas.len() < max_slots {
                                 replicas.push(make_pool(replicas.len()));
                                 paused.push(false);
@@ -807,6 +1039,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                             serving[victim] = false;
                             report.replica_seconds += now - activated[victim];
                             report.scale_downs += 1;
+                            // a retiring replica's KV dies with it
+                            kv_invalidate!(victim);
                             if let Some(rec) = rec {
                                 rec.emit_at(
                                     "retire",
@@ -834,7 +1068,12 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                     replicas[victim].abort(id, now).unwrap_or(0.0);
                                 let assigned =
                                     work_left.get(&id).copied().unwrap_or(remaining);
-                                let resubmit = salvage_resubmit!(assigned, remaining);
+                                let (conv, turn, ctx) =
+                                    conv_of.get(&id).copied().unwrap_or((id, 1, 0.0));
+                                let (resubmit, new_ctx) = salvage_resubmit!(
+                                    assigned, remaining, conv, ctx, victim, false
+                                );
+                                conv_of.insert(id, (conv, turn, new_ctx));
                                 if let Some(rec) = rec {
                                     rec.emit_at(
                                         "salvage",
@@ -859,6 +1098,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                     avoid: Some(victim),
                                     group,
                                     passes: 0,
+                                    conv,
+                                    ctx: new_ctx,
                                 });
                             }
                         }
@@ -889,12 +1130,20 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         if cfg.rolling_update {
                             paused[0] = true;
                             replicas[0].set_paused(true, now);
+                            // new weights invalidate a replica's cached
+                            // KV (per cfg), exactly like sync_agent
+                            if cfg.kv_cache.invalidate_on_weight_sync {
+                                kv_invalidate!(0);
+                            }
                             max_paused = max_paused.max(1);
                             SyncPhase::Rolling { replica: 0, until: now + cfg.sync_time }
                         } else {
                             for r in 0..live {
                                 paused[r] = true;
                                 replicas[r].set_paused(true, now);
+                                if cfg.kv_cache.invalidate_on_weight_sync {
+                                    kv_invalidate!(r);
+                                }
                             }
                             max_paused = live;
                             SyncPhase::Broadcast { until: now + cfg.sync_time }
@@ -906,6 +1155,9 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                         if replica + 1 < live {
                             paused[replica + 1] = true;
                             replicas[replica + 1].set_paused(true, now);
+                            if cfg.kv_cache.invalidate_on_weight_sync {
+                                kv_invalidate!(replica + 1);
+                            }
                             SyncPhase::Rolling {
                                 replica: replica + 1,
                                 until: now + cfg.sync_time,
@@ -1465,6 +1717,112 @@ mod tests {
             "{a:?} vs {}",
             r.replica_seconds
         );
+    }
+
+    /// Multi-turn agentic workload on an EWMA fleet, with and without
+    /// the KV-prefix index. Same seed, same lengths, same turn chain.
+    fn multi_turn(kv: bool) -> FleetSimConfig {
+        let mut c = FleetSimConfig::default_fleet(4);
+        c.route_policy = RoutePolicy::Ewma;
+        c.lengths = LengthProfile::new(800.0, 1.0, 8192);
+        c.clients = 32;
+        c.total_requests = 240;
+        c.sync_interval = 0.0;
+        c.multi_turn = 4;
+        if kv {
+            c.kv_cache = KvCacheCfg {
+                enabled: true,
+                block_tokens: 16,
+                kv_bytes_budget: 1 << 30,
+                bytes_per_token: 4096,
+                invalidate_on_weight_sync: true,
+            };
+        }
+        c
+    }
+
+    /// The tentpole's sim acceptance: on multi-turn agentic traffic,
+    /// cache-aware routing returns follow-up turns to the replica
+    /// already holding the conversation's KV, cutting prefill replay
+    /// by >= 90% versus plain EWMA on the identical workload — and the
+    /// saved replay work shows up as a faster completion rate.
+    #[test]
+    fn cache_aware_routing_cuts_prefill_replay_on_multi_turn() {
+        let off = run(&multi_turn(false));
+        let rec = Arc::new(FlightRecorder::new(65536));
+        let mut kv_cfg = multi_turn(true);
+        kv_cfg.trace = Some(rec.clone());
+        let on = run(&kv_cfg);
+        assert_eq!(off.completed, 240);
+        assert_eq!(on.completed, 240);
+        assert!(
+            off.prefill_replay_tokens > 0.0,
+            "without the index every follow-up replays its context: {off:?}"
+        );
+        assert!(
+            on.prefill_replay_tokens <= 0.10 * off.prefill_replay_tokens,
+            "cache-aware must cut prefill replay >= 90%: {:.0} vs {:.0}",
+            on.prefill_replay_tokens,
+            off.prefill_replay_tokens
+        );
+        assert!(on.kv_hits > 0 && on.kv_hit_tokens > 0.0, "{on:?}");
+        assert_eq!(off.kv_hits, 0, "the disabled arm must report no cache activity");
+        assert_eq!(off.kv_hit_tokens, 0.0);
+        assert!(
+            on.makespan < off.makespan,
+            "skipped replay must beat full replay on completion rate: \
+             {:.0}s vs {:.0}s",
+            on.makespan,
+            off.makespan
+        );
+        // hit instants land in the trace with the real pool's schema
+        let hits = rec.events().iter().filter(|e| e.name == "kv_hit").count();
+        assert_eq!(hits as u64, on.kv_hits, "one kv_hit event per cache hit");
+    }
+
+    #[test]
+    fn kv_cache_determinism() {
+        let a = run(&multi_turn(true));
+        let b = run(&multi_turn(true));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.kv_hits, b.kv_hits);
+        assert_eq!(a.kv_hit_tokens, b.kv_hit_tokens);
+        assert_eq!(a.kv_evictions, b.kv_evictions);
+        assert_eq!(a.prefill_replay_tokens, b.prefill_replay_tokens);
+        assert_eq!(a.routed, b.routed);
+    }
+
+    /// A budget far below the live conversation footprint forces the
+    /// per-replica LRU to evict; the run still completes and caches
+    /// still land some hits on the survivors.
+    #[test]
+    fn kv_cache_evicts_under_budget_pressure() {
+        let mut c = multi_turn(true);
+        // ~1024 cached tokens per replica vs ~8 live conversations of
+        // 800+ tokens each: constant eviction pressure
+        c.kv_cache.kv_bytes_budget = 4096 * 1024;
+        let r = run(&c);
+        assert_eq!(r.completed, 240);
+        assert!(r.kv_evictions > 0, "budget pressure must evict: {r:?}");
+        let unbounded = run(&multi_turn(true));
+        assert_eq!(unbounded.kv_evictions, 0, "a huge budget never evicts");
+        assert!(
+            r.prefill_replay_tokens >= unbounded.prefill_replay_tokens,
+            "evictions can only lose reuse, not invent it: {:.0} vs {:.0}",
+            r.prefill_replay_tokens,
+            unbounded.prefill_replay_tokens
+        );
+    }
+
+    /// With the index off (the default), no kv counters may move — the
+    /// legacy arms stay bit-for-bit silent on cache activity.
+    #[test]
+    fn kv_disabled_reports_zero_cache_activity() {
+        let r = run(&fail_slow(true));
+        assert_eq!(r.kv_hits, 0);
+        assert_eq!(r.kv_misses, 0);
+        assert_eq!(r.kv_hit_tokens, 0.0);
+        assert_eq!(r.kv_evictions, 0);
     }
 
     /// A traced sim run records the real pool's event schema on the

@@ -90,6 +90,7 @@ fn fleet_collects_complete_groups() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -138,6 +139,7 @@ fn sync_training_loop_runs_on_math_env() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -193,6 +195,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -244,6 +247,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -297,6 +301,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -409,6 +414,7 @@ fn pool_generates_across_replicas() {
         reclaim_in_place: true,
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights.clone(), vocab::EOS, 31).unwrap();
 
@@ -472,6 +478,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -538,6 +545,7 @@ fn migrated_greedy_generation_matches_uninterrupted() {
         reclaim_in_place: true,
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 52).unwrap();
     let (reply, rx) = std::sync::mpsc::channel();
@@ -595,6 +603,7 @@ fn kill_replica_mid_generation_salvages_without_dup_or_loss() {
         reclaim_in_place: true,
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 53).unwrap();
     // warmup probe: wait for one full generation so PJRT compilation /
@@ -670,6 +679,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -715,6 +725,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -765,6 +776,7 @@ fn autoscaler_grows_on_burst_and_drains_back_wasting_nothing() {
         reclaim_in_place: true,
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 61).unwrap();
     let mut scaler = Autoscaler::new(AutoscaleCfg {
@@ -888,6 +900,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         autoscale: Default::default(),
         trace: Default::default(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -952,6 +965,7 @@ fn trace_covers_every_request_and_attribution_tiles_serving_time() {
         reclaim_in_place: true,
         trace: TraceCfg { enabled: true, ring_capacity: 1 << 14, export_path: None },
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 83).unwrap();
     let n = 24usize;

@@ -4,7 +4,9 @@
 //! in-tree harness: seeded random case generation + first-failing-seed
 //! reporting. Each property runs across many generated configurations.
 
-use roll_flash::coordinator::{ReplicaLoad, RoutePolicy, Router, SampleBuffer};
+use roll_flash::coordinator::{
+    KvCacheCfg, KvPrefixIndex, ReplicaLoad, RouteHint, RoutePolicy, Router, SampleBuffer,
+};
 use roll_flash::rl::{self, Trajectory};
 use roll_flash::sim::fleet::{bursty_autoscale, run as fleet_run, FleetSimConfig};
 use roll_flash::sim::queue::GpuPool;
@@ -204,6 +206,115 @@ fn prop_router_never_selects_dead_or_draining_replicas() {
                         });
                         assert!(!eligible, "router starved an eligible slot ({policy:?})");
                     }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kv_index_respects_lifecycle_budget_and_versions() {
+    // Under arbitrary interleavings of the fleet lifecycle that feeds
+    // the KV-prefix index — insert on done/park (serving replicas
+    // only), invalidate on kill/retire and on slot reuse, version
+    // bumps on weight sync, touches, and cache-hinted routing — the
+    // index must never hold blocks for a dead/draining replica, never
+    // credit a stale weight version (when `invalidate_on_weight_sync`),
+    // never exceed the per-replica byte budget, and never steer the
+    // router to an unroutable slot.
+    for_all_seeds(60, |rng| {
+        let block = 1 + rng.below(8);
+        let budget_tokens = (block * (1 + rng.below(64))) as u64;
+        let bytes_per_token = (1 + rng.below(4096)) as u64;
+        let cfg = KvCacheCfg {
+            enabled: true,
+            block_tokens: block,
+            kv_bytes_budget: budget_tokens * bytes_per_token,
+            bytes_per_token,
+            invalidate_on_weight_sync: rng.chance(0.5),
+        };
+        cfg.validate().unwrap();
+        let n = 1 + rng.below(6);
+        let mut idx = KvPrefixIndex::new(cfg, n);
+        let mut router = Router::new(RoutePolicy::LeastOutstanding);
+        let mut serving = vec![true; n];
+        let mut version = vec![0u64; n];
+        // prompt pool with overlapping prefixes (the sharing pattern
+        // the block chain deduplicates)
+        let prompts: Vec<Vec<i32>> = (0..8)
+            .map(|p| {
+                let len = block * (1 + rng.below(6));
+                (0..len).map(|i| ((i / 3 + p) % 7) as i32).collect()
+            })
+            .collect();
+        for _ in 0..200 {
+            let r = rng.below(n);
+            match rng.below(6) {
+                0 => {
+                    // completion/salvage insert — the pool only indexes
+                    // serving replicas (kv_insert_done's phase guard)
+                    if serving[r] {
+                        idx.insert(r, &prompts[rng.below(prompts.len())]);
+                    }
+                }
+                1 => {
+                    // kill_replica / retire_replica
+                    serving[r] = false;
+                    idx.invalidate_replica(r);
+                }
+                2 => {
+                    // add_replica reusing the slot: comes up cold
+                    if !serving[r] {
+                        serving[r] = true;
+                        idx.invalidate_replica(r);
+                    }
+                }
+                3 => {
+                    // weight sync lands a new version on the replica
+                    version[r] += 1;
+                    idx.set_version(r, version[r]);
+                    if cfg.invalidate_on_weight_sync {
+                        assert_eq!(
+                            idx.replica_blocks(r),
+                            0,
+                            "stale-version blocks survived a weight sync"
+                        );
+                    }
+                }
+                4 => {
+                    idx.touch(r, &prompts[rng.below(prompts.len())]);
+                }
+                _ => {
+                    // route with the fleet's hint contract: cached
+                    // counts zeroed for non-serving replicas
+                    let key = &prompts[rng.below(prompts.len())];
+                    let per: Vec<usize> = (0..n)
+                        .map(|r| if serving[r] { idx.lookup(r, key) } else { 0 })
+                        .collect();
+                    let cached = if per.iter().all(|&c| c == 0) { Vec::new() } else { per };
+                    let loads: Vec<ReplicaLoad> = (0..n)
+                        .map(|r| ReplicaLoad {
+                            outstanding: rng.below(4),
+                            slots: 8,
+                            suspended: !serving[r],
+                            predicted_remaining: 0.0,
+                        })
+                        .collect();
+                    let hint = RouteHint { cached, ..RouteHint::default() };
+                    if let Some(picked) = router.route_hinted(&loads, Some(hint)) {
+                        assert!(serving[picked], "cache hint routed to a dead/draining slot");
+                    }
+                }
+            }
+            for r in 0..n {
+                assert!(
+                    idx.replica_bytes(r) <= cfg.kv_bytes_budget,
+                    "budget exceeded on {r}: {} > {}",
+                    idx.replica_bytes(r),
+                    cfg.kv_bytes_budget
+                );
+                if !serving[r] {
+                    assert_eq!(idx.replica_blocks(r), 0, "dead/draining replica {r} still indexed");
                 }
             }
         }
