@@ -64,6 +64,8 @@ fn main() -> anyhow::Result<()> {
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
         predictor: Default::default(),
+        kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",
@@ -81,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         group_size: consume_group_size,
         sync_mode: false,
         autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
     };
     let t0 = std::time::Instant::now();
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;

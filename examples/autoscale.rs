@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         // in-memory tracing: scale decisions land in the pool ring
         trace: TraceCfg { enabled: true, ring_capacity: 4096, export_path: None },
         predictor: Default::default(),
+        kv_cache: Default::default(),
     };
     let pool = LlmProxyPool::spawn(&cfg, dir, weights, vocab::EOS, 71)?;
     let scale_cfg = AutoscaleCfg {

@@ -30,12 +30,14 @@ use std::time::Instant;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    format_log, run_training, ControllerCfg, FlightRecorder, LlmProxyPool, PoolCfg,
-    RolloutSystem, RolloutSystemCfg, RoutePolicy, TraceCfg,
+    format_log, run_training, steplog_jsonl, ControllerCfg, FlightRecorder, LlmProxyPool, PoolCfg,
+    RolloutSystem, RolloutSystemCfg, RoutePolicy, TelemetryCfg, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::env::vocab;
-use roll_flash::metrics::Table;
+use roll_flash::metrics::registry::MetricsRegistry;
+use roll_flash::metrics::telemetry::publish;
+use roll_flash::metrics::{prometheus, Table};
 use roll_flash::runtime::ModelRuntime;
 use roll_flash::sim::fleet::{run as run_sim, FleetSimConfig};
 use roll_flash::util::rng::Rng;
@@ -63,11 +65,27 @@ fn main() -> anyhow::Result<()> {
         ring_capacity: 1 << 14,
         export_path: trace_path.clone(),
     };
+    // `telemetry_dir=` turns the live telemetry plane on and lands
+    // metrics.prom + verdicts.jsonl (+ steplog.jsonl on the real
+    // engine) in that directory
+    let telemetry_dir = {
+        let p = arg("telemetry_dir", "");
+        if p.is_empty() { None } else { Some(PathBuf::from(p)) }
+    };
+    let telemetry = match &telemetry_dir {
+        Some(d) => TelemetryCfg {
+            window_secs: arg("telemetry_window", "5").parse()?,
+            prometheus_path: Some(d.join("metrics.prom")),
+            verdict_path: Some(d.join("verdicts.jsonl")),
+            ..TelemetryCfg::on()
+        },
+        None => TelemetryCfg::disabled(),
+    };
 
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&model);
     if !dir.join("manifest.json").exists() {
         eprintln!("artifacts missing (run `make artifacts`): falling back to the sim mirror\n");
-        return sim_fallback(replicas, trace_path.as_deref());
+        return sim_fallback(replicas, trace_path.as_deref(), telemetry_dir.as_deref());
     }
 
     let rt = ModelRuntime::load(&dir)?;
@@ -92,6 +110,7 @@ fn main() -> anyhow::Result<()> {
             // stay untraced so they don't overwrite its files
             trace: TraceCfg::disabled(),
             predictor: Default::default(),
+            kv_cache: Default::default(),
         };
         let pool = LlmProxyPool::spawn(&cfg, dir.clone(), weights.clone(), vocab::EOS, 101)?;
         // identical skewed workload for both policies: mostly short
@@ -145,6 +164,8 @@ fn main() -> anyhow::Result<()> {
         autoscale: Default::default(), // static fleet (see examples/autoscale.rs)
         trace: trace.clone(),
         predictor: Default::default(),
+        kv_cache: Default::default(),
+        telemetry: telemetry.clone(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {
@@ -155,10 +176,17 @@ fn main() -> anyhow::Result<()> {
         group_size,
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {
         println!("{}", format_log(l));
+    }
+    // machine-readable step log next to the telemetry exports
+    if let Some(d) = &telemetry_dir {
+        std::fs::create_dir_all(d)?;
+        let jsonl: String = logs.iter().map(|l| steplog_jsonl(l) + "\n").collect();
+        std::fs::write(d.join("steplog.jsonl"), jsonl)?;
     }
     let report = system.shutdown()?;
 
@@ -204,14 +232,28 @@ fn main() -> anyhow::Result<()> {
             p.display()
         );
     }
+    if let Some(d) = &telemetry_dir {
+        let prom = std::fs::read_to_string(d.join("metrics.prom"))?;
+        prometheus::lint(&prom).map_err(|e| anyhow::anyhow!("prometheus lint: {e}"))?;
+        println!(
+            "telemetry: wrote {0}/metrics.prom (lint clean), {0}/verdicts.jsonl, {0}/steplog.jsonl",
+            d.display()
+        );
+    }
     Ok(())
 }
 
 /// Virtual-time stand-in when artifacts are absent: same Router, same
 /// policies, scaled-up load. With `trace_path` the last run records
 /// virtual-timestamp events and exports the same trace files the real
-/// pool writes.
-fn sim_fallback(replicas: usize, trace_path: Option<&Path>) -> anyhow::Result<()> {
+/// pool writes; with `telemetry_dir` the same telemetry plane the real
+/// controller ticks runs on the virtual clock and exports the same
+/// metrics.prom + verdicts.jsonl.
+fn sim_fallback(
+    replicas: usize,
+    trace_path: Option<&Path>,
+    telemetry_dir: Option<&Path>,
+) -> anyhow::Result<()> {
     let mut base = FleetSimConfig::default_fleet(replicas);
     base.lengths = LengthProfile::new(2000.0, 1.2, 30720);
     base.sync_interval = 0.0;
@@ -233,6 +275,9 @@ fn sim_fallback(replicas: usize, trace_path: Option<&Path>) -> anyhow::Result<()
     let mut rolling = FleetSimConfig::default_fleet(replicas);
     rolling.sync_interval = 60.0;
     rolling.trace = recorder.clone();
+    if telemetry_dir.is_some() {
+        rolling.telemetry = Some(TelemetryCfg { window_secs: 5.0, ..TelemetryCfg::on() });
+    }
     let r = run_sim(&rolling);
     println!(
         "rolling sync: {} waves, min decoding replicas {} (of {replicas}), attribution {}",
@@ -240,12 +285,56 @@ fn sim_fallback(replicas: usize, trace_path: Option<&Path>) -> anyhow::Result<()
         r.min_decoding_during_sync,
         r.attr.format_compact()
     );
-    if let (Some(rec), Some(p)) = (recorder, trace_path) {
+    if let (Some(rec), Some(p)) = (recorder.as_ref(), trace_path) {
         rec.export_to_dir(p)?;
         println!(
             "trace: wrote {0}/trace.json (chrome://tracing) and {0}/trace.jsonl \
              (virtual timestamps)",
             p.display()
+        );
+    }
+    if let Some(d) = telemetry_dir {
+        anyhow::ensure!(
+            !r.telemetry.is_empty(),
+            "telemetry plane closed no windows over a {:.0}s virtual run",
+            r.makespan
+        );
+        let mut counts: Vec<(&str, usize)> = Vec::new();
+        for w in &r.telemetry {
+            let k = w.verdict.as_str();
+            match counts.iter_mut().find(|(n, _)| *n == k) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((k, 1)),
+            }
+        }
+        println!(
+            "telemetry: {} windows over {:.0}s virtual — {}",
+            r.telemetry.len(),
+            r.makespan,
+            counts
+                .iter()
+                .map(|(n, c)| format!("{n}×{c}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        println!("  last window: {}", r.telemetry.last().unwrap().status());
+        std::fs::create_dir_all(d)?;
+        let jsonl: String = r.telemetry.iter().map(|w| w.to_json() + "\n").collect();
+        std::fs::write(d.join("verdicts.jsonl"), jsonl)?;
+        // render the same windows through the registry + exposition
+        // path the real controller uses, and lint the result
+        let registry = MetricsRegistry::new();
+        let tele_rec = recorder.unwrap_or_else(|| Arc::new(FlightRecorder::new(256)));
+        for w in &r.telemetry {
+            publish(w, &tele_rec, &registry);
+        }
+        let prom_path = d.join("metrics.prom");
+        prometheus::write_to_file(&registry, &prom_path)?;
+        let prom = std::fs::read_to_string(&prom_path)?;
+        prometheus::lint(&prom).map_err(|e| anyhow::anyhow!("prometheus lint: {e}"))?;
+        println!(
+            "telemetry: wrote {0}/metrics.prom (lint clean) and {0}/verdicts.jsonl",
+            d.display()
         );
     }
     Ok(())

@@ -63,6 +63,8 @@ fn main() -> anyhow::Result<()> {
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
         predictor: Default::default(),
+        kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 
@@ -74,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         group_size,
         sync_mode: true,
         autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

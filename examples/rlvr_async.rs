@@ -73,6 +73,8 @@ fn main() -> anyhow::Result<()> {
         autoscale: Default::default(), // static fleet
         trace: Default::default(),     // recorder off
         predictor: Default::default(),
+        kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
@@ -84,6 +86,7 @@ fn main() -> anyhow::Result<()> {
         group_size,
         sync_mode,
         autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
     };
 
     let t0 = std::time::Instant::now();

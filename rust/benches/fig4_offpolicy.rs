@@ -43,6 +43,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         trace: Default::default(),     // recorder off
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -53,6 +54,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         group_size,
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
+        telemetry: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     let report = system.shutdown().unwrap();

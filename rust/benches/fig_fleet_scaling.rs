@@ -23,7 +23,8 @@
 //!     holding their KV, cutting the prefill-replay token stream by
 //!     an order of magnitude on agentic traffic.
 
-use roll_flash::coordinator::{KvCacheCfg, RoutePolicy};
+use roll_flash::coordinator::{BottleneckVerdict, KvCacheCfg, RoutePolicy, TelemetryCfg};
+use roll_flash::metrics::telemetry::AlertKind;
 use roll_flash::metrics::Table;
 use roll_flash::sim::fleet::{run, sweep_replicas, FleetSimConfig};
 use roll_flash::workload::LengthProfile;
@@ -265,5 +266,63 @@ fn main() {
     println!("rolling keeps >= N-1 replicas decoding during every model update;");
     println!("broadcast parks the fleet for the whole sync window. The attribution");
     println!("column (busy/sync/idle % of serving replica-seconds) prices the");
-    println!("difference: broadcast's sync share is the fleet-wide stall bill.");
+    println!("difference: broadcast's sync share is the fleet-wide stall bill.\n");
+
+    println!("== Live diagnosis: telemetry plane on a fail-slow + broadcast-sync fleet ==\n");
+    // the pathological arm the watchdogs exist for: one 5x fail-slow
+    // replica forcing hang-watchdog migrations (wasted tokens — the
+    // from-scratch arm maximizes the bill) under aggressive broadcast
+    // sync (the whole fleet parks every 30 virtual seconds)
+    let mut cfg = base.clone();
+    cfg.num_replicas = 4;
+    cfg.clients = 96;
+    cfg.total_requests = 600;
+    cfg.sync_interval = 30.0;
+    cfg.sync_time = 10.0;
+    cfg.rolling_update = false;
+    cfg.slow_replica = Some((3, 5.0));
+    cfg.hang_timeout = 60.0;
+    cfg.partial_migration = false;
+    cfg.telemetry = Some(TelemetryCfg {
+        window_secs: 10.0,
+        waste_budget: 0.05,
+        ..TelemetryCfg::on()
+    });
+    let r = run(&cfg);
+    let mut counts: Vec<(&str, usize)> = Vec::new();
+    for w in &r.telemetry {
+        let k = w.verdict.as_str();
+        match counts.iter_mut().find(|(n, _)| *n == k) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((k, 1)),
+        }
+    }
+    println!(
+        "{} windows over {:.0}s virtual: {}",
+        r.telemetry.len(),
+        r.makespan,
+        counts.iter().map(|(n, c)| format!("{n}×{c}")).collect::<Vec<_>>().join(", ")
+    );
+    for w in r.telemetry.iter().take(6) {
+        println!("  {}", w.status());
+    }
+    let sync_stall =
+        r.telemetry.iter().filter(|w| w.verdict == BottleneckVerdict::SyncStall).count();
+    let waste_fired = r
+        .telemetry_alerts
+        .iter()
+        .any(|a| a.kind == AlertKind::WasteBudget && a.firing);
+    assert!(
+        sync_stall > 0,
+        "broadcast sync parks the fleet ~1/4 of the time; the plane must call SyncStall"
+    );
+    assert!(
+        waste_fired,
+        "from-scratch migrations off the fail-slow replica must trip the waste watchdog"
+    );
+    println!(
+        "\ndiagnosis: {sync_stall} SyncStall windows, waste watchdog fired={waste_fired} — the"
+    );
+    println!("plane names the broadcast-sync stall and the fail-slow waste bill live,");
+    println!("without waiting for the shutdown report.");
 }

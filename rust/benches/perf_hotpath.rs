@@ -125,7 +125,59 @@ fn main() {
         );
     }
 
-    // 5. KV-prefix index primitives: the cost cache-aware dispatch
+    // 5. TelemetryPlane tick: the per-step price of the live
+    //    telemetry satellite. Disabled must be an early-return branch
+    //    (zero-cost when off); enabled-but-not-due is a baseline
+    //    clone + dt compare; a closing tick folds the whole window
+    //    (verdict + watchdogs + publish-ready deltas). Targets:
+    //    disabled ~ns, enabled tick < 1% of a 1ms training step.
+    {
+        use roll_flash::coordinator::{TelemetryCfg, TelemetryPlane, TelemetrySignals};
+        let n = 1_000_000u64;
+        let mut off = TelemetryPlane::new(TelemetryCfg::disabled());
+        let mut sig = TelemetrySignals::default();
+        let t_off = bench(5, || {
+            for i in 0..n {
+                sig.now = std::hint::black_box(i as f64);
+                std::hint::black_box(off.tick(&sig));
+            }
+        });
+        // enabled, window never due: the common per-step path
+        let mut idle =
+            TelemetryPlane::new(TelemetryCfg { window_secs: 1e18, ..TelemetryCfg::on() });
+        let mut sig = TelemetrySignals::default();
+        idle.tick(&sig); // seed the t=0 baseline
+        let t_idle = bench(5, || {
+            for i in 0..n {
+                sig.now = std::hint::black_box(1.0 + i as f64 * 1e-9);
+                std::hint::black_box(idle.tick(&sig));
+            }
+        });
+        // every tick closes a window: verdict + watchdogs + history
+        let n_close = 10_000u64;
+        let t_close = bench(5, || {
+            let mut p =
+                TelemetryPlane::new(TelemetryCfg { window_secs: 1.0, ..TelemetryCfg::on() });
+            let mut sig = TelemetrySignals::default();
+            p.tick(&sig);
+            for i in 1..=n_close {
+                sig.now = i as f64;
+                sig.completed = i * 10;
+                sig.produced_tokens = i * 2000;
+                std::hint::black_box(p.tick(&sig));
+            }
+        });
+        let per_off = t_off / n as f64 * 1e9;
+        let per_idle = t_idle / n as f64 * 1e9;
+        let per_close = t_close / n_close as f64 * 1e9;
+        println!(
+            "TelemetryPlane: disabled {per_off:.2}ns/tick (branch-only), enabled {per_idle:.0}ns/tick, \
+             window close {per_close:.0}ns ({:.4}% of a 1ms step — target < 1%)",
+            per_close / 1e6 * 100.0
+        );
+    }
+
+    // 6. KV-prefix index primitives: the cost cache-aware dispatch
     //    adds per request. Inserts hash whole blocks of the prompt;
     //    lookups walk the block chain; the tight-budget arm forces an
     //    LRU eviction on essentially every insert.
@@ -218,7 +270,7 @@ fn main() {
         );
     }
 
-    // 6. real engine: decode + train step latency (tiny artifacts)
+    // 7. real engine: decode + train step latency (tiny artifacts)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if dir.join("manifest.json").exists() {
         let rt = ModelRuntime::load(&dir).unwrap();
@@ -256,7 +308,7 @@ fn main() {
             (tb * ts2) as f64 / t
         );
 
-        // 7. recorder overhead on the REAL pool's submit/complete path:
+        // 8. recorder overhead on the REAL pool's submit/complete path:
         //    48 short generations through a 2-replica fleet, traced vs
         //    untraced. Acceptance: enabled stays under 3% — the
         //    recorder is off the decode path, so the emit cost

@@ -11,6 +11,7 @@ use crate::coordinator::autoscaler::AutoscaleCfg;
 use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::PredictorCfg;
 use crate::coordinator::routing::RoutePolicy;
+use crate::metrics::telemetry::TelemetryCfg;
 use crate::metrics::trace::TraceCfg;
 use crate::util::json::Json;
 
@@ -151,6 +152,11 @@ pub struct RollConfig {
     /// invalidate_on_weight_sync}`; presence of the block enables it —
     /// absent, placement and accounting stay byte-identical to legacy)
     pub kv_cache: KvCacheCfg,
+    /// live telemetry plane (`telemetry: {window_secs, prometheus_path,
+    /// verdict_path, <threshold overrides>}`; presence of the block
+    /// enables it — absent, every would-be tick is one branch and the
+    /// event stream stays byte-identical to legacy)
+    pub telemetry: TelemetryCfg,
     /// virtual-time sim: seconds of replica time one prefill/replay
     /// token costs (`prefill_time_per_token` — sweepable replay-cost
     /// sensitivity for `sim/fleet.rs` and the fig benches)
@@ -192,6 +198,7 @@ impl Default for RollConfig {
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
             kv_cache: KvCacheCfg::disabled(),
+            telemetry: TelemetryCfg::disabled(),
             prefill_time_per_token: 2e-4,
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
@@ -367,6 +374,37 @@ impl RollConfig {
                 cfg.trace.export_path = Some(v.into());
             }
         }
+        if let Some(t) = j.get("telemetry") {
+            // like autoscale/trace/kv_cache: the block's presence
+            // turns the plane on unless it says `enabled: false`
+            cfg.telemetry = TelemetryCfg::on();
+            if let Some(Json::Bool(b)) = t.get("enabled") {
+                cfg.telemetry.enabled = *b;
+            }
+            if let Some(v) = num(t, "window_secs") {
+                cfg.telemetry.window_secs = v;
+            }
+            if let Some(v) = t.get("prometheus_path").and_then(Json::as_str) {
+                cfg.telemetry.prometheus_path = Some(v.into());
+            }
+            if let Some(v) = t.get("verdict_path").and_then(Json::as_str) {
+                cfg.telemetry.verdict_path = Some(v.into());
+            }
+            for (key, slot) in [
+                ("sync_stall_frac", &mut cfg.telemetry.sync_stall_frac),
+                ("tail_ratio", &mut cfg.telemetry.tail_ratio),
+                ("rollout_wait_frac", &mut cfg.telemetry.rollout_wait_frac),
+                ("idle_frac", &mut cfg.telemetry.idle_frac),
+                ("throughput_sigma", &mut cfg.telemetry.throughput_sigma),
+                ("stall_timeout_secs", &mut cfg.telemetry.stall_timeout_secs),
+                ("waste_budget", &mut cfg.telemetry.waste_budget),
+                ("gap_budget", &mut cfg.telemetry.gap_budget),
+            ] {
+                if let Some(v) = num(t, key) {
+                    *slot = v;
+                }
+            }
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -442,6 +480,9 @@ impl RollConfig {
         self.autoscale.validate()?;
         self.predictor.validate()?;
         self.kv_cache.validate()?;
+        if let Err(e) = self.telemetry.validate() {
+            anyhow::bail!(e);
+        }
         anyhow::ensure!(
             self.prefill_time_per_token.is_finite() && self.prefill_time_per_token >= 0.0,
             "prefill_time_per_token must be finite and >= 0"
@@ -725,6 +766,53 @@ prefill_time_per_token: 0.001
             "budget below one block is unusable"
         );
         assert!(RollConfig::from_yaml("prefill_time_per_token: -1").is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_block() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+telemetry:
+  window_secs: 2.5
+  prometheus_path: /tmp/roll-telemetry/metrics.prom
+  verdict_path: /tmp/roll-telemetry/verdicts.jsonl
+  sync_stall_frac: 0.25
+  tail_ratio: 4
+  waste_budget: 0.1
+"#,
+        )
+        .unwrap();
+        assert!(cfg.telemetry.enabled, "block presence enables the plane");
+        assert!((cfg.telemetry.window_secs - 2.5).abs() < 1e-12);
+        assert_eq!(
+            cfg.telemetry.prometheus_path.as_deref(),
+            Some(Path::new("/tmp/roll-telemetry/metrics.prom"))
+        );
+        assert_eq!(
+            cfg.telemetry.verdict_path.as_deref(),
+            Some(Path::new("/tmp/roll-telemetry/verdicts.jsonl"))
+        );
+        assert!((cfg.telemetry.sync_stall_frac - 0.25).abs() < 1e-12);
+        assert!((cfg.telemetry.tail_ratio - 4.0).abs() < 1e-12);
+        assert!((cfg.telemetry.waste_budget - 0.1).abs() < 1e-12);
+        // unset thresholds keep the `on()` defaults
+        assert!((cfg.telemetry.idle_frac - 0.5).abs() < 1e-12);
+        assert!((cfg.telemetry.gap_budget - 8.0).abs() < 1e-12);
+        // default: plane off
+        let d = RollConfig::default();
+        assert!(!d.telemetry.enabled);
+        // explicit off-switch keeps the knobs in the file
+        let off = RollConfig::from_yaml("telemetry:\n  enabled: false\n  window_secs: 9\n").unwrap();
+        assert!(!off.telemetry.enabled);
+        assert!((off.telemetry.window_secs - 9.0).abs() < 1e-12);
+        // degenerate thresholds rejected only while enabled
+        assert!(RollConfig::from_yaml("telemetry:\n  window_secs: 0\n").is_err());
+        assert!(RollConfig::from_yaml("telemetry:\n  tail_ratio: 1\n").is_err());
+        assert!(RollConfig::from_yaml("telemetry:\n  waste_budget: 1.5\n").is_err());
+        assert!(
+            RollConfig::from_yaml("telemetry:\n  enabled: false\n  window_secs: 0\n").is_ok(),
+            "disabled plane skips threshold validation"
+        );
     }
 
     #[test]

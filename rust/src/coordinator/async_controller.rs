@@ -20,11 +20,13 @@ use crate::config::PgVariant;
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler};
 use crate::coordinator::fleet::LlmProxyPool;
 use crate::coordinator::sample_buffer::SampleBuffer;
+use crate::metrics::prometheus;
+use crate::metrics::telemetry::{self, TelemetryCfg, TelemetryPlane, TelemetryStatus};
 use crate::metrics::trace::AttrSnapshot;
 use crate::rl;
 use crate::runtime::{ModelRuntime, TrainState};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ControllerCfg {
     pub variant: PgVariant,
     pub steps: usize,
@@ -39,6 +41,11 @@ pub struct ControllerCfg {
     /// rollout running to scale against — and ignored when absent or
     /// disabled.
     pub autoscale: Option<AutoscaleCfg>,
+    /// live telemetry plane: ticked between steps with pool + buffer
+    /// signals; produces windowed bottleneck verdicts, watchdog
+    /// alerts, and (at end of run) Prometheus / verdict-JSONL exports.
+    /// Absent or disabled = zero cost, legacy behavior byte-identical.
+    pub telemetry: Option<TelemetryCfg>,
 }
 
 /// Per-step training log (the Fig 4-style curve data).
@@ -92,6 +99,11 @@ pub struct StepLog {
     /// p99 episode-completion latency for the same window — the
     /// long-tail scoreboard the length-aware scheduling drives down
     pub lat_p99: f64,
+    /// latest telemetry-window summary (verdict + active watchdogs);
+    /// `None` until the first window closes, or always while the
+    /// `telemetry:` block is absent — in which case `format_log`'s
+    /// line is byte-identical to the legacy output
+    pub telemetry: Option<TelemetryStatus>,
 }
 
 /// Run the training loop. `rt`/`st` belong to the calling thread (the
@@ -120,6 +132,23 @@ pub fn run_training(
         .autoscale
         .filter(|a| a.enabled && !cfg.sync_mode)
         .map(Autoscaler::new);
+    // live telemetry plane: caller-clocked off the pool recorder's
+    // epoch; the first tick below seeds the t=0 baseline so windows
+    // tile the run from its start. None = every check is one branch
+    // and the legacy step loop is untouched.
+    let mut plane = cfg
+        .telemetry
+        .as_ref()
+        .filter(|t| t.enabled)
+        .map(|t| TelemetryPlane::new(t.clone()));
+    // cumulative seconds the trainer spent blocked in get_batch — the
+    // plane's RolloutBound / QueueStarved discriminator
+    let mut train_wait_secs = 0.0f64;
+    if let Some(p) = plane.as_mut() {
+        let mut sig = proxy.telemetry_signals();
+        sig.buffer_ready = buffer_ready(buffer);
+        p.tick(&sig);
+    }
 
     for step in 0..cfg.steps {
         let t0 = Instant::now();
@@ -129,9 +158,11 @@ pub fn run_training(
         let gap_before = buffer.stats();
         let tokens_before = proxy.token_stats();
         let attr_before = proxy.attribution();
+        let wait_t0 = Instant::now();
         let Some(samples) = buffer.get_batch(cfg.n_groups) else {
             anyhow::bail!("sample buffer shut down mid-training");
         };
+        train_wait_secs += wait_t0.elapsed().as_secs_f64();
         if cfg.sync_mode {
             proxy.suspend();
         }
@@ -179,6 +210,31 @@ pub fn run_training(
         let gap_after = buffer.stats();
         let tokens_after = proxy.token_stats();
         let (lat_p50, lat_p99) = proxy.latency_percentiles();
+        let mean_version_gap = {
+            let d = (gap_after.consumed - gap_before.consumed).max(1);
+            (gap_after.sum_version_gap - gap_before.sum_version_gap) as f64 / d as f64
+        };
+        // telemetry tick: gather cumulative pool signals, fill in the
+        // trainer-side half, and let the plane decide whether a window
+        // closes. A closed window is published into the pool's trace +
+        // registry (verdict/alert events, live gauges) along with the
+        // recorder's own health gauges.
+        if let Some(p) = plane.as_mut() {
+            if p.due(proxy.recorder().now()) {
+                let recorder = proxy.recorder();
+                p.observe_trace(&recorder);
+                let mut sig = proxy.telemetry_signals();
+                sig.buffer_ready = buffer_ready(buffer);
+                sig.train_wait_secs = train_wait_secs;
+                sig.version_gap = mean_version_gap;
+                sig.lat_p50 = lat_p50;
+                sig.lat_p99 = lat_p99;
+                if let Some(w) = p.tick(&sig) {
+                    telemetry::publish(&w, &recorder, &proxy.metrics());
+                    proxy.publish_trace_gauges();
+                }
+            }
+        }
         logs.push(StepLog {
             step,
             loss: agg.loss,
@@ -189,10 +245,7 @@ pub fn run_training(
             entropy: agg.entropy,
             reward_mean: samples.iter().map(|t| t.reward).sum::<f32>() / samples.len() as f32,
             pass_rate: rl::pass_rate(&samples) as f32,
-            mean_version_gap: {
-                let d = (gap_after.consumed - gap_before.consumed).max(1);
-                (gap_after.sum_version_gap - gap_before.sum_version_gap) as f64 / d as f64
-            },
+            mean_version_gap,
             max_version_gap: gap_after.max_version_gap,
             replica_version_skew: proxy.version_skew(),
             cross_version_samples: gap_after
@@ -210,9 +263,50 @@ pub fn run_training(
             attr: proxy.attribution().delta(&attr_before),
             lat_p50,
             lat_p99,
+            telemetry: plane.as_ref().and_then(|p| p.step_status()),
         });
     }
+    // close the trailing partial window so short runs (and the tail
+    // of every run) still land in the timeline
+    if let Some(p) = plane.as_mut() {
+        let recorder = proxy.recorder();
+        p.observe_trace(&recorder);
+        let mut sig = proxy.telemetry_signals();
+        sig.buffer_ready = buffer_ready(buffer);
+        sig.train_wait_secs = train_wait_secs;
+        if let Some(w) = p.flush(&sig) {
+            telemetry::publish(&w, &recorder, &proxy.metrics());
+        }
+    }
+    // end-of-run exports: verdict timeline JSONL next to the trace
+    // exports, Prometheus text exposition of the pool registry
+    if let Some(p) = plane.as_ref() {
+        proxy.publish_trace_gauges();
+        if let Some(path) = &p.cfg().verdict_path {
+            if let Some(dir) = path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+            }
+            if let Err(e) = std::fs::write(path, p.timeline_jsonl()) {
+                eprintln!("telemetry: failed to write verdict timeline {path:?}: {e}");
+            }
+        }
+        if let Some(path) = &p.cfg().prometheus_path {
+            if let Err(e) = prometheus::write_to_file(&proxy.metrics(), path) {
+                eprintln!("telemetry: failed to write prometheus exposition {path:?}: {e}");
+            }
+        }
+    }
     Ok(logs)
+}
+
+/// Finished samples sitting in the buffer right now (produced minus
+/// every consumed/cancelled/evicted outcome) — the plane's
+/// TrainBound discriminator.
+fn buffer_ready(buffer: &Arc<SampleBuffer>) -> f64 {
+    let s = buffer.stats();
+    s.produced.saturating_sub(s.consumed + s.cancelled + s.stale_evicted) as f64
 }
 
 /// Format a step log line (shared by examples and benches). `gap` is
@@ -228,11 +322,74 @@ pub fn run_training(
 /// step's p50/p99 episode-completion latency in seconds (0/0 when no
 /// episode finished inside the step).
 pub fn format_log(l: &StepLog) -> String {
-    format!(
+    let mut line = format!(
         "step {:>4}  loss {:>8.4}  reward {:.3}  pass {:.3}  ratio {:.3}/{:.3}  clip {:.3}  ent {:.3}  gap {:.2}/{}  skew {}  xver {}  salv {}  waste {}  kvhit {}  repl {}  attr {}  lat {:.2}/{:.2}  {:.2}s",
         l.step, l.loss, l.reward_mean, l.pass_rate, l.mean_ratio, l.max_ratio, l.clip_frac,
         l.entropy, l.mean_version_gap, l.max_version_gap, l.replica_version_skew,
         l.cross_version_samples, l.salvaged_tokens, l.wasted_tokens, l.prefix_hit_tokens,
         l.serving_replicas, l.attr.format_compact(), l.lat_p50, l.lat_p99, l.wall_secs
+    );
+    // live telemetry column — only present when the plane is on, so
+    // legacy (telemetry-absent) lines stay byte-identical
+    if let Some(t) = &l.telemetry {
+        line.push_str(&format!("  tele {}", t.verdict.as_str()));
+        if t.alerts_active > 0 {
+            line.push_str(&format!("!{}", t.alerts_active));
+        }
+    }
+    line
+}
+
+/// Machine-readable `StepLog` line: one flat JSON object per step,
+/// emitted *alongside* `format_log` (the human line is unchanged).
+/// Callers collect these into a `steps.jsonl` next to the trace and
+/// verdict-timeline exports.
+pub fn steplog_jsonl(l: &StepLog) -> String {
+    let tele = match &l.telemetry {
+        Some(t) => format!(
+            "{{\"verdict\":\"{}\",\"alerts_active\":{},\"throughput\":{:.6},\"waste_rate\":{:.6}}}",
+            t.verdict.as_str(),
+            t.alerts_active,
+            t.throughput,
+            t.waste_rate
+        ),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"step\":{},\"loss\":{:.6},\"grad_norm\":{:.6},\"mean_ratio\":{:.6},\
+         \"max_ratio\":{:.6},\"clip_frac\":{:.6},\"entropy\":{:.6},\"reward_mean\":{:.6},\
+         \"pass_rate\":{:.6},\"mean_version_gap\":{:.6},\"max_version_gap\":{},\
+         \"replica_version_skew\":{},\"cross_version_samples\":{},\"salvaged_tokens\":{},\
+         \"wasted_tokens\":{},\"prefix_hit_tokens\":{},\"serving_replicas\":{},\
+         \"wall_secs\":{:.6},\"attr\":{{\"decode_busy\":{:.6},\"prefill\":{:.6},\
+         \"prefill_replay\":{:.6},\"weight_sync\":{:.6},\"draining\":{:.6},\
+         \"idle_bubble\":{:.6}}},\"lat_p50\":{:.6},\"lat_p99\":{:.6},\"telemetry\":{}}}",
+        l.step,
+        l.loss,
+        l.grad_norm,
+        l.mean_ratio,
+        l.max_ratio,
+        l.clip_frac,
+        l.entropy,
+        l.reward_mean,
+        l.pass_rate,
+        l.mean_version_gap,
+        l.max_version_gap,
+        l.replica_version_skew,
+        l.cross_version_samples,
+        l.salvaged_tokens,
+        l.wasted_tokens,
+        l.prefix_hit_tokens,
+        l.serving_replicas,
+        l.wall_secs,
+        l.attr.decode_busy,
+        l.attr.prefill,
+        l.attr.prefill_replay,
+        l.attr.weight_sync,
+        l.attr.draining,
+        l.attr.idle_bubble,
+        l.lat_p50,
+        l.lat_p99,
+        tele
     )
 }

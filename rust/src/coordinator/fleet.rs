@@ -110,6 +110,7 @@ use crate::coordinator::llm_proxy::{
 };
 use crate::coordinator::routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
 use crate::metrics::registry::{Counter, HistogramHandle, MetricsRegistry};
+use crate::metrics::telemetry::TelemetrySignals;
 use crate::metrics::trace::{
     AttrSnapshot, Attribution, EventPhase, FlightRecorder, TraceCfg,
 };
@@ -2246,6 +2247,53 @@ impl LlmProxyPool {
             total.merge(&s);
         }
         total
+    }
+
+    /// The pool-side half of a [`TelemetrySignals`] reading for the
+    /// live telemetry plane: caller clock (recorder epoch seconds),
+    /// cumulative completions, instantaneous queue/serving, cumulative
+    /// attribution and token ledger, and the oldest open decode span's
+    /// age (the stalled-episode watchdog input). The caller — the
+    /// training controller — fills in the trainer-side fields
+    /// (buffer occupancy, get_batch wait, version gap) and the
+    /// already-windowed latency percentiles before ticking the plane.
+    /// Reads no reset-on-read window, so it never steals `StepLog`'s
+    /// per-step feeds.
+    pub fn telemetry_signals(&self) -> TelemetrySignals {
+        let now = self.shared.recorder.now();
+        let tokens = self.shared.ledger.stats();
+        let (queue_depth, serving) = {
+            let st = self.shared.state.lock().unwrap();
+            (st.queue.len() as f64, st.serving())
+        };
+        TelemetrySignals {
+            now,
+            completed: self.shared.metrics.completed.get(),
+            queue_depth,
+            serving,
+            attr: self.attribution(),
+            wasted_tokens: tokens.wasted_tokens,
+            salvaged_tokens: tokens.salvaged_tokens,
+            prefix_hit_tokens: tokens.prefix_hit_tokens,
+            produced_tokens: 0,
+            version_gap: 0.0,
+            buffer_ready: 0.0,
+            train_wait_secs: 0.0,
+            lat_p50: 0.0,
+            lat_p99: 0.0,
+            oldest_open_decode_secs: self.shared.recorder.oldest_open_span_age("decode", now),
+        }
+    }
+
+    /// Mirror the recorder's own health into the registry —
+    /// `trace.dropped` (overflow count, silent trace loss) and
+    /// `trace.ring_occupancy.<i>` per-ring gauges. The telemetry tick
+    /// calls this each window; it is also safe to call ad hoc.
+    pub fn publish_trace_gauges(&self) {
+        crate::metrics::telemetry::publish_recorder_gauges(
+            &self.shared.recorder,
+            &self.shared.metrics.registry,
+        );
     }
 
     /// Stop every replica and collector; gather the fleet report.

@@ -43,7 +43,7 @@ pub mod rollout;
 pub mod routing;
 pub mod sample_buffer;
 
-pub use async_controller::{format_log, run_training, ControllerCfg, StepLog};
+pub use async_controller::{format_log, run_training, steplog_jsonl, ControllerCfg, StepLog};
 pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
 pub use kv_index::{KvCacheCfg, KvIndexStats, KvPrefixIndex};
@@ -58,6 +58,11 @@ pub use sample_buffer::{Admission, BufferStats, SampleBuffer};
 
 // the trace knobs ride along with the fleet cfg, so surface them here
 pub use crate::metrics::trace::{FlightRecorder, TraceCfg};
+// the telemetry plane rides the controller cfg the same way
+pub use crate::metrics::telemetry::{
+    BottleneckVerdict, TelemetryAlert, TelemetryCfg, TelemetryPlane, TelemetrySignals,
+    TelemetryStatus, TelemetryWindow,
+};
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -132,6 +137,13 @@ pub struct RolloutSystemCfg {
     /// {…}` in YAML / CLI; disabled by default — placement, admission,
     /// and accounting stay byte-identical to the legacy stack)
     pub kv_cache: KvCacheCfg,
+    /// live telemetry plane (`telemetry: {…}` in YAML / CLI; disabled
+    /// by default): windowed bottleneck verdicts, anomaly watchdogs,
+    /// episode critical-path percentiles, Prometheus + verdict-JSONL
+    /// exports. The tick runs on the training thread — thread this
+    /// into `ControllerCfg::telemetry` via `Self::controller_telemetry`
+    /// so a configured block cannot be silently inert.
+    pub telemetry: TelemetryCfg,
 }
 
 impl RolloutSystemCfg {
@@ -163,6 +175,9 @@ impl RolloutSystemCfg {
             !self.trace.enabled || self.trace.ring_capacity > 0,
             "trace.ring_capacity must be > 0 when tracing is enabled"
         );
+        if let Err(e) = self.telemetry.validate() {
+            anyhow::bail!(e);
+        }
         Ok(())
     }
 
@@ -172,6 +187,14 @@ impl RolloutSystemCfg {
     /// configured here cannot be silently inert.
     pub fn controller_autoscale(&self) -> Option<AutoscaleCfg> {
         self.autoscale.enabled.then_some(self.autoscale)
+    }
+
+    /// The AsyncController's view of this cfg's telemetry knob:
+    /// `Some` only when enabled. Hand this to
+    /// `ControllerCfg::telemetry` so a YAML/CLI `telemetry:` block
+    /// configured here cannot be silently inert.
+    pub fn controller_telemetry(&self) -> Option<TelemetryCfg> {
+        self.telemetry.enabled.then(|| self.telemetry.clone())
     }
 
     fn engine_cfg(&self) -> EngineCfg {
@@ -316,6 +339,7 @@ mod tests {
             trace: TraceCfg::disabled(),
             predictor: PredictorCfg::default(),
             kv_cache: KvCacheCfg::disabled(),
+            telemetry: TelemetryCfg::disabled(),
         }
     }
 
@@ -378,6 +402,21 @@ mod tests {
         assert!(c.validate().is_ok(), "inert trace knobs must not block a run");
         c.trace = TraceCfg { enabled: true, ring_capacity: 64, export_path: None };
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_telemetry_thresholds_rejected_only_when_enabled() {
+        let mut c = cfg();
+        c.telemetry = TelemetryCfg { window_secs: 0.0, ..TelemetryCfg::on() };
+        assert!(c.validate().is_err());
+        // inert knobs must not block a legacy run
+        c.telemetry.enabled = false;
+        assert!(c.validate().is_ok());
+        c.telemetry = TelemetryCfg::on();
+        c.validate().unwrap();
+        assert!(c.controller_telemetry().is_some());
+        c.telemetry = TelemetryCfg::disabled();
+        assert!(c.controller_telemetry().is_none());
     }
 
     #[test]

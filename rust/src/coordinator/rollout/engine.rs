@@ -168,6 +168,14 @@ pub struct EngineReport {
     pub timers_fired: u64,
     /// peak concurrently admitted episodes (tickets held at once)
     pub peak_inflight: usize,
+    /// adaptive `redundancy_factor` hint (log-only, no behavior
+    /// change): the factor that would hide the observed
+    /// fail-slow/fail-stop rate — `1/(1-p)` over this run's hang
+    /// migrations, abandonments, and lane deaths, floored at the
+    /// configured factor and capped at 3x
+    /// (`metrics::telemetry::redundancy_hint`). Equals the configured
+    /// factor on a clean run.
+    pub redundancy_hint: f64,
 }
 
 /// Engine-side handles into the fleet's central [`MetricsRegistry`]:
@@ -185,6 +193,8 @@ struct EngineMetrics {
     spare_wins: Counter,
     timers_fired: Counter,
     tickets_held: Gauge,
+    /// adaptive redundancy hint published at engine shutdown
+    redundancy_hint: Gauge,
 }
 
 impl EngineMetrics {
@@ -199,6 +209,7 @@ impl EngineMetrics {
             spare_wins: reg.counter("engine.spare_wins"),
             timers_fired: reg.counter("engine.timers_fired"),
             tickets_held: reg.gauge("engine.tickets_held"),
+            redundancy_hint: reg.gauge("engine.redundancy_hint"),
         }
     }
 }
@@ -563,6 +574,16 @@ impl EngineLoop {
         // wait forever for producers that no longer exist. Idempotent
         // on the normal stop path (the caller already shut it down).
         self.buffer.shutdown();
+        // observed fail-slow/fail-stop rate -> adaptive redundancy
+        // hint (log-only): failures over attempts, where an attempt is
+        // a completed episode or a failure event
+        let failures =
+            self.report.gen_migrations + self.report.abandoned + self.report.lane_failures;
+        let attempts = self.report.episodes as u64 + failures;
+        let rate = if attempts == 0 { 0.0 } else { failures as f64 / attempts as f64 };
+        self.report.redundancy_hint =
+            crate::metrics::telemetry::redundancy_hint(self.cfg.redundancy_factor, rate);
+        self.bump(|m| m.redundancy_hint.set(self.report.redundancy_hint));
         self.report
     }
 
@@ -1253,6 +1274,8 @@ mod tests {
         assert_eq!(report.lane_failures, 1, "{report:?}");
         assert!(buffer.get_batch(1).is_none(), "no producers left: consumer unblocks");
         assert!(buffer.stats().cancelled >= 1, "the failed lane's ticket is reclaimed");
+        // all attempts failed -> the adaptive hint saturates at its cap
+        assert_eq!(report.redundancy_hint, 3.0, "{report:?}");
     }
 
     /// The hang watchdog abandons a generation after its strikes and

@@ -16,7 +16,10 @@
 //!                     predictor_default_len=256 \
 //!                     kv_cache=true kv_block_tokens=16 kv_bytes_budget=67108864 \
 //!                     kv_bytes_per_token=4096 kv_invalidate_on_sync=true \
-//!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace
+//!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace \
+//!                     telemetry=true telemetry_window=5 \
+//!                     telemetry_prom=/tmp/roll-telemetry/metrics.prom \
+//!                     telemetry_jsonl=/tmp/roll-telemetry/verdicts.jsonl
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -55,6 +58,7 @@ fn main() -> Result<()> {
                  \u{20}         kv_cache=<bool> kv_block_tokens=<n> kv_bytes_budget=<n>\n\
                  \u{20}         kv_bytes_per_token=<n> kv_invalidate_on_sync=<bool>\n\
                  \u{20}         trace=<bool> trace_ring=<n> trace_path=<dir>\n\
+                 \u{20}         telemetry=<bool> telemetry_window=<f> telemetry_prom=<file> telemetry_jsonl=<file>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -115,6 +119,22 @@ fn train(cli: &Cli) -> Result<()> {
         invalidate_on_weight_sync: cli
             .bool_or("kv_invalidate_on_sync", cfg.kv_cache.invalidate_on_weight_sync),
     };
+    // telemetry export paths on the CLI imply the plane, like the
+    // YAML block's presence does
+    let mut telemetry = cfg.telemetry.clone();
+    telemetry.enabled = cli.bool_or(
+        "telemetry",
+        cfg.telemetry.enabled
+            || cli.get("telemetry_prom").is_some()
+            || cli.get("telemetry_jsonl").is_some(),
+    );
+    telemetry.window_secs = cli.parse_or("telemetry_window", cfg.telemetry.window_secs);
+    if let Some(p) = cli.get("telemetry_prom") {
+        telemetry.prometheus_path = Some(PathBuf::from(p));
+    }
+    if let Some(p) = cli.get("telemetry_jsonl") {
+        telemetry.verdict_path = Some(PathBuf::from(p));
+    }
     // a trace_path on the CLI implies tracing, like the YAML block
     let trace = TraceCfg {
         enabled: cli.bool_or("trace", cfg.trace.enabled || cli.get("trace_path").is_some()),
@@ -156,6 +176,7 @@ fn train(cli: &Cli) -> Result<()> {
         trace,
         predictor,
         kv_cache,
+        telemetry,
     };
     fleet.validate()?;
     println!(
@@ -183,6 +204,7 @@ fn train(cli: &Cli) -> Result<()> {
         group_size,
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {
@@ -231,6 +253,14 @@ fn train(cli: &Cli) -> Result<()> {
             "trace: wrote {0}/trace.json (chrome://tracing), {0}/trace.jsonl, {0}/metrics.txt",
             p.display()
         );
+    }
+    if fleet.telemetry.enabled {
+        if let Some(p) = &fleet.telemetry.prometheus_path {
+            println!("telemetry: wrote {} (prometheus text exposition)", p.display());
+        }
+        if let Some(p) = &fleet.telemetry.verdict_path {
+            println!("telemetry: wrote {} (verdict timeline jsonl)", p.display());
+        }
     }
     Ok(())
 }

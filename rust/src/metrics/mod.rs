@@ -1,9 +1,14 @@
 //! Metrics substrate: log-bucketed histograms, utilization ledgers,
 //! and table/CSV emitters used by the bench harness, plus the
-//! flight-recorder tracing layer ([`trace`]) and the central named
-//! metrics registry ([`registry`]).
+//! flight-recorder tracing layer ([`trace`]), the central named
+//! metrics registry ([`registry`]), the live telemetry plane
+//! ([`telemetry`]: windowed bottleneck verdicts, anomaly watchdogs,
+//! episode critical-path analysis), and Prometheus text exposition
+//! ([`prometheus`]).
 
+pub mod prometheus;
 pub mod registry;
+pub mod telemetry;
 pub mod trace;
 
 use std::collections::HashMap;

@@ -1,0 +1,218 @@
+//! Prometheus text exposition (format version 0.0.4) for the
+//! [`MetricsRegistry`].
+//!
+//! Render [`MetricsSnapshot`]s — counters, gauges, and log-bucketed
+//! histograms (exposed as summaries with fixed quantiles) — into the
+//! plain-text scrape format and write it to a file (textfile-collector
+//! style: point `node_exporter --collector.textfile.directory` or any
+//! scraper at the output). No HTTP server: the repo has no network
+//! dependency to serve from, and the file is the trivially-correct
+//! transport for both the real controller and CI's format-lint step.
+//!
+//! Naming: every series is prefixed `roll_`, dots and dashes map to
+//! underscores (`pool.kv_hits` → `roll_pool_kv_hits_total`), counters
+//! get the conventional `_total` suffix, and histograms expose
+//! `_sum`/`_count` plus `quantile` labels.
+
+use std::path::Path;
+
+use crate::metrics::registry::{MetricsRegistry, MetricsSnapshot};
+
+const PREFIX: &str = "roll_";
+const QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 1.0];
+
+/// Map an internal metric name onto the Prometheus grammar
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` (dots/dashes/anything else → `_`).
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(PREFIX.len() + name.len());
+    out.push_str(PREFIX);
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        if ok && !(i == 0 && c.is_ascii_digit()) {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn finite(v: f64) -> f64 {
+    if v.is_finite() { v } else { 0.0 }
+}
+
+/// Render a snapshot as Prometheus text exposition.
+pub fn render(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = format!("{}_total", sanitize(name));
+        out.push_str(&format!("# HELP {n} counter `{name}`\n"));
+        out.push_str(&format!("# TYPE {n} counter\n"));
+        out.push_str(&format!("{n} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        let n = sanitize(name);
+        out.push_str(&format!("# HELP {n} gauge `{name}`\n"));
+        out.push_str(&format!("# TYPE {n} gauge\n"));
+        out.push_str(&format!("{n} {}\n", finite(*v)));
+    }
+    for (name, h) in &snap.hists {
+        let n = sanitize(name);
+        out.push_str(&format!("# HELP {n} histogram `{name}` (log-bucketed summary)\n"));
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        for q in QUANTILES {
+            out.push_str(&format!("{n}{{quantile=\"{q}\"}} {}\n", finite(h.percentile(q * 100.0))));
+        }
+        out.push_str(&format!("{n}_sum {}\n", finite(h.mean() * h.count() as f64)));
+        out.push_str(&format!("{n}_count {}\n", h.count()));
+    }
+    out
+}
+
+/// Snapshot (without reset) and write the exposition to `path`.
+pub fn write_to_file(registry: &MetricsRegistry, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, render(&registry.snapshot()))
+}
+
+/// Structural lint of an exposition document — the same checks CI's
+/// format-lint step applies: every `# TYPE`/`# HELP` line is
+/// well-formed, every sample line parses as `name[{labels}] value`
+/// with a legal metric name and a float value, and every sample's
+/// base name was declared by a preceding `# TYPE`.
+pub fn lint(text: &str) -> Result<(), String> {
+    fn name_ok(n: &str) -> bool {
+        !n.is_empty()
+            && !n.starts_with(|c: char| c.is_ascii_digit())
+            && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut typed: Vec<String> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let human = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let kw = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            match kw {
+                "HELP" => {
+                    if !name_ok(name) {
+                        return Err(format!("line {human}: bad HELP metric name {name:?}"));
+                    }
+                }
+                "TYPE" => {
+                    let kind = parts.next().unwrap_or("");
+                    if !name_ok(name) {
+                        return Err(format!("line {human}: bad TYPE metric name {name:?}"));
+                    }
+                    if !matches!(kind, "counter" | "gauge" | "summary" | "histogram" | "untyped") {
+                        return Err(format!("line {human}: bad TYPE kind {kind:?}"));
+                    }
+                    typed.push(name.to_string());
+                }
+                _ => return Err(format!("line {human}: unknown comment keyword {kw:?}")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("line {human}: comments must be `# HELP` or `# TYPE`"));
+        }
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(p) => p,
+            None => return Err(format!("line {human}: sample missing value")),
+        };
+        if value.parse::<f64>().is_err() {
+            return Err(format!("line {human}: value {value:?} is not a float"));
+        }
+        let name = match series.split_once('{') {
+            Some((n, labels)) => {
+                if !labels.ends_with('}') {
+                    return Err(format!("line {human}: unterminated label set"));
+                }
+                n
+            }
+            None => series,
+        };
+        if !name_ok(name) {
+            return Err(format!("line {human}: bad sample metric name {name:?}"));
+        }
+        let declared = typed.iter().any(|t| {
+            name == t
+                || name
+                    .strip_prefix(t.as_str())
+                    .is_some_and(|s| s == "_sum" || s == "_count" || s == "_total" || s == "_bucket")
+        });
+        if !declared {
+            return Err(format!("line {human}: sample {name:?} has no preceding # TYPE"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_maps_dots_and_digits() {
+        assert_eq!(sanitize("pool.kv_hits"), "roll_pool_kv_hits");
+        assert_eq!(sanitize("trace.ring_occupancy.3"), "roll_trace_ring_occupancy_3");
+        assert_eq!(sanitize("weird-name!x"), "roll_weird_name_x");
+    }
+
+    #[test]
+    fn render_passes_own_lint() {
+        let reg = MetricsRegistry::new();
+        reg.counter("pool.completed").add(42);
+        reg.gauge("telemetry.waste_rate").set(0.25);
+        let h = reg.histogram("pool.completion_latency", 1e-3, 1.25);
+        for k in 1..=50 {
+            h.record(k as f64 * 0.01);
+        }
+        let text = render(&reg.snapshot());
+        lint(&text).expect("rendered exposition must lint clean");
+        assert!(text.contains("roll_pool_completed_total 42"));
+        assert!(text.contains("# TYPE roll_pool_completed_total counter"));
+        assert!(text.contains("# TYPE roll_telemetry_waste_rate gauge"));
+        assert!(text.contains("roll_pool_completion_latency{quantile=\"0.5\"}"));
+        assert!(text.contains("roll_pool_completion_latency_count 50"));
+    }
+
+    #[test]
+    fn empty_registry_renders_empty_and_lints() {
+        let reg = MetricsRegistry::new();
+        let text = render(&reg.snapshot());
+        assert!(text.is_empty());
+        lint(&text).unwrap();
+    }
+
+    #[test]
+    fn lint_rejects_malformed_documents() {
+        assert!(lint("no_type_decl 1\n").is_err());
+        assert!(lint("# TYPE x bogus\nx 1\n").is_err());
+        assert!(lint("# TYPE x gauge\nx notafloat\n").is_err());
+        assert!(lint("# TYPE 9bad gauge\n").is_err());
+        assert!(lint("# TYPE x gauge\nx{quantile=\"0.5\" 1\n").is_err());
+        assert!(lint("# TYPE x gauge\nx 1\n").is_ok());
+        assert!(lint("# HELP x doc words here\n# TYPE x summary\nx{quantile=\"0.5\"} 2\nx_sum 3\nx_count 1\n").is_ok());
+    }
+
+    #[test]
+    fn write_to_file_roundtrip() {
+        let reg = MetricsRegistry::new();
+        reg.counter("pool.completed").inc();
+        let dir = std::env::temp_dir().join("roll_prom_test");
+        let path = dir.join("metrics.prom");
+        write_to_file(&reg, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        lint(&text).unwrap();
+        assert!(text.contains("roll_pool_completed_total 1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

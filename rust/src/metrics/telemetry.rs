@@ -1,0 +1,1367 @@
+//! Live telemetry plane: windowed bottleneck verdicts, anomaly
+//! watchdogs, and episode critical-path analysis.
+//!
+//! PR 6's observability is post-hoc — the `FlightRecorder` and the
+//! attribution tables are exported at shutdown. This module makes the
+//! same surfaces *live*: a caller-clocked [`TelemetryPlane`] is ticked
+//! periodically (the real `AsyncController` between training steps,
+//! the virtual-time sim inside its event loop — one impl for both,
+//! like `autoscaler::decide`), pulls cumulative counters from the
+//! existing surfaces ([`AttrSnapshot`] attribution, `TokenLedger`
+//! deltas, queue depth, buffer staleness, completion latency,
+//! recorder open spans) and folds each window into
+//!
+//! 1. a **bottleneck verdict** ([`BottleneckVerdict`]) from a pure,
+//!    unit-testable decision rule ([`verdict`]),
+//! 2. **anomaly watchdogs** with fire/clear hysteresis, each
+//!    transition emitting a structured [`TelemetryAlert`] into the
+//!    trace and the metrics registry ([`publish`]),
+//! 3. an **episode critical-path decomposition**
+//!    ([`CriticalPath`] / [`fold_episode`]) of finished episodes'
+//!    `TraceEvent` lifecycles into per-stage delays with windowed
+//!    p50/p99.
+//!
+//! The plane is pure state + arithmetic: no threads, no clocks of its
+//! own, no I/O. Callers export its JSONL timeline
+//! ([`TelemetryPlane::timeline_jsonl`]) next to the existing trace
+//! exports and render the registry via `metrics/prometheus.rs`. A
+//! disabled plane (`cfg.enabled == false`) returns `None` from every
+//! tick before touching any state, so legacy configs stay
+//! byte-identical.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::metrics::registry::MetricsRegistry;
+use crate::metrics::trace::{AttrSnapshot, EventPhase, FlightRecorder, TraceEvent};
+use crate::metrics::Histogram;
+
+/// `telemetry:` block (YAML/CLI). Absent block == `disabled()` ==
+/// every tick is a single branch and legacy behavior is untouched.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryCfg {
+    /// master switch
+    pub enabled: bool,
+    /// minimum seconds (wall or virtual) between verdict windows
+    pub window_secs: f64,
+    /// write Prometheus text exposition here at end of run
+    pub prometheus_path: Option<PathBuf>,
+    /// write the verdict-timeline JSONL here at end of run
+    pub verdict_path: Option<PathBuf>,
+    /// (weight_sync + draining) fraction of replica time at or above
+    /// which the window is `SyncStall`
+    pub sync_stall_frac: f64,
+    /// `TailBound` when window p99 completion latency exceeds
+    /// `tail_ratio × p50`
+    pub tail_ratio: f64,
+    /// trainer-blocked-in-`get_batch` fraction of the window at or
+    /// above which the trainer is starved (`RolloutBound` /
+    /// `QueueStarved`)
+    pub rollout_wait_frac: f64,
+    /// idle-bubble fraction of serving time at or above which the
+    /// fleet is underfed (`QueueStarved` / `TrainBound`)
+    pub idle_frac: f64,
+    /// throughput-regression watchdog: fire when the window's episode
+    /// rate sits this many EWMA standard deviations below the mean
+    pub throughput_sigma: f64,
+    /// stalled-episode watchdog: fire when the oldest open decode
+    /// span is older than this
+    pub stall_timeout_secs: f64,
+    /// waste watchdog: fire when wasted tokens exceed this fraction
+    /// of the window's token flow
+    pub waste_budget: f64,
+    /// staleness watchdog: fire when the window's version gap meets
+    /// this budget
+    pub gap_budget: f64,
+}
+
+impl TelemetryCfg {
+    /// The absent-block state: one branch per tick, nothing recorded.
+    pub fn disabled() -> Self {
+        TelemetryCfg { enabled: false, ..Self::on() }
+    }
+
+    /// Enabled with default thresholds (the values the YAML block
+    /// starts from before per-key overrides).
+    pub fn on() -> Self {
+        TelemetryCfg {
+            enabled: true,
+            window_secs: 5.0,
+            prometheus_path: None,
+            verdict_path: None,
+            sync_stall_frac: 0.15,
+            tail_ratio: 6.0,
+            rollout_wait_frac: 0.4,
+            idle_frac: 0.5,
+            throughput_sigma: 3.0,
+            stall_timeout_secs: 30.0,
+            waste_budget: 0.2,
+            gap_budget: 8.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.enabled {
+            return Ok(());
+        }
+        let frac = |name: &str, v: f64| {
+            if v > 0.0 && v <= 1.0 {
+                Ok(())
+            } else {
+                Err(format!("telemetry.{name} must be in (0, 1], got {v}"))
+            }
+        };
+        if !(self.window_secs > 0.0) {
+            return Err(format!("telemetry.window_secs must be > 0, got {}", self.window_secs));
+        }
+        frac("sync_stall_frac", self.sync_stall_frac)?;
+        frac("rollout_wait_frac", self.rollout_wait_frac)?;
+        frac("idle_frac", self.idle_frac)?;
+        frac("waste_budget", self.waste_budget)?;
+        if !(self.tail_ratio > 1.0) {
+            return Err(format!("telemetry.tail_ratio must be > 1, got {}", self.tail_ratio));
+        }
+        if !(self.throughput_sigma > 0.0) {
+            return Err(format!(
+                "telemetry.throughput_sigma must be > 0, got {}",
+                self.throughput_sigma
+            ));
+        }
+        if !(self.stall_timeout_secs > 0.0) {
+            return Err(format!(
+                "telemetry.stall_timeout_secs must be > 0, got {}",
+                self.stall_timeout_secs
+            ));
+        }
+        if !(self.gap_budget >= 1.0) {
+            return Err(format!("telemetry.gap_budget must be >= 1, got {}", self.gap_budget));
+        }
+        Ok(())
+    }
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// Where the window's time went — the live answer to "what is the
+/// system waiting on right now".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BottleneckVerdict {
+    /// the trainer starves waiting for samples while the fleet is busy
+    RolloutBound,
+    /// the fleet idles with finished samples queued — training is slow
+    TrainBound,
+    /// weight-sync pauses / drains dominate replica time
+    SyncStall,
+    /// nothing anywhere: replicas idle, pool queue empty, trainer
+    /// waiting — the prompt feed upstream is the bottleneck
+    QueueStarved,
+    /// a long-tail straggler stretches p99 far past p50
+    TailBound,
+    #[default]
+    Healthy,
+}
+
+impl BottleneckVerdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BottleneckVerdict::RolloutBound => "RolloutBound",
+            BottleneckVerdict::TrainBound => "TrainBound",
+            BottleneckVerdict::SyncStall => "SyncStall",
+            BottleneckVerdict::QueueStarved => "QueueStarved",
+            BottleneckVerdict::TailBound => "TailBound",
+            BottleneckVerdict::Healthy => "Healthy",
+        }
+    }
+
+    /// lowercase key for metric names (`telemetry.verdict.<key>`)
+    pub fn metric_key(&self) -> &'static str {
+        match self {
+            BottleneckVerdict::RolloutBound => "rollout_bound",
+            BottleneckVerdict::TrainBound => "train_bound",
+            BottleneckVerdict::SyncStall => "sync_stall",
+            BottleneckVerdict::QueueStarved => "queue_starved",
+            BottleneckVerdict::TailBound => "tail_bound",
+            BottleneckVerdict::Healthy => "healthy",
+        }
+    }
+}
+
+/// Inputs to the pure verdict rule — all *window-local* quantities
+/// (attribution delta, window percentiles, window fractions).
+#[derive(Clone, Debug, Default)]
+pub struct VerdictInputs {
+    /// replica-time attribution over the window
+    pub attr: AttrSnapshot,
+    /// pool queue depth at window end
+    pub queue_depth: f64,
+    /// finished samples sitting in the buffer at window end
+    pub buffer_ready: f64,
+    /// fraction of the window the trainer spent blocked in get_batch
+    pub train_wait_frac: f64,
+    /// window p50/p99 episode-completion latency (0 when none)
+    pub lat_p50: f64,
+    pub lat_p99: f64,
+}
+
+/// The decision rule, first match wins:
+///
+/// 1. `SyncStall` — weight-sync + draining dominate replica time
+/// 2. `TailBound` — p99 ≥ `tail_ratio` × p50 among window completions
+/// 3. trainer starved (`train_wait_frac` high):
+///    `QueueStarved` when the fleet is *also* idle with an empty pool
+///    queue (no work exists anywhere), else `RolloutBound`
+/// 4. `TrainBound` — fleet idle while finished samples wait
+/// 5. `Healthy`
+///
+/// Pure function of its inputs; every arm is unit-tested below.
+pub fn verdict(i: &VerdictInputs, cfg: &TelemetryCfg) -> BottleneckVerdict {
+    let total = i.attr.total();
+    let sync_frac = if total > 0.0 { (i.attr.weight_sync + i.attr.draining) / total } else { 0.0 };
+    let idle = i.attr.bubble_frac();
+    if sync_frac >= cfg.sync_stall_frac {
+        return BottleneckVerdict::SyncStall;
+    }
+    if i.lat_p50 > 0.0 && i.lat_p99 >= cfg.tail_ratio * i.lat_p50 {
+        return BottleneckVerdict::TailBound;
+    }
+    if i.train_wait_frac >= cfg.rollout_wait_frac {
+        if idle >= cfg.idle_frac && i.queue_depth < 1.0 {
+            return BottleneckVerdict::QueueStarved;
+        }
+        return BottleneckVerdict::RolloutBound;
+    }
+    if idle >= cfg.idle_frac && i.buffer_ready >= 1.0 {
+        return BottleneckVerdict::TrainBound;
+    }
+    BottleneckVerdict::Healthy
+}
+
+/// Which watchdog spoke.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertKind {
+    ThroughputRegression,
+    StalledEpisode,
+    WasteBudget,
+    VersionGapBudget,
+}
+
+impl AlertKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlertKind::ThroughputRegression => "throughput_regression",
+            AlertKind::StalledEpisode => "stalled_episode",
+            AlertKind::WasteBudget => "waste_budget",
+            AlertKind::VersionGapBudget => "version_gap_budget",
+        }
+    }
+}
+
+/// A watchdog transition. `firing == true` is the alarm raising,
+/// `false` is the all-clear; steady state (still firing / still
+/// quiet) emits nothing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetryAlert {
+    /// window-end timestamp the transition was observed at
+    pub t: f64,
+    pub kind: AlertKind,
+    pub firing: bool,
+    /// the observed value that crossed (or re-crossed) the line
+    pub value: f64,
+    pub threshold: f64,
+}
+
+impl TelemetryAlert {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"kind\":\"{}\",\"firing\":{},\"value\":{:.6},\"threshold\":{:.6}}}",
+            self.kind.as_str(),
+            self.firing,
+            self.value,
+            self.threshold
+        )
+    }
+}
+
+/// Fire at `value >= threshold`, clear only once `value <=
+/// threshold/2` — the half-threshold gap is the hysteresis band that
+/// stops a value oscillating around the line from spamming
+/// fire/clear pairs every window.
+#[derive(Clone, Copy, Debug, Default)]
+struct Hysteresis {
+    firing: bool,
+}
+
+impl Hysteresis {
+    fn update(
+        &mut self,
+        t: f64,
+        kind: AlertKind,
+        value: f64,
+        threshold: f64,
+    ) -> Option<TelemetryAlert> {
+        if !self.firing && value >= threshold {
+            self.firing = true;
+            return Some(TelemetryAlert { t, kind, firing: true, value, threshold });
+        }
+        if self.firing && value <= threshold / 2.0 {
+            self.firing = false;
+            return Some(TelemetryAlert { t, kind, firing: false, value, threshold });
+        }
+        None
+    }
+}
+
+/// EWMA mean/variance of window throughput; the regression watchdog
+/// fires on the z-score of a *drop* (a faster-than-usual window never
+/// alarms). Needs three windows of warmup before it can fire.
+#[derive(Clone, Copy, Debug, Default)]
+struct ThroughputWatch {
+    mean: f64,
+    var: f64,
+    n: u64,
+}
+
+const EWMA_ALPHA: f64 = 0.3;
+
+impl ThroughputWatch {
+    /// z-score of `x` *below* the mean (positive == regression)
+    fn z(&self, x: f64) -> f64 {
+        if self.n < 3 {
+            return 0.0;
+        }
+        (self.mean - x) / self.var.sqrt().max(1e-9)
+    }
+
+    fn update(&mut self, x: f64) {
+        if self.n == 0 {
+            self.mean = x;
+        } else {
+            let d = x - self.mean;
+            self.mean += EWMA_ALPHA * d;
+            self.var = (1.0 - EWMA_ALPHA) * (self.var + EWMA_ALPHA * d * d);
+        }
+        self.n += 1;
+    }
+}
+
+/// One cumulative reading of every surface the plane watches. The
+/// caller owns the clock (`now` is wall seconds for the real
+/// controller, virtual seconds for the sim) and passes *cumulative*
+/// counters — the plane differences consecutive readings itself, so
+/// it never resets or double-consumes a shared window (the pool's
+/// reset-on-read latency percentiles are the one exception: they are
+/// already window-scoped, so they pass through as-is).
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySignals {
+    pub now: f64,
+    /// cumulative completed episodes
+    pub completed: u64,
+    /// pool queue depth right now
+    pub queue_depth: f64,
+    /// routable replicas right now
+    pub serving: usize,
+    /// cumulative replica-time attribution
+    pub attr: AttrSnapshot,
+    /// cumulative token ledger
+    pub wasted_tokens: u64,
+    pub salvaged_tokens: u64,
+    pub prefix_hit_tokens: u64,
+    /// cumulative useful decoded tokens, when the caller tracks them
+    /// (the sim does); 0 keeps the waste-rate denominator honest
+    pub produced_tokens: u64,
+    /// window version-gap signal (mean or max consumed gap — caller's
+    /// choice, compared against `gap_budget`)
+    pub version_gap: f64,
+    /// finished samples sitting in the buffer right now
+    pub buffer_ready: f64,
+    /// cumulative seconds the trainer spent blocked in get_batch
+    pub train_wait_secs: f64,
+    /// window p50/p99 episode-completion latency (already windowed)
+    pub lat_p50: f64,
+    pub lat_p99: f64,
+    /// age of the oldest still-open decode span (0 when none)
+    pub oldest_open_decode_secs: f64,
+}
+
+/// Per-stage window percentile row of the critical-path decomposition.
+#[derive(Clone, Debug)]
+pub struct StageStat {
+    pub stage: &'static str,
+    pub p50: f64,
+    pub p99: f64,
+    pub n: u64,
+}
+
+/// One closed telemetry window: `[t0, t1)`, its verdict, the window
+/// rates the verdict was derived from, any watchdog transitions, and
+/// the critical-path percentiles of episodes that finished inside it.
+#[derive(Clone, Debug)]
+pub struct TelemetryWindow {
+    pub t0: f64,
+    pub t1: f64,
+    pub verdict: BottleneckVerdict,
+    /// episodes per second over the window
+    pub throughput: f64,
+    /// wasted / (wasted + salvaged + prefix-hit + produced) tokens
+    pub waste_rate: f64,
+    pub queue_depth: f64,
+    pub serving: usize,
+    /// attribution delta over the window
+    pub attr: AttrSnapshot,
+    pub lat_p50: f64,
+    pub lat_p99: f64,
+    pub alerts: Vec<TelemetryAlert>,
+    pub stages: Vec<StageStat>,
+}
+
+impl TelemetryWindow {
+    /// One JSONL timeline line.
+    pub fn to_json(&self) -> String {
+        let alerts: Vec<String> = self.alerts.iter().map(|a| a.to_json()).collect();
+        let stages: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"stage\":\"{}\",\"p50\":{:.6},\"p99\":{:.6},\"n\":{}}}",
+                    s.stage, s.p50, s.p99, s.n
+                )
+            })
+            .collect();
+        format!(
+            "{{\"t0\":{:.6},\"t1\":{:.6},\"verdict\":\"{}\",\"throughput\":{:.6},\
+             \"waste_rate\":{:.6},\"queue_depth\":{:.3},\"serving\":{},\
+             \"lat_p50\":{:.6},\"lat_p99\":{:.6},\
+             \"attr\":{{\"decode_busy\":{:.6},\"prefill\":{:.6},\"prefill_replay\":{:.6},\
+             \"weight_sync\":{:.6},\"draining\":{:.6},\"idle_bubble\":{:.6}}},\
+             \"alerts\":[{}],\"stages\":[{}]}}",
+            self.t0,
+            self.t1,
+            self.verdict.as_str(),
+            self.throughput,
+            self.waste_rate,
+            self.queue_depth,
+            self.serving,
+            self.lat_p50,
+            self.lat_p99,
+            self.attr.decode_busy,
+            self.attr.prefill,
+            self.attr.prefill_replay,
+            self.attr.weight_sync,
+            self.attr.draining,
+            self.attr.idle_bubble,
+            alerts.join(","),
+            stages.join(",")
+        )
+    }
+
+    /// The live one-line status (`StepLog` / example output).
+    pub fn status(&self) -> String {
+        let firing: Vec<&str> =
+            self.alerts.iter().filter(|a| a.firing).map(|a| a.kind.as_str()).collect();
+        let alarm = if firing.is_empty() { String::new() } else { format!(" !{}", firing.join(",")) };
+        format!(
+            "[tele {:.1}s] {} thr={:.2}/s waste={:.0}% q={:.1} attr={}{}",
+            self.t1,
+            self.verdict.as_str(),
+            self.throughput,
+            self.waste_rate * 100.0,
+            self.queue_depth,
+            self.attr.format_compact(),
+            alarm
+        )
+    }
+}
+
+/// Compact, `Copy` summary of the latest window for embedding in
+/// `StepLog` (which stays `Copy`-friendly via `Option`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TelemetryStatus {
+    pub verdict: BottleneckVerdict,
+    /// watchdogs currently in the firing state
+    pub alerts_active: u32,
+    pub throughput: f64,
+    pub waste_rate: f64,
+}
+
+/// Episode lifecycle stages the critical-path analyzer decomposes a
+/// finished episode into. Span stages (`queue`, `prefill`, `decode`,
+/// `env`, `score`, `buffer`) sum matched Begin/End pairs; `route` is
+/// the dispatch gap — queue exit (or episode start) to first decode
+/// Begin. Stages absent from a trace contribute zero.
+pub const STAGES: [&str; 7] = ["queue", "route", "prefill", "decode", "env", "score", "buffer"];
+
+/// Fold one episode's events (any order; sorted internally by
+/// timestamp then seq) into per-stage seconds, indexed like
+/// [`STAGES`]. Pure function — the unit tests drive it with
+/// synthetic lifecycles.
+pub fn fold_episode(events: &[TraceEvent]) -> [f64; 7] {
+    let mut evs: Vec<&TraceEvent> = events.iter().collect();
+    evs.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap_or(std::cmp::Ordering::Equal).then(a.seq.cmp(&b.seq)));
+    let mut out = [0.0f64; 7];
+    // open Begin per span-stage name -> begin time
+    let mut open: HashMap<&str, f64> = HashMap::new();
+    let first_t = evs.first().map(|e| e.t).unwrap_or(0.0);
+    let mut queue_exit: Option<f64> = None;
+    let mut first_decode: Option<f64> = None;
+    for e in &evs {
+        let Some(idx) = STAGES.iter().position(|s| *s == e.name) else { continue };
+        match e.phase {
+            EventPhase::Begin => {
+                open.entry(e.name).or_insert(e.t);
+                if e.name == "decode" && first_decode.is_none() {
+                    first_decode = Some(e.t);
+                }
+            }
+            EventPhase::End => {
+                if let Some(b) = open.remove(e.name) {
+                    out[idx] += (e.t - b).max(0.0);
+                }
+                if e.name == "queue" {
+                    queue_exit = Some(e.t);
+                }
+            }
+            EventPhase::Instant => {}
+        }
+    }
+    if let Some(d) = first_decode {
+        let from = queue_exit.filter(|&q| q <= d).unwrap_or(first_t);
+        out[1] = (d - from).max(0.0); // route
+    }
+    out
+}
+
+/// Windowed per-stage delay histograms fed by [`fold_episode`].
+#[derive(Debug)]
+pub struct CriticalPath {
+    hists: Vec<Histogram>,
+    episodes: u64,
+}
+
+impl Default for CriticalPath {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CriticalPath {
+    pub fn new() -> Self {
+        CriticalPath {
+            hists: (0..STAGES.len()).map(|_| Histogram::new(1e-5, 1.3)).collect(),
+            episodes: 0,
+        }
+    }
+
+    pub fn observe_episode(&mut self, events: &[TraceEvent]) {
+        let stages = fold_episode(events);
+        for (i, &v) in stages.iter().enumerate() {
+            if v > 0.0 {
+                self.hists[i].record(v);
+            }
+        }
+        self.episodes += 1;
+    }
+
+    pub fn episodes(&self) -> u64 {
+        self.episodes
+    }
+
+    /// Per-stage p50/p99 rows for stages that saw any samples.
+    pub fn stage_stats(&self) -> Vec<StageStat> {
+        STAGES
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.hists[*i].count() > 0)
+            .map(|(i, s)| StageStat {
+                stage: s,
+                p50: self.hists[i].percentile(50.0),
+                p99: self.hists[i].percentile(99.0),
+                n: self.hists[i].count(),
+            })
+            .collect()
+    }
+
+    fn reset(&mut self) {
+        for h in &mut self.hists {
+            h.reset();
+        }
+        self.episodes = 0;
+    }
+}
+
+/// The plane. Caller-clocked: `tick` with a fresh cumulative
+/// [`TelemetrySignals`] reading whenever convenient; a window closes
+/// (and a verdict is produced) once at least `window_secs` have
+/// elapsed since the previous close. The first tick only seeds the
+/// baseline.
+#[derive(Debug)]
+pub struct TelemetryPlane {
+    cfg: TelemetryCfg,
+    prev: Option<TelemetrySignals>,
+    windows: Vec<TelemetryWindow>,
+    thr: ThroughputWatch,
+    dog_thr: Hysteresis,
+    dog_stall: Hysteresis,
+    dog_waste: Hysteresis,
+    dog_gap: Hysteresis,
+    /// trace watermark: events at or below this seq are folded
+    seen_seq: u64,
+    /// open episodes: req -> lifecycle events so far
+    pending: HashMap<u64, Vec<TraceEvent>>,
+    window_path: CriticalPath,
+    last_status: Option<TelemetryStatus>,
+}
+
+/// Episodes kept open at most this long before eviction (ring
+/// overwrite can eat an End event; don't leak the map).
+const MAX_PENDING_EPISODES: usize = 16_384;
+
+impl TelemetryPlane {
+    pub fn new(cfg: TelemetryCfg) -> Self {
+        TelemetryPlane {
+            cfg,
+            prev: None,
+            windows: Vec::new(),
+            thr: ThroughputWatch::default(),
+            dog_thr: Hysteresis::default(),
+            dog_stall: Hysteresis::default(),
+            dog_waste: Hysteresis::default(),
+            dog_gap: Hysteresis::default(),
+            seen_seq: 0,
+            pending: HashMap::new(),
+            window_path: CriticalPath::new(),
+            last_status: None,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn cfg(&self) -> &TelemetryCfg {
+        &self.cfg
+    }
+
+    /// True once `now` is at least a window past the last close — the
+    /// cheap guard callers use to skip gathering signals.
+    pub fn due(&self, now: f64) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        match &self.prev {
+            None => true,
+            Some(p) => now - p.now >= self.cfg.window_secs,
+        }
+    }
+
+    /// Fold new recorder events (since the last call) into the
+    /// critical-path analyzer. An episode closes on its `decode` End
+    /// (terminal in both the pool's and the sim's schema) or a `lost`
+    /// instant.
+    pub fn observe_trace(&mut self, recorder: &FlightRecorder) {
+        if !self.cfg.enabled {
+            return;
+        }
+        for e in recorder.events() {
+            if e.seq < self.seen_seq {
+                continue;
+            }
+            self.seen_seq = e.seq + 1;
+            self.observe_event(e);
+        }
+    }
+
+    /// Same, from an event slice (pure-testing / pre-collected).
+    pub fn observe_events(&mut self, events: &[TraceEvent]) {
+        if !self.cfg.enabled {
+            return;
+        }
+        for e in events {
+            if e.seq < self.seen_seq {
+                continue;
+            }
+            self.seen_seq = e.seq + 1;
+            self.observe_event(e.clone());
+        }
+    }
+
+    fn observe_event(&mut self, e: TraceEvent) {
+        let terminal = (e.name == "decode" && e.phase == EventPhase::End) || e.name == "lost";
+        let req = e.req;
+        self.pending.entry(req).or_default().push(e);
+        if terminal {
+            if let Some(evs) = self.pending.remove(&req) {
+                self.window_path.observe_episode(&evs);
+            }
+        } else if self.pending.len() > MAX_PENDING_EPISODES {
+            // evict an arbitrary stale episode to bound memory
+            let victim = self.pending.keys().next().copied();
+            if let Some(k) = victim {
+                self.pending.remove(&k);
+            }
+        }
+    }
+
+    /// Advance the plane. Returns the closed window (if one closed on
+    /// this tick) — `None` while disabled, on the baseline-seeding
+    /// first call, or when less than `window_secs` has elapsed.
+    pub fn tick(&mut self, sig: &TelemetrySignals) -> Option<TelemetryWindow> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let Some(prev) = self.prev.clone() else {
+            self.prev = Some(sig.clone());
+            return None;
+        };
+        let dt = sig.now - prev.now;
+        if dt < self.cfg.window_secs {
+            return None;
+        }
+        Some(self.close_window(&prev, sig, dt))
+    }
+
+    /// Force-close the current partial window at `sig.now` — the
+    /// end-of-run flush, so the window timeline tiles the whole run
+    /// (`[0, makespan]` with no truncated remainder). No-op while
+    /// disabled, before the baseline seeds, or when no time has
+    /// passed since the last close.
+    pub fn flush(&mut self, sig: &TelemetrySignals) -> Option<TelemetryWindow> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let prev = self.prev.clone()?;
+        let dt = sig.now - prev.now;
+        if dt <= 0.0 {
+            return None;
+        }
+        Some(self.close_window(&prev, sig, dt))
+    }
+
+    fn close_window(
+        &mut self,
+        prev: &TelemetrySignals,
+        sig: &TelemetrySignals,
+        dt: f64,
+    ) -> TelemetryWindow {
+        let d_completed = sig.completed.saturating_sub(prev.completed);
+        let throughput = d_completed as f64 / dt;
+        let d_wasted = sig.wasted_tokens.saturating_sub(prev.wasted_tokens);
+        let d_useful = sig.salvaged_tokens.saturating_sub(prev.salvaged_tokens)
+            + sig.prefix_hit_tokens.saturating_sub(prev.prefix_hit_tokens)
+            + sig.produced_tokens.saturating_sub(prev.produced_tokens);
+        let flow = d_wasted + d_useful;
+        let waste_rate = if flow == 0 { 0.0 } else { d_wasted as f64 / flow as f64 };
+        let attr_delta = sig.attr.delta(&prev.attr);
+        let train_wait_frac =
+            ((sig.train_wait_secs - prev.train_wait_secs) / dt).clamp(0.0, 1.0);
+
+        let v = verdict(
+            &VerdictInputs {
+                attr: attr_delta,
+                queue_depth: sig.queue_depth,
+                buffer_ready: sig.buffer_ready,
+                train_wait_frac,
+                lat_p50: sig.lat_p50,
+                lat_p99: sig.lat_p99,
+            },
+            &self.cfg,
+        );
+
+        let t1 = sig.now;
+        let mut alerts = Vec::new();
+        // throughput regression: z-score against EWMA history, then
+        // absorb the window into the history
+        let z = self.thr.z(throughput);
+        if let Some(a) = self.dog_thr.update(
+            t1,
+            AlertKind::ThroughputRegression,
+            z,
+            self.cfg.throughput_sigma,
+        ) {
+            alerts.push(a);
+        }
+        self.thr.update(throughput);
+        if let Some(a) = self.dog_stall.update(
+            t1,
+            AlertKind::StalledEpisode,
+            sig.oldest_open_decode_secs,
+            self.cfg.stall_timeout_secs,
+        ) {
+            alerts.push(a);
+        }
+        if let Some(a) =
+            self.dog_waste.update(t1, AlertKind::WasteBudget, waste_rate, self.cfg.waste_budget)
+        {
+            alerts.push(a);
+        }
+        if let Some(a) =
+            self.dog_gap.update(t1, AlertKind::VersionGapBudget, sig.version_gap, self.cfg.gap_budget)
+        {
+            alerts.push(a);
+        }
+
+        let w = TelemetryWindow {
+            t0: prev.now,
+            t1,
+            verdict: v,
+            throughput,
+            waste_rate,
+            queue_depth: sig.queue_depth,
+            serving: sig.serving,
+            attr: attr_delta,
+            lat_p50: sig.lat_p50,
+            lat_p99: sig.lat_p99,
+            alerts,
+            stages: self.window_path.stage_stats(),
+        };
+        self.window_path.reset();
+        self.prev = Some(sig.clone());
+        self.last_status = Some(TelemetryStatus {
+            verdict: v,
+            alerts_active: self.alerts_active(),
+            throughput,
+            waste_rate,
+        });
+        self.windows.push(w.clone());
+        w
+    }
+
+    /// Watchdogs currently in the firing state.
+    pub fn alerts_active(&self) -> u32 {
+        [self.dog_thr, self.dog_stall, self.dog_waste, self.dog_gap]
+            .iter()
+            .filter(|d| d.firing)
+            .count() as u32
+    }
+
+    /// Latest-window summary for `StepLog`; `None` until the first
+    /// window closes (or forever while disabled).
+    pub fn step_status(&self) -> Option<TelemetryStatus> {
+        self.last_status
+    }
+
+    pub fn windows(&self) -> &[TelemetryWindow] {
+        &self.windows
+    }
+
+    /// The verdict timeline, one JSON object per line — written next
+    /// to the existing trace exports.
+    pub fn timeline_jsonl(&self) -> String {
+        let mut out = String::new();
+        for w in &self.windows {
+            out.push_str(&w.to_json());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Every alert transition across all closed windows.
+    pub fn alerts(&self) -> Vec<TelemetryAlert> {
+        self.windows.iter().flat_map(|w| w.alerts.iter().cloned()).collect()
+    }
+}
+
+/// Push a closed window into the shared trace + registry: a
+/// `telemetry_verdict` instant (pool ring) plus one `telemetry_alert`
+/// instant per transition, verdict/alert counters, and live gauges.
+/// Uses `emit_at(window.t1)` so virtual-time callers timestamp
+/// correctly.
+pub fn publish(w: &TelemetryWindow, recorder: &FlightRecorder, registry: &MetricsRegistry) {
+    registry.counter("telemetry.windows").inc();
+    registry.counter(&format!("telemetry.verdict.{}", w.verdict.metric_key())).inc();
+    registry.gauge("telemetry.throughput").set(w.throughput);
+    registry.gauge("telemetry.waste_rate").set(w.waste_rate);
+    registry.gauge("telemetry.queue_depth").set(w.queue_depth);
+    registry.gauge("telemetry.lat_p99").set(w.lat_p99);
+    recorder.emit_at(
+        "telemetry_verdict",
+        EventPhase::Instant,
+        0,
+        None,
+        0,
+        0,
+        w.t1,
+        format!("verdict={} thr={:.3} waste={:.3}", w.verdict.as_str(), w.throughput, w.waste_rate),
+    );
+    for a in &w.alerts {
+        if a.firing {
+            registry.counter(&format!("telemetry.alert.{}", a.kind.as_str())).inc();
+        }
+        recorder.emit_at(
+            "telemetry_alert",
+            EventPhase::Instant,
+            0,
+            None,
+            0,
+            0,
+            w.t1,
+            format!(
+                "kind={} firing={} value={:.4} threshold={:.4}",
+                a.kind.as_str(),
+                a.firing,
+                a.value,
+                a.threshold
+            ),
+        );
+    }
+}
+
+/// Satellite: surface the recorder's own health in the registry —
+/// overflow drops (silent trace loss) and per-ring occupancy.
+pub fn publish_recorder_gauges(recorder: &FlightRecorder, registry: &MetricsRegistry) {
+    registry.gauge("trace.dropped").set(recorder.dropped() as f64);
+    for (i, occ) in recorder.ring_occupancy().iter().enumerate() {
+        registry.gauge(&format!("trace.ring_occupancy.{i}")).set(*occ as f64);
+    }
+}
+
+/// Adaptive redundancy hint (log-only): with observed per-episode
+/// failure probability `p` (fail-slow timeouts + fail-stop lane
+/// deaths over episodes attempted), the expected attempts per success
+/// is `1/(1-p)` — the redundancy factor that would hide the observed
+/// failure rate. Never below the configured base, capped at 3x so a
+/// pathological window cannot suggest unbounded duplication.
+pub fn redundancy_hint(base: f64, failure_rate: f64) -> f64 {
+    let p = failure_rate.clamp(0.0, 0.9);
+    (base.max(1.0)).max(1.0 / (1.0 - p)).min(3.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TelemetryCfg {
+        TelemetryCfg { window_secs: 1.0, ..TelemetryCfg::on() }
+    }
+
+    fn attr(decode: f64, sync: f64, drain: f64, idle: f64) -> AttrSnapshot {
+        AttrSnapshot {
+            decode_busy: decode,
+            prefill: 0.0,
+            prefill_replay: 0.0,
+            weight_sync: sync,
+            draining: drain,
+            idle_bubble: idle,
+        }
+    }
+
+    // ---- verdict rules, one per arm ----
+
+    #[test]
+    fn verdict_sync_stall_when_sync_dominates() {
+        let i = VerdictInputs { attr: attr(7.0, 2.0, 1.0, 0.0), ..Default::default() };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::SyncStall);
+    }
+
+    #[test]
+    fn verdict_tail_bound_on_p99_blowup() {
+        let i = VerdictInputs {
+            attr: attr(10.0, 0.0, 0.0, 0.0),
+            lat_p50: 1.0,
+            lat_p99: 10.0,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::TailBound);
+    }
+
+    #[test]
+    fn verdict_sync_stall_beats_tail_bound() {
+        let i = VerdictInputs {
+            attr: attr(5.0, 5.0, 0.0, 0.0),
+            lat_p50: 1.0,
+            lat_p99: 10.0,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::SyncStall);
+    }
+
+    #[test]
+    fn verdict_rollout_bound_when_trainer_starves_and_fleet_busy() {
+        let i = VerdictInputs {
+            attr: attr(10.0, 0.0, 0.0, 0.5),
+            train_wait_frac: 0.8,
+            queue_depth: 12.0,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::RolloutBound);
+    }
+
+    #[test]
+    fn verdict_queue_starved_when_nothing_anywhere() {
+        let i = VerdictInputs {
+            attr: attr(1.0, 0.0, 0.0, 9.0),
+            train_wait_frac: 0.9,
+            queue_depth: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::QueueStarved);
+    }
+
+    #[test]
+    fn verdict_train_bound_when_fleet_idles_over_full_buffer() {
+        let i = VerdictInputs {
+            attr: attr(2.0, 0.0, 0.0, 8.0),
+            buffer_ready: 64.0,
+            train_wait_frac: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::TrainBound);
+    }
+
+    #[test]
+    fn verdict_healthy_otherwise() {
+        let i = VerdictInputs {
+            attr: attr(9.0, 0.5, 0.0, 0.5),
+            lat_p50: 1.0,
+            lat_p99: 3.0,
+            queue_depth: 2.0,
+            train_wait_frac: 0.1,
+            ..Default::default()
+        };
+        assert_eq!(verdict(&i, &cfg()), BottleneckVerdict::Healthy);
+    }
+
+    #[test]
+    fn verdict_empty_window_is_healthy() {
+        assert_eq!(verdict(&VerdictInputs::default(), &cfg()), BottleneckVerdict::Healthy);
+    }
+
+    // ---- watchdog hysteresis ----
+
+    #[test]
+    fn hysteresis_fires_once_and_clears_at_half() {
+        let mut h = Hysteresis::default();
+        // below threshold: quiet
+        assert!(h.update(1.0, AlertKind::WasteBudget, 0.1, 0.2).is_none());
+        // crosses: fires exactly once
+        let a = h.update(2.0, AlertKind::WasteBudget, 0.5, 0.2).unwrap();
+        assert!(a.firing);
+        assert!(h.update(3.0, AlertKind::WasteBudget, 0.5, 0.2).is_none());
+        // inside the hysteresis band: still firing, still quiet
+        assert!(h.update(4.0, AlertKind::WasteBudget, 0.15, 0.2).is_none());
+        // at/below half: clears exactly once
+        let c = h.update(5.0, AlertKind::WasteBudget, 0.05, 0.2).unwrap();
+        assert!(!c.firing);
+        assert!(h.update(6.0, AlertKind::WasteBudget, 0.05, 0.2).is_none());
+    }
+
+    fn base_sig(now: f64) -> TelemetrySignals {
+        TelemetrySignals { now, ..Default::default() }
+    }
+
+    #[test]
+    fn waste_watchdog_fire_and_clear_through_plane() {
+        let mut p = TelemetryPlane::new(cfg());
+        assert!(p.tick(&base_sig(0.0)).is_none()); // baseline
+        // window 1: 80% waste -> fires
+        let mut s = base_sig(1.0);
+        s.wasted_tokens = 800;
+        s.produced_tokens = 200;
+        let w = p.tick(&s).unwrap();
+        assert!(w.alerts.iter().any(|a| a.kind == AlertKind::WasteBudget && a.firing));
+        assert_eq!(p.alerts_active(), 1);
+        // window 2: clean flow -> clears
+        let mut s2 = s.clone();
+        s2.now = 2.0;
+        s2.produced_tokens += 1000;
+        let w2 = p.tick(&s2).unwrap();
+        assert!(w2.alerts.iter().any(|a| a.kind == AlertKind::WasteBudget && !a.firing));
+        assert_eq!(p.alerts_active(), 0);
+    }
+
+    #[test]
+    fn stall_watchdog_tracks_open_decode_age() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut s = base_sig(1.0);
+        s.oldest_open_decode_secs = 100.0;
+        let w = p.tick(&s).unwrap();
+        assert!(w.alerts.iter().any(|a| a.kind == AlertKind::StalledEpisode && a.firing));
+        let mut s2 = base_sig(2.0);
+        s2.oldest_open_decode_secs = 0.0;
+        let w2 = p.tick(&s2).unwrap();
+        assert!(w2.alerts.iter().any(|a| a.kind == AlertKind::StalledEpisode && !a.firing));
+    }
+
+    #[test]
+    fn version_gap_watchdog_fire_and_clear() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut s = base_sig(1.0);
+        s.version_gap = 20.0;
+        let w = p.tick(&s).unwrap();
+        assert!(w.alerts.iter().any(|a| a.kind == AlertKind::VersionGapBudget && a.firing));
+        let mut s2 = base_sig(2.0);
+        s2.version_gap = 1.0;
+        let w2 = p.tick(&s2).unwrap();
+        assert!(w2.alerts.iter().any(|a| a.kind == AlertKind::VersionGapBudget && !a.firing));
+    }
+
+    #[test]
+    fn throughput_regression_needs_warmup_then_fires_on_drop() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut completed = 0u64;
+        // five steady windows at 100 eps/s: no alarm (incl. warmup)
+        for k in 1..=5 {
+            completed += 100;
+            let mut s = base_sig(k as f64);
+            s.completed = completed;
+            let w = p.tick(&s).unwrap();
+            assert!(
+                !w.alerts.iter().any(|a| a.kind == AlertKind::ThroughputRegression),
+                "steady state must not alarm"
+            );
+        }
+        // collapse to ~zero: fires
+        let mut s = base_sig(6.0);
+        s.completed = completed;
+        let w = p.tick(&s).unwrap();
+        assert!(w.alerts.iter().any(|a| a.kind == AlertKind::ThroughputRegression && a.firing));
+    }
+
+    // ---- plane windowing ----
+
+    #[test]
+    fn disabled_plane_never_produces() {
+        let mut p = TelemetryPlane::new(TelemetryCfg::disabled());
+        assert!(!p.due(1e9));
+        for k in 0..10 {
+            assert!(p.tick(&base_sig(k as f64 * 10.0)).is_none());
+        }
+        assert!(p.windows().is_empty());
+        assert!(p.step_status().is_none());
+    }
+
+    #[test]
+    fn windows_tile_time_contiguously() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        // sub-window ticks close nothing
+        assert!(p.tick(&base_sig(0.4)).is_none());
+        for k in 1..=5 {
+            p.tick(&base_sig(k as f64 * 1.5));
+        }
+        let ws = p.windows();
+        assert_eq!(ws.len(), 5);
+        assert_eq!(ws[0].t0, 0.0);
+        for i in 1..ws.len() {
+            assert_eq!(ws[i].t0, ws[i - 1].t1, "windows must tile without gap or overlap");
+        }
+    }
+
+    #[test]
+    fn flush_closes_partial_window_so_timeline_tiles_the_run() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        p.tick(&base_sig(1.0)); // one full window
+        let sig = base_sig(1.4); // 0.4s remainder: under the window gate
+        assert!(p.tick(&sig).is_none(), "tick must refuse a short window");
+        let w = p.flush(&sig).expect("flush closes the partial remainder");
+        assert_eq!(w.t0, 1.0);
+        assert_eq!(w.t1, 1.4);
+        assert!(p.flush(&sig).is_none(), "zero-width flush is a no-op");
+        let ws = p.windows();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].t1, ws[1].t0);
+    }
+
+    #[test]
+    fn flush_before_baseline_or_disabled_is_a_no_op() {
+        let mut p = TelemetryPlane::new(cfg());
+        assert!(p.flush(&base_sig(5.0)).is_none(), "no baseline yet");
+        let mut off = TelemetryPlane::new(TelemetryCfg::disabled());
+        off.tick(&base_sig(0.0));
+        assert!(off.flush(&base_sig(9.0)).is_none());
+    }
+
+    #[test]
+    fn attr_deltas_telescope_to_cumulative_total() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut cum = 0.0;
+        for k in 1..=4 {
+            cum += 2.5;
+            let mut s = base_sig(k as f64 * 2.0);
+            s.attr = attr(cum, 0.0, 0.0, 0.0);
+            p.tick(&s);
+        }
+        let sum: f64 = p.windows().iter().map(|w| w.attr.total()).sum();
+        assert!((sum - cum).abs() < 1e-9, "window attr must tile the cumulative attr: {sum} vs {cum}");
+    }
+
+    #[test]
+    fn timeline_jsonl_one_line_per_window() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        p.tick(&base_sig(1.0));
+        p.tick(&base_sig(2.0));
+        let out = p.timeline_jsonl();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            assert!(l.starts_with('{') && l.ends_with('}'));
+            assert!(l.contains("\"verdict\":\"Healthy\""));
+        }
+    }
+
+    // ---- critical path ----
+
+    fn ev(seq: u64, t: f64, name: &'static str, phase: EventPhase) -> TraceEvent {
+        TraceEvent {
+            seq,
+            t,
+            name,
+            phase,
+            req: 7,
+            replica: None,
+            generation: 0,
+            version: 0,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn fold_episode_decomposes_queue_route_decode() {
+        let evs = vec![
+            ev(0, 1.0, "queue", EventPhase::Begin),
+            ev(1, 3.0, "queue", EventPhase::End),
+            ev(2, 4.0, "decode", EventPhase::Begin),
+            ev(3, 9.0, "decode", EventPhase::End),
+        ];
+        let s = fold_episode(&evs);
+        assert!((s[0] - 2.0).abs() < 1e-12, "queue");
+        assert!((s[1] - 1.0).abs() < 1e-12, "route");
+        assert!((s[3] - 5.0).abs() < 1e-12, "decode");
+        assert_eq!(s[2], 0.0);
+        assert_eq!(s[4], 0.0);
+    }
+
+    #[test]
+    fn fold_episode_handles_env_score_buffer_spans() {
+        let evs = vec![
+            ev(0, 0.0, "decode", EventPhase::Begin),
+            ev(1, 2.0, "env", EventPhase::Begin),
+            ev(2, 3.5, "env", EventPhase::End),
+            ev(3, 5.0, "score", EventPhase::Begin),
+            ev(4, 5.25, "score", EventPhase::End),
+            ev(5, 5.5, "buffer", EventPhase::Begin),
+            ev(6, 5.75, "buffer", EventPhase::End),
+            ev(7, 6.0, "decode", EventPhase::End),
+        ];
+        let s = fold_episode(&evs);
+        assert!((s[3] - 6.0).abs() < 1e-12, "decode span");
+        assert!((s[4] - 1.5).abs() < 1e-12, "env");
+        assert!((s[5] - 0.25).abs() < 1e-12, "score");
+        assert!((s[6] - 0.25).abs() < 1e-12, "buffer");
+        assert_eq!(s[1], 0.0, "no queue: route measured from first event = 0");
+    }
+
+    #[test]
+    fn critical_path_window_percentiles() {
+        let mut cp = CriticalPath::new();
+        for k in 1..=100u64 {
+            let evs = vec![
+                ev(2 * k, 0.0, "decode", EventPhase::Begin),
+                ev(2 * k + 1, k as f64 * 0.01, "decode", EventPhase::End),
+            ];
+            cp.observe_episode(&evs);
+        }
+        let stats = cp.stage_stats();
+        let decode = stats.iter().find(|s| s.stage == "decode").unwrap();
+        assert_eq!(decode.n, 100);
+        assert!(decode.p50 >= 0.4 && decode.p50 <= 0.7, "p50 {}", decode.p50);
+        assert!(decode.p99 >= 0.85, "p99 {}", decode.p99);
+    }
+
+    #[test]
+    fn plane_folds_terminal_episodes_into_window_stages() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut evs = Vec::new();
+        for r in 0..3u64 {
+            evs.push(TraceEvent { req: r, ..ev(4 * r, 0.1, "queue", EventPhase::Begin) });
+            evs.push(TraceEvent { req: r, ..ev(4 * r + 1, 0.2, "queue", EventPhase::End) });
+            evs.push(TraceEvent { req: r, ..ev(4 * r + 2, 0.3, "decode", EventPhase::Begin) });
+            evs.push(TraceEvent { req: r, ..ev(4 * r + 3, 0.9, "decode", EventPhase::End) });
+        }
+        p.observe_events(&evs);
+        let w = p.tick(&base_sig(1.0)).unwrap();
+        let decode = w.stages.iter().find(|s| s.stage == "decode").unwrap();
+        assert_eq!(decode.n, 3);
+        // watermark: re-observing the same slice is a no-op
+        p.observe_events(&evs);
+        let w2 = p.tick(&base_sig(2.0)).unwrap();
+        assert!(w2.stages.is_empty(), "stages reset per window and events fold once");
+    }
+
+    // ---- publish / registry ----
+
+    #[test]
+    fn publish_bumps_registry_and_trace() {
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut s = base_sig(1.0);
+        s.wasted_tokens = 100; // 100% waste -> alarm
+        let w = p.tick(&s).unwrap();
+        let reg = MetricsRegistry::new();
+        let rec = FlightRecorder::new(64);
+        publish(&w, &rec, &reg);
+        let snap = reg.snapshot();
+        assert!(snap.counters.iter().any(|(n, v)| n == "telemetry.windows" && *v == 1));
+        assert!(snap
+            .counters
+            .iter()
+            .any(|(n, v)| n == "telemetry.alert.waste_budget" && *v == 1));
+        let evs = rec.events();
+        assert!(evs.iter().any(|e| e.name == "telemetry_verdict"));
+        assert!(evs.iter().any(|e| e.name == "telemetry_alert"));
+    }
+
+    #[test]
+    fn recorder_gauges_surface_dropped_and_occupancy() {
+        let rec = FlightRecorder::new(2);
+        for k in 0..5 {
+            rec.emit("x", EventPhase::Instant, k, None, 0, 0, String::new());
+        }
+        let reg = MetricsRegistry::new();
+        publish_recorder_gauges(&rec, &reg);
+        let snap = reg.snapshot();
+        assert!(snap.gauges.iter().any(|(n, v)| n == "trace.dropped" && *v == 3.0));
+        assert!(snap.gauges.iter().any(|(n, v)| n == "trace.ring_occupancy.0" && *v == 2.0));
+    }
+
+    // ---- redundancy hint ----
+
+    #[test]
+    fn redundancy_hint_behaves() {
+        assert_eq!(redundancy_hint(1.0, 0.0), 1.0);
+        assert_eq!(redundancy_hint(1.5, 0.0), 1.5);
+        assert!((redundancy_hint(1.0, 0.5) - 2.0).abs() < 1e-12);
+        assert!(redundancy_hint(1.0, 0.3) > redundancy_hint(1.0, 0.1));
+        assert_eq!(redundancy_hint(1.0, 0.99), 3.0, "capped");
+        assert_eq!(redundancy_hint(2.5, 0.1), 2.5, "never below base");
+    }
+
+    #[test]
+    fn cfg_validation() {
+        assert!(TelemetryCfg::disabled().validate().is_ok());
+        assert!(TelemetryCfg::on().validate().is_ok());
+        let mut c = TelemetryCfg::on();
+        c.window_secs = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TelemetryCfg::on();
+        c.waste_budget = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = TelemetryCfg::on();
+        c.tail_ratio = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = TelemetryCfg::on();
+        c.gap_budget = 0.0;
+        assert!(c.validate().is_err());
+    }
+}

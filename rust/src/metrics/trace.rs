@@ -279,6 +279,52 @@ impl FlightRecorder {
         rings[idx].clone()
     }
 
+    /// Events currently retained per ring (index 0 = pool-level ring,
+    /// `slot + 1` per replica slot). With `dropped()`, the telemetry
+    /// plane publishes these as `trace.ring_occupancy.<i>` gauges so
+    /// silent wraparound loss is visible while the run is live.
+    pub fn ring_occupancy(&self) -> Vec<usize> {
+        self.rings
+            .read()
+            .unwrap()
+            .iter()
+            .map(|r| r.lock().unwrap().buf.len())
+            .collect()
+    }
+
+    /// Spans named `name` with a Begin but no matching End yet, as
+    /// `(req, begin_t)` ordered oldest-first. Drives the telemetry
+    /// plane's stalled-episode watchdog (an open `decode` span whose
+    /// age exceeds the stall timeout is a hung generation). A Begin
+    /// evicted by ring wraparound makes its span invisible here —
+    /// acceptable for a watchdog that only needs the *oldest* strays.
+    pub fn open_spans(&self, name: &str) -> Vec<(u64, f64)> {
+        let mut open: std::collections::HashMap<u64, f64> = std::collections::HashMap::new();
+        for e in self.events() {
+            if e.name != name {
+                continue;
+            }
+            match e.phase {
+                EventPhase::Begin => {
+                    open.entry(e.req).or_insert(e.t);
+                }
+                EventPhase::End => {
+                    open.remove(&e.req);
+                }
+                EventPhase::Instant => {}
+            }
+        }
+        let mut out: Vec<(u64, f64)> = open.into_iter().collect();
+        out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+
+    /// Age of the oldest still-open `name` span at `now` (0 when none
+    /// are open) — the stalled-episode watchdog's input signal.
+    pub fn oldest_open_span_age(&self, name: &str, now: f64) -> f64 {
+        self.open_spans(name).first().map(|&(_, t)| (now - t).max(0.0)).unwrap_or(0.0)
+    }
+
     /// Snapshot of every ring, in global emission order.
     pub fn events(&self) -> Vec<TraceEvent> {
         let rings: Vec<Arc<Mutex<Ring>>> = self.rings.read().unwrap().clone();

@@ -63,6 +63,9 @@ use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, Scal
 use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
 use crate::coordinator::routing::{ReplicaLoad, RouteHint, RoutePolicy, Router};
+use crate::metrics::telemetry::{
+    TelemetryAlert, TelemetryCfg, TelemetryPlane, TelemetrySignals, TelemetryWindow,
+};
 use crate::metrics::trace::{AttrSnapshot, EventPhase, FlightRecorder};
 use crate::sim::queue::{GpuPool, T};
 use crate::util::rng::Rng;
@@ -140,6 +143,14 @@ pub struct FleetSimConfig {
     /// records, so a sim run exports the identical Chrome trace /
     /// JSONL shape. `None` = no tracing (zero overhead).
     pub trace: Option<Arc<FlightRecorder>>,
+    /// live telemetry plane on the virtual clock: the *same*
+    /// `TelemetryPlane` the real controller ticks, fed cumulative sim
+    /// signals after every event and flushed at the end of the run so
+    /// the window timeline tiles `[0, makespan]`. Windows land in
+    /// [`FleetSimReport::telemetry`]. `None` = off; either way the
+    /// plane is a pure observer — it never touches the event loop
+    /// (asserted by `telemetry_is_a_pure_observer`).
+    pub telemetry: Option<TelemetryCfg>,
     /// generation-length predictor knobs; scheduling acts on its output
     /// only under `RoutePolicy::TailAware` (other policies keep the
     /// exact legacy FIFO event order)
@@ -176,6 +187,7 @@ impl FleetSimConfig {
             arrivals: None,
             autoscale: None,
             trace: None,
+            telemetry: None,
             predictor: PredictorCfg::default(),
             seed: 17,
         }
@@ -262,6 +274,11 @@ pub struct FleetSimReport {
     /// construction `attr.total() == replica_seconds` on a static
     /// fleet (no sync wave can touch a drained slot).
     pub attr: AttrSnapshot,
+    /// closed telemetry windows — the windowed verdict timeline, in
+    /// virtual-time order (empty unless `telemetry` was configured)
+    pub telemetry: Vec<TelemetryWindow>,
+    /// every watchdog alert transition across the run, in order
+    pub telemetry_alerts: Vec<TelemetryAlert>,
 }
 
 #[derive(Clone, Copy)]
@@ -383,6 +400,15 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     let mut submitted = 0usize;
     let mut completed = 0usize;
     let mut latencies: Vec<f64> = Vec::with_capacity(cfg.total_requests);
+    // the virtual-time telemetry plane (a pure observer: it reads the
+    // sim state, never schedules events). `window_lats` holds episode
+    // latencies since the last closed window — the plane's windowed
+    // tail signal, reset on every close.
+    let mut plane = cfg.telemetry.as_ref().filter(|t| t.enabled).map(|t| {
+        t.validate().expect("invalid telemetry cfg");
+        TelemetryPlane::new(t.clone())
+    });
+    let mut window_lats: Vec<f64> = Vec::new();
     let mut report = FleetSimReport {
         routed: vec![0; max_slots],
         peak_replicas: init_n,
@@ -726,6 +752,94 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         }};
     }
 
+    // cumulative telemetry reading at `$now` — the sim-side analog of
+    // the pool's `telemetry_signals()`. The attribution mirrors the
+    // final report's categories so per-window deltas telescope back to
+    // the serving replica-second integral; latency percentiles are
+    // window-scoped (reset at every close); trainer-side signals
+    // (buffer, version gap, train wait) have no sim counterpart and
+    // stay zero.
+    macro_rules! tele_signals {
+        ($now:expr) => {{
+            let rs: f64 = report.replica_seconds
+                + (0..replicas.len())
+                    .filter(|&i| serving[i])
+                    .map(|i| $now - activated[i])
+                    .sum::<f64>();
+            let busy: f64 = replicas.iter().map(|p| p.total_busy_secs($now)).sum();
+            let synced: f64 = replicas.iter().map(|p| p.paused_secs($now)).sum();
+            let prefill = (completed as f64 * cfg.decode.prefill_time).min(busy);
+            let prefill_replay = (report.prefill_replay_tokens * cfg.prefill_time_per_token)
+                .min((busy - prefill).max(0.0));
+            let oldest = dispatch_time.values().fold(f64::INFINITY, |m, &t| m.min(t));
+            TelemetrySignals {
+                now: $now,
+                completed: completed as u64,
+                queue_depth: pending.len() as f64,
+                serving: serving.iter().filter(|&&s| s).count(),
+                attr: AttrSnapshot {
+                    decode_busy: (busy - prefill - prefill_replay).max(0.0),
+                    prefill,
+                    prefill_replay,
+                    weight_sync: synced,
+                    draining: 0.0,
+                    idle_bubble: (rs - busy - synced).max(0.0),
+                },
+                wasted_tokens: report.wasted_tokens.round() as u64,
+                salvaged_tokens: report.salvaged_tokens.round() as u64,
+                prefix_hit_tokens: report.kv_hit_tokens.round() as u64,
+                produced_tokens: replicas
+                    .iter()
+                    .map(|p| p.total_work_done($now))
+                    .sum::<f64>()
+                    .round() as u64,
+                version_gap: 0.0,
+                buffer_ready: 0.0,
+                train_wait_secs: 0.0,
+                lat_p50: crate::util::percentile(&window_lats, 50.0),
+                lat_p99: crate::util::percentile(&window_lats, 99.0),
+                oldest_open_decode_secs: if oldest.is_finite() {
+                    ($now - oldest).max(0.0)
+                } else {
+                    0.0
+                },
+            }
+        }};
+    }
+    // advance the plane after an event (`false`) or force-close the
+    // final partial window at the end of the run (`true`). Closing a
+    // window resets the window latency buffer and stamps a
+    // `telemetry_verdict` instant into the trace when one is wired.
+    macro_rules! tele_tick {
+        ($now:expr, $flush:expr) => {{
+            if let Some(p) = plane.as_mut() {
+                if $flush || p.due($now) {
+                    let sig = tele_signals!($now);
+                    let closed = if $flush { p.flush(&sig) } else { p.tick(&sig) };
+                    if let Some(w) = closed {
+                        window_lats.clear();
+                        if let Some(rec) = rec {
+                            rec.emit_at(
+                                "telemetry_verdict",
+                                EventPhase::Instant,
+                                0,
+                                None,
+                                0,
+                                0,
+                                w.t1,
+                                format!(
+                                    "verdict={} waste={:.3}",
+                                    w.verdict.as_str(),
+                                    w.waste_rate
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }};
+    }
+
     if cfg.arrivals.is_none() {
         for _ in 0..cfg.clients.min(cfg.total_requests) {
             new_request(&mut pending, &mut submit_time, &mut conv_of, &mut next_id, &mut rng, now, None);
@@ -733,6 +847,8 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         }
         dispatch!(now);
     }
+    // baseline-seed the plane at virtual zero so windows tile the run
+    tele_tick!(0.0, false);
 
     while completed < cfg.total_requests {
         // earliest generation completion across the fleet
@@ -924,6 +1040,9 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     );
                 }
                 latencies.push(now - t_submit);
+                if plane.is_some() {
+                    window_lats.push(now - t_submit);
+                }
                 completed += 1;
                 // closed loop: the freed client submits its next task —
                 // the conversation's follow-up turn while it has turns
@@ -1178,7 +1297,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
             }
             _ => unreachable!(),
         }
+        tele_tick!(now, false);
     }
+    // close the final partial window so the timeline tiles [0, makespan]
+    tele_tick!(now, true);
 
     report.makespan = now;
     report.completed = completed;
@@ -1217,6 +1339,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
         draining: 0.0,
         idle_bubble: (report.replica_seconds - busy - synced).max(0.0),
     };
+    if let Some(p) = plane.as_ref() {
+        report.telemetry = p.windows().to_vec();
+        report.telemetry_alerts = p.alerts();
+    }
     report.routed.truncate(n);
     report
 }
@@ -1862,5 +1988,131 @@ mod tests {
         let u = run(&untraced);
         assert_eq!(u.makespan, r.makespan);
         assert_eq!(u.migrations, r.migrations);
+    }
+
+    use crate::metrics::telemetry::{AlertKind, BottleneckVerdict};
+
+    /// The telemetry tentpole's sim acceptance, arm 1: a fleet paused
+    /// for broadcast weight sync while a fail-slow replica burns
+    /// progress (from-scratch migration) must be *diagnosed* live —
+    /// SyncStall verdicts in the window timeline and a firing
+    /// waste-budget alarm — by the same plane the real controller
+    /// ticks, here on the virtual clock.
+    #[test]
+    fn telemetry_diagnoses_sync_stall_and_waste_on_fail_slow() {
+        let mut c = fail_slow(false); // from-scratch arm: migrations waste tokens
+        c.rolling_update = false; // broadcast: every replica pauses together
+        c.sync_interval = 20.0;
+        c.sync_time = 10.0;
+        let mut t = TelemetryCfg::on();
+        t.waste_budget = 0.02;
+        c.telemetry = Some(t);
+        let r = run(&c);
+        assert_eq!(r.completed, c.total_requests);
+        assert!(!r.telemetry.is_empty(), "windows must close on the virtual clock");
+        let stalls = r
+            .telemetry
+            .iter()
+            .filter(|w| w.verdict == BottleneckVerdict::SyncStall)
+            .count();
+        assert!(
+            stalls > 0,
+            "broadcast pauses must be diagnosed as SyncStall: {:?}",
+            r.telemetry.iter().map(|w| w.verdict).collect::<Vec<_>>()
+        );
+        assert!(r.wasted_tokens > 0.0, "the from-scratch arm must waste: {r:?}");
+        assert!(
+            r.telemetry_alerts.iter().any(|a| a.kind == AlertKind::WasteBudget && a.firing),
+            "burned progress must raise the waste alarm: {:?}",
+            r.telemetry_alerts
+        );
+    }
+
+    /// Arm 2: heavy-tailed lengths on a load-blind router stretch the
+    /// window p99 far past the p50 — the timeline must call TailBound,
+    /// and never SyncStall (no sync is configured).
+    #[test]
+    fn telemetry_diagnoses_tail_bound_under_heavy_tail() {
+        let mut c = skewed(RoutePolicy::RoundRobin);
+        let mut t = TelemetryCfg::on();
+        t.tail_ratio = 4.0;
+        c.telemetry = Some(t);
+        let r = run(&c);
+        assert_eq!(r.completed, 240);
+        let tails = r
+            .telemetry
+            .iter()
+            .filter(|w| w.verdict == BottleneckVerdict::TailBound)
+            .count();
+        assert!(
+            tails > 0,
+            "a lognormal tail must be diagnosed as TailBound: {:?}",
+            r.telemetry.iter().map(|w| w.verdict).collect::<Vec<_>>()
+        );
+        assert!(
+            r.telemetry.iter().all(|w| w.verdict != BottleneckVerdict::SyncStall),
+            "no sync configured: SyncStall must never fire"
+        );
+    }
+
+    /// The plane is a pure observer: enabling it must not perturb the
+    /// virtual timeline by a single event, and with it off the
+    /// report's telemetry surfaces stay empty.
+    #[test]
+    fn telemetry_is_a_pure_observer() {
+        let base = run(&fail_slow(true));
+        assert!(base.telemetry.is_empty() && base.telemetry_alerts.is_empty());
+        let mut on = fail_slow(true);
+        on.telemetry = Some(TelemetryCfg::on());
+        let t = run(&on);
+        assert_eq!(t.makespan, base.makespan, "telemetry must not move the clock");
+        assert_eq!(t.migrations, base.migrations);
+        assert_eq!(t.routed, base.routed);
+        assert!(!t.telemetry.is_empty());
+        let t2 = run(&on);
+        assert_eq!(t.telemetry.len(), t2.telemetry.len(), "plane output is deterministic");
+    }
+
+    /// Property over seeds: with churn from every mechanism at once —
+    /// autoscale grow/drain, watchdog salvage, bursty arrivals — the
+    /// telemetry windows tile virtual time exactly (first opens at 0,
+    /// consecutive windows share a boundary, the flush closes at the
+    /// makespan) and the per-window attribution deltas telescope back
+    /// to the run's serving replica-second integral.
+    #[test]
+    fn telemetry_windows_tile_virtual_time_across_churn() {
+        for seed in [3u64, 17, 41] {
+            let mut c = bursty_config(300);
+            c.lengths = LengthProfile::new(800.0, 1.3, 30000);
+            c.hang_timeout = 90.0;
+            c.autoscale = Some(bursty_autoscale(1, 6));
+            c.seed = seed;
+            c.telemetry = Some(TelemetryCfg::on());
+            let r = run(&c);
+            assert_eq!(r.completed, 300, "seed {seed}");
+            let ws = &r.telemetry;
+            assert!(ws.len() >= 2, "seed {seed}: {} windows", ws.len());
+            assert_eq!(ws[0].t0, 0.0, "seed {seed}: baseline seeds at virtual zero");
+            for pair in ws.windows(2) {
+                assert_eq!(pair[0].t1, pair[1].t0, "seed {seed}: windows must tile");
+            }
+            let last = ws.last().unwrap();
+            assert!(
+                (last.t1 - r.makespan).abs() < 1e-9,
+                "seed {seed}: flush must close at makespan: {} vs {}",
+                last.t1,
+                r.makespan
+            );
+            // telescoping: Σ window attr == final serving integral,
+            // within the small slack the per-field delta clamp can
+            // shave off prefill-counter jumps at window boundaries
+            let sum: f64 = ws.iter().map(|w| w.attr.total()).sum();
+            assert!(
+                (sum - r.replica_seconds).abs() <= 0.01 * r.replica_seconds.max(1.0),
+                "seed {seed}: window attr must telescope to the serving integral: \
+                 {sum:.3} vs {:.3}",
+                r.replica_seconds
+            );
+        }
     }
 }

@@ -91,6 +91,7 @@ fn fleet_collects_complete_groups() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -140,6 +141,7 @@ fn sync_training_loop_runs_on_math_env() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -150,6 +152,7 @@ fn sync_training_loop_runs_on_math_env() {
         group_size: 4,
         sync_mode: true,
         autoscale: None,
+        telemetry: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 3);
@@ -196,6 +199,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -206,6 +210,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         group_size: 4,
         sync_mode: false,
         autoscale: None,
+        telemetry: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 5);
@@ -248,6 +253,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -302,6 +308,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -479,6 +486,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -489,6 +497,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         group_size: 4,
         sync_mode: false,
         autoscale: None,
+        telemetry: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 4);
@@ -680,6 +689,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -726,6 +736,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -901,6 +912,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         trace: Default::default(),
         predictor: Default::default(),
         kv_cache: Default::default(),
+        telemetry: Default::default(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -924,6 +936,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         group_size: 4,
         sync_mode: false,
         autoscale: None,
+        telemetry: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     killer.join().unwrap();
