@@ -15,7 +15,9 @@
 use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
-use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::coordinator::{
+    format_log, run_training, ControllerCfg, GovernorCfg, RolloutSystem, RolloutSystemCfg,
+};
 use roll_flash::env::alfworld::AlfworldEnv;
 use roll_flash::runtime::ModelRuntime;
 use roll_flash::workload::EnvLatency;
@@ -66,6 +68,7 @@ fn main() -> anyhow::Result<()> {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     println!(
         "agentic_alfworld: fleet {}x{} (x{} redundancy) -> quota {}x{}, alpha 1, event-driven rollout",
@@ -84,6 +87,7 @@ fn main() -> anyhow::Result<()> {
         sync_mode: false,
         autoscale: fleet.controller_autoscale(),
         telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
     };
     let t0 = std::time::Instant::now();
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;

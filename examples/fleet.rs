@@ -30,8 +30,8 @@ use std::time::Instant;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    format_log, run_training, steplog_jsonl, ControllerCfg, FlightRecorder, LlmProxyPool, PoolCfg,
-    RolloutSystem, RolloutSystemCfg, RoutePolicy, TelemetryCfg, TraceCfg,
+    format_log, run_training, steplog_jsonl, ControllerCfg, FlightRecorder, GovernorCfg,
+    LlmProxyPool, PoolCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy, TelemetryCfg, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::env::vocab;
@@ -166,6 +166,7 @@ fn main() -> anyhow::Result<()> {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: telemetry.clone(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
     let ctl = ControllerCfg {
@@ -177,6 +178,7 @@ fn main() -> anyhow::Result<()> {
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
         telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

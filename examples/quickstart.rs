@@ -16,7 +16,9 @@
 use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
-use roll_flash::coordinator::{format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::coordinator::{
+    format_log, run_training, ControllerCfg, GovernorCfg, RolloutSystem, RolloutSystemCfg,
+};
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
 use roll_flash::sim::rlvr::{run as run_sim, RlvrSimConfig};
@@ -65,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
 
@@ -77,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         sync_mode: true,
         autoscale: fleet.controller_autoscale(),
         telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

@@ -18,7 +18,8 @@ use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    format_log, run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
+    format_log, run_training, ControllerCfg, GovernorCfg, RolloutSystem, RolloutSystemCfg,
+    RoutePolicy,
 };
 use roll_flash::env::math::MathEnv;
 use roll_flash::runtime::ModelRuntime;
@@ -75,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let sync_mode = alpha == 0.0;
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new())?;
@@ -87,6 +89,7 @@ fn main() -> anyhow::Result<()> {
         sync_mode,
         autoscale: fleet.controller_autoscale(),
         telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
     };
 
     let t0 = std::time::Instant::now();

@@ -5,14 +5,27 @@
 //!
 //! Absolute rewards are task-specific; the reproduction target is the
 //! parity across (variant, alpha) cells.
+//!
+//! The adaptive arm (governor) runs on the virtual-time sim with or
+//! without artifacts, so CI exercises the staleness feedback loop on
+//! every push: a loose budget must match the best budget-compliant
+//! fixed alpha (asserted — the acceptance bar), a tight budget must
+//! visibly transition (printed as `governor: t=...` lines) and land a
+//! `mode` column in the steps JSONL when `FIG4_STEPS_JSONL` is set.
 
 use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
-use roll_flash::coordinator::{run_training, ControllerCfg, RolloutSystem, RolloutSystemCfg};
+use roll_flash::coordinator::{
+    run_training, steplog_jsonl, AsyncMode, ControllerCfg, GovernorCfg, RolloutSystem,
+    RolloutSystemCfg, StepLog,
+};
 use roll_flash::env::math::MathEnv;
+use roll_flash::metrics::telemetry::TelemetryCfg;
 use roll_flash::metrics::Table;
 use roll_flash::runtime::ModelRuntime;
+use roll_flash::sim::rlvr::{run as sim_run, RlvrSimConfig};
+use roll_flash::workload::{LengthProfile, TrainCost};
 
 fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> (f32, f64) {
     let rt = ModelRuntime::load(dir).unwrap();
@@ -44,6 +57,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -55,6 +69,7 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
         telemetry: None,
+        governor: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     let report = system.shutdown().unwrap();
@@ -63,15 +78,237 @@ fn final_reward(dir: &PathBuf, variant: PgVariant, alpha: f64, steps: usize) -> 
     (final_r, report.buffer.mean_version_gap())
 }
 
-fn main() {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping fig4: run `make artifacts` first");
-        return;
+/// Real-engine governor arm: full alpha-8 admission window, the
+/// governor free to tighten off measured windows. Returns the final
+/// reward, consumed-gap mean, and the mode timeline read back off the
+/// step logs (one label per mode change).
+fn adaptive_real(dir: &PathBuf, steps: usize) -> (f32, f64, Vec<String>) {
+    let rt = ModelRuntime::load(dir).unwrap();
+    let weights = rt.load_init_params().unwrap();
+    let mut st = rt.train_state(&weights).unwrap();
+    let group_size = 4;
+    let n_groups = rt.manifest.train_batch / group_size;
+    let governor = GovernorCfg {
+        gap_budget: 4.0,
+        alpha_max: 8.0,
+        interval: 2.0,
+        cooldown: 4.0,
+        ..GovernorCfg::on()
+    };
+    let fleet = RolloutSystemCfg {
+        artifacts_dir: dir.clone(),
+        num_env_groups: n_groups,
+        env_group_size: group_size,
+        consume_groups: n_groups,
+        consume_group_size: group_size,
+        alpha: 8.0,
+        seed: 42,
+        latency_scale: 0.0,
+        hang_timeout: f64::INFINITY,
+        num_workers: 4,
+        redundancy_factor: 1.0,
+        num_replicas: 1,
+        route_policy: Default::default(),
+        rolling_update: true,
+        partial_migration: true,
+        min_salvage_tokens: 1,
+        salvage_timeout: 0.5,
+        reclaim_in_place: true,
+        autoscale: Default::default(),
+        trace: Default::default(),
+        predictor: Default::default(),
+        kv_cache: Default::default(),
+        telemetry: TelemetryCfg { window_secs: 2.0, gap_budget: 4.0, ..TelemetryCfg::on() },
+        governor,
+    };
+    let system = RolloutSystem::start(&fleet, weights, |_, _| MathEnv::new()).unwrap();
+    let ctl = ControllerCfg {
+        variant: PgVariant::Reinforce,
+        steps,
+        lr: 2e-3,
+        n_groups,
+        group_size,
+        sync_mode: false,
+        autoscale: fleet.controller_autoscale(),
+        telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
+    };
+    let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
+    let report = system.shutdown().unwrap();
+    let mut timeline: Vec<String> = Vec::new();
+    for l in &logs {
+        if let Some(m) = &l.mode {
+            let label = m.label();
+            if timeline.last() != Some(&label) {
+                timeline.push(label);
+            }
+        }
     }
+    let tail = &logs[logs.len().saturating_sub(10)..];
+    let final_r = tail.iter().map(|l| l.reward_mean).sum::<f32>() / tail.len().max(1) as f32;
+    (final_r, report.buffer.mean_version_gap(), timeline)
+}
+
+/// The same sim shape the in-repo governor tests pin down
+/// (`sim::rlvr::tests::adaptive_*`), so the assertions here cannot
+/// drift from the tested dynamics.
+fn sim_base(steps: usize) -> RlvrSimConfig {
+    let mut c = RlvrSimConfig::paper_default(5, 3);
+    c.n_prompts = 16;
+    c.group_size = 4;
+    c.steps = steps;
+    c.lengths = LengthProfile::new(500.0, 1.0, 4096);
+    c.train = TrainCost::for_mean_len(500.0);
+    c.weight_sync_time = 2.0;
+    c
+}
+
+/// Reverse of `AsyncMode::label()` — the sim reports the human label,
+/// the steps JSONL wants the typed mode.
+fn mode_from_label(label: &str) -> AsyncMode {
+    if label == "sync" {
+        AsyncMode::Sync
+    } else if label == "one_step_off" {
+        AsyncMode::OneStepOff
+    } else if let Some(k) = label
+        .strip_prefix("barrier(")
+        .and_then(|s| s.strip_suffix(')'))
+        .and_then(|s| s.parse().ok())
+    {
+        AsyncMode::PeriodicBarrier { every_k: k }
+    } else {
+        let cap = label
+            .strip_prefix("async(")
+            .and_then(|s| s.strip_suffix(')'))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        AsyncMode::FullyAsync { outstanding_cap: cap }
+    }
+}
+
+fn adaptive_arm(steps: usize) {
+    println!("== Fig 4 adaptive arm: governor vs fixed async ratio (virtual-time sim) ==\n");
+
+    // -- loose budget: the governor must cost nothing ------------------
+    let budget = 6.0;
+    let mut fixed_best = 0.0f64;
+    let mut rows = Vec::new();
+    for alpha in [0.0, 1.0, 2.0] {
+        let mut c = sim_base(steps);
+        c.async_ratio = alpha;
+        let r = sim_run(&c);
+        let ok = (r.max_version_gap as f64) <= budget;
+        if ok {
+            fixed_best = fixed_best.max(r.samples_per_hour());
+        }
+        rows.push((format!("fixed a={alpha}"), r.samples_per_hour(), r.max_version_gap as f64, ok));
+    }
+    let mut ad = sim_base(steps);
+    ad.governor = Some(GovernorCfg {
+        gap_budget: budget,
+        alpha_max: 2.0,
+        interval: 5.0,
+        cooldown: 10.0,
+        ..GovernorCfg::on()
+    });
+    let r = sim_run(&ad);
+    rows.push((
+        "adaptive".to_string(),
+        r.samples_per_hour(),
+        r.max_version_gap as f64,
+        r.max_window_gap <= budget,
+    ));
+    let mut table = Table::new(&["arm", "samples/h", "max gap", "in budget"]);
+    for (name, sph, gap, ok) in &rows {
+        table.row(&[name.clone(), format!("{sph:.0}"), format!("{gap}"), format!("{ok}")]);
+    }
+    println!("{}", table.to_markdown());
+    // the acceptance bar, asserted so a regression fails the bench
+    assert!(
+        r.max_window_gap <= budget && (r.max_version_gap as f64) <= budget,
+        "adaptive arm broke its own budget: window {} consumed {} > {budget}",
+        r.max_window_gap,
+        r.max_version_gap
+    );
+    assert!(
+        r.samples_per_hour() >= 0.98 * fixed_best,
+        "adaptive {:.0} samples/h must match the best budget-compliant fixed arm {:.0}",
+        r.samples_per_hour(),
+        fixed_best
+    );
+    println!(
+        "adaptive matches best fixed arm within budget {budget}: {:.0} vs {:.0} samples/h\n",
+        r.samples_per_hour(),
+        fixed_best
+    );
+
+    // -- tight budget: the feedback loop must visibly engage -----------
+    let mut tight = sim_base(8);
+    tight.governor = Some(GovernorCfg {
+        gap_budget: 2.0,
+        alpha_max: 4.0,
+        interval: 2.0,
+        cooldown: 4.0,
+        ..GovernorCfg::on()
+    });
+    let rt = sim_run(&tight);
+    for (t, label) in &rt.mode_timeline {
+        println!("governor: t={t:.1} mode={label}");
+    }
+    assert!(
+        rt.mode_transitions >= 1,
+        "a binding budget must force at least one transition: {:?}",
+        rt.mode_timeline
+    );
+    println!(
+        "tight budget 2: {} transitions, window gap <= {:.1}, consumed gap <= {}\n",
+        rt.mode_transitions, rt.max_window_gap, rt.max_version_gap
+    );
+
+    // machine-readable step rows (mode column included) for the CI lint
+    if let Ok(path) = std::env::var("FIG4_STEPS_JSONL") {
+        let mut t_end = 0.0f64;
+        let mut out = String::new();
+        for (i, &dt) in rt.step_times.iter().enumerate() {
+            t_end += dt;
+            let label = rt
+                .mode_timeline
+                .iter()
+                .rev()
+                .find(|(tm, _)| *tm <= t_end)
+                .map(|(_, l)| l.as_str())
+                .unwrap_or("sync");
+            let log = StepLog {
+                step: i + 1,
+                wall_secs: dt,
+                mean_version_gap: rt.mean_version_gap,
+                max_version_gap: rt.max_version_gap as u64,
+                mode: Some(mode_from_label(label)),
+                ..Default::default()
+            };
+            out.push_str(&steplog_jsonl(&log));
+            out.push('\n');
+        }
+        std::fs::write(&path, out).expect("write FIG4_STEPS_JSONL");
+        println!("adaptive steps jsonl -> {path}\n");
+    }
+}
+
+fn main() {
+    let tiny = std::env::var("TINY_TRACE").is_ok();
     let steps: usize = std::env::args()
         .find_map(|a| a.strip_prefix("steps=").and_then(|s| s.parse().ok()))
-        .unwrap_or(60);
+        .unwrap_or(if tiny { 12 } else { 60 });
+
+    // sim-mirror arm first: runs with or without artifacts, so the
+    // governor path is exercised on every CI push
+    adaptive_arm(if tiny { 3 } else { 6 });
+
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping fig4 real-engine table: run `make artifacts` first");
+        return;
+    }
     println!("== Fig 4: off-policy variants x async ratio (real engine, {steps} steps) ==\n");
 
     let variants = [
@@ -101,4 +338,10 @@ fn main() {
     let max = spread.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     println!("reward spread across all cells: [{min:.3}, {max:.3}]");
     println!("paper: all methods within noise of the sync baseline at alpha 2 and 8");
+
+    let (ra, ga, timeline) = adaptive_real(&dir, steps);
+    println!(
+        "\nadaptive (governor, real engine): reward {ra:.3} gap {ga:.2} modes {}",
+        timeline.join(" -> ")
+    );
 }

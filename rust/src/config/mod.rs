@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::async_governor::GovernorCfg;
 use crate::coordinator::autoscaler::AutoscaleCfg;
 use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::PredictorCfg;
@@ -157,6 +158,12 @@ pub struct RollConfig {
     /// enables it — absent, every would-be tick is one branch and the
     /// event stream stays byte-identical to legacy)
     pub telemetry: TelemetryCfg,
+    /// adaptive asynchrony governor (`async_governor: {gap_budget,
+    /// alpha_max, every_k, relax_frac, barrier_frac, interval,
+    /// cooldown, hysteresis}`; presence of the block enables it —
+    /// requires the telemetry plane, whose closed version-gap windows
+    /// drive every mode decision)
+    pub governor: GovernorCfg,
     /// virtual-time sim: seconds of replica time one prefill/replay
     /// token costs (`prefill_time_per_token` — sweepable replay-cost
     /// sensitivity for `sim/fleet.rs` and the fig benches)
@@ -199,6 +206,7 @@ impl Default for RollConfig {
             predictor: PredictorCfg::default(),
             kv_cache: KvCacheCfg::disabled(),
             telemetry: TelemetryCfg::disabled(),
+            governor: GovernorCfg::disabled(),
             prefill_time_per_token: 2e-4,
             adv_estimator: "reinforce".into(),
             reward_norm: "group".into(),
@@ -405,6 +413,30 @@ impl RollConfig {
                 }
             }
         }
+        if let Some(g) = j.get("async_governor") {
+            // like telemetry: the block's presence turns the governor
+            // on unless it says `enabled: false` explicitly
+            cfg.governor = GovernorCfg::on();
+            if let Some(Json::Bool(b)) = g.get("enabled") {
+                cfg.governor.enabled = *b;
+            }
+            if let Some(v) = num(g, "every_k") {
+                cfg.governor.every_k = v as usize;
+            }
+            for (key, slot) in [
+                ("gap_budget", &mut cfg.governor.gap_budget),
+                ("alpha_max", &mut cfg.governor.alpha_max),
+                ("relax_frac", &mut cfg.governor.relax_frac),
+                ("barrier_frac", &mut cfg.governor.barrier_frac),
+                ("interval", &mut cfg.governor.interval),
+                ("cooldown", &mut cfg.governor.cooldown),
+                ("hysteresis", &mut cfg.governor.hysteresis),
+            ] {
+                if let Some(v) = num(g, key) {
+                    *slot = v;
+                }
+            }
+        }
         if let Some(v) = j.get("adv_estimator").and_then(Json::as_str) {
             cfg.adv_estimator = v.to_string();
         }
@@ -483,6 +515,12 @@ impl RollConfig {
         if let Err(e) = self.telemetry.validate() {
             anyhow::bail!(e);
         }
+        self.governor.validate()?;
+        anyhow::ensure!(
+            !self.governor.enabled || self.telemetry.enabled,
+            "async_governor requires the telemetry plane: add a `telemetry:` block \
+             (the governor acts on its closed version-gap windows)"
+        );
         anyhow::ensure!(
             self.prefill_time_per_token.is_finite() && self.prefill_time_per_token >= 0.0,
             "prefill_time_per_token must be finite and >= 0"
@@ -812,6 +850,67 @@ telemetry:
         assert!(
             RollConfig::from_yaml("telemetry:\n  enabled: false\n  window_secs: 0\n").is_ok(),
             "disabled plane skips threshold validation"
+        );
+    }
+
+    #[test]
+    fn parses_async_governor_block() {
+        let cfg = RollConfig::from_yaml(
+            r#"
+telemetry:
+  window_secs: 2
+async_governor:
+  gap_budget: 10
+  alpha_max: 3
+  every_k: 8
+  relax_frac: 0.6
+  barrier_frac: 0.85
+  interval: 4
+  cooldown: 12
+  hysteresis: 0.2
+"#,
+        )
+        .unwrap();
+        assert!(cfg.governor.enabled, "block presence enables the governor");
+        assert!((cfg.governor.gap_budget - 10.0).abs() < 1e-12);
+        assert!((cfg.governor.alpha_max - 3.0).abs() < 1e-12);
+        assert_eq!(cfg.governor.every_k, 8);
+        assert!((cfg.governor.relax_frac - 0.6).abs() < 1e-12);
+        assert!((cfg.governor.barrier_frac - 0.85).abs() < 1e-12);
+        assert!((cfg.governor.interval - 4.0).abs() < 1e-12);
+        assert!((cfg.governor.cooldown - 12.0).abs() < 1e-12);
+        assert!((cfg.governor.hysteresis - 0.2).abs() < 1e-12);
+        // step_quota is never a YAML knob — it is resolved from the
+        // batch shape at wiring time (controller_governor)
+        assert_eq!(cfg.governor.step_quota, 0);
+        // default: governor off
+        assert!(!RollConfig::default().governor.enabled);
+        // the governor cannot act without the telemetry plane it reads
+        let err = RollConfig::from_yaml("async_governor:\n  gap_budget: 10\n").unwrap_err();
+        assert!(err.to_string().contains("telemetry"), "{err}");
+        // explicit off-switch keeps the knobs in the file (and lifts
+        // the telemetry requirement with them)
+        let off =
+            RollConfig::from_yaml("async_governor:\n  enabled: false\n  gap_budget: 3\n").unwrap();
+        assert!(!off.governor.enabled);
+        assert!((off.governor.gap_budget - 3.0).abs() < 1e-12);
+        // degenerate knobs rejected only while enabled
+        let tele = "telemetry:\n  window_secs: 2\n";
+        assert!(RollConfig::from_yaml(&format!("{tele}async_governor:\n  gap_budget: 0\n")).is_err());
+        assert!(RollConfig::from_yaml(&format!("{tele}async_governor:\n  every_k: 1\n")).is_err());
+        assert!(
+            RollConfig::from_yaml(&format!(
+                "{tele}async_governor:\n  relax_frac: 0.9\n  barrier_frac: 0.5\n"
+            ))
+            .is_err(),
+            "relax boundary above barrier boundary inverts the ladder"
+        );
+        assert!(
+            RollConfig::from_yaml(&format!(
+                "{tele}async_governor:\n  interval: 10\n  cooldown: 5\n"
+            ))
+            .is_err(),
+            "cooldown shorter than the decision interval is meaningless"
         );
     }
 

@@ -17,12 +17,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::PgVariant;
+use crate::coordinator::async_governor::{AsyncGovernor, AsyncMode, GovernorCfg};
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler};
 use crate::coordinator::fleet::LlmProxyPool;
-use crate::coordinator::sample_buffer::SampleBuffer;
+use crate::coordinator::sample_buffer::{BufferStats, SampleBuffer};
 use crate::metrics::prometheus;
 use crate::metrics::telemetry::{self, TelemetryCfg, TelemetryPlane, TelemetryStatus};
-use crate::metrics::trace::AttrSnapshot;
+use crate::metrics::trace::{AttrSnapshot, EventPhase};
 use crate::rl;
 use crate::runtime::{ModelRuntime, TrainState};
 
@@ -46,6 +47,12 @@ pub struct ControllerCfg {
     /// alerts, and (at end of run) Prometheus / verdict-JSONL exports.
     /// Absent or disabled = zero cost, legacy behavior byte-identical.
     pub telemetry: Option<TelemetryCfg>,
+    /// adaptive asynchrony governor: dial sync/barrier/one-step-off/
+    /// fully-async at runtime off the telemetry plane's measured
+    /// version-gap windows. Requires `telemetry` — the governor only
+    /// acts on closed windows. Absent or disabled = the static
+    /// `sync_mode` branch runs untouched.
+    pub governor: Option<GovernorCfg>,
 }
 
 /// Per-step training log (the Fig 4-style curve data).
@@ -104,6 +111,9 @@ pub struct StepLog {
     /// `telemetry:` block is absent — in which case `format_log`'s
     /// line is byte-identical to the legacy output
     pub telemetry: Option<TelemetryStatus>,
+    /// asynchrony mode this step ran under — `None` while the
+    /// governor is off (legacy lines stay byte-identical)
+    pub mode: Option<AsyncMode>,
 }
 
 /// Run the training loop. `rt`/`st` belong to the calling thread (the
@@ -141,9 +151,36 @@ pub fn run_training(
         .as_ref()
         .filter(|t| t.enabled)
         .map(|t| TelemetryPlane::new(t.clone()));
+    // adaptive asynchrony governor: acts only on closed telemetry
+    // windows, so it requires the plane. The step quota (the N its
+    // outstanding cap scales from) is resolved from the batch shape
+    // when the config left it open.
+    let mut governor = cfg
+        .governor
+        .filter(|g| g.enabled)
+        .map(|mut g| {
+            if g.step_quota == 0 {
+                g.step_quota = per_step;
+            }
+            AsyncGovernor::new(g)
+        });
+    if let Some(g) = governor.as_ref() {
+        anyhow::ensure!(
+            plane.is_some(),
+            "async_governor requires the telemetry plane (enable the telemetry: block)"
+        );
+        // the governor owns the admission window from here on: align
+        // the buffer with the starting mode and seed the mode gauge
+        buffer.set_async_ratio(g.cfg.admission_alpha(g.mode()));
+        proxy.metrics().gauge("governor.mode").set(g.mode().rank() as f64);
+    }
     // cumulative seconds the trainer spent blocked in get_batch — the
     // plane's RolloutBound / QueueStarved discriminator
     let mut train_wait_secs = 0.0f64;
+    // the last step's measured mean consumed gap, carried across
+    // zero-consumption windows so the plane (and governor) never see
+    // a phantom value
+    let mut last_mean_gap = 0.0f64;
     if let Some(p) = plane.as_mut() {
         let mut sig = proxy.telemetry_signals();
         sig.buffer_ready = buffer_ready(buffer);
@@ -152,6 +189,17 @@ pub fn run_training(
 
     for step in 0..cfg.steps {
         let t0 = Instant::now();
+        // the asynchrony recipe this step runs under. Computed ONCE
+        // per step (mode transitions land between steps, at the
+        // governor decision below), so a step that suspends always
+        // resumes in the same iteration — a transition can never
+        // strand replicas suspended or double-resume them (suspend/
+        // resume are additionally idempotent at the pool).
+        let mode = governor.as_ref().map(|g| g.mode());
+        let sync_step = match mode {
+            Some(m) => m.sync_step(step),
+            None => cfg.sync_mode,
+        };
         // snapshot BEFORE get_batch: consumption stats (version gaps,
         // cross-version counts) are recorded inside get_batch itself,
         // so reading afterwards would always difference to zero
@@ -163,7 +211,7 @@ pub fn run_training(
             anyhow::bail!("sample buffer shut down mid-training");
         };
         train_wait_secs += wait_t0.elapsed().as_secs_f64();
-        if cfg.sync_mode {
+        if sync_step {
             proxy.suspend();
         }
 
@@ -200,7 +248,7 @@ pub fn run_training(
         // at most one replica pauses at a time.)
         let version = buffer.bump_version();
         proxy.update_weights(rt.snapshot(st)?, version);
-        if cfg.sync_mode {
+        if sync_step {
             proxy.resume();
         }
         if let Some(a) = autoscaler.as_mut() {
@@ -210,9 +258,16 @@ pub fn run_training(
         let gap_after = buffer.stats();
         let tokens_after = proxy.token_stats();
         let (lat_p50, lat_p99) = proxy.latency_percentiles();
-        let mean_version_gap = {
-            let d = (gap_after.consumed - gap_before.consumed).max(1);
-            (gap_after.sum_version_gap - gap_before.sum_version_gap) as f64 / d as f64
+        let mean_version_gap = match window_mean_gap(&gap_before, &gap_after) {
+            Some(g) => {
+                last_mean_gap = g;
+                g
+            }
+            // zero samples consumed this step: carry the previous
+            // measurement instead of dividing a stale gap sum by a
+            // phantom sample — the governor and the VersionGap
+            // watchdog act on this value
+            None => last_mean_gap,
         };
         // telemetry tick: gather cumulative pool signals, fill in the
         // trainer-side half, and let the plane decide whether a window
@@ -232,6 +287,27 @@ pub fn run_training(
                 if let Some(w) = p.tick(&sig) {
                     telemetry::publish(&w, &recorder, &proxy.metrics());
                     proxy.publish_trace_gauges();
+                    // feedback loop: the governor reads the closed
+                    // window's measured gap + watchdog state and may
+                    // move the asynchrony mode for the NEXT step
+                    if let Some(g) = governor.as_mut() {
+                        if let Some(m) = g.decide_at(w.t1, &w) {
+                            buffer.set_async_ratio(g.cfg.admission_alpha(m));
+                            let reg = proxy.metrics();
+                            reg.gauge("governor.mode").set(m.rank() as f64);
+                            reg.counter("governor.transitions").inc();
+                            recorder.emit_at(
+                                "governor_mode",
+                                EventPhase::Instant,
+                                0,
+                                None,
+                                0,
+                                0,
+                                w.t1,
+                                format!("mode={} gap={:.2}", m.label(), w.version_gap),
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -264,6 +340,7 @@ pub fn run_training(
             lat_p50,
             lat_p99,
             telemetry: plane.as_ref().and_then(|p| p.step_status()),
+            mode,
         });
     }
     // close the trailing partial window so short runs (and the tail
@@ -274,6 +351,10 @@ pub fn run_training(
         let mut sig = proxy.telemetry_signals();
         sig.buffer_ready = buffer_ready(buffer);
         sig.train_wait_secs = train_wait_secs;
+        // the trailing window carries the real staleness signal too —
+        // a defaulted 0.0 here would spuriously clear the gap watchdog
+        // (and lie to anyone reading the final verdicts.jsonl line)
+        sig.version_gap = last_mean_gap;
         if let Some(w) = p.flush(&sig) {
             telemetry::publish(&w, &recorder, &proxy.metrics());
         }
@@ -309,6 +390,19 @@ fn buffer_ready(buffer: &Arc<SampleBuffer>) -> f64 {
     s.produced.saturating_sub(s.consumed + s.cancelled + s.stale_evicted) as f64
 }
 
+/// Mean consumed version gap across a step window of cumulative
+/// [`BufferStats`] readings. `None` when the step consumed nothing —
+/// the caller carries the previous measurement (or reports 0.0)
+/// instead of dividing the stale gap sum by a phantom sample, which
+/// is what the governor's staleness signal must never see.
+pub fn window_mean_gap(before: &BufferStats, after: &BufferStats) -> Option<f64> {
+    let d = after.consumed.saturating_sub(before.consumed);
+    if d == 0 {
+        return None;
+    }
+    Some(after.sum_version_gap.saturating_sub(before.sum_version_gap) as f64 / d as f64)
+}
+
 /// Format a step log line (shared by examples and benches). `gap` is
 /// mean/max consumed staleness; `skew` is the rolling-sync replica
 /// weight-version spread; `xver` counts piecewise-policy samples
@@ -337,6 +431,11 @@ pub fn format_log(l: &StepLog) -> String {
             line.push_str(&format!("!{}", t.alerts_active));
         }
     }
+    // governor column — only present when the governor is on, same
+    // byte-identical-legacy rule as the telemetry column
+    if let Some(m) = &l.mode {
+        line.push_str(&format!("  mode {}", m.label()));
+    }
     line
 }
 
@@ -345,6 +444,10 @@ pub fn format_log(l: &StepLog) -> String {
 /// Callers collect these into a `steps.jsonl` next to the trace and
 /// verdict-timeline exports.
 pub fn steplog_jsonl(l: &StepLog) -> String {
+    let mode = match &l.mode {
+        Some(m) => format!("\"{}\"", m.as_str()),
+        None => "null".to_string(),
+    };
     let tele = match &l.telemetry {
         Some(t) => format!(
             "{{\"verdict\":\"{}\",\"alerts_active\":{},\"throughput\":{:.6},\"waste_rate\":{:.6}}}",
@@ -363,7 +466,8 @@ pub fn steplog_jsonl(l: &StepLog) -> String {
          \"wasted_tokens\":{},\"prefix_hit_tokens\":{},\"serving_replicas\":{},\
          \"wall_secs\":{:.6},\"attr\":{{\"decode_busy\":{:.6},\"prefill\":{:.6},\
          \"prefill_replay\":{:.6},\"weight_sync\":{:.6},\"draining\":{:.6},\
-         \"idle_bubble\":{:.6}}},\"lat_p50\":{:.6},\"lat_p99\":{:.6},\"telemetry\":{}}}",
+         \"idle_bubble\":{:.6}}},\"lat_p50\":{:.6},\"lat_p99\":{:.6},\"telemetry\":{},\
+         \"mode\":{}}}",
         l.step,
         l.loss,
         l.grad_norm,
@@ -390,6 +494,45 @@ pub fn steplog_jsonl(l: &StepLog) -> String {
         l.attr.idle_bubble,
         l.lat_p50,
         l.lat_p99,
-        tele
+        tele,
+        mode
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_consumed_step_reports_no_phantom_gap() {
+        // regression: the old code divided the stale cumulative gap
+        // sum by `.max(1)` — a step that consumed nothing reported
+        // sum_version_gap/1 as if one sample carried it all
+        let before = BufferStats { consumed: 64, sum_version_gap: 96, ..Default::default() };
+        let after = before; // nothing consumed this step
+        assert_eq!(window_mean_gap(&before, &after), None, "no samples -> no measurement");
+        // a real window still measures
+        let after =
+            BufferStats { consumed: 80, sum_version_gap: 128, ..Default::default() };
+        assert_eq!(window_mean_gap(&before, &after), Some(2.0), "(128-96)/(80-64)");
+        // fresh run from zero
+        assert_eq!(
+            window_mean_gap(&BufferStats::default(), &BufferStats::default()),
+            None
+        );
+    }
+
+    #[test]
+    fn steplog_jsonl_and_format_log_carry_mode_only_when_governed() {
+        let legacy = StepLog { step: 3, ..Default::default() };
+        assert!(legacy.mode.is_none());
+        assert!(steplog_jsonl(&legacy).contains("\"mode\":null"));
+        assert!(!format_log(&legacy).contains("mode"), "legacy line byte-identical");
+        let governed = StepLog {
+            mode: Some(AsyncMode::PeriodicBarrier { every_k: 4 }),
+            ..legacy
+        };
+        assert!(steplog_jsonl(&governed).contains("\"mode\":\"barrier\""));
+        assert!(format_log(&governed).ends_with("mode barrier(4)"));
+    }
 }

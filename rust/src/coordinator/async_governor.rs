@@ -1,0 +1,595 @@
+//! Adaptive asynchrony governor: close the staleness feedback loop.
+//!
+//! The paper's throughput claim holds only while off-policy staleness
+//! stays inside the alpha/gap budget modeled by [`crate::theory`]
+//! (Prop 1 Eq. 7: with `Q = (alpha+1)N` samples outstanding, consumed
+//! staleness concentrates at ~alpha versions). PR 9's telemetry plane
+//! *measures* that staleness live — the windowed version-gap signal
+//! and the `VersionGapBudget` watchdog — but until now the sync/async
+//! split was static config (`sync_mode`, `async_ratio`). This module
+//! converts the measurement into a control loop, the Periodic
+//! Asynchrony recipe: dial between fully-async, one-step-off,
+//! periodic-barrier, and fully-sync *at runtime* so the system runs
+//! as asynchronously as the measured gap allows and no more.
+//!
+//! Shape follows `autoscaler.rs` exactly:
+//!
+//!   * [`decide`] is the *pure* decision rule mapping (cfg, closed
+//!     [`TelemetryWindow`]) to an [`AsyncMode`]. It reads the
+//!     *measured* window gap (`w.version_gap`) and the watchdog state
+//!     (`w.gap_firing`) — never re-derived staleness — and compares
+//!     the gap fraction `gap / gap_budget` against the mode ladder.
+//!   * [`AsyncGovernor`] adds the temporal policy — decide at most
+//!     every `interval` seconds, hold a new mode through `cooldown`,
+//!     relax one notch at a time and only once the gap has fallen a
+//!     `hysteresis` margin below the notch boundary — in
+//!     caller-supplied seconds, so the real `AsyncController` (wall
+//!     clock) and `sim/rlvr.rs` / `sim/fleet.rs` (virtual clock) run
+//!     the identical logic.
+//!
+//! Tightening is cheap and urgent (a stale batch is already paid
+//! for), so a `Sync` verdict bypasses the cooldown entirely — the
+//! emergency brake mirrors the autoscaler's below-min grow path.
+//! Relaxing is speculative (it *creates* staleness that only shows up
+//! a window later), so it is gated on cooldown + hysteresis and never
+//! happens while the gap watchdog is still firing.
+
+use anyhow::Result;
+
+use crate::metrics::telemetry::TelemetryWindow;
+
+/// The asynchrony ladder, loosest first. `rank()` orders the modes by
+/// how much staleness they admit; the governor tightens by any number
+/// of notches at once but relaxes one notch per decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AsyncMode {
+    /// no cap beyond the admission window `(1+alpha)·batch`: rollout
+    /// free-runs while the trainer consumes (paper Fig. 4 async arm)
+    FullyAsync {
+        /// rollout samples allowed in flight + buffered; 0 = keep the
+        /// buffer's configured admission window (quota unresolved)
+        outstanding_cap: usize,
+    },
+    /// rollout may run at most one training step ahead (alpha = 1)
+    OneStepOff,
+    /// async between barriers, full drain-and-sync every k-th step —
+    /// the Periodic Asynchrony midpoint
+    PeriodicBarrier { every_k: usize },
+    /// the paper's synchronous recipe: suspend immediately after
+    /// `get_batch`, resume after `model_update`
+    Sync,
+}
+
+impl AsyncMode {
+    /// Position on the ladder: 0 = loosest (FullyAsync) .. 3 = Sync.
+    /// Doubles as the `governor.mode` gauge value so a dashboard plots
+    /// the mode timeline directly.
+    pub fn rank(&self) -> usize {
+        match self {
+            AsyncMode::FullyAsync { .. } => 0,
+            AsyncMode::OneStepOff => 1,
+            AsyncMode::PeriodicBarrier { .. } => 2,
+            AsyncMode::Sync => 3,
+        }
+    }
+
+    /// Stable identifier for JSONL / metric labels.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AsyncMode::FullyAsync { .. } => "async",
+            AsyncMode::OneStepOff => "one_step_off",
+            AsyncMode::PeriodicBarrier { .. } => "barrier",
+            AsyncMode::Sync => "sync",
+        }
+    }
+
+    /// Human label carrying the mode's parameter (`async(96)`,
+    /// `barrier(4)`).
+    pub fn label(&self) -> String {
+        match self {
+            AsyncMode::FullyAsync { outstanding_cap } => format!("async({outstanding_cap})"),
+            AsyncMode::OneStepOff => "one_step_off".to_string(),
+            AsyncMode::PeriodicBarrier { every_k } => format!("barrier({every_k})"),
+            AsyncMode::Sync => "sync".to_string(),
+        }
+    }
+
+    /// Whether training step `step` runs the paper's synchronous
+    /// recipe (suspend after get_batch) under this mode.
+    pub fn sync_step(&self, step: usize) -> bool {
+        match self {
+            AsyncMode::Sync => true,
+            AsyncMode::PeriodicBarrier { every_k } => step % every_k.max(1) == 0,
+            _ => false,
+        }
+    }
+}
+
+/// `async_governor:` block (YAML/CLI). Absent block == `disabled()`
+/// == the static `sync_mode` branch runs untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GovernorCfg {
+    /// master switch
+    pub enabled: bool,
+    /// staleness budget: the window version gap the run must stay
+    /// under. Mirrors (and should usually equal) the telemetry
+    /// plane's `gap_budget` watchdog threshold.
+    pub gap_budget: f64,
+    /// the largest async_ratio the governor will ever grant; the
+    /// effective alpha is additionally clamped to `gap_budget - 1`
+    /// (Prop 1: a cap of `(alpha+1)N` implies ~alpha versions of
+    /// staleness, so alpha beyond budget-1 cannot stay in budget)
+    pub alpha_max: f64,
+    /// barrier period for `PeriodicBarrier` (full sync every k steps)
+    pub every_k: usize,
+    /// gap fraction (`gap / gap_budget`) at or above which FullyAsync
+    /// tightens to OneStepOff
+    pub relax_frac: f64,
+    /// gap fraction at or above which the governor drops to
+    /// PeriodicBarrier (>= relax_frac; 1.0 itself means Sync)
+    pub barrier_frac: f64,
+    /// seconds between decisions (wall or virtual); align with the
+    /// telemetry `window_secs` — the governor only sees closed windows
+    pub interval: f64,
+    /// seconds a new mode is held before the next change; must be
+    /// >= interval so a mode's effect is observed before the next
+    /// move. The emergency drop to Sync bypasses this.
+    pub cooldown: f64,
+    /// relax margin: loosen only once the gap sits below the notch
+    /// boundary by this fraction (0.25 = gap must fall below 75% of
+    /// the boundary), so a gap oscillating on a threshold cannot flap
+    /// the mode
+    pub hysteresis: f64,
+    /// samples consumed per training step (`n_groups × group_size`) —
+    /// the N that `outstanding_cap = (alpha+1)·N` scales from. Not a
+    /// user knob: the wiring layer fills it from the controller /
+    /// sim batch shape; 0 leaves FullyAsync's cap unresolved (keep
+    /// the buffer's configured window).
+    pub step_quota: usize,
+}
+
+impl GovernorCfg {
+    /// The absent-block state: static sync/async split, no governor.
+    pub fn disabled() -> Self {
+        GovernorCfg { enabled: false, ..Self::on() }
+    }
+
+    /// Enabled with default thresholds (the values the YAML block
+    /// starts from before per-key overrides).
+    pub fn on() -> Self {
+        GovernorCfg {
+            enabled: true,
+            gap_budget: 8.0,
+            alpha_max: 4.0,
+            every_k: 4,
+            relax_frac: 0.7,
+            barrier_frac: 0.9,
+            interval: 5.0,
+            cooldown: 10.0,
+            hysteresis: 0.25,
+            step_quota: 0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.gap_budget.is_finite() && self.gap_budget >= 1.0,
+            "async_governor.gap_budget must be >= 1, got {}",
+            self.gap_budget
+        );
+        anyhow::ensure!(
+            self.alpha_max.is_finite() && self.alpha_max >= 0.0,
+            "async_governor.alpha_max must be >= 0, got {}",
+            self.alpha_max
+        );
+        anyhow::ensure!(
+            self.every_k >= 2,
+            "async_governor.every_k must be >= 2 (1 is just Sync), got {}",
+            self.every_k
+        );
+        anyhow::ensure!(
+            self.relax_frac > 0.0 && self.relax_frac < 1.0,
+            "async_governor.relax_frac must be in (0, 1), got {}",
+            self.relax_frac
+        );
+        anyhow::ensure!(
+            self.barrier_frac >= self.relax_frac && self.barrier_frac <= 1.0,
+            "async_governor.barrier_frac ({}) must be in [relax_frac ({}), 1]",
+            self.barrier_frac,
+            self.relax_frac
+        );
+        anyhow::ensure!(
+            self.interval.is_finite() && self.interval > 0.0,
+            "async_governor.interval must be > 0"
+        );
+        anyhow::ensure!(
+            self.cooldown.is_finite() && self.cooldown >= self.interval,
+            "async_governor.cooldown ({}) must be >= interval ({}): a mode's effect must be \
+             observed at least once before the next change",
+            self.cooldown,
+            self.interval
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.hysteresis),
+            "async_governor.hysteresis must be in [0, 1)"
+        );
+        Ok(())
+    }
+
+    /// The async_ratio FullyAsync actually runs at: `alpha_max`
+    /// clamped to `gap_budget - 1` per Prop 1 — an admission window of
+    /// `(alpha+1)N` implies ~alpha versions of consumed staleness, so
+    /// any alpha above budget-1 is throughput the budget can never
+    /// accept.
+    pub fn effective_alpha(&self) -> f64 {
+        self.alpha_max.min((self.gap_budget - 1.0).max(0.0))
+    }
+
+    /// FullyAsync's outstanding cap, `ceil((1+alpha)·step_quota)`;
+    /// 0 while the step quota is unresolved.
+    pub fn outstanding_cap(&self) -> usize {
+        ((1.0 + self.effective_alpha()) * self.step_quota as f64).ceil() as usize
+    }
+
+    /// The admission async_ratio each mode corresponds to — what the
+    /// wiring layer feeds `SampleBuffer::set_async_ratio` on a
+    /// transition. Barriers keep the full window (the periodic drain
+    /// is what bounds their staleness).
+    pub fn admission_alpha(&self, mode: AsyncMode) -> f64 {
+        match mode {
+            AsyncMode::Sync => 0.0,
+            AsyncMode::OneStepOff => self.effective_alpha().min(1.0),
+            AsyncMode::PeriodicBarrier { .. } | AsyncMode::FullyAsync { .. } => {
+                self.effective_alpha()
+            }
+        }
+    }
+
+    /// The mode at ladder position `rank` (parameters filled from
+    /// this cfg) — the relax path steps down through these.
+    fn mode_at(&self, rank: usize) -> AsyncMode {
+        match rank {
+            0 => AsyncMode::FullyAsync { outstanding_cap: self.outstanding_cap() },
+            1 => AsyncMode::OneStepOff,
+            2 => AsyncMode::PeriodicBarrier { every_k: self.every_k },
+            _ => AsyncMode::Sync,
+        }
+    }
+
+    /// Gap fraction at which ladder position `rank` is entered from
+    /// below (the tightening threshold) — also the line the relax
+    /// path must clear (with hysteresis margin) to leave `rank`
+    /// downward.
+    fn boundary(&self, rank: usize) -> f64 {
+        match rank {
+            0 => 0.0,
+            1 => self.relax_frac,
+            2 => self.barrier_frac,
+            _ => 1.0,
+        }
+    }
+}
+
+impl Default for GovernorCfg {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// The pure decision rule, shared verbatim by the real controller and
+/// both virtual-time sims. Reads only the *measured* staleness the
+/// telemetry plane put in the window:
+///
+/// 1. watchdog firing, or gap at/over budget -> `Sync` (emergency)
+/// 2. `gap/budget >= barrier_frac`          -> `PeriodicBarrier`
+/// 3. `gap/budget >= relax_frac`            -> `OneStepOff`
+/// 4. otherwise                             -> `FullyAsync` at the
+///    Prop-1-clamped cap
+pub fn decide(cfg: &GovernorCfg, w: &TelemetryWindow) -> AsyncMode {
+    let frac = w.version_gap / cfg.gap_budget;
+    if w.gap_firing || frac >= 1.0 {
+        return AsyncMode::Sync;
+    }
+    if frac >= cfg.barrier_frac {
+        return cfg.mode_at(2);
+    }
+    if frac >= cfg.relax_frac {
+        return cfg.mode_at(1);
+    }
+    cfg.mode_at(0)
+}
+
+/// Stateful wrapper around [`decide`]: interval sampling, post-change
+/// cooldown, one-notch-at-a-time relaxation with hysteresis, in
+/// caller-supplied seconds so the wall-clock controller and the
+/// virtual-time sims share one clock policy.
+#[derive(Clone, Debug)]
+pub struct AsyncGovernor {
+    pub cfg: GovernorCfg,
+    mode: AsyncMode,
+    last_tick: Option<f64>,
+    last_change: Option<f64>,
+    transitions: u64,
+}
+
+impl AsyncGovernor {
+    /// Starts fully async — the optimistic default the paper's async
+    /// arm runs at; the first over-budget window pulls it back.
+    pub fn new(cfg: GovernorCfg) -> Self {
+        let mode = cfg.mode_at(0);
+        AsyncGovernor { cfg, mode, last_tick: None, last_change: None, transitions: 0 }
+    }
+
+    pub fn mode(&self) -> AsyncMode {
+        self.mode
+    }
+
+    /// Mode changes applied so far.
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    /// Gate + decide at `now` seconds against the latest closed
+    /// window. Returns `Some(new_mode)` only when the mode actually
+    /// changed (the caller applies suspend/resume + cap side effects
+    /// exactly once per transition), `None` on hold.
+    pub fn decide_at(&mut self, now: f64, w: &TelemetryWindow) -> Option<AsyncMode> {
+        if let Some(t) = self.last_tick {
+            if now - t < self.cfg.interval {
+                return None;
+            }
+        }
+        self.last_tick = Some(now);
+        let target = decide(&self.cfg, w);
+        let (cur, tgt) = (self.mode.rank(), target.rank());
+        let cooled = match self.last_change {
+            Some(t) => now - t >= self.cfg.cooldown,
+            None => true,
+        };
+        let next = if tgt > cur {
+            // tightening: staleness already over a line. The full drop
+            // to Sync is the emergency brake and skips the cooldown;
+            // intermediate tightening waits it out.
+            if target == AsyncMode::Sync || cooled {
+                target
+            } else {
+                return None;
+            }
+        } else if tgt < cur {
+            // relaxing is speculative: one notch at a time, only after
+            // the cooldown, never while the gap watchdog still fires,
+            // and only once the gap has cleared the current notch's
+            // boundary by the hysteresis margin.
+            let frac = w.version_gap / self.cfg.gap_budget;
+            let cleared = frac <= self.cfg.boundary(cur) * (1.0 - self.cfg.hysteresis);
+            if !cooled || w.gap_firing || !cleared {
+                return None;
+            }
+            self.cfg.mode_at(cur - 1)
+        } else {
+            // same rank: refresh parameters (e.g. a resolved step
+            // quota changes FullyAsync's cap) without a transition
+            self.mode = target;
+            return None;
+        };
+        self.mode = next;
+        self.last_change = Some(now);
+        self.transitions += 1;
+        Some(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::theory::Prop1;
+
+    fn cfg() -> GovernorCfg {
+        GovernorCfg {
+            gap_budget: 8.0,
+            alpha_max: 4.0,
+            step_quota: 16,
+            interval: 1.0,
+            cooldown: 3.0,
+            ..GovernorCfg::on()
+        }
+    }
+
+    fn win(gap: f64, firing: bool) -> TelemetryWindow {
+        TelemetryWindow::probe(1.0, gap, firing)
+    }
+
+    #[test]
+    fn validation_rejects_nonsense() {
+        assert!(cfg().validate().is_ok());
+        assert!(GovernorCfg::disabled().validate().is_ok(), "disabled cfg is always fine");
+        for mutate in [
+            (|c: &mut GovernorCfg| c.gap_budget = 0.5) as fn(&mut GovernorCfg),
+            |c| c.gap_budget = f64::NAN,
+            |c| c.alpha_max = -1.0,
+            |c| c.every_k = 1,
+            |c| c.relax_frac = 0.0,
+            |c| c.relax_frac = 1.0,
+            |c| c.barrier_frac = c.relax_frac / 2.0,
+            |c| c.barrier_frac = 1.5,
+            |c| c.interval = 0.0,
+            |c| c.cooldown = c.interval / 2.0,
+            |c| c.hysteresis = 1.0,
+            |c| c.hysteresis = -0.1,
+        ] {
+            let mut c = cfg();
+            mutate(&mut c);
+            assert!(c.validate().is_err(), "{c:?} should be rejected");
+            c.enabled = false;
+            assert!(c.validate().is_ok(), "disabled cfg must not be validated: {c:?}");
+        }
+    }
+
+    #[test]
+    fn budget_breach_is_sync() {
+        // at or over budget -> Sync, regardless of watchdog state
+        assert_eq!(decide(&cfg(), &win(8.0, false)), AsyncMode::Sync);
+        assert_eq!(decide(&cfg(), &win(20.0, true)), AsyncMode::Sync);
+        // watchdog still firing inside the hysteresis band -> Sync too
+        assert_eq!(decide(&cfg(), &win(5.0, true)), AsyncMode::Sync);
+    }
+
+    #[test]
+    fn ladder_thresholds() {
+        let c = cfg(); // budget 8: relax at 5.6, barrier at 7.2
+        assert_eq!(decide(&c, &win(7.5, false)), AsyncMode::PeriodicBarrier { every_k: 4 });
+        assert_eq!(decide(&c, &win(6.0, false)), AsyncMode::OneStepOff);
+        assert_eq!(
+            decide(&c, &win(2.0, false)),
+            AsyncMode::FullyAsync { outstanding_cap: 80 },
+            "cap = (1 + min(4, 8-1)) * 16"
+        );
+    }
+
+    #[test]
+    fn monotone_response_to_rising_gap() {
+        let c = cfg();
+        let mut last_rank = 0;
+        for k in 0..=40 {
+            let gap = k as f64 * 0.25; // 0 .. 10
+            let rank = decide(&c, &win(gap, false)).rank();
+            assert!(rank >= last_rank, "rank must not loosen as the gap rises (gap {gap})");
+            last_rank = rank;
+        }
+        assert_eq!(last_rank, 3, "over budget ends at Sync");
+    }
+
+    #[test]
+    fn cap_respects_theory_alpha_gap_bound() {
+        // effective alpha is clamped so the Prop-1 implied staleness
+        // (~alpha versions at cap (alpha+1)N) stays inside the budget
+        let mut c = cfg();
+        c.alpha_max = 100.0;
+        assert_eq!(c.effective_alpha(), 7.0, "clamped to gap_budget - 1");
+        assert_eq!(c.outstanding_cap(), 128);
+        // and the clamped alpha still sits on the profitable side of
+        // Eq. 7: strictly better than sync, no better than the
+        // unclamped fantasy the budget cannot accept
+        let p = Prop1 { k_workers: 16, mu_gen: 10.0, l_gen: 100.0 };
+        let n = c.step_quota;
+        assert!(p.async_bound(n, c.effective_alpha()) < p.sync_bound(n));
+        assert!(p.async_bound(n, c.effective_alpha()) >= p.async_bound(n, c.alpha_max));
+    }
+
+    #[test]
+    fn unresolved_quota_leaves_cap_zero() {
+        let mut c = cfg();
+        c.step_quota = 0;
+        assert_eq!(decide(&c, &win(0.0, false)), AsyncMode::FullyAsync { outstanding_cap: 0 });
+    }
+
+    #[test]
+    fn admission_alpha_per_mode() {
+        let c = cfg();
+        assert_eq!(c.admission_alpha(AsyncMode::Sync), 0.0);
+        assert_eq!(c.admission_alpha(AsyncMode::OneStepOff), 1.0);
+        assert_eq!(c.admission_alpha(AsyncMode::PeriodicBarrier { every_k: 4 }), 4.0);
+        assert_eq!(c.admission_alpha(AsyncMode::FullyAsync { outstanding_cap: 80 }), 4.0);
+    }
+
+    #[test]
+    fn sync_step_schedule() {
+        assert!(AsyncMode::Sync.sync_step(17));
+        let b = AsyncMode::PeriodicBarrier { every_k: 4 };
+        assert!(b.sync_step(0) && b.sync_step(4) && !b.sync_step(3));
+        assert!(!AsyncMode::OneStepOff.sync_step(4));
+        assert!(!AsyncMode::FullyAsync { outstanding_cap: 9 }.sync_step(4));
+    }
+
+    #[test]
+    fn emergency_sync_bypasses_cooldown_and_relax_does_not() {
+        let mut g = AsyncGovernor::new(cfg());
+        assert_eq!(g.mode().rank(), 0, "starts fully async");
+        // t=0: healthy -> already at target, no transition
+        assert!(g.decide_at(0.0, &win(1.0, false)).is_none());
+        // t=1: gap blows through the budget -> immediate Sync, no
+        // cooldown to wait out
+        assert_eq!(g.decide_at(1.0, &win(12.0, true)), Some(AsyncMode::Sync));
+        // t=2: gap collapses, but cooldown (3s since t=1) holds Sync
+        assert!(g.decide_at(2.0, &win(0.0, false)).is_none());
+        assert_eq!(g.mode(), AsyncMode::Sync);
+        // t=4.5: cooled -> relaxes exactly one notch, not to the target
+        assert_eq!(
+            g.decide_at(4.5, &win(0.0, false)),
+            Some(AsyncMode::PeriodicBarrier { every_k: 4 })
+        );
+        assert_eq!(g.transitions(), 2);
+    }
+
+    #[test]
+    fn relax_descends_one_notch_per_cooldown() {
+        let mut g = AsyncGovernor::new(cfg());
+        g.decide_at(0.0, &win(12.0, true)); // -> Sync
+        let mut t = 0.0;
+        let mut ranks = vec![g.mode().rank()];
+        for _ in 0..20 {
+            t += 1.0;
+            if g.decide_at(t, &win(0.5, false)).is_some() {
+                ranks.push(g.mode().rank());
+            }
+        }
+        assert_eq!(ranks, vec![3, 2, 1, 0], "Sync -> barrier -> one-step-off -> fully async");
+    }
+
+    #[test]
+    fn hysteresis_prevents_flap_on_the_boundary() {
+        // gap oscillating right around the relax threshold (5.6):
+        // tightens once, then the relax margin (must fall below
+        // 5.6 * 0.75 = 4.2) refuses to loosen again
+        let mut g = AsyncGovernor::new(cfg());
+        let mut t = 0.0;
+        g.decide_at(t, &win(6.0, false)); // not cooled? first change: allowed
+        assert_eq!(g.mode(), AsyncMode::OneStepOff);
+        for k in 0..12 {
+            t += 1.0;
+            let gap = if k % 2 == 0 { 5.4 } else { 6.0 }; // straddles 5.6
+            assert!(
+                g.decide_at(t, &win(gap, false)).is_none(),
+                "gap hovering on the boundary must not flap the mode"
+            );
+        }
+        // a real improvement clears the margin and relaxes
+        t += 1.0;
+        assert!(g.decide_at(t, &win(2.0, false)).is_some());
+        assert_eq!(g.mode().rank(), 0);
+    }
+
+    #[test]
+    fn never_relaxes_while_watchdog_fires() {
+        let mut g = AsyncGovernor::new(cfg());
+        g.decide_at(0.0, &win(12.0, true)); // -> Sync
+        // gap numerically low but the watchdog has not cleared yet
+        // (hysteresis band): decide says Sync, the governor holds
+        for k in 1..8 {
+            assert!(g.decide_at(k as f64, &win(4.5, true)).is_none());
+            assert_eq!(g.mode(), AsyncMode::Sync);
+        }
+    }
+
+    #[test]
+    fn interval_gates_decisions() {
+        let mut g = AsyncGovernor::new(cfg());
+        assert!(g.decide_at(0.0, &win(12.0, true)).is_some());
+        // inside the interval: not even looked at
+        assert!(g.decide_at(0.5, &win(0.0, false)).is_none());
+        assert!(g.last_tick == Some(0.0));
+    }
+
+    #[test]
+    fn same_rank_refreshes_cap_without_transition() {
+        let mut g = AsyncGovernor::new(GovernorCfg { step_quota: 0, ..cfg() });
+        assert_eq!(g.mode(), AsyncMode::FullyAsync { outstanding_cap: 0 });
+        g.cfg.step_quota = 16; // quota resolved after construction
+        assert!(g.decide_at(0.0, &win(1.0, false)).is_none(), "no visible transition");
+        assert_eq!(g.mode(), AsyncMode::FullyAsync { outstanding_cap: 80 });
+        assert_eq!(g.transitions(), 0);
+    }
+}

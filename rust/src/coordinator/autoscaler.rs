@@ -457,13 +457,7 @@ mod tests {
         // ceil(60/4)=15 would be clamped by max, but the floor
         // ceil(60/8)=8 keeps the windows feasible anyway
         let c = cfg();
-        let s = PoolSignals {
-            serving: 8,
-            queue_depth: 0.0,
-            outstanding: 60,
-            slots: 8,
-            wasted_tokens: 0,
-        };
+        let s = sig(8, 0.0, 60);
         assert_eq!(decide(&c, &s), ScaleDecision::Hold);
     }
 

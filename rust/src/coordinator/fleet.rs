@@ -2083,8 +2083,15 @@ impl LlmProxyPool {
 
     /// Suspend every live replica (synchronous mode: rollout pauses
     /// during training). New requests pool-queue until `resume`.
+    /// Idempotent: an already-suspended pool is left untouched, so the
+    /// async governor can issue suspend on a mode transition without
+    /// tracking whether the previous mode already did — replicas never
+    /// see a double Suspend command.
     pub fn suspend(&self) {
         let mut st = self.shared.state.lock().unwrap();
+        if st.pool_suspended {
+            return;
+        }
         st.pool_suspended = true;
         for r in 0..st.clients.len() {
             if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
@@ -2093,8 +2100,16 @@ impl LlmProxyPool {
         }
     }
 
+    /// Idempotent inverse of [`suspend`](Self::suspend): resuming a
+    /// pool that is not suspended is a no-op (no double Resume, no
+    /// spurious drain), so governor transitions like Sync->FullyAsync
+    /// cannot double-resume and a transition landing between a
+    /// suspend/resume pair cannot leave replicas parked.
     pub fn resume(&self) {
         let mut st = self.shared.state.lock().unwrap();
+        if !st.pool_suspended {
+            return;
+        }
         st.pool_suspended = false;
         for r in 0..st.clients.len() {
             if matches!(st.phase[r], Phase::Serving | Phase::Draining) {
@@ -2803,6 +2818,37 @@ mod tests {
         p.resume();
         assert_eq!(p.pool_queue_len(), 0);
         assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
+    }
+
+    /// Governor mode transitions issue suspend/resume without tracking
+    /// what the previous mode already did — the pair must be idempotent
+    /// and safe under any interleaving the step loop can produce.
+    #[test]
+    fn suspend_resume_are_idempotent_across_mode_transitions() {
+        let p = pool(2, RoutePolicy::RoundRobin, 8);
+        // double-suspend (e.g. Sync step after a tighten transition
+        // already suspended): replicas must not see a second Suspend
+        p.suspend();
+        p.suspend();
+        let _g = p.generate(vec![1], 4);
+        assert_eq!(p.pool_queue_len(), 1);
+        p.resume();
+        assert_eq!(p.pool_queue_len(), 0, "one resume undoes any number of suspends");
+        assert_eq!(p.outstanding_per_replica(), vec![1, 0]);
+        // double-resume on a running pool (relax transition right
+        // after a sync step already resumed): no spurious drain, new
+        // work keeps dispatching
+        p.resume();
+        let _h = p.generate(vec![2], 4);
+        assert_eq!(p.pool_queue_len(), 0);
+        assert_eq!(p.outstanding_per_replica(), vec![1, 1]);
+        // a full suspend/resume/resume burst — the governor flipping
+        // Sync -> FullyAsync inside one step — leaves the pool live
+        p.suspend();
+        p.resume();
+        p.resume();
+        let _i = p.generate(vec![3], 4);
+        assert_eq!(p.outstanding_per_replica(), vec![2, 1]);
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! scale benches; here they execute against real decode/train steps.
 
 pub mod async_controller;
+pub mod async_governor;
 pub mod autoscaler;
 pub mod fleet;
 pub mod kv_index;
@@ -44,6 +45,10 @@ pub mod routing;
 pub mod sample_buffer;
 
 pub use async_controller::{format_log, run_training, steplog_jsonl, ControllerCfg, StepLog};
+// the governor's pure `decide` stays path-qualified
+// (`async_governor::decide`) — the autoscaler already exports the
+// unqualified name below
+pub use async_governor::{AsyncGovernor, AsyncMode, GovernorCfg};
 pub use autoscaler::{decide, AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 pub use fleet::{LlmProxyPool, PoolCfg, PoolReport, ReplicaReport};
 pub use kv_index::{KvCacheCfg, KvIndexStats, KvPrefixIndex};
@@ -144,6 +149,13 @@ pub struct RolloutSystemCfg {
     /// into `ControllerCfg::telemetry` via `Self::controller_telemetry`
     /// so a configured block cannot be silently inert.
     pub telemetry: TelemetryCfg,
+    /// adaptive asynchrony governor (`async_governor: {…}` in YAML /
+    /// CLI; disabled by default — the static `alpha`/sync split runs
+    /// untouched): dials sync / periodic-barrier / one-step-off /
+    /// fully-async at runtime off the telemetry plane's measured
+    /// version-gap windows. Requires `telemetry.enabled`. Thread this
+    /// into `ControllerCfg::governor` via `Self::controller_governor`.
+    pub governor: GovernorCfg,
 }
 
 impl RolloutSystemCfg {
@@ -178,6 +190,12 @@ impl RolloutSystemCfg {
         if let Err(e) = self.telemetry.validate() {
             anyhow::bail!(e);
         }
+        self.governor.validate()?;
+        anyhow::ensure!(
+            !self.governor.enabled || self.telemetry.enabled,
+            "async_governor requires the telemetry plane: enable the telemetry: block \
+             (the governor acts on its closed version-gap windows)"
+        );
         Ok(())
     }
 
@@ -195,6 +213,20 @@ impl RolloutSystemCfg {
     /// configured here cannot be silently inert.
     pub fn controller_telemetry(&self) -> Option<TelemetryCfg> {
         self.telemetry.enabled.then(|| self.telemetry.clone())
+    }
+
+    /// The AsyncController's view of this cfg's governor knob: `Some`
+    /// only when enabled, with the step quota (the N its outstanding
+    /// cap scales from) resolved from the consumption shape when the
+    /// block left it open. Hand this to `ControllerCfg::governor`.
+    pub fn controller_governor(&self) -> Option<GovernorCfg> {
+        self.governor.enabled.then(|| {
+            let mut g = self.governor;
+            if g.step_quota == 0 {
+                g.step_quota = self.consume_groups * self.consume_group_size;
+            }
+            g
+        })
     }
 
     fn engine_cfg(&self) -> EngineCfg {
@@ -340,6 +372,7 @@ mod tests {
             predictor: PredictorCfg::default(),
             kv_cache: KvCacheCfg::disabled(),
             telemetry: TelemetryCfg::disabled(),
+            governor: GovernorCfg::disabled(),
         }
     }
 
@@ -417,6 +450,30 @@ mod tests {
         assert!(c.controller_telemetry().is_some());
         c.telemetry = TelemetryCfg::disabled();
         assert!(c.controller_telemetry().is_none());
+    }
+
+    #[test]
+    fn governor_requires_telemetry_and_validates_only_when_enabled() {
+        let mut c = cfg();
+        // enabled governor without the plane: rejected with a pointer
+        c.governor = GovernorCfg::on();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("telemetry"), "error must name the missing plane: {err}");
+        // with the plane: fine, and the controller view resolves the
+        // step quota from the consumption shape (2 groups x 4)
+        c.telemetry = TelemetryCfg::on();
+        c.validate().unwrap();
+        let g = c.controller_governor().expect("enabled block must reach the controller");
+        assert_eq!(g.step_quota, 8);
+        // an explicit quota is left alone
+        c.governor.step_quota = 32;
+        assert_eq!(c.controller_governor().unwrap().step_quota, 32);
+        // degenerate knobs rejected only while enabled
+        c.governor = GovernorCfg { every_k: 1, ..GovernorCfg::on() };
+        assert!(c.validate().is_err());
+        c.governor.enabled = false;
+        assert!(c.validate().is_ok(), "inert governor knobs must not block a run");
+        assert!(c.controller_governor().is_none());
     }
 
     #[test]

@@ -68,6 +68,11 @@ impl BufferStats {
 
 struct Inner {
     version: u64,
+    /// async ratio alpha, runtime-adjustable via `set_async_ratio`
+    /// (the async governor retunes it on mode transitions)
+    alpha: f64,
+    /// sequences admissible at once: ceil((1 + alpha) * batch)
+    capacity: usize,
     /// tickets issued and not yet retired. Retirement happens at
     /// `bump_version`, not `get_batch`: the batch being trained still
     /// occupies freshness budget, which is what makes the admission
@@ -98,10 +103,10 @@ impl Inner {
 pub struct SampleBuffer {
     inner: Mutex<Inner>,
     cv: Condvar,
-    /// sequences admissible at once: ceil((1 + alpha) * batch)
-    capacity: usize,
+    /// sequences consumed per training step — the N that capacity
+    /// `(1 + alpha) * batch` scales from
+    batch: usize,
     group_size: usize,
-    alpha: f64,
     /// observer hooks, held outside `inner` and always invoked with the
     /// inner lock released (hooks may immediately call back in)
     hooks: Mutex<Hooks>,
@@ -144,6 +149,8 @@ impl SampleBuffer {
         SampleBuffer {
             inner: Mutex::new(Inner {
                 version: 0,
+                alpha,
+                capacity,
                 outstanding: 0,
                 pending_retire: 0,
                 ready: VecDeque::new(),
@@ -153,9 +160,8 @@ impl SampleBuffer {
                 stats: BufferStats::default(),
             }),
             cv: Condvar::new(),
-            capacity,
+            batch,
             group_size,
-            alpha,
             hooks: Mutex::new(Hooks::default()),
         }
     }
@@ -175,11 +181,34 @@ impl SampleBuffer {
     }
 
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.inner.lock().unwrap().capacity
     }
 
     pub fn alpha(&self) -> f64 {
-        self.alpha
+        self.inner.lock().unwrap().alpha
+    }
+
+    /// Retune the async ratio at runtime (the governor's mode
+    /// transitions): recomputes `capacity = ceil((1 + alpha) * batch)`
+    /// and wakes admission waiters, since a loosened window may now
+    /// have room. Tightening never cancels already-granted tickets —
+    /// outstanding work simply drains until admission reopens — and
+    /// the tighter freshness floor takes effect at the next
+    /// `bump_version`'s eviction sweep, exactly where the floor is
+    /// always enforced.
+    pub fn set_async_ratio(&self, alpha: f64) {
+        assert!(alpha >= 0.0 && alpha.is_finite());
+        {
+            let mut g = self.inner.lock().unwrap();
+            if g.alpha == alpha {
+                return;
+            }
+            g.alpha = alpha;
+            g.capacity = ((1.0 + alpha) * self.batch as f64).ceil() as usize;
+            self.cv.notify_all();
+        }
+        // a loosened window is new capacity for event-driven producers
+        self.notify_capacity();
     }
 
     /// Producer admission: blocks until a generation slot is available
@@ -191,7 +220,7 @@ impl SampleBuffer {
             if g.shutdown {
                 return None;
             }
-            if g.outstanding < self.capacity {
+            if g.outstanding < g.capacity {
                 g.outstanding += 1;
                 return Some(g.version);
             }
@@ -206,7 +235,7 @@ impl SampleBuffer {
         let mut g = self.inner.lock().unwrap();
         if g.shutdown {
             Admission::Shutdown
-        } else if g.outstanding < self.capacity {
+        } else if g.outstanding < g.capacity {
             g.outstanding += 1;
             Admission::Granted(g.version)
         } else {
@@ -251,7 +280,7 @@ impl SampleBuffer {
                 g.stats.surplus += 1;
                 g.outstanding = g.outstanding.saturating_sub(1);
                 reclaimed = true;
-            } else if traj.init_version < g.freshness_floor(self.alpha) {
+            } else if traj.init_version < g.freshness_floor(g.alpha) {
                 g.stats.stale_evicted += 1;
                 g.outstanding = g.outstanding.saturating_sub(1);
                 reclaimed = true;
@@ -334,7 +363,7 @@ impl SampleBuffer {
             g.outstanding = g.outstanding.saturating_sub(g.pending_retire);
             g.pending_retire = 0;
             let v = g.version;
-            let floor = g.freshness_floor(self.alpha);
+            let floor = g.freshness_floor(g.alpha);
             let mut evicted = 0usize;
             g.ready.retain(|grp| {
                 if grp.iter().all(|t| t.init_version >= floor) {
@@ -427,6 +456,46 @@ mod tests {
         assert_eq!(SampleBuffer::new(8, 2, 0.0).capacity(), 8);
         assert_eq!(SampleBuffer::new(8, 2, 2.0).capacity(), 24);
         assert_eq!(SampleBuffer::new(8, 2, 0.5).capacity(), 12);
+    }
+
+    #[test]
+    fn async_ratio_retunes_capacity_at_runtime() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let b = Arc::new(SampleBuffer::new(8, 2, 0.0)); // capacity 8
+        let caps = Arc::new(AtomicUsize::new(0));
+        let c = caps.clone();
+        b.set_capacity_hook(Box::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }));
+        for _ in 0..8 {
+            assert!(b.begin_sample().is_some());
+        }
+        assert_eq!(b.try_begin_sample(), Admission::Full);
+        // governor relaxes: the window widens mid-run and both the
+        // event-driven hook and blocked waiters see the new room
+        b.set_async_ratio(2.0);
+        assert_eq!(b.capacity(), 24);
+        assert_eq!(b.alpha(), 2.0);
+        assert!(caps.load(Ordering::SeqCst) >= 1, "loosening must fire the capacity hook");
+        assert!(matches!(b.try_begin_sample(), Admission::Granted(0)));
+        // governor tightens below what is outstanding: no ticket is
+        // revoked, admission just stays shut until work drains
+        b.set_async_ratio(0.0);
+        assert_eq!(b.capacity(), 8);
+        assert_eq!(b.outstanding(), 9);
+        assert_eq!(b.try_begin_sample(), Admission::Full);
+        // unchanged alpha is a no-op (no spurious hook storm)
+        let before = caps.load(Ordering::SeqCst);
+        b.set_async_ratio(0.0);
+        assert_eq!(caps.load(Ordering::SeqCst), before);
+        // the tightened freshness floor bites at the next bump: alpha 0
+        // at version 1 evicts everything initiated at version 0
+        for _ in 0..2 {
+            b.push(traj(0, 0));
+        }
+        assert_eq!(b.ready_groups(), 1);
+        b.bump_version();
+        assert_eq!(b.ready_groups(), 0, "floor = version - 0 evicts the stale group");
     }
 
     #[test]

@@ -19,7 +19,11 @@
 //!                     trace=true trace_ring=4096 trace_path=/tmp/roll-trace \
 //!                     telemetry=true telemetry_window=5 \
 //!                     telemetry_prom=/tmp/roll-telemetry/metrics.prom \
-//!                     telemetry_jsonl=/tmp/roll-telemetry/verdicts.jsonl
+//!                     telemetry_jsonl=/tmp/roll-telemetry/verdicts.jsonl \
+//!                     governor=true governor_budget=8 governor_alpha_max=4 \
+//!                     governor_every_k=4 governor_interval=5 governor_cooldown=10 \
+//!                     governor_hysteresis=0.25 governor_relax_frac=0.7 \
+//!                     governor_barrier_frac=0.9
 //!   roll-flash simulate gpus=64 profile=think alpha=2 steps=3
 //!   roll-flash inspect artifacts=artifacts/tiny
 
@@ -29,7 +33,7 @@ use anyhow::Result;
 use roll_flash::cli::Cli;
 use roll_flash::config::{PgVariant, RollConfig};
 use roll_flash::coordinator::{
-    format_log, run_training, AutoscaleCfg, ControllerCfg, KvCacheCfg, PredictorCfg,
+    format_log, run_training, AutoscaleCfg, ControllerCfg, GovernorCfg, KvCacheCfg, PredictorCfg,
     RolloutSystem, RolloutSystemCfg, RoutePolicy, TraceCfg,
 };
 use roll_flash::env::math::MathEnv;
@@ -59,6 +63,9 @@ fn main() -> Result<()> {
                  \u{20}         kv_bytes_per_token=<n> kv_invalidate_on_sync=<bool>\n\
                  \u{20}         trace=<bool> trace_ring=<n> trace_path=<dir>\n\
                  \u{20}         telemetry=<bool> telemetry_window=<f> telemetry_prom=<file> telemetry_jsonl=<file>\n\
+                 \u{20}         governor=<bool> governor_budget=<f> governor_alpha_max=<f> governor_every_k=<n>\n\
+                 \u{20}         governor_interval=<f> governor_cooldown=<f> governor_hysteresis=<f>\n\
+                 \u{20}         governor_relax_frac=<f> governor_barrier_frac=<f>\n\
                  simulate: gpus=<n> profile=<base|think> alpha=<f> steps=<n> [naive=1]\n\
                  inspect:  artifacts=<dir>"
             );
@@ -119,12 +126,27 @@ fn train(cli: &Cli) -> Result<()> {
         invalidate_on_weight_sync: cli
             .bool_or("kv_invalidate_on_sync", cfg.kv_cache.invalidate_on_weight_sync),
     };
+    let governor = GovernorCfg {
+        enabled: cli.bool_or("governor", cfg.governor.enabled),
+        gap_budget: cli.parse_or("governor_budget", cfg.governor.gap_budget),
+        alpha_max: cli.parse_or("governor_alpha_max", cfg.governor.alpha_max),
+        every_k: cli.parse_or("governor_every_k", cfg.governor.every_k),
+        relax_frac: cli.parse_or("governor_relax_frac", cfg.governor.relax_frac),
+        barrier_frac: cli.parse_or("governor_barrier_frac", cfg.governor.barrier_frac),
+        interval: cli.parse_or("governor_interval", cfg.governor.interval),
+        cooldown: cli.parse_or("governor_cooldown", cfg.governor.cooldown),
+        hysteresis: cli.parse_or("governor_hysteresis", cfg.governor.hysteresis),
+        // resolved from the batch shape by controller_governor()
+        step_quota: 0,
+    };
     // telemetry export paths on the CLI imply the plane, like the
-    // YAML block's presence does
+    // YAML block's presence does — and so does the governor, which
+    // acts on the plane's closed version-gap windows
     let mut telemetry = cfg.telemetry.clone();
     telemetry.enabled = cli.bool_or(
         "telemetry",
         cfg.telemetry.enabled
+            || governor.enabled
             || cli.get("telemetry_prom").is_some()
             || cli.get("telemetry_jsonl").is_some(),
     );
@@ -177,12 +199,18 @@ fn train(cli: &Cli) -> Result<()> {
         predictor,
         kv_cache,
         telemetry,
+        governor,
     };
     fleet.validate()?;
     println!(
-        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor} partial_migration={partial_migration} autoscale={}",
+        "train: model={model} alpha={alpha} variant={} steps={steps} replicas={num_replicas} route={} rolling={rolling_update} workers={num_workers} redundancy={redundancy_factor} partial_migration={partial_migration} governor={} autoscale={}",
         variant.as_str(),
         route_policy.as_str(),
+        if governor.enabled {
+            format!("[budget={} alpha_max={}]", governor.gap_budget, governor.alpha_max)
+        } else {
+            "off".into()
+        },
         if autoscale.enabled {
             format!(
                 "[{}..{}] target={} every {}s",
@@ -205,6 +233,7 @@ fn train(cli: &Cli) -> Result<()> {
         sync_mode: alpha == 0.0,
         autoscale: fleet.controller_autoscale(),
         telemetry: fleet.controller_telemetry(),
+        governor: fleet.controller_governor(),
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl)?;
     for l in &logs {

@@ -414,6 +414,15 @@ pub struct TelemetryWindow {
     pub attr: AttrSnapshot,
     pub lat_p50: f64,
     pub lat_p99: f64,
+    /// the window's version-gap signal exactly as the caller fed it
+    /// (`TelemetrySignals::version_gap`) — the staleness measurement
+    /// the async governor dials modes against, preserved here so
+    /// consumers read the *measured* gap, never a re-derived one
+    pub version_gap: f64,
+    /// `VersionGapBudget` watchdog state *after* this window (true
+    /// while the staleness alarm is raised — the governor's
+    /// emergency-sync trigger)
+    pub gap_firing: bool,
     pub alerts: Vec<TelemetryAlert>,
     pub stages: Vec<StageStat>,
 }
@@ -436,6 +445,7 @@ impl TelemetryWindow {
             "{{\"t0\":{:.6},\"t1\":{:.6},\"verdict\":\"{}\",\"throughput\":{:.6},\
              \"waste_rate\":{:.6},\"queue_depth\":{:.3},\"serving\":{},\
              \"lat_p50\":{:.6},\"lat_p99\":{:.6},\
+             \"version_gap\":{:.6},\"gap_firing\":{},\
              \"attr\":{{\"decode_busy\":{:.6},\"prefill\":{:.6},\"prefill_replay\":{:.6},\
              \"weight_sync\":{:.6},\"draining\":{:.6},\"idle_bubble\":{:.6}}},\
              \"alerts\":[{}],\"stages\":[{}]}}",
@@ -448,6 +458,8 @@ impl TelemetryWindow {
             self.serving,
             self.lat_p50,
             self.lat_p99,
+            self.version_gap,
+            self.gap_firing,
             self.attr.decode_busy,
             self.attr.prefill,
             self.attr.prefill_replay,
@@ -457,6 +469,29 @@ impl TelemetryWindow {
             alerts.join(","),
             stages.join(",")
         )
+    }
+
+    /// Synthetic window carrying only the staleness signal — the
+    /// governor's unit tests (and offline what-if sweeps) drive
+    /// `async_governor::decide` with these instead of standing up a
+    /// whole plane.
+    pub fn probe(t1: f64, version_gap: f64, gap_firing: bool) -> Self {
+        TelemetryWindow {
+            t0: t1 - 1.0,
+            t1,
+            verdict: BottleneckVerdict::Healthy,
+            throughput: 0.0,
+            waste_rate: 0.0,
+            queue_depth: 0.0,
+            serving: 0,
+            attr: AttrSnapshot::default(),
+            lat_p50: 0.0,
+            lat_p99: 0.0,
+            version_gap,
+            gap_firing,
+            alerts: Vec::new(),
+            stages: Vec::new(),
+        }
     }
 
     /// The live one-line status (`StepLog` / example output).
@@ -815,6 +850,10 @@ impl TelemetryPlane {
             attr: attr_delta,
             lat_p50: sig.lat_p50,
             lat_p99: sig.lat_p99,
+            version_gap: sig.version_gap,
+            // dog_gap.update ran above, so this is the post-window
+            // alarm state the governor keys its emergency path off
+            gap_firing: self.dog_gap.firing,
             alerts,
             stages: self.window_path.stage_stats(),
         };
@@ -1168,6 +1207,31 @@ mod tests {
         let ws = p.windows();
         assert_eq!(ws.len(), 2);
         assert_eq!(ws[0].t1, ws[1].t0);
+    }
+
+    #[test]
+    fn flush_window_carries_gap_signal_and_covers_run_end() {
+        // the end-of-run flush must (a) stamp t1 at the exact run end
+        // so the timeline tiles the whole run, and (b) carry the
+        // caller's staleness signal + watchdog state into the final
+        // window — the trailing partial window is what verdicts.jsonl
+        // and the governor see last
+        let mut p = TelemetryPlane::new(cfg());
+        p.tick(&base_sig(0.0));
+        let mut hot = base_sig(1.0);
+        hot.version_gap = 20.0; // over gap_budget 8 -> watchdog fires
+        let w = p.tick(&hot).unwrap();
+        assert!(w.gap_firing && w.version_gap == 20.0);
+        let mut tail = base_sig(1.7); // run ends mid-window
+        tail.version_gap = 6.0; // inside hysteresis band: stays firing
+        let w = p.flush(&tail).expect("flush closes the remainder");
+        assert_eq!(w.t1, 1.7, "last window's t1 must cover the run end");
+        assert_eq!(w.version_gap, 6.0);
+        assert!(w.gap_firing, "watchdog state must survive into the flush window");
+        assert_eq!(p.windows().last().unwrap().t1, 1.7);
+        let last_line = p.timeline_jsonl().lines().last().unwrap().to_string();
+        assert!(last_line.contains("\"version_gap\":6.000000"));
+        assert!(last_line.contains("\"gap_firing\":true"));
     }
 
     #[test]

@@ -59,6 +59,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 
+use crate::coordinator::async_governor::{AsyncGovernor, GovernorCfg};
 use crate::coordinator::autoscaler::{AutoscaleCfg, Autoscaler, PoolSignals, ScaleDecision};
 use crate::coordinator::kv_index::KvCacheCfg;
 use crate::coordinator::length_predictor::{LengthPredictor, PredictorCfg};
@@ -151,6 +152,15 @@ pub struct FleetSimConfig {
     /// plane is a pure observer — it never touches the event loop
     /// (asserted by `telemetry_is_a_pure_observer`).
     pub telemetry: Option<TelemetryCfg>,
+    /// adaptive asynchrony governor on the virtual clock: requests
+    /// carry the weights version they were dispatched under, completed
+    /// requests feed the measured gap into the telemetry windows, and
+    /// each closed window may move the mode. Tight modes (rank >= 2,
+    /// i.e. `PeriodicBarrier`/`Sync`) force fleet-wide *broadcast*
+    /// sync waves even when `rolling_update` is set — the barrier
+    /// semantics. When enabled without a `telemetry` block, a plane is
+    /// derived from the governor's cadence/budget.
+    pub governor: Option<GovernorCfg>,
     /// generation-length predictor knobs; scheduling acts on its output
     /// only under `RoutePolicy::TailAware` (other policies keep the
     /// exact legacy FIFO event order)
@@ -188,6 +198,7 @@ impl FleetSimConfig {
             autoscale: None,
             trace: None,
             telemetry: None,
+            governor: None,
             predictor: PredictorCfg::default(),
             seed: 17,
         }
@@ -279,6 +290,13 @@ pub struct FleetSimReport {
     pub telemetry: Vec<TelemetryWindow>,
     /// every watchdog alert transition across the run, in order
     pub telemetry_alerts: Vec<TelemetryAlert>,
+    /// governor mode timeline: `(virtual_time, mode_label)` — seeded
+    /// with the starting mode at t=0, one entry per transition after
+    /// (empty unless `governor` was configured)
+    pub mode_timeline: Vec<(f64, String)>,
+    /// governor transitions across the run (`mode_timeline.len() - 1`
+    /// when governed)
+    pub mode_transitions: usize,
 }
 
 #[derive(Clone, Copy)]
@@ -404,16 +422,43 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     // sim state, never schedules events). `window_lats` holds episode
     // latencies since the last closed window — the plane's windowed
     // tail signal, reset on every close.
-    let mut plane = cfg.telemetry.as_ref().filter(|t| t.enabled).map(|t| {
-        t.validate().expect("invalid telemetry cfg");
-        TelemetryPlane::new(t.clone())
-    });
+    let mut plane = cfg
+        .telemetry
+        .as_ref()
+        .filter(|t| t.enabled)
+        .cloned()
+        .or_else(|| {
+            // the governor can only act on closed windows: when no
+            // telemetry block was configured, derive a plane from the
+            // governor's own cadence and budget
+            cfg.governor.filter(|g| g.enabled).map(|g| TelemetryCfg {
+                window_secs: g.interval,
+                gap_budget: g.gap_budget,
+                ..TelemetryCfg::on()
+            })
+        })
+        .map(|t| {
+            t.validate().expect("invalid telemetry cfg");
+            TelemetryPlane::new(t)
+        });
     let mut window_lats: Vec<f64> = Vec::new();
     let mut report = FleetSimReport {
         routed: vec![0; max_slots],
         peak_replicas: init_n,
         ..Default::default()
     };
+    // adaptive asynchrony governor on the virtual clock. Requests carry
+    // the weights version they were dispatched under (`dispatch_version`,
+    // original dispatch wins across migrations — a salvaged prefix was
+    // decoded under the old weights); completions fold their gap into
+    // `window_gap_max`, the plane's per-window version-gap signal.
+    let mut gov = cfg.governor.filter(|g| g.enabled).map(AsyncGovernor::new);
+    let mut weights_version = 0usize;
+    let mut dispatch_version: HashMap<u64, usize> = HashMap::new();
+    let mut window_gap_max = 0.0f64;
+    if let Some(g) = gov.as_ref() {
+        report.mode_timeline.push((0.0, g.mode().label()));
+    }
     let mut max_paused = 0usize;
     let mut phase = SyncPhase::Idle {
         next: if cfg.sync_interval > 0.0 { cfg.sync_interval } else { f64::INFINITY },
@@ -468,6 +513,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 report.drain_virtual_secs += $now - t0;
             }
             dispatch_time.insert($id, $now);
+            dispatch_version.entry($id).or_insert(weights_version);
             placed.insert($id, $r);
             work_left.insert($id, $tokens);
             if let Some(rec) = rec {
@@ -756,9 +802,10 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
     // the pool's `telemetry_signals()`. The attribution mirrors the
     // final report's categories so per-window deltas telescope back to
     // the serving replica-second integral; latency percentiles are
-    // window-scoped (reset at every close); trainer-side signals
-    // (buffer, version gap, train wait) have no sim counterpart and
-    // stay zero.
+    // window-scoped (reset at every close); the version gap is the
+    // weight-sync staleness of completed requests (sync waves passed
+    // since dispatch, max over the window); trainer-side signals
+    // (buffer, train wait) have no sim counterpart and stay zero.
     macro_rules! tele_signals {
         ($now:expr) => {{
             let rs: f64 = report.replica_seconds
@@ -793,7 +840,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     .map(|p| p.total_work_done($now))
                     .sum::<f64>()
                     .round() as u64,
-                version_gap: 0.0,
+                version_gap: window_gap_max,
                 buffer_ready: 0.0,
                 train_wait_secs: 0.0,
                 lat_p50: crate::util::percentile(&window_lats, 50.0),
@@ -818,6 +865,25 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                     let closed = if $flush { p.flush(&sig) } else { p.tick(&sig) };
                     if let Some(w) = closed {
                         window_lats.clear();
+                        window_gap_max = 0.0;
+                        if let Some(g) = gov.as_mut() {
+                            if let Some(m) = g.decide_at(w.t1, &w) {
+                                report.mode_transitions += 1;
+                                report.mode_timeline.push((w.t1, m.label()));
+                                if let Some(rec) = rec {
+                                    rec.emit_at(
+                                        "governor_transition",
+                                        EventPhase::Instant,
+                                        0,
+                                        None,
+                                        0,
+                                        0,
+                                        w.t1,
+                                        format!("mode={} gap={:.2}", m.as_str(), w.version_gap),
+                                    );
+                                }
+                            }
+                        }
                         if let Some(rec) = rec {
                             rec.emit_at(
                                 "telemetry_verdict",
@@ -1018,6 +1084,13 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 // the conversation's next turn can resume here for free
                 kv_insert!(r, conv, ctx + tokens);
                 let t_dispatch = dispatch_time.remove(&id).unwrap_or(t_submit);
+                // measured staleness: sync waves the fleet absorbed
+                // since this request was (first) dispatched — the
+                // plane's per-window version-gap signal, which in turn
+                // drives every governor decision
+                if let Some(v0) = dispatch_version.remove(&id) {
+                    window_gap_max = window_gap_max.max((weights_version - v0) as f64);
+                }
                 // every virtual completion feeds the shared length
                 // predictor, exactly like the real pool's collectors
                 predictor.record(group, tokens.round() as usize);
@@ -1233,8 +1306,18 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                 phase = match phase {
                     SyncPhase::Idle { .. } => {
                         report.sync_waves += 1;
+                        // the fleet absorbs a new weights version:
+                        // everything still decoding was dispatched at
+                        // least one version ago from here on
+                        weights_version += 1;
+                        // tight governor modes (PeriodicBarrier / Sync,
+                        // rank >= 2) force a fleet-wide broadcast wave —
+                        // the barrier semantics — even when the config
+                        // asked for staggered rolling updates
+                        let rolling = cfg.rolling_update
+                            && gov.as_ref().map(|g| g.mode().rank() < 2).unwrap_or(true);
                         if let Some(rec) = rec {
-                            let mode = if cfg.rolling_update { "rolling" } else { "broadcast" };
+                            let mode = if rolling { "rolling" } else { "broadcast" };
                             rec.emit_at(
                                 "weight_sync",
                                 EventPhase::Instant,
@@ -1246,7 +1329,7 @@ pub fn run(cfg: &FleetSimConfig) -> FleetSimReport {
                                 format!("wave={} mode={mode}", report.sync_waves),
                             );
                         }
-                        if cfg.rolling_update {
+                        if rolling {
                             paused[0] = true;
                             replicas[0].set_paused(true, now);
                             // new weights invalidate a replica's cached
@@ -1643,6 +1726,57 @@ mod tests {
         let broadcast = run(&c);
         assert!(broadcast.sync_waves >= 1);
         assert_eq!(broadcast.min_decoding_during_sync, 0);
+    }
+
+    /// Governor mirror on the fleet sim: a gap budget of 1 with waves
+    /// every 30 virtual seconds means every window containing a wave
+    /// measures gap >= 1 (in-flight requests span the version bump), so
+    /// the governor must tighten — and once tight (rank >= 2), sync
+    /// waves turn fleet-wide broadcast even though the config asked for
+    /// rolling updates. Also exercises the governor-derived telemetry
+    /// plane (no explicit `telemetry` block).
+    #[test]
+    fn governor_forces_broadcast_waves_under_tight_budget() {
+        let mut c = FleetSimConfig::default_fleet(3);
+        c.sync_interval = 30.0;
+        c.sync_time = 2.0;
+        c.governor = Some(GovernorCfg {
+            gap_budget: 1.0,
+            interval: 10.0,
+            cooldown: 20.0,
+            ..GovernorCfg::on()
+        });
+        let r = run(&c);
+        assert_eq!(r.completed, c.total_requests);
+        assert!(
+            !r.telemetry.is_empty(),
+            "an enabled governor must derive a telemetry plane when none is configured"
+        );
+        assert!(
+            r.mode_timeline[0].0 == 0.0 && r.mode_timeline[0].1.starts_with("async"),
+            "timeline seeds with the optimistic starting mode: {:?}",
+            r.mode_timeline
+        );
+        assert!(
+            r.mode_transitions >= 1,
+            "a binding budget must force at least one transition: {:?}",
+            r.mode_timeline
+        );
+        assert!(
+            r.telemetry.iter().any(|w| w.version_gap >= 1.0),
+            "requests spanning a wave must register a measured gap: {:?}",
+            r.telemetry.iter().map(|w| w.version_gap).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            r.min_decoding_during_sync, 0,
+            "tight modes must broadcast-pause the whole fleet despite rolling_update=true: {:?}",
+            r.mode_timeline
+        );
+        // virtual-time determinism: the governed run replays exactly
+        let r2 = run(&c);
+        assert_eq!(r.makespan, r2.makespan);
+        assert_eq!(r.mode_timeline, r2.mode_timeline);
+        assert_eq!(r.mode_transitions, r2.mode_transitions);
     }
 
     #[test]

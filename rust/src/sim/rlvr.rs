@@ -12,6 +12,8 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
+use crate::coordinator::async_governor::{AsyncGovernor, AsyncMode, GovernorCfg};
+use crate::metrics::telemetry::{TelemetryCfg, TelemetryPlane, TelemetrySignals};
 use crate::sim::queue::{GpuPool, ServicePool, T};
 use crate::util::rng::Rng;
 use crate::workload::{DecodeCost, LengthProfile, RewardCost, TrainCost};
@@ -56,6 +58,11 @@ pub struct RlvrSimConfig {
     pub reward_workers: usize,
     pub weight_sync_time: f64,
     pub filter: Option<FilterCfg>,
+    /// adaptive asynchrony governor: when enabled, the sim runs the
+    /// decoupled pipeline with a real `TelemetryPlane` on virtual
+    /// time and lets the governor dial the mode ladder instead of a
+    /// fixed `async_ratio`
+    pub governor: Option<GovernorCfg>,
     pub steps: usize,
     pub seed: u64,
 }
@@ -80,6 +87,7 @@ impl RlvrSimConfig {
             reward_workers: 64,
             weight_sync_time: 10.0,
             filter: None,
+            governor: None,
             steps: 4,
             seed: 17,
         }
@@ -105,6 +113,13 @@ pub struct RlvrReport {
     /// generation work discarded by aborts / filtering
     pub wasted_tokens: f64,
     pub filtered_groups: usize,
+    /// governor mode timeline: (virtual time, mode label), seeded
+    /// with the starting mode at t=0 (adaptive arm only)
+    pub mode_timeline: Vec<(f64, String)>,
+    pub mode_transitions: usize,
+    /// largest per-window version-gap signal the telemetry plane
+    /// measured (the quantity the staleness budget bounds)
+    pub max_window_gap: f64,
 }
 
 impl RlvrReport {
@@ -135,6 +150,7 @@ fn task_tokens(cfg: &RlvrSimConfig, len: usize) -> f64 {
 
 pub fn run(cfg: &RlvrSimConfig) -> RlvrReport {
     match () {
+        _ if cfg.governor.map(|g| g.enabled).unwrap_or(false) => run_adaptive(cfg),
         _ if cfg.async_ratio > 0.0 => run_async(cfg),
         _ => run_sync(cfg),
     }
@@ -553,6 +569,186 @@ fn run_async(cfg: &RlvrSimConfig) -> RlvrReport {
     report
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive pipeline: the async event loop with the governor in it.
+// ---------------------------------------------------------------------------
+
+/// `run_async`'s decoupled pools with the asynchrony governor closing
+/// the staleness loop. A real [`TelemetryPlane`] runs on virtual time
+/// (`window_secs` = the governor's decision interval, `gap_budget` =
+/// the governor's budget) and is fed the *measured* per-window max
+/// consumed version gap; each closed window may move the mode, which
+/// dials the admission cap and the per-step sync barrier exactly as
+/// the real `AsyncController` does.
+fn run_adaptive(cfg: &RlvrSimConfig) -> RlvrReport {
+    assert!(cfg.infer_gpus > 0 && cfg.train_gpus > 0, "adaptive needs both pools");
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = RlvrReport::default();
+    let q = cfg.sequences_per_step();
+    let mut gcfg = cfg.governor.expect("run_adaptive requires cfg.governor");
+    if gcfg.step_quota == 0 {
+        gcfg.step_quota = q;
+    }
+    let mut gov = AsyncGovernor::new(gcfg);
+    // the plane's windows ARE the governor's decision cadence, and
+    // its gap watchdog threshold mirrors the governor's budget
+    let mut plane = TelemetryPlane::new(TelemetryCfg {
+        window_secs: gcfg.interval,
+        gap_budget: gcfg.gap_budget,
+        ..TelemetryCfg::on()
+    });
+    plane.tick(&TelemetrySignals::default()); // seed the baseline at t=0
+
+    let cap_for = |m: AsyncMode| ((1.0 + gcfg.admission_alpha(m)) * q as f64).ceil() as usize;
+    let mut outstanding_cap = cap_for(gov.mode());
+    report.mode_timeline.push((0.0, gov.mode().label()));
+
+    let mut pool = GpuPool::new(cfg.infer_gpus, cfg.decode.token_time, cfg.knee, cfg.max_active);
+    let mut rewards = ServicePool::new(cfg.reward_workers);
+    let mut reward_events: BinaryHeap<Reverse<(T, u64)>> = BinaryHeap::new();
+
+    let mut now = 0.0f64;
+    let mut version = 0usize;
+    let mut init_version: HashMap<u64, usize> = HashMap::new();
+    let mut tokens_of: HashMap<u64, f64> = HashMap::new();
+    let mut buffered: VecDeque<(f64, usize)> = VecDeque::new(); // (ready, init_version)
+    let mut next_id = 0u64;
+    let mut outstanding = 0usize; // in flight (gen or reward) + buffered
+    let mut trainer_busy_until: Option<f64> = None;
+    let mut resume_at: Option<f64> = None;
+    // the current training step runs the paper's suspend->train->
+    // resume recipe (Sync mode, or a PeriodicBarrier boundary step)
+    let mut barrier_step = false;
+    let mut last_step_end = 0.0f64;
+    let mut gaps: Vec<f64> = Vec::new();
+    // measured staleness signal: max consumed gap since the last
+    // window close — what `TelemetrySignals::version_gap` carries
+    let mut window_gap_max = 0.0f64;
+    let mut completed = 0u64;
+    let mut trainer_ready_since = 0.0f64;
+
+    while report.step_times.len() < cfg.steps {
+        // producer side: admit while under the governed cap; a sync
+        // barrier holds admission for the whole step, the weight-sync
+        // pause holds it between steps
+        if resume_at.is_none() && !(barrier_step && trainer_busy_until.is_some()) {
+            while outstanding < outstanding_cap && pool.has_capacity() {
+                let tok = task_tokens(cfg, cfg.lengths.sample(&mut rng));
+                pool.submit(next_id, tok, now);
+                init_version.insert(next_id, version);
+                tokens_of.insert(next_id, tok);
+                outstanding += 1;
+                next_id += 1;
+            }
+        }
+        // consume when a full minibatch is buffered (blocking get_batch)
+        if trainer_busy_until.is_none() && buffered.len() >= q {
+            for _ in 0..q {
+                let (_ready, iv) = buffered.pop_front().unwrap();
+                let gap = version.saturating_sub(iv);
+                gaps.push(gap as f64);
+                window_gap_max = window_gap_max.max(gap as f64);
+                report.max_version_gap = report.max_version_gap.max(gap);
+                outstanding -= 1;
+            }
+            report.trainer_idle += now - trainer_ready_since;
+            barrier_step = gov.mode().sync_step(report.step_times.len());
+            if barrier_step {
+                // suspend immediately after get_batch (Section 4.3)
+                pool.set_paused(true, now);
+            }
+            trainer_busy_until = Some(now + cfg.train.step_time(q, cfg.train_gpus));
+        }
+
+        // next event: gen completion | reward done | trainer done | resume
+        let mut best: Option<(f64, u8)> = None;
+        let consider = |t: Option<f64>, kind: u8, best: &mut Option<(f64, u8)>| {
+            if let Some(t) = t {
+                if best.map(|(bt, _)| t < bt).unwrap_or(true) {
+                    *best = Some((t, kind));
+                }
+            }
+        };
+        consider(pool.peek_completion(), 0, &mut best);
+        consider(reward_events.peek().map(|Reverse((t, _))| t.0), 1, &mut best);
+        consider(trainer_busy_until, 2, &mut best);
+        consider(resume_at, 3, &mut best);
+        let Some((t, kind)) = best else {
+            panic!(
+                "adaptive sim deadlock: no events (mode {}, cap {outstanding_cap}, outstanding {outstanding})",
+                gov.mode().label()
+            );
+        };
+        now = t;
+        match kind {
+            0 => {
+                let id = pool.pop_completion(t);
+                report.tokens_generated += tokens_of[&id];
+                completed += 1;
+                let done_at = rewards.submit(now, cfg.reward.sample(&mut rng));
+                reward_events.push(Reverse((T(done_at), id)));
+            }
+            1 => {
+                let Reverse((_, id)) = reward_events.pop().unwrap();
+                buffered.push_back((now, init_version[&id]));
+            }
+            2 => {
+                // train step done: advance version, broadcast weights
+                trainer_busy_until = None;
+                trainer_ready_since = now;
+                version += 1;
+                report.samples_consumed += q;
+                report.step_times.push(now - last_step_end);
+                last_step_end = now;
+                pool.set_paused(true, now); // no-op if the barrier already paused
+                resume_at = Some(now + cfg.weight_sync_time);
+            }
+            3 => {
+                pool.set_paused(false, now);
+                resume_at = None;
+                barrier_step = false;
+            }
+            _ => unreachable!(),
+        }
+
+        // governor: tick the plane on the virtual clock; a closed
+        // window may move the mode (and with it the admission cap)
+        if plane.due(now) {
+            let sig = TelemetrySignals {
+                now,
+                completed,
+                version_gap: window_gap_max,
+                ..Default::default()
+            };
+            if let Some(w) = plane.tick(&sig) {
+                report.max_window_gap = report.max_window_gap.max(w.version_gap);
+                window_gap_max = 0.0;
+                if let Some(m) = gov.decide_at(w.t1, &w) {
+                    report.mode_transitions += 1;
+                    report.mode_timeline.push((w.t1, m.label()));
+                }
+                // same-rank refreshes retune the cap without counting
+                // as a transition, exactly like the controller
+                outstanding_cap = cap_for(gov.mode());
+            }
+        }
+    }
+
+    // flush the trailing partial window so the last measured gap
+    // reaches the report even when the run ends mid-window
+    let sig =
+        TelemetrySignals { now, completed, version_gap: window_gap_max, ..Default::default() };
+    if let Some(w) = plane.flush(&sig) {
+        report.max_window_gap = report.max_window_gap.max(w.version_gap);
+    }
+
+    report.total_time = now;
+    report.mean_version_gap = crate::util::mean(&gaps);
+    report.gen_utilization =
+        report.tokens_generated / (pool.capacity_rate() * now.max(1e-9));
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -660,5 +856,104 @@ mod tests {
         let b = run(&cfg);
         assert_eq!(a.total_time, b.total_time);
         assert_eq!(a.step_times, b.step_times);
+    }
+
+    /// Split matching `async_beats_sync` so the adaptive arm is
+    /// compared against fixed arms on the same hardware.
+    fn adaptive_base() -> RlvrSimConfig {
+        let mut c = small_cfg();
+        c.infer_gpus = 5;
+        c.train_gpus = 3;
+        c
+    }
+
+    #[test]
+    fn adaptive_matches_best_fixed_arm_within_budget() {
+        // acceptance: with a budget the loosest arm already respects,
+        // the governor must stay fully async and match the best fixed
+        // async_ratio's throughput — the adaptive arm costs nothing
+        // when the budget is not binding
+        let budget = 6.0;
+        let mut fixed_best = 0.0f64;
+        for alpha in [0.0, 1.0, 2.0] {
+            let mut c = adaptive_base();
+            c.async_ratio = alpha;
+            let r = run(&c);
+            if r.max_version_gap as f64 <= budget {
+                fixed_best = fixed_best.max(r.samples_per_hour());
+            }
+        }
+        assert!(fixed_best > 0.0, "at least one fixed arm must fit the budget");
+        let mut ad = adaptive_base();
+        ad.governor = Some(GovernorCfg {
+            gap_budget: budget,
+            alpha_max: 2.0,
+            interval: 5.0,
+            cooldown: 10.0,
+            ..GovernorCfg::on()
+        });
+        let ra = run(&ad);
+        assert!(
+            ra.max_window_gap <= budget,
+            "measured window gap {} must stay inside budget {budget}",
+            ra.max_window_gap
+        );
+        assert!(ra.max_version_gap as f64 <= budget);
+        assert_eq!(ra.mode_timeline[0].1, "async(192)", "starts optimistic: (1+2)*64");
+        assert!(
+            ra.samples_per_hour() >= 0.98 * fixed_best,
+            "adaptive {} must match best budget-respecting fixed arm {}",
+            ra.samples_per_hour(),
+            fixed_best
+        );
+    }
+
+    #[test]
+    fn tight_budget_forces_transitions_and_bounds_gap() {
+        // budget 2 with alpha_max 4: the theory clamp caps effective
+        // alpha at 1, and the measured gap hitting the budget must
+        // drive at least one mode transition (the emergency Sync path)
+        let mut c = adaptive_base();
+        c.steps = 8;
+        c.governor = Some(GovernorCfg {
+            gap_budget: 2.0,
+            alpha_max: 4.0,
+            interval: 2.0,
+            cooldown: 4.0,
+            ..GovernorCfg::on()
+        });
+        let r = run(&c);
+        assert_eq!(r.samples_consumed, c.sequences_per_step() * c.steps);
+        assert!(
+            r.mode_transitions >= 1,
+            "a binding budget must move the mode at least once: {:?}",
+            r.mode_timeline
+        );
+        assert!(
+            r.max_version_gap as f64 <= 2.0 + 1.0,
+            "gap {} may exceed the budget by at most one-window detection lag",
+            r.max_version_gap
+        );
+        assert!(r.max_window_gap <= 2.0 + 1.0);
+    }
+
+    #[test]
+    fn adaptive_determinism() {
+        let mut c = adaptive_base();
+        c.steps = 6;
+        c.governor = Some(GovernorCfg {
+            gap_budget: 2.0,
+            alpha_max: 4.0,
+            interval: 2.0,
+            cooldown: 4.0,
+            ..GovernorCfg::on()
+        });
+        let a = run(&c);
+        let b = run(&c);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.step_times, b.step_times);
+        assert_eq!(a.mode_timeline, b.mode_timeline);
+        assert_eq!(a.mode_transitions, b.mode_transitions);
+        assert_eq!(a.max_version_gap, b.max_version_gap);
     }
 }

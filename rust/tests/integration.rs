@@ -6,8 +6,8 @@ use std::path::PathBuf;
 
 use roll_flash::config::PgVariant;
 use roll_flash::coordinator::{
-    run_training, AutoscaleCfg, Autoscaler, ControllerCfg, GenerationTask, LlmProxy, LlmProxyPool,
-    PoolCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
+    run_training, AutoscaleCfg, Autoscaler, ControllerCfg, GenerationTask, GovernorCfg, LlmProxy,
+    LlmProxyPool, PoolCfg, RolloutSystem, RolloutSystemCfg, RoutePolicy,
 };
 use roll_flash::env::alfworld::AlfworldEnv;
 use roll_flash::env::math::MathEnv;
@@ -92,6 +92,7 @@ fn fleet_collects_complete_groups() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -142,6 +143,7 @@ fn sync_training_loop_runs_on_math_env() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -153,6 +155,7 @@ fn sync_training_loop_runs_on_math_env() {
         sync_mode: true,
         autoscale: None,
         telemetry: None,
+        governor: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 3);
@@ -200,6 +203,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -211,6 +215,7 @@ fn async_training_overlaps_and_bounds_staleness() {
         sync_mode: false,
         autoscale: None,
         telemetry: None,
+        governor: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 5);
@@ -254,6 +259,7 @@ fn multiturn_engine_interleaves_obs_and_actions() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| {
         AlfworldEnv::new(3, EnvLatency::gaussian(0.0, 0.0))
@@ -309,6 +315,7 @@ fn redundant_groups_produce_surplus_without_blocking() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(2).expect("batch");
@@ -487,6 +494,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let ctl = ControllerCfg {
@@ -498,6 +506,7 @@ fn fleet_trains_with_rolling_sync_and_bounded_staleness() {
         sync_mode: false,
         autoscale: None,
         telemetry: None,
+        governor: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     assert_eq!(logs.len(), 4);
@@ -690,6 +699,7 @@ fn engine_drives_256_episodes_on_8_workers() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(64).expect("full 256-sample batch");
@@ -737,6 +747,7 @@ fn engine_redundancy_aborts_surplus_on_real_fleet() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
     let samples = system.buffer.get_batch(4).expect("batch");
@@ -913,6 +924,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         predictor: Default::default(),
         kv_cache: Default::default(),
         telemetry: Default::default(),
+        governor: GovernorCfg::disabled(),
     };
     let system = RolloutSystem::start(&cfg, weights, |_, _| MathEnv::new()).unwrap();
 
@@ -937,6 +949,7 @@ fn replica_death_mid_run_keeps_training_alive() {
         sync_mode: false,
         autoscale: None,
         telemetry: None,
+        governor: None,
     };
     let logs = run_training(&rt, &mut st, &system.proxy, &system.buffer, &ctl).unwrap();
     killer.join().unwrap();

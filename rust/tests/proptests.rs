@@ -5,7 +5,8 @@
 //! reporting. Each property runs across many generated configurations.
 
 use roll_flash::coordinator::{
-    KvCacheCfg, KvPrefixIndex, ReplicaLoad, RouteHint, RoutePolicy, Router, SampleBuffer,
+    GovernorCfg, KvCacheCfg, KvPrefixIndex, ReplicaLoad, RouteHint, RoutePolicy, Router,
+    SampleBuffer,
 };
 use roll_flash::rl::{self, Trajectory};
 use roll_flash::sim::fleet::{bursty_autoscale, run as fleet_run, FleetSimConfig};
@@ -540,6 +541,52 @@ fn prop_sim_quota_exact_and_deterministic() {
         assert_eq!(a.total_time, b.total_time, "non-deterministic sim");
         assert!(a.gen_utilization > 0.0 && a.gen_utilization <= 1.0 + 1e-9);
         assert!(a.step_times.iter().all(|&t| t > 0.0));
+    });
+}
+
+#[test]
+fn prop_governor_holds_the_staleness_budget_under_churn() {
+    // The closed feedback loop's contract: across random fleet shapes,
+    // batch shapes, budgets, and alpha ceilings, the adaptive arm's
+    // consumed version gap never exceeds the configured budget by more
+    // than the one-window detection lag (the governor only sees a
+    // violation when the window carrying it closes). The clamp doing
+    // the heavy lifting is effective_alpha <= gap_budget - 1 (Prop 1:
+    // a cap of (alpha+1)N implies ~alpha versions of staleness), so
+    // even the loosest granted mode admits at most budget versions.
+    // Each governed run must also consume its exact quota and replay
+    // deterministically on the virtual clock.
+    for_all_seeds(12, |rng| {
+        let mut c = RlvrSimConfig::paper_default(2 + rng.below(6), 2 + rng.below(4));
+        c.n_prompts = 4 + rng.below(12);
+        c.group_size = 1 + rng.below(4);
+        c.steps = 2 + rng.below(3);
+        c.lengths = LengthProfile::new(rng.range_f64(200.0, 1200.0), 1.0, 8192);
+        c.seed = rng.next_u64();
+        let budget = (2 + rng.below(5)) as f64;
+        let interval = rng.range_f64(2.0, 6.0);
+        c.governor = Some(GovernorCfg {
+            gap_budget: budget,
+            alpha_max: (1 + rng.below(6)) as f64,
+            interval,
+            cooldown: 2.0 * interval,
+            ..GovernorCfg::on()
+        });
+        let a = run(&c);
+        assert_eq!(a.samples_consumed, c.sequences_per_step() * c.steps);
+        assert!(
+            a.max_version_gap as f64 <= budget + 1.0,
+            "staleness budget broken: consumed gap {} > budget {budget} + 1-window lag",
+            a.max_version_gap
+        );
+        assert!(
+            a.max_window_gap <= budget + 1.0,
+            "window gap {} > budget {budget} + 1-window lag",
+            a.max_window_gap
+        );
+        let b = run(&c);
+        assert_eq!(a.total_time, b.total_time, "non-deterministic governed sim");
+        assert_eq!(a.mode_timeline, b.mode_timeline);
     });
 }
 
